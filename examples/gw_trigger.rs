@@ -1,0 +1,69 @@
+//! Gravitational-wave trigger: the paper's §V-C scenario as a streaming
+//! pipeline — LIGO-like 2-channel strain windows flow through the
+//! coordinator into the GW classifier, with online AUC and latency
+//! accounting, plus the modeled on-FPGA latency for the same workload.
+//!
+//! Run: `cargo run --release --example gw_trigger [-- --events N --backend hls|float|pjrt]`
+
+use anyhow::Result;
+use hls4ml_transformer::artifacts_dir;
+use hls4ml_transformer::cli::Args;
+use hls4ml_transformer::coordinator::{
+    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, TriggerServer, WeightsSource,
+};
+use hls4ml_transformer::experiments::{artifacts_ready, load_checkpoints};
+use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::models::weights::synthetic_weights;
+use hls4ml_transformer::models::zoo_model;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let events: u64 = args.get_parse("events", 2000).map_err(anyhow::Error::msg)?;
+    let backend: BackendKind = args.get_or("backend", "float").parse()?;
+
+    let have_artifacts = artifacts_ready(&artifacts_dir(), "gw");
+    if backend == BackendKind::Pjrt && !have_artifacts {
+        anyhow::bail!("PJRT backend needs `make artifacts`");
+    }
+
+    println!("== GW trigger: streaming {events} strain windows through {backend:?} ==");
+    let cfg = ServerConfig {
+        pipelines: vec![PipelineConfig {
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(150) },
+            quant: QuantConfig::new(6, 8), // paper's GW working point
+            weights: if have_artifacts {
+                WeightsSource::Artifacts
+            } else {
+                WeightsSource::Synthetic(11)
+            },
+            ..PipelineConfig::new("gw", backend)
+        }],
+        events_per_source: events,
+        rate_per_source: 0,
+        artifacts_dir: artifacts_dir(),
+    };
+    let report = TriggerServer::run(&cfg)?;
+    print!("{report}");
+
+    // what the same stream would cost on the VU13P (paper Table IV)
+    let zoo = zoo_model("gw").unwrap();
+    let weights = if have_artifacts {
+        load_checkpoints(&artifacts_dir(), &zoo.config)?.0
+    } else {
+        synthetic_weights(&zoo.config, 11)
+    };
+    let t = FixedTransformer::new(zoo.config.clone(), &weights, QuantConfig::new(6, 8));
+    println!("\nmodeled FPGA deployment of this pipeline (paper Table IV):");
+    for r in [1u32, 2, 4] {
+        let rep = t.synthesize(ReuseFactor(r));
+        println!(
+            "  R{r}: latency {:.3} us, sustained {:.0} windows/s/FPGA (II {} cyc @ {:.3} ns)",
+            rep.latency_us,
+            1e9 / (rep.interval_cycles as f64 * rep.clk_ns),
+            rep.interval_cycles,
+            rep.clk_ns,
+        );
+    }
+    Ok(())
+}

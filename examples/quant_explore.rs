@@ -1,0 +1,75 @@
+//! Interactive design-space exploration: sweep precision x reuse for one
+//! model and print the Pareto view (accuracy fidelity vs resources vs
+//! latency) a deployment engineer would use to pick a working point —
+//! the workflow the paper's §VI narrates.
+//!
+//! Run: `cargo run --release --example quant_explore [-- --model btag]`
+
+use anyhow::Result;
+use hls4ml_transformer::artifacts_dir;
+use hls4ml_transformer::cli::Args;
+use hls4ml_transformer::experiments::{artifacts_ready, load_checkpoints};
+use hls4ml_transformer::hls::resources::VU13P;
+use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::models::weights::synthetic_weights;
+use hls4ml_transformer::models::zoo_model;
+use hls4ml_transformer::quant::{score_point, EvalSet, SweepPoint};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let name = args.get_or("model", "btag");
+    let zoo = zoo_model(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let cfg = zoo.config.clone();
+    let dir = artifacts_dir();
+
+    let have = artifacts_ready(&dir, name);
+    let weights = if have {
+        load_checkpoints(&dir, &cfg)?.0
+    } else {
+        eprintln!("(artifacts missing; synthetic weights, fidelity column skipped)");
+        synthetic_weights(&cfg, 3)
+    };
+    let eval = if have {
+        Some(EvalSet::load(&dir, &cfg)?.truncate(128))
+    } else {
+        None
+    };
+
+    println!("== design-space exploration: {name} on VU13P ==");
+    println!(
+        "{:>10} {:>5} | {:>9} {:>9} | {:>7} {:>8} {:>7} | {:>9}",
+        "type", "reuse", "AUCratio", "|dp|", "DSP%", "FF%", "LUT%", "latency"
+    );
+    for frac in [4u32, 6, 8, 10] {
+        for r in [1u32, 2, 4] {
+            let quant = QuantConfig::new(6, frac);
+            let t = FixedTransformer::new(cfg.clone(), &weights, quant);
+            let rep = t.synthesize(ReuseFactor(r));
+            let u = rep.total.utilization(&VU13P);
+            let (ratio, err) = match &eval {
+                Some(ev) => {
+                    let res = score_point(&cfg, &weights, ev, SweepPoint {
+                        integer_bits: 6,
+                        frac_bits: frac,
+                        qat: false,
+                    });
+                    (format!("{:.3}", res.auc_ratio), format!("{:.4}", res.mean_abs_err))
+                }
+                None => ("-".into(), "-".into()),
+            };
+            println!(
+                "{:>10} {:>5} | {:>9} {:>9} | {:>6.1}% {:>7.1}% {:>6.1}% | {:>7.3}us",
+                format!("{}", quant.data),
+                format!("R{r}"),
+                ratio,
+                err,
+                u[0].1 * 100.0,
+                u[1].1 * 100.0,
+                u[2].1 * 100.0,
+                rep.latency_us,
+            );
+        }
+    }
+    println!("\n(paper working points: engine/gw ap_fixed<14,6>; btag PTQ <18,10>, QAT <14,6>)");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! Loads the engine-anomaly model, scores one synthetic event through all
+//! three inference paths (exact float, fixed-point HLS simulator, PJRT
+//! AOT artifact), and prints the FPGA synthesis estimate.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (needs `make artifacts`; falls back to synthetic weights without it)
+
+use anyhow::Result;
+use hls4ml_transformer::artifacts_dir;
+use hls4ml_transformer::data::{generator_for, EventGenerator};
+use hls4ml_transformer::experiments::artifacts_ready;
+use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::models::weights::synthetic_weights;
+use hls4ml_transformer::models::{zoo_model, NnwFile, Weights};
+use hls4ml_transformer::nn::FloatTransformer;
+use hls4ml_transformer::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let model = zoo_model("engine").expect("zoo model");
+    let cfg = model.config.clone();
+    let dir = artifacts_dir();
+
+    // 1. weights: trained artifact checkpoint, or synthetic fallback
+    let weights = if artifacts_ready(&dir, &cfg.name) {
+        Weights::from_nnw(&cfg, &NnwFile::load(dir.join(model.weights_file(false)))?)?
+    } else {
+        eprintln!("(artifacts missing; using synthetic weights — run `make artifacts`)");
+        synthetic_weights(&cfg, 42)
+    };
+
+    // 2. one synthetic engine-vibration event
+    let mut gen = generator_for("engine", 7).unwrap();
+    let event = gen.next_event();
+    println!("event: {} window, true label = {}", cfg.name, event.label);
+
+    // 3a. exact float reference (the "Keras output")
+    let float = FloatTransformer::new(cfg.clone(), weights.clone());
+    let p_float = float.probs(&float.forward(&event.x));
+    println!("float probs:  {p_float:?}");
+
+    // 3b. fixed-point HLS simulator — what the FPGA computes
+    let quant = QuantConfig::new(6, 8); // ap_fixed<14,6>, paper's engine point
+    let fixed = FixedTransformer::new(cfg.clone(), &weights, quant);
+    let p_fixed = fixed.forward(&event.x);
+    println!("hls-sim probs ({}): {p_fixed:?}", quant.data);
+
+    // 3c. the AOT artifact through PJRT (production serving path)
+    if artifacts_ready(&dir, &cfg.name) {
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo(
+            dir.join(model.hlo_file(1)),
+            (1, cfg.seq_len, cfg.input_size),
+            cfg.output_size,
+        )?;
+        let logits = exe.run_events(&[&event.x])?;
+        let p_pjrt = float.probs(&logits[0]);
+        println!("pjrt probs:   {p_pjrt:?}");
+    }
+
+    // 4. "synthesize" the design point the paper reports (Table II, R1)
+    let report = fixed.synthesize(ReuseFactor(1));
+    println!("\n{report}");
+    println!(
+        "paper Table II R1: clk 7.423 ns, interval 119, latency 257 cyc = 1.908 us"
+    );
+    Ok(())
+}

@@ -1,0 +1,195 @@
+"""Synthetic stand-ins for the paper's three gated datasets (DESIGN.md §2).
+
+The real data (UCR FordA, CMS open data, LIGO O3a strain) is not available
+in this environment; each generator below reproduces the *task shape* the
+paper's models are evaluated on — same sequence length, feature count,
+class structure, and the physical effect that makes the classes separable.
+The Rust side (rust/src/data/) carries structurally identical generators
+for the streaming examples; correctness across layers is guaranteed by
+exporting the Python eval tensors to artifacts/<model>.eval.nnw so both
+stacks score the *same* events.
+
+All generators are deterministic in (seed, n).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Dataset", "engine", "btag", "gw", "make"]
+
+
+@dataclasses.dataclass
+class Dataset:
+    """A train/eval split of (x: (n, S, F) f32, y: (n,) int labels)."""
+
+    name: str
+    x_train: np.ndarray
+    y_train: np.ndarray
+    x_eval: np.ndarray
+    y_eval: np.ndarray
+    num_classes: int
+
+
+def _split(name, x, y, num_classes, eval_frac=0.25, seed=0):
+    rng = np.random.default_rng(seed + 0xE11A)
+    idx = rng.permutation(len(x))
+    x, y = x[idx], y[idx]
+    n_eval = int(len(x) * eval_frac)
+    return Dataset(
+        name=name,
+        x_train=x[n_eval:].astype(np.float32),
+        y_train=y[n_eval:].astype(np.int32),
+        x_eval=x[:n_eval].astype(np.float32),
+        y_eval=y[:n_eval].astype(np.int32),
+        num_classes=num_classes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine anomaly detection — FordA stand-in (paper §V-A).
+# Univariate, 50 samples/window (paper Table I), binary normal/anomaly.
+# Normal engines: stable two-harmonic signature + AR(1) vibration noise.
+# Anomalies: detuned second harmonic, occasional impulse bursts (misfire),
+# and drifting amplitude — the kinds of deviation FordA encodes.
+# ---------------------------------------------------------------------------
+
+def engine(n: int = 4000, seq_len: int = 50, seed: int = 1) -> Dataset:
+    rng = np.random.default_rng(seed)
+    t = np.arange(seq_len)
+    x = np.zeros((n, seq_len, 1), np.float32)
+    y = rng.integers(0, 2, size=n)
+    for i in range(n):
+        f1 = rng.uniform(0.055, 0.075)          # fundamental (cycles/sample)
+        phase = rng.uniform(0, 2 * np.pi)
+        amp = rng.uniform(0.8, 1.2)
+        if y[i] == 0:  # normal: locked 2nd harmonic
+            sig = amp * (np.sin(2 * np.pi * f1 * t + phase)
+                         + 0.5 * np.sin(4 * np.pi * f1 * t + 2 * phase))
+        else:          # anomaly: detuned harmonic + impulses + drift
+            detune = rng.uniform(1.3, 1.7)
+            drift = 1.0 + 0.5 * t / seq_len
+            sig = amp * drift * (np.sin(2 * np.pi * f1 * t + phase)
+                                 + 0.5 * np.sin(4 * np.pi * f1 * detune * t))
+            n_imp = rng.integers(2, 6)
+            pos = rng.integers(0, seq_len, size=n_imp)
+            sig[pos] += rng.choice([-1, 1], n_imp) * rng.uniform(2.5, 4.5, n_imp)
+        # AR(1) vibration noise
+        noise = np.zeros(seq_len)
+        e = rng.normal(0, 0.35, seq_len)
+        for j in range(1, seq_len):
+            noise[j] = 0.6 * noise[j - 1] + e[j]
+        series = sig + noise
+        series = (series - series.mean()) / (series.std() + 1e-8)
+        x[i, :, 0] = series
+    return _split("engine", x, y, 2, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# B-tagging — CMS ttbar open-data stand-in (paper §V-B).
+# 15 tracks x 6 features per jet, 3 classes (b / c / light).
+# The separating physics is the displaced vertex: the lifetime of b (and to
+# a lesser degree c) hadrons produces large transverse/longitudinal impact
+# parameters (d0, z0) and displaced-vertex significance for a few leading
+# tracks; light jets have prompt tracks only.
+# Features per track: [pt, eta, phi, d0_sig, z0_sig, sv_dist].
+# ---------------------------------------------------------------------------
+
+def btag(n: int = 4000, seq_len: int = 15, seed: int = 2) -> Dataset:
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, seq_len, 6), np.float32)
+    y = rng.integers(0, 3, size=n)
+    # class-conditional impact-parameter scales (b >> c >> light)
+    ip_scale = {0: 4.0, 1: 1.6, 2: 0.35}   # 0=b, 1=c, 2=light
+    sv_prob = {0: 0.75, 1: 0.40, 2: 0.04}  # chance a track is vertex-matched
+    for i in range(n):
+        cls = int(y[i])
+        pt = np.sort(rng.exponential(12.0, seq_len))[::-1] + 0.5  # GeV, sorted
+        eta = rng.normal(0, 1.0, seq_len)
+        phi = rng.normal(0, 0.3, seq_len)
+        # displaced tracks: heavy-flavour decay products are the leading few
+        from_sv = rng.random(seq_len) < sv_prob[cls]
+        d0 = rng.normal(0, 0.25, seq_len)
+        z0 = rng.normal(0, 0.30, seq_len)
+        d0[from_sv] += rng.choice([-1, 1], from_sv.sum()) * rng.exponential(
+            ip_scale[cls], from_sv.sum()
+        )
+        z0[from_sv] += rng.choice([-1, 1], from_sv.sum()) * rng.exponential(
+            ip_scale[cls] * 0.8, from_sv.sum()
+        )
+        sv = np.where(from_sv, rng.exponential(ip_scale[cls] * 0.5, seq_len), 0.0)
+        x[i, :, 0] = np.log1p(pt)
+        x[i, :, 1] = eta
+        x[i, :, 2] = phi
+        x[i, :, 3] = np.tanh(d0 / 5.0) * 5.0   # soft-clip heavy tails
+        x[i, :, 4] = np.tanh(z0 / 5.0) * 5.0
+        x[i, :, 5] = np.tanh(sv / 5.0) * 5.0
+    # per-feature standardization (train statistics applied to all)
+    flat = x.reshape(-1, 6)
+    x = (x - flat.mean(0)) / (flat.std(0) + 1e-8)
+    return _split("btag", x, y, 3, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Gravitational waves — LIGO O3a stand-in (paper §V-C).
+# 100 steps x 2 channels (H1/L1 analogue), binary signal/background.
+# Signal class: BBH-like chirp (frequency+amplitude ramp) or sine-Gaussian,
+# injected coherently into BOTH channels with a small inter-site lag.
+# Background class: colored detector noise, half with Omicron-like glitches
+# (short broadband bursts in ONE channel) — the confounder the paper calls
+# out ("glitches that can mimic a signal").
+# ---------------------------------------------------------------------------
+
+def gw(n: int = 4000, seq_len: int = 100, seed: int = 3) -> Dataset:
+    rng = np.random.default_rng(seed)
+    t = np.arange(seq_len, dtype=np.float64)
+    x = np.zeros((n, seq_len, 2), np.float32)
+    y = rng.integers(0, 2, size=n)
+
+    def colored_noise():
+        # AR(2) gives the low-frequency-dominated spectrum of strain noise
+        w = np.zeros(seq_len)
+        e = rng.normal(0, 1.0, seq_len)
+        for j in range(2, seq_len):
+            w[j] = 1.2 * w[j - 1] - 0.4 * w[j - 2] + e[j]
+        return w / (w.std() + 1e-8)
+
+    for i in range(n):
+        ch = np.stack([colored_noise(), colored_noise()])
+        if y[i] == 1:
+            lag = rng.integers(0, 3)           # light-travel-time analogue
+            amp = rng.uniform(1.3, 3.0)
+            t0 = rng.integers(30, 70)
+            if rng.random() < 0.5:
+                # BBH chirp: f(t) ramps up, amplitude ramps into merger
+                tau = np.maximum(t0 + 20 - t, 1.0)
+                f = 0.02 + 0.25 / np.sqrt(tau)
+                env = np.exp(-((t - t0) ** 2) / (2 * 12.0 ** 2))
+                wave = np.sin(2 * np.pi * np.cumsum(f)) * env
+            else:
+                # sine-Gaussian burst
+                f0 = rng.uniform(0.05, 0.2)
+                q = rng.uniform(4, 10)
+                env = np.exp(-((t - t0) ** 2) * (f0 / q) ** 2 * 4)
+                wave = np.sin(2 * np.pi * f0 * (t - t0)) * env
+            ch[0] += amp * wave
+            ch[1] += amp * np.roll(wave, lag)
+        elif rng.random() < 0.5:
+            # glitch: short broadband burst in one channel only
+            t0 = rng.integers(10, 90)
+            width = rng.uniform(1.0, 3.0)
+            g = rng.uniform(2.0, 5.0) * np.exp(-((t - t0) ** 2) / (2 * width ** 2))
+            g *= np.sin(2 * np.pi * rng.uniform(0.2, 0.45) * t)
+            ch[rng.integers(0, 2)] += g
+        ch = (ch - ch.mean(1, keepdims=True)) / (ch.std(1, keepdims=True) + 1e-8)
+        x[i] = ch.T
+    return _split("gw", x, y, 2, seed=seed)
+
+
+_MAKERS = {"engine": engine, "btag": btag, "gw": gw}
+
+
+def make(name: str, **kw) -> Dataset:
+    return _MAKERS[name](**kw)

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles.
+
+Every kernel here lowers with interpret=True so the resulting HLO runs on
+the CPU PJRT client the Rust runtime uses (real-TPU Pallas emits Mosaic
+custom-calls the CPU plugin cannot execute).
+"""
+
+from . import dense, layernorm_lut, mha, quant, ref, softmax_lut, tables
+
+__all__ = ["dense", "layernorm_lut", "mha", "quant", "ref", "softmax_lut", "tables"]

@@ -1,0 +1,70 @@
+"""Pallas kernel for the streamed dense layer (paper §IV-A stage 1/4).
+
+The HLS design computes one *row* of the output per time step (matrix ×
+vector), with the weight matrix fully partitioned into registers and rows
+streamed through FIFOs.  The reuse factor R time-multiplexes each DSP over
+R multiplies, so at R the row loop runs with initiation interval R.
+
+TPU adaptation (DESIGN.md §4): row-streaming becomes row-*tiling* — the
+grid walks blocks of rows, the weight tile is VMEM-resident for every grid
+step (the register partition), and the tile size plays the role of 1/R:
+bigger tiles = more MACs in flight per step.
+
+interpret=True ALWAYS (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dense"]
+
+
+def _kernel(activation, x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]
+    # MAC array: one output row per input row, all columns in parallel.
+    y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "sigmoid":
+        y = 1.0 / (1.0 + jnp.exp(-y))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_rows"))
+def dense(x, w, b, activation: str = "linear", block_rows: int | None = None):
+    """y = act(x @ w + b) with the row dimension tiled across the grid.
+
+    x: (rows, in), w: (in, out), b: (out,).
+    """
+    if activation not in ("linear", "relu", "sigmoid"):
+        raise ValueError(f"unknown activation {activation!r}")
+    rows, d_in = x.shape
+    d_in_w, d_out = w.shape
+    if d_in != d_in_w or b.shape != (d_out,):
+        raise ValueError(
+            f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}"
+        )
+    if block_rows is None or block_rows >= rows:
+        block_rows = rows
+    if rows % block_rows != 0:
+        raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
+
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d_out), x.dtype),
+        interpret=True,
+    )(x, w, b)

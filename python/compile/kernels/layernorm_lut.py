@@ -1,0 +1,64 @@
+"""Pallas kernel for the paper's 5-stage LayerNorm (§IV-C, figure 8).
+
+  1. mean   = sum(x) / k
+  2. DM[j]  = x[j] - mean
+  3. var    = sum(DM^2) / k
+  4. x_norm = DM * ROM_invsqrt[var]        (the 1/sqrt LUT)
+  5. out    = x_norm * gamma + beta        (dot-product unit + offset)
+
+One grid step normalizes a block of rows; gamma/beta and the invsqrt ROM
+stay resident in VMEM (the register/ROM resources of the HLS design).
+
+interpret=True ALWAYS (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tables
+
+__all__ = ["layernorm_lut"]
+
+
+def _kernel(x_ref, gamma_ref, beta_ref, rom_ref, o_ref):
+    x = x_ref[...]
+    k = x.shape[-1]
+    mean = jnp.sum(x, axis=-1, keepdims=True) / k            # stage 1
+    dm = x - mean                                            # stage 2
+    var = jnp.sum(dm * dm, axis=-1, keepdims=True) / k       # stage 3
+    inv = tables.table_lookup(                               # stage 4
+        tables.INVSQRT_TABLE, rom_ref[...], var
+    )
+    o_ref[...] = (dm * inv * gamma_ref[...] + beta_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def layernorm_lut(x, gamma, beta, block_rows: int | None = None):
+    """LUT layernorm over the last axis of ``x``: (rows, k)."""
+    rows, k = x.shape
+    if block_rows is None or block_rows >= rows:
+        block_rows = rows
+    if rows % block_rows != 0:
+        raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
+
+    rom = jnp.asarray(tables.build_table(tables.INVSQRT_TABLE))
+    grid = (rows // block_rows,)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((rom.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, k), x.dtype),
+        interpret=True,
+    )(x, gamma, beta, rom)

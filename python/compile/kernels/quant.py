@@ -1,0 +1,114 @@
+"""ap_fixed<W,I> fake quantization — the numeric contract of the paper.
+
+hls4ml deploys every tensor as an `ap_fixed<W, I>`: W total bits including
+the sign, I integer bits including the sign, W - I fractional bits.  The
+paper (§VI-A) quantizes post-training (PTQ) and quantization-aware (QAT,
+their QKeras extension for MHA/SoftMax/LayerNorm); accumulators keep a
+fixed 10 integer bits (sign included) while the fractional width is swept.
+
+This module is the *single* Python definition of that grid:
+
+    step  = 2^-(W-I)
+    max   = 2^(I-1) - step          (two's complement, sign in I)
+    min   = -2^(I-1)
+    q(x)  = clip(round_half_even(x / step) * step, min, max)
+
+Round-half-even matches hls4ml's AP_RND_CONV mode (the one used for the
+paper's accuracy plots); saturation matches AP_SAT.  The identical rule is
+implemented in rust/src/fixed/value.rs and cross-checked by an integration
+test over the aot.py-exported quantization vectors.
+
+`ste_quantize` wraps the same grid in a straight-through estimator for QAT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FixedSpec", "quantize", "ste_quantize", "ACCUM_INT_BITS"]
+
+# Paper §VI-A: "an accumulation type ... 10 bits including the sign bit".
+ACCUM_INT_BITS = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedSpec:
+    """ap_fixed<width, integer> — width and integer both include the sign."""
+
+    width: int
+    integer: int
+
+    def __post_init__(self):
+        if self.integer < 1 or self.width < self.integer:
+            raise ValueError(f"invalid ap_fixed<{self.width},{self.integer}>")
+
+    @property
+    def frac(self) -> int:
+        return self.width - self.integer
+
+    @property
+    def step(self) -> float:
+        return 2.0 ** -self.frac
+
+    @property
+    def max_value(self) -> float:
+        return 2.0 ** (self.integer - 1) - self.step
+
+    @property
+    def min_value(self) -> float:
+        return -(2.0 ** (self.integer - 1))
+
+    def accum(self) -> "FixedSpec":
+        """Matching accumulator type: same fractional bits, 10 integer."""
+        return FixedSpec(ACCUM_INT_BITS + self.frac, ACCUM_INT_BITS)
+
+    def __str__(self) -> str:  # mirrors the hls4ml config string
+        return f"ap_fixed<{self.width},{self.integer}>"
+
+
+def _round_half_even(x):
+    # jnp.round implements round-half-even already (numpy semantics).
+    return jnp.round(x)
+
+
+def quantize(x, spec: FixedSpec):
+    """Project *x* onto the ap_fixed grid (round-to-nearest-even, saturate)."""
+    q = _round_half_even(x / spec.step) * spec.step
+    return jnp.clip(q, spec.min_value, spec.max_value)
+
+
+def quantize_np(x: np.ndarray, spec: FixedSpec) -> np.ndarray:
+    """Numpy twin of `quantize` for offline weight conversion."""
+    q = np.round(x / spec.step) * spec.step
+    return np.clip(q, spec.min_value, spec.max_value).astype(np.float32)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ste_quantize(x, width: int, integer: int):
+    """Quantize with a straight-through gradient (QAT forward pass).
+
+    The backward pass is the identity *inside* the representable range and
+    zero outside it (saturated lanes stop learning), which is the standard
+    QKeras `quantized_bits` STE behaviour the paper's QAT builds on.
+    """
+    return quantize(x, FixedSpec(width, integer))
+
+
+def _ste_fwd(x, width, integer):
+    spec = FixedSpec(width, integer)
+    mask = (x >= spec.min_value) & (x <= spec.max_value)
+    return quantize(x, spec), mask
+
+
+def _ste_bwd(width, integer, mask, g):
+    return (jnp.where(mask, g, 0.0),)
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)

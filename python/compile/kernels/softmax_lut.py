@@ -1,0 +1,76 @@
+"""Pallas kernel for the paper's restructured O(k) SoftMax (§IV-B).
+
+Three pipeline stages, exactly as figure 7 of the paper:
+
+  1. element-wise exponentiation through the exp ROM;
+  2. one sum over the row + one reciprocal through the inversion ROM
+     (computed once per row, held in a "register");
+  3. element-wise multiply of the stage-1 values by the inverted sum.
+
+Hardware adaptation (DESIGN.md §4): the FPGA implementation streams one
+row per cycle out of a FIFO; here one grid step processes one block of
+rows with the two ROMs resident in VMEM for the whole kernel — the
+BlockSpec plays the role the FIFO/ROM wiring plays in HLS.
+
+interpret=True ALWAYS: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tables
+
+__all__ = ["softmax_lut"]
+
+
+def _kernel(x_ref, exp_rom_ref, inv_rom_ref, o_ref):
+    x = x_ref[...]
+    exp_rom = exp_rom_ref[...]
+    inv_rom = inv_rom_ref[...]
+
+    # stage 0: stable-softmax max subtraction (see ref.softmax_lut_ref)
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    # stage 1: e_j = ROM_exp[z_j]
+    e = tables.table_lookup(tables.EXP_TABLE, exp_rom, x)
+    # stage 2: r = ROM_inv[sum_j e_j]  (one value per row, kept in a reg)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    r = tables.table_lookup(tables.INV_TABLE, inv_rom, s)
+    # stage 3: S_i = e_i * r
+    o_ref[...] = (e * r).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax_lut(x, block_rows: int | None = None):
+    """LUT softmax over the last axis of a 2-D array ``x``: (rows, k).
+
+    ``block_rows`` tiles the row dimension across the grid (the analogue of
+    the paper's row-streaming); ``None`` processes everything in one step.
+    """
+    rows, k = x.shape
+    if block_rows is None or block_rows >= rows:
+        block_rows = rows
+    if rows % block_rows != 0:
+        raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
+
+    exp_rom = jnp.asarray(tables.build_table(tables.EXP_TABLE))
+    inv_rom = jnp.asarray(tables.build_table(tables.INV_TABLE))
+    grid = (rows // block_rows,)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((exp_rom.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((inv_rom.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, k), x.dtype),
+        interpret=True,
+    )(x, exp_rom, inv_rom)

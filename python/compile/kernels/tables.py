@@ -1,0 +1,129 @@
+"""Lookup-table specifications shared across all three layers of the stack.
+
+The paper's SoftMax (§IV-B) and LayerNorm (§IV-C) replace transcendental
+functions with table ROMs: an exp table, an inversion table, and an
+inverse-square-root table.  The exact table geometry is the contract that
+makes the Pallas kernels (L1), the jnp oracles (ref.py) and the Rust HLS
+simulator (rust/src/fixed/lut.rs) *bit-comparable*: all three construct the
+same tables from the same constants, and an integration test on the Rust
+side asserts equality against the dump exported by aot.py.
+
+Indexing convention (identical in Rust):
+
+    idx = clamp(floor((x - LO) / (HI - LO) * N), 0, N - 1)
+    y   = table[idx]          where table[i] = f(LO + (i + 0.5) * step)
+
+The half-step centering halves the worst-case quantization error of the
+plain left-edge rule and matches what hls4ml's generated ROMs do in
+practice (values are sampled mid-bin).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "TableSpec",
+    "EXP_TABLE",
+    "INV_TABLE",
+    "INVSQRT_TABLE",
+    "table_lookup",
+    "build_table",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """Geometry of one lookup-table ROM.
+
+    Attributes:
+        name: stable identifier used in the artifact dump.
+        lo: inclusive lower edge of the input domain.
+        hi: exclusive upper edge of the input domain.
+        n: number of ROM entries (BRAM depth on the FPGA).
+    """
+
+    name: str
+    lo: float
+    hi: float
+    n: int
+
+    @property
+    def step(self) -> float:
+        return (self.hi - self.lo) / self.n
+
+    def index(self, x):
+        """Vectorized index computation (numpy or jax arrays)."""
+        # works for np and jnp because both expose the same ufunc surface
+        xp = _xp(x)
+        raw = xp.floor((x - self.lo) / (self.hi - self.lo) * self.n)
+        return xp.clip(raw, 0, self.n - 1).astype(_int_dtype(x))
+
+    def centers(self) -> np.ndarray:
+        return (self.lo + (np.arange(self.n) + 0.5) * self.step).astype(
+            np.float32
+        )
+
+
+def _xp(x):
+    # late import so numpy-only users never pay for jax
+    if type(x).__module__.startswith("jax") or "Array" in type(x).__name__:
+        import jax.numpy as jnp
+
+        return jnp
+    return np
+
+
+def _int_dtype(x):
+    return np.int32
+
+
+# ---------------------------------------------------------------------------
+# The three ROMs of the paper.
+#
+# exp: softmax stage 1 (§IV-B).  Attention scores after the 1/sqrt(d_k)
+#      scaling land overwhelmingly in [-8, 8) for the trained zoo models
+#      (asserted by python/tests/test_tables.py on real eval activations);
+#      out-of-range inputs saturate to the edge bins exactly like an
+#      hls4ml ROM does.
+# inv: softmax stage 2 — reciprocal of the exp-sum.  Sums in the zoo are
+#      O(seq_len) (15..100 terms, scores centered near 0 after training);
+#      the ROM covers (2^-6, 512) with 4096 entries: bin width 1/8, so the
+#      row-sum-of-probabilities stays within a few percent of 1 down to
+#      sums ~2 while seq-100 rows with hot scores (sums of several hundred)
+#      still resolve instead of saturating.  Larger sums clamp to the top
+#      bin exactly like an hls4ml ROM.
+# invsqrt: layernorm stage 4 — 1/sqrt(var) for variances in (0, 16); the
+#      pre-affine variance of d_model-wide activations is O(1) once
+#      training has converged, and the 16x headroom keeps untrained /
+#      adversarial rows off the saturation cliff.
+# ---------------------------------------------------------------------------
+
+EXP_TABLE = TableSpec(name="exp", lo=-8.0, hi=8.0, n=1024)
+INV_TABLE = TableSpec(name="inv", lo=2.0 ** -6, hi=512.0, n=4096)
+INVSQRT_TABLE = TableSpec(name="invsqrt", lo=2.0 ** -10, hi=16.0, n=2048)
+
+_BUILDERS = {
+    "exp": np.exp,
+    "inv": lambda c: 1.0 / c,
+    "invsqrt": lambda c: 1.0 / np.sqrt(c),
+}
+
+
+def build_table(spec: TableSpec) -> np.ndarray:
+    """Materialize the ROM contents for *spec* as f32 (BRAM image)."""
+    f = _BUILDERS[spec.name]
+    return f(spec.centers().astype(np.float64)).astype(np.float32)
+
+
+def table_lookup(spec: TableSpec, table, x):
+    """Evaluate f(x) through the ROM. Works under numpy and jax tracing."""
+    xp = _xp(x)
+    return xp.take(table, spec.index(x))
+
+
+def all_tables() -> dict[str, np.ndarray]:
+    """name -> ROM image, for the artifact dump consumed by the Rust tests."""
+    return {s.name: build_table(s) for s in (EXP_TABLE, INV_TABLE, INVSQRT_TABLE)}

@@ -1,0 +1,219 @@
+"""Layer-2: the paper's transformer encoder zoo in pure JAX.
+
+One config-driven builder covers all three benchmark models of Table I
+(engine / b-tagging / gravitational waves).  The architecture follows the
+paper's description (§II-A, §V, figure 3):
+
+    input dense embed (F -> d_model)
+    x N blocks:
+        MHA (+ residual) [+ LayerNorm]
+        FFN dense-relu-dense (+ residual) [+ LayerNorm]
+    global average pool over the sequence
+    dense (relu) -> dense head -> softmax / sigmoid
+
+Head counts and FFN widths are not published; the zoo picks them so the
+trainable-parameter counts land within 0.5% of Table I (asserted in
+python/tests/test_model.py and rust tests zoo_param_counts):
+
+    engine  h=2 k=4 ffn=12 head=16 -> 3230 (paper 3244)
+    btag    h=4 k=2 ffn=2  head=8  -> 9137 (paper 9135)
+    gw      h=2 k=2 ffn=4  head=40 -> 3409 (paper 3394)
+
+Two execution paths, numerically identical layer-for-layer:
+
+* ``apply(..., use_pallas=True)``  — routes MHA/softmax/layernorm/dense
+  through the Pallas kernels (L1).  Used by aot.py so the kernels lower
+  into the exported HLO.
+* ``use_pallas=False`` — pure-jnp oracles (differentiable; used by
+  train.py).
+
+``lut_math=True`` selects the paper's hardware formulation (LUT softmax /
+LUT layernorm); ``False`` the exact Keras math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dense as kdense
+from .kernels import layernorm_lut as kln
+from .kernels import mha as kmha
+from .kernels import quant as kquant
+from .kernels import ref
+
+__all__ = ["ModelConfig", "ZOO", "init_params", "apply", "param_count", "logits_to_probs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters of one zoo model (paper Table I row + our choices)."""
+
+    name: str
+    seq_len: int
+    input_size: int
+    num_blocks: int
+    d_model: int
+    output_size: int
+    num_heads: int
+    head_dim: int
+    ffn_dim: int
+    head_hidden: int
+    use_layernorm: bool
+    paper_params: int  # Table I "Trainable Param." for the delta assertion
+
+    @property
+    def final_activation(self) -> str:
+        return "sigmoid" if self.output_size == 1 else "softmax"
+
+
+ZOO: dict[str, ModelConfig] = {
+    "engine": ModelConfig(
+        name="engine", seq_len=50, input_size=1, num_blocks=3, d_model=16,
+        output_size=2, num_heads=2, head_dim=4, ffn_dim=12, head_hidden=16,
+        use_layernorm=False, paper_params=3244,
+    ),
+    "btag": ModelConfig(
+        name="btag", seq_len=15, input_size=6, num_blocks=3, d_model=64,
+        output_size=3, num_heads=4, head_dim=2, ffn_dim=2, head_hidden=8,
+        use_layernorm=True, paper_params=9135,
+    ),
+    "gw": ModelConfig(
+        name="gw", seq_len=100, input_size=2, num_blocks=2, d_model=32,
+        output_size=1, num_heads=2, head_dim=2, ffn_dim=4, head_hidden=40,
+        use_layernorm=True, paper_params=3394,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (Glorot-uniform like Keras defaults).
+# Params are a flat dict[str, array]; the NNW export preserves names so the
+# Rust loader (rust/src/models/weights.rs) can rebuild the same tree.
+# ---------------------------------------------------------------------------
+
+def _glorot(rng, shape):
+    fan_in, fan_out = shape[-2], shape[-1]
+    limit = np.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-limit, limit, size=shape).astype(np.float32)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    h, d, k = cfg.num_heads, cfg.d_model, cfg.head_dim
+    p: dict[str, np.ndarray] = {}
+    p["embed.w"] = _glorot(rng, (cfg.input_size, d))
+    p["embed.b"] = np.zeros(d, np.float32)
+    for b in range(cfg.num_blocks):
+        pre = f"block{b}."
+        for nm in ("wq", "wk", "wv"):
+            p[pre + f"mha.{nm}"] = np.stack([_glorot(rng, (d, k)) for _ in range(h)])
+            p[pre + f"mha.b{nm[1]}"] = np.zeros((h, k), np.float32)
+        p[pre + "mha.wo"] = _glorot(rng, (h * k, d))
+        p[pre + "mha.bo"] = np.zeros(d, np.float32)
+        if cfg.use_layernorm:
+            p[pre + "ln1.gamma"] = np.ones(d, np.float32)
+            p[pre + "ln1.beta"] = np.zeros(d, np.float32)
+        p[pre + "ffn1.w"] = _glorot(rng, (d, cfg.ffn_dim))
+        p[pre + "ffn1.b"] = np.zeros(cfg.ffn_dim, np.float32)
+        p[pre + "ffn2.w"] = _glorot(rng, (cfg.ffn_dim, d))
+        p[pre + "ffn2.b"] = np.zeros(d, np.float32)
+        if cfg.use_layernorm:
+            p[pre + "ln2.gamma"] = np.ones(d, np.float32)
+            p[pre + "ln2.beta"] = np.zeros(d, np.float32)
+    p["head.w"] = _glorot(rng, (d, cfg.head_hidden))
+    p["head.b"] = np.zeros(cfg.head_hidden, np.float32)
+    p["out.w"] = _glorot(rng, (cfg.head_hidden, cfg.output_size))
+    p["out.b"] = np.zeros(cfg.output_size, np.float32)
+    return p
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(v.shape)) for v in init_params(cfg).values())
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+def _mha_params(p, pre):
+    return {
+        "wq": p[pre + "mha.wq"], "bq": p[pre + "mha.bq"],
+        "wk": p[pre + "mha.wk"], "bk": p[pre + "mha.bk"],
+        "wv": p[pre + "mha.wv"], "bv": p[pre + "mha.bv"],
+        "wo": p[pre + "mha.wo"], "bo": p[pre + "mha.bo"],
+    }
+
+
+def _dense(x, w, b, act, use_pallas):
+    if use_pallas:
+        return kdense.dense(x, w, b, activation=act)
+    return ref.dense_ref(x, w, b, activation=act)
+
+
+def _layernorm(x, g, be, lut_math, use_pallas):
+    if use_pallas:
+        # the kernel implements only the LUT (hardware) formulation
+        return kln.layernorm_lut(x, g, be)
+    if lut_math:
+        return ref.layernorm_lut_ref(x, g, be)
+    return ref.layernorm_exact(x, g, be)
+
+
+def _mha(x, params, lut_math, use_pallas):
+    if use_pallas:
+        return kmha.mha(x, params, use_lut_softmax=lut_math)
+    if lut_math:
+        return ref.mha_lut_ref(x, params)
+    return ref.mha_ref(x, params)
+
+
+def apply(cfg: ModelConfig, params, x, *, use_pallas: bool = False,
+          lut_math: bool = False, quant_bits: tuple[int, int] | None = None):
+    """Forward one event x: (seq_len, input_size) -> logits (output_size,).
+
+    ``quant_bits=(width, integer)`` inserts STE fake-quantization on every
+    weight and every inter-layer activation — the QAT path (paper §VI-A,
+    their QKeras MHA/SoftMax/LayerNorm quantizer extension).
+    """
+    if quant_bits is not None:
+        w_, i_ = quant_bits
+        q = lambda t: kquant.ste_quantize(t, w_, i_)
+        params = {k2: q(v) for k2, v in params.items()}
+    else:
+        q = lambda t: t
+
+    x = q(_dense(x, params["embed.w"], params["embed.b"], "linear", use_pallas))
+    for b in range(cfg.num_blocks):
+        pre = f"block{b}."
+        attn = _mha(x, _mha_params(params, pre), lut_math, use_pallas)
+        x = q(x + attn)  # residual (paper: all models use residuals)
+        if cfg.use_layernorm:
+            x = q(_layernorm(x, params[pre + "ln1.gamma"],
+                             params[pre + "ln1.beta"], lut_math, use_pallas))
+        y = q(_dense(x, params[pre + "ffn1.w"], params[pre + "ffn1.b"],
+                     "relu", use_pallas))
+        y = _dense(y, params[pre + "ffn2.w"], params[pre + "ffn2.b"],
+                   "linear", use_pallas)
+        x = q(x + y)     # residual
+        if cfg.use_layernorm:
+            x = q(_layernorm(x, params[pre + "ln2.gamma"],
+                             params[pre + "ln2.beta"], lut_math, use_pallas))
+    pooled = jnp.mean(x, axis=0, keepdims=True)  # (1, d) global average pool
+    hdn = q(_dense(pooled, params["head.w"], params["head.b"], "relu", use_pallas))
+    logits = _dense(hdn, params["out.w"], params["out.b"], "linear", use_pallas)
+    return logits[0]
+
+
+def logits_to_probs(cfg: ModelConfig, logits):
+    if cfg.final_activation == "sigmoid":
+        return jax.nn.sigmoid(logits)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def apply_batch(cfg: ModelConfig, params, xs, **kw):
+    """vmap over events: xs (n, S, F) -> logits (n, O)."""
+    return jax.vmap(lambda x: apply(cfg, params, x, **kw))(xs)

@@ -1,0 +1,59 @@
+"""NNW — the flat named-tensor binary format shared with the Rust side.
+
+Layout (all little-endian), mirrored exactly by rust/src/models/nnw.rs:
+
+    magic   4 bytes  b"NNW1"
+    count   u32      number of tensors
+    per tensor:
+        name_len u16, name utf-8 bytes
+        ndim     u8,  dims ndim x u32
+        data     prod(dims) x f32
+
+Chosen over JSON/npz because the offline crate set has no serde/npz reader
+and the format must be trivially parseable from Rust with byteorder only.
+"""
+
+from __future__ import annotations
+
+import struct
+from collections import OrderedDict
+
+import numpy as np
+
+MAGIC = b"NNW1"
+
+
+def write_nnw(path: str, tensors: "OrderedDict[str, np.ndarray] | dict") -> None:
+    """Write name->array mapping. Arrays are converted to f32 C-order."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            a = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            if len(nb) > 0xFFFF:
+                raise ValueError(f"tensor name too long: {name!r}")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(a.tobytes())
+
+
+def read_nnw(path: str) -> "OrderedDict[str, np.ndarray]":
+    """Read back an NNW file (round-trip testing + artifact inspection)."""
+    out: "OrderedDict[str, np.ndarray]" = OrderedDict()
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").astype(np.float32)
+            out[name] = data.reshape(dims)
+    return out

@@ -1,0 +1,143 @@
+"""Build-time training of the Table-I zoo on the synthetic datasets.
+
+Pure-JAX Adam (no optax in the environment).  Two checkpoints per model:
+
+* ``ptq``  — float training; quantized post-hoc by the Rust sweep (E2).
+* ``qat``  — straight-through-estimator training at the model's reference
+  precision (paper §VI-A: the QKeras-style quantizers we add to MHA /
+  SoftMax / LayerNorm).  The exported weights are the *latent* floats;
+  the sweep re-quantizes them at each (W, I) grid point exactly as the
+  paper re-evaluates its QAT models across fractional widths.
+
+Training uses the differentiable oracle path (use_pallas=False,
+lut_math=False); aot.py separately verifies the Pallas path agrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model
+
+__all__ = ["TrainResult", "train", "evaluate_auc", "REFERENCE_QAT_BITS"]
+
+# Reference QAT precision per model: the paper's chosen integer widths
+# (§VI-A last paragraph: engine 6 int, btag QAT 6 int, gw 6 int) with a
+# mid-sweep fractional width.
+REFERENCE_QAT_BITS = {"engine": (14, 6), "btag": (14, 6), "gw": (14, 6)}
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: dict
+    accuracy: float
+    auc: float
+    steps: int
+    seconds: float
+
+
+def _loss_fn(cfg, params, x, y, quant_bits):
+    logits = model.apply_batch(cfg, params, x, quant_bits=quant_bits)
+    if cfg.output_size == 1:
+        z = logits[:, 0]
+        yf = y.astype(jnp.float32)
+        # BCE with logits, stable form
+        return jnp.mean(jnp.maximum(z, 0) - z * yf + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def _adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in zeros.items()}
+
+
+def train(cfg: model.ModelConfig, data: datasets.Dataset, *,
+          steps: int = 1500, batch: int = 64, lr: float = 3e-3,
+          quant_bits: tuple[int, int] | None = None, seed: int = 0,
+          log=lambda s: None) -> TrainResult:
+    t0 = time.time()
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed).items()}
+    m, v = _adam_init(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(params, m, v, x, y, t):
+        loss, grads = jax.value_and_grad(
+            lambda p: _loss_fn(cfg, p, x, y, quant_bits)
+        )(params)
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            new_m[k] = b1 * m[k] + (1 - b1) * grads[k]
+            new_v[k] = b2 * v[k] + (1 - b2) * grads[k] ** 2
+            mh = new_m[k] / (1 - b1 ** t)
+            vh = new_v[k] / (1 - b2 ** t)
+            new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+        return new_p, new_m, new_v, loss
+
+    rng = np.random.default_rng(seed + 99)
+    n = len(data.x_train)
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        x = jnp.asarray(data.x_train[idx])
+        y = jnp.asarray(data.y_train[idx])
+        params, m, v, loss = step(params, m, v, x, y, t)
+        if t % 250 == 0 or t == 1:
+            log(f"  step {t:5d}  loss {float(loss):.4f}")
+
+    acc, auc = evaluate(cfg, params, data)
+    return TrainResult(
+        params={k: np.asarray(v) for k, v in params.items()},
+        accuracy=acc, auc=auc, steps=steps, seconds=time.time() - t0,
+    )
+
+
+def evaluate(cfg, params, data: datasets.Dataset):
+    """(accuracy, AUC-vs-truth) on the eval split, float path."""
+    logits = np.asarray(model.apply_batch(
+        cfg, {k: jnp.asarray(v) for k, v in params.items()},
+        jnp.asarray(data.x_eval)))
+    if cfg.output_size == 1:
+        scores = 1.0 / (1.0 + np.exp(-logits[:, 0]))
+        pred = (scores > 0.5).astype(np.int32)
+        auc = binary_auc(scores, data.y_eval)
+    else:
+        pred = logits.argmax(-1)
+        # macro one-vs-rest AUC (mirrors rust/src/metrics/auc.rs)
+        e = np.exp(logits - logits.max(-1, keepdims=True))
+        probs = e / e.sum(-1, keepdims=True)
+        aucs = [binary_auc(probs[:, c], (data.y_eval == c).astype(np.int32))
+                for c in range(cfg.output_size)]
+        auc = float(np.mean(aucs))
+    acc = float((pred == data.y_eval).mean())
+    return acc, auc
+
+
+def binary_auc(scores: np.ndarray, labels: np.ndarray) -> float:
+    """Exact ROC AUC via the rank statistic (ties get midranks)."""
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty(len(scores), np.float64)
+    s = scores[order]
+    i = 0
+    r = 1.0
+    while i < len(s):
+        j = i
+        while j + 1 < len(s) and s[j + 1] == s[i]:
+            j += 1
+        ranks[order[i:j + 1]] = (r + r + (j - i)) / 2.0
+        r += j - i + 1
+        i = j + 1
+    pos = labels == 1
+    n_pos, n_neg = int(pos.sum()), int((~pos).sum())
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
+
+
+def evaluate_auc(cfg, params, data):
+    return evaluate(cfg, params, data)[1]

@@ -1,0 +1,101 @@
+"""L2 model builder tests: Table-I fidelity, path agreement, QAT plumbing."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.mark.parametrize("name", list(model.ZOO))
+def test_param_count_within_half_percent_of_table1(name):
+    cfg = model.ZOO[name]
+    pc = model.param_count(cfg)
+    assert abs(pc - cfg.paper_params) / cfg.paper_params < 0.005, (
+        f"{name}: {pc} vs paper {cfg.paper_params}"
+    )
+
+
+@pytest.mark.parametrize("name", list(model.ZOO))
+def test_table1_config_values(name):
+    """The zoo must carry the published Table-I values verbatim."""
+    cfg = model.ZOO[name]
+    table1 = {
+        "engine": (50, 1, 3, 16, 2),
+        "btag": (15, 6, 3, 64, 3),
+        "gw": (100, 2, 2, 32, 1),
+    }[name]
+    assert (cfg.seq_len, cfg.input_size, cfg.num_blocks, cfg.d_model,
+            cfg.output_size) == table1
+
+
+@pytest.mark.parametrize("name", list(model.ZOO))
+def test_forward_shapes(name):
+    cfg = model.ZOO[name]
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg).items()}
+    x = jnp.zeros((cfg.seq_len, cfg.input_size))
+    logits = model.apply(cfg, params, x)
+    assert logits.shape == (cfg.output_size,)
+    probs = model.logits_to_probs(cfg, logits)
+    assert probs.shape == (cfg.output_size,)
+
+
+@pytest.mark.parametrize("name", list(model.ZOO))
+def test_batch_matches_single(name):
+    cfg = model.ZOO[name]
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, 3).items()}
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(0, 1, (4, cfg.seq_len, cfg.input_size))
+                     .astype(np.float32))
+    batched = model.apply_batch(cfg, params, xs)
+    singles = jnp.stack([model.apply(cfg, params, xs[i]) for i in range(4)])
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(singles),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", list(model.ZOO))
+def test_pallas_path_matches_oracle_path(name):
+    """use_pallas=True must be numerically identical to the jnp oracles."""
+    cfg = model.ZOO[name]
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, 5).items()}
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (cfg.seq_len, cfg.input_size))
+                    .astype(np.float32))
+    a = model.apply(cfg, params, x, use_pallas=True, lut_math=True)
+    b = model.apply(cfg, params, x, use_pallas=False, lut_math=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_lut_math_close_but_not_identical_to_exact():
+    cfg = model.ZOO["gw"]  # has layernorm -> both LUTs exercised
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, 7).items()}
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (cfg.seq_len, cfg.input_size))
+                    .astype(np.float32))
+    exact = np.asarray(model.apply(cfg, params, x, lut_math=False))
+    lut = np.asarray(model.apply(cfg, params, x, lut_math=True))
+    assert not np.array_equal(exact, lut)          # the ROMs quantize
+    np.testing.assert_allclose(exact, lut, atol=0.5)  # but stay close
+
+
+def test_qat_quant_bits_changes_output_and_keeps_shape():
+    cfg = model.ZOO["engine"]
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, 9).items()}
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (cfg.seq_len, cfg.input_size))
+                    .astype(np.float32))
+    f = np.asarray(model.apply(cfg, params, x))
+    q = np.asarray(model.apply(cfg, params, x, quant_bits=(10, 4)))
+    assert q.shape == f.shape
+    assert not np.array_equal(f, q)
+    # very coarse quantization degrades more
+    q2 = np.asarray(model.apply(cfg, params, x, quant_bits=(4, 2)))
+    assert np.abs(q2 - f).max() >= np.abs(q - f).max() * 0.1  # sanity only
+
+
+def test_engine_has_no_layernorm_params():
+    p = model.init_params(model.ZOO["engine"])
+    assert not any("ln" in k for k in p)
+    p = model.init_params(model.ZOO["btag"])
+    assert any("ln1" in k for k in p) and any("ln2" in k for k in p)

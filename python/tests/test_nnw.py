@@ -1,0 +1,62 @@
+"""NNW binary format round-trip tests (compile/nnw.py)."""
+
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import nnw
+
+
+def test_roundtrip_basic(tmp_path):
+    p = str(tmp_path / "t.nnw")
+    t = OrderedDict([
+        ("a", np.arange(6, dtype=np.float32).reshape(2, 3)),
+        ("b.c/d", np.float32(3.5) * np.ones((4,), np.float32)),
+        ("scalarish", np.zeros((1,), np.float32)),
+    ])
+    nnw.write_nnw(p, t)
+    back = nnw.read_nnw(p)
+    assert list(back) == list(t)
+    for k in t:
+        np.testing.assert_array_equal(back[k], t[k])
+        assert back[k].shape == t[k].shape
+
+
+def test_empty_file_roundtrip(tmp_path):
+    p = str(tmp_path / "e.nnw")
+    nnw.write_nnw(p, OrderedDict())
+    assert nnw.read_nnw(p) == OrderedDict()
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = str(tmp_path / "bad.nnw")
+    with open(p, "wb") as f:
+        f.write(b"XXXX\x00\x00\x00\x00")
+    with pytest.raises(ValueError):
+        nnw.read_nnw(p)
+
+
+def test_f64_downcast(tmp_path):
+    p = str(tmp_path / "d.nnw")
+    nnw.write_nnw(p, {"x": np.array([1.0, 2.0])})  # float64 in
+    assert nnw.read_nnw(p)["x"].dtype == np.float32
+
+
+@given(st.lists(
+    st.tuples(st.integers(0, 4), st.integers(1, 5), st.integers(1, 5)),
+    min_size=1, max_size=6))
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_random_shapes(tmp_path_factory, shapes):
+    p = str(tmp_path_factory.mktemp("nnw") / "r.nnw")
+    rng = np.random.default_rng(0)
+    t = OrderedDict()
+    for i, (nd, a, b) in enumerate(shapes):
+        shape = ((a, b, 2, 3)[: max(nd, 1)]) if nd else (1,)
+        t[f"t{i}"] = rng.normal(size=shape).astype(np.float32)
+    nnw.write_nnw(p, t)
+    back = nnw.read_nnw(p)
+    for k in t:
+        np.testing.assert_array_equal(back[k], t[k])

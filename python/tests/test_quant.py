@@ -1,0 +1,98 @@
+"""ap_fixed quantizer tests (python/compile/kernels/quant.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.quant import FixedSpec, quantize, quantize_np, ste_quantize
+
+
+specs = st.tuples(st.integers(2, 24), st.integers(1, 12)).filter(
+    lambda t: t[0] >= t[1]
+).map(lambda t: FixedSpec(t[0], t[1]))
+
+
+def test_spec_grid_basics():
+    s = FixedSpec(8, 4)  # ap_fixed<8,4>: 4 frac bits
+    assert s.frac == 4
+    assert s.step == 1 / 16
+    assert s.max_value == 8 - 1 / 16
+    assert s.min_value == -8
+
+
+def test_invalid_specs_raise():
+    with pytest.raises(ValueError):
+        FixedSpec(4, 0)
+    with pytest.raises(ValueError):
+        FixedSpec(4, 5)
+
+
+def test_accum_spec():
+    assert FixedSpec(8, 4).accum() == FixedSpec(14, 10)
+
+
+@given(specs, st.floats(-1000, 1000))
+@settings(max_examples=300, deadline=None)
+def test_quantize_idempotent(spec, x):
+    q1 = quantize_np(np.float32(x), spec)
+    q2 = quantize_np(q1, spec)
+    np.testing.assert_array_equal(q1, q2)
+
+
+@given(specs, st.floats(-1000, 1000))
+@settings(max_examples=300, deadline=None)
+def test_quantize_in_range(spec, x):
+    q = float(quantize_np(np.float32(x), spec))
+    assert spec.min_value <= q <= spec.max_value
+
+
+@given(specs, st.floats(-30, 30), st.floats(-30, 30))
+@settings(max_examples=300, deadline=None)
+def test_quantize_monotone(spec, a, b):
+    lo, hi = sorted((a, b))
+    qa = float(quantize_np(np.float32(lo), spec))
+    qb = float(quantize_np(np.float32(hi), spec))
+    assert qa <= qb
+
+
+@given(specs, st.floats(-4, 4))
+@settings(max_examples=300, deadline=None)
+def test_quantize_half_ulp(spec, x):
+    """Inside the representable range the error is <= step/2."""
+    if not (spec.min_value <= x <= spec.max_value):
+        return
+    q = float(quantize_np(np.float32(x), spec))
+    assert abs(q - np.float32(x)) <= spec.step / 2 + 1e-7
+
+
+def test_round_half_even():
+    s = FixedSpec(8, 7)  # 1 frac bit, step 0.5
+    # ties: 0.25 -> 0.0 (even), 0.75 -> 1.0 (even), -0.25 -> 0.0
+    got = quantize_np(np.array([0.25, 0.75, -0.25, -0.75], np.float32), s)
+    np.testing.assert_allclose(got, [0.0, 1.0, 0.0, -1.0])
+
+
+def test_jax_and_numpy_quantizers_agree():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 8, 4096).astype(np.float32)
+    for spec in [FixedSpec(8, 3), FixedSpec(16, 6), FixedSpec(10, 10)]:
+        a = np.asarray(quantize(jnp.asarray(x), spec))
+        b = quantize_np(x, spec)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ste_forward_matches_quantize():
+    x = jnp.linspace(-10, 10, 101)
+    a = ste_quantize(x, 8, 3)
+    b = quantize(x, FixedSpec(8, 3))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ste_gradient_is_masked_identity():
+    g = jax.grad(lambda x: jnp.sum(ste_quantize(x, 8, 3)))(
+        jnp.array([0.5, 3.9, 100.0, -100.0])
+    )
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0, 0.0, 0.0])

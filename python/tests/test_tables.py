@@ -1,0 +1,85 @@
+"""LUT ROM geometry tests (python/compile/kernels/tables.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import tables
+
+
+ALL_SPECS = [tables.EXP_TABLE, tables.INV_TABLE, tables.INVSQRT_TABLE]
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+def test_table_shape_and_finite(spec):
+    rom = tables.build_table(spec)
+    assert rom.shape == (spec.n,)
+    assert rom.dtype == np.float32
+    assert np.all(np.isfinite(rom))
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+def test_index_clamps_to_rom(spec):
+    xs = np.array([-1e9, spec.lo - 1, spec.lo, spec.hi - 1e-6, spec.hi, 1e9],
+                  np.float32)
+    idx = spec.index(xs)
+    assert idx.min() >= 0 and idx.max() <= spec.n - 1
+    assert idx[0] == 0 and idx[-1] == spec.n - 1
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+def test_centers_in_domain(spec):
+    c = spec.centers()
+    assert c[0] > spec.lo and c[-1] < spec.hi
+    assert len(c) == spec.n
+
+
+def test_exp_table_accuracy_midrange():
+    rom = tables.build_table(tables.EXP_TABLE)
+    xs = np.linspace(-6, 6, 999).astype(np.float32)
+    got = tables.table_lookup(tables.EXP_TABLE, rom, xs)
+    want = np.exp(xs)
+    # one bin of input error -> bounded relative output error
+    assert np.max(np.abs(got - want) / want) < np.exp(tables.EXP_TABLE.step) - 1 + 1e-4
+
+
+def test_inv_table_accuracy_midrange():
+    rom = tables.build_table(tables.INV_TABLE)
+    xs = np.linspace(1.0, 250.0, 777).astype(np.float32)
+    got = tables.table_lookup(tables.INV_TABLE, rom, xs)
+    want = 1.0 / xs
+    assert np.max(np.abs(got - want) * xs) < 0.08
+    # realistic softmax sums (O(seq_len)) are even tighter
+    mid = (xs > 8) & (xs < 200)
+    assert np.max(np.abs(got[mid] - want[mid]) * xs[mid]) < 0.01
+
+
+def test_inv_table_saturates_above_domain():
+    rom = tables.build_table(tables.INV_TABLE)
+    got = float(tables.table_lookup(tables.INV_TABLE, rom, np.float32(1e6)))
+    assert got == rom[-1]
+
+
+def test_invsqrt_monotone_decreasing():
+    rom = tables.build_table(tables.INVSQRT_TABLE)
+    assert np.all(np.diff(rom) < 0)
+
+
+@given(st.floats(-1e6, 1e6))
+@settings(max_examples=200, deadline=None)
+def test_lookup_total_function(x):
+    """Every float input maps to some ROM entry (no index errors)."""
+    for spec in ALL_SPECS:
+        rom = tables.build_table(spec)
+        y = tables.table_lookup(spec, rom, np.float32(x))
+        assert np.isfinite(y)
+
+
+@given(st.lists(st.floats(-8, 7.9), min_size=2, max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_index_monotone(vals):
+    """idx(x) is monotone in x for in-domain inputs (ROM addressing)."""
+    xs = np.sort(np.array(vals, np.float32))
+    idx = tables.EXP_TABLE.index(xs)
+    assert np.all(np.diff(idx) >= 0)

@@ -1,0 +1,87 @@
+//! Bench: E6 — end-to-end trigger serving across backends and batch
+//! policies.  Reports throughput + latency percentiles per configuration
+//! (the testbed analogue of the paper's headline "<2 µs @ R1" claim,
+//! which for the FPGA itself is modeled by Tables II-IV).
+//! `cargo bench --bench e2e_serving`.
+
+mod harness;
+
+use std::time::Duration;
+
+use hls4ml_transformer::artifacts_dir;
+use hls4ml_transformer::coordinator::{
+    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, TriggerServer, WeightsSource,
+};
+use hls4ml_transformer::experiments::artifacts_ready;
+
+fn run(model: &'static str, backend: BackendKind, batch: usize, events: u64) {
+    let have_artifacts = artifacts_ready(&artifacts_dir(), model);
+    if backend == BackendKind::Pjrt && !have_artifacts {
+        println!("  SKIP {model}/{backend:?}: artifacts missing");
+        return;
+    }
+    let cfg = ServerConfig {
+        pipelines: vec![PipelineConfig {
+            batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_micros(200) },
+            weights: if have_artifacts {
+                WeightsSource::Artifacts
+            } else {
+                WeightsSource::Synthetic(7)
+            },
+            ..PipelineConfig::new(model, backend)
+        }],
+        events_per_source: events,
+        rate_per_source: 0,
+        artifacts_dir: artifacts_dir(),
+    };
+    match TriggerServer::run(&cfg) {
+        Ok(report) => {
+            let s = &report.per_model[model];
+            println!(
+                "  {model:7} {backend:6?} batch<={batch}  {:>9.0} ev/s  fill {:4.1}  lat {}{}",
+                report.throughput_eps(),
+                s.mean_batch_fill(),
+                s.latency.summary(),
+                s.online_auc().map(|a| format!("  auc={a:.3}")).unwrap_or_default(),
+            );
+        }
+        Err(e) => println!("  {model}/{backend:?} FAILED: {e:#}"),
+    }
+}
+
+fn main() {
+    harness::section("E6: end-to-end trigger serving (throughput / latency)");
+    println!("(sources run at max rate; latency includes queueing + batching)");
+
+    for model in ["engine", "btag", "gw"] {
+        run(model, BackendKind::Float, 1, 4000);
+        run(model, BackendKind::Float, 8, 4000);
+        run(model, BackendKind::Hls, 8, 300);
+        run(model, BackendKind::Pjrt, 1, 1500);
+        run(model, BackendKind::Pjrt, 8, 3000);
+        println!();
+    }
+
+    harness::section("multi-model concurrent serving (all three pipelines)");
+    let cfg = ServerConfig {
+        pipelines: ["engine", "btag", "gw"]
+            .into_iter()
+            .map(|m| {
+                let have = artifacts_ready(&artifacts_dir(), m);
+                PipelineConfig {
+                    weights: if have {
+                        WeightsSource::Artifacts
+                    } else {
+                        WeightsSource::Synthetic(3)
+                    },
+                    ..PipelineConfig::new(m, BackendKind::Float)
+                }
+            })
+            .collect(),
+        events_per_source: 2000,
+        rate_per_source: 0,
+        artifacts_dir: artifacts_dir(),
+    };
+    let report = TriggerServer::run(&cfg).unwrap();
+    print!("{report}");
+}

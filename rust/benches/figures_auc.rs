@@ -1,0 +1,73 @@
+//! Bench: regenerates Figures 9, 10, 11 (AUC ratio vs fractional bits,
+//! PTQ + QAT, integer widths 6..10) over the exported eval tensors.
+//! Requires `make artifacts`.  `cargo bench --bench figures_auc`.
+//!
+//! Environment knobs: REPRO_AUC_EVENTS (default 192),
+//! REPRO_AUC_FULL=1 for the paper's full 5x10 integer/fraction grid.
+
+mod harness;
+
+use std::time::Instant;
+
+use hls4ml_transformer::artifacts_dir;
+use hls4ml_transformer::experiments::{artifacts_ready, auc_figures, load_checkpoints};
+use hls4ml_transformer::models::zoo::zoo;
+use hls4ml_transformer::quant::EvalSet;
+
+fn main() {
+    let dir = artifacts_dir();
+    let events: usize = std::env::var("REPRO_AUC_EVENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(192);
+    let full = std::env::var("REPRO_AUC_FULL").map(|v| v == "1").unwrap_or(false);
+    let ints: Vec<u32> = if full { vec![6, 7, 8, 9, 10] } else { vec![6, 8, 10] };
+    let fracs: Vec<u32> = (2..=11).collect();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    harness::section("E2: Figures 9-11 — AUC ratio vs fractional bits");
+    for m in zoo() {
+        if !artifacts_ready(&dir, &m.config.name) {
+            println!("SKIP {}: artifacts missing (run `make artifacts`)", m.config.name);
+            continue;
+        }
+        let (ptq, qat) = load_checkpoints(&dir, &m.config).unwrap();
+        let eval = EvalSet::load(&dir, &m.config).unwrap().truncate(events);
+        let t0 = Instant::now();
+        let results =
+            auc_figures::run_figure(&m.config, &ptq, &qat, &eval, &ints, &fracs, threads);
+        let wall = t0.elapsed();
+        println!("\n{}", auc_figures::render(&m.config, &results, &fracs));
+        println!(
+            "({} design points x {} events in {:.2}s, {} threads)",
+            results.len(),
+            eval.len(),
+            wall.as_secs_f64(),
+            threads
+        );
+
+        // acceptance shape: curves converge to ratio ~1 at high precision
+        for qat_flag in [false, true] {
+            let ok = auc_figures::converges_to_one(&results, qat_flag, ints[0]);
+            println!(
+                "  trend: {} {}-int curve converges to 1.0: {}",
+                if qat_flag { "QAT" } else { "PTQ" },
+                ints[0],
+                if ok { "OK" } else { "VIOLATED" }
+            );
+        }
+        // fidelity improves with precision
+        let err_at = |f: u32| {
+            results
+                .iter()
+                .find(|r| !r.point.qat && r.point.integer_bits == ints[0] && r.point.frac_bits == f)
+                .unwrap()
+                .mean_abs_err
+        };
+        println!(
+            "  mean |p_fixed - p_float|: frac2 {:.4} -> frac11 {:.4}",
+            err_at(2),
+            err_at(11)
+        );
+    }
+}

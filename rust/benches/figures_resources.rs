@@ -1,0 +1,50 @@
+//! Bench: regenerates Figures 12, 13, 14 (resource usage vs reuse factor
+//! x precision) and verifies the paper's §VI-B trends hold numerically.
+//! `cargo bench --bench figures_resources`.
+
+mod harness;
+
+use hls4ml_transformer::artifacts_dir;
+use hls4ml_transformer::experiments::{artifacts_ready, load_checkpoints, resource_figures};
+use hls4ml_transformer::hls::resources::VU13P;
+use hls4ml_transformer::models::weights::synthetic_weights;
+use hls4ml_transformer::models::zoo::zoo;
+
+fn main() {
+    harness::section("E4: Figures 12-14 — DSP/FF/LUT/BRAM vs reuse x precision");
+    let fracs: Vec<u32> = (2..=11).collect();
+    for m in zoo() {
+        let weights = if artifacts_ready(&artifacts_dir(), &m.config.name) {
+            load_checkpoints(&artifacts_dir(), &m.config).unwrap().0
+        } else {
+            synthetic_weights(&m.config, 1)
+        };
+        let pts = resource_figures::sweep(&m.config, &weights, 6, &[1, 2, 4], &fracs);
+        println!("\n{}", resource_figures::render(&m.config, &pts, &fracs));
+
+        // the §VI-B narrative, checked numerically
+        let at = |r: u32, f: u32| {
+            pts.iter().find(|p| p.reuse == r && p.frac_bits == f).unwrap().resources
+        };
+        let checks = [
+            ("FF linear-ish in precision", at(1, 11).ff > at(1, 2).ff),
+            ("LUT linear-ish in precision", at(1, 11).lut > at(1, 2).lut),
+            ("DSP flat below port width", at(1, 2).dsp == at(1, 11).dsp),
+            ("DSP shrinks with reuse", at(4, 8).dsp < at(1, 8).dsp),
+            ("FF shrinks with reuse", at(4, 8).ff < at(1, 8).ff),
+            ("BRAM grows with reuse", at(4, 8).bram18 >= at(1, 8).bram18),
+            ("fits VU13P at R1", at(1, 8).fits(&VU13P)),
+        ];
+        for (name, ok) in checks {
+            println!("  trend: {name:<32} {}", if ok { "OK" } else { "VIOLATED" });
+            assert!(ok, "{}: trend violated: {name}", m.config.name);
+        }
+    }
+
+    harness::section("resource sweep cost");
+    let m = &zoo()[2];
+    let w = synthetic_weights(&m.config, 2);
+    harness::bench("gw full 3x10 resource sweep", || {
+        harness::black_box(resource_figures::sweep(&m.config, &w, 6, &[1, 2, 4], &fracs));
+    });
+}

@@ -1,0 +1,117 @@
+//! Shared bench harness — the criterion stand-in for this offline
+//! environment (criterion is not in the vendored crate set).
+//!
+//! Auto-calibrates iteration counts to a target wall time, reports
+//! mean / p50 / p99 per iteration, and provides the table printers the
+//! per-paper-artifact benches share.  Used via `mod harness;` from each
+//! `harness = false` bench target.
+
+#![allow(dead_code)]
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Benchmark a closure: warm up, calibrate, then sample.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    bench_with_target(name, Duration::from_millis(400), &mut f)
+}
+
+/// Benchmark with an explicit sampling budget.
+pub fn bench_with_target<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    f: &mut F,
+) -> BenchStats {
+    // warmup + calibration: find an iteration count that takes ~1ms
+    let mut batch = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt >= Duration::from_millis(1) || batch >= 1 << 20 {
+            break;
+        }
+        batch *= 2;
+    }
+    // sample batches until the budget is spent
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let mut total_iters = 0u64;
+    let t_start = Instant::now();
+    while t_start.elapsed() < budget || samples_ns.len() < 5 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let per_iter = t0.elapsed().as_nanos() as f64 / batch as f64;
+        samples_ns.push(per_iter);
+        total_iters += batch;
+        if samples_ns.len() > 10_000 {
+            break;
+        }
+    }
+    samples_ns.sort_by(|a, b| a.total_cmp(b));
+    let q = |p: f64| samples_ns[((samples_ns.len() - 1) as f64 * p) as usize];
+    let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: mean,
+        p50_ns: q(0.5),
+        p99_ns: q(0.99),
+        min_ns: samples_ns[0],
+    };
+    println!("{}", format_stats(&stats));
+    stats
+}
+
+pub fn format_stats(s: &BenchStats) -> String {
+    format!(
+        "  {:<44} {:>12} /iter  p50 {:>12}  p99 {:>12}  ({} iters)",
+        s.name,
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p50_ns),
+        fmt_ns(s.p99_ns),
+        s.iters
+    )
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

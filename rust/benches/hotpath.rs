@@ -1,0 +1,102 @@
+//! Bench: micro-benchmarks of every hot path the perf pass optimizes
+//! (EXPERIMENTS.md §Perf).  `cargo bench --bench hotpath`.
+
+mod harness;
+
+use hls4ml_transformer::coordinator::spsc;
+use hls4ml_transformer::fixed::{FixedSpec, LutKind, LutTable};
+use hls4ml_transformer::hls::{dense, layernorm, mha, softmax, FixedTransformer, QuantConfig};
+use hls4ml_transformer::models::weights::synthetic_weights;
+use hls4ml_transformer::models::zoo::zoo;
+use hls4ml_transformer::nn::tensor::Mat;
+use hls4ml_transformer::nn::FloatTransformer;
+use hls4ml_transformer::testutil::Gen;
+
+fn main() {
+    let data = FixedSpec::new(16, 6);
+    let accum = data.accum();
+    let roms = hls4ml_transformer::fixed::lut::Roms::new();
+    let mut g = Gen::new(1);
+
+    harness::section("fixed-point primitives");
+    {
+        let xs: Vec<f32> = g.normal_vec(1024, 2.0);
+        let mut buf = xs.clone();
+        harness::bench("quantize_slice 1024", || {
+            buf.copy_from_slice(&xs);
+            data.quantize_slice(&mut buf);
+            harness::black_box(&buf);
+        });
+        let lut = LutTable::new(LutKind::Exp);
+        harness::bench("exp LUT lookup x1024", || {
+            let mut acc = 0.0f32;
+            for &x in &xs {
+                acc += lut.lookup(x);
+            }
+            harness::black_box(acc);
+        });
+    }
+
+    harness::section("hls layer kernels (gw-sized: S=100, d=32)");
+    {
+        let x = Mat::from_vec(100, 32, g.normal_vec(3200, 1.0));
+        let w = Mat::from_vec(32, 32, g.normal_vec(1024, 0.3)).map(|v| data.quantize(v));
+        let b: Vec<f32> = g.normal_vec(32, 0.1);
+        harness::bench("dense_fixed 100x32 @ 32x32", || {
+            harness::black_box(dense::dense_fixed(
+                &x, &w, &b,
+                hls4ml_transformer::nn::layers::Activation::Relu,
+                data, accum,
+            ));
+        });
+        let mut row = g.normal_vec(100, 1.0);
+        harness::bench("softmax_fixed_row k=100", || {
+            let mut r = row.clone();
+            softmax::softmax_fixed_row(&mut r, &roms, data, accum);
+            harness::black_box(&r);
+        });
+        harness::bench("softmax_fixed_legacy k=100 (O(k^2) ablation)", || {
+            let mut r = row.clone();
+            softmax::softmax_fixed_legacy(&mut r, &roms, data, accum);
+            harness::black_box(&r);
+        });
+        let gamma = vec![1.0f32; 100];
+        let beta = vec![0.0f32; 100];
+        harness::bench("layernorm_fixed_row k=100", || {
+            layernorm::layernorm_fixed_row(&mut row, &gamma, &beta, &roms, data, accum);
+            harness::black_box(&row);
+        });
+        let zoo_gw = &zoo()[2];
+        let wts = synthetic_weights(&zoo_gw.config, 5);
+        harness::bench("mha_fixed gw block (S=100,h=2,k=2)", || {
+            harness::black_box(mha::mha_fixed(&x, &wts.blocks[0].mha, &roms, data, accum));
+        });
+    }
+
+    harness::section("full-model inference (single event)");
+    for m in zoo() {
+        let w = synthetic_weights(&m.config, 9);
+        let x = Mat::from_vec(
+            m.config.seq_len,
+            m.config.input_size,
+            g.normal_vec(m.config.seq_len * m.config.input_size, 1.0),
+        );
+        let fx = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 10));
+        harness::bench(&format!("hls-sim forward {}", m.config.name), || {
+            harness::black_box(fx.forward(&x));
+        });
+        let fl = FloatTransformer::new(m.config.clone(), w);
+        harness::bench(&format!("float forward {}", m.config.name), || {
+            harness::black_box(fl.forward(&x));
+        });
+    }
+
+    harness::section("coordinator primitives");
+    {
+        let (p, c) = spsc::ring::<u64>(1024);
+        harness::bench("spsc push+pop", || {
+            p.try_push(42).unwrap();
+            harness::black_box(c.try_pop());
+        });
+    }
+}

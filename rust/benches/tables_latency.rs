@@ -1,0 +1,42 @@
+//! Bench: regenerates Tables II, III, IV (paper vs measured) and times
+//! the synthesis pass itself.  `cargo bench --bench tables_latency`.
+
+mod harness;
+
+use hls4ml_transformer::artifacts_dir;
+use hls4ml_transformer::experiments::{artifacts_ready, latency_tables, load_checkpoints};
+use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::models::weights::synthetic_weights;
+use hls4ml_transformer::models::zoo::zoo;
+
+fn main() {
+    harness::section("E3: Tables II-IV — latency/interval/clock vs reuse factor");
+    for m in zoo() {
+        let weights = if artifacts_ready(&artifacts_dir(), &m.config.name) {
+            load_checkpoints(&artifacts_dir(), &m.config).unwrap().0
+        } else {
+            eprintln!("(synthetic weights for {})", m.config.name);
+            synthetic_weights(&m.config, 1)
+        };
+        println!("\n{}", latency_tables::render(&m.config, &weights));
+
+        // paper-vs-measured deltas, summarized
+        let rows = latency_tables::measure(&m.config, &weights);
+        let worst = rows
+            .iter()
+            .map(|(p, r)| {
+                (r.latency_cycles as f64 / p.latency_cycles as f64 - 1.0).abs()
+            })
+            .fold(0.0f64, f64::max);
+        println!("worst |latency delta| vs paper: {:.1}%", worst * 100.0);
+    }
+
+    harness::section("synthesis pass cost (per design point)");
+    for m in zoo() {
+        let w = synthetic_weights(&m.config, 2);
+        let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 8));
+        harness::bench(&format!("synthesize {}", m.config.name), || {
+            harness::black_box(t.synthesize(ReuseFactor(2)));
+        });
+    }
+}

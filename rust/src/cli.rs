@@ -1,0 +1,134 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline crate
+//! set).  Flags are `--name value` or `--name=value`; the first bare
+//! token is the subcommand.
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand + flag map.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => {
+                        let key = stripped.to_string();
+                        match it.peek() {
+                            Some(nxt) if !nxt.starts_with("--") => {
+                                (key, it.next().unwrap())
+                            }
+                            // bare flag -> boolean
+                            _ => (key, "true".to_string()),
+                        }
+                    }
+                };
+                if out.flags.insert(key.clone(), val).is_some() {
+                    return Err(format!("duplicate flag --{key}"));
+                }
+            } else if out.command.is_empty() {
+                out.command = a;
+            } else {
+                return Err(format!("unexpected positional argument '{a}'"));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag --{key}: cannot parse '{v}'")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Error on unknown flags (catches typos).
+    pub fn expect_only(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k} (expected one of: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table-latency --model engine --reuse 4");
+        assert_eq!(a.command, "table-latency");
+        assert_eq!(a.get("model"), Some("engine"));
+        assert_eq!(a.get_parse("reuse", 1u32).unwrap(), 4);
+    }
+
+    #[test]
+    fn equals_form_and_bool_flags() {
+        let a = parse("serve --backend=pjrt --verbose");
+        assert_eq!(a.get("backend"), Some("pjrt"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn defaults_and_parse_errors() {
+        let a = parse("x");
+        assert_eq!(a.get_or("model", "engine"), "engine");
+        let b = parse("x --n notanumber");
+        assert!(b.get_parse("n", 0u64).is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        assert!(Args::parse(["--a", "1", "--a", "2"].map(String::from)).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("run --modle engine");
+        assert!(a.expect_only(&["model"]).is_err());
+        let b = parse("run --model engine");
+        assert!(b.expect_only(&["model"]).is_ok());
+    }
+
+    #[test]
+    fn unexpected_positional_rejected() {
+        assert!(Args::parse(["cmd", "stray"].map(String::from)).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Inference backends the coordinator can route batches to.
+//!
+//! * [`BackendKind::Float`] — exact-float Rust reference (no artifacts).
+//! * [`BackendKind::Hls`] — the bit-accurate fixed-point HLS simulator
+//!   (what the FPGA would compute); latency is dominated by simulation,
+//!   the *modeled* FPGA latency comes from `synthesize()`.
+//! * [`BackendKind::Pjrt`] — the AOT artifact through the PJRT CPU
+//!   client (the production serving path of this reproduction).
+
+use anyhow::{Context, Result};
+
+use crate::hls::{FixedTransformer, QuantConfig};
+use crate::models::config::{FinalActivation, ModelConfig};
+use crate::models::weights::Weights;
+use crate::nn::tensor::Mat;
+use crate::nn::FloatTransformer;
+use crate::runtime::{Executable, Runtime};
+
+/// Which engine serves a model's batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Float,
+    Hls,
+    Pjrt,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "float" | "nn" => Ok(BackendKind::Float),
+            "hls" | "fixed" => Ok(BackendKind::Hls),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => anyhow::bail!("unknown backend '{other}' (float|hls|pjrt)"),
+        }
+    }
+}
+
+/// A ready-to-serve inference engine for one model.
+pub enum Backend {
+    Float(FloatTransformer),
+    Hls(FixedTransformer),
+    /// batch-1 and batch-N executables (router picks by batch fill).
+    Pjrt { cfg: ModelConfig, b1: Executable, bn: Executable },
+}
+
+impl Backend {
+    /// Build a backend for `cfg`.
+    ///
+    /// `runtime` is required for [`BackendKind::Pjrt`] and ignored
+    /// otherwise; `quant` configures the HLS design point.
+    pub fn build(
+        kind: BackendKind,
+        cfg: &ModelConfig,
+        weights: &Weights,
+        quant: QuantConfig,
+        runtime: Option<&Runtime>,
+        artifacts: &std::path::Path,
+    ) -> Result<Self> {
+        Ok(match kind {
+            BackendKind::Float => {
+                Backend::Float(FloatTransformer::new(cfg.clone(), weights.clone()))
+            }
+            BackendKind::Hls => {
+                Backend::Hls(FixedTransformer::new(cfg.clone(), weights, quant))
+            }
+            BackendKind::Pjrt => {
+                let rt = runtime.context("PJRT backend needs a Runtime")?;
+                let load = |batch: usize| {
+                    rt.load_hlo(
+                        artifacts.join(format!("{}.b{batch}.hlo.txt", cfg.name)),
+                        (batch, cfg.seq_len, cfg.input_size),
+                        cfg.output_size,
+                    )
+                };
+                Backend::Pjrt { cfg: cfg.clone(), b1: load(1)?, bn: load(8)? }
+            }
+        })
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            Backend::Float(_) => BackendKind::Float,
+            Backend::Hls(_) => BackendKind::Hls,
+            Backend::Pjrt { .. } => BackendKind::Pjrt,
+        }
+    }
+
+    /// Score a batch of events: returns per-event probabilities.
+    pub fn infer(&self, batch: &[&Mat]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Backend::Float(t) => Ok(batch
+                .iter()
+                .map(|x| t.probs(&t.forward(x)))
+                .collect()),
+            Backend::Hls(t) => Ok(batch.iter().map(|x| t.forward(x)).collect()),
+            Backend::Pjrt { cfg, b1, bn } => {
+                let logits = if batch.len() == 1 {
+                    b1.run_events(batch)?
+                } else if batch.len() <= bn.batch_size() {
+                    bn.run_events(batch)?
+                } else {
+                    // split oversized batches
+                    let mut out = Vec::with_capacity(batch.len());
+                    for chunk in batch.chunks(bn.batch_size()) {
+                        out.extend(bn.run_events(chunk)?);
+                    }
+                    out
+                };
+                Ok(logits
+                    .into_iter()
+                    .map(|l| logits_to_probs(cfg, &l))
+                    .collect())
+            }
+        }
+    }
+
+    /// Positive-class score for AUC accounting.
+    pub fn score(&self, probs: &[f32]) -> f32 {
+        if probs.len() == 1 {
+            probs[0]
+        } else {
+            probs[1.min(probs.len() - 1)]
+        }
+    }
+}
+
+fn logits_to_probs(cfg: &ModelConfig, logits: &[f32]) -> Vec<f32> {
+    match cfg.final_activation() {
+        FinalActivation::Sigmoid => {
+            logits.iter().map(|&z| 1.0 / (1.0 + (-z).exp())).collect()
+        }
+        FinalActivation::Softmax => {
+            let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let e: Vec<f32> = logits.iter().map(|&z| (z - max).exp()).collect();
+            let s: f32 = e.iter().sum();
+            e.into_iter().map(|v| v / s).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::weights::synthetic_weights;
+    use crate::models::zoo::zoo_model;
+    use crate::testutil::Gen;
+
+    fn events(cfg: &ModelConfig, n: usize) -> Vec<Mat> {
+        let mut g = Gen::new(9);
+        (0..n)
+            .map(|_| {
+                Mat::from_vec(
+                    cfg.seq_len,
+                    cfg.input_size,
+                    g.normal_vec(cfg.seq_len * cfg.input_size, 1.0),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn float_and_hls_backends_agree_roughly() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 13);
+        let f = Backend::build(BackendKind::Float, &cfg, &w, QuantConfig::new(8, 12),
+                               None, std::path::Path::new(".")).unwrap();
+        let h = Backend::build(BackendKind::Hls, &cfg, &w, QuantConfig::new(8, 12),
+                               None, std::path::Path::new(".")).unwrap();
+        let evs = events(&cfg, 4);
+        let refs: Vec<&Mat> = evs.iter().collect();
+        let pf = f.infer(&refs).unwrap();
+        let ph = h.infer(&refs).unwrap();
+        for (a, b) in pf.iter().zip(&ph) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 0.25, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_without_runtime_errors() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 13);
+        let r = Backend::build(BackendKind::Pjrt, &cfg, &w, QuantConfig::new(8, 12),
+                               None, std::path::Path::new("."));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        use std::str::FromStr;
+        assert_eq!(BackendKind::from_str("hls").unwrap(), BackendKind::Hls);
+        assert_eq!(BackendKind::from_str("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::from_str("gpu").is_err());
+    }
+}

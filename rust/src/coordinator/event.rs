@@ -1,0 +1,55 @@
+//! Trigger events and scored results.
+
+use crate::nn::tensor::Mat;
+use std::time::Instant;
+
+/// One detector event entering the trigger.
+#[derive(Clone, Debug)]
+pub struct TriggerEvent {
+    /// Monotonic per-source sequence number.
+    pub id: u64,
+    /// Zoo model this event is routed to ("engine" / "btag" / "gw").
+    pub model: &'static str,
+    /// `(seq_len, input_size)` features.
+    pub x: Mat,
+    /// Ground truth when generated synthetically (for online AUC).
+    pub label: Option<u8>,
+    /// Arrival timestamp (latency accounting starts here).
+    pub t_arrival: Instant,
+}
+
+impl TriggerEvent {
+    pub fn new(id: u64, model: &'static str, x: Mat, label: Option<u8>) -> Self {
+        Self { id, model, x, label, t_arrival: Instant::now() }
+    }
+}
+
+/// A scored event leaving the trigger.
+#[derive(Clone, Debug)]
+pub struct ScoredEvent {
+    pub id: u64,
+    pub model: &'static str,
+    /// Output probabilities.
+    pub probs: Vec<f32>,
+    /// Positive-class score (AUC convention).
+    pub score: f32,
+    pub label: Option<u8>,
+    /// End-to-end latency in nanoseconds (arrival -> scored).
+    pub latency_ns: u64,
+    /// Batch this event was served in (diagnostics).
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_carries_payload() {
+        let e = TriggerEvent::new(7, "engine", Mat::zeros(50, 1), Some(1));
+        assert_eq!(e.id, 7);
+        assert_eq!(e.model, "engine");
+        assert_eq!(e.label, Some(1));
+        assert!(e.t_arrival.elapsed().as_secs() < 1);
+    }
+}

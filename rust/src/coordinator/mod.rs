@@ -1,0 +1,31 @@
+//! L3 trigger coordinator (S10) — the streaming server of the physics
+//! use-cases the paper motivates (§I: "a refined online selection
+//! system ... to efficiently process and triage data").
+//!
+//! Architecture (std threads; tokio is not in the offline crate set, and
+//! a µs-latency trigger path is better served by dedicated threads than
+//! an async scheduler anyway):
+//!
+//! ```text
+//!  sources (N threads)           per-model pipeline
+//!  ┌──────────────┐  SPSC ring   ┌─────────┐  batch  ┌───────────┐
+//!  │ detector sim ├─────────────►│ batcher ├────────►│ inference │─► scores
+//!  └──────────────┘  (bounded,   └─────────┘ (size/  └───────────┘   + stats
+//!        ...          backpressure)           deadline)  backend:
+//!                                                        hls-sim | nn | PJRT
+//! ```
+
+pub mod backend;
+pub mod batcher;
+pub mod event;
+pub mod router;
+pub mod server;
+pub mod spsc;
+pub mod stats;
+
+pub use backend::{Backend, BackendKind};
+pub use batcher::{BatchPolicy, Batcher};
+pub use event::TriggerEvent;
+pub use router::{Router, Submit};
+pub use server::{PipelineConfig, ServerConfig, ServerReport, TriggerServer, WeightsSource};
+pub use spsc::SpscRing;

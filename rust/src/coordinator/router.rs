@@ -1,0 +1,156 @@
+//! Model router: validates and dispatches events to per-model pipelines.
+//!
+//! The router owns one SPSC producer per model; sources call
+//! [`Router::submit`] and the event lands in the right pipeline's ring.
+//! Backpressure is explicit: a full ring rejects the event and the drop
+//! is counted (a trigger must degrade by shedding, never by stalling the
+//! detector readout).
+
+use super::event::TriggerEvent;
+use super::spsc::Producer;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Outcome of a submit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Submit {
+    Accepted,
+    /// Ring full — event shed.
+    Shed,
+    /// No pipeline for this model name.
+    UnknownModel,
+    /// Event shape does not match the model.
+    BadShape,
+}
+
+struct Route {
+    tx: Producer<TriggerEvent>,
+    seq_len: usize,
+    input_size: usize,
+    accepted: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// Thread-safe router handle (sources share it via `Arc`).
+pub struct Router {
+    routes: HashMap<&'static str, Route>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self { routes: HashMap::new() }
+    }
+
+    /// Register a pipeline: the producing half of its ring plus the
+    /// expected event geometry.
+    pub fn add_route(
+        &mut self,
+        model: &'static str,
+        tx: Producer<TriggerEvent>,
+        seq_len: usize,
+        input_size: usize,
+    ) {
+        self.routes.insert(
+            model,
+            Route {
+                tx,
+                seq_len,
+                input_size,
+                accepted: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+            },
+        );
+    }
+
+    /// Validate + dispatch one event.
+    pub fn submit(&self, event: TriggerEvent) -> Submit {
+        let Some(route) = self.routes.get(event.model) else {
+            return Submit::UnknownModel;
+        };
+        if event.x.rows() != route.seq_len || event.x.cols() != route.input_size {
+            return Submit::BadShape;
+        }
+        match route.tx.try_push(event) {
+            Ok(()) => {
+                route.accepted.fetch_add(1, Ordering::Relaxed);
+                Submit::Accepted
+            }
+            Err(_) => {
+                route.shed.fetch_add(1, Ordering::Relaxed);
+                Submit::Shed
+            }
+        }
+    }
+
+    /// Close every pipeline (drain + shut down).
+    pub fn close_all(&self) {
+        for r in self.routes.values() {
+            r.tx.close();
+        }
+    }
+
+    /// (accepted, shed) counters for a model.
+    pub fn counters(&self, model: &str) -> Option<(u64, u64)> {
+        self.routes.get(model).map(|r| {
+            (r.accepted.load(Ordering::Relaxed), r.shed.load(Ordering::Relaxed))
+        })
+    }
+
+    pub fn models(&self) -> Vec<&'static str> {
+        self.routes.keys().copied().collect()
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Shared router handle.
+pub type SharedRouter = Arc<Router>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spsc::ring;
+    use crate::nn::tensor::Mat;
+
+    fn router_with_engine(cap: usize) -> (Router, super::super::spsc::Consumer<TriggerEvent>) {
+        let (tx, rx) = ring(cap);
+        let mut r = Router::new();
+        r.add_route("engine", tx, 50, 1);
+        (r, rx)
+    }
+
+    fn ev(model: &'static str, rows: usize, cols: usize) -> TriggerEvent {
+        TriggerEvent::new(0, model, Mat::zeros(rows, cols), None)
+    }
+
+    #[test]
+    fn accepts_valid_events() {
+        let (r, rx) = router_with_engine(8);
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        assert_eq!(rx.try_pop().unwrap().model, "engine");
+        assert_eq!(r.counters("engine").unwrap(), (1, 0));
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_shape() {
+        let (r, _rx) = router_with_engine(8);
+        assert_eq!(r.submit(ev("nope", 50, 1)), Submit::UnknownModel);
+        assert_eq!(r.submit(ev("engine", 49, 1)), Submit::BadShape);
+        assert_eq!(r.counters("engine").unwrap(), (0, 0));
+    }
+
+    #[test]
+    fn sheds_on_full_ring() {
+        let (r, _rx) = router_with_engine(2);
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Shed);
+        let (acc, shed) = r.counters("engine").unwrap();
+        assert_eq!((acc, shed), (2, 1));
+    }
+}

@@ -1,0 +1,336 @@
+//! The trigger server: sources -> router -> per-model batcher+backend
+//! workers -> aggregated report.  This is the end-to-end serving driver
+//! of the reproduction (EXPERIMENTS.md E6).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, BackendKind};
+use super::batcher::{BatchPolicy, Batcher};
+use super::event::TriggerEvent;
+use super::router::{Router, Submit};
+use super::spsc;
+use super::stats::PipelineStats;
+use crate::data::generator_for;
+use crate::hls::QuantConfig;
+use crate::models::weights::{synthetic_weights, Weights};
+use crate::models::zoo::zoo_model;
+use crate::models::NnwFile;
+use crate::nn::tensor::Mat;
+use crate::runtime::Runtime;
+
+/// Where a pipeline's weights come from.
+#[derive(Clone, Copy, Debug)]
+pub enum WeightsSource {
+    /// `artifacts/<model>.weights.nnw` (the trained PTQ checkpoint).
+    Artifacts,
+    /// Deterministic random weights (artifact-free tests).
+    Synthetic(u64),
+}
+
+/// Per-model serving configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub model: &'static str,
+    pub backend: BackendKind,
+    pub quant: QuantConfig,
+    pub batch: BatchPolicy,
+    pub ring_capacity: usize,
+    pub weights: WeightsSource,
+}
+
+impl PipelineConfig {
+    pub fn new(model: &'static str, backend: BackendKind) -> Self {
+        Self {
+            model,
+            backend,
+            quant: QuantConfig::new(6, 10),
+            batch: BatchPolicy::default(),
+            ring_capacity: 1024,
+            weights: WeightsSource::Artifacts,
+        }
+    }
+}
+
+/// Whole-server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub pipelines: Vec<PipelineConfig>,
+    /// Events each source generates before closing.
+    pub events_per_source: u64,
+    /// Source pacing in events/second (0 = as fast as possible).
+    pub rate_per_source: u64,
+    pub artifacts_dir: PathBuf,
+}
+
+/// Aggregated result of one server run.
+#[derive(Debug)]
+pub struct ServerReport {
+    pub per_model: HashMap<&'static str, PipelineStats>,
+    pub wall: Duration,
+}
+
+impl ServerReport {
+    pub fn total_scored(&self) -> u64 {
+        self.per_model.values().map(|s| s.accepted).sum()
+    }
+
+    pub fn throughput_eps(&self) -> f64 {
+        self.total_scored() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+impl std::fmt::Display for ServerReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "served {} events in {:.3}s ({:.0} ev/s)",
+            self.total_scored(),
+            self.wall.as_secs_f64(),
+            self.throughput_eps()
+        )?;
+        let mut models: Vec<_> = self.per_model.iter().collect();
+        models.sort_by_key(|(m, _)| **m);
+        for (m, s) in models {
+            writeln!(
+                f,
+                "  {m:8} accepted={} dropped={} batches={} fill={:.2} {}{}",
+                s.accepted,
+                s.dropped,
+                s.batches,
+                s.mean_batch_fill(),
+                s.latency.summary(),
+                s.online_auc()
+                    .map(|a| format!(" auc={a:.4}"))
+                    .unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Build + run a trigger server to completion.
+pub struct TriggerServer;
+
+impl TriggerServer {
+    /// Run the configured pipelines until every source has emitted its
+    /// quota and every event is scored; return the aggregated report.
+    pub fn run(cfg: &ServerConfig) -> Result<ServerReport> {
+        let t0 = Instant::now();
+        let mut router = Router::new();
+        let mut workers = Vec::new();
+        // readiness barrier: sources must not fire until every backend
+        // is built (PJRT compilation takes seconds; without the barrier
+        // the rings fill with stale events and latency numbers measure
+        // compile time, not serving)
+        let ready = Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
+
+        // per-model pipelines
+        for pc in &cfg.pipelines {
+            let zoo = zoo_model(pc.model)
+                .with_context(|| format!("unknown zoo model '{}'", pc.model))?;
+            let mcfg = zoo.config.clone();
+            let weights = load_weights(&cfg.artifacts_dir, pc, &mcfg)?;
+            let (tx, rx) = spsc::ring::<TriggerEvent>(pc.ring_capacity);
+            router.add_route(pc.model, tx, mcfg.seq_len, mcfg.input_size);
+            let pc = pc.clone();
+            let artifacts = cfg.artifacts_dir.clone();
+            let ready_w = ready.clone();
+            workers.push(std::thread::spawn(move || -> Result<(
+                &'static str,
+                PipelineStats,
+            )> {
+                // PJRT runtime is created inside the worker so each
+                // pipeline owns its client (no cross-thread sharing).
+                let runtime = if pc.backend == BackendKind::Pjrt {
+                    Some(Runtime::cpu()?)
+                } else {
+                    None
+                };
+                let backend = Backend::build(
+                    pc.backend,
+                    &mcfg,
+                    &weights,
+                    pc.quant,
+                    runtime.as_ref(),
+                    &artifacts,
+                );
+                // signal readiness whether the build succeeded or not,
+                // so a failed pipeline can't deadlock the sources
+                {
+                    let (lock, cv) = &*ready_w;
+                    *lock.lock().unwrap() += 1;
+                    cv.notify_all();
+                }
+                let backend = backend?;
+                let mut batcher = Batcher::new(pc.batch, rx);
+                let mut stats = PipelineStats::default();
+                while let Some(batch) = batcher.next_batch() {
+                    let mats: Vec<&Mat> = batch.iter().map(|e| &e.x).collect();
+                    let probs = backend.infer(&mats)?;
+                    let now = Instant::now();
+                    stats.batches += 1;
+                    stats.batch_fill_sum += batch.len() as u64;
+                    for (e, p) in batch.iter().zip(&probs) {
+                        stats.accepted += 1;
+                        let lat = now.duration_since(e.t_arrival);
+                        stats.latency.record_duration(lat);
+                        if let Some(label) = e.label {
+                            stats.scored_pos.push(backend.score(p));
+                            stats.scored_labels.push((label == 1) as u8);
+                        }
+                    }
+                }
+                Ok((pc.model, stats))
+            }));
+        }
+
+        let router = Arc::new(router);
+
+        // wait for all backends (see `ready` above)
+        {
+            let (lock, cv) = &*ready;
+            let mut count = lock.lock().unwrap();
+            while *count < cfg.pipelines.len() {
+                count = cv.wait(count).unwrap();
+            }
+        }
+
+        // sources
+        let mut sources = Vec::new();
+        for pc in &cfg.pipelines {
+            let router = router.clone();
+            let model = pc.model;
+            let n = cfg.events_per_source;
+            let rate = cfg.rate_per_source;
+            sources.push(std::thread::spawn(move || -> (u64, u64) {
+                let mut gen = generator_for(model, 0xFEED ^ n).expect("zoo generator");
+                let mut shed = 0u64;
+                let t_start = Instant::now();
+                for i in 0..n {
+                    if rate > 0 {
+                        // pace the source: event i is due at i/rate seconds;
+                        // sleep for the bulk of the wait, yield for the rest
+                        // (pure spinning starves the pipeline on small hosts)
+                        let due = Duration::from_nanos(i * 1_000_000_000 / rate);
+                        loop {
+                            let elapsed = t_start.elapsed();
+                            if elapsed >= due {
+                                break;
+                            }
+                            let remaining = due - elapsed;
+                            if remaining > Duration::from_micros(300) {
+                                std::thread::sleep(remaining - Duration::from_micros(200));
+                            } else {
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                    let e = gen.next_event();
+                    let ev = TriggerEvent::new(i, model, e.x, Some(e.label));
+                    match router.submit(ev) {
+                        Submit::Accepted => {}
+                        Submit::Shed => shed += 1,
+                        s => panic!("source rejected: {s:?}"),
+                    }
+                }
+                (n, shed)
+            }));
+        }
+
+        let mut source_shed: HashMap<&'static str, u64> = HashMap::new();
+        for (s, pc) in sources.into_iter().zip(&cfg.pipelines) {
+            let (_n, shed) = s.join().expect("source thread");
+            *source_shed.entry(pc.model).or_default() += shed;
+        }
+        router.close_all();
+
+        let mut per_model = HashMap::new();
+        for w in workers {
+            let (model, mut stats) = w.join().expect("worker thread")?;
+            stats.dropped = source_shed.get(model).copied().unwrap_or(0);
+            per_model.insert(model, stats);
+        }
+
+        Ok(ServerReport { per_model, wall: t0.elapsed() })
+    }
+}
+
+fn load_weights(
+    dir: &std::path::Path,
+    pc: &PipelineConfig,
+    mcfg: &crate::models::ModelConfig,
+) -> Result<Weights> {
+    match pc.weights {
+        WeightsSource::Synthetic(seed) => Ok(synthetic_weights(mcfg, seed)),
+        WeightsSource::Artifacts => {
+            let path = dir.join(format!("{}.weights.nnw", pc.model));
+            let file = NnwFile::load(&path)?;
+            Weights::from_nnw(mcfg, &file)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(backend: BackendKind, n: u64) -> ServerConfig {
+        ServerConfig {
+            pipelines: vec![PipelineConfig {
+                weights: WeightsSource::Synthetic(1),
+                ..PipelineConfig::new("engine", backend)
+            }],
+            events_per_source: n,
+            rate_per_source: 0,
+            artifacts_dir: PathBuf::from("."),
+        }
+    }
+
+    #[test]
+    fn float_pipeline_serves_every_event() {
+        let report = TriggerServer::run(&base_cfg(BackendKind::Float, 300)).unwrap();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted + s.dropped, 300);
+        assert!(s.accepted > 0);
+        assert!(s.latency.count() == s.accepted);
+        assert!(s.online_auc().is_some());
+    }
+
+    #[test]
+    fn hls_pipeline_runs() {
+        let report = TriggerServer::run(&base_cfg(BackendKind::Hls, 40)).unwrap();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted + s.dropped, 40);
+        assert!(s.mean_batch_fill() >= 1.0);
+    }
+
+    #[test]
+    fn multi_model_server() {
+        let mut cfg = base_cfg(BackendKind::Float, 120);
+        cfg.pipelines.push(PipelineConfig {
+            weights: WeightsSource::Synthetic(2),
+            ..PipelineConfig::new("gw", BackendKind::Float)
+        });
+        let report = TriggerServer::run(&cfg).unwrap();
+        assert_eq!(report.per_model.len(), 2);
+        assert!(report.throughput_eps() > 0.0);
+        let text = format!("{report}");
+        assert!(text.contains("engine") && text.contains("gw"));
+    }
+
+    #[test]
+    fn backpressure_sheds_instead_of_stalling() {
+        // tiny ring + slow hls backend + fast source => shedding
+        let mut cfg = base_cfg(BackendKind::Hls, 500);
+        cfg.pipelines[0].ring_capacity = 4;
+        let report = TriggerServer::run(&cfg).unwrap();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted + s.dropped, 500);
+        assert!(s.dropped > 0, "expected shedding under overload");
+    }
+}

@@ -1,0 +1,233 @@
+//! Bounded single-producer / single-consumer ring — the event hot path.
+//!
+//! Lock-free (two cache-padded atomic cursors over a power-of-two slot
+//! array), because the trigger source -> batcher handoff is the most
+//! frequent operation in the whole coordinator.  Safety argument: the
+//! producer only writes `tail` and reads `head`; the consumer only
+//! writes `head` and reads `tail`; slot `i` is written exactly once
+//! between the producer observing `i - cap < head` and the consumer
+//! observing `i < tail`, with Acquire/Release ordering establishing the
+//! happens-before edge on the slot contents.
+
+use crossbeam_utils::CachePadded;
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+struct Inner<T> {
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: u64,
+    head: CachePadded<AtomicU64>, // next slot to pop
+    tail: CachePadded<AtomicU64>, // next slot to push
+    closed: AtomicBool,
+}
+
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+/// Create a ring of capacity `cap` (rounded up to a power of two).
+pub fn ring<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
+    let cap = cap.next_power_of_two().max(2);
+    let slots: Box<[UnsafeCell<MaybeUninit<T>>]> =
+        (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+    let inner = Arc::new(Inner {
+        slots,
+        mask: cap as u64 - 1,
+        head: CachePadded::new(AtomicU64::new(0)),
+        tail: CachePadded::new(AtomicU64::new(0)),
+        closed: AtomicBool::new(false),
+    });
+    (Producer { inner: inner.clone() }, Consumer { inner })
+}
+
+/// Convenience alias used in module docs/tests.
+pub type SpscRing = ();
+
+/// Producing half (single thread only).
+pub struct Producer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Consuming half (single thread only).
+pub struct Consumer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T: Send> Producer<T> {
+    /// Try to push; returns the item back if the ring is full (the
+    /// caller decides the backpressure policy: drop / retry / block).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let tail = self.inner.tail.load(Ordering::Relaxed);
+        let head = self.inner.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) > self.inner.mask {
+            return Err(item); // full
+        }
+        let idx = (tail & self.inner.mask) as usize;
+        unsafe {
+            (*self.inner.slots[idx].get()).write(item);
+        }
+        self.inner.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Mark the stream finished (consumer's `pop` will drain then None).
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+    }
+
+    pub fn is_full(&self) -> bool {
+        let tail = self.inner.tail.load(Ordering::Relaxed);
+        let head = self.inner.head.load(Ordering::Acquire);
+        tail.wrapping_sub(head) > self.inner.mask
+    }
+}
+
+impl<T: Send> Consumer<T> {
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let head = self.inner.head.load(Ordering::Relaxed);
+        let tail = self.inner.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None; // empty
+        }
+        let idx = (head & self.inner.mask) as usize;
+        let item = unsafe { (*self.inner.slots[idx].get()).assume_init_read() };
+        self.inner.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(item)
+    }
+
+    /// Spin-then-yield pop; returns None only after close + drain.
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut spins = 0u32;
+        loop {
+            if let Some(v) = self.try_pop() {
+                return Some(v);
+            }
+            if self.inner.closed.load(Ordering::Acquire) {
+                // racy final drain: check once more after the close flag
+                return self.try_pop();
+            }
+            spins += 1;
+            if spins < 16 {
+                std::hint::spin_loop();
+            } else if spins < 4096 {
+                std::thread::yield_now();
+            } else {
+                // long-idle consumer: sleep briefly so single-core hosts
+                // give the producers a full quantum
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        let head = self.inner.head.load(Ordering::Relaxed);
+        let tail = self.inner.tail.load(Ordering::Acquire);
+        tail.wrapping_sub(head) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        // drain remaining initialized slots so T's destructors run
+        let mut head = self.inner.head.load(Ordering::Relaxed);
+        let tail = self.inner.tail.load(Ordering::Acquire);
+        while head != tail {
+            let idx = (head & self.inner.mask) as usize;
+            unsafe {
+                (*self.inner.slots[idx].get()).assume_init_drop();
+            }
+            head = head.wrapping_add(1);
+        }
+        self.inner.head.store(head, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_order() {
+        let (p, c) = ring::<u32>(4);
+        for i in 0..4 {
+            p.try_push(i).unwrap();
+        }
+        assert!(p.try_push(99).is_err(), "full ring rejects");
+        for i in 0..4 {
+            assert_eq!(c.try_pop(), Some(i));
+        }
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        let (p, c) = ring::<u8>(3);
+        for i in 0..4 {
+            p.try_push(i).unwrap(); // cap 4
+        }
+        assert!(p.try_push(9).is_err());
+        drop(c);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let (p, c) = ring::<u32>(8);
+        p.try_push(1).unwrap();
+        p.close();
+        assert_eq!(c.pop_blocking(), Some(1));
+        assert_eq!(c.pop_blocking(), None);
+    }
+
+    #[test]
+    fn cross_thread_stress_preserves_sequence() {
+        let (p, c) = ring::<u64>(64);
+        let n = 100_000u64;
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                let mut item = i;
+                loop {
+                    match p.try_push(item) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            item = back;
+                            std::hint::spin_loop();
+                        }
+                    }
+                }
+            }
+            p.close();
+        });
+        let mut expected = 0u64;
+        while let Some(v) = c.pop_blocking() {
+            assert_eq!(v, expected);
+            expected += 1;
+        }
+        producer.join().unwrap();
+        assert_eq!(expected, n);
+    }
+
+    #[test]
+    fn drop_runs_destructors() {
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        #[derive(Debug)]
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (p, c) = ring::<D>(8);
+        p.try_push(D).unwrap();
+        p.try_push(D).unwrap();
+        drop(p);
+        drop(c);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 2);
+    }
+}

@@ -1,0 +1,79 @@
+//! Per-pipeline counters and the aggregated serving report.
+
+use crate::metrics::LatencyHistogram;
+
+/// Counters for one model pipeline.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    pub accepted: u64,
+    /// Events rejected at the source ring (backpressure drops).
+    pub dropped: u64,
+    pub batches: u64,
+    pub batch_fill_sum: u64,
+    pub latency: LatencyHistogram,
+    /// Online classification accounting (when labels are known).
+    pub scored_pos: Vec<f32>,
+    pub scored_labels: Vec<u8>,
+}
+
+impl PipelineStats {
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_fill_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// Online AUC over the scored stream (when generated with labels).
+    pub fn online_auc(&self) -> Option<f64> {
+        if self.scored_labels.is_empty() {
+            return None;
+        }
+        Some(crate::metrics::binary_auc(&self.scored_pos, &self.scored_labels))
+    }
+
+    pub fn merge(&mut self, other: &PipelineStats) {
+        self.accepted += other.accepted;
+        self.dropped += other.dropped;
+        self.batches += other.batches;
+        self.batch_fill_sum += other.batch_fill_sum;
+        self.latency.merge(&other.latency);
+        self.scored_pos.extend_from_slice(&other.scored_pos);
+        self.scored_labels.extend_from_slice(&other.scored_labels);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_fill_mean() {
+        let mut s = PipelineStats::default();
+        s.batches = 2;
+        s.batch_fill_sum = 12;
+        assert_eq!(s.mean_batch_fill(), 6.0);
+        assert_eq!(PipelineStats::default().mean_batch_fill(), 0.0);
+    }
+
+    #[test]
+    fn online_auc_none_without_labels() {
+        assert!(PipelineStats::default().online_auc().is_none());
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = PipelineStats::default();
+        a.accepted = 3;
+        let mut b = PipelineStats::default();
+        b.accepted = 4;
+        b.dropped = 1;
+        b.scored_pos.push(0.9);
+        b.scored_labels.push(1);
+        a.merge(&b);
+        assert_eq!(a.accepted, 7);
+        assert_eq!(a.dropped, 1);
+        assert_eq!(a.scored_pos.len(), 1);
+    }
+}

@@ -1,0 +1,129 @@
+//! CMS b-tagging stand-in (paper §V-B): 15 tracks x 6 features per jet,
+//! classes b/c/light separated by displaced-vertex impact parameters.
+
+use super::{Event, EventGenerator};
+use crate::nn::tensor::Mat;
+use crate::testutil::XorShift;
+
+pub const SEQ_LEN: usize = 15;
+pub const FEATURES: usize = 6;
+
+/// Per-feature standardization constants (matched to the generator's
+/// own output distribution; Python standardizes with batch statistics —
+/// the constants below were measured from a large batch and frozen so
+/// streaming generation needs no global pass).
+const MEANS: [f32; 6] = [2.35, 0.0, 0.0, 0.0, 0.0, 0.55];
+const STDS: [f32; 6] = [0.85, 1.0, 0.3, 1.9, 1.9, 1.3];
+
+pub struct BtagGenerator {
+    rng: XorShift,
+}
+
+impl BtagGenerator {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: XorShift::new(seed ^ 0xB7A6_2) }
+    }
+}
+
+impl EventGenerator for BtagGenerator {
+    fn name(&self) -> &'static str {
+        "btag"
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (SEQ_LEN, FEATURES)
+    }
+
+    fn next_event(&mut self) -> Event {
+        let rng = &mut self.rng;
+        let label = (rng.next_u64() % 3) as u8; // 0=b, 1=c, 2=light
+        let (ip_scale, sv_prob) = match label {
+            0 => (4.0, 0.75),
+            1 => (1.6, 0.40),
+            _ => (0.35, 0.04),
+        };
+        // sorted-descending track pT
+        let mut pts: Vec<f64> = (0..SEQ_LEN).map(|_| rng.exponential(12.0) + 0.5).collect();
+        pts.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut x = Mat::zeros(SEQ_LEN, FEATURES);
+        for (t, &pt) in pts.iter().enumerate() {
+            let from_sv = rng.next_f64() < sv_prob;
+            let mut d0 = rng.normal() * 0.25;
+            let mut z0 = rng.normal() * 0.30;
+            let mut sv = 0.0;
+            if from_sv {
+                let sgn = |r: &mut XorShift| if r.next_u64() & 1 == 1 { 1.0 } else { -1.0 };
+                d0 += sgn(rng) * rng.exponential(ip_scale);
+                z0 += sgn(rng) * rng.exponential(ip_scale * 0.8);
+                sv = rng.exponential(ip_scale * 0.5);
+            }
+            let row = x.row_mut(t);
+            row[0] = ((1.0 + pt).ln()) as f32;
+            row[1] = rng.normal() as f32;
+            row[2] = (rng.normal() * 0.3) as f32;
+            row[3] = ((d0 / 5.0).tanh() * 5.0) as f32;
+            row[4] = ((z0 / 5.0).tanh() * 5.0) as f32;
+            row[5] = ((sv / 5.0).tanh() * 5.0) as f32;
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = (*v - MEANS[c]) / STDS[c];
+            }
+        }
+        Event { x, label }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pt_sorted_descending() {
+        let mut g = BtagGenerator::new(3);
+        for _ in 0..20 {
+            let e = g.next_event();
+            for t in 1..SEQ_LEN {
+                assert!(e.x.at(t, 0) <= e.x.at(t - 1, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn b_jets_have_larger_impact_parameters() {
+        let mut g = BtagGenerator::new(4);
+        let mut sums = [0.0f64; 3];
+        let mut counts = [0u32; 3];
+        for _ in 0..900 {
+            let e = g.next_event();
+            let mean_d0: f32 = (0..SEQ_LEN).map(|t| e.x.at(t, 3).abs()).sum::<f32>()
+                / SEQ_LEN as f32;
+            sums[e.label as usize] += mean_d0 as f64;
+            counts[e.label as usize] += 1;
+        }
+        let m: Vec<f64> = sums.iter().zip(&counts).map(|(s, &c)| s / c as f64).collect();
+        assert!(m[0] > 1.5 * m[2], "b {} vs light {}", m[0], m[2]);
+        assert!(m[0] > m[1] && m[1] > m[2], "hierarchy b > c > light: {m:?}");
+    }
+
+    #[test]
+    fn features_roughly_standardized() {
+        let mut g = BtagGenerator::new(5);
+        let mut sum = [0.0f64; FEATURES];
+        let mut sq = [0.0f64; FEATURES];
+        let n = 500 * SEQ_LEN;
+        for _ in 0..500 {
+            let e = g.next_event();
+            for t in 0..SEQ_LEN {
+                for c in 0..FEATURES {
+                    sum[c] += e.x.at(t, c) as f64;
+                    sq[c] += (e.x.at(t, c) as f64).powi(2);
+                }
+            }
+        }
+        for c in 0..FEATURES {
+            let mean = sum[c] / n as f64;
+            let std = (sq[c] / n as f64 - mean * mean).sqrt();
+            assert!(mean.abs() < 0.5, "feature {c} mean {mean}");
+            assert!((0.3..3.0).contains(&std), "feature {c} std {std}");
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! FordA stand-in: car-engine vibration windows (paper §V-A).
+//! Normal = locked two-harmonic signature + AR(1) noise; anomaly =
+//! detuned second harmonic, impulse bursts, amplitude drift.
+
+use super::{standardize, Event, EventGenerator};
+use crate::nn::tensor::Mat;
+use crate::testutil::XorShift;
+
+pub const SEQ_LEN: usize = 50;
+
+/// Streaming generator of engine windows.
+pub struct EngineGenerator {
+    rng: XorShift,
+}
+
+impl EngineGenerator {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: XorShift::new(seed ^ 0xE46_1) }
+    }
+}
+
+impl EventGenerator for EngineGenerator {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (SEQ_LEN, 1)
+    }
+
+    fn next_event(&mut self) -> Event {
+        let rng = &mut self.rng;
+        let label = (rng.next_u64() & 1) as u8;
+        let f1 = rng.uniform(0.055, 0.075);
+        let phase = rng.uniform(0.0, std::f64::consts::TAU);
+        let amp = rng.uniform(0.8, 1.2);
+        let mut sig = [0.0f64; SEQ_LEN];
+        if label == 0 {
+            for (t, s) in sig.iter_mut().enumerate() {
+                let t = t as f64;
+                *s = amp
+                    * ((std::f64::consts::TAU * f1 * t + phase).sin()
+                        + 0.5 * (2.0 * std::f64::consts::TAU * f1 * t + 2.0 * phase).sin());
+            }
+        } else {
+            let detune = rng.uniform(1.3, 1.7);
+            for (t, s) in sig.iter_mut().enumerate() {
+                let tf = t as f64;
+                let drift = 1.0 + 0.5 * tf / SEQ_LEN as f64;
+                *s = amp
+                    * drift
+                    * ((std::f64::consts::TAU * f1 * tf + phase).sin()
+                        + 0.5 * (2.0 * std::f64::consts::TAU * f1 * detune * tf).sin());
+            }
+            let n_imp = rng.int_in(2, 6);
+            for _ in 0..n_imp {
+                let pos = rng.int_in(0, SEQ_LEN as i64) as usize;
+                let sign = if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 };
+                sig[pos] += sign * rng.uniform(2.5, 4.5);
+            }
+        }
+        // AR(1) vibration noise
+        let mut noise = 0.0f64;
+        let mut data = vec![0.0f32; SEQ_LEN];
+        for (t, d) in data.iter_mut().enumerate() {
+            noise = 0.6 * noise + rng.normal() * 0.35;
+            *d = (sig[t] + noise) as f32;
+        }
+        standardize(&mut data);
+        Event { x: Mat::from_vec(SEQ_LEN, 1, data), label }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_is_standardized() {
+        let mut g = EngineGenerator::new(1);
+        for _ in 0..20 {
+            let e = g.next_event();
+            let mean: f32 = e.x.data().iter().sum::<f32>() / SEQ_LEN as f32;
+            assert!(mean.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn anomalies_have_heavier_tails() {
+        let mut g = EngineGenerator::new(2);
+        let (mut kn, mut ka) = (vec![], vec![]);
+        for _ in 0..400 {
+            let e = g.next_event();
+            let xs = e.x.data();
+            let m: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+            let v: f32 = xs.iter().map(|x| (x - m).powi(2)).sum::<f32>() / xs.len() as f32;
+            let k: f32 = xs.iter().map(|x| (x - m).powi(4)).sum::<f32>()
+                / (xs.len() as f32 * v * v);
+            if e.label == 0 {
+                kn.push(k)
+            } else {
+                ka.push(k)
+            }
+        }
+        let mn: f32 = kn.iter().sum::<f32>() / kn.len() as f32;
+        let ma: f32 = ka.iter().sum::<f32>() / ka.len() as f32;
+        assert!(ma > mn, "anomaly kurtosis {ma} <= normal {mn}");
+    }
+}

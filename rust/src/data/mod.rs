@@ -1,0 +1,107 @@
+//! Synthetic physics event generators (S6) — Rust mirrors of
+//! `python/compile/datasets.py` for the *streaming* examples and the
+//! coordinator load generators.
+//!
+//! The quantization sweeps (Figures 9-11) do NOT use these: they score
+//! the exact eval tensors Python exported to `artifacts/<m>.eval.nnw`,
+//! so cross-layer results are bit-comparable.  These generators exist so
+//! the trigger pipeline can run indefinitely on realistic event streams.
+
+pub mod btag;
+pub mod engine;
+pub mod gw;
+
+pub use btag::BtagGenerator;
+pub use engine::EngineGenerator;
+pub use gw::GwGenerator;
+
+use crate::nn::tensor::Mat;
+
+/// One generated event: features + ground-truth label.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// `(seq_len, input_size)` feature matrix.
+    pub x: Mat,
+    /// Class index (dataset convention; 1 = anomaly/signal where binary).
+    pub label: u8,
+}
+
+/// A source of labeled events (all three generators implement this).
+pub trait EventGenerator: Send {
+    /// Dataset name (matches the zoo model name it feeds).
+    fn name(&self) -> &'static str;
+    /// Generate the next event.
+    fn next_event(&mut self) -> Event;
+    /// (seq_len, input_size) of the produced matrices.
+    fn shape(&self) -> (usize, usize);
+}
+
+/// Instantiate a generator by zoo-model name.
+pub fn generator_for(model: &str, seed: u64) -> Option<Box<dyn EventGenerator>> {
+    match model {
+        "engine" => Some(Box::new(EngineGenerator::new(seed))),
+        "btag" => Some(Box::new(BtagGenerator::new(seed))),
+        "gw" => Some(Box::new(GwGenerator::new(seed))),
+        _ => None,
+    }
+}
+
+/// Standardize a mutable slice to zero mean / unit variance.
+pub(crate) fn standardize(xs: &mut [f32]) {
+    let n = xs.len() as f32;
+    let mean = xs.iter().sum::<f32>() / n;
+    let var = xs.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var.sqrt() + 1e-8);
+    for v in xs {
+        *v = (*v - mean) * inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_for_known_models() {
+        for name in ["engine", "btag", "gw"] {
+            let mut g = generator_for(name, 1).unwrap();
+            let e = g.next_event();
+            assert_eq!((e.x.rows(), e.x.cols()), g.shape());
+            assert!(e.x.data().iter().all(|v| v.is_finite()));
+        }
+        assert!(generator_for("nope", 1).is_none());
+    }
+
+    #[test]
+    fn generators_deterministic_in_seed() {
+        for name in ["engine", "btag", "gw"] {
+            let mut a = generator_for(name, 42).unwrap();
+            let mut b = generator_for(name, 42).unwrap();
+            for _ in 0..5 {
+                let (ea, eb) = (a.next_event(), b.next_event());
+                assert_eq!(ea.label, eb.label);
+                assert_eq!(ea.x.data(), eb.x.data());
+            }
+        }
+    }
+
+    #[test]
+    fn standardize_works() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        standardize(&mut v);
+        let mean: f32 = v.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        for (name, classes) in [("engine", 2u8), ("btag", 3), ("gw", 2)] {
+            let mut g = generator_for(name, 7).unwrap();
+            let mut seen = vec![false; classes as usize];
+            for _ in 0..200 {
+                seen[g.next_event().label as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{name} missing classes");
+        }
+    }
+}

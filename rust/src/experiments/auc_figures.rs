@@ -1,0 +1,181 @@
+//! E2 — Figures 9, 10, 11: AUC ratio vs fractional bit width, for
+//! integer widths 6..=10 and both quantization strategies (PTQ / QAT).
+//!
+//! The paper plots "AUC" of the hls4ml model relative to the Keras model
+//! ("derived from comparing the outputs of the Keras/QKeras model and the
+//! hls4ml model"); we render the ratio auc_fixed/auc_float plus the mean
+//! absolute output error, computed over the exact eval events Python
+//! exported (artifacts/<m>.eval.nnw).
+
+use crate::models::config::ModelConfig;
+use crate::models::weights::Weights;
+use crate::quant::{run_sweep, EvalSet, SweepPoint, SweepResult};
+
+/// The sweep grid of one figure.
+pub fn figure_grid(int_bits: &[u32], frac_bits: &[u32]) -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    for &qat in &[false, true] {
+        for &integer_bits in int_bits {
+            for &frac in frac_bits {
+                v.push(SweepPoint { integer_bits, frac_bits: frac, qat });
+            }
+        }
+    }
+    v
+}
+
+/// Run one model's figure (possibly truncated for quick runs).
+pub fn run_figure(
+    cfg: &ModelConfig,
+    ptq: &Weights,
+    qat: &Weights,
+    eval: &EvalSet,
+    int_bits: &[u32],
+    frac_bits: &[u32],
+    threads: usize,
+) -> Vec<SweepResult> {
+    let points = figure_grid(int_bits, frac_bits);
+    run_sweep(cfg, ptq, qat, eval, &points, threads)
+}
+
+/// Render the figure as aligned text series (one line per curve), the
+/// same families the paper plots: `PTQ <i> int` / `QAT <i> int`.
+pub fn render(cfg: &ModelConfig, results: &[SweepResult], frac_bits: &[u32]) -> String {
+    let fig_no = match cfg.name.as_str() {
+        "engine" => "9",
+        "btag" => "10",
+        _ => "11",
+    };
+    let mut s = format!(
+        "FIGURE {fig_no}: AUC ratio vs fractional bits — {} model\n        frac:",
+        cfg.name
+    );
+    for f in frac_bits {
+        s.push_str(&format!(" {f:>6}"));
+    }
+    s.push('\n');
+    let mut ints: Vec<u32> = results.iter().map(|r| r.point.integer_bits).collect();
+    ints.sort_unstable();
+    ints.dedup();
+    for qat in [false, true] {
+        for &i in &ints {
+            s.push_str(&format!("{} {i:>2} int:", if qat { "QAT" } else { "PTQ" }));
+            for &f in frac_bits {
+                let r = results
+                    .iter()
+                    .find(|r| {
+                        r.point.qat == qat
+                            && r.point.integer_bits == i
+                            && r.point.frac_bits == f
+                    })
+                    .expect("grid point");
+                s.push_str(&format!(" {:>6.3}", r.auc_ratio));
+            }
+            s.push('\n');
+        }
+    }
+    s
+}
+
+/// The acceptance shape of Figures 9-11 (used by tests and the bench):
+/// ratios approach 1 as fractional bits grow, and the finest point is
+/// within a few percent of the float model.
+pub fn converges_to_one(results: &[SweepResult], qat: bool, integer_bits: u32) -> bool {
+    let mut curve: Vec<&SweepResult> = results
+        .iter()
+        .filter(|r| r.point.qat == qat && r.point.integer_bits == integer_bits)
+        .collect();
+    curve.sort_by_key(|r| r.point.frac_bits);
+    if curve.is_empty() {
+        return false;
+    }
+    let last = curve.last().unwrap();
+    (last.auc_ratio - 1.0).abs() < 0.05
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::weights::synthetic_weights;
+    use crate::models::zoo::zoo_model;
+    use crate::nn::FloatTransformer;
+    use crate::testutil::Gen;
+
+    /// Synthetic eval with *separable* labels: score every event with the
+    /// float model, keep only the top/bottom quartiles (labels from the
+    /// ranks).  The float model then has AUC 1.0 on its own labels, so
+    /// the fixed-point AUC ratio isolates quantization damage — the same
+    /// situation the trained artifact checkpoints are in.
+    fn synthetic_eval(cfg: &ModelConfig, w: &Weights, n: usize) -> EvalSet {
+        let float = FloatTransformer::new(cfg.clone(), w.clone());
+        let mut g = Gen::new(77);
+        let mut scored: Vec<(crate::nn::tensor::Mat, Vec<f32>, f32)> = (0..4 * n)
+            .map(|_| {
+                let x = crate::nn::tensor::Mat::from_vec(
+                    cfg.seq_len,
+                    cfg.input_size,
+                    g.normal_vec(cfg.seq_len * cfg.input_size, 1.0),
+                );
+                let p = float.probs(&float.forward(&x));
+                let s = p[1.min(p.len() - 1)];
+                (x, p, s)
+            })
+            .collect();
+        scored.sort_by(|a, b| a.2.total_cmp(&b.2));
+        let lo = scored.drain(..n / 2).collect::<Vec<_>>();
+        let hi = scored.split_off(scored.len() - n / 2);
+        let mut events = Vec::new();
+        let mut labels = Vec::new();
+        let mut probs = Vec::new();
+        for (x, p, _) in lo {
+            events.push(x);
+            probs.push(p);
+            labels.push(0u8);
+        }
+        for (x, p, _) in hi {
+            events.push(x);
+            probs.push(p);
+            labels.push(1u8);
+        }
+        EvalSet {
+            events,
+            labels,
+            lut_probs: probs.clone(),
+            float_probs: probs,
+            num_classes: cfg.output_size.max(2),
+        }
+    }
+
+    #[test]
+    fn grid_covers_both_quant_types() {
+        let g = figure_grid(&[6, 8], &[2, 4, 6]);
+        assert_eq!(g.len(), 12);
+        assert!(g.iter().any(|p| p.qat) && g.iter().any(|p| !p.qat));
+    }
+
+    #[test]
+    fn figure_converges_with_precision() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 31);
+        let eval = synthetic_eval(&cfg, &w, 30);
+        let results = run_figure(&cfg, &w, &w, &eval, &[6], &[2, 6, 10], 3);
+        assert!(converges_to_one(&results, false, 6),
+            "PTQ 6-int curve must converge: {results:?}");
+        // fidelity improves along the curve
+        let r2 = results.iter().find(|r| !r.point.qat && r.point.frac_bits == 2).unwrap();
+        let r10 = results.iter().find(|r| !r.point.qat && r.point.frac_bits == 10).unwrap();
+        assert!(r10.mean_abs_err < r2.mean_abs_err);
+    }
+
+    #[test]
+    fn render_has_all_curves() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 32);
+        let eval = synthetic_eval(&cfg, &w, 10);
+        let results = run_figure(&cfg, &w, &w, &eval, &[6, 7], &[2, 4], 2);
+        let text = render(&cfg, &results, &[2, 4]);
+        assert!(text.contains("FIGURE 9"));
+        assert!(text.contains("PTQ  6 int"));
+        assert!(text.contains("QAT  7 int"));
+    }
+}

@@ -1,0 +1,40 @@
+//! Experiment harness (S11): regenerates every table and figure of the
+//! paper's evaluation (DESIGN.md §8 index).
+//!
+//! | paper artifact | module | CLI |
+//! |---|---|---|
+//! | Table I        | [`table1`]           | `repro table1` |
+//! | Tables II-IV   | [`latency_tables`]   | `repro table-latency --model <m>` |
+//! | Figures 9-11   | [`auc_figures`]      | `repro figure-auc --model <m>` |
+//! | Figures 12-14  | [`resource_figures`] | `repro figure-resources --model <m>` |
+
+pub mod auc_figures;
+pub mod latency_tables;
+pub mod resource_figures;
+pub mod table1;
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::models::weights::Weights;
+use crate::models::{ModelConfig, NnwFile};
+
+/// Load the PTQ and QAT weight checkpoints for a model from artifacts.
+pub fn load_checkpoints(dir: &Path, cfg: &ModelConfig) -> Result<(Weights, Weights)> {
+    let ptq = Weights::from_nnw(
+        cfg,
+        &NnwFile::load(dir.join(format!("{}.weights.nnw", cfg.name)))?,
+    )?;
+    let qat = Weights::from_nnw(
+        cfg,
+        &NnwFile::load(dir.join(format!("{}.weights_qat.nnw", cfg.name)))?,
+    )?;
+    Ok((ptq, qat))
+}
+
+/// True when `make artifacts` has produced the files an experiment needs
+/// (experiments degrade to synthetic weights with a notice otherwise).
+pub fn artifacts_ready(dir: &Path, model: &str) -> bool {
+    dir.join(format!("{model}.weights.nnw")).exists()
+        && dir.join(format!("{model}.eval.nnw")).exists()
+}

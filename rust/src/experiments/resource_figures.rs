@@ -1,0 +1,170 @@
+//! E4 — Figures 12, 13, 14: DSP / FF / LUT (and BRAM) usage versus reuse
+//! factor and fractional precision, one figure per model.
+//!
+//! The paper's figures are plots; their quantitative content is the set
+//! of trends §VI-B narrates, which is exactly what the tests assert:
+//!   * FF and LUT increase ~linearly with precision and with 1/R,
+//!   * DSP flat in precision until the DSP input width (then steps up),
+//!     and decreasing in R,
+//!   * BRAM grows with R (register arrays re-partitioned into BRAM).
+
+use crate::hls::{FixedTransformer, QuantConfig, ReuseFactor, Resources};
+use crate::models::config::ModelConfig;
+use crate::models::weights::Weights;
+
+/// One point of the resource figure.
+#[derive(Clone, Copy, Debug)]
+pub struct ResourcePoint {
+    pub reuse: u32,
+    pub frac_bits: u32,
+    pub resources: Resources,
+}
+
+/// Sweep resources over reuse x fractional precision (integer bits fixed
+/// at the model's chosen width, as the paper does for these figures).
+pub fn sweep(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    integer_bits: u32,
+    reuse: &[u32],
+    frac_bits: &[u32],
+) -> Vec<ResourcePoint> {
+    let mut out = Vec::new();
+    for &r in reuse {
+        for &f in frac_bits {
+            let t = FixedTransformer::new(cfg.clone(), weights, QuantConfig::new(integer_bits, f));
+            let rep = t.synthesize(ReuseFactor(r));
+            out.push(ResourcePoint { reuse: r, frac_bits: f, resources: rep.total });
+        }
+    }
+    out
+}
+
+/// Render the three resource panels as aligned text series.
+pub fn render(cfg: &ModelConfig, points: &[ResourcePoint], frac_bits: &[u32]) -> String {
+    let fig_no = match cfg.name.as_str() {
+        "engine" => "12",
+        "btag" => "13",
+        _ => "14",
+    };
+    let mut reuses: Vec<u32> = points.iter().map(|p| p.reuse).collect();
+    reuses.sort_unstable();
+    reuses.dedup();
+    let mut s = format!("FIGURE {fig_no}: resource usage — {} model\n", cfg.name);
+    for (panel, get) in [
+        ("DSP", (|r: &Resources| r.dsp) as fn(&Resources) -> u64),
+        ("FF", |r| r.ff),
+        ("LUT", |r| r.lut),
+        ("BRAM18", |r| r.bram18),
+    ] {
+        s.push_str(&format!("  [{panel}]  frac:"));
+        for f in frac_bits {
+            s.push_str(&format!(" {f:>8}"));
+        }
+        s.push('\n');
+        for &r in &reuses {
+            s.push_str(&format!("     R{r}:      "));
+            for &f in frac_bits {
+                let p = points
+                    .iter()
+                    .find(|p| p.reuse == r && p.frac_bits == f)
+                    .expect("grid point");
+                s.push_str(&format!(" {:>8}", get(&p.resources)));
+            }
+            s.push('\n');
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::weights::synthetic_weights;
+    use crate::models::zoo::zoo;
+
+    fn points_for(model_idx: usize) -> (ModelConfig, Vec<ResourcePoint>) {
+        let m = &zoo()[model_idx];
+        let w = synthetic_weights(&m.config, 41);
+        let pts = sweep(&m.config, &w, 6, &[1, 2, 4], &[2, 5, 8, 11]);
+        (m.config.clone(), pts)
+    }
+
+    fn at(pts: &[ResourcePoint], r: u32, f: u32) -> Resources {
+        pts.iter().find(|p| p.reuse == r && p.frac_bits == f).unwrap().resources
+    }
+
+    #[test]
+    fn ff_lut_increase_with_precision_and_decrease_with_reuse() {
+        for idx in 0..3 {
+            let (_, pts) = points_for(idx);
+            // precision axis at R1
+            assert!(at(&pts, 1, 11).ff > at(&pts, 1, 2).ff);
+            assert!(at(&pts, 1, 11).lut > at(&pts, 1, 2).lut);
+            // reuse axis at frac 8
+            assert!(at(&pts, 1, 8).ff > at(&pts, 4, 8).ff);
+            assert!(at(&pts, 1, 8).lut > at(&pts, 4, 8).lut);
+        }
+    }
+
+    #[test]
+    fn dsp_flat_then_steps_at_port_width() {
+        let (_, pts) = points_for(0);
+        // 6 int + frac 2..11 -> widths 8..17: all <= 17, DSP flat
+        assert_eq!(at(&pts, 1, 2).dsp, at(&pts, 1, 11).dsp);
+        // crossing the 17-bit port doubles DSPs
+        let m = &zoo()[0];
+        let w = synthetic_weights(&m.config, 42);
+        let wide = sweep(&m.config, &w, 6, &[1], &[11, 12]);
+        assert_eq!(2 * at(&wide, 1, 11).dsp, at(&wide, 1, 12).dsp);
+    }
+
+    #[test]
+    fn dsp_decreases_with_reuse() {
+        for idx in 0..3 {
+            let (_, pts) = points_for(idx);
+            assert!(at(&pts, 1, 8).dsp > at(&pts, 2, 8).dsp);
+            assert!(at(&pts, 2, 8).dsp > at(&pts, 4, 8).dsp);
+        }
+    }
+
+    #[test]
+    fn bram_grows_with_reuse() {
+        for idx in 0..3 {
+            let (_, pts) = points_for(idx);
+            assert!(at(&pts, 4, 8).bram18 >= at(&pts, 1, 8).bram18);
+        }
+    }
+
+    #[test]
+    fn ff_roughly_linear_in_precision() {
+        // paper: "For FFs and LUTs, this increase is approximately linear"
+        let (_, pts) = points_for(0);
+        let f2 = at(&pts, 1, 2).ff as f64;
+        let f5 = at(&pts, 1, 5).ff as f64;
+        let f8 = at(&pts, 1, 8).ff as f64;
+        let slope1 = (f5 - f2) / 3.0;
+        let slope2 = (f8 - f5) / 3.0;
+        assert!((slope1 - slope2).abs() / slope1 < 0.25, "{slope1} vs {slope2}");
+    }
+
+    #[test]
+    fn fits_vu13p_at_r1() {
+        // all three models synthesized onto the paper's part must fit
+        use crate::hls::resources::VU13P;
+        for idx in 0..3 {
+            let (cfg, pts) = points_for(idx);
+            let total = at(&pts, 1, 8);
+            assert!(total.fits(&VU13P), "{} overflows VU13P: {total:?}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn render_has_all_panels() {
+        let (cfg, pts) = points_for(2);
+        let text = render(&cfg, &pts, &[2, 5, 8, 11]);
+        for p in ["[DSP]", "[FF]", "[LUT]", "[BRAM18]", "FIGURE 14"] {
+            assert!(text.contains(p), "missing {p}");
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! E1 — Table I: model specifications, ours vs the paper.
+
+use crate::models::zoo::zoo;
+
+/// Render Table I with our realized parameter counts next to the paper's.
+pub fn render() -> String {
+    let z = zoo();
+    let mut out = String::new();
+    out.push_str("TABLE I: Specifications of models (paper vs this reproduction)\n");
+    out.push_str(
+        "| Parameter             | Engine | B-tagging | GW   |\n\
+         |-----------------------|--------|-----------|------|\n",
+    );
+    let row = |label: &str, f: &dyn Fn(usize) -> String| {
+        format!(
+            "| {:<21} | {:>6} | {:>9} | {:>4} |\n",
+            label,
+            f(0),
+            f(1),
+            f(2)
+        )
+    };
+    out.push_str(&row("Seq. Length", &|i| z[i].config.seq_len.to_string()));
+    out.push_str(&row("Input Vec. Size", &|i| z[i].config.input_size.to_string()));
+    out.push_str(&row("No. of Transf. Blocks", &|i| z[i].config.num_blocks.to_string()));
+    out.push_str(&row("Hidden Vec. Size", &|i| z[i].config.d_model.to_string()));
+    out.push_str(&row("Output Vec. Size", &|i| z[i].config.output_size.to_string()));
+    out.push_str(&row("Trainable Param.", &|i| z[i].config.param_count().to_string()));
+    out.push_str(&row("  (paper)", &|i| z[i].config.paper_params.to_string()));
+    out.push_str(&row("  (delta %)", &|i| {
+        let c = &z[i].config;
+        format!(
+            "{:+.2}",
+            100.0 * (c.param_count() as f64 - c.paper_params as f64) / c.paper_params as f64
+        )
+    }));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_all_models_and_paper_counts() {
+        let t = super::render();
+        for needle in ["Engine", "B-tagging", "GW", "3244", "9135", "3394"] {
+            assert!(t.contains(needle), "missing {needle}:\n{t}");
+        }
+    }
+
+    #[test]
+    fn deltas_under_half_percent() {
+        let t = super::render();
+        let delta_line = t.lines().find(|l| l.contains("delta")).unwrap();
+        for field in delta_line.split('|').skip(2).take(3) {
+            let v: f64 = field.trim().parse().unwrap();
+            assert!(v.abs() < 0.5, "delta {v}% too large");
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! The ROM lookup tables of the paper's SoftMax (§IV-B) and LayerNorm
+//! (§IV-C), bit-identical to `python/compile/kernels/tables.py`.
+//!
+//! Contract (shared with Python; cross-checked in `rust/tests/` against
+//! `artifacts/tables.nnw`):
+//!
+//! ```text
+//! idx = clamp(floor((x - LO) / (HI - LO) * N), 0, N - 1)
+//! rom[i] = f(LO + (i + 0.5) * step)      // mid-bin sampling
+//! ```
+
+/// Which transcendental a ROM approximates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LutKind {
+    /// `exp(x)` over [-8, 8), 1024 entries — softmax stage 1.
+    Exp,
+    /// `1/x` over [2^-6, 512), 4096 entries — softmax stage 2.
+    Inv,
+    /// `1/sqrt(x)` over [2^-10, 16), 2048 entries — layernorm stage 4.
+    InvSqrt,
+}
+
+impl LutKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LutKind::Exp => "exp",
+            LutKind::Inv => "inv",
+            LutKind::InvSqrt => "invsqrt",
+        }
+    }
+
+    /// (lo, hi, n) — MUST match tables.py.
+    pub fn geometry(&self) -> (f64, f64, usize) {
+        match self {
+            LutKind::Exp => (-8.0, 8.0, 1024),
+            LutKind::Inv => ((-6.0f64).exp2(), 512.0, 4096),
+            LutKind::InvSqrt => ((-10.0f64).exp2(), 16.0, 2048),
+        }
+    }
+
+    fn eval(&self, x: f64) -> f64 {
+        match self {
+            LutKind::Exp => x.exp(),
+            LutKind::Inv => 1.0 / x,
+            LutKind::InvSqrt => 1.0 / x.sqrt(),
+        }
+    }
+}
+
+/// A materialized ROM image.
+#[derive(Clone, Debug)]
+pub struct LutTable {
+    kind: LutKind,
+    lo: f64,
+    hi: f64,
+    rom: Vec<f32>,
+    /// Precomputed `n / (hi - lo)` for the hot-path index computation.
+    inv_span_times_n: f64,
+}
+
+impl LutTable {
+    /// Build the ROM for `kind` (bit-identical to Python's `build_table`:
+    /// bin centers round through f32 before the f64 evaluation, because
+    /// tables.py materializes centers as a float32 array).
+    pub fn new(kind: LutKind) -> Self {
+        let (lo, hi, n) = kind.geometry();
+        let step = (hi - lo) / n as f64;
+        let rom = (0..n)
+            .map(|i| {
+                let center_f32 = (lo + (i as f64 + 0.5) * step) as f32;
+                kind.eval(center_f32 as f64) as f32
+            })
+            .collect();
+        Self { kind, lo, hi, rom, inv_span_times_n: n as f64 / (hi - lo) }
+    }
+
+    pub fn kind(&self) -> LutKind {
+        self.kind
+    }
+
+    pub fn len(&self) -> usize {
+        self.rom.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rom.is_empty()
+    }
+
+    pub fn rom(&self) -> &[f32] {
+        &self.rom
+    }
+
+    /// ROM address for input `x` (clamped — edge bins absorb the
+    /// out-of-domain inputs exactly like a saturating ap_fixed address).
+    ///
+    /// §Perf note: the address math stays in f64 deliberately — an f32
+    /// variant measured ~1ns faster per lookup but breaks bit-equality
+    /// with Python's float64 `index()` near bin edges, which the
+    /// cross-layer tests (and the AUC sweeps) depend on.
+    #[inline]
+    pub fn index(&self, x: f32) -> usize {
+        let raw = ((x as f64 - self.lo) * self.inv_span_times_n).floor();
+        if raw <= 0.0 {
+            0
+        } else if raw >= (self.rom.len() - 1) as f64 {
+            self.rom.len() - 1
+        } else {
+            raw as usize
+        }
+    }
+
+    /// Table-evaluate `f(x)`.
+    #[inline]
+    pub fn lookup(&self, x: f32) -> f32 {
+        // SAFETY-free fast path: index() is clamped into bounds.
+        self.rom[self.index(x)]
+    }
+}
+
+/// The three ROMs bundled, built once per model instance.
+#[derive(Clone, Debug)]
+pub struct Roms {
+    pub exp: LutTable,
+    pub inv: LutTable,
+    pub invsqrt: LutTable,
+}
+
+impl Roms {
+    pub fn new() -> Self {
+        Self {
+            exp: LutTable::new(LutKind::Exp),
+            inv: LutTable::new(LutKind::Inv),
+            invsqrt: LutTable::new(LutKind::InvSqrt),
+        }
+    }
+}
+
+impl Default for Roms {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn geometry_matches_python_contract() {
+        assert_eq!(LutKind::Exp.geometry(), (-8.0, 8.0, 1024));
+        assert_eq!(LutKind::Inv.geometry(), (0.015625, 512.0, 4096));
+        assert_eq!(LutKind::InvSqrt.geometry(), (0.0009765625, 16.0, 2048));
+    }
+
+    #[test]
+    fn rom_values_finite_and_sized() {
+        for kind in [LutKind::Exp, LutKind::Inv, LutKind::InvSqrt] {
+            let t = LutTable::new(kind);
+            assert_eq!(t.len(), kind.geometry().2);
+            assert!(t.rom().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn index_clamps() {
+        let t = LutTable::new(LutKind::Exp);
+        assert_eq!(t.index(-1e9), 0);
+        assert_eq!(t.index(-8.0), 0);
+        assert_eq!(t.index(7.999), t.len() - 1);
+        assert_eq!(t.index(1e9), t.len() - 1);
+    }
+
+    #[test]
+    fn exp_accuracy_midrange() {
+        let t = LutTable::new(LutKind::Exp);
+        for i in 0..999 {
+            let x = -6.0 + 12.0 * i as f32 / 999.0;
+            let got = t.lookup(x);
+            let want = x.exp();
+            assert!((got - want).abs() / want < 0.02, "x={x} {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn invsqrt_monotone_decreasing() {
+        let rom = LutTable::new(LutKind::InvSqrt);
+        for w in rom.rom().windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn prop_lookup_total_and_monotone_index() {
+        Prop::new("lut total function + monotone idx").runs(2000).check(|g| {
+            let t = LutTable::new(LutKind::Exp);
+            let a = g.f32_in(-1e4, 1e4);
+            let b = g.f32_in(-1e4, 1e4);
+            assert!(t.lookup(a).is_finite());
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(t.index(lo) <= t.index(hi));
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! `ap_fixed<W,I>` fixed-point arithmetic — the numeric substrate of the
+//! HLS simulator (DESIGN.md §6, S1).
+//!
+//! Three pieces:
+//!
+//! * [`spec::FixedSpec`] — the type descriptor (width / integer bits, both
+//!   including the sign), quantization of `f32` onto the grid with
+//!   round-to-nearest-even + saturation (hls4ml `AP_RND_CONV`/`AP_SAT`).
+//! * [`value::Fixed`] — an integer-mantissa value type proving the grid
+//!   arithmetic is exact (used by unit tests and the bit-true MAC path).
+//! * [`lut`] — the ROM tables of the paper's SoftMax (§IV-B) and
+//!   LayerNorm (§IV-C), bit-identical to `python/compile/kernels/tables.py`
+//!   (asserted against `artifacts/tables.nnw` in `rust/tests/`).
+
+pub mod lut;
+pub mod quantizer;
+pub mod spec;
+pub mod value;
+
+pub use lut::{LutKind, LutTable};
+pub use quantizer::Quantizer;
+pub use spec::FixedSpec;
+pub use value::Fixed;

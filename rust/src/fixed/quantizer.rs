@@ -1,0 +1,74 @@
+//! Precomputed hot-path quantizer (§Perf optimization #1).
+//!
+//! `FixedSpec::quantize_f64` recomputes `step()`/`max_value()`/
+//! `min_value()` — three `exp2` calls — on every invocation; the HLS
+//! simulator calls it once per MAC, which made it ~70% of the hls-sim
+//! forward profile.  [`Quantizer`] hoists the constants once per layer
+//! call.  Bit-identical to the spec path (property-tested below).
+
+use super::spec::FixedSpec;
+
+/// Grid-projection engine with precomputed constants.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    inv_step: f64,
+    step: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Quantizer {
+    pub fn new(spec: FixedSpec) -> Self {
+        Self {
+            inv_step: 1.0 / spec.step(),
+            step: spec.step(),
+            min: spec.min_value(),
+            max: spec.max_value(),
+        }
+    }
+
+    /// Identical semantics to `FixedSpec::quantize_f64`.
+    #[inline(always)]
+    pub fn q(&self, x: f64) -> f64 {
+        if x.is_nan() {
+            return 0.0;
+        }
+        let r = (x * self.inv_step).round_ties_even() * self.step;
+        r.clamp(self.min, self.max)
+    }
+
+    /// f32 convenience (matches `FixedSpec::quantize`).
+    #[inline(always)]
+    pub fn q32(&self, x: f32) -> f32 {
+        self.q(x as f64) as f32
+    }
+}
+
+impl From<FixedSpec> for Quantizer {
+    fn from(s: FixedSpec) -> Self {
+        Quantizer::new(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn prop_bit_identical_to_spec_path() {
+        Prop::new("Quantizer == FixedSpec::quantize").runs(3000).check(|g| {
+            let spec = g.fixed_spec();
+            let q = Quantizer::new(spec);
+            let x = g.f32_in(-1e5, 1e5);
+            assert_eq!(q.q(x as f64), spec.quantize_f64(x as f64), "{spec} {x}");
+            assert_eq!(q.q32(x), spec.quantize(x), "{spec} {x}");
+        });
+    }
+
+    #[test]
+    fn nan_still_maps_to_zero() {
+        let q = Quantizer::new(FixedSpec::new(8, 4));
+        assert_eq!(q.q(f64::NAN), 0.0);
+    }
+}

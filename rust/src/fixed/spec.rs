@@ -1,0 +1,223 @@
+//! `ap_fixed<W,I>` type descriptor and f32 grid projection.
+//!
+//! Semantics mirror `python/compile/kernels/quant.py` exactly (the pair is
+//! cross-checked against `artifacts/quantvec.nnw` in the integration
+//! tests): W total bits including sign, I integer bits including sign,
+//! round-to-nearest-even, saturation at the two's-complement range.
+
+use std::fmt;
+
+/// Paper §VI-A: accumulators keep "10 bits including the sign bit" of
+/// integer width while the fractional width is swept.
+pub const ACCUM_INT_BITS: u32 = 10;
+
+/// Descriptor for an `ap_fixed<width, integer>` type.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FixedSpec {
+    width: u32,
+    integer: u32,
+}
+
+impl FixedSpec {
+    /// Create a spec; panics on inconsistent widths (programmer error —
+    /// specs are build-time constants, not runtime data).
+    pub fn new(width: u32, integer: u32) -> Self {
+        assert!(
+            integer >= 1 && width >= integer && width <= 48,
+            "invalid ap_fixed<{width},{integer}>"
+        );
+        Self { width, integer }
+    }
+
+    /// Fallible constructor for specs coming from CLI/config input.
+    pub fn try_new(width: u32, integer: u32) -> Option<Self> {
+        (integer >= 1 && width >= integer && width <= 48).then(|| Self { width, integer })
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    pub fn integer(&self) -> u32 {
+        self.integer
+    }
+
+    /// Fractional bit count.
+    pub fn frac(&self) -> u32 {
+        self.width - self.integer
+    }
+
+    /// Grid step `2^-frac`.
+    pub fn step(&self) -> f64 {
+        (-(self.frac() as f64)).exp2()
+    }
+
+    /// Largest representable value, `2^(I-1) - step`.
+    pub fn max_value(&self) -> f64 {
+        (self.integer as f64 - 1.0).exp2() - self.step()
+    }
+
+    /// Smallest representable value, `-2^(I-1)`.
+    pub fn min_value(&self) -> f64 {
+        -(self.integer as f64 - 1.0).exp2()
+    }
+
+    /// The accumulator type the paper pairs with this data type: same
+    /// fractional bits, [`ACCUM_INT_BITS`] integer bits.
+    pub fn accum(&self) -> FixedSpec {
+        FixedSpec::new(ACCUM_INT_BITS + self.frac(), ACCUM_INT_BITS)
+    }
+
+    /// Project an `f32` onto the grid (round-half-even, saturate).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.quantize_f64(x as f64) as f32
+    }
+
+    /// `f64` grid projection (the internal precision of the simulator).
+    #[inline]
+    pub fn quantize_f64(&self, x: f64) -> f64 {
+        if x.is_nan() {
+            return 0.0; // hardware has no NaN; treat as 0 like hls4ml casts
+        }
+        let scaled = x / self.step();
+        // round half to even, like f64::round_ties_even
+        let r = scaled.round_ties_even();
+        (r * self.step()).clamp(self.min_value(), self.max_value())
+    }
+
+    /// Quantize a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+
+    /// Mantissa (two's-complement integer) for a value on the grid.
+    #[inline]
+    pub fn mantissa_of(&self, x: f64) -> i64 {
+        (self.quantize_f64(x) / self.step()).round() as i64
+    }
+
+    /// Number of representable levels, `2^width`.
+    pub fn levels(&self) -> u64 {
+        1u64 << self.width
+    }
+}
+
+impl fmt::Debug for FixedSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ap_fixed<{},{}>", self.width, self.integer)
+    }
+}
+
+impl fmt::Display for FixedSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ap_fixed<{},{}>", self.width, self.integer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn grid_basics() {
+        let s = FixedSpec::new(8, 4);
+        assert_eq!(s.frac(), 4);
+        assert_eq!(s.step(), 1.0 / 16.0);
+        assert_eq!(s.max_value(), 8.0 - 1.0 / 16.0);
+        assert_eq!(s.min_value(), -8.0);
+        assert_eq!(s.levels(), 256);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_integer_bits_panics() {
+        FixedSpec::new(4, 0);
+    }
+
+    #[test]
+    fn try_new_rejects_bad() {
+        assert!(FixedSpec::try_new(4, 5).is_none());
+        assert!(FixedSpec::try_new(4, 0).is_none());
+        assert!(FixedSpec::try_new(8, 3).is_some());
+    }
+
+    #[test]
+    fn accum_matches_paper_convention() {
+        assert_eq!(FixedSpec::new(8, 4).accum(), FixedSpec::new(14, 10));
+        assert_eq!(FixedSpec::new(16, 6).accum(), FixedSpec::new(20, 10));
+    }
+
+    #[test]
+    fn round_half_even_ties() {
+        let s = FixedSpec::new(8, 7); // 1 frac bit, step 0.5
+        assert_eq!(s.quantize(0.25), 0.0);
+        assert_eq!(s.quantize(0.75), 1.0);
+        assert_eq!(s.quantize(-0.25), 0.0);
+        assert_eq!(s.quantize(-0.75), -1.0);
+    }
+
+    #[test]
+    fn saturation() {
+        let s = FixedSpec::new(8, 4);
+        assert_eq!(s.quantize(1e9), s.max_value() as f32);
+        assert_eq!(s.quantize(-1e9), s.min_value() as f32);
+        assert_eq!(s.quantize(f32::NAN), 0.0);
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        Prop::new("quantize idempotent").runs(2000).check(|g| {
+            let spec = g.fixed_spec();
+            let x = g.f32_in(-1e4, 1e4);
+            let q1 = spec.quantize(x);
+            let q2 = spec.quantize(q1);
+            assert_eq!(q1, q2, "{spec} on {x}");
+        });
+    }
+
+    #[test]
+    fn prop_in_range() {
+        Prop::new("quantize stays in range").runs(2000).check(|g| {
+            let spec = g.fixed_spec();
+            let q = spec.quantize(g.f32_in(-1e6, 1e6)) as f64;
+            assert!(q >= spec.min_value() && q <= spec.max_value());
+        });
+    }
+
+    #[test]
+    fn prop_monotone() {
+        Prop::new("quantize monotone").runs(2000).check(|g| {
+            let spec = g.fixed_spec();
+            let a = g.f32_in(-50.0, 50.0);
+            let b = g.f32_in(-50.0, 50.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(spec.quantize(lo) <= spec.quantize(hi));
+        });
+    }
+
+    #[test]
+    fn prop_half_ulp_error_inside_range() {
+        Prop::new("error <= step/2 in range").runs(2000).check(|g| {
+            let spec = g.fixed_spec();
+            let x = g.f32_in(-3.9, 3.9);
+            if (x as f64) < spec.min_value() || (x as f64) > spec.max_value() {
+                return;
+            }
+            let err = (spec.quantize(x) as f64 - x as f64).abs();
+            assert!(err <= spec.step() / 2.0 + 1e-9, "{spec} x={x} err={err}");
+        });
+    }
+
+    #[test]
+    fn mantissa_roundtrip() {
+        let s = FixedSpec::new(12, 4);
+        for x in [-7.9, -1.0, 0.0, 0.125, 3.37, 7.9] {
+            let m = s.mantissa_of(x);
+            assert_eq!(m as f64 * s.step(), s.quantize_f64(x));
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Integer-mantissa `ap_fixed` value — the bit-true arithmetic witness.
+//!
+//! The HLS simulator's hot path works on grid-projected `f32`s for speed
+//! (every intermediate is re-quantized, so results stay on-grid); this
+//! type carries the mantissa explicitly and implements +, -, * the way
+//! the FPGA's DSP slices do.  Unit tests prove the two formulations agree,
+//! which is what justifies the fast path.
+
+use super::spec::FixedSpec;
+
+/// One fixed-point value: `mantissa * spec.step()`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fixed {
+    mantissa: i64,
+    spec: FixedSpec,
+}
+
+impl Fixed {
+    /// Quantize an `f64` into the spec's grid.
+    pub fn from_f64(x: f64, spec: FixedSpec) -> Self {
+        Self { mantissa: spec.mantissa_of(x), spec }
+    }
+
+    pub fn zero(spec: FixedSpec) -> Self {
+        Self { mantissa: 0, spec }
+    }
+
+    pub fn mantissa(&self) -> i64 {
+        self.mantissa
+    }
+
+    pub fn spec(&self) -> FixedSpec {
+        self.spec
+    }
+
+    /// Value as `f64` (exact: mantissas are < 2^48).
+    pub fn to_f64(&self) -> f64 {
+        self.mantissa as f64 * self.spec.step()
+    }
+
+    /// Saturating re-quantization into a (possibly different) spec —
+    /// the `ap_fixed` assignment/cast operation.
+    pub fn cast(&self, to: FixedSpec) -> Fixed {
+        let frac_from = self.spec.frac() as i32;
+        let frac_to = to.frac() as i32;
+        let shift = frac_to - frac_from;
+        let m = if shift >= 0 {
+            // widen: overflow impossible for in-grid values of specs <= 48
+            // bits, but guard anyway (checked_mul saturates to max below)
+            self.mantissa.checked_mul(1i64 << shift.min(62))
+        } else {
+            // round-half-even right shift
+            let s = (-shift) as u32;
+            let floor = self.mantissa >> s;
+            let rem = self.mantissa - (floor << s);
+            let half = 1i64 << (s - 1);
+            let rounded = if rem > half || (rem == half && (floor & 1) == 1) {
+                floor + 1
+            } else {
+                floor
+            };
+            Some(rounded)
+        };
+        let max_m = to.mantissa_of(to.max_value());
+        let min_m = to.mantissa_of(to.min_value());
+        let m = match m {
+            Some(v) => v.clamp(min_m, max_m),
+            None if self.mantissa < 0 => min_m,
+            None => max_m,
+        };
+        Fixed { mantissa: m, spec: to }
+    }
+
+    /// Exact sum in the widened accumulator grid of `out` (casts both
+    /// operands to `out`'s fractional width first, saturating).
+    pub fn add(&self, rhs: &Fixed, out: FixedSpec) -> Fixed {
+        let a = self.cast(FixedSpec::new(48, 48 - out.frac()));
+        let b = rhs.cast(FixedSpec::new(48, 48 - out.frac()));
+        let sum = a.mantissa.saturating_add(b.mantissa);
+        Fixed { mantissa: sum, spec: a.spec }.cast(out)
+    }
+
+    /// Exact product (a DSP multiply): mantissas multiply, fractional
+    /// widths add, then the result is cast into `out`.
+    pub fn mul(&self, rhs: &Fixed, out: FixedSpec) -> Fixed {
+        let m = self.mantissa as i128 * rhs.mantissa as i128;
+        let frac = self.spec.frac() + rhs.spec.frac();
+        // Reduce through f64 only if it cannot be represented; mantissa
+        // products of <=24-bit inputs fit i64 comfortably.
+        let wide = Fixed {
+            mantissa: m.clamp(i64::MIN as i128, i64::MAX as i128) as i64,
+            spec: FixedSpec::new(48, 48 - frac.min(47)),
+        };
+        debug_assert_eq!(wide.spec.frac(), frac.min(47));
+        wide.cast(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn roundtrip_f64() {
+        let s = FixedSpec::new(16, 6);
+        for x in [-31.9, -0.015625, 0.0, 1.5, 31.9] {
+            let v = Fixed::from_f64(x, s);
+            assert_eq!(v.to_f64(), s.quantize_f64(x));
+        }
+    }
+
+    #[test]
+    fn cast_widening_is_exact() {
+        let a = Fixed::from_f64(1.375, FixedSpec::new(8, 4));
+        let b = a.cast(FixedSpec::new(16, 6));
+        assert_eq!(b.to_f64(), 1.375);
+    }
+
+    #[test]
+    fn cast_narrowing_rounds_half_even() {
+        let wide = FixedSpec::new(16, 4);
+        let narrow = FixedSpec::new(5, 4); // 1 frac bit
+        assert_eq!(Fixed::from_f64(0.25, wide).cast(narrow).to_f64(), 0.0);
+        assert_eq!(Fixed::from_f64(0.75, wide).cast(narrow).to_f64(), 1.0);
+        assert_eq!(Fixed::from_f64(-0.25, wide).cast(narrow).to_f64(), 0.0);
+    }
+
+    #[test]
+    fn cast_saturates() {
+        let v = Fixed::from_f64(500.0, FixedSpec::new(20, 10));
+        let s = FixedSpec::new(8, 4);
+        assert_eq!(v.cast(s).to_f64(), s.max_value());
+        let v = Fixed::from_f64(-500.0, FixedSpec::new(20, 10));
+        assert_eq!(v.cast(s).to_f64(), s.min_value());
+    }
+
+    #[test]
+    fn prop_mantissa_add_matches_float_path() {
+        Prop::new("mantissa add == f64 quantize add").runs(2000).check(|g| {
+            let spec = g.fixed_spec();
+            let out = spec.accum();
+            let a = spec.quantize(g.f32_in(-4.0, 4.0)) as f64;
+            let b = spec.quantize(g.f32_in(-4.0, 4.0)) as f64;
+            let fast = out.quantize_f64(a + b);
+            let exact = Fixed::from_f64(a, spec).add(&Fixed::from_f64(b, spec), out);
+            assert_eq!(exact.to_f64(), fast, "{spec} {a}+{b}");
+        });
+    }
+
+    #[test]
+    fn prop_mantissa_mul_matches_float_path() {
+        Prop::new("mantissa mul == f64 quantize mul").runs(2000).check(|g| {
+            let spec = g.fixed_spec_max_width(20);
+            let out = spec.accum();
+            let a = spec.quantize(g.f32_in(-4.0, 4.0)) as f64;
+            let b = spec.quantize(g.f32_in(-4.0, 4.0)) as f64;
+            let fast = out.quantize_f64(a * b);
+            let exact = Fixed::from_f64(a, spec).mul(&Fixed::from_f64(b, spec), out);
+            assert_eq!(exact.to_f64(), fast, "{spec} {a}*{b}");
+        });
+    }
+}

@@ -1,0 +1,150 @@
+//! FIFO stream model — the paper's inter-stage data plumbing (figure 5).
+//!
+//! The functional simulator uses [`Fifo`] both to *execute* the MHA
+//! stage handoffs the way the hardware does (write row / read row) and to
+//! *account* for the storage: depth high-water marks feed the BRAM
+//! estimate (`bram18_for_bits`).
+
+use std::collections::VecDeque;
+
+/// Bounded single-producer single-consumer FIFO of row vectors.
+#[derive(Clone, Debug)]
+pub struct Fifo<T> {
+    name: String,
+    capacity: usize,
+    buf: VecDeque<T>,
+    high_water: usize,
+    pushes: u64,
+    pops: u64,
+}
+
+/// Error pushing into a full FIFO — in hardware this is a stall; the
+/// functional simulator treats it as a design bug and surfaces it.
+#[derive(Debug, thiserror::Error)]
+#[error("FIFO '{0}' overflow (capacity {1})")]
+pub struct FifoOverflow(String, usize);
+
+impl<T> Fifo<T> {
+    pub fn new(name: impl Into<String>, capacity: usize) -> Self {
+        Self {
+            name: name.into(),
+            capacity: capacity.max(1),
+            buf: VecDeque::new(),
+            high_water: 0,
+            pushes: 0,
+            pops: 0,
+        }
+    }
+
+    pub fn push(&mut self, item: T) -> Result<(), FifoOverflow> {
+        if self.buf.len() >= self.capacity {
+            return Err(FifoOverflow(self.name.clone(), self.capacity));
+        }
+        self.buf.push_back(item);
+        self.pushes += 1;
+        self.high_water = self.high_water.max(self.buf.len());
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        let v = self.buf.pop_front();
+        if v.is_some() {
+            self.pops += 1;
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Deepest occupancy observed — sizes the hardware FIFO.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    pub fn pops(&self) -> u64 {
+        self.pops
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = Fifo::new("t", 8);
+        for i in 0..5 {
+            f.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(f.pop(), Some(i));
+        }
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn overflow_reported() {
+        let mut f = Fifo::new("t", 2);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        assert!(f.push(3).is_err());
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut f = Fifo::new("t", 10);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        f.pop();
+        f.push(3).unwrap();
+        f.push(4).unwrap();
+        assert_eq!(f.high_water(), 3);
+    }
+
+    #[test]
+    fn prop_fifo_conservation_and_order() {
+        Prop::new("fifo conserves and orders").runs(300).check(|g| {
+            let cap = g.usize_in(1, 16);
+            let mut f = Fifo::new("p", cap);
+            let mut model: Vec<u64> = Vec::new();
+            let mut popped: Vec<u64> = Vec::new();
+            let mut next = 0u64;
+            for _ in 0..64 {
+                if g.bool() {
+                    if f.push(next).is_ok() {
+                        model.push(next);
+                    }
+                    next += 1;
+                } else if let Some(v) = f.pop() {
+                    popped.push(v);
+                }
+            }
+            while let Some(v) = f.pop() {
+                popped.push(v);
+            }
+            assert_eq!(popped, model, "FIFO must deliver exactly the accepted items in order");
+            assert!(f.high_water() <= cap);
+            assert_eq!(f.pushes(), model.len() as u64);
+        });
+    }
+}

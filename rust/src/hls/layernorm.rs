@@ -1,0 +1,147 @@
+//! Fixed-point 5-stage LayerNorm (paper §IV-C, figure 8):
+//! mean -> deviation -> variance -> ROM 1/sqrt(var) -> gamma/beta.
+
+use super::calibration as cal;
+use super::pipeline::{adder_tree_depth, Stage};
+use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
+use super::ReuseFactor;
+use crate::fixed::lut::Roms;
+use crate::fixed::FixedSpec;
+
+/// Normalize one row in place on the `ap_fixed` grid.
+pub fn layernorm_fixed_row(
+    row: &mut [f32],
+    gamma: &[f32],
+    beta: &[f32],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    assert_eq!(row.len(), gamma.len());
+    assert_eq!(row.len(), beta.len());
+    let qa = crate::fixed::Quantizer::new(accum);
+    let qd = crate::fixed::Quantizer::new(data);
+    let k = row.len() as f64;
+    // stage 1: mean
+    let mut sum = 0.0f64;
+    for v in row.iter() {
+        sum += *v as f64;
+    }
+    let mean = qa.q(sum / k);
+    // stage 2: deviations (data grid) + stage 3: variance
+    let mut var = 0.0f64;
+    for v in row.iter_mut() {
+        *v = qd.q32((*v as f64 - mean) as f32);
+        var += qa.q(*v as f64 * *v as f64);
+    }
+    let var = qa.q(var / k) as f32;
+    // stage 4: 1/sqrt via ROM
+    let inv = qd.q32(roms.invsqrt.lookup(var));
+    // stage 5: scale + affine
+    for (v, (&g, &b)) in row.iter_mut().zip(gamma.iter().zip(beta)) {
+        let normalized = qd.q32(*v * inv);
+        *v = qd.q32(normalized * g + b);
+    }
+}
+
+/// Pipeline stage: the five sub-stages are themselves pipelined, so the
+/// layer streams rows at II = R after a fill depth of ~2 adder trees.
+pub fn layernorm_stage(name: &str, rows: usize, d: usize, r: ReuseFactor) -> Stage {
+    // one adder tree of fill: the mean and variance trees overlap in the
+    // 5-stage pipeline (stage 3 streams behind stage 1)
+    Stage::new(
+        name,
+        cal::LAYERNORM_DEPTH_BASE
+            + adder_tree_depth(d as u64)
+            + cal::reuse_depth_growth(d, r) / 2,
+        r.get() as u64,
+        rows as u64,
+    )
+}
+
+/// Resources: d/R multipliers for stage 3 squares + d/R for the gamma
+/// dot-product unit, one invsqrt ROM, adder trees in fabric.
+pub fn layernorm_resources(d: usize, data: FixedSpec, r: ReuseFactor) -> Resources {
+    let w = data.width() as u64;
+    let concurrent = 2 * (d as u64).div_ceil(r.get() as u64);
+    let dsp = concurrent * dsp_per_mult(data.width());
+    let ff = (concurrent as f64 * w as f64 * cal::FF_PER_MULT_BIT) as u64
+        + cal::FF_CTRL_PER_STAGE;
+    let lut = (concurrent as f64 * w as f64 * cal::LUT_PER_MULT_BIT) as u64
+        + cal::LUT_CTRL_PER_STAGE;
+    let rom_bits = crate::fixed::lut::LutKind::InvSqrt.geometry().2 as u64 * w;
+    Resources::new(dsp, ff, lut, bram18_for_bits(rom_bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{Gen, Prop};
+
+    fn setup() -> (Roms, FixedSpec, FixedSpec) {
+        let data = FixedSpec::new(18, 8);
+        (Roms::new(), data, data.accum())
+    }
+
+    #[test]
+    fn close_to_exact_layernorm() {
+        let (roms, data, accum) = setup();
+        let mut g = Gen::new(1);
+        let k = 32;
+        let gamma = g.normal_vec(k, 1.0);
+        let beta = g.normal_vec(k, 0.5);
+        let mut row = g.normal_vec(k, 1.5);
+        let exact = {
+            let m: f32 = row.iter().sum::<f32>() / k as f32;
+            let var: f32 = row.iter().map(|v| (v - m).powi(2)).sum::<f32>() / k as f32;
+            let inv = 1.0 / var.sqrt();
+            row.iter()
+                .zip(gamma.iter().zip(&beta))
+                .map(|(v, (&g_, &b_))| (v - m) * inv * g_ + b_)
+                .collect::<Vec<_>>()
+        };
+        layernorm_fixed_row(&mut row, &gamma, &beta, &roms, data, accum);
+        for (a, b) in row.iter().zip(&exact) {
+            assert!((a - b).abs() < 0.08, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn prop_normalizes_unit_gamma() {
+        Prop::new("fixed ln mean0 var1").runs(150).check(|g| {
+            let (roms, data, accum) = setup();
+            let k = g.usize_in(8, 64);
+            let mut row = g.normal_vec(k, 1.0);
+            layernorm_fixed_row(&mut row, &vec![1.0; k], &vec![0.0; k], &roms, data, accum);
+            let mean: f32 = row.iter().sum::<f32>() / k as f32;
+            let var: f32 = row.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / k as f32;
+            assert!(mean.abs() < 0.02, "mean {mean}");
+            assert!((var - 1.0).abs() < 0.15, "var {var}");
+        });
+    }
+
+    #[test]
+    fn outputs_on_grid() {
+        let (roms, data, accum) = setup();
+        let mut row = vec![1.0, -0.5, 2.25, 0.125];
+        layernorm_fixed_row(&mut row, &[1.0; 4], &[0.0; 4], &roms, data, accum);
+        for &v in &row {
+            assert_eq!(v, data.quantize(v));
+        }
+    }
+
+    #[test]
+    fn stage_depth_grows_with_width() {
+        let a = layernorm_stage("ln", 10, 16, ReuseFactor(1));
+        let b = layernorm_stage("ln", 10, 64, ReuseFactor(1));
+        assert!(b.depth > a.depth);
+    }
+
+    #[test]
+    fn resources_have_rom_and_scale_down_with_reuse() {
+        let r1 = layernorm_resources(64, FixedSpec::new(16, 6), ReuseFactor(1));
+        let r4 = layernorm_resources(64, FixedSpec::new(16, 6), ReuseFactor(4));
+        assert!(r1.bram18 > 0);
+        assert!(r4.dsp < r1.dsp);
+    }
+}

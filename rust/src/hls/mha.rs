@@ -1,0 +1,271 @@
+//! Fixed-point multi-head attention — the paper's 4-stage pipeline
+//! (§IV-A, figure 4), executed the way the hardware streams it:
+//!
+//!   stage 1  row-streamed Q/K/V projections; Q rows go into a FIFO
+//!            (figure 5), K and V land in fully-partitioned registers
+//!            (figure 6) — V is reshaped for row+column access (§IV-A).
+//!   stage 2  per Q row: dot with every K row, scale by 1/sqrt(d_k),
+//!            3-stage LUT softmax (§IV-B); result rows into a FIFO.
+//!   stage 3  per score row: weighted sum of V rows; result into the
+//!            output FIFO.
+//!   stage 4  drain per-head FIFOs, concat, output projection Wo.
+//!
+//! The FIFO traffic is real (the functional sim pushes/pops rows), so the
+//! BRAM estimate uses observed high-water marks, not guesses.
+
+use super::dense::{dense_fixed, dense_resources, dense_stage};
+use super::fifo::Fifo;
+use super::pipeline::{adder_tree_depth, PipelineModel, Stage};
+use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
+use super::softmax::{softmax_fixed_row, softmax_resources, softmax_stage};
+use super::{calibration as cal, ReuseFactor};
+use crate::fixed::lut::Roms;
+use crate::fixed::FixedSpec;
+use crate::models::weights::MhaWeights;
+use crate::nn::layers::Activation;
+use crate::nn::tensor::Mat;
+
+/// Observed FIFO sizing from one forward pass (feeds the BRAM model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MhaFifoStats {
+    pub q_high_water: usize,
+    pub score_high_water: usize,
+    pub out_high_water: usize,
+}
+
+/// Fixed-point MHA forward: x (S, d) -> (S, d).
+pub fn mha_fixed(
+    x: &Mat,
+    w: &MhaWeights,
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) -> (Mat, MhaFifoStats) {
+    let s = x.rows();
+    let heads = w.wq.len();
+    let k = w.wq[0].cols();
+    let scale = 1.0 / (k as f32).sqrt();
+    let qa = crate::fixed::Quantizer::new(accum);
+    let qd = crate::fixed::Quantizer::new(data);
+    let mut stats = MhaFifoStats::default();
+
+    let mut head_outputs: Vec<Fifo<Vec<f32>>> = Vec::with_capacity(heads);
+    for h in 0..heads {
+        // ---- stage 1: projections --------------------------------------
+        // Q rows stream through a FIFO; K/V are register-partitioned.
+        let q = dense_fixed(x, &w.wq[h], &w.bq[h], Activation::Linear, data, accum);
+        let km = dense_fixed(x, &w.wk[h], &w.bk[h], Activation::Linear, data, accum);
+        let vm = dense_fixed(x, &w.wv[h], &w.bv[h], Activation::Linear, data, accum);
+        let mut q_fifo = Fifo::new(format!("h{h}.q"), s);
+        for r in 0..s {
+            q_fifo.push(q.row(r).to_vec()).expect("q fifo sized to S");
+        }
+        stats.q_high_water = stats.q_high_water.max(q_fifo.high_water());
+
+        // ---- stage 2: Q.K^T, scale, LUT softmax ------------------------
+        let mut score_fifo = Fifo::new(format!("h{h}.score"), s);
+        while let Some(q_row) = q_fifo.pop() {
+            let mut score_row = vec![0.0f32; s];
+            for (j, sc) in score_row.iter_mut().enumerate() {
+                // all K rows readable in parallel (register partition)
+                let mut acc = 0.0f64;
+                for (qi, ki) in q_row.iter().zip(km.row(j)) {
+                    acc += qa.q(*qi as f64 * *ki as f64);
+                }
+                let acc = qa.q(acc);
+                *sc = qd.q32((acc as f32) * scale);
+            }
+            softmax_fixed_row(&mut score_row, roms, data, accum);
+            score_fifo.push(score_row).expect("score fifo sized to S");
+        }
+        stats.score_high_water = stats.score_high_water.max(score_fifo.high_water());
+
+        // ---- stage 3: weighted sum of V --------------------------------
+        let mut out_fifo = Fifo::new(format!("h{h}.out"), s);
+        while let Some(p_row) = score_fifo.pop() {
+            let mut out_row = vec![0.0f32; k];
+            for (j, &p) in p_row.iter().enumerate() {
+                // V row access (the §IV-A reshape makes both row and
+                // column access legal; row order streams vm cache-local)
+                let p = p as f64;
+                for (o, &vv) in out_row.iter_mut().zip(vm.row(j)) {
+                    *o += qa.q(p * vv as f64) as f32;
+                }
+            }
+            for o in out_row.iter_mut() {
+                *o = qd.q32(qa.q(*o as f64) as f32);
+            }
+            out_fifo.push(out_row).expect("out fifo sized to S");
+        }
+        stats.out_high_water = stats.out_high_water.max(out_fifo.high_water());
+        head_outputs.push(out_fifo);
+    }
+
+    // ---- stage 4: concat + output projection ---------------------------
+    let mut concat = Mat::zeros(s, heads * k);
+    for r in 0..s {
+        for (h, fifo) in head_outputs.iter_mut().enumerate() {
+            let row = fifo.pop().expect("head fifo drained in row order");
+            concat.row_mut(r)[h * k..(h + 1) * k].copy_from_slice(&row);
+        }
+    }
+    let out = dense_fixed(&concat, &w.wo, &w.bo, Activation::Linear, data, accum);
+    (out, stats)
+}
+
+/// The MHA dataflow pipeline (figure 4) as a composed stage.
+///
+/// Stage 2 cannot start scoring until K is fully resident, and the K/V
+/// registers are single-buffered, so the engine's occupancy per event is
+/// ~2 passes over the sequence — this is what makes the model-level
+/// initiation interval ≈ 2·S·R, matching Tables II-IV's intervals.
+pub fn mha_pipeline(s: usize, d: usize, k: usize, r: ReuseFactor) -> PipelineModel {
+    let mut p = PipelineModel::default();
+    p.push(dense_stage("mha.qkv_proj", s, d, r));
+    let mut score = softmax_stage("mha.score_softmax", s, s, r);
+    score.depth += adder_tree_depth(k as u64) + cal::DENSE_DEPTH_EXTRA; // QK^T tree
+    p.push(score);
+    p.push(Stage::new(
+        "mha.apply_v",
+        adder_tree_depth(s as u64)
+            + cal::DENSE_DEPTH_EXTRA
+            + cal::reuse_depth_growth(k, r),
+        r.get() as u64,
+        s as u64,
+    ));
+    p.push(dense_stage("mha.concat_wo", s, d, r));
+    p
+}
+
+/// The MHA engine as one top-level stage (dataflow-composed, with the
+/// single-buffered K/V occupancy doubling described above).
+///
+/// Fill depth counts only stages 1-2: stages 3 (apply-V) and 4
+/// (concat/Wo) drain row-by-row concurrently with the stage-2 stream,
+/// so they contribute occupancy, not fill (calibrated against the
+/// depth-dominated b-tagging rows of Table III).
+pub fn mha_stage(s: usize, d: usize, k: usize, r: ReuseFactor) -> Stage {
+    let p = mha_pipeline(s, d, k, r);
+    let df = p.dataflow();
+    let fill: u64 = p.stages()[..2].iter().map(|st| st.depth).sum();
+    Stage { name: "mha".into(), depth: fill, ii: df.ii, rows: 2 * s as u64 }
+}
+
+/// Resource estimate for the whole MHA layer.
+pub fn mha_resources(
+    s: usize,
+    d: usize,
+    heads: usize,
+    k: usize,
+    data: FixedSpec,
+    r: ReuseFactor,
+    fifo_stats: Option<MhaFifoStats>,
+) -> Resources {
+    let w = data.width() as u64;
+    // stage 1: three projections per head
+    let proj: Resources = (0..3)
+        .map(|_| dense_resources(d, heads * k, data, r))
+        .sum();
+    // stage 2: per head, S×k MACs per row + softmax
+    let score_mults = (heads * s * k) as u64;
+    let score_concurrent = score_mults.div_ceil(r.get() as u64);
+    let score = Resources::new(
+        score_concurrent * dsp_per_mult(data.width()),
+        (score_concurrent as f64 * w as f64 * cal::FF_PER_MULT_BIT) as u64,
+        (score_concurrent as f64 * w as f64 * cal::LUT_PER_MULT_BIT) as u64,
+        0,
+    );
+    let softmax: Resources = (0..heads).map(|_| softmax_resources(s, data, r)).sum();
+    // stage 3: mirror of stage 2 (probs @ V)
+    let apply_v = score;
+    // stage 4: concat + Wo
+    let wo = dense_resources(heads * k, d, data, r);
+    // K/V register partitions: 2 matrices of S×k per head
+    let kv_bits = (2 * heads * s * k) as u64 * w;
+    let kv = if r.get() > 1 {
+        // reuse re-partitions a (1 - 1/R) share into BRAM (§VI-B)
+        let bram_share = kv_bits - kv_bits / r.get() as u64;
+        Resources::new(0, (kv_bits / r.get() as u64) as f64 as u64, 0, bram18_for_bits(bram_share))
+    } else {
+        Resources::new(0, kv_bits, 0, 0)
+    };
+    // FIFOs sized by observed high-water (fallback: full depth S)
+    let hw = fifo_stats.unwrap_or(MhaFifoStats {
+        q_high_water: s,
+        score_high_water: s,
+        out_high_water: s,
+    });
+    let fifo_bits = (heads
+        * (hw.q_high_water * k + hw.score_high_water * s + hw.out_high_water * k))
+        as u64
+        * w;
+    let fifos = Resources::new(0, 0, 0, bram18_for_bits(fifo_bits));
+    proj + score + softmax + apply_v + wo + kv + fifos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::weights::synthetic_weights;
+    use crate::models::zoo::zoo_model;
+    use crate::testutil::Gen;
+
+    fn gw_setup() -> (Mat, MhaWeights, Roms, FixedSpec, FixedSpec) {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 11);
+        let mut g = Gen::new(3);
+        let x = Mat::from_vec(
+            m.config.seq_len,
+            m.config.d_model,
+            g.normal_vec(m.config.seq_len * m.config.d_model, 0.7),
+        );
+        let data = FixedSpec::new(20, 8);
+        (x, w.blocks[0].mha.clone(), Roms::new(), data, data.accum())
+    }
+
+    #[test]
+    fn tracks_float_mha_at_high_precision() {
+        let (x, w, roms, data, accum) = gw_setup();
+        let (q, _) = mha_fixed(&x, &w, &roms, data, accum);
+        let f = crate::nn::layers::mha(&x, &w);
+        // LUT softmax + quantization vs exact float: close but not equal
+        assert!(q.max_abs_diff(&f) < 0.15, "diff {}", q.max_abs_diff(&f));
+        assert!(q.max_abs_diff(&f) > 0.0);
+    }
+
+    #[test]
+    fn fifo_high_water_is_full_sequence() {
+        let (x, w, roms, data, accum) = gw_setup();
+        let (_, stats) = mha_fixed(&x, &w, &roms, data, accum);
+        // the functional schedule fills each FIFO before draining
+        assert_eq!(stats.q_high_water, x.rows());
+        assert_eq!(stats.score_high_water, x.rows());
+    }
+
+    #[test]
+    fn outputs_on_grid() {
+        let (x, w, roms, data, accum) = gw_setup();
+        let (q, _) = mha_fixed(&x, &w, &roms, data, accum);
+        for &v in q.data() {
+            assert_eq!(v, data.quantize(v));
+        }
+    }
+
+    #[test]
+    fn stage_occupancy_is_two_passes() {
+        let s = mha_stage(50, 16, 4, ReuseFactor(1));
+        assert_eq!(s.occupancy(), 100);
+        let s2 = mha_stage(50, 16, 4, ReuseFactor(2));
+        assert_eq!(s2.occupancy(), 200);
+    }
+
+    #[test]
+    fn resources_scale_down_with_reuse() {
+        let data = FixedSpec::new(16, 6);
+        let r1 = mha_resources(50, 16, 2, 4, data, ReuseFactor(1), None);
+        let r4 = mha_resources(50, 16, 2, 4, data, ReuseFactor(4), None);
+        assert!(r4.dsp < r1.dsp, "{} vs {}", r4.dsp, r1.dsp);
+        assert!(r4.ff < r1.ff);
+        assert!(r4.bram18 > r1.bram18, "reuse must move arrays into BRAM");
+    }
+}

@@ -1,0 +1,57 @@
+//! The Vivado-HLS stand-in (DESIGN.md §2, §6): bit-accurate fixed-point
+//! transformer layers with cycle-approximate latency and analytic
+//! resource models.
+//!
+//! Three concerns per layer, kept in one module each so the numeric
+//! implementation, the pipeline (depth, II) model and the resource
+//! estimate stay in sync:
+//!
+//! * **forward** — `ap_fixed` math through [`crate::fixed`] (weights and
+//!   activations quantized to the data spec, accumulations at the
+//!   paper's 10-integer-bit accumulator, LUT ROMs for exp/inv/invsqrt);
+//! * **pipeline** — `(depth, initiation interval)` per §VI-B's layered
+//!   strategy: inner layers use the latency strategy (II = R per row),
+//!   the model top level uses the resource strategy (stages share
+//!   hardware, block latencies add);
+//! * **resources** — DSP/FF/LUT/BRAM estimates calibrated to the
+//!   trends of Figures 12-14 (see [`calibration`]).
+
+pub mod calibration;
+pub mod dense;
+pub mod fifo;
+pub mod layernorm;
+pub mod pooling;
+pub mod mha;
+pub mod pipeline;
+pub mod report;
+pub mod resources;
+pub mod softmax;
+pub mod transformer;
+
+pub use pipeline::{PipelineModel, Stage};
+pub use report::SynthesisReport;
+pub use resources::Resources;
+pub use transformer::{FixedTransformer, QuantConfig};
+
+/// Reuse factor — the paper's central parallelization knob (§VI-B): the
+/// number of multiplications time-multiplexed onto each DSP.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ReuseFactor(pub u32);
+
+impl ReuseFactor {
+    pub fn get(&self) -> u32 {
+        self.0.max(1)
+    }
+}
+
+impl Default for ReuseFactor {
+    fn default() -> Self {
+        ReuseFactor(1)
+    }
+}
+
+impl std::fmt::Display for ReuseFactor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "R{}", self.0)
+    }
+}

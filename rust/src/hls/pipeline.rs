@@ -1,0 +1,181 @@
+//! Pipeline latency algebra (DESIGN.md §6).
+//!
+//! Every layer is a [`Stage`] with a fill `depth` (cycles from first
+//! input to first output) and an initiation interval `ii` (cycles between
+//! consecutive row outputs).  Streaming `rows` items through one stage:
+//!
+//! ```text
+//! latency(rows) = depth + (rows - 1) * ii
+//! ```
+//!
+//! Two composition rules, mirroring the paper's layered strategy (§VI-B):
+//!
+//! * [`PipelineModel::dataflow`] — stages run concurrently connected by
+//!   FIFOs (the inside of one transformer block): the chain behaves like
+//!   one stage with `depth = Σ depths` and `ii = max(ii)`.
+//! * [`PipelineModel::sequential`] — stages share hardware (the model top
+//!   level under the resource strategy): latencies add, and the design's
+//!   interval is the total latency of the slowest full pass... more
+//!   precisely the max over stages of their occupancy, which is what
+//!   gates accepting the next event.
+
+/// One pipeline stage.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Stage {
+    pub name: String,
+    /// Cycles from first input to first output (pipeline fill).
+    pub depth: u64,
+    /// Cycles between consecutive outputs (initiation interval per row).
+    pub ii: u64,
+    /// Rows streamed through this stage per event.
+    pub rows: u64,
+}
+
+impl Stage {
+    pub fn new(name: impl Into<String>, depth: u64, ii: u64, rows: u64) -> Self {
+        Self { name: name.into(), depth, ii: ii.max(1), rows: rows.max(1) }
+    }
+
+    /// Cycles to stream all `rows` through this stage in isolation.
+    pub fn latency(&self) -> u64 {
+        self.depth + (self.rows - 1) * self.ii
+    }
+
+    /// Cycles this stage is busy per event (what gates the next event
+    /// when hardware is shared): rows * ii.
+    pub fn occupancy(&self) -> u64 {
+        self.rows * self.ii
+    }
+}
+
+/// A composed pipeline: either a dataflow chain or a sequential schedule.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineModel {
+    stages: Vec<Stage>,
+}
+
+impl PipelineModel {
+    pub fn new(stages: Vec<Stage>) -> Self {
+        Self { stages }
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    pub fn push(&mut self, s: Stage) {
+        self.stages.push(s);
+    }
+
+    /// Dataflow composition: concurrent stages linked by FIFOs.
+    /// Latency = Σ depths + (rows-1)·max(ii); II = max stage occupancy.
+    pub fn dataflow(&self) -> Stage {
+        assert!(!self.stages.is_empty());
+        let depth: u64 = self.stages.iter().map(|s| s.depth).sum();
+        let ii = self.stages.iter().map(|s| s.ii).max().unwrap();
+        let rows = self.stages.iter().map(|s| s.rows).max().unwrap();
+        Stage { name: "dataflow".into(), depth, ii, rows }
+    }
+
+    /// Sequential (resource-shared) composition: the event flows through
+    /// the stages one after another.
+    /// Latency = Σ per-stage latencies; interval = max occupancy
+    /// (re-arm time of the busiest shared engine).
+    pub fn sequential(&self) -> (u64, u64) {
+        let latency: u64 = self.stages.iter().map(|s| s.latency()).sum();
+        let interval: u64 = self.stages.iter().map(|s| s.occupancy()).max().unwrap_or(1);
+        (latency, interval)
+    }
+}
+
+/// `ceil(log2(n))` pipeline depth of an n-input adder tree (>=1).
+pub fn adder_tree_depth(n: u64) -> u64 {
+    (64 - n.max(2).next_power_of_two().leading_zeros() as u64) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn stage_latency_formula() {
+        let s = Stage::new("x", 10, 2, 5);
+        assert_eq!(s.latency(), 10 + 4 * 2);
+        assert_eq!(s.occupancy(), 10);
+    }
+
+    #[test]
+    fn single_row_stage_latency_is_depth() {
+        assert_eq!(Stage::new("x", 7, 3, 1).latency(), 7);
+    }
+
+    #[test]
+    fn dataflow_chain() {
+        let p = PipelineModel::new(vec![
+            Stage::new("a", 3, 1, 10),
+            Stage::new("b", 5, 2, 10),
+            Stage::new("c", 2, 1, 10),
+        ]);
+        let d = p.dataflow();
+        assert_eq!(d.depth, 10);
+        assert_eq!(d.ii, 2);
+        assert_eq!(d.latency(), 10 + 9 * 2);
+    }
+
+    #[test]
+    fn sequential_totals() {
+        let p = PipelineModel::new(vec![
+            Stage::new("a", 3, 1, 10), // lat 12, occ 10
+            Stage::new("b", 5, 2, 10), // lat 23, occ 20
+        ]);
+        let (lat, ii) = p.sequential();
+        assert_eq!(lat, 35);
+        assert_eq!(ii, 20);
+    }
+
+    #[test]
+    fn adder_tree_depths() {
+        assert_eq!(adder_tree_depth(1), 1);
+        assert_eq!(adder_tree_depth(2), 1);
+        assert_eq!(adder_tree_depth(3), 2);
+        assert_eq!(adder_tree_depth(4), 2);
+        assert_eq!(adder_tree_depth(64), 6);
+        assert_eq!(adder_tree_depth(65), 7);
+    }
+
+    #[test]
+    fn prop_latency_monotone_in_everything() {
+        Prop::new("latency monotone").runs(500).check(|g| {
+            let d = g.usize_in(1, 50) as u64;
+            let ii = g.usize_in(1, 8) as u64;
+            let rows = g.usize_in(1, 100) as u64;
+            let s = Stage::new("s", d, ii, rows);
+            assert!(Stage::new("s", d + 1, ii, rows).latency() > s.latency());
+            assert!(Stage::new("s", d, ii + 1, rows).latency() >= s.latency());
+            assert!(Stage::new("s", d, ii, rows + 1).latency() >= s.latency());
+        });
+    }
+
+    #[test]
+    fn prop_dataflow_never_slower_than_sequential() {
+        // holds when every stage streams the same row count — which is
+        // how the transformer blocks use it (all stages see S rows)
+        Prop::new("dataflow <= sequential (equal rows)").runs(500).check(|g| {
+            let rows = g.usize_in(1, 40) as u64;
+            let stages: Vec<Stage> = (0..g.usize_in(1, 6))
+                .map(|i| {
+                    Stage::new(
+                        format!("s{i}"),
+                        g.usize_in(1, 30) as u64,
+                        g.usize_in(1, 6) as u64,
+                        rows,
+                    )
+                })
+                .collect();
+            let p = PipelineModel::new(stages);
+            let (seq_lat, _) = p.sequential();
+            assert!(p.dataflow().latency() <= seq_lat);
+        });
+    }
+}

@@ -1,0 +1,82 @@
+//! Fixed-point global-average pooling + the softmax/sigmoid output heads.
+
+use super::pipeline::{adder_tree_depth, Stage};
+use super::resources::Resources;
+use super::ReuseFactor;
+use crate::fixed::lut::Roms;
+use crate::fixed::FixedSpec;
+use crate::nn::tensor::Mat;
+
+/// Column means, accumulated on the accumulator grid: (S, d) -> (1, d).
+pub fn global_average_pool_fixed(x: &Mat, data: FixedSpec, accum: FixedSpec) -> Mat {
+    let mut out = Mat::zeros(1, x.cols());
+    for c in 0..x.cols() {
+        let mut acc = 0.0f64;
+        for r in 0..x.rows() {
+            acc += x.at(r, c) as f64;
+        }
+        let mean = accum.quantize_f64(acc / x.rows() as f64);
+        *out.at_mut(0, c) = data.quantize(mean as f32);
+    }
+    out
+}
+
+/// Sigmoid through the exp ROM: `1 / (1 + e^{-x})` — reuses the softmax
+/// exp table plus the inversion table, as hls4ml's activation LUTs do.
+pub fn sigmoid_fixed(x: f32, roms: &Roms, data: FixedSpec) -> f32 {
+    let e = roms.exp.lookup(-x);
+    data.quantize(roms.inv.lookup(1.0 + e))
+}
+
+/// Pooling pipeline stage (one adder tree over the sequence).
+pub fn pool_stage(name: &str, rows: usize, r: ReuseFactor) -> Stage {
+    Stage::new(name, adder_tree_depth(rows as u64) + 2, r.get() as u64, rows as u64)
+}
+
+/// Pooling is adder-tree-only: no DSPs (the 1/S multiply is a constant
+/// shift-add), modest fabric.
+pub fn pool_resources(d: usize, data: FixedSpec, r: ReuseFactor) -> Resources {
+    let w = data.width() as u64;
+    let adders = (d as u64).div_ceil(r.get() as u64);
+    Resources::new(0, adders * w, adders * w * 2, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Gen;
+
+    #[test]
+    fn pool_matches_float() {
+        let mut g = Gen::new(1);
+        let x = Mat::from_vec(10, 4, g.normal_vec(40, 1.0));
+        let wide = FixedSpec::new(32, 12);
+        let q = global_average_pool_fixed(&x, wide, wide.accum());
+        let f = crate::nn::layers::global_average_pool(&x);
+        assert!(q.max_abs_diff(&f) < 1e-3);
+    }
+
+    #[test]
+    fn sigmoid_tracks_float() {
+        let roms = Roms::new();
+        let data = FixedSpec::new(18, 8);
+        for x in [-4.0f32, -1.0, 0.0, 0.5, 3.0] {
+            let want = 1.0 / (1.0 + (-x).exp());
+            let got = sigmoid_fixed(x, &roms, data);
+            assert!((got - want).abs() < 0.03, "x={x}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_saturates_sanely() {
+        let roms = Roms::new();
+        let data = FixedSpec::new(18, 8);
+        assert!(sigmoid_fixed(20.0, &roms, data) > 0.9);
+        assert!(sigmoid_fixed(-20.0, &roms, data) < 0.1);
+    }
+
+    #[test]
+    fn pool_has_no_dsps() {
+        assert_eq!(pool_resources(64, FixedSpec::new(16, 6), ReuseFactor(1)).dsp, 0);
+    }
+}

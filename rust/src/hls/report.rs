@@ -1,0 +1,140 @@
+//! Synthesis-style reporting — the stand-in for Vivado's utilization and
+//! timing reports, formatted per design point for the experiment harness.
+
+use super::resources::{Device, Resources};
+use super::transformer::QuantConfig;
+use super::ReuseFactor;
+use std::fmt;
+
+/// Per-layer line of the report.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub depth: u64,
+    pub ii: u64,
+    pub rows: u64,
+    pub latency: u64,
+    pub resources: Resources,
+}
+
+/// One "synthesized" design point (model x precision x reuse).
+#[derive(Clone, Debug)]
+pub struct SynthesisReport {
+    pub model: String,
+    pub quant: QuantConfig,
+    pub reuse: ReuseFactor,
+    pub clk_ns: f64,
+    pub latency_cycles: u64,
+    pub interval_cycles: u64,
+    pub latency_us: f64,
+    pub layers: Vec<LayerReport>,
+    pub total: Resources,
+}
+
+impl SynthesisReport {
+    /// One row in the format of the paper's Tables II-IV.
+    pub fn table_row(&self) -> String {
+        format!(
+            "| {:6} | {:5.3} | {:8} | {:8} | {:6.3} |",
+            self.reuse.to_string(),
+            self.clk_ns,
+            self.interval_cycles,
+            self.latency_cycles,
+            self.latency_us
+        )
+    }
+
+    /// Utilization summary against a device.
+    pub fn utilization_summary(&self, device: &Device) -> String {
+        let mut s = String::new();
+        for (name, frac) in self.total.utilization(device) {
+            s.push_str(&format!("{name}: {:.2}%  ", frac * 100.0));
+        }
+        s
+    }
+}
+
+impl fmt::Display for SynthesisReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "== {} @ {} {} | clk {:.3} ns | II {} cyc | latency {} cyc = {:.3} us",
+            self.model,
+            self.quant.data,
+            self.reuse,
+            self.clk_ns,
+            self.interval_cycles,
+            self.latency_cycles,
+            self.latency_us
+        )?;
+        writeln!(
+            f,
+            "   total: DSP {} FF {} LUT {} BRAM18 {}",
+            self.total.dsp, self.total.ff, self.total.lut, self.total.bram18
+        )?;
+        writeln!(
+            f,
+            "   {:<16} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
+            "layer", "depth", "II", "rows", "latency", "DSP", "FF", "LUT", "BRAM18"
+        )?;
+        for l in &self.layers {
+            writeln!(
+                f,
+                "   {:<16} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
+                l.name, l.depth, l.ii, l.rows, l.latency,
+                l.resources.dsp, l.resources.ff, l.resources.lut, l.resources.bram18
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::resources::VU13P;
+
+    fn sample() -> SynthesisReport {
+        SynthesisReport {
+            model: "engine".into(),
+            quant: QuantConfig::new(6, 8),
+            reuse: ReuseFactor(1),
+            clk_ns: 6.86,
+            latency_cycles: 257,
+            interval_cycles: 119,
+            latency_us: 1.9,
+            layers: vec![LayerReport {
+                name: "embed".into(),
+                depth: 4,
+                ii: 1,
+                rows: 50,
+                latency: 53,
+                resources: Resources::new(16, 100, 200, 0),
+            }],
+            total: Resources::new(16, 100, 200, 0),
+        }
+    }
+
+    #[test]
+    fn table_row_contains_key_numbers() {
+        let row = sample().table_row();
+        assert!(row.contains("R1"));
+        assert!(row.contains("257"));
+        assert!(row.contains("119"));
+    }
+
+    #[test]
+    fn display_renders_layers() {
+        let s = format!("{}", sample());
+        assert!(s.contains("embed"));
+        assert!(s.contains("ap_fixed<14,6>"));
+    }
+
+    #[test]
+    fn utilization_summary_has_all_resources() {
+        let s = sample().utilization_summary(&VU13P);
+        for k in ["DSP", "FF", "LUT", "BRAM18"] {
+            assert!(s.contains(k));
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! FPGA resource accounting: DSP slices, flip-flops, LUTs, BRAM.
+//!
+//! The absolute numbers are an analytic model (we have no Vivado); what
+//! the reproduction commits to is the *trends* of Figures 12-14, encoded
+//! in `calibration.rs` and asserted by `experiments::resource_figures`
+//! tests:
+//!   * FF/LUT ≈ linear in bit width and in 1/R,
+//!   * DSP flat in precision until the multiplier operand exceeds the
+//!     DSP48E2 port width, then doubled,
+//!   * BRAM grows with R (register arrays re-partitioned into BRAM).
+
+use std::iter::Sum;
+use std::ops::{Add, AddAssign};
+
+/// Resource vector for one layer / one design.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Resources {
+    pub dsp: u64,
+    pub ff: u64,
+    pub lut: u64,
+    /// BRAM in 18Kb halves (Vivado reports RAMB18 units).
+    pub bram18: u64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { dsp: 0, ff: 0, lut: 0, bram18: 0 };
+
+    pub fn new(dsp: u64, ff: u64, lut: u64, bram18: u64) -> Self {
+        Self { dsp, ff, lut, bram18 }
+    }
+
+    /// Utilization fractions against a device budget.
+    pub fn utilization(&self, device: &Device) -> [(&'static str, f64); 4] {
+        [
+            ("DSP", self.dsp as f64 / device.dsp as f64),
+            ("FF", self.ff as f64 / device.ff as f64),
+            ("LUT", self.lut as f64 / device.lut as f64),
+            ("BRAM18", self.bram18 as f64 / device.bram18 as f64),
+        ]
+    }
+
+    /// True if the design fits the device.
+    pub fn fits(&self, device: &Device) -> bool {
+        self.dsp <= device.dsp
+            && self.ff <= device.ff
+            && self.lut <= device.lut
+            && self.bram18 <= device.bram18
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            dsp: self.dsp + o.dsp,
+            ff: self.ff + o.ff,
+            lut: self.lut + o.lut,
+            bram18: self.bram18 + o.bram18,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        *self = *self + o;
+    }
+}
+
+impl Sum for Resources {
+    fn sum<I: Iterator<Item = Resources>>(iter: I) -> Resources {
+        iter.fold(Resources::ZERO, |a, b| a + b)
+    }
+}
+
+/// Device budget. The paper's part is the Xilinx VU13P.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub dsp: u64,
+    pub ff: u64,
+    pub lut: u64,
+    pub bram18: u64,
+}
+
+/// Virtex UltraScale+ VU13P (the paper's evaluation part).
+pub const VU13P: Device = Device {
+    name: "xcvu13p",
+    dsp: 12_288,
+    ff: 3_456_000,
+    lut: 1_728_000,
+    bram18: 5_376,
+};
+
+/// DSP48E2 slices needed for one W x W multiply: the 27x18 signed port
+/// accommodates one operand up to 26 bits and one up to 17; past the
+/// smaller port the multiply is decomposed into two slices (the paper:
+/// "an additional DSP is employed" once precision exceeds the DSP input
+/// width).
+pub fn dsp_per_mult(width_bits: u32) -> u64 {
+    if width_bits <= 17 {
+        1
+    } else if width_bits <= 26 {
+        2
+    } else {
+        4
+    }
+}
+
+/// BRAM18 blocks to hold `bits` of ROM/FIFO storage (18Kb each).
+pub fn bram18_for_bits(bits: u64) -> u64 {
+    bits.div_ceil(18 * 1024)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_sum() {
+        let a = Resources::new(1, 10, 100, 2);
+        let b = Resources::new(2, 20, 200, 3);
+        assert_eq!(a + b, Resources::new(3, 30, 300, 5));
+        let s: Resources = [a, b, a].into_iter().sum();
+        assert_eq!(s, Resources::new(4, 40, 400, 7));
+    }
+
+    #[test]
+    fn dsp_threshold_matches_paper_claim() {
+        // flat until the input width is crossed, then doubles
+        assert_eq!(dsp_per_mult(8), 1);
+        assert_eq!(dsp_per_mult(17), 1);
+        assert_eq!(dsp_per_mult(18), 2);
+        assert_eq!(dsp_per_mult(26), 2);
+        assert_eq!(dsp_per_mult(27), 4);
+    }
+
+    #[test]
+    fn bram_rounding() {
+        assert_eq!(bram18_for_bits(0), 0);
+        assert_eq!(bram18_for_bits(1), 1);
+        assert_eq!(bram18_for_bits(18 * 1024), 1);
+        assert_eq!(bram18_for_bits(18 * 1024 + 1), 2);
+    }
+
+    #[test]
+    fn vu13p_fits_check() {
+        assert!(Resources::new(100, 1000, 1000, 10).fits(&VU13P));
+        assert!(!Resources::new(20_000, 0, 0, 0).fits(&VU13P));
+        let u = Resources::new(6144, 0, 0, 0).utilization(&VU13P);
+        assert!((u[0].1 - 0.5).abs() < 1e-9);
+    }
+}

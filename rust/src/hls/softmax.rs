@@ -1,0 +1,278 @@
+//! Fixed-point LUT SoftMax — the paper's restructured O(k) layer (§IV-B).
+//!
+//! Three stages (figure 7): exp ROM per element, one sum + inversion ROM
+//! (held in a register), elementwise multiply.  Compare the old hls4ml
+//! formulation which recomputed the exp-sum per output element — O(k²);
+//! [`softmax_fixed_legacy`] implements it for the ablation bench.
+
+use super::calibration as cal;
+use super::pipeline::{adder_tree_depth, Stage};
+use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
+use super::ReuseFactor;
+use crate::fixed::lut::Roms;
+use crate::fixed::FixedSpec;
+
+/// One row of LUT softmax on the `ap_fixed` grid.
+///
+/// Includes the hls4ml "stable" stage 0 (row-max subtraction, one
+/// comparator tree, still O(k)): our trained checkpoints produce scores
+/// far outside any realistic exp-ROM domain, which the paper's raw
+/// formulation silently saturates into garbage (see DESIGN.md §2).
+/// [`softmax_fixed_legacy`] keeps the raw O(k²) pre-paper baseline and
+/// [`softmax_fixed_raw`] the paper's unshifted O(k) version for the
+/// ablation bench.
+pub fn softmax_fixed_row(
+    row: &mut [f32],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    let qa = crate::fixed::Quantizer::new(accum);
+    let qd = crate::fixed::Quantizer::new(data);
+    // stage 0: comparator tree + subtract (values stay on-grid)
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    // stage 1: exp ROM (outputs quantized to the data grid, as the ROM
+    // words are data-width fixed-point on the FPGA)
+    let mut sum = 0.0f64;
+    for v in row.iter_mut() {
+        *v = qd.q32(roms.exp.lookup(*v - max));
+        sum += *v as f64; // stage 2 accumulates behind stage 1
+    }
+    let sum = qa.q(sum) as f32;
+    let inv = qd.q32(roms.inv.lookup(sum));
+    // stage 3: elementwise multiply
+    for v in row.iter_mut() {
+        *v = qd.q32(*v * inv);
+    }
+}
+
+/// Masked LUT softmax — the paper's §VII future-work feature ("we could
+/// add masking ability to the MHA layer").  In hardware the mask is an
+/// AND gate ahead of the exp ROM: masked lanes contribute zero to the
+/// sum and output zero probability; the max tree only sees live lanes.
+pub fn softmax_fixed_row_masked(
+    row: &mut [f32],
+    mask: &[bool],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    assert_eq!(row.len(), mask.len());
+    let qa = crate::fixed::Quantizer::new(accum);
+    let qd = crate::fixed::Quantizer::new(data);
+    let max = row
+        .iter()
+        .zip(mask)
+        .filter(|(_, &m)| m)
+        .map(|(v, _)| *v)
+        .fold(f32::NEG_INFINITY, f32::max);
+    if max == f32::NEG_INFINITY {
+        // fully-masked row: hardware outputs all zeros
+        row.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    let mut sum = 0.0f64;
+    for (v, &m) in row.iter_mut().zip(mask) {
+        *v = if m { qd.q32(roms.exp.lookup(*v - max)) } else { 0.0 };
+        sum += *v as f64;
+    }
+    let sum = qa.q(sum) as f32;
+    let inv = qd.q32(roms.inv.lookup(sum));
+    for v in row.iter_mut() {
+        *v = qd.q32(*v * inv);
+    }
+}
+
+/// The paper's raw O(k) formulation (§IV-B, no max subtraction) — exact
+/// for in-ROM-range scores, saturates outside.  Ablation only.
+pub fn softmax_fixed_raw(
+    row: &mut [f32],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    for v in row.iter_mut() {
+        *v = data.quantize(roms.exp.lookup(*v));
+    }
+    let mut sum = 0.0f64;
+    for v in row.iter() {
+        sum += *v as f64;
+    }
+    let sum = accum.quantize_f64(sum) as f32;
+    let inv = data.quantize(roms.inv.lookup(sum));
+    for v in row.iter_mut() {
+        *v = data.quantize(*v * inv);
+    }
+}
+
+/// The pre-paper hls4ml softmax: `S_i = (Σ_j e^{z_j - z_i})^{-1}` —
+/// k lookups *per element*, hence O(k²) work.  Kept as the ablation
+/// baseline for the §IV-B comparison bench.
+pub fn softmax_fixed_legacy(
+    row: &mut [f32],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    let orig: Vec<f32> = row.to_vec();
+    for (i, out) in row.iter_mut().enumerate() {
+        let mut sum = 0.0f64;
+        for &zj in &orig {
+            sum += data.quantize(roms.exp.lookup(zj - orig[i])) as f64;
+        }
+        let sum = accum.quantize_f64(sum) as f32;
+        *out = data.quantize(roms.inv.lookup(sum));
+    }
+}
+
+/// Pipeline stage for the 3-stage softmax over `rows` rows of width `k`.
+pub fn softmax_stage(name: &str, rows: usize, k: usize, r: ReuseFactor) -> Stage {
+    Stage::new(
+        name,
+        cal::SOFTMAX_DEPTH_BASE
+            + adder_tree_depth(k as u64)
+            + cal::reuse_depth_growth(k, r) / 2,
+        r.get() as u64,
+        rows as u64,
+    )
+}
+
+/// Resources: two ROMs + k/R multipliers (stage 3) + the adder tree.
+pub fn softmax_resources(k: usize, data: FixedSpec, r: ReuseFactor) -> Resources {
+    let w = data.width() as u64;
+    let concurrent = (k as u64).div_ceil(r.get() as u64);
+    let dsp = concurrent * dsp_per_mult(data.width());
+    let ff = (concurrent as f64 * w as f64 * cal::FF_PER_MULT_BIT) as u64
+        + cal::FF_CTRL_PER_STAGE;
+    let lut = (concurrent as f64 * w as f64 * cal::LUT_PER_MULT_BIT) as u64
+        + cal::LUT_CTRL_PER_STAGE;
+    let rom_bits = (roms_len_exp() + roms_len_inv()) * w;
+    Resources::new(dsp, ff, lut, bram18_for_bits(rom_bits))
+}
+
+fn roms_len_exp() -> u64 {
+    crate::fixed::lut::LutKind::Exp.geometry().2 as u64
+}
+
+fn roms_len_inv() -> u64 {
+    crate::fixed::lut::LutKind::Inv.geometry().2 as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{Gen, Prop};
+
+    fn setup() -> (Roms, FixedSpec, FixedSpec) {
+        let data = FixedSpec::new(18, 8);
+        (Roms::new(), data, data.accum())
+    }
+
+    #[test]
+    fn close_to_exact_softmax() {
+        // high-precision fixed LUT softmax tracks exact float softmax
+        let (roms, data, accum) = setup();
+        let mut g = Gen::new(1);
+        for _ in 0..50 {
+            let mut row = g.normal_vec(16, 1.0);
+            let exact = {
+                let max = row.iter().cloned().fold(f32::MIN, f32::max);
+                let e: Vec<f32> = row.iter().map(|v| (v - max).exp()).collect();
+                let s: f32 = e.iter().sum();
+                e.into_iter().map(|v| v / s).collect::<Vec<_>>()
+            };
+            softmax_fixed_row(&mut row, &roms, data, accum);
+            for (a, b) in row.iter().zip(&exact) {
+                assert!((a - b).abs() < 0.05, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_outputs_nonneg_sum_near_one() {
+        Prop::new("fixed softmax sums ~1").runs(200).check(|g| {
+            let (roms, data, accum) = setup();
+            let k = g.usize_in(8, 64);
+            let mut row = g.normal_vec(k, 1.0);
+            softmax_fixed_row(&mut row, &roms, data, accum);
+            assert!(row.iter().all(|&p| p >= 0.0));
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 0.1, "sum {s} (k={k})");
+        });
+    }
+
+    #[test]
+    fn legacy_agrees_with_new_in_range() {
+        // the paper's restructuring is a refactor, not a semantics change:
+        // for in-ROM-range inputs the two produce similar probabilities
+        let (roms, data, accum) = setup();
+        let mut g = Gen::new(5);
+        let mut a = g.normal_vec(12, 0.8);
+        let mut b = a.clone();
+        softmax_fixed_row(&mut a, &roms, data, accum);
+        softmax_fixed_legacy(&mut b, &roms, data, accum);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 0.05, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn outputs_on_grid() {
+        let (roms, data, accum) = setup();
+        let mut row = vec![0.3, -1.2, 2.0, 0.0];
+        softmax_fixed_row(&mut row, &roms, data, accum);
+        for &v in &row {
+            assert_eq!(v, data.quantize(v));
+        }
+    }
+
+    #[test]
+    fn masked_softmax_zeroes_masked_lanes() {
+        let (roms, data, accum) = setup();
+        let mut g = Gen::new(9);
+        let k = 20;
+        let mut row = g.normal_vec(k, 1.0);
+        let mask: Vec<bool> = (0..k).map(|i| i % 3 != 0).collect();
+        softmax_fixed_row_masked(&mut row, &mask, &roms, data, accum);
+        let mut live_sum = 0.0f32;
+        for (v, &m) in row.iter().zip(&mask) {
+            if m {
+                assert!(*v >= 0.0);
+                live_sum += *v;
+            } else {
+                assert_eq!(*v, 0.0, "masked lane must be zero");
+            }
+        }
+        assert!((live_sum - 1.0).abs() < 0.1, "live mass {live_sum}");
+    }
+
+    #[test]
+    fn masked_softmax_all_masked_is_zero() {
+        let (roms, data, accum) = setup();
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        softmax_fixed_row_masked(&mut row, &[false; 3], &roms, data, accum);
+        assert_eq!(row, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn masked_softmax_full_mask_matches_unmasked() {
+        let (roms, data, accum) = setup();
+        let mut g = Gen::new(10);
+        let a0 = g.normal_vec(16, 1.0);
+        let mut a = a0.clone();
+        let mut b = a0;
+        softmax_fixed_row(&mut a, &roms, data, accum);
+        softmax_fixed_row_masked(&mut b, &[true; 16], &roms, data, accum);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stage_and_resources_shapes() {
+        let s = softmax_stage("sm", 50, 50, ReuseFactor(2));
+        assert_eq!(s.ii, 2);
+        let r1 = softmax_resources(50, FixedSpec::new(16, 6), ReuseFactor(1));
+        let r4 = softmax_resources(50, FixedSpec::new(16, 6), ReuseFactor(4));
+        assert!(r4.dsp < r1.dsp);
+        assert!(r1.bram18 > 0, "ROMs must occupy BRAM");
+    }
+}

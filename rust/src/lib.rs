@@ -1,0 +1,50 @@
+//! # hls4ml-transformer-rs
+//!
+//! Reproduction of *"Low Latency Transformer Inference on FPGAs for Physics
+//! Applications with hls4ml"* (Jiang et al., 2024) as a three-layer
+//! Rust + JAX + Pallas stack.  See `DESIGN.md` for the full system
+//! inventory and `EXPERIMENTS.md` for the paper-vs-measured record.
+//!
+//! Layer map:
+//!
+//! * [`fixed`] — `ap_fixed<W,I>` arithmetic + the LUT ROMs of §IV-B/§IV-C.
+//! * [`hls`] — the Vivado-HLS stand-in: bit-accurate fixed-point
+//!   transformer layers with cycle/resource models (DESIGN.md §6).
+//! * [`nn`] — exact-float reference network (the "Keras output" the
+//!   paper's AUC plots compare against).
+//! * [`models`] — Table-I model zoo, NNW weight loading.
+//! * [`data`] — synthetic stand-ins for FordA / CMS b-tagging / LIGO O3a.
+//! * [`metrics`] — ROC-AUC, accuracy, latency histograms.
+//! * [`quant`] — post-training-quantization sweep engine (Figures 9-11).
+//! * [`runtime`] — PJRT client over the AOT artifacts (`*.hlo.txt`).
+//! * [`coordinator`] — the trigger-style streaming server (L3).
+//! * [`experiments`] — regenerates every table and figure of the paper.
+//! * [`testutil`] — property-test driver (offline proptest stand-in).
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fixed;
+pub mod hls;
+pub mod metrics;
+pub mod models;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod testutil;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the artifact directory: `$REPRO_ARTIFACTS` or `./artifacts`
+/// relative to the crate root (works from `cargo test`/`bench` and the
+/// installed binary alike).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("REPRO_ARTIFACTS") {
+        return p.into();
+    }
+    let mut here = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    here.push("artifacts");
+    here
+}

@@ -1,0 +1,229 @@
+//! `repro` — the CLI of the reproduction.
+//!
+//! Subcommands (one per experiment family + serving):
+//!
+//! ```text
+//! repro table1
+//! repro table-latency     --model engine|btag|gw
+//! repro figure-auc        --model engine|btag|gw [--events N] [--threads T] [--quick]
+//! repro figure-resources  --model engine|btag|gw
+//! repro synth             --model <m> [--reuse R] [--int I] [--frac F]
+//! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B]
+//! repro report            (everything above, in sequence)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use hls4ml_transformer::cli::Args;
+use hls4ml_transformer::coordinator::{
+    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, TriggerServer,
+};
+use hls4ml_transformer::experiments::{
+    artifacts_ready, auc_figures, latency_tables, load_checkpoints, resource_figures, table1,
+};
+use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::models::weights::synthetic_weights;
+use hls4ml_transformer::models::zoo::{zoo, zoo_model};
+use hls4ml_transformer::quant::EvalSet;
+use hls4ml_transformer::{artifacts_dir, models::ModelConfig};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: repro <command> [flags]\n\
+         commands:\n\
+         \x20 table1                              Table I (model specs)\n\
+         \x20 table-latency    --model <m>        Tables II-IV (latency vs reuse)\n\
+         \x20 figure-auc       --model <m>        Figures 9-11 (AUC vs precision)\n\
+         \x20 figure-resources --model <m>        Figures 12-14 (resources)\n\
+         \x20 synth            --model <m>        one synthesis report\n\
+         \x20 serve            --backend <b>      run the trigger server\n\
+         \x20 report                              all experiments in sequence\n\
+         models: engine | btag | gw    backends: float | hls | pjrt"
+    );
+}
+
+fn model_arg(args: &Args) -> Result<ModelConfig> {
+    let name = args.get_or("model", "engine");
+    Ok(zoo_model(name)
+        .with_context(|| format!("unknown model '{name}' (engine|btag|gw)"))?
+        .config)
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "table1" => {
+            args.expect_only(&[]).map_err(anyhow::Error::msg)?;
+            print!("{}", table1::render());
+        }
+        "table-latency" => {
+            args.expect_only(&["model"]).map_err(anyhow::Error::msg)?;
+            let cfg = model_arg(args)?;
+            let weights = weights_or_synthetic(&cfg)?;
+            print!("{}", latency_tables::render(&cfg, &weights));
+        }
+        "figure-auc" => {
+            args.expect_only(&["model", "events", "threads", "quick"])
+                .map_err(anyhow::Error::msg)?;
+            let cfg = model_arg(args)?;
+            let dir = artifacts_dir();
+            if !artifacts_ready(&dir, &cfg.name) {
+                bail!("figure-auc needs artifacts — run `make artifacts` first");
+            }
+            let (ptq, qat) = load_checkpoints(&dir, &cfg)?;
+            let eval = EvalSet::load(&dir, &cfg)?;
+            let events = args.get_parse("events", 256usize).map_err(anyhow::Error::msg)?;
+            let eval = eval.truncate(events);
+            let threads = args
+                .get_parse("threads", default_threads())
+                .map_err(anyhow::Error::msg)?;
+            let (ints, fracs): (Vec<u32>, Vec<u32>) = if args.has("quick") {
+                (vec![6], vec![2, 4, 6, 8, 10])
+            } else {
+                (vec![6, 7, 8, 9, 10], (2..=11).collect())
+            };
+            let results = auc_figures::run_figure(&cfg, &ptq, &qat, &eval, &ints, &fracs, threads);
+            print!("{}", auc_figures::render(&cfg, &results, &fracs));
+        }
+        "figure-resources" => {
+            args.expect_only(&["model", "int"]).map_err(anyhow::Error::msg)?;
+            let cfg = model_arg(args)?;
+            let weights = weights_or_synthetic(&cfg)?;
+            let int_bits = args.get_parse("int", 6u32).map_err(anyhow::Error::msg)?;
+            let fracs: Vec<u32> = (2..=11).collect();
+            let pts = resource_figures::sweep(&cfg, &weights, int_bits, &[1, 2, 4], &fracs);
+            print!("{}", resource_figures::render(&cfg, &pts, &fracs));
+        }
+        "synth" => {
+            args.expect_only(&["model", "reuse", "int", "frac"])
+                .map_err(anyhow::Error::msg)?;
+            let cfg = model_arg(args)?;
+            let weights = weights_or_synthetic(&cfg)?;
+            let reuse = args.get_parse("reuse", 1u32).map_err(anyhow::Error::msg)?;
+            let int_bits = args.get_parse("int", 6u32).map_err(anyhow::Error::msg)?;
+            let frac = args.get_parse("frac", 8u32).map_err(anyhow::Error::msg)?;
+            let t = FixedTransformer::new(cfg, &weights, QuantConfig::new(int_bits, frac));
+            let rep = t.synthesize(ReuseFactor(reuse));
+            print!("{rep}");
+            println!(
+                "   VU13P utilization: {}",
+                rep.utilization_summary(&hls4ml_transformer::hls::resources::VU13P)
+            );
+        }
+        "serve" => {
+            args.expect_only(&["backend", "events", "rate", "batch", "models"])
+                .map_err(anyhow::Error::msg)?;
+            let backend: BackendKind = args
+                .get_or("backend", "float")
+                .parse()
+                .map_err(|e: anyhow::Error| e)?;
+            let events = args.get_parse("events", 5000u64).map_err(anyhow::Error::msg)?;
+            let rate = args.get_parse("rate", 0u64).map_err(anyhow::Error::msg)?;
+            let batch = args.get_parse("batch", 8usize).map_err(anyhow::Error::msg)?;
+            let models: Vec<&'static str> = match args.get_or("models", "engine,btag,gw") {
+                "all" => vec!["engine", "btag", "gw"],
+                list => list
+                    .split(',')
+                    .map(|m| {
+                        zoo_model(m.trim())
+                            .map(|z| Box::leak(z.config.name.into_boxed_str()) as &'static str)
+                            .with_context(|| format!("unknown model '{m}'"))
+                    })
+                    .collect::<Result<_>>()?,
+            };
+            let cfg = ServerConfig {
+                pipelines: models
+                    .into_iter()
+                    .map(|m| {
+                        let mut pc = PipelineConfig::new(m, backend);
+                        pc.batch = BatchPolicy { max_batch: batch, ..Default::default() };
+                        pc
+                    })
+                    .collect(),
+                events_per_source: events,
+                rate_per_source: rate,
+                artifacts_dir: artifacts_dir(),
+            };
+            let report = TriggerServer::run(&cfg)?;
+            print!("{report}");
+        }
+        "report" => {
+            args.expect_only(&["events", "threads"]).map_err(anyhow::Error::msg)?;
+            print!("{}", table1::render());
+            println!();
+            for m in zoo() {
+                let weights = weights_or_synthetic(&m.config)?;
+                print!("{}", latency_tables::render(&m.config, &weights));
+                println!();
+            }
+            let dir = artifacts_dir();
+            let events = args.get_parse("events", 192usize).map_err(anyhow::Error::msg)?;
+            let threads = args
+                .get_parse("threads", default_threads())
+                .map_err(anyhow::Error::msg)?;
+            for m in zoo() {
+                if artifacts_ready(&dir, &m.config.name) {
+                    let (ptq, qat) = load_checkpoints(&dir, &m.config)?;
+                    let eval = EvalSet::load(&dir, &m.config)?.truncate(events);
+                    let fracs: Vec<u32> = (2..=11).collect();
+                    let results = auc_figures::run_figure(
+                        &m.config, &ptq, &qat, &eval, &[6, 8, 10], &fracs, threads,
+                    );
+                    print!("{}", auc_figures::render(&m.config, &results, &fracs));
+                } else {
+                    println!(
+                        "(skipping figure-auc for {}: artifacts missing)",
+                        m.config.name
+                    );
+                }
+                println!();
+                let weights = weights_or_synthetic(&m.config)?;
+                let fracs: Vec<u32> = (2..=11).collect();
+                let pts = resource_figures::sweep(&m.config, &weights, 6, &[1, 2, 4], &fracs);
+                print!("{}", resource_figures::render(&m.config, &pts, &fracs));
+                println!();
+            }
+        }
+        "" => {
+            usage();
+            bail!("missing command");
+        }
+        other => {
+            usage();
+            bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}
+
+/// Artifact weights when available, synthetic otherwise (with a notice —
+/// structural experiments don't depend on the training outcome).
+fn weights_or_synthetic(
+    cfg: &ModelConfig,
+) -> Result<hls4ml_transformer::models::Weights> {
+    let dir = artifacts_dir();
+    if artifacts_ready(&dir, &cfg.name) {
+        let (ptq, _) = load_checkpoints(&dir, cfg)?;
+        Ok(ptq)
+    } else {
+        eprintln!("(note: artifacts missing for {}; using synthetic weights)", cfg.name);
+        Ok(synthetic_weights(cfg, 0xC0FFEE))
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}

@@ -1,0 +1,167 @@
+//! ROC AUC via the Mann-Whitney rank statistic (exact, tie-aware) —
+//! mirrors `python/compile/train.py::binary_auc` so the two stacks score
+//! identically.
+
+/// Exact binary ROC AUC. `labels[i]` is 1 for positives.
+/// Degenerate inputs (single-class) return 0.5, as chance.
+pub fn binary_auc(scores: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    if n == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    // midranks for ties
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    let mut r = 1.0f64;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let mid = (r + r + (j - i) as f64) / 2.0;
+        for &idx in &order[i..=j] {
+            ranks[idx] = mid;
+        }
+        r += (j - i + 1) as f64;
+        i = j + 1;
+    }
+    let n_pos = labels.iter().filter(|&&l| l == 1).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = ranks
+        .iter()
+        .zip(labels)
+        .filter(|(_, &l)| l == 1)
+        .map(|(r, _)| r)
+        .sum();
+    (rank_sum - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+/// Macro one-vs-rest AUC for multi-class probabilities
+/// (`probs[i]` has one probability per class; labels are class indices).
+pub fn macro_auc(probs: &[Vec<f32>], labels: &[u8], num_classes: usize) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    let mut total = 0.0;
+    for c in 0..num_classes {
+        let scores: Vec<f32> = probs.iter().map(|p| p[c]).collect();
+        let bin: Vec<u8> = labels.iter().map(|&l| (l as usize == c) as u8).collect();
+        total += binary_auc(&scores, &bin);
+    }
+    total / num_classes as f64
+}
+
+/// Simple accuracy accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Accuracy {
+    correct: u64,
+    total: u64,
+}
+
+impl Accuracy {
+    pub fn push(&mut self, predicted: usize, truth: usize) {
+        self.correct += (predicted == truth) as u64;
+        self.total += 1;
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn perfect_and_inverted() {
+        assert_eq!(binary_auc(&[0.9, 0.8, 0.2, 0.1], &[1, 1, 0, 0]), 1.0);
+        assert_eq!(binary_auc(&[0.1, 0.2, 0.8, 0.9], &[1, 1, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn all_ties_is_half() {
+        assert_eq!(binary_auc(&[0.5; 6], &[1, 0, 1, 0, 1, 0]), 0.5);
+    }
+
+    #[test]
+    fn degenerate_labels_half() {
+        assert_eq!(binary_auc(&[0.1, 0.9], &[1, 1]), 0.5);
+        assert_eq!(binary_auc(&[], &[]), 0.5);
+    }
+
+    #[test]
+    fn matches_hand_computed_case() {
+        // scores 0.1 0.4 0.35 0.8, labels 0 0 1 1 -> AUC = 0.75
+        let auc = binary_auc(&[0.1, 0.4, 0.35, 0.8], &[0, 0, 1, 1]);
+        assert!((auc - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_auc_in_unit_interval_and_monotone_invariant() {
+        Prop::new("auc bounds + monotone invariance").runs(300).check(|g| {
+            let n = g.usize_in(2, 64);
+            let scores: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let labels: Vec<u8> = (0..n).map(|_| g.bool() as u8).collect();
+            let a = binary_auc(&scores, &labels);
+            assert!((0.0..=1.0).contains(&a));
+            // monotone transform of scores must not change AUC
+            let t: Vec<f32> = scores.iter().map(|&s| s.tanh() * 2.0 + 5.0).collect();
+            let b = binary_auc(&t, &labels);
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        });
+    }
+
+    #[test]
+    fn prop_complement_symmetry() {
+        Prop::new("auc(1-labels) == 1-auc").runs(300).check(|g| {
+            let n = g.usize_in(2, 64);
+            let scores: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 1.0)).collect();
+            let labels: Vec<u8> = (0..n).map(|_| g.bool() as u8).collect();
+            if labels.iter().all(|&l| l == 0) || labels.iter().all(|&l| l == 1) {
+                return;
+            }
+            let a = binary_auc(&scores, &labels);
+            let inv: Vec<u8> = labels.iter().map(|&l| 1 - l).collect();
+            let b = binary_auc(&scores, &inv);
+            assert!((a + b - 1.0).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn macro_auc_perfect_three_class() {
+        let probs = vec![
+            vec![0.8, 0.1, 0.1],
+            vec![0.1, 0.8, 0.1],
+            vec![0.1, 0.1, 0.8],
+            vec![0.7, 0.2, 0.1],
+            vec![0.2, 0.7, 0.1],
+            vec![0.1, 0.2, 0.7],
+        ];
+        let labels = [0u8, 1, 2, 0, 1, 2];
+        assert_eq!(macro_auc(&probs, &labels, 3), 1.0);
+    }
+
+    #[test]
+    fn accuracy_accumulator() {
+        let mut a = Accuracy::default();
+        a.push(1, 1);
+        a.push(0, 1);
+        a.push(2, 2);
+        assert!((a.value() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(a.total(), 3);
+    }
+}

@@ -1,0 +1,180 @@
+//! Log-bucketed latency histogram for the serving path — allocation-free
+//! on the record path (fixed bucket array), p50/p99 by interpolation.
+
+/// Latency histogram over nanosecond samples.
+///
+/// Buckets are log2-spaced from 64 ns to ~1.1 s; recording is O(1) with
+/// no allocation (the coordinator records on its hot path).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; 48],
+    count: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: [0; 48],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(ns: u64) -> usize {
+        // bucket i covers [64 * 2^(i/2 rounding), ...): use leading_zeros
+        let b = 64 - (ns.max(1)).leading_zeros() as usize;
+        b.saturating_sub(6).min(47)
+    }
+
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min_ns }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Approximate quantile (bucket upper-edge interpolation).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                // bucket i spans [2^(i+5), 2^(i+6)) ns (approx; bucket 0
+                // absorbs everything below); clamp into observed range
+                return (1u64 << (i + 6)).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Merge another histogram in (for multi-worker aggregation).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Human summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p99={:.1}us min={:.1}us max={:.1}us",
+            self.count,
+            self.mean_ns() / 1000.0,
+            self.quantile_ns(0.50) as f64 / 1000.0,
+            self.quantile_ns(0.99) as f64 / 1000.0,
+            self.min_ns() as f64 / 1000.0,
+            self.max_ns as f64 / 1000.0,
+        )
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn records_and_counts() {
+        let mut h = LatencyHistogram::new();
+        for ns in [100, 200, 400, 800, 100_000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min_ns(), 100);
+        assert_eq!(h.max_ns(), 100_000);
+        assert!((h.mean_ns() - 20_300.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * 1000);
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p99, "{p50} vs {p99}");
+        assert!(p50 >= 64, "sane lower bound");
+    }
+
+    #[test]
+    fn empty_histogram_is_calm() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(1000);
+        b.record(2000);
+        b.record(3000);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max_ns(), 3000);
+    }
+
+    #[test]
+    fn prop_quantile_within_minmax_envelope() {
+        Prop::new("quantile envelope").runs(200).check(|g| {
+            let mut h = LatencyHistogram::new();
+            let n = g.usize_in(1, 200);
+            for _ in 0..n {
+                h.record(g.usize_in(100, 10_000_000) as u64);
+            }
+            let p50 = h.quantile_ns(0.5);
+            // quantile is a bucket edge: allow one bucket (2x) slack
+            assert!(p50 >= h.min_ns() / 2, "p50 {p50} min {}", h.min_ns());
+            assert!(p50 <= h.max_ns() * 2, "p50 {p50} max {}", h.max_ns());
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation metrics (S7): ROC-AUC (the paper's Figures 9-11 metric),
+//! accuracy, and latency histograms for the serving path.
+
+pub mod auc;
+pub mod histogram;
+
+pub use auc::{binary_auc, macro_auc, Accuracy};
+pub use histogram::LatencyHistogram;

@@ -1,0 +1,134 @@
+//! Transformer model configuration — the Rust twin of
+//! `python/compile/model.py::ModelConfig` (the two are kept in sync by
+//! `zoo.rs` tests against Table I and the exported weight shapes).
+
+use std::fmt;
+
+/// Final classifier nonlinearity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinalActivation {
+    /// Multi-class probability head (engine, b-tagging).
+    Softmax,
+    /// Binary head (gravitational waves).
+    Sigmoid,
+}
+
+/// Hyperparameters of one transformer encoder (paper Table I row + the
+/// head/FFN choices documented in DESIGN.md §5).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub seq_len: usize,
+    pub input_size: usize,
+    pub num_blocks: usize,
+    pub d_model: usize,
+    pub output_size: usize,
+    pub num_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub head_hidden: usize,
+    pub use_layernorm: bool,
+    /// Table I "Trainable Param." for the fidelity assertion.
+    pub paper_params: usize,
+}
+
+impl ModelConfig {
+    pub fn final_activation(&self) -> FinalActivation {
+        if self.output_size == 1 {
+            FinalActivation::Sigmoid
+        } else {
+            FinalActivation::Softmax
+        }
+    }
+
+    /// Trainable parameter count (mirrors `model.param_count`).
+    pub fn param_count(&self) -> usize {
+        let (d, h, k, f) = (self.d_model, self.num_heads, self.head_dim, self.ffn_dim);
+        let embed = self.input_size * d + d;
+        let mha = 3 * h * (d * k + k) + (h * k * d + d);
+        let ffn = (d * f + f) + (f * d + d);
+        let ln = if self.use_layernorm { 4 * d } else { 0 };
+        let blocks = self.num_blocks * (mha + ffn + ln);
+        let head = d * self.head_hidden + self.head_hidden;
+        let out = self.head_hidden * self.output_size + self.output_size;
+        embed + blocks + head + out
+    }
+
+    /// Names + shapes of every weight tensor, in NNW export order.
+    /// This is the schema `weights.rs` validates a file against.
+    pub fn tensor_schema(&self) -> Vec<(String, Vec<usize>)> {
+        let (d, h, k, f) = (self.d_model, self.num_heads, self.head_dim, self.ffn_dim);
+        let mut v: Vec<(String, Vec<usize>)> = Vec::new();
+        v.push(("embed.w".into(), vec![self.input_size, d]));
+        v.push(("embed.b".into(), vec![d]));
+        for b in 0..self.num_blocks {
+            let p = format!("block{b}.");
+            for nm in ["q", "k", "v"] {
+                v.push((format!("{p}mha.w{nm}"), vec![h, d, k]));
+                v.push((format!("{p}mha.b{nm}"), vec![h, k]));
+            }
+            v.push((format!("{p}mha.wo"), vec![h * k, d]));
+            v.push((format!("{p}mha.bo"), vec![d]));
+            if self.use_layernorm {
+                v.push((format!("{p}ln1.gamma"), vec![d]));
+                v.push((format!("{p}ln1.beta"), vec![d]));
+            }
+            v.push((format!("{p}ffn1.w"), vec![d, f]));
+            v.push((format!("{p}ffn1.b"), vec![f]));
+            v.push((format!("{p}ffn2.w"), vec![f, d]));
+            v.push((format!("{p}ffn2.b"), vec![d]));
+            if self.use_layernorm {
+                v.push((format!("{p}ln2.gamma"), vec![d]));
+                v.push((format!("{p}ln2.beta"), vec![d]));
+            }
+        }
+        v.push(("head.w".into(), vec![d, self.head_hidden]));
+        v.push(("head.b".into(), vec![self.head_hidden]));
+        v.push(("out.w".into(), vec![self.head_hidden, self.output_size]));
+        v.push(("out.b".into(), vec![self.output_size]));
+        v
+    }
+}
+
+impl fmt::Display for ModelConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: S={} F={} B={} d={} O={} (h={} k={} ffn={} head={} ln={})",
+            self.name, self.seq_len, self.input_size, self.num_blocks,
+            self.d_model, self.output_size, self.num_heads, self.head_dim,
+            self.ffn_dim, self.head_hidden, self.use_layernorm
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::zoo;
+
+    #[test]
+    fn schema_param_counts_agree() {
+        for m in zoo() {
+            let from_schema: usize = m
+                .config
+                .tensor_schema()
+                .iter()
+                .map(|(_, s)| s.iter().product::<usize>())
+                .sum();
+            assert_eq!(from_schema, m.config.param_count(), "{}", m.config.name);
+        }
+    }
+
+    #[test]
+    fn final_activation_rule() {
+        for m in zoo() {
+            let want = if m.config.output_size == 1 {
+                FinalActivation::Sigmoid
+            } else {
+                FinalActivation::Softmax
+            };
+            assert_eq!(m.config.final_activation(), want);
+        }
+    }
+}

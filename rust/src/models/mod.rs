@@ -1,0 +1,11 @@
+//! Model zoo (Table I), configuration system, and weight loading (S5).
+
+pub mod config;
+pub mod nnw;
+pub mod weights;
+pub mod zoo;
+
+pub use config::ModelConfig;
+pub use nnw::NnwFile;
+pub use weights::Weights;
+pub use zoo::{zoo, zoo_model, ZooModel};

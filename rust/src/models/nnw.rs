@@ -1,0 +1,182 @@
+//! NNW reader — the Rust half of `python/compile/nnw.py`.
+//!
+//! Format (little-endian): magic `NNW1`, u32 tensor count, then per
+//! tensor: u16 name length + utf-8 name, u8 ndim, ndim×u32 dims,
+//! prod(dims)×f32 data.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One named tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// A parsed NNW file: ordered tensors + name index.
+#[derive(Clone, Debug, Default)]
+pub struct NnwFile {
+    tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl NnwFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        Self::read(BufReader::new(f)).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn read(mut r: impl Read) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"NNW1" {
+            bail!("bad magic {magic:?}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        if count > 1_000_000 {
+            bail!("implausible tensor count {count}");
+        }
+        let mut tensors = Vec::with_capacity(count);
+        let mut index = HashMap::with_capacity(count);
+        for t in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name_buf = vec![0u8; name_len];
+            r.read_exact(&mut name_buf)?;
+            let name = String::from_utf8(name_buf).context("tensor name utf-8")?;
+            let mut ndim = [0u8; 1];
+            r.read_exact(&mut ndim)?;
+            let mut shape = Vec::with_capacity(ndim[0] as usize);
+            for _ in 0..ndim[0] {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let n: usize = if shape.is_empty() { 1 } else { shape.iter().product() };
+            if n > 100_000_000 {
+                bail!("tensor '{name}' implausibly large ({n} elems)");
+            }
+            let mut bytes = vec![0u8; 4 * n];
+            r.read_exact(&mut bytes)
+                .with_context(|| format!("tensor '{name}' data (#{t})"))?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            index.insert(name.clone(), tensors.len());
+            tensors.push(Tensor { name, shape, data });
+        }
+        Ok(Self { tensors, index })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.iter().map(|t| t.name.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    /// Get or error with the missing name (for schema-validated loads).
+    pub fn require(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .with_context(|| format!("tensor '{name}' missing from NNW file"))
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes() -> Vec<u8> {
+        // two tensors: "a" shape (2,3) = 0..6, "b" shape (1,) = [9.5]
+        let mut v = Vec::new();
+        v.extend_from_slice(b"NNW1");
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(&1u16.to_le_bytes());
+        v.push(b'a');
+        v.push(2); // ndim
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(&3u32.to_le_bytes());
+        for i in 0..6 {
+            v.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        v.extend_from_slice(&1u16.to_le_bytes());
+        v.push(b'b');
+        v.push(1);
+        v.extend_from_slice(&1u32.to_le_bytes());
+        v.extend_from_slice(&9.5f32.to_le_bytes());
+        v
+    }
+
+    #[test]
+    fn parses_sample() {
+        let f = NnwFile::read(&sample_bytes()[..]).unwrap();
+        assert_eq!(f.len(), 2);
+        let a = f.get("a").unwrap();
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(a.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(f.get("b").unwrap().data, vec![9.5]);
+        assert!(f.get("c").is_none());
+        assert!(f.require("c").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample_bytes();
+        b[0] = b'X';
+        assert!(NnwFile::read(&b[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let b = sample_bytes();
+        assert!(NnwFile::read(&b[..b.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_implausible_count() {
+        let mut v = Vec::new();
+        v.extend_from_slice(b"NNW1");
+        v.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(NnwFile::read(&v[..]).is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! Typed, schema-validated weights for one transformer model.
+//!
+//! Loads an `artifacts/<model>.weights*.nnw` file (written by
+//! `python/compile/aot.py`) against a [`ModelConfig`]'s tensor schema and
+//! exposes the per-layer views both inference backends (nn float / hls
+//! fixed-point) consume.  `quantized()` projects every tensor onto an
+//! `ap_fixed` grid — the PTQ step of the paper (§VI-A).
+
+use anyhow::{ensure, Result};
+
+use super::config::ModelConfig;
+use super::nnw::NnwFile;
+use crate::fixed::FixedSpec;
+use crate::nn::tensor::Mat;
+
+/// Multi-head-attention weights, per-head matrices split out.
+#[derive(Clone, Debug)]
+pub struct MhaWeights {
+    /// Per head: `d_model x head_dim`.
+    pub wq: Vec<Mat>,
+    pub bq: Vec<Vec<f32>>,
+    pub wk: Vec<Mat>,
+    pub bk: Vec<Vec<f32>>,
+    pub wv: Vec<Mat>,
+    pub bv: Vec<Vec<f32>>,
+    /// `(h*k) x d_model` output projection.
+    pub wo: Mat,
+    pub bo: Vec<f32>,
+}
+
+/// LayerNorm affine parameters.
+#[derive(Clone, Debug)]
+pub struct LnWeights {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+/// One transformer block.
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub mha: MhaWeights,
+    pub ln1: Option<LnWeights>,
+    pub ffn1: (Mat, Vec<f32>),
+    pub ffn2: (Mat, Vec<f32>),
+    pub ln2: Option<LnWeights>,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub embed: (Mat, Vec<f32>),
+    pub blocks: Vec<BlockWeights>,
+    pub head: (Mat, Vec<f32>),
+    pub out: (Mat, Vec<f32>),
+}
+
+impl Weights {
+    /// Parse + validate against the config's schema.
+    pub fn from_nnw(cfg: &ModelConfig, file: &NnwFile) -> Result<Self> {
+        for (name, shape) in cfg.tensor_schema() {
+            let t = file.require(&name)?;
+            ensure!(
+                t.shape == shape,
+                "tensor '{name}': shape {:?} != schema {:?}",
+                t.shape,
+                shape
+            );
+        }
+        let mat = |name: &str| -> Result<Mat> {
+            let t = file.require(name)?;
+            ensure!(t.shape.len() == 2, "'{name}' is not a matrix");
+            Ok(Mat::from_vec(t.shape[0], t.shape[1], t.data.clone()))
+        };
+        let vec1 = |name: &str| -> Result<Vec<f32>> {
+            Ok(file.require(name)?.data.clone())
+        };
+        // split an (h, d, k) tensor into h row-major d x k matrices
+        let heads_mat = |name: &str| -> Result<Vec<Mat>> {
+            let t = file.require(name)?;
+            ensure!(t.shape.len() == 3, "'{name}' is not (h,d,k)");
+            let (h, d, k) = (t.shape[0], t.shape[1], t.shape[2]);
+            Ok((0..h)
+                .map(|i| Mat::from_vec(d, k, t.data[i * d * k..(i + 1) * d * k].to_vec()))
+                .collect())
+        };
+        let heads_vec = |name: &str| -> Result<Vec<Vec<f32>>> {
+            let t = file.require(name)?;
+            ensure!(t.shape.len() == 2, "'{name}' is not (h,k)");
+            let (h, k) = (t.shape[0], t.shape[1]);
+            Ok((0..h).map(|i| t.data[i * k..(i + 1) * k].to_vec()).collect())
+        };
+
+        let mut blocks = Vec::with_capacity(cfg.num_blocks);
+        for b in 0..cfg.num_blocks {
+            let p = format!("block{b}.");
+            let ln = |which: &str| -> Result<Option<LnWeights>> {
+                if cfg.use_layernorm {
+                    Ok(Some(LnWeights {
+                        gamma: vec1(&format!("{p}{which}.gamma"))?,
+                        beta: vec1(&format!("{p}{which}.beta"))?,
+                    }))
+                } else {
+                    Ok(None)
+                }
+            };
+            blocks.push(BlockWeights {
+                mha: MhaWeights {
+                    wq: heads_mat(&format!("{p}mha.wq"))?,
+                    bq: heads_vec(&format!("{p}mha.bq"))?,
+                    wk: heads_mat(&format!("{p}mha.wk"))?,
+                    bk: heads_vec(&format!("{p}mha.bk"))?,
+                    wv: heads_mat(&format!("{p}mha.wv"))?,
+                    bv: heads_vec(&format!("{p}mha.bv"))?,
+                    wo: mat(&format!("{p}mha.wo"))?,
+                    bo: vec1(&format!("{p}mha.bo"))?,
+                },
+                ln1: ln("ln1")?,
+                ffn1: (mat(&format!("{p}ffn1.w"))?, vec1(&format!("{p}ffn1.b"))?),
+                ffn2: (mat(&format!("{p}ffn2.w"))?, vec1(&format!("{p}ffn2.b"))?),
+                ln2: ln("ln2")?,
+            });
+        }
+        Ok(Self {
+            embed: (mat("embed.w")?, vec1("embed.b")?),
+            blocks,
+            head: (mat("head.w")?, vec1("head.b")?),
+            out: (mat("out.w")?, vec1("out.b")?),
+        })
+    }
+
+    /// PTQ: project every weight onto the `ap_fixed` grid.
+    pub fn quantized(&self, spec: FixedSpec) -> Weights {
+        let qm = |m: &Mat| m.map(|x| spec.quantize(x));
+        let qv = |v: &[f32]| v.iter().map(|&x| spec.quantize(x)).collect::<Vec<_>>();
+        Weights {
+            embed: (qm(&self.embed.0), qv(&self.embed.1)),
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| BlockWeights {
+                    mha: MhaWeights {
+                        wq: b.mha.wq.iter().map(&qm).collect(),
+                        bq: b.mha.bq.iter().map(|v| qv(v)).collect(),
+                        wk: b.mha.wk.iter().map(&qm).collect(),
+                        bk: b.mha.bk.iter().map(|v| qv(v)).collect(),
+                        wv: b.mha.wv.iter().map(&qm).collect(),
+                        bv: b.mha.bv.iter().map(|v| qv(v)).collect(),
+                        wo: qm(&b.mha.wo),
+                        bo: qv(&b.mha.bo),
+                    },
+                    ln1: b.ln1.as_ref().map(|l| LnWeights {
+                        gamma: qv(&l.gamma),
+                        beta: qv(&l.beta),
+                    }),
+                    ffn1: (qm(&b.ffn1.0), qv(&b.ffn1.1)),
+                    ffn2: (qm(&b.ffn2.0), qv(&b.ffn2.1)),
+                    ln2: b.ln2.as_ref().map(|l| LnWeights {
+                        gamma: qv(&l.gamma),
+                        beta: qv(&l.beta),
+                    }),
+                })
+                .collect(),
+            head: (qm(&self.head.0), qv(&self.head.1)),
+            out: (qm(&self.out.0), qv(&self.out.1)),
+        }
+    }
+
+    /// Total scalar parameter count (validation vs `cfg.param_count`).
+    pub fn param_count(&self) -> usize {
+        let mc = |m: &Mat| m.rows() * m.cols();
+        let mut n = mc(&self.embed.0) + self.embed.1.len();
+        for b in &self.blocks {
+            for h in 0..b.mha.wq.len() {
+                n += mc(&b.mha.wq[h]) + b.mha.bq[h].len();
+                n += mc(&b.mha.wk[h]) + b.mha.bk[h].len();
+                n += mc(&b.mha.wv[h]) + b.mha.bv[h].len();
+            }
+            n += mc(&b.mha.wo) + b.mha.bo.len();
+            if let Some(l) = &b.ln1 {
+                n += l.gamma.len() + l.beta.len();
+            }
+            n += mc(&b.ffn1.0) + b.ffn1.1.len();
+            n += mc(&b.ffn2.0) + b.ffn2.1.len();
+            if let Some(l) = &b.ln2 {
+                n += l.gamma.len() + l.beta.len();
+            }
+        }
+        n + mc(&self.head.0) + self.head.1.len() + mc(&self.out.0) + self.out.1.len()
+    }
+}
+
+/// Deterministic random weights for tests that must not depend on
+/// artifacts (Glorot-ish scale).
+pub fn synthetic_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    use crate::testutil::XorShift;
+    let mut rng = XorShift::new(seed);
+    let mut mk_mat = |r: usize, c: usize| {
+        let limit = (6.0 / (r + c) as f64).sqrt();
+        Mat::from_vec(
+            r,
+            c,
+            (0..r * c).map(|_| rng.uniform(-limit, limit) as f32).collect(),
+        )
+    };
+    let h = cfg.num_heads;
+    let (d, k, f) = (cfg.d_model, cfg.head_dim, cfg.ffn_dim);
+    let mut blocks = Vec::new();
+    for _ in 0..cfg.num_blocks {
+        let ln = |_: ()| Some(LnWeights { gamma: vec![1.0; d], beta: vec![0.0; d] });
+        blocks.push(BlockWeights {
+            mha: MhaWeights {
+                wq: (0..h).map(|_| mk_mat(d, k)).collect(),
+                bq: vec![vec![0.0; k]; h],
+                wk: (0..h).map(|_| mk_mat(d, k)).collect(),
+                bk: vec![vec![0.0; k]; h],
+                wv: (0..h).map(|_| mk_mat(d, k)).collect(),
+                bv: vec![vec![0.0; k]; h],
+                wo: mk_mat(h * k, d),
+                bo: vec![0.0; d],
+            },
+            ln1: if cfg.use_layernorm { ln(()) } else { None },
+            ffn1: (mk_mat(d, f), vec![0.0; f]),
+            ffn2: (mk_mat(f, d), vec![0.0; d]),
+            ln2: if cfg.use_layernorm { ln(()) } else { None },
+        });
+    }
+    Weights {
+        embed: (mk_mat(cfg.input_size, d), vec![0.0; d]),
+        blocks,
+        head: (mk_mat(d, cfg.head_hidden), vec![0.0; cfg.head_hidden]),
+        out: (mk_mat(cfg.head_hidden, cfg.output_size), vec![0.0; cfg.output_size]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::zoo;
+
+    #[test]
+    fn synthetic_weights_match_schema_count() {
+        for m in zoo() {
+            let w = synthetic_weights(&m.config, 1);
+            assert_eq!(w.param_count(), m.config.param_count(), "{}", m.config.name);
+        }
+    }
+
+    #[test]
+    fn quantized_weights_on_grid() {
+        let cfg = &zoo()[0].config;
+        let w = synthetic_weights(cfg, 2);
+        let spec = FixedSpec::new(8, 3);
+        let q = w.quantized(spec);
+        for m in [&q.embed.0, &q.head.0, &q.out.0] {
+            for &x in m.data() {
+                assert_eq!(x, spec.quantize(x), "not on grid: {x}");
+            }
+        }
+        // quantization must be a real projection (some values move)
+        assert!(w.embed.0.max_abs_diff(&q.embed.0) > 0.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! The three benchmark models of Table I, with the head/FFN choices that
+//! land the parameter counts within 0.5% of the published numbers
+//! (DESIGN.md §5 explains the choice procedure).
+
+use super::config::ModelConfig;
+
+/// A zoo entry: config + artifact file stems.
+#[derive(Clone, Debug)]
+pub struct ZooModel {
+    pub config: ModelConfig,
+}
+
+impl ZooModel {
+    pub fn weights_file(&self, qat: bool) -> String {
+        if qat {
+            format!("{}.weights_qat.nnw", self.config.name)
+        } else {
+            format!("{}.weights.nnw", self.config.name)
+        }
+    }
+
+    pub fn eval_file(&self) -> String {
+        format!("{}.eval.nnw", self.config.name)
+    }
+
+    pub fn hlo_file(&self, batch: usize) -> String {
+        format!("{}.b{batch}.hlo.txt", self.config.name)
+    }
+}
+
+/// All Table-I models, in paper order.
+pub fn zoo() -> Vec<ZooModel> {
+    vec![
+        ZooModel {
+            config: ModelConfig {
+                name: "engine".into(),
+                seq_len: 50,
+                input_size: 1,
+                num_blocks: 3,
+                d_model: 16,
+                output_size: 2,
+                num_heads: 2,
+                head_dim: 4,
+                ffn_dim: 12,
+                head_hidden: 16,
+                use_layernorm: false, // paper §V-A: foregone for simplicity
+                paper_params: 3244,
+            },
+        },
+        ZooModel {
+            config: ModelConfig {
+                name: "btag".into(),
+                seq_len: 15,
+                input_size: 6,
+                num_blocks: 3,
+                d_model: 64,
+                output_size: 3,
+                num_heads: 4,
+                head_dim: 2,
+                ffn_dim: 2,
+                head_hidden: 8,
+                use_layernorm: true,
+                paper_params: 9135,
+            },
+        },
+        ZooModel {
+            config: ModelConfig {
+                name: "gw".into(),
+                seq_len: 100,
+                input_size: 2,
+                num_blocks: 2,
+                d_model: 32,
+                output_size: 1,
+                num_heads: 2,
+                head_dim: 2,
+                ffn_dim: 4,
+                head_hidden: 40,
+                use_layernorm: true, // paper §V-C: incorporates layer norm
+                paper_params: 3394,
+            },
+        },
+    ]
+}
+
+/// Look up one zoo model by name.
+pub fn zoo_model(name: &str) -> Option<ZooModel> {
+    zoo().into_iter().find(|m| m.config.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_param_counts_match_table1_within_half_percent() {
+        for m in zoo() {
+            let pc = m.config.param_count();
+            let paper = m.config.paper_params;
+            let delta = (pc as f64 - paper as f64).abs() / paper as f64;
+            assert!(delta < 0.005, "{}: {} vs paper {}", m.config.name, pc, paper);
+        }
+    }
+
+    #[test]
+    fn zoo_table1_published_columns() {
+        let want = [
+            ("engine", 50, 1, 3, 16, 2),
+            ("btag", 15, 6, 3, 64, 3),
+            ("gw", 100, 2, 2, 32, 1),
+        ];
+        let z = zoo();
+        assert_eq!(z.len(), want.len());
+        for (m, (n, s, f, b, d, o)) in z.iter().zip(want) {
+            let c = &m.config;
+            assert_eq!(
+                (c.name.as_str(), c.seq_len, c.input_size, c.num_blocks, c.d_model, c.output_size),
+                (n, s, f, b, d, o)
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(zoo_model("gw").is_some());
+        assert!(zoo_model("nope").is_none());
+    }
+
+    #[test]
+    fn artifact_names() {
+        let m = zoo_model("engine").unwrap();
+        assert_eq!(m.weights_file(false), "engine.weights.nnw");
+        assert_eq!(m.weights_file(true), "engine.weights_qat.nnw");
+        assert_eq!(m.hlo_file(8), "engine.b8.hlo.txt");
+    }
+}

@@ -1,0 +1,209 @@
+//! Exact-float layer primitives (dense / softmax / layernorm / MHA).
+
+use super::tensor::{dot, Mat};
+use crate::models::weights::MhaWeights;
+
+/// Activation functions used by the zoo.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Linear,
+    Relu,
+    Sigmoid,
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::Linear => x,
+            Activation::Relu => x.max(0.0),
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        }
+    }
+}
+
+/// `y = act(x @ w + b)` — x: (rows, in), w: (in, out), b: (out).
+pub fn dense(x: &Mat, w: &Mat, b: &[f32], act: Activation) -> Mat {
+    assert_eq!(x.cols(), w.rows());
+    assert_eq!(w.cols(), b.len());
+    let mut y = x.matmul(w);
+    for r in 0..y.rows() {
+        let row = y.row_mut(r);
+        for (v, &bias) in row.iter_mut().zip(b) {
+            *v = act.apply(*v + bias);
+        }
+    }
+    y
+}
+
+/// Numerically-stable softmax over each row.
+pub fn softmax_rows(x: &Mat) -> Mat {
+    let mut out = x.clone();
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Layer normalization over each row (biased variance, like hls4ml).
+pub fn layernorm_rows(x: &Mat, gamma: &[f32], beta: &[f32]) -> Mat {
+    assert_eq!(x.cols(), gamma.len());
+    assert_eq!(x.cols(), beta.len());
+    let k = x.cols() as f32;
+    let mut out = x.clone();
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let mean = row.iter().sum::<f32>() / k;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / k;
+        let inv = 1.0 / var.sqrt().max(1e-12);
+        for (v, (&g, &b)) in row.iter_mut().zip(gamma.iter().zip(beta)) {
+            *v = (*v - mean) * inv * g + b;
+        }
+    }
+    out
+}
+
+/// One attention head: exact eq. (4) of the paper.
+pub fn attention_head(x: &Mat, wq: &Mat, bq: &[f32], wk: &Mat, bk: &[f32],
+                      wv: &Mat, bv: &[f32]) -> Mat {
+    let q = dense(x, wq, bq, Activation::Linear);
+    let k = dense(x, wk, bk, Activation::Linear);
+    let v = dense(x, wv, bv, Activation::Linear);
+    let scale = 1.0 / (q.cols() as f32).sqrt();
+    // scores = q @ k^T * scale
+    let mut scores = Mat::zeros(q.rows(), k.rows());
+    for i in 0..q.rows() {
+        for j in 0..k.rows() {
+            *scores.at_mut(i, j) = dot(q.row(i), k.row(j)) * scale;
+        }
+    }
+    softmax_rows(&scores).matmul(&v)
+}
+
+/// Full multi-head attention: heads -> concat -> output projection.
+pub fn mha(x: &Mat, w: &MhaWeights) -> Mat {
+    let heads: Vec<Mat> = (0..w.wq.len())
+        .map(|h| {
+            attention_head(x, &w.wq[h], &w.bq[h], &w.wk[h], &w.bk[h], &w.wv[h], &w.bv[h])
+        })
+        .collect();
+    // concat along columns (paper stage 4), then project
+    let k = heads[0].cols();
+    let mut concat = Mat::zeros(x.rows(), heads.len() * k);
+    for (h, head) in heads.iter().enumerate() {
+        for r in 0..head.rows() {
+            concat.row_mut(r)[h * k..(h + 1) * k].copy_from_slice(head.row(r));
+        }
+    }
+    dense(&concat, &w.wo, &w.bo, Activation::Linear)
+}
+
+/// Column-wise mean over the sequence: (S, d) -> (1, d).
+pub fn global_average_pool(x: &Mat) -> Mat {
+    let mut out = Mat::zeros(1, x.cols());
+    for r in 0..x.rows() {
+        for (o, &v) in out.row_mut(0).iter_mut().zip(x.row(r)) {
+            *o += v;
+        }
+    }
+    let n = x.rows() as f32;
+    for o in out.row_mut(0) {
+        *o /= n;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{Gen, Prop};
+
+    fn rand_mat(g: &mut Gen, r: usize, c: usize, s: f32) -> Mat {
+        Mat::from_vec(r, c, g.normal_vec(r * c, s))
+    }
+
+    #[test]
+    fn dense_known_values() {
+        let x = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let w = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let y = dense(&x, &w, &[10.0, -10.0], Activation::Relu);
+        assert_eq!(y.data(), &[11.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        Prop::new("softmax rows sum 1").runs(300).check(|g| {
+            let (r, c) = (g.usize_in(1, 8), g.usize_in(2, 20));
+            let m = rand_mat(g, r, c, 3.0);
+            let s = softmax_rows(&m);
+            for r in 0..s.rows() {
+                let sum: f32 = s.row(r).iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5);
+                assert!(s.row(r).iter().all(|&p| p >= 0.0));
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        let a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![101.0, 102.0, 103.0]);
+        assert!(softmax_rows(&a).max_abs_diff(&softmax_rows(&b)) < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        Prop::new("layernorm mean0 var1").runs(300).check(|g| {
+            let k = g.usize_in(4, 32);
+            let rows = g.usize_in(1, 6);
+            let m = rand_mat(g, rows, k, 2.0);
+            let out = layernorm_rows(&m, &vec![1.0; k], &vec![0.0; k]);
+            for r in 0..out.rows() {
+                let mean: f32 = out.row(r).iter().sum::<f32>() / k as f32;
+                let var: f32 =
+                    out.row(r).iter().map(|v| (v - mean).powi(2)).sum::<f32>() / k as f32;
+                assert!(mean.abs() < 1e-4, "mean {mean}");
+                assert!((var - 1.0).abs() < 1e-3, "var {var}");
+            }
+        });
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // with V = identity-ish inputs, outputs stay within V's row range
+        let mut g = Gen::new(3);
+        let x = rand_mat(&mut g, 6, 4, 1.0);
+        let eye = |n: usize| {
+            let mut m = Mat::zeros(n, n);
+            for i in 0..n {
+                *m.at_mut(i, i) = 1.0;
+            }
+            m
+        };
+        let out = attention_head(&x, &eye(4), &[0.0; 4], &eye(4), &[0.0; 4],
+                                 &eye(4), &[0.0; 4]);
+        let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+        for &v in x.data() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        for &v in out.data() {
+            assert!(v >= lo - 1e-5 && v <= hi + 1e-5);
+        }
+    }
+
+    #[test]
+    fn gap_of_constant_rows_is_identity() {
+        let m = Mat::from_vec(3, 2, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        assert_eq!(global_average_pool(&m).data(), &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Float reference network (S4) — the "Keras output" of the paper's AUC
+//! ratio plots.  Exact f32 math, no LUTs, no quantization; the HLS
+//! simulator ([`crate::hls`]) is validated against this module, and the
+//! AUC sweep (Figures 9-11) compares the two.
+
+pub mod layers;
+pub mod tensor;
+pub mod transformer;
+
+pub use tensor::Mat;
+pub use transformer::FloatTransformer;

@@ -1,0 +1,149 @@
+//! Float transformer forward pass — mirrors `python/compile/model.py`
+//! exactly (integration tests compare against the jax `logits_exact`
+//! tensors exported to `artifacts/<m>.eval.nnw`).
+
+use super::layers::{
+    dense, global_average_pool, layernorm_rows, mha, Activation,
+};
+use super::tensor::Mat;
+use crate::models::config::{FinalActivation, ModelConfig};
+use crate::models::weights::Weights;
+
+/// Exact-float inference engine for one zoo model.
+#[derive(Clone, Debug)]
+pub struct FloatTransformer {
+    cfg: ModelConfig,
+    weights: Weights,
+}
+
+impl FloatTransformer {
+    pub fn new(cfg: ModelConfig, weights: Weights) -> Self {
+        Self { cfg, weights }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn weights(&self) -> &Weights {
+        &self.weights
+    }
+
+    /// Forward one event `(seq_len, input_size)` -> logits `(output_size)`.
+    pub fn forward(&self, x: &Mat) -> Vec<f32> {
+        assert_eq!(x.rows(), self.cfg.seq_len, "bad seq len");
+        assert_eq!(x.cols(), self.cfg.input_size, "bad input size");
+        let w = &self.weights;
+        let mut h = dense(x, &w.embed.0, &w.embed.1, Activation::Linear);
+        for b in &w.blocks {
+            let attn = mha(&h, &b.mha);
+            h = h.add(&attn); // residual
+            if let Some(ln) = &b.ln1 {
+                h = layernorm_rows(&h, &ln.gamma, &ln.beta);
+            }
+            let y = dense(&h, &b.ffn1.0, &b.ffn1.1, Activation::Relu);
+            let y = dense(&y, &b.ffn2.0, &b.ffn2.1, Activation::Linear);
+            h = h.add(&y); // residual
+            if let Some(ln) = &b.ln2 {
+                h = layernorm_rows(&h, &ln.gamma, &ln.beta);
+            }
+        }
+        let pooled = global_average_pool(&h);
+        let hid = dense(&pooled, &w.head.0, &w.head.1, Activation::Relu);
+        let logits = dense(&hid, &w.out.0, &w.out.1, Activation::Linear);
+        logits.row(0).to_vec()
+    }
+
+    /// Logits -> probabilities per the model's head.
+    pub fn probs(&self, logits: &[f32]) -> Vec<f32> {
+        match self.cfg.final_activation() {
+            FinalActivation::Sigmoid => {
+                logits.iter().map(|&z| 1.0 / (1.0 + (-z).exp())).collect()
+            }
+            FinalActivation::Softmax => {
+                let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let e: Vec<f32> = logits.iter().map(|&z| (z - max).exp()).collect();
+                let s: f32 = e.iter().sum();
+                e.into_iter().map(|v| v / s).collect()
+            }
+        }
+    }
+
+    /// Scalar anomaly/positive-class score used by the AUC machinery:
+    /// sigmoid prob for binary-sigmoid heads, prob of class 1 for
+    /// softmax heads (class "anomalous"/"signal" by dataset convention).
+    pub fn score(&self, logits: &[f32]) -> f32 {
+        let p = self.probs(logits);
+        match self.cfg.final_activation() {
+            FinalActivation::Sigmoid => p[0],
+            FinalActivation::Softmax => p[1.min(p.len() - 1)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::weights::synthetic_weights;
+    use crate::models::zoo::zoo;
+    use crate::testutil::Gen;
+
+    #[test]
+    fn forward_shapes_all_zoo_models() {
+        for m in zoo() {
+            let w = synthetic_weights(&m.config, 7);
+            let t = FloatTransformer::new(m.config.clone(), w);
+            let mut g = Gen::new(1);
+            let x = Mat::from_vec(
+                m.config.seq_len,
+                m.config.input_size,
+                g.normal_vec(m.config.seq_len * m.config.input_size, 1.0),
+            );
+            let logits = t.forward(&x);
+            assert_eq!(logits.len(), m.config.output_size);
+            assert!(logits.iter().all(|v| v.is_finite()));
+            let p = t.probs(&logits);
+            assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            if m.config.output_size > 1 {
+                let s: f32 = p.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn forward_rejects_bad_shape() {
+        let m = &zoo()[0];
+        let t = FloatTransformer::new(m.config.clone(), synthetic_weights(&m.config, 1));
+        t.forward(&Mat::zeros(3, 3));
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let m = &zoo()[1];
+        let t = FloatTransformer::new(m.config.clone(), synthetic_weights(&m.config, 9));
+        let mut g = Gen::new(2);
+        let x = Mat::from_vec(
+            m.config.seq_len,
+            m.config.input_size,
+            g.normal_vec(m.config.seq_len * m.config.input_size, 1.0),
+        );
+        assert_eq!(t.forward(&x), t.forward(&x));
+    }
+
+    #[test]
+    fn score_in_unit_interval() {
+        for m in zoo() {
+            let t = FloatTransformer::new(m.config.clone(), synthetic_weights(&m.config, 3));
+            let mut g = Gen::new(4);
+            let x = Mat::from_vec(
+                m.config.seq_len,
+                m.config.input_size,
+                g.normal_vec(m.config.seq_len * m.config.input_size, 1.0),
+            );
+            let s = t.score(&t.forward(&x));
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+}

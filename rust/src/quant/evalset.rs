@@ -1,0 +1,158 @@
+//! Held-out evaluation tensors, loaded from `artifacts/<m>.eval.nnw`.
+//!
+//! Python exports the exact events its Keras-equivalent model was scored
+//! on, plus the float logits from both math paths; scoring the *same*
+//! events in Rust is what makes the AUC-ratio plots (Figures 9-11)
+//! cross-layer comparable instead of comparing different random data.
+
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+use crate::models::config::{FinalActivation, ModelConfig};
+use crate::models::nnw::NnwFile;
+use crate::nn::tensor::Mat;
+
+/// Eval split with precomputed float-reference scores.
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub events: Vec<Mat>,
+    pub labels: Vec<u8>,
+    /// Exact-float (Keras-semantics) probabilities per event, from the
+    /// jax `logits_exact` export.
+    pub float_probs: Vec<Vec<f32>>,
+    /// LUT-math float probabilities (the PJRT artifact's semantics).
+    pub lut_probs: Vec<Vec<f32>>,
+    pub num_classes: usize,
+}
+
+impl EvalSet {
+    /// Load from the artifact directory for one zoo config.
+    pub fn load(dir: &Path, cfg: &ModelConfig) -> Result<Self> {
+        let path = dir.join(format!("{}.eval.nnw", cfg.name));
+        let file = NnwFile::load(&path)?;
+        Self::from_nnw(&file, cfg).with_context(|| format!("eval set {}", path.display()))
+    }
+
+    pub fn from_nnw(file: &NnwFile, cfg: &ModelConfig) -> Result<Self> {
+        let x = file.require("x")?;
+        let y = file.require("y")?;
+        let exact = file.require("logits_exact")?;
+        let lut = file.require("logits_lut")?;
+        let n = x.shape[0];
+        ensure!(y.shape == vec![n], "label count mismatch");
+        ensure!(
+            x.shape[1] == cfg.seq_len * cfg.input_size,
+            "event width {} != SxF {}",
+            x.shape[1],
+            cfg.seq_len * cfg.input_size
+        );
+        ensure!(exact.shape == vec![n, cfg.output_size]);
+        let events: Vec<Mat> = (0..n)
+            .map(|i| {
+                let w = cfg.seq_len * cfg.input_size;
+                Mat::from_vec(cfg.seq_len, cfg.input_size, x.data[i * w..(i + 1) * w].to_vec())
+            })
+            .collect();
+        let labels: Vec<u8> = y.data.iter().map(|&v| v as u8).collect();
+        let to_probs = |logits: &[f32]| -> Vec<f32> {
+            match cfg.final_activation() {
+                FinalActivation::Sigmoid => {
+                    logits.iter().map(|&z| 1.0 / (1.0 + (-z).exp())).collect()
+                }
+                FinalActivation::Softmax => {
+                    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let e: Vec<f32> = logits.iter().map(|&z| (z - max).exp()).collect();
+                    let s: f32 = e.iter().sum();
+                    e.into_iter().map(|v| v / s).collect()
+                }
+            }
+        };
+        let o = cfg.output_size;
+        let float_probs = (0..n).map(|i| to_probs(&exact.data[i * o..(i + 1) * o])).collect();
+        let lut_probs = (0..n).map(|i| to_probs(&lut.data[i * o..(i + 1) * o])).collect();
+        Ok(Self {
+            events,
+            labels,
+            float_probs,
+            lut_probs,
+            num_classes: cfg.output_size.max(2),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Truncated copy (cheap sweeps / tests).
+    pub fn truncate(&self, n: usize) -> EvalSet {
+        EvalSet {
+            events: self.events.iter().take(n).cloned().collect(),
+            labels: self.labels.iter().take(n).copied().collect(),
+            float_probs: self.float_probs.iter().take(n).cloned().collect(),
+            lut_probs: self.lut_probs.iter().take(n).cloned().collect(),
+            num_classes: self.num_classes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::zoo_model;
+
+    /// Build a tiny synthetic NNW so the parser is tested without
+    /// artifacts (the real round-trip lives in rust/tests/).
+    fn fake_nnw(cfg: &ModelConfig, n: usize) -> NnwFile {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"NNW1");
+        bytes.extend_from_slice(&4u32.to_le_bytes());
+        let mut put = |name: &str, shape: &[usize], data: &[f32]| {
+            bytes.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            bytes.extend_from_slice(name.as_bytes());
+            bytes.push(shape.len() as u8);
+            for &d in shape {
+                bytes.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        };
+        let w = cfg.seq_len * cfg.input_size;
+        put("x", &[n, w], &vec![0.25; n * w]);
+        put("y", &[n], &(0..n).map(|i| (i % 2) as f32).collect::<Vec<_>>());
+        put("logits_exact", &[n, cfg.output_size], &vec![0.5; n * cfg.output_size]);
+        put("logits_lut", &[n, cfg.output_size], &vec![0.4; n * cfg.output_size]);
+        NnwFile::read(&bytes[..]).unwrap()
+    }
+
+    #[test]
+    fn parses_and_shapes() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let es = EvalSet::from_nnw(&fake_nnw(&cfg, 6), &cfg).unwrap();
+        assert_eq!(es.len(), 6);
+        assert_eq!(es.events[0].rows(), cfg.seq_len);
+        assert_eq!(es.float_probs[0].len(), cfg.output_size);
+        let s: f32 = es.float_probs[0].iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncate_limits() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let es = EvalSet::from_nnw(&fake_nnw(&cfg, 6), &cfg).unwrap();
+        assert_eq!(es.truncate(2).len(), 2);
+        assert_eq!(es.truncate(99).len(), 6);
+    }
+
+    #[test]
+    fn sigmoid_head_probs() {
+        let cfg = zoo_model("gw").unwrap().config;
+        let es = EvalSet::from_nnw(&fake_nnw(&cfg, 4), &cfg).unwrap();
+        // sigmoid(0.5) ~ 0.622
+        assert!((es.float_probs[0][0] - 0.6224593).abs() < 1e-5);
+    }
+}

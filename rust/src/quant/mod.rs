@@ -1,0 +1,8 @@
+//! Post-training-quantization machinery + the precision sweep engine
+//! behind Figures 9-11 (S8).
+
+pub mod evalset;
+pub mod sweep;
+
+pub use evalset::EvalSet;
+pub use sweep::{run_sweep, score_point, SweepPoint, SweepResult};

@@ -1,0 +1,223 @@
+//! The precision sweep behind Figures 9-11: for each (integer bits,
+//! fractional bits, PTQ/QAT) design point, run the full fixed-point model
+//! over the eval set and compare against the float reference.
+//!
+//! The paper's y-axis is the "AUC ratio": AUC of the hls4ml (here:
+//! HLS-simulator) model relative to the Keras (here: exact-float jax
+//! export) model, both against ground truth.  We also record the mean
+//! absolute probability error as a direct output-fidelity measure.
+
+use crate::hls::{FixedTransformer, QuantConfig};
+use crate::metrics::auc::{binary_auc, macro_auc};
+use crate::models::config::ModelConfig;
+use crate::models::weights::Weights;
+
+use super::evalset::EvalSet;
+
+/// One design point of the sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SweepPoint {
+    pub integer_bits: u32,
+    pub frac_bits: u32,
+    /// Scored with the QAT checkpoint instead of the PTQ one.
+    pub qat: bool,
+}
+
+/// Result at one design point.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepResult {
+    pub point: SweepPoint,
+    /// AUC of the fixed-point model against ground truth.
+    pub auc_fixed: f64,
+    /// AUC of the exact-float reference against ground truth.
+    pub auc_float: f64,
+    /// The paper's plotted metric: auc_fixed / auc_float.
+    pub auc_ratio: f64,
+    /// Mean |p_fixed - p_float| over events (output fidelity).
+    pub mean_abs_err: f64,
+}
+
+/// Score one model at one design point over the eval set.
+pub fn score_point(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    eval: &EvalSet,
+    point: SweepPoint,
+) -> SweepResult {
+    let quant = QuantConfig::new(point.integer_bits, point.frac_bits);
+    let fixed = FixedTransformer::new(cfg.clone(), weights, quant);
+
+    let mut fixed_probs: Vec<Vec<f32>> = Vec::with_capacity(eval.len());
+    for x in &eval.events {
+        fixed_probs.push(fixed.forward(x));
+    }
+
+    let (auc_fixed, auc_float) = if cfg.output_size > 2 {
+        (
+            macro_auc(&fixed_probs, &eval.labels, cfg.output_size),
+            macro_auc(&eval.float_probs, &eval.labels, cfg.output_size),
+        )
+    } else {
+        let score = |probs: &[Vec<f32>]| -> Vec<f32> {
+            probs
+                .iter()
+                .map(|p| if p.len() == 1 { p[0] } else { p[1] })
+                .collect()
+        };
+        (
+            binary_auc(&score(&fixed_probs), &eval.labels),
+            binary_auc(&score(&eval.float_probs), &eval.labels),
+        )
+    };
+
+    let mut err = 0.0f64;
+    let mut terms = 0usize;
+    for (fp, rp) in fixed_probs.iter().zip(&eval.float_probs) {
+        for (a, b) in fp.iter().zip(rp) {
+            err += (a - b).abs() as f64;
+            terms += 1;
+        }
+    }
+
+    SweepResult {
+        point,
+        auc_fixed,
+        auc_float,
+        auc_ratio: if auc_float > 0.0 { auc_fixed / auc_float } else { 0.0 },
+        mean_abs_err: err / terms.max(1) as f64,
+    }
+}
+
+/// Run many design points, fanned out over OS threads (std::thread::scope
+/// — the offline crate set has no rayon).
+pub fn run_sweep(
+    cfg: &ModelConfig,
+    ptq_weights: &Weights,
+    qat_weights: &Weights,
+    eval: &EvalSet,
+    points: &[SweepPoint],
+    threads: usize,
+) -> Vec<SweepResult> {
+    let threads = threads.max(1);
+    let mut results: Vec<Option<SweepResult>> = vec![None; points.len()];
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<SweepResult>>> =
+        (0..points.len()).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(points.len().max(1)) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let p = points[i];
+                let w = if p.qat { qat_weights } else { ptq_weights };
+                let r = score_point(cfg, w, eval, p);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    for (i, slot) in slots.into_iter().enumerate() {
+        results[i] = slot.into_inner().unwrap();
+    }
+    results.into_iter().map(|r| r.expect("all points scored")).collect()
+}
+
+/// The grid of the paper's Figures 9-11: integer bits 6..=10, fractional
+/// bits 2..=11, PTQ and QAT.
+pub fn paper_grid() -> Vec<SweepPoint> {
+    let mut v = Vec::new();
+    for qat in [false, true] {
+        for integer_bits in 6..=10 {
+            for frac_bits in 2..=11 {
+                v.push(SweepPoint { integer_bits, frac_bits, qat });
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::weights::synthetic_weights;
+    use crate::models::zoo::zoo_model;
+    use crate::nn::FloatTransformer;
+    use crate::testutil::Gen;
+
+    /// Synthetic eval set scored by the float model itself (no artifacts).
+    fn synthetic_eval(cfg: &ModelConfig, w: &Weights, n: usize) -> EvalSet {
+        let float = FloatTransformer::new(cfg.clone(), w.clone());
+        let mut g = Gen::new(123);
+        let mut events = Vec::new();
+        let mut labels = Vec::new();
+        let mut probs = Vec::new();
+        for i in 0..n {
+            let x = crate::nn::tensor::Mat::from_vec(
+                cfg.seq_len,
+                cfg.input_size,
+                g.normal_vec(cfg.seq_len * cfg.input_size, 1.0),
+            );
+            let p = float.probs(&float.forward(&x));
+            labels.push((i % 2) as u8);
+            probs.push(p);
+            events.push(x);
+        }
+        EvalSet {
+            events,
+            labels,
+            lut_probs: probs.clone(),
+            float_probs: probs,
+            num_classes: cfg.output_size.max(2),
+        }
+    }
+
+    #[test]
+    fn high_precision_point_has_ratio_near_one() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 21);
+        let eval = synthetic_eval(&cfg, &w, 24);
+        let r = score_point(&cfg, &w, &eval,
+            SweepPoint { integer_bits: 8, frac_bits: 12, qat: false });
+        assert!((r.auc_ratio - 1.0).abs() < 0.25, "ratio {}", r.auc_ratio);
+        assert!(r.mean_abs_err < 0.1, "err {}", r.mean_abs_err);
+    }
+
+    #[test]
+    fn fidelity_improves_with_precision() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 22);
+        let eval = synthetic_eval(&cfg, &w, 16);
+        let coarse = score_point(&cfg, &w, &eval,
+            SweepPoint { integer_bits: 6, frac_bits: 2, qat: false });
+        let fine = score_point(&cfg, &w, &eval,
+            SweepPoint { integer_bits: 6, frac_bits: 10, qat: false });
+        assert!(fine.mean_abs_err < coarse.mean_abs_err,
+            "fine {} vs coarse {}", fine.mean_abs_err, coarse.mean_abs_err);
+    }
+
+    #[test]
+    fn run_sweep_parallel_matches_serial() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 23);
+        let eval = synthetic_eval(&cfg, &w, 8);
+        let points = vec![
+            SweepPoint { integer_bits: 6, frac_bits: 4, qat: false },
+            SweepPoint { integer_bits: 6, frac_bits: 8, qat: true },
+            SweepPoint { integer_bits: 8, frac_bits: 6, qat: false },
+        ];
+        let par = run_sweep(&cfg, &w, &w, &eval, &points, 3);
+        let ser = run_sweep(&cfg, &w, &w, &eval, &points, 1);
+        assert_eq!(par.len(), 3);
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.auc_fixed, b.auc_fixed);
+        }
+    }
+
+    #[test]
+    fn paper_grid_size() {
+        // 2 quant types x 5 integer widths x 10 fractional widths
+        assert_eq!(paper_grid().len(), 100);
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT client wrapper: HLO-text -> compile -> execute.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: the interchange format is
+//! HLO *text* because jax >= 0.5 serializes HloModuleProto with 64-bit
+//! instruction ids that the vendored xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids.  Outputs were lowered with
+//! `return_tuple=True`, so execution results unwrap with `to_tuple1`.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+/// Owns the PJRT CPU client.  One per process; executables borrow it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    ///
+    /// `input_shape` is the event-batch shape the graph was lowered for
+    /// (batch, seq_len, input_size); `output_size` the per-event logit
+    /// width.  Both are validated at execute time.
+    pub fn load_hlo(
+        &self,
+        path: impl AsRef<Path>,
+        input_shape: (usize, usize, usize),
+        output_size: usize,
+    ) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            input_shape,
+            output_size,
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled inference graph for one (model, batch) pair.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    input_shape: (usize, usize, usize),
+    output_size: usize,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// (batch, seq_len, input_size) the graph was lowered for.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        self.input_shape
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.input_shape.0
+    }
+
+    pub fn output_size(&self) -> usize {
+        self.output_size
+    }
+
+    /// Execute on a flat row-major `(batch, seq, feat)` buffer; returns
+    /// flat `(batch, output_size)` logits.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let (b, s, f) = self.input_shape;
+        ensure!(
+            input.len() == b * s * f,
+            "input len {} != {}x{}x{}",
+            input.len(),
+            b,
+            s,
+            f
+        );
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[b as i64, s as i64, f as i64])
+            .context("reshape input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("device -> host literal")?;
+        let tuple = result.to_tuple1().context("unwrap 1-tuple output")?;
+        let out = tuple.to_vec::<f32>().context("output literal -> vec")?;
+        ensure!(
+            out.len() == b * self.output_size,
+            "output len {} != {}x{}",
+            out.len(),
+            b,
+            self.output_size
+        );
+        Ok(out)
+    }
+
+    /// Convenience: run a batch of event matrices (padding the tail with
+    /// zeros when fewer events than the compiled batch size arrive).
+    /// Returns per-event logits for the real events only.
+    pub fn run_events(&self, events: &[&crate::nn::tensor::Mat]) -> Result<Vec<Vec<f32>>> {
+        let (b, s, f) = self.input_shape;
+        ensure!(events.len() <= b, "batch overflow: {} > {b}", events.len());
+        let mut flat = vec![0.0f32; b * s * f];
+        for (i, e) in events.iter().enumerate() {
+            ensure!(e.rows() == s && e.cols() == f, "event shape mismatch");
+            flat[i * s * f..(i + 1) * s * f].copy_from_slice(e.data());
+        }
+        let out = self.run(&flat)?;
+        Ok(events
+            .iter()
+            .enumerate()
+            .map(|(i, _)| out[i * self.output_size..(i + 1) * self.output_size].to_vec())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT round-trip tests against real artifacts live in
+    // rust/tests/aot_roundtrip.rs (they need `make artifacts` to have
+    // run); here we only cover the pure logic.
+    use super::*;
+
+    #[test]
+    fn runtime_cpu_creates() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+    }
+}

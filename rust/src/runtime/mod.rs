@@ -1,0 +1,7 @@
+//! PJRT runtime (S9): loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! HLO **text** — see DESIGN.md §3) and executes them on the CPU PJRT
+//! client via the `xla` crate.  Python is never involved at runtime.
+
+pub mod client;
+
+pub use client::{Executable, Runtime};

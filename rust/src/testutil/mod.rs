@@ -1,0 +1,163 @@
+//! Property-test driver — the offline stand-in for `proptest` (which is
+//! not in the vendored crate set; see DESIGN.md §2).
+//!
+//! [`Prop`] runs a closure against a deterministic stream of seeded
+//! [`Gen`]s; failures surface the seed so a case can be replayed by
+//! setting `PROP_SEED`.  No shrinking — generators are kept small and
+//! value-printing is the caller's job via assert messages.
+
+pub mod rng;
+
+pub use rng::XorShift;
+
+use crate::fixed::FixedSpec;
+
+/// A named property with a configurable number of random cases.
+pub struct Prop {
+    name: &'static str,
+    runs: u64,
+    seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        // hash the name so different properties explore different streams
+        let mut h = 0xcbf29ce484222325u64;
+        for b in name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(h);
+        Self { name, runs: 500, seed }
+    }
+
+    pub fn runs(mut self, n: u64) -> Self {
+        self.runs = n;
+        self
+    }
+
+    /// Run the property; panics (with the case seed) on the first failure.
+    pub fn check<F: Fn(&mut Gen)>(self, f: F) {
+        for case in 0..self.runs {
+            let case_seed = self.seed.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
+            let mut g = Gen::new(case_seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&mut g)
+            }));
+            if let Err(e) = result {
+                eprintln!(
+                    "property '{}' failed at case {case} (replay with PROP_SEED={case_seed})",
+                    self.name
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+/// Random-value generator handed to property closures.
+pub struct Gen {
+    rng: XorShift,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: XorShift::new(seed) }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + (self.rng.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.rng.next_f64() as f32) * (hi - lo)
+    }
+
+    /// Standard normal (Box-Muller).
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A random valid `ap_fixed` spec (widths 2..=24).
+    pub fn fixed_spec(&mut self) -> FixedSpec {
+        self.fixed_spec_max_width(24)
+    }
+
+    pub fn fixed_spec_max_width(&mut self, max_w: usize) -> FixedSpec {
+        let w = self.usize_in(2, max_w + 1) as u32;
+        let i = self.usize_in(1, (w + 1) as usize) as u32;
+        FixedSpec::new(w, i)
+    }
+
+    /// Vector of standard normals scaled by `scale`.
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_runs_all_cases() {
+        let count = std::cell::Cell::new(0u64);
+        Prop::new("counting").runs(37).check(|_| {
+            count.set(count.get() + 1);
+        });
+        assert_eq!(count.get(), 37);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prop_failure_propagates() {
+        Prop::new("always fails").runs(3).check(|_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(42);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..9).contains(&v));
+            let f = g.f32_in(-2.0, 5.0);
+            assert!((-2.0..5.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn gen_deterministic_per_seed() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut g = Gen::new(1);
+        let xs: Vec<f64> = (0..20000).map(|_| g.normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

@@ -1,0 +1,111 @@
+//! xorshift64* PRNG — deterministic, dependency-free randomness for the
+//! property tests and the synthetic data generators.
+
+/// xorshift64* with a splitmix-style seed scrambler.
+#[derive(Clone, Debug)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 scramble so nearby seeds decorrelate
+        let mut z = seed.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        let state = (z ^ (z >> 31)) | 1; // never zero
+        Self { state }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo < hi);
+        lo + (self.next_u64() % (hi - lo) as u64) as i64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-12 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Exponential with mean `scale`.
+    pub fn exponential(&mut self, scale: f64) -> f64 {
+        -scale * (1.0 - self.next_f64()).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift::new(123);
+        let mut b = XorShift::new(123);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(XorShift::new(1).next_u64(), XorShift::new(2).next_u64());
+    }
+
+    #[test]
+    fn unit_range() {
+        let mut r = XorShift::new(9);
+        for _ in 0..10000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = XorShift::new(5);
+        let n = 20000;
+        let m: f64 = (0..n).map(|_| r.exponential(3.0)).sum::<f64>() / n as f64;
+        assert!((m - 3.0).abs() < 0.15, "mean {m}");
+    }
+
+    #[test]
+    fn int_in_covers_range() {
+        let mut r = XorShift::new(77);
+        let mut seen = [false; 5];
+        for _ in 0..200 {
+            seen[r.int_in(0, 5) as usize] = true;
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration tests against the real AOT artifacts.
+//!
+//! These are the cross-layer correctness contract of the whole system:
+//! Python (L1/L2) exported tables, quantization vectors, weights, eval
+//! tensors and HLO graphs; here the Rust side (L3) must agree with every
+//! one of them.  All tests skip gracefully when `make artifacts` hasn't
+//! run (CI bootstrapping), but the Makefile `test` target always builds
+//! artifacts first.
+
+use hls4ml_transformer::artifacts_dir;
+use hls4ml_transformer::fixed::lut::{LutKind, LutTable};
+use hls4ml_transformer::fixed::FixedSpec;
+use hls4ml_transformer::models::weights::Weights;
+use hls4ml_transformer::models::zoo::zoo;
+use hls4ml_transformer::models::NnwFile;
+use hls4ml_transformer::nn::tensor::Mat;
+use hls4ml_transformer::nn::FloatTransformer;
+use hls4ml_transformer::quant::EvalSet;
+
+fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn lut_tables_bit_identical_to_python() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let file = NnwFile::load(dir.join("tables.nnw")).unwrap();
+    for kind in [LutKind::Exp, LutKind::Inv, LutKind::InvSqrt] {
+        let ours = LutTable::new(kind);
+        let theirs = file.require(kind.name()).unwrap();
+        assert_eq!(ours.len(), theirs.data.len(), "{:?} size", kind);
+        for (i, (a, b)) in ours.rom().iter().zip(&theirs.data).enumerate() {
+            assert_eq!(a, b, "{:?}[{i}]: rust {a} vs python {b}", kind);
+        }
+    }
+}
+
+#[test]
+fn quantizer_bit_identical_to_python() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let file = NnwFile::load(dir.join("quantvec.nnw")).unwrap();
+    let xs = &file.require("x").unwrap().data;
+    for (w, i) in [(8u32, 3u32), (12, 4), (16, 6), (10, 10), (18, 8), (6, 2)] {
+        let spec = FixedSpec::new(w, i);
+        let expected = &file.require(&format!("q_{w}_{i}")).unwrap().data;
+        for (n, (&x, &want)) in xs.iter().zip(expected).enumerate() {
+            let got = spec.quantize(x);
+            assert_eq!(got, want, "{spec} on x[{n}]={x}: rust {got} vs python {want}");
+        }
+    }
+}
+
+#[test]
+fn weights_load_and_match_param_counts() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    for m in zoo() {
+        for qat in [false, true] {
+            let file = NnwFile::load(dir.join(m.weights_file(qat))).unwrap();
+            let w = Weights::from_nnw(&m.config, &file).unwrap();
+            assert_eq!(w.param_count(), m.config.param_count(), "{}", m.config.name);
+        }
+    }
+}
+
+#[test]
+fn rust_float_forward_matches_jax_exact_logits() {
+    // The strongest cross-layer test: the Rust float transformer must
+    // reproduce jax's logits_exact on the exported eval events.
+    let Some(dir) = artifacts_or_skip() else { return };
+    for m in zoo() {
+        let cfg = &m.config;
+        let weights = Weights::from_nnw(
+            cfg,
+            &NnwFile::load(dir.join(m.weights_file(false))).unwrap(),
+        )
+        .unwrap();
+        let eval_file = NnwFile::load(dir.join(m.eval_file())).unwrap();
+        let x = eval_file.require("x").unwrap();
+        let expected = eval_file.require("logits_exact").unwrap();
+        let t = FloatTransformer::new(cfg.clone(), weights);
+        let n = 64.min(x.shape[0]);
+        let w = cfg.seq_len * cfg.input_size;
+        let mut worst = 0.0f32;
+        for i in 0..n {
+            let ev = Mat::from_vec(
+                cfg.seq_len,
+                cfg.input_size,
+                x.data[i * w..(i + 1) * w].to_vec(),
+            );
+            let logits = t.forward(&ev);
+            for (j, &l) in logits.iter().enumerate() {
+                let want = expected.data[i * cfg.output_size + j];
+                worst = worst.max((l - want).abs());
+            }
+        }
+        assert!(
+            worst < 2e-3,
+            "{}: rust float vs jax exact worst |dlogit| = {worst}",
+            cfg.name
+        );
+    }
+}
+
+#[test]
+fn eval_set_loads_for_all_models() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    for m in zoo() {
+        let eval = EvalSet::load(&dir, &m.config).unwrap();
+        assert!(eval.len() >= 128, "{}: eval too small", m.config.name);
+        assert_eq!(eval.float_probs[0].len(), m.config.output_size);
+        // labels from both classes present
+        assert!(eval.labels.iter().any(|&l| l == 0));
+        assert!(eval.labels.iter().any(|&l| l == 1));
+    }
+}
+
+#[test]
+fn float_model_auc_matches_manifest_regime() {
+    // E5: the trained float models must show the separability recorded
+    // in the manifest (and the manifest must show strong models).
+    let Some(dir) = artifacts_or_skip() else { return };
+    let manifest = std::fs::read_to_string(dir.join("manifest.txt")).unwrap();
+    for m in zoo() {
+        let line = manifest
+            .lines()
+            .find(|l| l.contains(&format!("model={}", m.config.name)))
+            .expect("manifest line");
+        let auc: f64 = line
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("ptq_auc=").map(|v| v.parse().unwrap()))
+            .unwrap();
+        assert!(auc > 0.8, "{}: manifest float AUC {auc} too weak", m.config.name);
+    }
+}

@@ -1,0 +1,113 @@
+//! PJRT round-trip: load the AOT HLO-text artifacts, execute them on the
+//! CPU client, and compare against the jax-recorded LUT-path logits —
+//! the production serving path end to end.
+
+use hls4ml_transformer::artifacts_dir;
+use hls4ml_transformer::models::zoo::zoo;
+use hls4ml_transformer::models::NnwFile;
+use hls4ml_transformer::nn::tensor::Mat;
+use hls4ml_transformer::runtime::Runtime;
+
+fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_executes_all_models_and_matches_jax() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    for m in zoo() {
+        let cfg = &m.config;
+        let eval = NnwFile::load(dir.join(m.eval_file())).unwrap();
+        let x = eval.require("x").unwrap();
+        let expected = eval.require("logits_lut").unwrap();
+        let w = cfg.seq_len * cfg.input_size;
+
+        for batch in [1usize, 8] {
+            let exe = rt
+                .load_hlo(
+                    dir.join(m.hlo_file(batch)),
+                    (batch, cfg.seq_len, cfg.input_size),
+                    cfg.output_size,
+                )
+                .unwrap();
+            let events: Vec<Mat> = (0..batch)
+                .map(|i| {
+                    Mat::from_vec(
+                        cfg.seq_len,
+                        cfg.input_size,
+                        x.data[i * w..(i + 1) * w].to_vec(),
+                    )
+                })
+                .collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let logits = exe.run_events(&refs).unwrap();
+            // statistical gate (same as aot.py's): tight in the median,
+            // ROM bin-edge flips allowed in the tail — the PJRT graph is
+            // the *pallas* path while logits_lut records the oracle path
+            let mut rels: Vec<f32> = Vec::new();
+            for (i, l) in logits.iter().enumerate() {
+                for (j, &v) in l.iter().enumerate() {
+                    let want = expected.data[i * cfg.output_size + j];
+                    rels.push((v - want).abs() / want.abs().max(1.0));
+                }
+            }
+            rels.sort_by(|a, b| a.total_cmp(b));
+            let median = rels[rels.len() / 2];
+            let max = *rels.last().unwrap();
+            assert!(median < 5e-3, "{} b{batch}: median rel {median}", cfg.name);
+            assert!(max < 0.1, "{} b{batch}: max rel {max}", cfg.name);
+        }
+    }
+}
+
+#[test]
+fn pjrt_batch_padding_works() {
+    // fewer events than the compiled batch: tail is zero-padded and only
+    // real events are returned
+    let Some(dir) = artifacts_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let m = &zoo()[0];
+    let cfg = &m.config;
+    let exe = rt
+        .load_hlo(dir.join(m.hlo_file(8)), (8, cfg.seq_len, cfg.input_size), cfg.output_size)
+        .unwrap();
+    let ev = Mat::zeros(cfg.seq_len, cfg.input_size);
+    let out = exe.run_events(&[&ev, &ev, &ev]).unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].len(), cfg.output_size);
+    // identical inputs -> identical outputs
+    assert_eq!(out[0], out[1]);
+}
+
+#[test]
+fn pjrt_rejects_wrong_shapes() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let m = &zoo()[0];
+    let cfg = &m.config;
+    let exe = rt
+        .load_hlo(dir.join(m.hlo_file(1)), (1, cfg.seq_len, cfg.input_size), cfg.output_size)
+        .unwrap();
+    // wrong flat size
+    assert!(exe.run(&[0.0; 7]).is_err());
+    // wrong event shape
+    let bad = Mat::zeros(3, 3);
+    assert!(exe.run_events(&[&bad]).is_err());
+    // batch overflow
+    let ok = Mat::zeros(cfg.seq_len, cfg.input_size);
+    assert!(exe.run_events(&[&ok, &ok]).is_err());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let rt = Runtime::cpu().unwrap();
+    let err = rt.load_hlo("/nonexistent/model.hlo.txt", (1, 2, 3), 4);
+    assert!(err.is_err());
+}
