@@ -10,7 +10,11 @@
 //!   for the same models.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_serving`
-//!      [-- --events N --batch B --rate EPS]
+//!      [-- --events N --batch B --rate EPS --replicas R]
+//!
+//! `--replicas R` widens every model's worker pool to R batcher+backend
+//! shards (each with its own PJRT client) — the knob the replica-scaling
+//! bench sweeps.
 
 use anyhow::Result;
 use hls4ml_transformer::artifacts_dir;
@@ -28,6 +32,8 @@ fn main() -> Result<()> {
     let events: u64 = args.get_parse("events", 3000).map_err(anyhow::Error::msg)?;
     let batch: usize = args.get_parse("batch", 8).map_err(anyhow::Error::msg)?;
     let rate: u64 = args.get_parse("rate", 0).map_err(anyhow::Error::msg)?;
+    let replicas: usize = args.get_parse("replicas", 1).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
 
     let dir = artifacts_dir();
     for m in ["engine", "btag", "gw"] {
@@ -37,8 +43,8 @@ fn main() -> Result<()> {
         );
     }
 
-    println!("== end-to-end serving: 3 detectors -> router -> batcher -> PJRT ==");
-    println!("   events/source={events} batch<={batch} rate={}",
+    println!("== end-to-end serving: 3 detectors -> router -> worker pools -> PJRT ==");
+    println!("   events/source={events} batch<={batch} replicas={replicas} rate={}",
         if rate == 0 { "max".into() } else { format!("{rate}/s") });
 
     let cfg = ServerConfig {
@@ -49,6 +55,7 @@ fn main() -> Result<()> {
                     max_batch: batch,
                     max_wait: Duration::from_micros(200),
                 },
+                replicas,
                 ..PipelineConfig::new(m, BackendKind::Pjrt)
             })
             .collect(),

@@ -1,0 +1,124 @@
+"""Deterministic stand-in for the `hypothesis` API surface these tests use.
+
+The offline test image does not ship hypothesis; CI does (see
+python/requirements.txt).  When the real package is missing, conftest.py
+installs this module as `hypothesis` so the property tests still run —
+with deterministic pseudo-random examples instead of hypothesis's
+adaptive search + shrinking.  Coverage is thinner but the oracle
+assertions are identical, and the same tests run at full strength in CI.
+
+Supported: @given (positional + keyword strategies), @settings
+(max_examples honored, everything else ignored), strategies.integers /
+floats / booleans / sampled_from / lists / tuples, and .filter / .map.
+"""
+
+import inspect
+
+import numpy as np
+
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(10_000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("mini-hypothesis: filter rejected 10k draws")
+
+        return _Strategy(draw)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value))
+        )
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements._draw(rng) for _ in range(size)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements):
+        return _Strategy(lambda rng: tuple(e._draw(rng) for e in elements))
+
+
+def settings(max_examples=20, **_ignored):
+    def deco(fn):
+        fn._mini_hypothesis_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        max_examples = getattr(fn, "_mini_hypothesis_max_examples", 20)
+
+        # like real hypothesis: keyword strategies bind by name,
+        # positional strategies fill the test's *last* parameters, and
+        # anything left over (e.g. tmp_path_factory) is a pytest fixture
+        # the wrapper must still request
+        names = [
+            p.name
+            for p in inspect.signature(fn).parameters.values()
+            if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)
+        ]
+        remaining = [n for n in names if n not in kw_strategies]
+        split = len(remaining) - len(arg_strategies)
+        fixture_names, pos_targets = remaining[:split], remaining[split:]
+
+        # deliberately NOT functools.wraps: copying __wrapped__ would make
+        # pytest resolve the original signature and demand the strategy
+        # parameters as fixtures; instead the wrapper advertises only the
+        # fixture parameters via __signature__
+        def wrapper(**fixtures):
+            rng = np.random.default_rng(_SEED)
+            for _ in range(max_examples):
+                kw = dict(fixtures)
+                for name, s in zip(pos_targets, arg_strategies):
+                    kw[name] = s._draw(rng)
+                for name, s in kw_strategies.items():
+                    kw[name] = s._draw(rng)
+                fn(**kw)
+
+        wrapper.__signature__ = inspect.Signature(
+            [
+                inspect.Parameter(n, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                for n in fixture_names
+            ]
+        )
+        wrapper.__name__ = getattr(fn, "__name__", "mini_hypothesis_test")
+        wrapper.__qualname__ = getattr(fn, "__qualname__", wrapper.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -3,3 +3,16 @@ import sys
 
 # make `compile` importable when pytest runs from python/ or the repo root
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# The property tests use hypothesis, which the offline image does not
+# ship.  CI installs the real package (python/requirements.txt); locally
+# we fall back to the deterministic mini shim so the same tests still
+# run instead of erroring at collection.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _mini_hypothesis
+
+    sys.modules["hypothesis"] = _mini_hypothesis
+    sys.modules["hypothesis.strategies"] = _mini_hypothesis.strategies

@@ -44,8 +44,74 @@ fn run(model: &'static str, backend: BackendKind, batch: usize, events: u64) {
                 s.latency.summary(),
                 s.online_auc().map(|a| format!("  auc={a:.3}")).unwrap_or_default(),
             );
+            harness::json_line(
+                &format!("e2e_serving/{model}/{backend:?}/b{batch}"),
+                &[
+                    ("throughput_eps", report.throughput_eps()),
+                    ("mean_ns", s.latency.mean_ns()),
+                    ("p50_ns", s.latency.quantile_ns(0.50) as f64),
+                    ("p99_ns", s.latency.quantile_ns(0.99) as f64),
+                    ("accepted", s.accepted as f64),
+                    ("dropped", s.dropped as f64),
+                ],
+            );
         }
         Err(e) => println!("  {model}/{backend:?} FAILED: {e:#}"),
+    }
+}
+
+/// Pool-scaling sweep: the same model and offered load served by worker
+/// pools of width 1/2/4/8.  At saturating offered load a 4-wide pool
+/// should deliver >= 2x the single-replica throughput on a multi-core
+/// host (the PR's acceptance bar).
+fn replica_sweep() {
+    harness::section("replica scaling: engine/Float pool width 1/2/4/8 at saturating load");
+    println!("(one max-rate source; speedup is vs the replicas=1 row)");
+    let mut base_eps = 0.0f64;
+    for replicas in [1usize, 2, 4, 8] {
+        let cfg = ServerConfig {
+            pipelines: vec![PipelineConfig {
+                replicas,
+                weights: WeightsSource::Synthetic(7),
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(200),
+                },
+                ..PipelineConfig::new("engine", BackendKind::Float)
+            }],
+            events_per_source: 12_000,
+            rate_per_source: 0,
+            artifacts_dir: artifacts_dir(),
+        };
+        match TriggerServer::run(&cfg) {
+            Ok(report) => {
+                let s = &report.per_model["engine"];
+                let eps = report.throughput_eps();
+                if replicas == 1 {
+                    base_eps = eps;
+                }
+                // NAN when the r1 baseline failed: json_num serializes it
+                // as null, which keeps the archived trajectory honest
+                let speedup = if base_eps > 0.0 { eps / base_eps } else { f64::NAN };
+                println!(
+                    "  replicas={replicas}  {eps:>9.0} ev/s  x{speedup:.2} vs r1  shed={}  lat {}",
+                    s.dropped,
+                    s.latency.summary(),
+                );
+                harness::json_line(
+                    &format!("e2e_serving/replica_sweep/engine/float/r{replicas}"),
+                    &[
+                        ("replicas", replicas as f64),
+                        ("throughput_eps", eps),
+                        ("speedup_vs_r1", speedup),
+                        ("mean_ns", s.latency.mean_ns()),
+                        ("p99_ns", s.latency.quantile_ns(0.99) as f64),
+                        ("dropped", s.dropped as f64),
+                    ],
+                );
+            }
+            Err(e) => println!("  replicas={replicas} FAILED: {e:#}"),
+        }
     }
 }
 
@@ -61,6 +127,8 @@ fn main() {
         run(model, BackendKind::Pjrt, 8, 3000);
         println!();
     }
+
+    replica_sweep();
 
     harness::section("multi-model concurrent serving (all three pipelines)");
     let cfg = ServerConfig {

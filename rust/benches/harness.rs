@@ -5,9 +5,15 @@
 //! mean / p50 / p99 per iteration, and provides the table printers the
 //! per-paper-artifact benches share.  Used via `mod harness;` from each
 //! `harness = false` bench target.
+//!
+//! Machine-readable output: when the `BENCH_JSON` env var names a file,
+//! every bench result is also appended there as one JSON line (see
+//! [`json_line`]), so CI runs can archive perf trajectories as
+//! `BENCH_*.json` artifacts and diff them across commits.
 
 #![allow(dead_code)]
 
+use std::io::Write;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.
@@ -79,7 +85,65 @@ pub fn bench_with_target<F: FnMut()>(
         min_ns: samples_ns[0],
     };
     println!("{}", format_stats(&stats));
+    json_line(
+        &stats.name,
+        &[
+            ("mean_ns", stats.mean_ns),
+            ("p50_ns", stats.p50_ns),
+            ("p99_ns", stats.p99_ns),
+            ("min_ns", stats.min_ns),
+            ("iters", stats.iters as f64),
+        ],
+    );
     stats
+}
+
+/// Append one machine-readable JSON line (`{"bench":...,"k":v,...}`) to
+/// the file named by `BENCH_JSON`, if set.  No-op otherwise, so human
+/// runs stay clean.  Non-finite values serialize as `null` to keep the
+/// output strictly JSON.
+pub fn json_line(bench: &str, fields: &[(&str, f64)]) {
+    let Ok(path) = std::env::var("BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    let mut line = format!("{{\"bench\":\"{}\"", json_escape(bench));
+    for (k, v) in fields {
+        line.push_str(&format!(",\"{}\":{}", json_escape(k), json_num(*v)));
+    }
+    line.push('}');
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            if let Err(e) = writeln!(f, "{line}") {
+                eprintln!("(BENCH_JSON write failed: {e})");
+            }
+        }
+        Err(e) => eprintln!("(BENCH_JSON open '{path}' failed: {e})"),
+    }
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 pub fn format_stats(s: &BenchStats) -> String {

@@ -115,6 +115,17 @@ mod tests {
     }
 
     #[test]
+    fn replicas_flag_parses_for_serve() {
+        // the serve subcommand's worker-pool width rides this parser
+        let a = parse("serve --backend float --replicas 4");
+        assert_eq!(a.get_parse("replicas", 1usize).unwrap(), 4);
+        let b = parse("serve --backend float");
+        assert_eq!(b.get_parse("replicas", 1usize).unwrap(), 1, "defaults to 1");
+        let c = parse("serve --replicas=8");
+        assert_eq!(c.get_parse("replicas", 1usize).unwrap(), 8);
+    }
+
+    #[test]
     fn duplicate_flag_rejected() {
         assert!(Args::parse(["--a", "1", "--a", "2"].map(String::from)).is_err());
     }

@@ -6,6 +6,10 @@
 //!   the *modeled* FPGA latency comes from `synthesize()`.
 //! * [`BackendKind::Pjrt`] — the AOT artifact through the PJRT CPU
 //!   client (the production serving path of this reproduction).
+//!
+//! Backends are not shared between threads: in a sharded worker pool
+//! each replica builds its own `Backend` (and, for PJRT, its own client)
+//! so pool scaling never serializes on a single inference engine.
 
 use anyhow::{Context, Result};
 

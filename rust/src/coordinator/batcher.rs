@@ -1,5 +1,10 @@
 //! Dynamic batcher: size-or-deadline batching, the same policy a serving
 //! router (vLLM-style) uses, scaled down to trigger latencies.
+//!
+//! In a sharded worker pool every replica runs its own `Batcher` over
+//! its own SPSC ring, so batches never mix events from different shards
+//! and arrival order is preserved *within* a shard (cross-shard order is
+//! deliberately unspecified — the router already interleaves).
 
 use super::event::TriggerEvent;
 use super::spsc::Consumer;

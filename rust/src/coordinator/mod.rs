@@ -4,16 +4,26 @@
 //!
 //! Architecture (std threads; tokio is not in the offline crate set, and
 //! a µs-latency trigger path is better served by dedicated threads than
-//! an async scheduler anyway):
+//! an async scheduler anyway).  Each model is served by a **sharded
+//! worker pool**: `replicas` independent SPSC rings, each consumed by
+//! its own batcher+backend worker thread.  The router fans sources out
+//! round-robin and overflows a momentarily-full shard to the
+//! least-loaded one; only when every shard is full is the event shed.
 //!
 //! ```text
-//!  sources (N threads)           per-model pipeline
-//!  ┌──────────────┐  SPSC ring   ┌─────────┐  batch  ┌───────────┐
-//!  │ detector sim ├─────────────►│ batcher ├────────►│ inference │─► scores
-//!  └──────────────┘  (bounded,   └─────────┘ (size/  └───────────┘   + stats
-//!        ...          backpressure)           deadline)  backend:
-//!                                                        hls-sim | nn | PJRT
+//!  sources (N threads)          per-model worker pool (replicas = R)
+//!  ┌──────────────┐  round     ┌─ shard 0: ring ─ batcher ─ backend ─┐
+//!  │ detector sim ├─ robin ───►├─ shard 1: ring ─ batcher ─ backend ─┤─► scores
+//!  └──────────────┘  + least-  │    ...                              │   + shard
+//!        ...         loaded    └─ shard R-1: ring ─ batcher ─ backend┘   stats
+//!                    overflow    (bounded rings, shed when all full)
 //! ```
+//!
+//! `replicas = 1` reproduces the original single-worker pipeline
+//! bit-for-bit; the `e2e_serving` bench sweeps 1/2/4/8 replicas at a
+//! fixed offered load to measure pool scaling.  Per-shard accounting
+//! ([`stats::ShardStats`]) folds into the per-model [`PipelineStats`]
+//! report.
 
 pub mod backend;
 pub mod batcher;
@@ -29,3 +39,4 @@ pub use event::TriggerEvent;
 pub use router::{Router, Submit};
 pub use server::{PipelineConfig, ServerConfig, ServerReport, TriggerServer, WeightsSource};
 pub use spsc::SpscRing;
+pub use stats::{PipelineStats, ShardStats};

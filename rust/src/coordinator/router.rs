@@ -1,10 +1,18 @@
-//! Model router: validates and dispatches events to per-model pipelines.
+//! Model router: validates and dispatches events to sharded per-model
+//! worker pools.
 //!
-//! The router owns one SPSC producer per model; sources call
-//! [`Router::submit`] and the event lands in the right pipeline's ring.
-//! Backpressure is explicit: a full ring rejects the event and the drop
-//! is counted (a trigger must degrade by shedding, never by stalling the
-//! detector readout).
+//! Each model owns `replicas` SPSC rings, one per batcher+backend worker
+//! (shard).  Sources call [`Router::submit`]; the event is placed on the
+//! round-robin shard, or — if that ring is momentarily full — on the
+//! least-loaded other shard (backpressure-aware overflow).  Only when
+//! every shard is full is the event shed.  Backpressure stays explicit:
+//! a trigger must degrade by shedding, never by stalling the detector
+//! readout.
+//!
+//! **Producer contract:** the rings are strictly single-producer — at
+//! most ONE thread may submit events for a given model at a time
+//! (different models may be driven from different threads).  The trigger
+//! server upholds this by running exactly one source per pipeline.
 
 use super::event::TriggerEvent;
 use super::spsc::Producer;
@@ -16,7 +24,7 @@ use std::sync::Arc;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Submit {
     Accepted,
-    /// Ring full — event shed.
+    /// Every shard ring full — event shed.
     Shed,
     /// No pipeline for this model name.
     UnknownModel,
@@ -25,11 +33,26 @@ pub enum Submit {
 }
 
 struct Route {
-    tx: Producer<TriggerEvent>,
+    /// One producer per worker-pool shard.
+    shards: Vec<Producer<TriggerEvent>>,
+    /// Round-robin dispatch cursor.
+    cursor: AtomicU64,
     seq_len: usize,
     input_size: usize,
     accepted: AtomicU64,
     shed: AtomicU64,
+    /// Events that overflowed their round-robin shard and were accepted
+    /// by the least-loaded one instead (per-shard accepted counts come
+    /// from the workers' `ShardStats`; only this overflow signal needs
+    /// router-side accounting).
+    rebalanced: AtomicU64,
+}
+
+impl Route {
+    fn note_accept(&self) -> Submit {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        Submit::Accepted
+    }
 }
 
 /// Thread-safe router handle (sources share it via `Arc`).
@@ -42,28 +65,44 @@ impl Router {
         Self { routes: HashMap::new() }
     }
 
-    /// Register a pipeline: the producing half of its ring plus the
-    /// expected event geometry.
+    /// Register a sharded pipeline: the producing half of every shard
+    /// ring plus the expected event geometry.  A single-shard route
+    /// behaves exactly like the pre-pool design (one attempt, shed on
+    /// full).
+    ///
+    /// Panics on an empty shard list or a duplicate model: silently
+    /// replacing a route would orphan the old shards' producers, leaving
+    /// their workers blocked on rings that never close.
     pub fn add_route(
         &mut self,
         model: &'static str,
-        tx: Producer<TriggerEvent>,
+        shards: Vec<Producer<TriggerEvent>>,
         seq_len: usize,
         input_size: usize,
     ) {
+        assert!(!shards.is_empty(), "route '{model}' needs at least one shard");
+        assert!(
+            !self.routes.contains_key(model),
+            "route '{model}' registered twice"
+        );
         self.routes.insert(
             model,
             Route {
-                tx,
+                shards,
+                cursor: AtomicU64::new(0),
                 seq_len,
                 input_size,
                 accepted: AtomicU64::new(0),
                 shed: AtomicU64::new(0),
+                rebalanced: AtomicU64::new(0),
             },
         );
     }
 
     /// Validate + dispatch one event.
+    ///
+    /// Concurrency contract: at most one thread may submit for a given
+    /// model at a time (the shard rings are SPSC; see the module docs).
     pub fn submit(&self, event: TriggerEvent) -> Submit {
         let Some(route) = self.routes.get(event.model) else {
             return Submit::UnknownModel;
@@ -71,30 +110,55 @@ impl Router {
         if event.x.rows() != route.seq_len || event.x.cols() != route.input_size {
             return Submit::BadShape;
         }
-        match route.tx.try_push(event) {
-            Ok(()) => {
-                route.accepted.fetch_add(1, Ordering::Relaxed);
-                Submit::Accepted
-            }
-            Err(_) => {
+        let n = route.shards.len();
+        let rr = (route.cursor.fetch_add(1, Ordering::Relaxed) as usize) % n;
+        match route.shards[rr].try_push(event) {
+            Ok(()) => route.note_accept(),
+            Err(event) => {
+                // round-robin shard full: overflow to the least-loaded
+                // other shard before giving up (with one shard this is
+                // the seed behavior: single attempt, then shed)
+                if n > 1 {
+                    if let Some(alt) = (0..n)
+                        .filter(|&i| i != rr)
+                        .min_by_key(|&i| route.shards[i].len())
+                    {
+                        if route.shards[alt].try_push(event).is_ok() {
+                            route.rebalanced.fetch_add(1, Ordering::Relaxed);
+                            return route.note_accept();
+                        }
+                    }
+                }
                 route.shed.fetch_add(1, Ordering::Relaxed);
                 Submit::Shed
             }
         }
     }
 
-    /// Close every pipeline (drain + shut down).
+    /// Close every shard of every pipeline (drain + shut down).
     pub fn close_all(&self) {
         for r in self.routes.values() {
-            r.tx.close();
+            for s in &r.shards {
+                s.close();
+            }
         }
     }
 
-    /// (accepted, shed) counters for a model.
+    /// (accepted, shed) counters for a model, summed over shards.
     pub fn counters(&self, model: &str) -> Option<(u64, u64)> {
         self.routes.get(model).map(|r| {
             (r.accepted.load(Ordering::Relaxed), r.shed.load(Ordering::Relaxed))
         })
+    }
+
+    /// Events accepted via overflow to a non-round-robin shard.
+    pub fn rebalanced(&self, model: &str) -> Option<u64> {
+        self.routes.get(model).map(|r| r.rebalanced.load(Ordering::Relaxed))
+    }
+
+    /// Worker-pool width of a model's route.
+    pub fn replicas(&self, model: &str) -> Option<usize> {
+        self.routes.get(model).map(|r| r.shards.len())
     }
 
     pub fn models(&self) -> Vec<&'static str> {
@@ -114,14 +178,23 @@ pub type SharedRouter = Arc<Router>;
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::spsc::ring;
+    use crate::coordinator::spsc::{ring, Consumer};
     use crate::nn::tensor::Mat;
 
-    fn router_with_engine(cap: usize) -> (Router, super::super::spsc::Consumer<TriggerEvent>) {
-        let (tx, rx) = ring(cap);
+    fn router_with_engine(
+        cap: usize,
+        shards: usize,
+    ) -> (Router, Vec<Consumer<TriggerEvent>>) {
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..shards {
+            let (tx, rx) = ring(cap);
+            txs.push(tx);
+            rxs.push(rx);
+        }
         let mut r = Router::new();
-        r.add_route("engine", tx, 50, 1);
-        (r, rx)
+        r.add_route("engine", txs, 50, 1);
+        (r, rxs)
     }
 
     fn ev(model: &'static str, rows: usize, cols: usize) -> TriggerEvent {
@@ -130,15 +203,15 @@ mod tests {
 
     #[test]
     fn accepts_valid_events() {
-        let (r, rx) = router_with_engine(8);
+        let (r, rxs) = router_with_engine(8, 1);
         assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
-        assert_eq!(rx.try_pop().unwrap().model, "engine");
+        assert_eq!(rxs[0].try_pop().unwrap().model, "engine");
         assert_eq!(r.counters("engine").unwrap(), (1, 0));
     }
 
     #[test]
     fn rejects_unknown_model_and_bad_shape() {
-        let (r, _rx) = router_with_engine(8);
+        let (r, _rxs) = router_with_engine(8, 1);
         assert_eq!(r.submit(ev("nope", 50, 1)), Submit::UnknownModel);
         assert_eq!(r.submit(ev("engine", 49, 1)), Submit::BadShape);
         assert_eq!(r.counters("engine").unwrap(), (0, 0));
@@ -146,11 +219,79 @@ mod tests {
 
     #[test]
     fn sheds_on_full_ring() {
-        let (r, _rx) = router_with_engine(2);
+        let (r, _rxs) = router_with_engine(2, 1);
         assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
         assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
         assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Shed);
         let (acc, shed) = r.counters("engine").unwrap();
         assert_eq!((acc, shed), (2, 1));
+    }
+
+    #[test]
+    fn round_robin_spreads_across_shards() {
+        let (r, rxs) = router_with_engine(8, 4);
+        for _ in 0..8 {
+            assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        }
+        for rx in &rxs {
+            assert_eq!(rx.len(), 2, "round-robin must spread evenly");
+        }
+        assert_eq!(r.rebalanced("engine").unwrap(), 0);
+        assert_eq!(r.replicas("engine").unwrap(), 4);
+    }
+
+    #[test]
+    fn overflow_goes_to_least_loaded_shard() {
+        // fill both shards round-robin, drain shard 1, then hit the full
+        // round-robin target (shard 0): the event must overflow onto the
+        // now-empty shard 1 instead of shedding
+        let (r, rxs) = router_with_engine(2, 2);
+        for _ in 0..4 {
+            assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        }
+        assert_eq!(rxs[0].len(), 2);
+        assert_eq!(rxs[1].len(), 2);
+        while rxs[1].try_pop().is_some() {}
+        // cursor is at 4 -> next round-robin pick is the full shard 0
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        assert_eq!(rxs[1].len(), 1, "overflow landed on the drained shard");
+        assert_eq!(r.rebalanced("engine").unwrap(), 1);
+        assert_eq!(r.counters("engine").unwrap(), (5, 0));
+    }
+
+    #[test]
+    fn sheds_only_when_every_shard_is_full() {
+        let (r, _rxs) = router_with_engine(2, 3);
+        // 3 shards x capacity 2 = 6 slots; all six submits must land
+        for _ in 0..6 {
+            assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        }
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Shed);
+        let (acc, shed) = r.counters("engine").unwrap();
+        assert_eq!((acc, shed), (6, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn duplicate_route_registration_panics() {
+        // silently replacing a route would orphan the old shards and
+        // leave their workers blocked forever — fail loudly instead
+        let (tx1, _rx1) = ring(4);
+        let (tx2, _rx2) = ring(4);
+        let mut r = Router::new();
+        r.add_route("engine", vec![tx1], 50, 1);
+        r.add_route("engine", vec![tx2], 50, 1);
+    }
+
+    #[test]
+    fn single_shard_route_keeps_seed_semantics() {
+        // one shard: a full ring sheds immediately (no rebalance attempt)
+        let (r, _rxs) = router_with_engine(2, 1);
+        for _ in 0..2 {
+            assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        }
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Shed);
+        assert_eq!(r.rebalanced("engine").unwrap(), 0);
+        assert_eq!(r.replicas("engine").unwrap(), 1);
     }
 }

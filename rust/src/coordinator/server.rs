@@ -1,6 +1,15 @@
-//! The trigger server: sources -> router -> per-model batcher+backend
-//! workers -> aggregated report.  This is the end-to-end serving driver
-//! of the reproduction (EXPERIMENTS.md E6).
+//! The trigger server: sources -> router -> sharded per-model worker
+//! pools (N replicas x batcher+backend) -> aggregated report.  This is
+//! the end-to-end serving driver of the reproduction (EXPERIMENTS.md E6).
+//!
+//! Each pipeline owns `replicas` independent shards.  A shard is one
+//! SPSC ring consumed by one worker thread running its own [`Batcher`]
+//! and its own [`Backend`] instance (PJRT replicas each own their
+//! client; no cross-thread sharing).  The router fans sources out across
+//! the shards round-robin, overflowing to the least-loaded shard under
+//! momentary backpressure; per-shard stats are folded into the per-model
+//! report at shutdown.  `replicas = 1` reproduces the original
+//! single-worker pipeline exactly.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -39,8 +48,12 @@ pub struct PipelineConfig {
     pub backend: BackendKind,
     pub quant: QuantConfig,
     pub batch: BatchPolicy,
+    /// Capacity of each shard's ring (not the pool total).
     pub ring_capacity: usize,
     pub weights: WeightsSource,
+    /// Worker-pool width: number of batcher+backend replicas serving
+    /// this model.  1 reproduces the original single-worker pipeline.
+    pub replicas: usize,
 }
 
 impl PipelineConfig {
@@ -52,7 +65,14 @@ impl PipelineConfig {
             batch: BatchPolicy::default(),
             ring_capacity: 1024,
             weights: WeightsSource::Artifacts,
+            replicas: 1,
         }
+    }
+
+    /// Builder-style override of the worker-pool width.
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
     }
 }
 
@@ -108,6 +128,26 @@ impl std::fmt::Display for ServerReport {
                     .map(|a| format!(" auc={a:.4}"))
                     .unwrap_or_default()
             )?;
+            // shard breakdown only matters for real pools
+            if s.shards.len() > 1 {
+                writeln!(
+                    f,
+                    "    pool: {} shards, {} events rebalanced off a full round-robin shard",
+                    s.shards.len(),
+                    s.rebalanced
+                )?;
+                for sh in &s.shards {
+                    writeln!(
+                        f,
+                        "    shard {}: accepted={} batches={} fill={:.2} {}",
+                        sh.shard,
+                        sh.accepted,
+                        sh.batches,
+                        sh.mean_batch_fill(),
+                        sh.latency.summary(),
+                    )?;
+                }
+            }
         }
         Ok(())
     }
@@ -121,81 +161,116 @@ impl TriggerServer {
     /// quota and every event is scored; return the aggregated report.
     pub fn run(cfg: &ServerConfig) -> Result<ServerReport> {
         let t0 = Instant::now();
-        let mut router = Router::new();
-        let mut workers = Vec::new();
-        // readiness barrier: sources must not fire until every backend
-        // is built (PJRT compilation takes seconds; without the barrier
-        // the rings fill with stale events and latency numbers measure
-        // compile time, not serving)
-        let ready = Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
-
-        // per-model pipelines
+        // reject duplicate models before any threads spawn: a duplicate
+        // route would orphan the first pipeline's pool (workers blocked
+        // on rings nobody closes)
+        {
+            let mut seen = std::collections::HashSet::new();
+            for pc in &cfg.pipelines {
+                anyhow::ensure!(
+                    seen.insert(pc.model),
+                    "duplicate pipeline for model '{}'",
+                    pc.model
+                );
+            }
+        }
+        // resolve every pipeline's model + weights BEFORE spawning any
+        // thread: a failure past the first spawn would leak an entire
+        // pool (workers blocked on rings nobody ever closes)
+        let mut resolved = Vec::with_capacity(cfg.pipelines.len());
         for pc in &cfg.pipelines {
             let zoo = zoo_model(pc.model)
                 .with_context(|| format!("unknown zoo model '{}'", pc.model))?;
             let mcfg = zoo.config.clone();
-            let weights = load_weights(&cfg.artifacts_dir, pc, &mcfg)?;
-            let (tx, rx) = spsc::ring::<TriggerEvent>(pc.ring_capacity);
-            router.add_route(pc.model, tx, mcfg.seq_len, mcfg.input_size);
-            let pc = pc.clone();
-            let artifacts = cfg.artifacts_dir.clone();
-            let ready_w = ready.clone();
-            workers.push(std::thread::spawn(move || -> Result<(
-                &'static str,
-                PipelineStats,
-            )> {
-                // PJRT runtime is created inside the worker so each
-                // pipeline owns its client (no cross-thread sharing).
-                let runtime = if pc.backend == BackendKind::Pjrt {
-                    Some(Runtime::cpu()?)
-                } else {
-                    None
-                };
-                let backend = Backend::build(
-                    pc.backend,
-                    &mcfg,
-                    &weights,
-                    pc.quant,
-                    runtime.as_ref(),
-                    &artifacts,
-                );
-                // signal readiness whether the build succeeded or not,
-                // so a failed pipeline can't deadlock the sources
-                {
-                    let (lock, cv) = &*ready_w;
-                    *lock.lock().unwrap() += 1;
-                    cv.notify_all();
-                }
-                let backend = backend?;
-                let mut batcher = Batcher::new(pc.batch, rx);
-                let mut stats = PipelineStats::default();
-                while let Some(batch) = batcher.next_batch() {
-                    let mats: Vec<&Mat> = batch.iter().map(|e| &e.x).collect();
-                    let probs = backend.infer(&mats)?;
-                    let now = Instant::now();
-                    stats.batches += 1;
-                    stats.batch_fill_sum += batch.len() as u64;
-                    for (e, p) in batch.iter().zip(&probs) {
-                        stats.accepted += 1;
-                        let lat = now.duration_since(e.t_arrival);
-                        stats.latency.record_duration(lat);
-                        if let Some(label) = e.label {
-                            stats.scored_pos.push(backend.score(p));
-                            stats.scored_labels.push((label == 1) as u8);
+            let weights = Arc::new(load_weights(&cfg.artifacts_dir, pc, &mcfg)?);
+            resolved.push((pc, mcfg, weights));
+        }
+
+        let mut router = Router::new();
+        let mut workers = Vec::new();
+        // readiness barrier: sources must not fire until every replica's
+        // backend is built (PJRT compilation takes seconds; without the
+        // barrier the rings fill with stale events and latency numbers
+        // measure compile time, not serving)
+        let total_workers: usize =
+            cfg.pipelines.iter().map(|p| p.replicas.max(1)).sum();
+        let ready = Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
+
+        // per-model worker pools
+        for (pc, mcfg, weights) in resolved {
+            let replicas = pc.replicas.max(1);
+            let mut shard_txs = Vec::with_capacity(replicas);
+            for shard in 0..replicas {
+                let (tx, rx) = spsc::ring::<TriggerEvent>(pc.ring_capacity);
+                shard_txs.push(tx);
+                let pc = pc.clone();
+                let mcfg = mcfg.clone();
+                let weights = weights.clone();
+                let artifacts = cfg.artifacts_dir.clone();
+                let ready_w = ready.clone();
+                workers.push(std::thread::spawn(move || -> Result<(
+                    &'static str,
+                    usize,
+                    PipelineStats,
+                )> {
+                    // each replica owns its backend (and, for PJRT, its
+                    // own client — no cross-thread sharing).  The build
+                    // result is held until *after* the readiness signal
+                    // so a failed replica can't deadlock the sources.
+                    let built = (|| -> Result<(Option<Runtime>, Backend)> {
+                        let runtime = if pc.backend == BackendKind::Pjrt {
+                            Some(Runtime::cpu()?)
+                        } else {
+                            None
+                        };
+                        let backend = Backend::build(
+                            pc.backend,
+                            &mcfg,
+                            &weights,
+                            pc.quant,
+                            runtime.as_ref(),
+                            &artifacts,
+                        )?;
+                        Ok((runtime, backend))
+                    })();
+                    {
+                        let (lock, cv) = &*ready_w;
+                        *lock.lock().unwrap() += 1;
+                        cv.notify_all();
+                    }
+                    // keep the runtime alive as long as its executables
+                    let (_runtime, backend) = built?;
+                    let mut batcher = Batcher::new(pc.batch, rx);
+                    let mut stats = PipelineStats::default();
+                    while let Some(batch) = batcher.next_batch() {
+                        let mats: Vec<&Mat> = batch.iter().map(|e| &e.x).collect();
+                        let probs = backend.infer(&mats)?;
+                        let now = Instant::now();
+                        stats.batches += 1;
+                        stats.batch_fill_sum += batch.len() as u64;
+                        for (e, p) in batch.iter().zip(&probs) {
+                            stats.accepted += 1;
+                            let lat = now.duration_since(e.t_arrival);
+                            stats.latency.record_duration(lat);
+                            if let Some(label) = e.label {
+                                stats.scored_pos.push(backend.score(p));
+                                stats.scored_labels.push((label == 1) as u8);
+                            }
                         }
                     }
-                }
-                Ok((pc.model, stats))
-            }));
+                    Ok((pc.model, shard, stats))
+                }));
+            }
+            router.add_route(pc.model, shard_txs, mcfg.seq_len, mcfg.input_size);
         }
 
         let router = Arc::new(router);
 
-        // wait for all backends (see `ready` above)
+        // wait for all replicas (see `ready` above)
         {
             let (lock, cv) = &*ready;
             let mut count = lock.lock().unwrap();
-            while *count < cfg.pipelines.len() {
+            while *count < total_workers {
                 count = cv.wait(count).unwrap();
             }
         }
@@ -249,11 +324,23 @@ impl TriggerServer {
         }
         router.close_all();
 
-        let mut per_model = HashMap::new();
+        // fold per-shard worker stats into per-model totals, in shard
+        // order so the aggregation is deterministic
+        let mut shard_results = Vec::with_capacity(workers.len());
         for w in workers {
-            let (model, mut stats) = w.join().expect("worker thread")?;
+            shard_results.push(w.join().expect("worker thread")?);
+        }
+        shard_results.sort_by_key(|(model, shard, _)| (*model, *shard));
+        let mut per_model: HashMap<&'static str, PipelineStats> = HashMap::new();
+        for (model, shard, stats) in &shard_results {
+            per_model
+                .entry(*model)
+                .or_default()
+                .absorb_shard(*shard, stats);
+        }
+        for (model, stats) in per_model.iter_mut() {
             stats.dropped = source_shed.get(model).copied().unwrap_or(0);
-            per_model.insert(model, stats);
+            stats.rebalanced = router.rebalanced(model).unwrap_or(0);
         }
 
         Ok(ServerReport { per_model, wall: t0.elapsed() })
@@ -299,6 +386,7 @@ mod tests {
         assert!(s.accepted > 0);
         assert!(s.latency.count() == s.accepted);
         assert!(s.online_auc().is_some());
+        assert_eq!(s.shards.len(), 1, "default is a single-replica pool");
     }
 
     #[test]
@@ -332,5 +420,96 @@ mod tests {
         let s = &report.per_model["engine"];
         assert_eq!(s.accepted + s.dropped, 500);
         assert!(s.dropped > 0, "expected shedding under overload");
+    }
+
+    #[test]
+    fn sharded_pool_serves_every_event_with_shard_accounting() {
+        let mut cfg = base_cfg(BackendKind::Float, 300);
+        cfg.pipelines[0].replicas = 3;
+        let report = TriggerServer::run(&cfg).unwrap();
+        let s = &report.per_model["engine"];
+        // ring capacity (1024/shard) dwarfs the event count: no shedding
+        assert_eq!(s.accepted, 300);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.shards.len(), 3);
+        assert_eq!(s.shards.iter().map(|sh| sh.accepted).sum::<u64>(), 300);
+        assert_eq!(
+            s.shards.iter().map(|sh| sh.batches).sum::<u64>(),
+            s.batches
+        );
+        assert_eq!(
+            s.shards.iter().map(|sh| sh.latency.count()).sum::<u64>(),
+            s.latency.count()
+        );
+        // rebalanced events are a subset of accepted ones
+        assert!(s.rebalanced <= s.accepted);
+        // the report renders the shard breakdown
+        let text = format!("{report}");
+        assert!(text.contains("shard 0:") && text.contains("shard 2:"), "{text}");
+        assert!(text.contains("rebalanced"), "{text}");
+    }
+
+    #[test]
+    fn sharded_auc_is_bit_identical_to_single_replica() {
+        // same deterministic source + weights, no shedding in either run
+        // => identical score *sets*; the rank-based AUC is order-free, so
+        // the two pools must agree exactly
+        let run = |replicas: usize| {
+            let mut cfg = base_cfg(BackendKind::Float, 240);
+            cfg.pipelines[0].replicas = replicas;
+            let report = TriggerServer::run(&cfg).unwrap();
+            let s = &report.per_model["engine"];
+            assert_eq!(s.dropped, 0, "ring must not shed at this event count");
+            s.online_auc().unwrap()
+        };
+        let single = run(1);
+        let pooled = run(4);
+        assert!(
+            (single - pooled).abs() < 1e-12,
+            "replicas=1 auc {single} vs replicas=4 auc {pooled}"
+        );
+    }
+
+    #[test]
+    fn later_pipeline_setup_error_is_a_clean_err() {
+        // an unknown model in the *second* pipeline must fail during
+        // up-front resolution, before the first pipeline's pool spawns
+        let mut cfg = base_cfg(BackendKind::Float, 10);
+        cfg.pipelines.push(PipelineConfig {
+            weights: WeightsSource::Synthetic(2),
+            ..PipelineConfig::new("bogus", BackendKind::Float)
+        });
+        let err = TriggerServer::run(&cfg);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("bogus"));
+    }
+
+    #[test]
+    fn duplicate_model_pipelines_error_before_spawning() {
+        // a duplicate route would orphan the first pool; must be a clean
+        // Err up front, not a hang at join time
+        let mut cfg = base_cfg(BackendKind::Float, 10);
+        cfg.pipelines.push(cfg.pipelines[0].clone());
+        let err = TriggerServer::run(&cfg);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("duplicate pipeline"));
+    }
+
+    #[test]
+    fn zero_replicas_clamps_to_one() {
+        let mut cfg = base_cfg(BackendKind::Float, 50);
+        cfg.pipelines[0].replicas = 0;
+        let report = TriggerServer::run(&cfg).unwrap();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted + s.dropped, 50);
+        assert_eq!(s.shards.len(), 1);
+    }
+
+    #[test]
+    fn with_replicas_builder() {
+        let pc = PipelineConfig::new("engine", BackendKind::Float).with_replicas(4);
+        assert_eq!(pc.replicas, 4);
+        let d = PipelineConfig::new("engine", BackendKind::Float);
+        assert_eq!(d.replicas, 1, "default stays single-replica");
     }
 }

@@ -81,6 +81,19 @@ impl<T: Send> Producer<T> {
         let head = self.inner.head.load(Ordering::Acquire);
         tail.wrapping_sub(head) > self.inner.mask
     }
+
+    /// Events currently queued (a snapshot: the consumer may drain
+    /// concurrently).  The router uses this as the load signal when
+    /// overflowing a full round-robin shard to the least-loaded one.
+    pub fn len(&self) -> usize {
+        let tail = self.inner.tail.load(Ordering::Relaxed);
+        let head = self.inner.head.load(Ordering::Acquire);
+        tail.wrapping_sub(head) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 impl<T: Send> Consumer<T> {
@@ -163,6 +176,17 @@ mod tests {
             assert_eq!(c.try_pop(), Some(i));
         }
         assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn producer_len_tracks_occupancy() {
+        let (p, c) = ring::<u32>(8);
+        assert!(p.is_empty());
+        p.try_push(1).unwrap();
+        p.try_push(2).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(c.try_pop(), Some(1));
+        assert_eq!(p.len(), 1);
     }
 
     #[test]

@@ -1,19 +1,52 @@
 //! Per-pipeline counters and the aggregated serving report.
+//!
+//! With sharded worker pools each replica (shard) keeps its own local
+//! [`PipelineStats`]; the server folds them into one per-model total via
+//! [`PipelineStats::absorb_shard`], which also records a [`ShardStats`]
+//! snapshot per replica so pool imbalance is visible in the report.
 
 use crate::metrics::LatencyHistogram;
 
-/// Counters for one model pipeline.
+/// Per-replica (shard) accounting within one model's worker pool.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Shard index within the pool (0..replicas).
+    pub shard: usize,
+    pub accepted: u64,
+    pub batches: u64,
+    pub batch_fill_sum: u64,
+    pub latency: LatencyHistogram,
+}
+
+impl ShardStats {
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_fill_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Counters for one model pipeline (a whole worker pool).
 #[derive(Clone, Debug, Default)]
 pub struct PipelineStats {
     pub accepted: u64,
     /// Events rejected at the source ring (backpressure drops).
     pub dropped: u64,
+    /// Events that overflowed their round-robin shard and were accepted
+    /// by the least-loaded one instead (pool imbalance signal; always 0
+    /// for a single-replica pipeline).
+    pub rebalanced: u64,
     pub batches: u64,
     pub batch_fill_sum: u64,
     pub latency: LatencyHistogram,
     /// Online classification accounting (when labels are known).
     pub scored_pos: Vec<f32>,
     pub scored_labels: Vec<u8>,
+    /// Per-shard view of the pool (empty on worker-local stats; one
+    /// entry per replica after server aggregation).
+    pub shards: Vec<ShardStats>,
 }
 
 impl PipelineStats {
@@ -26,6 +59,8 @@ impl PipelineStats {
     }
 
     /// Online AUC over the scored stream (when generated with labels).
+    /// Rank-based and therefore independent of the shard interleaving
+    /// order the scores arrived in.
     pub fn online_auc(&self) -> Option<f64> {
         if self.scored_labels.is_empty() {
             return None;
@@ -33,14 +68,36 @@ impl PipelineStats {
         Some(crate::metrics::binary_auc(&self.scored_pos, &self.scored_labels))
     }
 
+    /// Fold one replica's worker-local stats into this per-model total,
+    /// recording the shard-level snapshot.
+    pub fn absorb_shard(&mut self, shard: usize, s: &PipelineStats) {
+        self.shards.push(ShardStats {
+            shard,
+            accepted: s.accepted,
+            batches: s.batches,
+            batch_fill_sum: s.batch_fill_sum,
+            latency: s.latency.clone(),
+        });
+        self.accepted += s.accepted;
+        self.dropped += s.dropped;
+        self.rebalanced += s.rebalanced;
+        self.batches += s.batches;
+        self.batch_fill_sum += s.batch_fill_sum;
+        self.latency.merge(&s.latency);
+        self.scored_pos.extend_from_slice(&s.scored_pos);
+        self.scored_labels.extend_from_slice(&s.scored_labels);
+    }
+
     pub fn merge(&mut self, other: &PipelineStats) {
         self.accepted += other.accepted;
         self.dropped += other.dropped;
+        self.rebalanced += other.rebalanced;
         self.batches += other.batches;
         self.batch_fill_sum += other.batch_fill_sum;
         self.latency.merge(&other.latency);
         self.scored_pos.extend_from_slice(&other.scored_pos);
         self.scored_labels.extend_from_slice(&other.scored_labels);
+        self.shards.extend(other.shards.iter().cloned());
     }
 }
 
@@ -75,5 +132,57 @@ mod tests {
         assert_eq!(a.accepted, 7);
         assert_eq!(a.dropped, 1);
         assert_eq!(a.scored_pos.len(), 1);
+    }
+
+    #[test]
+    fn absorb_shard_sums_to_model_total() {
+        let mut total = PipelineStats::default();
+        for shard in 0..3usize {
+            let mut s = PipelineStats::default();
+            s.accepted = 10 + shard as u64;
+            s.batches = 2;
+            s.batch_fill_sum = 10 + shard as u64;
+            s.latency.record(1000 * (shard as u64 + 1));
+            s.scored_pos.push(0.5);
+            s.scored_labels.push((shard % 2) as u8);
+            total.absorb_shard(shard, &s);
+        }
+        assert_eq!(total.accepted, 33);
+        assert_eq!(total.batches, 6);
+        assert_eq!(total.latency.count(), 3);
+        assert_eq!(total.shards.len(), 3);
+        assert_eq!(
+            total.shards.iter().map(|s| s.accepted).sum::<u64>(),
+            total.accepted
+        );
+        assert_eq!(
+            total.shards.iter().map(|s| s.latency.count()).sum::<u64>(),
+            total.latency.count()
+        );
+        assert_eq!(total.shards[2].shard, 2);
+    }
+
+    #[test]
+    fn single_shard_absorb_is_identity_on_totals() {
+        // replicas=1 must reproduce the unsharded accounting exactly
+        let mut s = PipelineStats::default();
+        s.accepted = 7;
+        s.batches = 2;
+        s.batch_fill_sum = 7;
+        s.latency.record(500);
+        s.latency.record(900);
+        s.scored_pos.extend([0.1, 0.9]);
+        s.scored_labels.extend([0, 1]);
+        let mut total = PipelineStats::default();
+        total.absorb_shard(0, &s);
+        assert_eq!(total.accepted, s.accepted);
+        assert_eq!(total.batches, s.batches);
+        assert_eq!(total.batch_fill_sum, s.batch_fill_sum);
+        assert_eq!(total.latency.count(), s.latency.count());
+        assert_eq!(total.latency.mean_ns(), s.latency.mean_ns());
+        assert_eq!(total.scored_pos, s.scored_pos);
+        assert_eq!(total.scored_labels, s.scored_labels);
+        assert_eq!(total.online_auc(), s.online_auc());
+        assert_eq!(total.shards.len(), 1);
     }
 }

@@ -16,8 +16,13 @@
 //! * [`data`] — synthetic stand-ins for FordA / CMS b-tagging / LIGO O3a.
 //! * [`metrics`] — ROC-AUC, accuracy, latency histograms.
 //! * [`quant`] — post-training-quantization sweep engine (Figures 9-11).
-//! * [`runtime`] — PJRT client over the AOT artifacts (`*.hlo.txt`).
-//! * [`coordinator`] — the trigger-style streaming server (L3).
+//! * [`runtime`] — PJRT client over the AOT artifacts (`*.hlo.txt`);
+//!   gated behind the `pjrt` cargo feature (stubbed otherwise).
+//! * [`coordinator`] — the trigger-style streaming server (L3): sharded
+//!   per-model worker pools (`PipelineConfig::replicas` batcher+backend
+//!   shards behind a round-robin, least-loaded-overflow router).  The
+//!   `e2e_serving` bench sweeps pool widths 1/2/4/8 at fixed offered
+//!   load and emits `BENCH_JSON` lines for CI perf archiving.
 //! * [`experiments`] — regenerates every table and figure of the paper.
 //! * [`testutil`] — property-test driver (offline proptest stand-in).
 

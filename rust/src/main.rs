@@ -8,7 +8,7 @@
 //! repro figure-auc        --model engine|btag|gw [--events N] [--threads T] [--quick]
 //! repro figure-resources  --model engine|btag|gw
 //! repro synth             --model <m> [--reuse R] [--int I] [--frac F]
-//! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B]
+//! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B] [--replicas R]
 //! repro report            (everything above, in sequence)
 //! ```
 
@@ -51,6 +51,7 @@ fn usage() {
          \x20 figure-resources --model <m>        Figures 12-14 (resources)\n\
          \x20 synth            --model <m>        one synthesis report\n\
          \x20 serve            --backend <b>      run the trigger server\n\
+         \x20                  [--replicas R]     worker-pool width per model\n\
          \x20 report                              all experiments in sequence\n\
          models: engine | btag | gw    backends: float | hls | pjrt"
     );
@@ -124,7 +125,7 @@ fn run(args: &Args) -> Result<()> {
             );
         }
         "serve" => {
-            args.expect_only(&["backend", "events", "rate", "batch", "models"])
+            args.expect_only(&["backend", "events", "rate", "batch", "models", "replicas"])
                 .map_err(anyhow::Error::msg)?;
             let backend: BackendKind = args
                 .get_or("backend", "float")
@@ -133,6 +134,8 @@ fn run(args: &Args) -> Result<()> {
             let events = args.get_parse("events", 5000u64).map_err(anyhow::Error::msg)?;
             let rate = args.get_parse("rate", 0u64).map_err(anyhow::Error::msg)?;
             let batch = args.get_parse("batch", 8usize).map_err(anyhow::Error::msg)?;
+            let replicas = args.get_parse("replicas", 1usize).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
             let models: Vec<&'static str> = match args.get_or("models", "engine,btag,gw") {
                 "all" => vec!["engine", "btag", "gw"],
                 list => list
@@ -150,6 +153,7 @@ fn run(args: &Args) -> Result<()> {
                     .map(|m| {
                         let mut pc = PipelineConfig::new(m, backend);
                         pc.batch = BatchPolicy { max_batch: batch, ..Default::default() };
+                        pc.replicas = replicas;
                         pc
                     })
                     .collect(),

@@ -1,7 +1,20 @@
 //! PJRT runtime (S9): loads the AOT artifacts (`artifacts/*.hlo.txt`,
 //! HLO **text** — see DESIGN.md §3) and executes them on the CPU PJRT
 //! client via the `xla` crate.  Python is never involved at runtime.
+//!
+//! The `xla` bindings (vendored xla_extension 0.5.1) only exist in the
+//! offline build image, so the real client is gated behind the `pjrt`
+//! cargo feature.  Without it, [`stub`] provides the same API surface
+//! with a `Runtime::cpu()` that returns a clean error — every non-PJRT
+//! backend (float / hls) and the whole tier-1 test suite work in any
+//! environment.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
-
+#[cfg(feature = "pjrt")]
 pub use client::{Executable, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, Runtime};

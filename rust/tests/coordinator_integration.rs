@@ -99,7 +99,7 @@ fn overload_sheds_and_recovers() {
 fn router_validates_before_queueing() {
     let (tx, _rx) = spsc::ring::<TriggerEvent>(8);
     let mut router = Router::new();
-    router.add_route("engine", tx, 50, 1);
+    router.add_route("engine", vec![tx], 50, 1);
     assert_eq!(
         router.submit(TriggerEvent::new(0, "engine", Mat::zeros(50, 1), None)),
         Submit::Accepted
@@ -125,6 +125,94 @@ fn unknown_model_in_config_is_an_error() {
     // zoo lookup fails before any thread spawns
     assert!(std::panic::catch_unwind(|| TriggerServer::run(&cfg)).is_err()
         || TriggerServer::run(&cfg).is_err());
+}
+
+#[test]
+fn four_replica_pool_scores_every_event_exactly_once() {
+    // 4-replica pool, synthetic weights, ample rings: every event must
+    // be scored exactly once (no drops, no duplicates), and the shard
+    // stats must sum to the per-model totals
+    let n = 600u64;
+    let mut pc = pipeline("engine", BackendKind::Float);
+    pc.replicas = 4;
+    let cfg = ServerConfig {
+        pipelines: vec![pc],
+        events_per_source: n,
+        rate_per_source: 0,
+        artifacts_dir: PathBuf::from("."),
+    };
+    let report = TriggerServer::run(&cfg).unwrap();
+    let s = &report.per_model["engine"];
+    // no drops: per-shard rings (1024 each) dwarf the event count
+    assert_eq!(s.dropped, 0);
+    // no loss, no duplication: exactly n scored, exactly n latencies,
+    // exactly n labeled scores (the synthetic source labels everything)
+    assert_eq!(s.accepted, n);
+    assert_eq!(s.latency.count(), n);
+    assert_eq!(s.scored_labels.len(), n as usize);
+    assert_eq!(s.scored_pos.len(), n as usize);
+    // shard accounting closes over the model totals
+    assert_eq!(s.shards.len(), 4);
+    assert_eq!(s.shards.iter().map(|sh| sh.accepted).sum::<u64>(), s.accepted);
+    assert_eq!(s.shards.iter().map(|sh| sh.batches).sum::<u64>(), s.batches);
+    assert_eq!(
+        s.shards.iter().map(|sh| sh.batch_fill_sum).sum::<u64>(),
+        s.batch_fill_sum
+    );
+    assert_eq!(
+        s.shards.iter().map(|sh| sh.latency.count()).sum::<u64>(),
+        s.latency.count()
+    );
+}
+
+#[test]
+fn replica_count_does_not_change_scores() {
+    // the same deterministic event stream through pools of width 1 and 4
+    // must produce the identical online AUC: the score *set* is
+    // identical and the rank statistic is order-independent
+    let run = |replicas: usize| {
+        let mut pc = pipeline("engine", BackendKind::Float);
+        pc.replicas = replicas;
+        let cfg = ServerConfig {
+            pipelines: vec![pc],
+            events_per_source: 300,
+            rate_per_source: 0,
+            artifacts_dir: PathBuf::from("."),
+        };
+        let report = TriggerServer::run(&cfg).unwrap();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.dropped, 0, "run must not shed for the comparison to hold");
+        s.online_auc().unwrap()
+    };
+    let single = run(1);
+    let pooled = run(4);
+    assert!(
+        (single - pooled).abs() < 1e-12,
+        "replicas=1 auc {single} vs replicas=4 auc {pooled}"
+    );
+}
+
+#[test]
+fn sharded_overload_sheds_only_when_all_shards_full() {
+    // tiny rings + expensive backend: the pool must shed under overload,
+    // and the exactly-once accounting must still close
+    let mut pc = pipeline("gw", BackendKind::Hls);
+    pc.replicas = 2;
+    pc.ring_capacity = 2;
+    pc.batch = BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(50) };
+    let cfg = ServerConfig {
+        pipelines: vec![pc],
+        events_per_source: 200,
+        rate_per_source: 0,
+        artifacts_dir: PathBuf::from("."),
+    };
+    let report = TriggerServer::run(&cfg).unwrap();
+    let s = &report.per_model["gw"];
+    assert_eq!(s.accepted + s.dropped, 200);
+    assert!(s.dropped > 0, "expected shedding");
+    assert_eq!(s.latency.count(), s.accepted);
+    assert_eq!(s.shards.len(), 2);
+    assert_eq!(s.shards.iter().map(|sh| sh.accepted).sum::<u64>(), s.accepted);
 }
 
 #[test]

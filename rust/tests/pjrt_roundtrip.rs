@@ -1,6 +1,10 @@
 //! PJRT round-trip: load the AOT HLO-text artifacts, execute them on the
 //! CPU client, and compare against the jax-recorded LUT-path logits —
 //! the production serving path end to end.
+//!
+//! Compiled only with `--features pjrt`: without the vendored `xla`
+//! crate the runtime is a stub and there is nothing to round-trip.
+#![cfg(feature = "pjrt")]
 
 use hls4ml_transformer::artifacts_dir;
 use hls4ml_transformer::models::zoo::zoo;
