@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_JSON trajectories (advisory perf report for CI).
+
+Usage: bench_diff.py PREV.json CURR.json [--key throughput_eps]
+
+Each file holds one JSON object per line with a "bench" name plus numeric
+fields (see rust/benches/harness.rs::json_line).  Lines are joined on the
+bench name; for every bench present in both runs the chosen metric's
+relative change is printed, with the batch-native serving sweep
+(`e2e_serving/batch_sweep/...`) broken out first — that's the trajectory
+the batched-execution work is measured by.
+
+Exit code is always 0: shared-runner perf is noisy, so this report is
+advisory and must never fail the job.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    out = {}
+    try:
+        with open(path, encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                name = rec.get("bench")
+                if isinstance(name, str):
+                    # last occurrence wins (benches may append reruns)
+                    out[name] = rec
+    except OSError as e:
+        print(f"(bench_diff: cannot read {path}: {e})")
+    return out
+
+
+def metric(rec, key):
+    v = rec.get(key)
+    return v if isinstance(v, (int, float)) else None
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 0
+    prev_path, curr_path = argv[1], argv[2]
+    key = argv[argv.index("--key") + 1] if "--key" in argv else "throughput_eps"
+    prev, curr = load(prev_path), load(curr_path)
+    if not prev or not curr:
+        print(f"(bench_diff: nothing to compare — prev={len(prev)} curr={len(curr)} lines)")
+        return 0
+
+    shared = sorted(set(prev) & set(curr))
+    sweeps = [n for n in shared if "/batch_sweep/" in n]
+    others = [n for n in shared if "/batch_sweep/" not in n]
+
+    def report(names, title, fallback_key):
+        rows = []
+        for n in names:
+            k = key if metric(curr[n], key) is not None else fallback_key
+            a, b = metric(prev[n], k), metric(curr[n], k)
+            if a is None or b is None or a == 0:
+                continue
+            rows.append((n, k, a, b, (b - a) / abs(a) * 100.0))
+        if not rows:
+            return
+        print(f"\n== {title} ==")
+        for n, k, a, b, pct in rows:
+            arrow = "+" if pct >= 0 else ""
+            print(f"  {n:<60} {k}: {a:,.0f} -> {b:,.0f}  ({arrow}{pct:.1f}%)")
+
+    report(sweeps, "batch-native serving sweep vs previous run", "mean_ns")
+    report(others, "other benches vs previous run", "mean_ns")
+    dropped = sorted(set(prev) - set(curr))
+    added = sorted(set(curr) - set(prev))
+    if dropped:
+        print(f"\n(benches gone since last run: {', '.join(dropped[:10])})")
+    if added:
+        print(f"(new benches this run: {', '.join(added[:10])})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -60,6 +60,73 @@ fn run(model: &'static str, backend: BackendKind, batch: usize, events: u64) {
     }
 }
 
+/// Batch-size sweep: one model per backend at batch caps 1/2/4/8/16.
+/// Float and HLS now execute batch-native (weight-stationary kernels +
+/// scratch arena; see `nn`'s batched execution model), so throughput
+/// should climb with the cap instead of being flat — this sweep is the
+/// measurement behind that claim, and its `BENCH_JSON` lines
+/// (`e2e_serving/batch_sweep/...`) are what CI archives and diffs
+/// against the previous run.
+fn batch_sweep() {
+    harness::section("batch-native sweep: engine, batch cap 1/2/4/8/16 per backend");
+    println!("(HLS batched output is bitwise identical to per-event — see hls::transformer tests)");
+    for (backend, events) in [
+        (BackendKind::Float, 8_000u64),
+        (BackendKind::Hls, 400),
+        (BackendKind::Pjrt, 2_000),
+    ] {
+        if backend == BackendKind::Pjrt && !artifacts_ready(&artifacts_dir(), "engine") {
+            println!("  SKIP engine/Pjrt batch sweep: artifacts missing");
+            continue;
+        }
+        let mut base_eps = 0.0f64;
+        for batch in [1usize, 2, 4, 8, 16] {
+            let cfg = ServerConfig {
+                pipelines: vec![PipelineConfig {
+                    batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_micros(200) },
+                    weights: if backend == BackendKind::Pjrt {
+                        WeightsSource::Artifacts
+                    } else {
+                        WeightsSource::Synthetic(7)
+                    },
+                    ..PipelineConfig::new("engine", backend)
+                }],
+                events_per_source: events,
+                rate_per_source: 0,
+                artifacts_dir: artifacts_dir(),
+            };
+            match TriggerServer::run(&cfg) {
+                Ok(report) => {
+                    let s = &report.per_model["engine"];
+                    let eps = report.throughput_eps();
+                    if batch == 1 {
+                        base_eps = eps;
+                    }
+                    let speedup = if base_eps > 0.0 { eps / base_eps } else { f64::NAN };
+                    println!(
+                        "  {backend:6?} batch<={batch:<2} {eps:>9.0} ev/s  x{speedup:.2} vs b1  fill {:4.1}  lat {}",
+                        s.mean_batch_fill(),
+                        s.latency.summary(),
+                    );
+                    harness::json_line(
+                        &format!("e2e_serving/batch_sweep/engine/{backend:?}/b{batch}"),
+                        &[
+                            ("batch", batch as f64),
+                            ("throughput_eps", eps),
+                            ("speedup_vs_b1", speedup),
+                            ("mean_fill", s.mean_batch_fill()),
+                            ("mean_ns", s.latency.mean_ns()),
+                            ("p99_ns", s.latency.quantile_ns(0.99) as f64),
+                            ("dropped", s.dropped as f64),
+                        ],
+                    );
+                }
+                Err(e) => println!("  {backend:?} batch<={batch} FAILED: {e:#}"),
+            }
+        }
+    }
+}
+
 /// Pool-scaling sweep: the same model and offered load served by worker
 /// pools of width 1/2/4/8.  At saturating offered load a 4-wide pool
 /// should deliver >= 2x the single-replica throughput on a multi-core
@@ -127,6 +194,8 @@ fn main() {
         run(model, BackendKind::Pjrt, 8, 3000);
         println!();
     }
+
+    batch_sweep();
 
     replica_sweep();
 

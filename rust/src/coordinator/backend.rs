@@ -91,23 +91,37 @@ impl Backend {
     }
 
     /// Score a batch of events: returns per-event probabilities.
+    ///
+    /// Float and HLS execute **batch-native** (`forward_batch`): each
+    /// layer streams its weights once for the whole batch, and for HLS
+    /// the result is bitwise identical to per-event scoring (see the
+    /// bit-exactness contract in [`crate::nn`]).
     pub fn infer(&self, batch: &[&Mat]) -> Result<Vec<Vec<f32>>> {
+        if batch.is_empty() {
+            // the batcher never emits empty batches, but direct callers
+            // can — and the PJRT path would otherwise burn a full padded
+            // executable run (stub builds would error) on zero events
+            return Ok(Vec::new());
+        }
         match self {
-            Backend::Float(t) => Ok(batch
-                .iter()
-                .map(|x| t.probs(&t.forward(x)))
-                .collect()),
-            Backend::Hls(t) => Ok(batch.iter().map(|x| t.forward(x)).collect()),
+            Backend::Float(t) => {
+                Ok(t.forward_batch(batch).iter().map(|l| t.probs(l)).collect())
+            }
+            Backend::Hls(t) => Ok(t.forward_batch(batch)),
             Backend::Pjrt { cfg, b1, bn } => {
                 let logits = if batch.len() == 1 {
                     b1.run_events(batch)?
-                } else if batch.len() <= bn.batch_size() {
-                    bn.run_events(batch)?
                 } else {
-                    // split oversized batches
+                    // split oversized batches; `run_events` zero-pads a
+                    // partial chunk up to the executable's batch size and
+                    // truncates the outputs back to the real events, and
+                    // a final 1-event tail takes the batch-1 executable
+                    // instead of a mostly-padding batch-N run
                     let mut out = Vec::with_capacity(batch.len());
-                    for chunk in batch.chunks(bn.batch_size()) {
-                        out.extend(bn.run_events(chunk)?);
+                    for (start, end) in split_plan(batch.len(), bn.batch_size()) {
+                        let chunk = &batch[start..end];
+                        let exe = if chunk.len() == 1 { b1 } else { bn };
+                        out.extend(exe.run_events(chunk)?);
                     }
                     out
                 };
@@ -127,6 +141,22 @@ impl Backend {
             probs[1.min(probs.len() - 1)]
         }
     }
+}
+
+/// Chunk boundaries for running `len` events through a batch-`cap`
+/// executable: full `cap`-sized chunks plus one final partial chunk.
+/// `cap = 0` (an unloadable executable would report that) degrades to
+/// per-event chunks instead of panicking in `chunks()`.
+fn split_plan(len: usize, cap: usize) -> Vec<(usize, usize)> {
+    let cap = cap.max(1);
+    let mut plan = Vec::with_capacity(len.div_ceil(cap));
+    let mut start = 0;
+    while start < len {
+        let end = (start + cap).min(len);
+        plan.push((start, end));
+        start = end;
+    }
+    plan
 }
 
 fn logits_to_probs(cfg: &ModelConfig, logits: &[f32]) -> Vec<f32> {
@@ -180,6 +210,62 @@ mod tests {
             for (x, y) in a.iter().zip(b) {
                 assert!((x - y).abs() < 0.25, "{x} vs {y}");
             }
+        }
+    }
+
+    #[test]
+    fn empty_batch_returns_no_scores() {
+        // regression: an empty batch used to fall through to the backend
+        // (for PJRT, a padded `bn.run_events(&[])` execution)
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 13);
+        for kind in [BackendKind::Float, BackendKind::Hls] {
+            let b = Backend::build(kind, &cfg, &w, QuantConfig::new(8, 12),
+                                   None, std::path::Path::new(".")).unwrap();
+            assert!(b.infer(&[]).unwrap().is_empty(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn batched_infer_scores_match_single_event_infer() {
+        // batching is a throughput knob, never a semantics knob: the
+        // batch-native Float/HLS paths must reproduce per-event scores
+        // bitwise
+        let cfg = zoo_model("btag").unwrap().config;
+        let w = synthetic_weights(&cfg, 3);
+        for kind in [BackendKind::Float, BackendKind::Hls] {
+            let b = Backend::build(kind, &cfg, &w, QuantConfig::new(8, 12),
+                                   None, std::path::Path::new(".")).unwrap();
+            let evs = events(&cfg, 5);
+            let refs: Vec<&Mat> = evs.iter().collect();
+            let batched = b.infer(&refs).unwrap();
+            for (e, want) in evs.iter().zip(&batched) {
+                assert_eq!(&b.infer(&[e]).unwrap()[0], want, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_plan_covers_oversized_batches() {
+        // regression for the oversized-batch audit: every event exactly
+        // once, chunks never exceed the executable's batch size, the
+        // final partial chunk is preserved (then zero-padded inside
+        // `run_events`, which truncates outputs back to real events)
+        assert_eq!(split_plan(17, 8), vec![(0, 8), (8, 16), (16, 17)]);
+        assert_eq!(split_plan(16, 8), vec![(0, 8), (8, 16)]);
+        assert_eq!(split_plan(3, 8), vec![(0, 3)]);
+        assert_eq!(split_plan(0, 8), Vec::<(usize, usize)>::new());
+        // a zero-capacity executable degrades to per-event chunks
+        assert_eq!(split_plan(3, 0), vec![(0, 1), (1, 2), (2, 3)]);
+        for (len, cap) in [(1usize, 1usize), (9, 4), (25, 8), (7, 16)] {
+            let plan = split_plan(len, cap);
+            let mut covered = 0;
+            for (s, e) in &plan {
+                assert_eq!(*s, covered, "contiguous");
+                assert!(*e > *s && e - s <= cap.max(1));
+                covered = *e;
+            }
+            assert_eq!(covered, len);
         }
     }
 

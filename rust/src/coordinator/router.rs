@@ -272,6 +272,54 @@ mod tests {
     }
 
     #[test]
+    fn persistently_full_shard_does_not_pin_rotation() {
+        // regression for the cursor audit: the round-robin cursor
+        // advances on *every* submit (including overflowed ones), so one
+        // stuck-full shard can neither pin the cursor on itself nor
+        // starve the healthy shards of their round-robin turns
+        let (r, rxs) = router_with_engine(2, 3);
+        // fill every shard round-robin, then drain shards 1 and 2:
+        // shard 0 is wedged full (its worker never drains), the others
+        // are empty, and the cursor sits just before the wedged shard
+        for _ in 0..6 {
+            assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        }
+        while rxs[1].try_pop().is_some() {}
+        while rxs[2].try_pop().is_some() {}
+        // 4 more submits must keep rotating: rr hits shard 0 twice
+        // (overflowing to the least-loaded healthy shard both times) and
+        // shards 1/2 once each directly
+        for _ in 0..4 {
+            assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        }
+        assert_eq!(rxs[0].len(), 2, "wedged shard untouched past capacity");
+        assert_eq!(rxs[1].len(), 2, "healthy shards absorb the load");
+        assert_eq!(rxs[2].len(), 2, "healthy shards absorb the load");
+        assert_eq!(r.rebalanced("engine").unwrap(), 2, "one overflow per rr pass over shard 0");
+        assert_eq!(r.counters("engine").unwrap(), (10, 0));
+    }
+
+    #[test]
+    fn cursor_advances_past_shed_submits() {
+        // a shed must still consume a cursor tick: the next accepted
+        // event lands on the *next* shard in rotation, not back on the
+        // shard that just shed
+        let (r, rxs) = router_with_engine(1, 2);
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted); // rr=0
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted); // rr=1
+        // both full: this one sheds at rr=0 (and its overflow probe)
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Shed);
+        // drain shard 0 only; the cursor must now be at rr=1, so the
+        // next submit overflows off the still-full shard 1 onto shard 0
+        while rxs[0].try_pop().is_some() {}
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        assert_eq!(rxs[0].len(), 1, "post-shed submit rotated to the drained shard");
+        assert_eq!(r.rebalanced("engine").unwrap(), 1);
+        let (acc, shed) = r.counters("engine").unwrap();
+        assert_eq!((acc, shed), (3, 1));
+    }
+
+    #[test]
     #[should_panic(expected = "registered twice")]
     fn duplicate_route_registration_panics() {
         // silently replacing a route would orphan the old shards and

@@ -3,8 +3,12 @@
 //! The HLS simulator's hot path works on grid-projected `f32`s for speed
 //! (every intermediate is re-quantized, so results stay on-grid); this
 //! type carries the mantissa explicitly and implements +, -, * the way
-//! the FPGA's DSP slices do.  Unit tests prove the two formulations agree,
-//! which is what justifies the fast path.
+//! the FPGA's DSP slices do.  Unit tests prove the two formulations
+//! agree, which is what justifies the fast path — both per event (the
+//! add/mul properties below) and for the batch-major MAC loop
+//! (`hls::dense::tests::prop_batched_dense_matches_mantissa_witness`
+//! cross-checks whole batched dense outputs against mantissa-exact
+//! accumulation over random `FixedSpec`s).
 
 use super::spec::FixedSpec;
 

@@ -4,10 +4,11 @@
 use super::calibration as cal;
 use super::pipeline::{adder_tree_depth, Stage};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
+use super::scratch::Scratch;
 use super::ReuseFactor;
 use crate::fixed::FixedSpec;
 use crate::nn::layers::Activation;
-use crate::nn::tensor::Mat;
+use crate::nn::tensor::{Mat, Mat3};
 
 /// Quantized `y = act(x @ w + b)`.
 ///
@@ -45,6 +46,60 @@ pub fn dense_fixed(
         let yr = y.row_mut(r);
         for ((out, a), &bias) in yr.iter_mut().zip(&acc).zip(b) {
             let s = qa.q(*a + bias as f64);
+            *out = qd.q32(act.apply(s as f32));
+        }
+    }
+    y
+}
+
+/// Batched quantized dense: every event streams through `w` in one pass.
+///
+/// Weight-stationary loop order — each row of `w` is applied to all
+/// `batch*rows` activation rows before the next weight row is touched,
+/// so the weight matrix is read once per *layer call* instead of once
+/// per event.  The f64 accumulator tile (one accumulator per output
+/// element of the whole batch) comes from the reusable [`Scratch`]
+/// arena, hoisting the per-event `acc` allocation of [`dense_fixed`]
+/// out of the hot loop.
+///
+/// Bit-exactness: each accumulator still receives the same sequence of
+/// accumulator-grid products `qa.q(x_i * w_ij)` in ascending `i`, and
+/// bias/activation/data-grid projection happen in the same order, so
+/// the output is **bitwise identical** to [`dense_fixed`] per event
+/// (property-tested below, including against the integer-mantissa
+/// [`crate::fixed::Fixed`] witness).
+pub fn dense_fixed_batch(
+    x: &Mat3,
+    w: &Mat,
+    b: &[f32],
+    act: Activation,
+    data: FixedSpec,
+    accum: FixedSpec,
+    scratch: &mut Scratch,
+) -> Mat3 {
+    assert_eq!(x.cols(), w.rows());
+    assert_eq!(w.cols(), b.len());
+    let qa = crate::fixed::Quantizer::new(accum);
+    let qd = crate::fixed::Quantizer::new(data);
+    let n = x.flat_rows();
+    let n_out = w.cols();
+    let mut y = Mat3::zeros(x.batch(), x.rows(), n_out);
+    let acc = scratch.acc_zeroed(n * n_out);
+    for i in 0..w.rows() {
+        let wrow = w.row(i);
+        for r in 0..n {
+            let xi = x.flat_row(r)[i] as f64;
+            let a = &mut acc[r * n_out..(r + 1) * n_out];
+            for (av, &wv) in a.iter_mut().zip(wrow) {
+                *av += qa.q(xi * wv as f64);
+            }
+        }
+    }
+    for r in 0..n {
+        let yr = y.flat_row_mut(r);
+        let a = &acc[r * n_out..(r + 1) * n_out];
+        for ((out, av), &bias) in yr.iter_mut().zip(a).zip(b) {
+            let s = qa.q(*av + bias as f64);
             *out = qd.q32(act.apply(s as f32));
         }
     }
@@ -141,6 +196,92 @@ mod tests {
         let qf = dense_fixed(&x, &w.map(|v| fine.quantize(v)), &b, Activation::Linear, fine, fine.accum());
         let qc = dense_fixed(&x, &w.map(|v| coarse.quantize(v)), &b, Activation::Linear, coarse, coarse.accum());
         assert!(qf.max_abs_diff(&f) < qc.max_abs_diff(&f));
+    }
+
+    #[test]
+    fn prop_batched_dense_bitwise_matches_per_event() {
+        Prop::new("dense_fixed_batch == dense_fixed per event").runs(150).check(|g| {
+            let data = g.fixed_spec();
+            let accum = data.accum();
+            let (bsz, rows, cin, cout) =
+                (g.usize_in(1, 5), g.usize_in(1, 5), g.usize_in(1, 9), g.usize_in(1, 7));
+            let w = Mat::from_vec(cin, cout, g.normal_vec(cin * cout, 0.6))
+                .map(|v| data.quantize(v));
+            let b: Vec<f32> = g.normal_vec(cout, 0.2).iter().map(|&v| data.quantize(v)).collect();
+            let events: Vec<Mat> = (0..bsz)
+                .map(|_| Mat::from_vec(rows, cin, g.normal_vec(rows * cin, 1.2)))
+                .collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let mut scratch = Scratch::new();
+            for act in [Activation::Linear, Activation::Relu, Activation::Sigmoid] {
+                let batched = dense_fixed_batch(
+                    &Mat3::from_events(&refs), &w, &b, act, data, accum, &mut scratch,
+                );
+                for (i, e) in events.iter().enumerate() {
+                    assert_eq!(
+                        batched.event(i),
+                        dense_fixed(e, &w, &b, act, data, accum),
+                        "{data} act {act:?} event {i}"
+                    );
+                }
+            }
+        });
+    }
+
+    /// The justification in `fixed/value.rs` — the grid-projected f32/f64
+    /// fast path equals exact integer-mantissa arithmetic — extended to
+    /// the batched MAC loop: every batched output must equal a MAC chain
+    /// computed with [`crate::fixed::Fixed`] mantissas.
+    #[test]
+    fn prop_batched_dense_matches_mantissa_witness() {
+        use crate::fixed::Fixed;
+        Prop::new("dense_fixed_batch == Fixed mantissa witness").runs(150).check(|g| {
+            // width <= 20 keeps mantissa products within the range where
+            // the witness's own mul/fast-path equivalence is proven
+            // (see prop_mantissa_mul_matches_float_path)
+            let data = g.fixed_spec_max_width(20);
+            let accum = data.accum();
+            let (bsz, rows, cin, cout) =
+                (g.usize_in(1, 4), g.usize_in(1, 4), g.usize_in(1, 8), g.usize_in(1, 5));
+            let w = Mat::from_vec(cin, cout, g.normal_vec(cin * cout, 0.6))
+                .map(|v| data.quantize(v));
+            let b: Vec<f32> = g.normal_vec(cout, 0.2).iter().map(|&v| data.quantize(v)).collect();
+            let events: Vec<Mat> = (0..bsz)
+                .map(|_| {
+                    Mat::from_vec(rows, cin, g.normal_vec(rows * cin, 1.2))
+                        .map(|v| data.quantize(v))
+                })
+                .collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let mut scratch = Scratch::new();
+            let x3 = Mat3::from_events(&refs);
+            let y = dense_fixed_batch(&x3, &w, &b, Activation::Relu, data, accum, &mut scratch);
+            let (min_m, max_m) = (accum.mantissa_of(accum.min_value()),
+                                  accum.mantissa_of(accum.max_value()));
+            for e in 0..bsz {
+                for r in 0..rows {
+                    for j in 0..cout {
+                        // witness: products as saturating Fixed muls into
+                        // the accumulator grid; the running sum in raw
+                        // mantissas (the f64 fast path is exact mid-sum,
+                        // saturating only at the final projection)
+                        let mut acc_m: i64 = 0;
+                        for i in 0..cin {
+                            let xi = Fixed::from_f64(x3.event_row(e, r)[i] as f64, data);
+                            let wv = Fixed::from_f64(w.at(i, j) as f64, data);
+                            acc_m += xi.mul(&wv, accum).mantissa();
+                        }
+                        acc_m += accum.mantissa_of(b[j] as f64);
+                        let s = acc_m.clamp(min_m, max_m) as f64 * accum.step();
+                        let want = data.quantize(Activation::Relu.apply(s as f32));
+                        assert_eq!(
+                            y.event_row(e, r)[j], want,
+                            "{data} event {e} row {r} col {j}"
+                        );
+                    }
+                }
+            }
+        });
     }
 
     #[test]

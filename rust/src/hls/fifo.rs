@@ -20,9 +20,18 @@ pub struct Fifo<T> {
 
 /// Error pushing into a full FIFO — in hardware this is a stall; the
 /// functional simulator treats it as a design bug and surfaces it.
-#[derive(Debug, thiserror::Error)]
-#[error("FIFO '{0}' overflow (capacity {1})")]
+/// (Display/Error implemented by hand: `thiserror` is not in the
+/// offline crate set, and the tier-1 gate builds without network.)
+#[derive(Debug)]
 pub struct FifoOverflow(String, usize);
+
+impl std::fmt::Display for FifoOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "FIFO '{}' overflow (capacity {})", self.0, self.1)
+    }
+}
+
+impl std::error::Error for FifoOverflow {}
 
 impl<T> Fifo<T> {
     pub fn new(name: impl Into<String>, capacity: usize) -> Self {

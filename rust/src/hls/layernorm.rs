@@ -44,6 +44,24 @@ pub fn layernorm_fixed_row(
     }
 }
 
+/// Batched LayerNorm: normalize every row of every event in place.
+/// Rows are independent and [`layernorm_fixed_row`] allocates nothing,
+/// so the batched form is trivially bitwise identical to the per-event
+/// loop — it exists so `FixedTransformer::forward_batch` can stay
+/// batch-major end to end.
+pub fn layernorm_fixed_batch(
+    x: &mut crate::nn::tensor::Mat3,
+    gamma: &[f32],
+    beta: &[f32],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    for i in 0..x.flat_rows() {
+        layernorm_fixed_row(x.flat_row_mut(i), gamma, beta, roms, data, accum);
+    }
+}
+
 /// Pipeline stage: the five sub-stages are themselves pipelined, so the
 /// layer streams rows at II = R after a fill depth of ~2 adder trees.
 pub fn layernorm_stage(name: &str, rows: usize, d: usize, r: ReuseFactor) -> Stage {

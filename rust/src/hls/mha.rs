@@ -13,17 +13,18 @@
 //! The FIFO traffic is real (the functional sim pushes/pops rows), so the
 //! BRAM estimate uses observed high-water marks, not guesses.
 
-use super::dense::{dense_fixed, dense_resources, dense_stage};
+use super::dense::{dense_fixed, dense_fixed_batch, dense_resources, dense_stage};
 use super::fifo::Fifo;
 use super::pipeline::{adder_tree_depth, PipelineModel, Stage};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
+use super::scratch::Scratch;
 use super::softmax::{softmax_fixed_row, softmax_resources, softmax_stage};
 use super::{calibration as cal, ReuseFactor};
 use crate::fixed::lut::Roms;
 use crate::fixed::FixedSpec;
 use crate::models::weights::MhaWeights;
 use crate::nn::layers::Activation;
-use crate::nn::tensor::Mat;
+use crate::nn::tensor::{Mat, Mat3};
 
 /// Observed FIFO sizing from one forward pass (feeds the BRAM model).
 #[derive(Clone, Copy, Debug, Default)]
@@ -31,6 +32,56 @@ pub struct MhaFifoStats {
     pub q_high_water: usize,
     pub score_high_water: usize,
     pub out_high_water: usize,
+}
+
+/// Stage 2 core for one Q row: dot against every K row (all K rows
+/// readable in parallel on the register partition), scale into the data
+/// grid.  `km` is one event's `(S, k)` row-major K block.  Shared by
+/// [`mha_fixed`] and [`mha_fixed_batch`] so the bit-exactness contract
+/// lives in exactly one place.
+fn score_q_row(
+    q_row: &[f32],
+    km: &[f32],
+    score_row: &mut [f32],
+    scale: f32,
+    qa: &crate::fixed::Quantizer,
+    qd: &crate::fixed::Quantizer,
+) {
+    let k = q_row.len();
+    for (j, sc) in score_row.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (qi, ki) in q_row.iter().zip(&km[j * k..(j + 1) * k]) {
+            acc += qa.q(*qi as f64 * *ki as f64);
+        }
+        let acc = qa.q(acc);
+        *sc = qd.q32((acc as f32) * scale);
+    }
+}
+
+/// Stage 3 core for one probability row: weighted sum of V rows into
+/// `out_row` (zeroed here), f32 accumulation of accumulator-grid
+/// products, then the final accum+data grid projection.  `vm` is one
+/// event's `(S, k)` row-major V block.  Shared by both MHA paths.
+fn apply_v_row(
+    p_row: &[f32],
+    vm: &[f32],
+    out_row: &mut [f32],
+    qa: &crate::fixed::Quantizer,
+    qd: &crate::fixed::Quantizer,
+) {
+    let k = out_row.len();
+    out_row.fill(0.0);
+    for (j, &p) in p_row.iter().enumerate() {
+        // V row access (the §IV-A reshape makes both row and column
+        // access legal; row order streams vm cache-local)
+        let p = p as f64;
+        for (o, &vv) in out_row.iter_mut().zip(&vm[j * k..(j + 1) * k]) {
+            *o += qa.q(p * vv as f64) as f32;
+        }
+    }
+    for o in out_row.iter_mut() {
+        *o = qd.q32(qa.q(*o as f64) as f32);
+    }
 }
 
 /// Fixed-point MHA forward: x (S, d) -> (S, d).
@@ -66,15 +117,7 @@ pub fn mha_fixed(
         let mut score_fifo = Fifo::new(format!("h{h}.score"), s);
         while let Some(q_row) = q_fifo.pop() {
             let mut score_row = vec![0.0f32; s];
-            for (j, sc) in score_row.iter_mut().enumerate() {
-                // all K rows readable in parallel (register partition)
-                let mut acc = 0.0f64;
-                for (qi, ki) in q_row.iter().zip(km.row(j)) {
-                    acc += qa.q(*qi as f64 * *ki as f64);
-                }
-                let acc = qa.q(acc);
-                *sc = qd.q32((acc as f32) * scale);
-            }
+            score_q_row(&q_row, km.data(), &mut score_row, scale, &qa, &qd);
             softmax_fixed_row(&mut score_row, roms, data, accum);
             score_fifo.push(score_row).expect("score fifo sized to S");
         }
@@ -84,17 +127,7 @@ pub fn mha_fixed(
         let mut out_fifo = Fifo::new(format!("h{h}.out"), s);
         while let Some(p_row) = score_fifo.pop() {
             let mut out_row = vec![0.0f32; k];
-            for (j, &p) in p_row.iter().enumerate() {
-                // V row access (the §IV-A reshape makes both row and
-                // column access legal; row order streams vm cache-local)
-                let p = p as f64;
-                for (o, &vv) in out_row.iter_mut().zip(vm.row(j)) {
-                    *o += qa.q(p * vv as f64) as f32;
-                }
-            }
-            for o in out_row.iter_mut() {
-                *o = qd.q32(qa.q(*o as f64) as f32);
-            }
+            apply_v_row(&p_row, vm.data(), &mut out_row, &qa, &qd);
             out_fifo.push(out_row).expect("out fifo sized to S");
         }
         stats.out_high_water = stats.out_high_water.max(out_fifo.high_water());
@@ -110,6 +143,66 @@ pub fn mha_fixed(
         }
     }
     let out = dense_fixed(&concat, &w.wo, &w.bo, Activation::Linear, data, accum);
+    (out, stats)
+}
+
+/// Batched fixed-point MHA: x (B, S, d) -> (B, S, d).
+///
+/// Stage 1 and stage 4 go through [`dense_fixed_batch`], so each of the
+/// `3*heads + 1` weight matrices streams once for the whole batch; the
+/// quadratic score/softmax/apply-V stages run per event with exactly
+/// the operation order of [`mha_fixed`] (including the f32 apply-V
+/// accumulation), writing straight into the concat tensor.  The score
+/// and output row buffers come from the [`Scratch`] arena instead of
+/// being allocated per row, and the FIFO traffic is elided: the
+/// per-event schedule deterministically fills every FIFO to `S` before
+/// draining (asserted by `fifo_high_water_is_full_sequence`), so the
+/// batched path reports those high-water marks directly.
+///
+/// Output is **bitwise identical** to [`mha_fixed`] per event.
+pub fn mha_fixed_batch(
+    x: &Mat3,
+    w: &MhaWeights,
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+    scratch: &mut Scratch,
+) -> (Mat3, MhaFifoStats) {
+    let (bsz, s) = (x.batch(), x.rows());
+    let heads = w.wq.len();
+    let k = w.wq[0].cols();
+    let scale = 1.0 / (k as f32).sqrt();
+    let qa = crate::fixed::Quantizer::new(accum);
+    let qd = crate::fixed::Quantizer::new(data);
+
+    let mut concat = Mat3::zeros(bsz, s, heads * k);
+    let mut score_row = scratch.take_row(s);
+    for h in 0..heads {
+        // ---- stage 1: projections, one weight pass per matrix --------
+        let q = dense_fixed_batch(x, &w.wq[h], &w.bq[h], Activation::Linear, data, accum, scratch);
+        let km = dense_fixed_batch(x, &w.wk[h], &w.bk[h], Activation::Linear, data, accum, scratch);
+        let vm = dense_fixed_batch(x, &w.wv[h], &w.bv[h], Activation::Linear, data, accum, scratch);
+        for b in 0..bsz {
+            for r in 0..s {
+                // ---- stage 2: Q.K^T, scale, LUT softmax --------------
+                score_q_row(q.event_row(b, r), km.event_slice(b), &mut score_row,
+                            scale, &qa, &qd);
+                softmax_fixed_row(&mut score_row, roms, data, accum);
+                // ---- stage 3: weighted sum of V, into the concat slot
+                let out_row = &mut concat.event_row_mut(b, r)[h * k..(h + 1) * k];
+                apply_v_row(&score_row, vm.event_slice(b), out_row, &qa, &qd);
+            }
+        }
+    }
+    scratch.put_row(score_row);
+
+    // ---- stage 4: output projection, one weight pass -----------------
+    let out = dense_fixed_batch(&concat, &w.wo, &w.bo, Activation::Linear, data, accum, scratch);
+    let stats = MhaFifoStats {
+        q_high_water: s,
+        score_high_water: s,
+        out_high_water: s,
+    };
     (out, stats)
 }
 
@@ -248,6 +341,39 @@ mod tests {
         let (q, _) = mha_fixed(&x, &w, &roms, data, accum);
         for &v in q.data() {
             assert_eq!(v, data.quantize(v));
+        }
+    }
+
+    #[test]
+    fn batched_mha_bitwise_matches_per_event() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 11).blocks[0].mha.clone();
+        let roms = Roms::new();
+        let mut g = Gen::new(21);
+        for data in [FixedSpec::new(20, 8), FixedSpec::new(8, 4)] {
+            let accum = data.accum();
+            let events: Vec<Mat> = (0..3)
+                .map(|_| {
+                    Mat::from_vec(
+                        m.config.seq_len,
+                        m.config.d_model,
+                        g.normal_vec(m.config.seq_len * m.config.d_model, 0.7),
+                    )
+                })
+                .collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let mut scratch = Scratch::new();
+            let (batched, stats) =
+                mha_fixed_batch(&Mat3::from_events(&refs), &w, &roms, data, accum, &mut scratch);
+            for (i, e) in events.iter().enumerate() {
+                let (per_event, ev_stats) = mha_fixed(e, &w, &roms, data, accum);
+                assert_eq!(batched.event(i), per_event, "{data} event {i}");
+                // the batched path's synthesized FIFO stats must agree
+                // with what the per-event schedule actually observes
+                assert_eq!(stats.q_high_water, ev_stats.q_high_water);
+                assert_eq!(stats.score_high_water, ev_stats.score_high_water);
+                assert_eq!(stats.out_high_water, ev_stats.out_high_water);
+            }
         }
     }
 

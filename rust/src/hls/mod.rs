@@ -25,6 +25,7 @@ pub mod mha;
 pub mod pipeline;
 pub mod report;
 pub mod resources;
+pub mod scratch;
 pub mod softmax;
 pub mod transformer;
 

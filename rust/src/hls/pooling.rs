@@ -5,7 +5,7 @@ use super::resources::Resources;
 use super::ReuseFactor;
 use crate::fixed::lut::Roms;
 use crate::fixed::FixedSpec;
-use crate::nn::tensor::Mat;
+use crate::nn::tensor::{Mat, Mat3};
 
 /// Column means, accumulated on the accumulator grid: (S, d) -> (1, d).
 pub fn global_average_pool_fixed(x: &Mat, data: FixedSpec, accum: FixedSpec) -> Mat {
@@ -17,6 +17,24 @@ pub fn global_average_pool_fixed(x: &Mat, data: FixedSpec, accum: FixedSpec) -> 
         }
         let mean = accum.quantize_f64(acc / x.rows() as f64);
         *out.at_mut(0, c) = data.quantize(mean as f32);
+    }
+    out
+}
+
+/// Batched column means: (B, S, d) -> (B, 1, d), the same per-column
+/// r-ascending accumulation as [`global_average_pool_fixed`] so the two
+/// are bitwise identical per event.
+pub fn global_average_pool_fixed_batch(x: &Mat3, data: FixedSpec, accum: FixedSpec) -> Mat3 {
+    let mut out = Mat3::zeros(x.batch(), 1, x.cols());
+    for b in 0..x.batch() {
+        for c in 0..x.cols() {
+            let mut acc = 0.0f64;
+            for r in 0..x.rows() {
+                acc += x.event_row(b, r)[c] as f64;
+            }
+            let mean = accum.quantize_f64(acc / x.rows() as f64);
+            out.event_row_mut(b, 0)[c] = data.quantize(mean as f32);
+        }
     }
     out
 }
@@ -73,6 +91,19 @@ mod tests {
         let data = FixedSpec::new(18, 8);
         assert!(sigmoid_fixed(20.0, &roms, data) > 0.9);
         assert!(sigmoid_fixed(-20.0, &roms, data) < 0.1);
+    }
+
+    #[test]
+    fn batched_pool_bitwise_matches_per_event() {
+        let mut g = Gen::new(4);
+        let data = FixedSpec::new(12, 5);
+        let events: Vec<Mat> =
+            (0..3).map(|_| Mat::from_vec(6, 4, g.normal_vec(24, 1.0))).collect();
+        let refs: Vec<&Mat> = events.iter().collect();
+        let batched = global_average_pool_fixed_batch(&Mat3::from_events(&refs), data, data.accum());
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(batched.event(i), global_average_pool_fixed(e, data, data.accum()));
+        }
     }
 
     #[test]

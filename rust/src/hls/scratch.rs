@@ -1,0 +1,79 @@
+//! Reusable scratch arena for the batch-major fixed-point kernels.
+//!
+//! The per-event HLS forward allocates on every call: the f64 `acc`
+//! vector in `dense_fixed`, the per-row score/output `Vec`s and the FIFO
+//! `VecDeque`s in `mha_fixed`.  At serving rates those allocations are a
+//! measurable slice of the hot loop.  The batched kernels instead draw
+//! every temporary from one [`Scratch`] owned by the transformer, so a
+//! buffer is allocated the first time a layer shape is seen and then
+//! reused for every later batch.
+//!
+//! The arena only hands out *cleared* buffers (accumulators zeroed, rows
+//! zero-filled), so reuse can never leak state between layers or events
+//! — which is what keeps the bit-exactness contract (see [`crate::nn`])
+//! trivially safe.
+
+/// Growable pool of accumulator and row buffers.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    acc: Vec<f64>,
+    rows: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zeroed f64 accumulator tile of exactly `n` elements.  The
+    /// backing allocation grows monotonically and is reused across
+    /// calls; only one tile is live at a time (layers run sequentially).
+    pub fn acc_zeroed(&mut self, n: usize) -> &mut [f64] {
+        if self.acc.len() < n {
+            self.acc.resize(n, 0.0);
+        }
+        let tile = &mut self.acc[..n];
+        tile.fill(0.0);
+        tile
+    }
+
+    /// Take a zero-filled f32 row buffer of length `n` from the pool
+    /// (allocating only when the pool is empty).  Return it with
+    /// [`Scratch::put_row`] so the next taker reuses the allocation.
+    pub fn take_row(&mut self, n: usize) -> Vec<f32> {
+        let mut row = self.rows.pop().unwrap_or_default();
+        row.clear();
+        row.resize(n, 0.0);
+        row
+    }
+
+    pub fn put_row(&mut self, row: Vec<f32>) {
+        self.rows.push(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acc_tile_is_always_zeroed() {
+        let mut s = Scratch::new();
+        s.acc_zeroed(4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(s.acc_zeroed(3).iter().all(|&v| v == 0.0));
+        // growing past the old capacity stays zeroed too
+        assert!(s.acc_zeroed(8).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn row_pool_reuses_and_clears() {
+        let mut s = Scratch::new();
+        let mut r = s.take_row(5);
+        r[0] = 9.0;
+        let cap = r.capacity();
+        s.put_row(r);
+        let r2 = s.take_row(3);
+        assert_eq!(r2, vec![0.0; 3]);
+        assert!(r2.capacity() >= 3.min(cap));
+    }
+}

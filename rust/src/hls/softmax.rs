@@ -39,10 +39,31 @@ pub fn softmax_fixed_row(
         sum += *v as f64; // stage 2 accumulates behind stage 1
     }
     let sum = qa.q(sum) as f32;
+    if sum == 0.0 {
+        // every exp output underflowed the data grid (possible only on
+        // degenerate grids whose max representable value is 0, or for an
+        // empty row): `inv.lookup(0)` would read the inversion ROM's
+        // singularity bin — the defined behavior is the uniform limit
+        uniform_row(row, &qd);
+        return;
+    }
     let inv = qd.q32(roms.inv.lookup(sum));
     // stage 3: elementwise multiply
     for v in row.iter_mut() {
         *v = qd.q32(*v * inv);
+    }
+}
+
+/// Zero-exp-sum fallback shared by the softmax variants: a uniform
+/// distribution over the row, projected onto the data grid (in
+/// hardware, a mux that bypasses the inversion ROM when the sum-is-zero
+/// comparator fires).  On grids too coarse to represent `1/len` this
+/// degrades to zeros — still well-defined, never the ROM-edge garbage
+/// of `inv.lookup(0)`.
+fn uniform_row(row: &mut [f32], qd: &crate::fixed::Quantizer) {
+    let u = qd.q32(1.0 / row.len().max(1) as f32);
+    for v in row.iter_mut() {
+        *v = u;
     }
 }
 
@@ -77,6 +98,17 @@ pub fn softmax_fixed_row_masked(
         sum += *v as f64;
     }
     let sum = qa.q(sum) as f32;
+    if sum == 0.0 {
+        // live lanes exist (max was finite) but every exp underflowed:
+        // uniform over the live lanes, masked lanes stay zero (the same
+        // singularity-bypass mux as in `softmax_fixed_row`)
+        let live = mask.iter().filter(|&&m| m).count();
+        let u = qd.q32(1.0 / live.max(1) as f32);
+        for (v, &m) in row.iter_mut().zip(mask) {
+            *v = if m { u } else { 0.0 };
+        }
+        return;
+    }
     let inv = qd.q32(roms.inv.lookup(sum));
     for v in row.iter_mut() {
         *v = qd.q32(*v * inv);
@@ -99,6 +131,13 @@ pub fn softmax_fixed_raw(
         sum += *v as f64;
     }
     let sum = accum.quantize_f64(sum) as f32;
+    if sum == 0.0 {
+        // without the stable shift this is reachable on realistic grids
+        // (all scores below the exp ROM's domain saturate to a value
+        // that underflows the data grid); same singularity bypass
+        uniform_row(row, &crate::fixed::Quantizer::new(data));
+        return;
+    }
     let inv = data.quantize(roms.inv.lookup(sum));
     for v in row.iter_mut() {
         *v = data.quantize(*v * inv);
@@ -121,7 +160,14 @@ pub fn softmax_fixed_legacy(
             sum += data.quantize(roms.exp.lookup(zj - orig[i])) as f64;
         }
         let sum = accum.quantize_f64(sum) as f32;
-        *out = data.quantize(roms.inv.lookup(sum));
+        *out = if sum == 0.0 {
+            // same zero-exp-sum singularity bypass as the other
+            // variants, per element here (the legacy form has one
+            // exp-sum per output lane)
+            data.quantize(1.0 / orig.len().max(1) as f32)
+        } else {
+            data.quantize(roms.inv.lookup(sum))
+        };
     }
 }
 
@@ -244,6 +290,56 @@ mod tests {
             }
         }
         assert!((live_sum - 1.0).abs() < 0.1, "live mass {live_sum}");
+    }
+
+    #[test]
+    fn zero_exp_sum_yields_uniform_not_rom_edge_garbage() {
+        let roms = Roms::new();
+        // raw (unshifted) softmax: scores far below the exp ROM domain
+        // saturate to exp(-8)≈3.3e-4, which underflows an 8-frac-bit
+        // grid — the sum is exactly 0 and inv.lookup(0) would return the
+        // singularity bin (~12.8).  Defined behavior: uniform.
+        let data = FixedSpec::new(16, 8);
+        let mut row = vec![-20.0f32, -25.0, -30.0, -40.0];
+        softmax_fixed_raw(&mut row, &roms, data, data.accum());
+        let want = data.quantize(0.25);
+        assert_eq!(row, vec![want; 4]);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 0.01, "uniform mass {s}");
+    }
+
+    #[test]
+    fn zero_sum_stable_softmax_is_defined_on_degenerate_grids() {
+        // ap_fixed<1,1> can only represent {-1, 0}: every exp output
+        // quantizes to 0, so the stable path hits the zero-sum case too;
+        // it must emit the (grid-projected) uniform value, not consult
+        // the inversion ROM at its singularity
+        let roms = Roms::new();
+        let data = FixedSpec::new(1, 1);
+        let mut row = vec![0.0f32, -1.0, 0.0];
+        softmax_fixed_row(&mut row, &roms, data, data.accum());
+        let want = data.quantize(1.0 / 3.0);
+        assert_eq!(row, vec![want; 3]);
+        // the legacy ablation baseline defines the same bypass, per
+        // element (its exp-sums underflow lane-by-lane)
+        let mut legacy = vec![0.0f32, -1.0, 0.0];
+        softmax_fixed_legacy(&mut legacy, &roms, data, data.accum());
+        assert_eq!(legacy, vec![want; 3]);
+        // an empty row is a no-op, not a ROM read
+        let mut empty: Vec<f32> = vec![];
+        softmax_fixed_row(&mut empty, &roms, FixedSpec::new(18, 8), FixedSpec::new(18, 8).accum());
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn zero_sum_masked_softmax_is_uniform_over_live_lanes() {
+        let roms = Roms::new();
+        let data = FixedSpec::new(1, 1);
+        let mut row = vec![0.0f32, -1.0, 0.0, -1.0];
+        let mask = [true, false, true, false];
+        softmax_fixed_row_masked(&mut row, &mask, &roms, data, data.accum());
+        let want = data.quantize(0.5);
+        assert_eq!(row, vec![want, 0.0, want, 0.0]);
     }
 
     #[test]

@@ -3,13 +3,19 @@
 //! synthesis-style latency/resource report for a (precision, reuse)
 //! design point.
 
-use super::dense::{dense_fixed, dense_resources, dense_stage};
-use super::layernorm::{layernorm_fixed_row, layernorm_resources, layernorm_stage};
-use super::mha::{mha_fixed, mha_resources, mha_stage, MhaFifoStats};
+use super::dense::{dense_fixed, dense_fixed_batch, dense_resources, dense_stage};
+use super::layernorm::{
+    layernorm_fixed_batch, layernorm_fixed_row, layernorm_resources, layernorm_stage,
+};
+use super::mha::{mha_fixed, mha_fixed_batch, mha_resources, mha_stage, MhaFifoStats};
 use super::pipeline::{PipelineModel, Stage};
-use super::pooling::{global_average_pool_fixed, pool_resources, pool_stage, sigmoid_fixed};
+use super::pooling::{
+    global_average_pool_fixed, global_average_pool_fixed_batch, pool_resources, pool_stage,
+    sigmoid_fixed,
+};
 use super::report::{LayerReport, SynthesisReport};
 use super::resources::Resources;
+use super::scratch::Scratch;
 use super::softmax::softmax_fixed_row;
 use super::{calibration as cal, ReuseFactor};
 use crate::fixed::lut::Roms;
@@ -17,7 +23,7 @@ use crate::fixed::FixedSpec;
 use crate::models::config::{FinalActivation, ModelConfig};
 use crate::models::weights::Weights;
 use crate::nn::layers::Activation;
-use crate::nn::tensor::Mat;
+use crate::nn::tensor::{Mat, Mat3};
 
 /// Quantization configuration of one design point (paper §VI-A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +57,9 @@ pub struct FixedTransformer {
     roms: Roms,
     /// FIFO stats observed during forward passes (sizes the BRAM model).
     last_fifo_stats: std::cell::Cell<MhaFifoStats>,
+    /// Reusable buffers for the batched kernels — allocated on first use
+    /// and reused across every later batch served by this engine.
+    scratch: std::cell::RefCell<Scratch>,
 }
 
 impl FixedTransformer {
@@ -62,6 +71,7 @@ impl FixedTransformer {
             quant,
             roms: Roms::new(),
             last_fifo_stats: std::cell::Cell::new(MhaFifoStats::default()),
+            scratch: std::cell::RefCell::new(Scratch::new()),
         }
     }
 
@@ -122,6 +132,76 @@ impl FixedTransformer {
             }
         }
         out
+    }
+
+    /// Forward a whole batch of events -> per-event probabilities.
+    ///
+    /// Batch-major `ap_fixed` execution: each layer's weight matrix
+    /// streams once for the entire batch (weight-stationary loop order),
+    /// and all temporaries come from the engine's reusable [`Scratch`]
+    /// arena.  Every intermediate still lands on the `FixedSpec` grid in
+    /// the same order as [`Self::forward`], so the result is **bitwise
+    /// identical** to scoring the events one at a time (property-tested
+    /// below) — batching changes throughput, never a probability.
+    pub fn forward_batch(&self, xs: &[&Mat]) -> Vec<Vec<f32>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let (data, accum) = (self.quant.data, self.quant.accum);
+        for x in xs {
+            assert_eq!(x.rows(), self.cfg.seq_len, "bad seq len");
+            assert_eq!(x.cols(), self.cfg.input_size, "bad input size");
+        }
+        let w = &self.weights;
+        let mut scratch_guard = self.scratch.borrow_mut();
+        let scratch = &mut *scratch_guard;
+        // input quantization (the AXI boundary cast)
+        let mut xq = Mat3::from_events(xs);
+        xq.map_in_place(|v| data.quantize(v));
+        let mut h = dense_fixed_batch(&xq, &w.embed.0, &w.embed.1, Activation::Linear,
+                                      data, accum, scratch);
+        let mut fifo_stats = MhaFifoStats::default();
+        for b in &w.blocks {
+            let (attn, stats) = mha_fixed_batch(&h, &b.mha, &self.roms, data, accum, scratch);
+            fifo_stats.q_high_water = fifo_stats.q_high_water.max(stats.q_high_water);
+            fifo_stats.score_high_water =
+                fifo_stats.score_high_water.max(stats.score_high_water);
+            fifo_stats.out_high_water = fifo_stats.out_high_water.max(stats.out_high_water);
+            h = h.add(&attn); // residual adder
+            h.map_in_place(|v| data.quantize(v));
+            if let Some(ln) = &b.ln1 {
+                layernorm_fixed_batch(&mut h, &ln.gamma, &ln.beta, &self.roms, data, accum);
+            }
+            let y = dense_fixed_batch(&h, &b.ffn1.0, &b.ffn1.1, Activation::Relu,
+                                      data, accum, scratch);
+            let y = dense_fixed_batch(&y, &b.ffn2.0, &b.ffn2.1, Activation::Linear,
+                                      data, accum, scratch);
+            h = h.add(&y); // residual adder
+            h.map_in_place(|v| data.quantize(v));
+            if let Some(ln) = &b.ln2 {
+                layernorm_fixed_batch(&mut h, &ln.gamma, &ln.beta, &self.roms, data, accum);
+            }
+        }
+        self.last_fifo_stats.set(fifo_stats);
+        let pooled = global_average_pool_fixed_batch(&h, data, accum);
+        let hid = dense_fixed_batch(&pooled, &w.head.0, &w.head.1, Activation::Relu,
+                                    data, accum, scratch);
+        let logits = dense_fixed_batch(&hid, &w.out.0, &w.out.1, Activation::Linear,
+                                       data, accum, scratch);
+        (0..xs.len())
+            .map(|i| {
+                let mut out = logits.event_row(i, 0).to_vec();
+                match self.cfg.final_activation() {
+                    FinalActivation::Sigmoid => {
+                        out[0] = sigmoid_fixed(out[0], &self.roms, data);
+                    }
+                    FinalActivation::Softmax => {
+                        softmax_fixed_row(&mut out, &self.roms, data, accum);
+                    }
+                }
+                out
+            })
+            .collect()
     }
 
     /// Positive-class score (same convention as `FloatTransformer::score`).
@@ -257,6 +337,65 @@ mod tests {
             cfg.input_size,
             g.normal_vec(cfg.seq_len * cfg.input_size, 1.0),
         )
+    }
+
+    /// The PR's acceptance bar: batched HLS execution is bitwise
+    /// identical to the per-event path — over random design points,
+    /// batch sizes and inputs, every probability must be `==`, not
+    /// merely close.
+    #[test]
+    fn prop_forward_batch_bitwise_identical_to_per_event() {
+        use crate::testutil::Prop;
+        Prop::new("fixed forward_batch == forward per event").runs(12).check(|g| {
+            let m = zoo_model("btag").unwrap(); // smallest zoo model
+            let quant = QuantConfig::new(
+                g.usize_in(4, 11) as u32,
+                g.usize_in(2, 13) as u32,
+            );
+            let w = synthetic_weights(&m.config, g.u64());
+            let t = FixedTransformer::new(m.config.clone(), &w, quant);
+            let bsz = g.usize_in(1, 6);
+            let events: Vec<Mat> = (0..bsz).map(|i| event(&m.config, g.u64() ^ i as u64)).collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let batched = t.forward_batch(&refs);
+            assert_eq!(batched.len(), bsz);
+            for (x, got) in events.iter().zip(&batched) {
+                assert_eq!(got, &t.forward(x), "{:?} batch {bsz}", t.quant());
+            }
+        });
+    }
+
+    #[test]
+    fn forward_batch_across_zoo_models_is_bitwise_identical() {
+        for m in zoo() {
+            let w = synthetic_weights(&m.config, 5);
+            let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 10));
+            let events: Vec<Mat> = (0..4).map(|s| event(&m.config, s)).collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            // two batched passes through the same engine must also agree
+            // (the scratch arena may not leak state between batches)
+            let first = t.forward_batch(&refs);
+            let second = t.forward_batch(&refs);
+            assert_eq!(first, second, "{}", m.config.name);
+            for (x, got) in events.iter().zip(&first) {
+                assert_eq!(got, &t.forward(x), "{}", m.config.name);
+            }
+            // FIFO stats feeding the BRAM model match the per-event path
+            let batched_stats = t.last_fifo_stats.get();
+            t.forward(&events[0]);
+            let ev_stats = t.last_fifo_stats.get();
+            assert_eq!(batched_stats.q_high_water, ev_stats.q_high_water);
+            assert_eq!(batched_stats.score_high_water, ev_stats.score_high_water);
+            assert_eq!(batched_stats.out_high_water, ev_stats.out_high_water);
+        }
+    }
+
+    #[test]
+    fn forward_batch_of_empty_is_empty() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 5);
+        let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 10));
+        assert!(t.forward_batch(&[]).is_empty());
     }
 
     #[test]

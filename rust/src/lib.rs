@@ -11,7 +11,9 @@
 //! * [`hls`] — the Vivado-HLS stand-in: bit-accurate fixed-point
 //!   transformer layers with cycle/resource models (DESIGN.md §6).
 //! * [`nn`] — exact-float reference network (the "Keras output" the
-//!   paper's AUC plots compare against).
+//!   paper's AUC plots compare against), plus the batch-major execution
+//!   model (`Mat3`, weight-stationary kernels, bit-exactness contract)
+//!   shared with the HLS simulator — see the [`nn`] module docs.
 //! * [`models`] — Table-I model zoo, NNW weight loading.
 //! * [`data`] — synthetic stand-ins for FordA / CMS b-tagging / LIGO O3a.
 //! * [`metrics`] — ROC-AUC, accuracy, latency histograms.
@@ -20,9 +22,11 @@
 //!   gated behind the `pjrt` cargo feature (stubbed otherwise).
 //! * [`coordinator`] — the trigger-style streaming server (L3): sharded
 //!   per-model worker pools (`PipelineConfig::replicas` batcher+backend
-//!   shards behind a round-robin, least-loaded-overflow router).  The
-//!   `e2e_serving` bench sweeps pool widths 1/2/4/8 at fixed offered
-//!   load and emits `BENCH_JSON` lines for CI perf archiving.
+//!   shards behind a round-robin, least-loaded-overflow router), with
+//!   batch-native Float/HLS inference (`Backend::infer` runs whole
+//!   batches through `forward_batch`).  The `e2e_serving` bench sweeps
+//!   pool widths 1/2/4/8 and batch caps 1/2/4/8/16 per backend and
+//!   emits `BENCH_JSON` lines for CI perf archiving.
 //! * [`experiments`] — regenerates every table and figure of the paper.
 //! * [`testutil`] — property-test driver (offline proptest stand-in).
 

@@ -1,6 +1,14 @@
-//! Exact-float layer primitives (dense / softmax / layernorm / MHA).
+//! Exact-float layer primitives (dense / softmax / layernorm / MHA),
+//! in per-event and batch-major (`Mat3`) forms.
+//!
+//! The batched kernels keep every per-accumulator operation in the same
+//! order as the per-event kernels (additions in ascending input index),
+//! so a batched forward is **bitwise identical** to running the events
+//! one at a time — the coordinator can switch `Backend::infer` to the
+//! batch path without perturbing any score (property-tested here and in
+//! `nn::transformer`).
 
-use super::tensor::{dot, Mat};
+use super::tensor::{dot, Mat, Mat3};
 use crate::models::weights::MhaWeights;
 
 /// Activation functions used by the zoo.
@@ -36,40 +44,90 @@ pub fn dense(x: &Mat, w: &Mat, b: &[f32], act: Activation) -> Mat {
     y
 }
 
+/// One row of numerically-stable softmax, in place — shared by the
+/// per-event and batched attention paths so the two stay bit-identical.
+#[inline]
+pub fn softmax_row_in_place(row: &mut [f32]) {
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
 /// Numerically-stable softmax over each row.
 pub fn softmax_rows(x: &Mat) -> Mat {
     let mut out = x.clone();
     for r in 0..out.rows() {
-        let row = out.row_mut(r);
-        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0;
-        for v in row.iter_mut() {
-            *v = (*v - max).exp();
-            sum += *v;
-        }
-        for v in row.iter_mut() {
-            *v /= sum;
-        }
+        softmax_row_in_place(out.row_mut(r));
     }
     out
+}
+
+/// One row of layer normalization in place (biased variance, like
+/// hls4ml) — shared by the per-event and batched paths.
+#[inline]
+pub fn layernorm_row_in_place(row: &mut [f32], gamma: &[f32], beta: &[f32]) {
+    let k = row.len() as f32;
+    let mean = row.iter().sum::<f32>() / k;
+    let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / k;
+    let inv = 1.0 / var.sqrt().max(1e-12);
+    for (v, (&g, &b)) in row.iter_mut().zip(gamma.iter().zip(beta)) {
+        *v = (*v - mean) * inv * g + b;
+    }
 }
 
 /// Layer normalization over each row (biased variance, like hls4ml).
 pub fn layernorm_rows(x: &Mat, gamma: &[f32], beta: &[f32]) -> Mat {
     assert_eq!(x.cols(), gamma.len());
     assert_eq!(x.cols(), beta.len());
-    let k = x.cols() as f32;
     let mut out = x.clone();
     for r in 0..out.rows() {
-        let row = out.row_mut(r);
-        let mean = row.iter().sum::<f32>() / k;
-        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / k;
-        let inv = 1.0 / var.sqrt().max(1e-12);
-        for (v, (&g, &b)) in row.iter_mut().zip(gamma.iter().zip(beta)) {
-            *v = (*v - mean) * inv * g + b;
-        }
+        layernorm_row_in_place(out.row_mut(r), gamma, beta);
     }
     out
+}
+
+/// Batched layer normalization, in place over every row of every event.
+pub fn layernorm_batch(x: &mut Mat3, gamma: &[f32], beta: &[f32]) {
+    assert_eq!(x.cols(), gamma.len());
+    assert_eq!(x.cols(), beta.len());
+    for i in 0..x.flat_rows() {
+        layernorm_row_in_place(x.flat_row_mut(i), gamma, beta);
+    }
+}
+
+/// Batched `y = act(x @ w + b)` over every event at once.
+///
+/// Weight-stationary loop order: `w` is streamed exactly once per layer
+/// call — each weight row is applied to all `batch*rows` activation rows
+/// before the next is touched — instead of once per event.  Every output
+/// accumulator still sums products in ascending input index, so results
+/// are bitwise identical to [`dense`] per event.
+pub fn dense_batch(x: &Mat3, w: &Mat, b: &[f32], act: Activation) -> Mat3 {
+    assert_eq!(x.cols(), w.rows());
+    assert_eq!(w.cols(), b.len());
+    let n = x.flat_rows();
+    let mut y = Mat3::zeros(x.batch(), x.rows(), w.cols());
+    for kk in 0..w.rows() {
+        let wrow = w.row(kk);
+        for i in 0..n {
+            let xv = x.flat_row(i)[kk];
+            for (o, &wv) in y.flat_row_mut(i).iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    for i in 0..n {
+        for (v, &bias) in y.flat_row_mut(i).iter_mut().zip(b) {
+            *v = act.apply(*v + bias);
+        }
+    }
+    y
 }
 
 /// One attention head: exact eq. (4) of the paper.
@@ -107,6 +165,45 @@ pub fn mha(x: &Mat, w: &MhaWeights) -> Mat {
     dense(&concat, &w.wo, &w.bo, Activation::Linear)
 }
 
+/// Batched multi-head attention: every event's Q/K/V projections and
+/// output projection stream each weight matrix once for the whole batch
+/// (via [`dense_batch`]); the quadratic score/apply stages run per event
+/// with the exact per-row operation order of [`attention_head`], so the
+/// result is bitwise identical to [`mha`] per event.
+pub fn mha_batch(x: &Mat3, w: &MhaWeights) -> Mat3 {
+    let (bsz, s) = (x.batch(), x.rows());
+    let heads = w.wq.len();
+    let k = w.wq[0].cols();
+    let mut concat = Mat3::zeros(bsz, s, heads * k);
+    let mut score_row = vec![0.0f32; s];
+    for h in 0..heads {
+        // stage 1: projections, one weight pass for the whole batch
+        let q = dense_batch(x, &w.wq[h], &w.bq[h], Activation::Linear);
+        let km = dense_batch(x, &w.wk[h], &w.bk[h], Activation::Linear);
+        let vm = dense_batch(x, &w.wv[h], &w.bv[h], Activation::Linear);
+        let scale = 1.0 / (k as f32).sqrt();
+        for b in 0..bsz {
+            for i in 0..s {
+                // scores = q_i . k_j * scale, then row softmax
+                for (j, sc) in score_row.iter_mut().enumerate() {
+                    *sc = dot(q.event_row(b, i), km.event_row(b, j)) * scale;
+                }
+                softmax_row_in_place(&mut score_row);
+                // apply V straight into the concat slot (kk-ascending
+                // accumulation, the same order as Mat::matmul)
+                let out = &mut concat.event_row_mut(b, i)[h * k..(h + 1) * k];
+                out.iter_mut().for_each(|v| *v = 0.0);
+                for (kk, &p) in score_row.iter().enumerate() {
+                    for (o, &vv) in out.iter_mut().zip(vm.event_row(b, kk)) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+    }
+    dense_batch(&concat, &w.wo, &w.bo, Activation::Linear)
+}
+
 /// Column-wise mean over the sequence: (S, d) -> (1, d).
 pub fn global_average_pool(x: &Mat) -> Mat {
     let mut out = Mat::zeros(1, x.cols());
@@ -118,6 +215,24 @@ pub fn global_average_pool(x: &Mat) -> Mat {
     let n = x.rows() as f32;
     for o in out.row_mut(0) {
         *o /= n;
+    }
+    out
+}
+
+/// Batched column-wise mean: (B, S, d) -> (B, 1, d).
+pub fn global_average_pool_batch(x: &Mat3) -> Mat3 {
+    let mut out = Mat3::zeros(x.batch(), 1, x.cols());
+    let n = x.rows() as f32;
+    for b in 0..x.batch() {
+        for r in 0..x.rows() {
+            let src = x.event_row(b, r);
+            for (o, &v) in out.event_row_mut(b, 0).iter_mut().zip(src) {
+                *o += v;
+            }
+        }
+        for o in out.event_row_mut(b, 0) {
+            *o /= n;
+        }
     }
     out
 }
@@ -205,5 +320,62 @@ mod tests {
     fn gap_of_constant_rows_is_identity() {
         let m = Mat::from_vec(3, 2, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
         assert_eq!(global_average_pool(&m).data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn prop_dense_batch_bitwise_matches_per_event() {
+        Prop::new("dense_batch == dense per event").runs(200).check(|g| {
+            let (bsz, r, cin, cout) =
+                (g.usize_in(1, 6), g.usize_in(1, 6), g.usize_in(1, 10), g.usize_in(1, 8));
+            let events: Vec<Mat> = (0..bsz).map(|_| rand_mat(g, r, cin, 1.5)).collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let w = rand_mat(g, cin, cout, 0.7);
+            let b = g.normal_vec(cout, 0.3);
+            for act in [Activation::Linear, Activation::Relu, Activation::Sigmoid] {
+                let batched = dense_batch(&Mat3::from_events(&refs), &w, &b, act);
+                for (i, e) in events.iter().enumerate() {
+                    // bitwise: the batched loop order preserves each
+                    // accumulator's addition sequence exactly
+                    assert_eq!(batched.event(i), dense(e, &w, &b, act));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mha_and_layernorm_batch_bitwise_match_per_event() {
+        Prop::new("mha/ln batch == per event").runs(50).check(|g| {
+            let (bsz, s, d) = (g.usize_in(1, 5), g.usize_in(2, 8), 8usize);
+            let heads = 2;
+            let k = d / heads;
+            let w = MhaWeights {
+                wq: (0..heads).map(|_| rand_mat(g, d, k, 0.5)).collect(),
+                bq: (0..heads).map(|_| g.normal_vec(k, 0.1)).collect(),
+                wk: (0..heads).map(|_| rand_mat(g, d, k, 0.5)).collect(),
+                bk: (0..heads).map(|_| g.normal_vec(k, 0.1)).collect(),
+                wv: (0..heads).map(|_| rand_mat(g, d, k, 0.5)).collect(),
+                bv: (0..heads).map(|_| g.normal_vec(k, 0.1)).collect(),
+                wo: rand_mat(g, heads * k, d, 0.5),
+                bo: g.normal_vec(d, 0.1),
+            };
+            let events: Vec<Mat> = (0..bsz).map(|_| rand_mat(g, s, d, 1.0)).collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let x3 = Mat3::from_events(&refs);
+            let batched = mha_batch(&x3, &w);
+            for (i, e) in events.iter().enumerate() {
+                assert_eq!(batched.event(i), mha(e, &w));
+            }
+            let gamma = g.normal_vec(d, 1.0);
+            let beta = g.normal_vec(d, 0.5);
+            let mut ln = x3.clone();
+            layernorm_batch(&mut ln, &gamma, &beta);
+            for (i, e) in events.iter().enumerate() {
+                assert_eq!(ln.event(i), layernorm_rows(e, &gamma, &beta));
+            }
+            let gap = global_average_pool_batch(&x3);
+            for (i, e) in events.iter().enumerate() {
+                assert_eq!(gap.event(i), global_average_pool(e));
+            }
+        });
     }
 }

@@ -2,10 +2,33 @@
 //! ratio plots.  Exact f32 math, no LUTs, no quantization; the HLS
 //! simulator ([`crate::hls`]) is validated against this module, and the
 //! AUC sweep (Figures 9-11) compares the two.
+//!
+//! # Batched execution model
+//!
+//! Both this module and the HLS simulator expose a batch-major forward
+//! (`forward_batch`) next to the per-event one, built on three rules:
+//!
+//! * **Loop order** — batched kernels are *weight-stationary*: each
+//!   weight matrix streams through the MAC loops exactly once per layer
+//!   for the whole batch ([`tensor::Mat3`] packs the events contiguously
+//!   so all `batch*rows` activation rows are in flight together),
+//!   instead of once per event.
+//! * **Scratch reuse** — the fixed-point path hoists its per-event
+//!   allocations (f64 accumulator tiles, score/output row buffers, the
+//!   MHA FIFO traffic) into a reusable arena
+//!   ([`crate::hls::scratch::Scratch`]) owned by the transformer, so the
+//!   hot loop allocates nothing per event.
+//! * **Bit-exactness contract** — batching must never change a score:
+//!   every accumulator still sums its terms in ascending input index and
+//!   every intermediate lands on the same `FixedSpec` grid in the same
+//!   order, so `forward_batch` is **bitwise identical** to running
+//!   events one at a time.  Property tests enforce this for both the
+//!   float and the fixed path (`nn::layers`, `nn::transformer`,
+//!   `hls::dense`, `hls::mha`, `hls::transformer`).
 
 pub mod layers;
 pub mod tensor;
 pub mod transformer;
 
-pub use tensor::Mat;
+pub use tensor::{Mat, Mat3};
 pub use transformer::FloatTransformer;

@@ -131,6 +131,141 @@ impl fmt::Debug for Mat {
     }
 }
 
+/// Row-major `batch x rows x cols` f32 tensor — a batch of same-shape
+/// events held contiguously so batched kernels can stream one weight
+/// matrix across every event in a single pass (weight-stationary loop
+/// order; see the batched-execution notes in [`crate::nn`]).
+///
+/// The layout doubles as a flat `(batch*rows, cols)` matrix: the
+/// `flat_row` accessors expose that view, which is what the batched
+/// dense/layernorm kernels iterate (events are row-independent there).
+#[derive(Clone, PartialEq)]
+pub struct Mat3 {
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat3 {
+    pub fn zeros(batch: usize, rows: usize, cols: usize) -> Self {
+        Self { batch, rows, cols, data: vec![0.0; batch * rows * cols] }
+    }
+
+    /// Pack a batch of same-shape events into one contiguous tensor.
+    /// Panics on an empty batch or a shape mismatch (callers validate
+    /// event geometry at the router boundary).
+    pub fn from_events(events: &[&Mat]) -> Self {
+        assert!(!events.is_empty(), "empty batch");
+        let (rows, cols) = (events[0].rows(), events[0].cols());
+        let mut data = Vec::with_capacity(events.len() * rows * cols);
+        for e in events {
+            assert_eq!(
+                (e.rows(), e.cols()),
+                (rows, cols),
+                "ragged batch: {}x{} vs {rows}x{cols}",
+                e.rows(),
+                e.cols()
+            );
+            data.extend_from_slice(e.data());
+        }
+        Self { batch: events.len(), rows, cols, data }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total row count of the flat `(batch*rows, cols)` view.
+    pub fn flat_rows(&self) -> usize {
+        self.batch * self.rows
+    }
+
+    /// Row `i` of the flat `(batch*rows, cols)` view.
+    #[inline]
+    pub fn flat_row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn flat_row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `r` of event `b`.
+    #[inline]
+    pub fn event_row(&self, b: usize, r: usize) -> &[f32] {
+        debug_assert!(b < self.batch && r < self.rows);
+        self.flat_row(b * self.rows + r)
+    }
+
+    #[inline]
+    pub fn event_row_mut(&mut self, b: usize, r: usize) -> &mut [f32] {
+        debug_assert!(b < self.batch && r < self.rows);
+        self.flat_row_mut(b * self.rows + r)
+    }
+
+    /// Event `b` as a contiguous `(rows, cols)` row-major slice.
+    #[inline]
+    pub fn event_slice(&self, b: usize) -> &[f32] {
+        let n = self.rows * self.cols;
+        &self.data[b * n..(b + 1) * n]
+    }
+
+    /// Copy event `b` out as a standalone matrix (test/boundary helper).
+    pub fn event(&self, b: usize) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.event_slice(b).to_vec())
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Map every element in place.
+    pub fn map_in_place(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise add (same shape) — the batched residual adder.
+    pub fn add(&self, other: &Mat3) -> Mat3 {
+        assert_eq!(
+            (self.batch, self.rows, self.cols),
+            (other.batch, other.rows, other.cols)
+        );
+        Mat3 {
+            batch: self.batch,
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+}
+
+impl fmt::Debug for Mat3 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat3({}x{}x{})", self.batch, self.rows, self.cols)
+    }
+}
+
 /// Dot product of two equal-length slices (the innermost MAC loop).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -165,6 +300,45 @@ mod tests {
     #[should_panic]
     fn matmul_shape_mismatch_panics() {
         Mat::zeros(2, 3).matmul(&Mat::zeros(2, 3));
+    }
+
+    #[test]
+    fn mat3_packs_events_contiguously() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let t = Mat3::from_events(&[&a, &b]);
+        assert_eq!((t.batch(), t.rows(), t.cols()), (2, 2, 2));
+        assert_eq!(t.flat_rows(), 4);
+        assert_eq!(t.event_row(0, 1), &[3., 4.]);
+        assert_eq!(t.event_row(1, 0), &[5., 6.]);
+        assert_eq!(t.flat_row(3), &[7., 8.]);
+        assert_eq!(t.event(0), a);
+        assert_eq!(t.event(1), b);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged batch")]
+    fn mat3_rejects_ragged_batch() {
+        let a = Mat::zeros(2, 2);
+        let b = Mat::zeros(3, 2);
+        Mat3::from_events(&[&a, &b]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty batch")]
+    fn mat3_rejects_empty_batch() {
+        Mat3::from_events(&[]);
+    }
+
+    #[test]
+    fn mat3_add_and_map_match_mat_semantics() {
+        let a = Mat::from_vec(1, 3, vec![1., -2., 3.]);
+        let t = Mat3::from_events(&[&a, &a]);
+        let sum = t.add(&t);
+        assert_eq!(sum.event(0), a.add(&a));
+        let mut m = t.clone();
+        m.map_in_place(|v| v.max(0.0));
+        assert_eq!(m.event(1), a.map(|v| v.max(0.0)));
     }
 
     #[test]

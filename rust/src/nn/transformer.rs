@@ -3,9 +3,10 @@
 //! tensors exported to `artifacts/<m>.eval.nnw`).
 
 use super::layers::{
-    dense, global_average_pool, layernorm_rows, mha, Activation,
+    dense, dense_batch, global_average_pool, global_average_pool_batch,
+    layernorm_batch, layernorm_rows, mha, mha_batch, Activation,
 };
-use super::tensor::Mat;
+use super::tensor::{Mat, Mat3};
 use crate::models::config::{FinalActivation, ModelConfig};
 use crate::models::weights::Weights;
 
@@ -52,6 +53,43 @@ impl FloatTransformer {
         let hid = dense(&pooled, &w.head.0, &w.head.1, Activation::Relu);
         let logits = dense(&hid, &w.out.0, &w.out.1, Activation::Linear);
         logits.row(0).to_vec()
+    }
+
+    /// Forward a whole batch of events at once -> per-event logits.
+    ///
+    /// Batch-major execution: every layer streams its weight matrix once
+    /// for the entire batch (see [`crate::nn::layers::dense_batch`]).
+    /// Bitwise identical to calling [`Self::forward`] per event — the
+    /// batched kernels preserve each accumulator's operation order — so
+    /// the serving path can batch freely without perturbing scores.
+    pub fn forward_batch(&self, xs: &[&Mat]) -> Vec<Vec<f32>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        for x in xs {
+            assert_eq!(x.rows(), self.cfg.seq_len, "bad seq len");
+            assert_eq!(x.cols(), self.cfg.input_size, "bad input size");
+        }
+        let w = &self.weights;
+        let x3 = Mat3::from_events(xs);
+        let mut h = dense_batch(&x3, &w.embed.0, &w.embed.1, Activation::Linear);
+        for b in &w.blocks {
+            let attn = mha_batch(&h, &b.mha);
+            h = h.add(&attn); // residual
+            if let Some(ln) = &b.ln1 {
+                layernorm_batch(&mut h, &ln.gamma, &ln.beta);
+            }
+            let y = dense_batch(&h, &b.ffn1.0, &b.ffn1.1, Activation::Relu);
+            let y = dense_batch(&y, &b.ffn2.0, &b.ffn2.1, Activation::Linear);
+            h = h.add(&y); // residual
+            if let Some(ln) = &b.ln2 {
+                layernorm_batch(&mut h, &ln.gamma, &ln.beta);
+            }
+        }
+        let pooled = global_average_pool_batch(&h);
+        let hid = dense_batch(&pooled, &w.head.0, &w.head.1, Activation::Relu);
+        let logits = dense_batch(&hid, &w.out.0, &w.out.1, Activation::Linear);
+        (0..xs.len()).map(|i| logits.event_row(i, 0).to_vec()).collect()
     }
 
     /// Logits -> probabilities per the model's head.
@@ -130,6 +168,36 @@ mod tests {
             g.normal_vec(m.config.seq_len * m.config.input_size, 1.0),
         );
         assert_eq!(t.forward(&x), t.forward(&x));
+    }
+
+    #[test]
+    fn forward_batch_is_bitwise_identical_to_per_event() {
+        for m in zoo() {
+            let t = FloatTransformer::new(m.config.clone(), synthetic_weights(&m.config, 11));
+            let mut g = Gen::new(8);
+            let events: Vec<Mat> = (0..5)
+                .map(|_| {
+                    Mat::from_vec(
+                        m.config.seq_len,
+                        m.config.input_size,
+                        g.normal_vec(m.config.seq_len * m.config.input_size, 1.0),
+                    )
+                })
+                .collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let batched = t.forward_batch(&refs);
+            assert_eq!(batched.len(), events.len());
+            for (x, got) in events.iter().zip(&batched) {
+                assert_eq!(got, &t.forward(x), "{}", m.config.name);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_of_empty_is_empty() {
+        let m = &zoo()[0];
+        let t = FloatTransformer::new(m.config.clone(), synthetic_weights(&m.config, 1));
+        assert!(t.forward_batch(&[]).is_empty());
     }
 
     #[test]

@@ -117,8 +117,15 @@ impl Executable {
 
     /// Convenience: run a batch of event matrices (padding the tail with
     /// zeros when fewer events than the compiled batch size arrive).
-    /// Returns per-event logits for the real events only.
+    /// Returns per-event logits for the real events only — the padded
+    /// lanes' outputs are computed by the graph but never surfaced, so a
+    /// partial chunk is semantically identical to per-event execution.
+    /// An empty slice short-circuits to no logits without touching the
+    /// device (running an all-padding batch would waste a full execute).
     pub fn run_events(&self, events: &[&crate::nn::tensor::Mat]) -> Result<Vec<Vec<f32>>> {
+        if events.is_empty() {
+            return Ok(Vec::new());
+        }
         let (b, s, f) = self.input_shape;
         ensure!(events.len() <= b, "batch overflow: {} > {b}", events.len());
         let mut flat = vec![0.0f32; b * s * f];
