@@ -49,9 +49,15 @@ def main(argv):
         print(__doc__)
         return 0
     prev_path, curr_path = argv[1], argv[2]
-    key = argv[argv.index("--key") + 1] if "--key" in argv else "throughput_eps"
+    key = "throughput_eps"
+    if "--key" in argv:
+        key_at = argv.index("--key") + 1
+        if key_at < len(argv):
+            key = argv[key_at]
+        else:
+            print("(bench_diff: --key given without a value; using throughput_eps)")
     prev, curr = load(prev_path), load(curr_path)
-    if not prev or not curr:
+    if not prev and not curr:
         print(f"(bench_diff: nothing to compare — prev={len(prev)} curr={len(curr)} lines)")
         return 0
 
@@ -59,10 +65,25 @@ def main(argv):
     sweeps = [n for n in shared if "/batch_sweep/" in n]
     others = [n for n in shared if "/batch_sweep/" not in n]
 
+    def pick_key(rec, wanted, fallback):
+        # --key, then the timing fallback, then the first numeric field
+        # (sorted for determinism) so metric-only lines — e.g. the
+        # mixed-vs-uniform resource totals, which carry dsp/ff/lut/bram18
+        # and no mean_ns — still show up in the value diff
+        for k in (wanted, fallback):
+            if metric(rec, k) is not None:
+                return k
+        for k in sorted(rec):
+            if k != "bench" and metric(rec, k) is not None:
+                return k
+        return None
+
     def report(names, title, fallback_key):
         rows = []
         for n in names:
-            k = key if metric(curr[n], key) is not None else fallback_key
+            k = pick_key(curr[n], key, fallback_key)
+            if k is None:
+                continue
             a, b = metric(prev[n], k), metric(curr[n], k)
             if a is None or b is None or a == 0:
                 continue
@@ -76,12 +97,21 @@ def main(argv):
 
     report(sweeps, "batch-native serving sweep vs previous run", "mean_ns")
     report(others, "other benches vs previous run", "mean_ns")
+    # added/removed bench keys are lifecycle events, not errors: a rename
+    # shows up as one "gone" plus one "new" and must never break the
+    # (always-advisory) diff
     dropped = sorted(set(prev) - set(curr))
     added = sorted(set(curr) - set(prev))
     if dropped:
-        print(f"\n(benches gone since last run: {', '.join(dropped[:10])})")
+        names = ", ".join(dropped[:10]) + (" ..." if len(dropped) > 10 else "")
+        print(f"\n(benches gone since last run: {names})")
     if added:
-        print(f"(new benches this run: {', '.join(added[:10])})")
+        names = ", ".join(added[:10]) + (" ..." if len(added) > 10 else "")
+        print(f"(new benches this run: {names})")
+    print(
+        f"\n(bench_diff summary: {len(shared)} shared, "
+        f"{len(added)} new, {len(dropped)} gone)"
+    )
     return 0
 
 

@@ -1,0 +1,119 @@
+"""ci/bench_diff.py contract: the advisory perf diff must survive bench
+renames (added/removed keys are reported as "new"/"gone", never an
+error), malformed CLI input and unreadable files, always exiting 0."""
+
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+
+def _load_module():
+    spec = importlib.util.spec_from_file_location(
+        "bench_diff", ROOT / "ci" / "bench_diff.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+MOD = _load_module()
+
+
+def line(name, **fields):
+    parts = [f'"bench":"{name}"'] + [f'"{k}":{v}' for k, v in fields.items()]
+    return "{" + ",".join(parts) + "}"
+
+
+def run(tmp_path, prev_lines, curr_lines, extra=()):
+    prev = tmp_path / "prev.json"
+    curr = tmp_path / "curr.json"
+    prev.write_text("\n".join(prev_lines) + "\n")
+    curr.write_text("\n".join(curr_lines) + "\n")
+    return MOD.main(["bench_diff.py", str(prev), str(curr), *extra])
+
+
+def test_shared_keys_are_diffed(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("a/batch_sweep/x", mean_ns=100), line("b", mean_ns=10)],
+        [line("a/batch_sweep/x", mean_ns=110), line("b", mean_ns=12)],
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "batch-native serving sweep" in out
+    assert "2 shared, 0 new, 0 gone" in out
+
+
+def test_renamed_bench_reports_new_and_gone_not_error(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("old_name", mean_ns=100), line("kept", mean_ns=5)],
+        [line("new_name", mean_ns=90), line("kept", mean_ns=5)],
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "gone since last run: old_name" in out
+    assert "new benches this run: new_name" in out
+    assert "1 shared, 1 new, 1 gone" in out
+
+
+def test_fully_disjoint_runs_still_report_lifecycle(tmp_path, capsys):
+    rc = run(tmp_path, [line("a", mean_ns=1)], [line("b", mean_ns=2)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "gone since last run: a" in out
+    assert "new benches this run: b" in out
+
+
+def test_both_empty_is_a_noop(tmp_path, capsys):
+    rc = run(tmp_path, [""], [""])
+    assert rc == 0
+    assert "nothing to compare" in capsys.readouterr().out
+
+
+def test_key_flag_without_value_does_not_crash(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("a", mean_ns=100)],
+        [line("a", mean_ns=120)],
+        extra=("--key",),
+    )
+    assert rc == 0
+    assert "without a value" in capsys.readouterr().out
+
+
+def test_unreadable_prev_file_is_advisory(tmp_path, capsys):
+    curr = tmp_path / "curr.json"
+    curr.write_text(line("a", mean_ns=1) + "\n")
+    rc = MOD.main(["bench_diff.py", str(tmp_path / "missing.json"), str(curr)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "cannot read" in out
+    # the surviving side still reports its keys as new
+    assert "new benches this run: a" in out
+
+
+def test_metric_only_lines_use_first_numeric_field(tmp_path, capsys):
+    # resource-total lines carry no mean_ns; the diff must still report
+    # them via their first numeric field instead of dropping the row
+    name = "figures_resources/mixed_vs_uniform/engine/uniform"
+    rc = run(
+        tmp_path,
+        [line(name, dsp=100, ff=2000)],
+        [line(name, dsp=200, ff=2000)],
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert name in out
+    assert "+100.0%" in out  # dsp doubled (first numeric field sorts before ff)
+
+
+def test_malformed_json_lines_are_skipped(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("a", mean_ns=100), "not json {", '{"bench":42}'],
+        [line("a", mean_ns=100)],
+    )
+    assert rc == 0
+    assert "1 shared" in capsys.readouterr().out

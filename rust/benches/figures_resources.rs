@@ -6,9 +6,13 @@ mod harness;
 
 use hls4ml_transformer::artifacts_dir;
 use hls4ml_transformer::experiments::{artifacts_ready, load_checkpoints, resource_figures};
-use hls4ml_transformer::hls::resources::VU13P;
+use hls4ml_transformer::hls::resources::{Resources, VU13P};
+use hls4ml_transformer::hls::{calibrate_plan, FixedTransformer, QuantConfig, ReuseFactor};
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::zoo;
+use hls4ml_transformer::nn::tensor::Mat;
+use hls4ml_transformer::quant::{bit_shave_search, EvalSet};
+use hls4ml_transformer::testutil::Gen;
 
 fn main() {
     harness::section("E4: Figures 12-14 — DSP/FF/LUT/BRAM vs reuse x precision");
@@ -39,6 +43,86 @@ fn main() {
             println!("  trend: {name:<32} {}", if ok { "OK" } else { "VIOLATED" });
             assert!(ok, "{}: trend violated: {name}", m.config.name);
         }
+    }
+
+    // mixed-vs-uniform plan resource totals (VU13P), one BENCH_JSON line
+    // per (model, plan kind) — the per-layer-precision perf trajectory
+    harness::section("E7: mixed-precision plans vs uniform (VU13P totals)");
+    let uniform = QuantConfig::new(6, 12); // width 18: above the DSP port
+    let emit = |model: &str, tag: &str, r: &Resources| {
+        harness::json_line(
+            &format!("figures_resources/mixed_vs_uniform/{model}/{tag}"),
+            &[
+                ("dsp", r.dsp as f64),
+                ("ff", r.ff as f64),
+                ("lut", r.lut as f64),
+                ("bram18", r.bram18 as f64),
+                ("fits_vu13p", r.fits(&VU13P) as u64 as f64),
+            ],
+        );
+    };
+    for m in zoo() {
+        let w = synthetic_weights(&m.config, 7);
+        let uni_total = FixedTransformer::new(m.config.clone(), &w, uniform)
+            .synthesize(ReuseFactor(1))
+            .total;
+        emit(&m.config.name, "uniform", &uni_total);
+        // calibrated plan: per-site integer bits from profiled ranges
+        let mut g = Gen::new(29);
+        let events: Vec<Mat> = (0..6)
+            .map(|_| {
+                Mat::from_vec(
+                    m.config.seq_len,
+                    m.config.input_size,
+                    g.normal_vec(m.config.seq_len * m.config.input_size, 1.0),
+                )
+            })
+            .collect();
+        let cal = calibrate_plan(&m.config, &w, &events, uniform.data.frac());
+        let cal_total = FixedTransformer::with_plan(m.config.clone(), &w, cal)
+            .synthesize(ReuseFactor(1))
+            .total;
+        emit(&m.config.name, "calibrated", &cal_total);
+        println!(
+            "  {:8} uniform DSP {} FF {} | calibrated DSP {} FF {}",
+            m.config.name, uni_total.dsp, uni_total.ff, cal_total.dsp, cal_total.ff
+        );
+    }
+    // the full greedy bit-shave on the engine model (kept to one model:
+    // each shave attempt scores the whole eval set)
+    {
+        let m = &zoo()[0];
+        let w = synthetic_weights(&m.config, 7);
+        let eval = EvalSet::synthetic(&m.config, &w, 16, 11);
+        let res = bit_shave_search(
+            &m.config, &w, &eval, uniform, 0.99, 2, ReuseFactor(1),
+        );
+        emit(&m.config.name, "bit_shaved", &res.plan_resources);
+        harness::json_line(
+            &format!("figures_resources/mixed_vs_uniform/{}/savings", m.config.name),
+            &[
+                (
+                    "dsp_plus_ff_saved",
+                    (res.uniform_resources.dsp + res.uniform_resources.ff) as f64
+                        - (res.plan_resources.dsp + res.plan_resources.ff) as f64,
+                ),
+                ("bits_shaved", res.bits_shaved as f64),
+                ("auc_ratio", res.plan_score.auc_ratio),
+                ("points_scored", res.points_scored as f64),
+            ],
+        );
+        println!(
+            "  engine bit-shaved: DSP {} FF {} ({} bits shaved, auc_ratio {:.4})",
+            res.plan_resources.dsp,
+            res.plan_resources.ff,
+            res.bits_shaved,
+            res.plan_score.auc_ratio
+        );
+        assert!(
+            res.plan_resources.dsp + res.plan_resources.ff
+                <= res.uniform_resources.dsp + res.uniform_resources.ff,
+            "bit shaving must never cost resources"
+        );
     }
 
     harness::section("resource sweep cost");

@@ -126,6 +126,30 @@ mod tests {
     }
 
     #[test]
+    fn precision_plan_flag_parses_for_serve_and_synth() {
+        // the per-site precision plan rides this parser on serve, synth
+        // and mixed-precision; both flag forms must yield the path
+        let a = parse("serve --backend hls --precision-plan plans/engine.plan");
+        assert_eq!(a.get("precision-plan"), Some("plans/engine.plan"));
+        let b = parse("synth --model engine --precision-plan=mixed.txt --reuse 2");
+        assert_eq!(b.get("precision-plan"), Some("mixed.txt"));
+        assert!(b
+            .expect_only(&["model", "reuse", "int", "frac", "precision-plan"])
+            .is_ok());
+        // absent flag stays absent (the uniform design point)
+        assert_eq!(parse("synth --model engine").get("precision-plan"), None);
+    }
+
+    #[test]
+    fn mixed_precision_flags_parse() {
+        let a = parse("mixed-precision --model btag --floor 0.995 --min-frac 3 --save-plan p.txt");
+        assert_eq!(a.command, "mixed-precision");
+        assert_eq!(a.get_parse("floor", 0.99f64).unwrap(), 0.995);
+        assert_eq!(a.get_parse("min-frac", 2u32).unwrap(), 3);
+        assert_eq!(a.get("save-plan"), Some("p.txt"));
+    }
+
+    #[test]
     fn duplicate_flag_rejected() {
         assert!(Args::parse(["--a", "1", "--a", "2"].map(String::from)).is_err());
     }

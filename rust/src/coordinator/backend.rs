@@ -13,7 +13,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::hls::{FixedTransformer, QuantConfig};
+use crate::hls::{FixedTransformer, PrecisionPlan};
 use crate::models::config::{FinalActivation, ModelConfig};
 use crate::models::weights::Weights;
 use crate::nn::tensor::Mat;
@@ -52,21 +52,31 @@ impl Backend {
     /// Build a backend for `cfg`.
     ///
     /// `runtime` is required for [`BackendKind::Pjrt`] and ignored
-    /// otherwise; `quant` configures the HLS design point.
+    /// otherwise; `plan` configures the HLS design point — a
+    /// [`PrecisionPlan::uniform`] reproduces the legacy single
+    /// `QuantConfig` engine bitwise, a heterogeneous plan builds the
+    /// mixed-precision engine.
     pub fn build(
         kind: BackendKind,
         cfg: &ModelConfig,
         weights: &Weights,
-        quant: QuantConfig,
+        plan: &PrecisionPlan,
         runtime: Option<&Runtime>,
         artifacts: &std::path::Path,
     ) -> Result<Self> {
+        anyhow::ensure!(
+            plan.num_blocks() == cfg.num_blocks,
+            "precision plan has {} blocks, model '{}' has {}",
+            plan.num_blocks(),
+            cfg.name,
+            cfg.num_blocks
+        );
         Ok(match kind {
             BackendKind::Float => {
                 Backend::Float(FloatTransformer::new(cfg.clone(), weights.clone()))
             }
             BackendKind::Hls => {
-                Backend::Hls(FixedTransformer::new(cfg.clone(), weights, quant))
+                Backend::Hls(FixedTransformer::with_plan(cfg.clone(), weights, plan.clone()))
             }
             BackendKind::Pjrt => {
                 let rt = runtime.context("PJRT backend needs a Runtime")?;
@@ -176,9 +186,14 @@ fn logits_to_probs(cfg: &ModelConfig, logits: &[f32]) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hls::QuantConfig;
     use crate::models::weights::synthetic_weights;
     use crate::models::zoo::zoo_model;
     use crate::testutil::Gen;
+
+    fn uniform(cfg: &ModelConfig, i: u32, f: u32) -> PrecisionPlan {
+        PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(i, f))
+    }
 
     fn events(cfg: &ModelConfig, n: usize) -> Vec<Mat> {
         let mut g = Gen::new(9);
@@ -197,9 +212,9 @@ mod tests {
     fn float_and_hls_backends_agree_roughly() {
         let cfg = zoo_model("engine").unwrap().config;
         let w = synthetic_weights(&cfg, 13);
-        let f = Backend::build(BackendKind::Float, &cfg, &w, QuantConfig::new(8, 12),
+        let f = Backend::build(BackendKind::Float, &cfg, &w, &uniform(&cfg, 8, 12),
                                None, std::path::Path::new(".")).unwrap();
-        let h = Backend::build(BackendKind::Hls, &cfg, &w, QuantConfig::new(8, 12),
+        let h = Backend::build(BackendKind::Hls, &cfg, &w, &uniform(&cfg, 8, 12),
                                None, std::path::Path::new(".")).unwrap();
         let evs = events(&cfg, 4);
         let refs: Vec<&Mat> = evs.iter().collect();
@@ -220,7 +235,7 @@ mod tests {
         let cfg = zoo_model("engine").unwrap().config;
         let w = synthetic_weights(&cfg, 13);
         for kind in [BackendKind::Float, BackendKind::Hls] {
-            let b = Backend::build(kind, &cfg, &w, QuantConfig::new(8, 12),
+            let b = Backend::build(kind, &cfg, &w, &uniform(&cfg, 8, 12),
                                    None, std::path::Path::new(".")).unwrap();
             assert!(b.infer(&[]).unwrap().is_empty(), "{kind:?}");
         }
@@ -234,7 +249,7 @@ mod tests {
         let cfg = zoo_model("btag").unwrap().config;
         let w = synthetic_weights(&cfg, 3);
         for kind in [BackendKind::Float, BackendKind::Hls] {
-            let b = Backend::build(kind, &cfg, &w, QuantConfig::new(8, 12),
+            let b = Backend::build(kind, &cfg, &w, &uniform(&cfg, 8, 12),
                                    None, std::path::Path::new(".")).unwrap();
             let evs = events(&cfg, 5);
             let refs: Vec<&Mat> = evs.iter().collect();
@@ -273,9 +288,52 @@ mod tests {
     fn pjrt_without_runtime_errors() {
         let cfg = zoo_model("engine").unwrap().config;
         let w = synthetic_weights(&cfg, 13);
-        let r = Backend::build(BackendKind::Pjrt, &cfg, &w, QuantConfig::new(8, 12),
+        let r = Backend::build(BackendKind::Pjrt, &cfg, &w, &uniform(&cfg, 8, 12),
                                None, std::path::Path::new("."));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn hls_backend_from_uniform_plan_matches_direct_engine_bitwise() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 14);
+        let b = Backend::build(BackendKind::Hls, &cfg, &w, &uniform(&cfg, 6, 10),
+                               None, std::path::Path::new(".")).unwrap();
+        let t = FixedTransformer::new(cfg.clone(), &w, QuantConfig::new(6, 10));
+        let evs = events(&cfg, 3);
+        let refs: Vec<&Mat> = evs.iter().collect();
+        let probs = b.infer(&refs).unwrap();
+        for (e, got) in evs.iter().zip(&probs) {
+            assert_eq!(got, &t.forward(e));
+        }
+    }
+
+    #[test]
+    fn hls_backend_honors_a_mixed_plan() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 15);
+        let mut plan = uniform(&cfg, 6, 12);
+        plan.set_data("block0.ffn1", crate::fixed::FixedSpec::new(8, 4)).unwrap();
+        let b = Backend::build(BackendKind::Hls, &cfg, &w, &plan,
+                               None, std::path::Path::new(".")).unwrap();
+        let t = FixedTransformer::with_plan(cfg.clone(), &w, plan);
+        let evs = events(&cfg, 2);
+        let refs: Vec<&Mat> = evs.iter().collect();
+        let probs = b.infer(&refs).unwrap();
+        for (e, got) in evs.iter().zip(&probs) {
+            assert_eq!(got, &t.forward(e), "mixed-plan backend must match its engine");
+        }
+    }
+
+    #[test]
+    fn plan_with_wrong_block_count_is_clean_error() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 16);
+        let plan = PrecisionPlan::uniform(cfg.num_blocks + 2, QuantConfig::new(6, 10));
+        let r = Backend::build(BackendKind::Hls, &cfg, &w, &plan,
+                               None, std::path::Path::new("."));
+        assert!(r.is_err());
+        assert!(format!("{:#}", r.unwrap_err()).contains("blocks"));
     }
 
     #[test]

@@ -25,7 +25,7 @@ use super::router::{Router, Submit};
 use super::spsc;
 use super::stats::PipelineStats;
 use crate::data::generator_for;
-use crate::hls::QuantConfig;
+use crate::hls::{PrecisionPlan, QuantConfig};
 use crate::models::weights::{synthetic_weights, Weights};
 use crate::models::zoo::zoo_model;
 use crate::models::NnwFile;
@@ -47,6 +47,10 @@ pub struct PipelineConfig {
     pub model: &'static str,
     pub backend: BackendKind,
     pub quant: QuantConfig,
+    /// Serialized precision-plan overrides (the `--precision-plan` file
+    /// text): applied over a uniform `quant` base when the pipeline's
+    /// engine is built.  `None` serves the uniform design point.
+    pub precision_plan: Option<String>,
     pub batch: BatchPolicy,
     /// Capacity of each shard's ring (not the pool total).
     pub ring_capacity: usize,
@@ -62,6 +66,7 @@ impl PipelineConfig {
             model,
             backend,
             quant: QuantConfig::new(6, 10),
+            precision_plan: None,
             batch: BatchPolicy::default(),
             ring_capacity: 1024,
             weights: WeightsSource::Artifacts,
@@ -183,7 +188,15 @@ impl TriggerServer {
                 .with_context(|| format!("unknown zoo model '{}'", pc.model))?;
             let mcfg = zoo.config.clone();
             let weights = Arc::new(load_weights(&cfg.artifacts_dir, pc, &mcfg)?);
-            resolved.push((pc, mcfg, weights));
+            // resolve the precision plan up front too: a malformed plan
+            // must be a clean Err before any pool spawns
+            let mut plan = PrecisionPlan::uniform(mcfg.num_blocks, pc.quant);
+            if let Some(text) = &pc.precision_plan {
+                plan.apply_overrides(text)
+                    .map_err(anyhow::Error::msg)
+                    .with_context(|| format!("precision plan for model '{}'", pc.model))?;
+            }
+            resolved.push((pc, mcfg, weights, plan));
         }
 
         let mut router = Router::new();
@@ -197,7 +210,7 @@ impl TriggerServer {
         let ready = Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
 
         // per-model worker pools
-        for (pc, mcfg, weights) in resolved {
+        for (pc, mcfg, weights, plan) in resolved {
             let replicas = pc.replicas.max(1);
             let mut shard_txs = Vec::with_capacity(replicas);
             for shard in 0..replicas {
@@ -206,6 +219,7 @@ impl TriggerServer {
                 let pc = pc.clone();
                 let mcfg = mcfg.clone();
                 let weights = weights.clone();
+                let plan = plan.clone();
                 let artifacts = cfg.artifacts_dir.clone();
                 let ready_w = ready.clone();
                 workers.push(std::thread::spawn(move || -> Result<(
@@ -227,7 +241,7 @@ impl TriggerServer {
                             pc.backend,
                             &mcfg,
                             &weights,
-                            pc.quant,
+                            &plan,
                             runtime.as_ref(),
                             &artifacts,
                         )?;
@@ -468,6 +482,39 @@ mod tests {
             (single - pooled).abs() < 1e-12,
             "replicas=1 auc {single} vs replicas=4 auc {pooled}"
         );
+    }
+
+    #[test]
+    fn serve_round_trips_a_serialized_precision_plan() {
+        // engine has 3 blocks; serialize a mixed plan, feed the text
+        // through the pipeline config (what `repro serve
+        // --precision-plan` does), and the server must come up and score
+        // every event through the heterogeneous engine
+        let mut plan = PrecisionPlan::uniform(3, QuantConfig::new(6, 10));
+        plan.set_data("block1.ffn1", crate::fixed::FixedSpec::new(10, 4)).unwrap();
+        plan.set_data("softmax", crate::fixed::FixedSpec::new(12, 3)).unwrap();
+        let text = plan.serialize();
+        // the text itself round-trips
+        let mut rt = PrecisionPlan::uniform(3, QuantConfig::new(6, 10));
+        rt.apply_overrides(&text).unwrap();
+        assert_eq!(rt, plan);
+        let mut cfg = base_cfg(BackendKind::Hls, 30);
+        cfg.pipelines[0].precision_plan = Some(text);
+        let report = TriggerServer::run(&cfg).unwrap();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted + s.dropped, 30);
+        assert!(s.accepted > 0);
+    }
+
+    #[test]
+    fn malformed_precision_plan_errors_before_spawning() {
+        let mut cfg = base_cfg(BackendKind::Hls, 10);
+        cfg.pipelines[0].precision_plan = Some("blurb ap_fixed<8,3>".into());
+        let err = TriggerServer::run(&cfg);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("blurb"), "{msg}");
+        assert!(msg.contains("engine"), "{msg}");
     }
 
     #[test]

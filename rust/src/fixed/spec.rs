@@ -117,6 +117,26 @@ impl fmt::Display for FixedSpec {
     }
 }
 
+impl std::str::FromStr for FixedSpec {
+    type Err = String;
+
+    /// Parse the `Display` form back: `ap_fixed<W,I>` (spaces around the
+    /// comma tolerated).  Used by the precision-plan text format.
+    fn from_str(s: &str) -> Result<Self, String> {
+        let malformed = || format!("malformed fixed spec '{s}' (expected ap_fixed<W,I>)");
+        let inner = s
+            .trim()
+            .strip_prefix("ap_fixed<")
+            .and_then(|r| r.strip_suffix('>'))
+            .ok_or_else(malformed)?;
+        let (w, i) = inner.split_once(',').ok_or_else(malformed)?;
+        let w: u32 = w.trim().parse().map_err(|_| malformed())?;
+        let i: u32 = i.trim().parse().map_err(|_| malformed())?;
+        FixedSpec::try_new(w, i)
+            .ok_or_else(|| format!("invalid fixed spec '{s}' (need 1 <= I <= W <= 48)"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +230,23 @@ mod tests {
             let err = (spec.quantize(x) as f64 - x as f64).abs();
             assert!(err <= spec.step() / 2.0 + 1e-9, "{spec} x={x} err={err}");
         });
+    }
+
+    #[test]
+    fn parse_round_trips_display() {
+        for (w, i) in [(8u32, 4u32), (1, 1), (48, 10), (16, 6)] {
+            let s = FixedSpec::new(w, i);
+            assert_eq!(s.to_string().parse::<FixedSpec>().unwrap(), s);
+        }
+        assert_eq!(" ap_fixed< 12 , 5 >".parse::<FixedSpec>().unwrap(), FixedSpec::new(12, 5));
+        for bad in ["ap_fixed<8>", "fixed<8,3>", "ap_fixed<8,3", "ap_fixed<a,b>", ""] {
+            assert!(bad.parse::<FixedSpec>().is_err(), "{bad}");
+        }
+        // structurally valid syntax but inconsistent widths
+        for bad in ["ap_fixed<3,9>", "ap_fixed<8,0>", "ap_fixed<49,10>"] {
+            let err = bad.parse::<FixedSpec>().unwrap_err();
+            assert!(err.contains(bad), "{err}");
+        }
     }
 
     #[test]

@@ -87,6 +87,20 @@ pub fn reuse_depth_growth(inner: usize, r: ReuseFactor) -> u64 {
     (r.get() as u64 - 1) * (inner as u64).div_ceil(6)
 }
 
+/// Range -> integer-bits rule of the per-site precision calibrator
+/// (hls4ml's `granularity="name"` auto-precision analog): the smallest
+/// signed integer width `I` (sign included) whose `ap_fixed` range
+/// `[-2^(I-1), 2^(I-1))` strictly covers `|x| <= max_abs`, clamped to
+/// `[2, 14]` — one magnitude bit minimum, and never wider than the
+/// paper's biggest practical accumulators.
+pub fn int_bits_for_range(max_abs: f64) -> u32 {
+    let mut i = 2u32;
+    while ((i - 1) as f64).exp2() <= max_abs && i < 14 {
+        i += 1;
+    }
+    i
+}
+
 /// `ceil(log2(2R))` — the interval growth schedule.
 pub fn interval_multiplier(r: ReuseFactor) -> u64 {
     let x = 2 * r.get() as u64;
@@ -110,6 +124,22 @@ pub fn clock_ns(r: ReuseFactor) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn int_bits_cover_their_range() {
+        assert_eq!(int_bits_for_range(0.0), 2);
+        assert_eq!(int_bits_for_range(0.9), 2); // [-2, 2) covers
+        assert_eq!(int_bits_for_range(1.5), 2);
+        assert_eq!(int_bits_for_range(2.0), 3); // 2.0 needs [-4, 4)
+        assert_eq!(int_bits_for_range(7.9), 4);
+        assert_eq!(int_bits_for_range(8.0), 5);
+        assert_eq!(int_bits_for_range(1e9), 14, "clamped");
+        for m in [0.1f64, 0.99, 3.7, 100.0, 511.0] {
+            let i = int_bits_for_range(m);
+            assert!(((i - 1) as f64).exp2() > m, "range {m} not covered by I={i}");
+            assert!(i == 2 || ((i - 2) as f64).exp2() <= m, "I={i} not minimal for {m}");
+        }
+    }
 
     #[test]
     fn clock_monotone_decreasing_in_reuse() {

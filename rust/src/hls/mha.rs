@@ -16,6 +16,7 @@
 use super::dense::{dense_fixed, dense_fixed_batch, dense_resources, dense_stage};
 use super::fifo::Fifo;
 use super::pipeline::{adder_tree_depth, PipelineModel, Stage};
+use super::precision::{MhaPrecision, QuantConfig, RangeProfile};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
 use super::scratch::Scratch;
 use super::softmax::{softmax_fixed_row, softmax_resources, softmax_stage};
@@ -84,7 +85,9 @@ fn apply_v_row(
     }
 }
 
-/// Fixed-point MHA forward: x (S, d) -> (S, d).
+/// Fixed-point MHA forward at one uniform precision: x (S, d) -> (S, d).
+/// Thin wrapper over [`mha_fixed_sited`] with every site at the same
+/// pair — the legacy global-`QuantConfig` signature.
 pub fn mha_fixed(
     x: &Mat,
     w: &MhaWeights,
@@ -92,21 +95,50 @@ pub fn mha_fixed(
     data: FixedSpec,
     accum: FixedSpec,
 ) -> (Mat, MhaFifoStats) {
+    let q = QuantConfig { data, accum };
+    mha_fixed_sited(x, w, roms, &MhaPrecision::uniform(q), None)
+}
+
+/// Fixed-point MHA forward with per-site precision (the heterogeneous
+/// `PrecisionPlan` path): stage-1 projections and score MACs at
+/// `p.qkv`, the score softmax LUT I/O at `p.softmax`, the apply-V /
+/// concat / Wo output path at `p.out`.  With a uniform `p` this is
+/// bitwise identical to the legacy path (same op order, idempotent
+/// re-quantization).
+///
+/// `rec`, when present, is `(site prefix, profile)` — the calibration
+/// hook that records per-site max-|value| ranges (`"block{b}"` prefix;
+/// the softmax LUT I/O records under the shared `"softmax"` site).
+pub fn mha_fixed_sited(
+    x: &Mat,
+    w: &MhaWeights,
+    roms: &Roms,
+    p: &MhaPrecision,
+    mut rec: Option<(&str, &mut RangeProfile)>,
+) -> (Mat, MhaFifoStats) {
     let s = x.rows();
     let heads = w.wq.len();
     let k = w.wq[0].cols();
     let scale = 1.0 / (k as f32).sqrt();
-    let qa = crate::fixed::Quantizer::new(accum);
-    let qd = crate::fixed::Quantizer::new(data);
+    let qa_qkv = crate::fixed::Quantizer::new(p.qkv.accum);
+    let qd_sm = crate::fixed::Quantizer::new(p.softmax.data);
+    let qa_out = crate::fixed::Quantizer::new(p.out.accum);
+    let qd_out = crate::fixed::Quantizer::new(p.out.data);
     let mut stats = MhaFifoStats::default();
 
     let mut head_outputs: Vec<Fifo<Vec<f32>>> = Vec::with_capacity(heads);
     for h in 0..heads {
         // ---- stage 1: projections --------------------------------------
         // Q rows stream through a FIFO; K/V are register-partitioned.
-        let q = dense_fixed(x, &w.wq[h], &w.bq[h], Activation::Linear, data, accum);
-        let km = dense_fixed(x, &w.wk[h], &w.bk[h], Activation::Linear, data, accum);
-        let vm = dense_fixed(x, &w.wv[h], &w.bv[h], Activation::Linear, data, accum);
+        let q = dense_fixed(x, &w.wq[h], &w.bq[h], Activation::Linear, p.qkv.data, p.qkv.accum);
+        let km = dense_fixed(x, &w.wk[h], &w.bk[h], Activation::Linear, p.qkv.data, p.qkv.accum);
+        let vm = dense_fixed(x, &w.wv[h], &w.bv[h], Activation::Linear, p.qkv.data, p.qkv.accum);
+        if let Some((prefix, prof)) = rec.as_mut() {
+            let site = format!("{prefix}.mha.qkv");
+            prof.record(&site, q.data());
+            prof.record(&site, km.data());
+            prof.record(&site, vm.data());
+        }
         let mut q_fifo = Fifo::new(format!("h{h}.q"), s);
         for r in 0..s {
             q_fifo.push(q.row(r).to_vec()).expect("q fifo sized to S");
@@ -117,8 +149,14 @@ pub fn mha_fixed(
         let mut score_fifo = Fifo::new(format!("h{h}.score"), s);
         while let Some(q_row) = q_fifo.pop() {
             let mut score_row = vec![0.0f32; s];
-            score_q_row(&q_row, km.data(), &mut score_row, scale, &qa, &qd);
-            softmax_fixed_row(&mut score_row, roms, data, accum);
+            score_q_row(&q_row, km.data(), &mut score_row, scale, &qa_qkv, &qd_sm);
+            if let Some((_, prof)) = rec.as_mut() {
+                prof.record("softmax", &score_row); // LUT input
+            }
+            softmax_fixed_row(&mut score_row, roms, p.softmax.data, p.softmax.accum);
+            if let Some((_, prof)) = rec.as_mut() {
+                prof.record("softmax", &score_row); // LUT output
+            }
             score_fifo.push(score_row).expect("score fifo sized to S");
         }
         stats.score_high_water = stats.score_high_water.max(score_fifo.high_water());
@@ -127,7 +165,7 @@ pub fn mha_fixed(
         let mut out_fifo = Fifo::new(format!("h{h}.out"), s);
         while let Some(p_row) = score_fifo.pop() {
             let mut out_row = vec![0.0f32; k];
-            apply_v_row(&p_row, vm.data(), &mut out_row, &qa, &qd);
+            apply_v_row(&p_row, vm.data(), &mut out_row, &qa_out, &qd_out);
             out_fifo.push(out_row).expect("out fifo sized to S");
         }
         stats.out_high_water = stats.out_high_water.max(out_fifo.high_water());
@@ -142,7 +180,12 @@ pub fn mha_fixed(
             concat.row_mut(r)[h * k..(h + 1) * k].copy_from_slice(&row);
         }
     }
-    let out = dense_fixed(&concat, &w.wo, &w.bo, Activation::Linear, data, accum);
+    let out = dense_fixed(&concat, &w.wo, &w.bo, Activation::Linear, p.out.data, p.out.accum);
+    if let Some((prefix, prof)) = rec.as_mut() {
+        let site = format!("{prefix}.mha.out");
+        prof.record(&site, concat.data()); // apply-V outputs live here too
+        prof.record(&site, out.data());
+    }
     (out, stats)
 }
 
@@ -168,36 +211,56 @@ pub fn mha_fixed_batch(
     accum: FixedSpec,
     scratch: &mut Scratch,
 ) -> (Mat3, MhaFifoStats) {
+    let q = QuantConfig { data, accum };
+    mha_fixed_batch_sited(x, w, roms, &MhaPrecision::uniform(q), scratch)
+}
+
+/// Batched fixed-point MHA with per-site precision — the batch-major
+/// twin of [`mha_fixed_sited`], same site mapping, same op order, so it
+/// stays **bitwise identical** to the sited per-event path.
+pub fn mha_fixed_batch_sited(
+    x: &Mat3,
+    w: &MhaWeights,
+    roms: &Roms,
+    p: &MhaPrecision,
+    scratch: &mut Scratch,
+) -> (Mat3, MhaFifoStats) {
     let (bsz, s) = (x.batch(), x.rows());
     let heads = w.wq.len();
     let k = w.wq[0].cols();
     let scale = 1.0 / (k as f32).sqrt();
-    let qa = crate::fixed::Quantizer::new(accum);
-    let qd = crate::fixed::Quantizer::new(data);
+    let qa_qkv = crate::fixed::Quantizer::new(p.qkv.accum);
+    let qd_sm = crate::fixed::Quantizer::new(p.softmax.data);
+    let qa_out = crate::fixed::Quantizer::new(p.out.accum);
+    let qd_out = crate::fixed::Quantizer::new(p.out.data);
 
     let mut concat = Mat3::zeros(bsz, s, heads * k);
     let mut score_row = scratch.take_row(s);
     for h in 0..heads {
         // ---- stage 1: projections, one weight pass per matrix --------
-        let q = dense_fixed_batch(x, &w.wq[h], &w.bq[h], Activation::Linear, data, accum, scratch);
-        let km = dense_fixed_batch(x, &w.wk[h], &w.bk[h], Activation::Linear, data, accum, scratch);
-        let vm = dense_fixed_batch(x, &w.wv[h], &w.bv[h], Activation::Linear, data, accum, scratch);
+        let q = dense_fixed_batch(x, &w.wq[h], &w.bq[h], Activation::Linear,
+                                  p.qkv.data, p.qkv.accum, scratch);
+        let km = dense_fixed_batch(x, &w.wk[h], &w.bk[h], Activation::Linear,
+                                   p.qkv.data, p.qkv.accum, scratch);
+        let vm = dense_fixed_batch(x, &w.wv[h], &w.bv[h], Activation::Linear,
+                                   p.qkv.data, p.qkv.accum, scratch);
         for b in 0..bsz {
             for r in 0..s {
                 // ---- stage 2: Q.K^T, scale, LUT softmax --------------
                 score_q_row(q.event_row(b, r), km.event_slice(b), &mut score_row,
-                            scale, &qa, &qd);
-                softmax_fixed_row(&mut score_row, roms, data, accum);
+                            scale, &qa_qkv, &qd_sm);
+                softmax_fixed_row(&mut score_row, roms, p.softmax.data, p.softmax.accum);
                 // ---- stage 3: weighted sum of V, into the concat slot
                 let out_row = &mut concat.event_row_mut(b, r)[h * k..(h + 1) * k];
-                apply_v_row(&score_row, vm.event_slice(b), out_row, &qa, &qd);
+                apply_v_row(&score_row, vm.event_slice(b), out_row, &qa_out, &qd_out);
             }
         }
     }
     scratch.put_row(score_row);
 
     // ---- stage 4: output projection, one weight pass -----------------
-    let out = dense_fixed_batch(&concat, &w.wo, &w.bo, Activation::Linear, data, accum, scratch);
+    let out = dense_fixed_batch(&concat, &w.wo, &w.bo, Activation::Linear,
+                                p.out.data, p.out.accum, scratch);
     let stats = MhaFifoStats {
         q_high_water: s,
         score_high_water: s,
@@ -244,7 +307,7 @@ pub fn mha_stage(s: usize, d: usize, k: usize, r: ReuseFactor) -> Stage {
     Stage { name: "mha".into(), depth: fill, ii: df.ii, rows: 2 * s as u64 }
 }
 
-/// Resource estimate for the whole MHA layer.
+/// Resource estimate for the whole MHA layer at one uniform width.
 pub fn mha_resources(
     s: usize,
     d: usize,
@@ -254,27 +317,54 @@ pub fn mha_resources(
     r: ReuseFactor,
     fifo_stats: Option<MhaFifoStats>,
 ) -> Resources {
-    let w = data.width() as u64;
+    mha_resources_sited(s, d, heads, k, data, data, data, r, fifo_stats)
+}
+
+/// Resource estimate with per-site widths: projections / score MACs /
+/// K-V registers / Q FIFO at the `qkv` spec, the softmax engines and
+/// score FIFO at the `softmax` spec, apply-V / Wo / output FIFO at the
+/// `out` spec.  With all three equal this reproduces [`mha_resources`]
+/// exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn mha_resources_sited(
+    s: usize,
+    d: usize,
+    heads: usize,
+    k: usize,
+    qkv: FixedSpec,
+    out: FixedSpec,
+    softmax: FixedSpec,
+    r: ReuseFactor,
+    fifo_stats: Option<MhaFifoStats>,
+) -> Resources {
+    let wq = qkv.width() as u64;
+    let wo_bits = out.width() as u64;
     // stage 1: three projections per head
     let proj: Resources = (0..3)
-        .map(|_| dense_resources(d, heads * k, data, r))
+        .map(|_| dense_resources(d, heads * k, qkv, r))
         .sum();
     // stage 2: per head, S×k MACs per row + softmax
     let score_mults = (heads * s * k) as u64;
     let score_concurrent = score_mults.div_ceil(r.get() as u64);
     let score = Resources::new(
-        score_concurrent * dsp_per_mult(data.width()),
-        (score_concurrent as f64 * w as f64 * cal::FF_PER_MULT_BIT) as u64,
-        (score_concurrent as f64 * w as f64 * cal::LUT_PER_MULT_BIT) as u64,
+        score_concurrent * dsp_per_mult(qkv.width()),
+        (score_concurrent as f64 * wq as f64 * cal::FF_PER_MULT_BIT) as u64,
+        (score_concurrent as f64 * wq as f64 * cal::LUT_PER_MULT_BIT) as u64,
         0,
     );
-    let softmax: Resources = (0..heads).map(|_| softmax_resources(s, data, r)).sum();
-    // stage 3: mirror of stage 2 (probs @ V)
-    let apply_v = score;
+    let softmax_res: Resources =
+        (0..heads).map(|_| softmax_resources(s, softmax, r)).sum();
+    // stage 3: mirror of stage 2 (probs @ V), on the output-path grid
+    let apply_v = Resources::new(
+        score_concurrent * dsp_per_mult(out.width()),
+        (score_concurrent as f64 * wo_bits as f64 * cal::FF_PER_MULT_BIT) as u64,
+        (score_concurrent as f64 * wo_bits as f64 * cal::LUT_PER_MULT_BIT) as u64,
+        0,
+    );
     // stage 4: concat + Wo
-    let wo = dense_resources(heads * k, d, data, r);
+    let wo = dense_resources(heads * k, d, out, r);
     // K/V register partitions: 2 matrices of S×k per head
-    let kv_bits = (2 * heads * s * k) as u64 * w;
+    let kv_bits = (2 * heads * s * k) as u64 * wq;
     let kv = if r.get() > 1 {
         // reuse re-partitions a (1 - 1/R) share into BRAM (§VI-B)
         let bram_share = kv_bits - kv_bits / r.get() as u64;
@@ -282,18 +372,19 @@ pub fn mha_resources(
     } else {
         Resources::new(0, kv_bits, 0, 0)
     };
-    // FIFOs sized by observed high-water (fallback: full depth S)
+    // FIFOs sized by observed high-water (fallback: full depth S), each
+    // at the width of the stream it carries
     let hw = fifo_stats.unwrap_or(MhaFifoStats {
         q_high_water: s,
         score_high_water: s,
         out_high_water: s,
     });
-    let fifo_bits = (heads
-        * (hw.q_high_water * k + hw.score_high_water * s + hw.out_high_water * k))
-        as u64
-        * w;
+    let fifo_bits = heads as u64
+        * ((hw.q_high_water * k) as u64 * wq
+            + (hw.score_high_water * s) as u64 * softmax.width() as u64
+            + (hw.out_high_water * k) as u64 * wo_bits);
     let fifos = Resources::new(0, 0, 0, bram18_for_bits(fifo_bits));
-    proj + score + softmax + apply_v + wo + kv + fifos
+    proj + score + softmax_res + apply_v + wo + kv + fifos
 }
 
 #[cfg(test)]
@@ -375,6 +466,79 @@ mod tests {
                 assert_eq!(stats.out_high_water, ev_stats.out_high_water);
             }
         }
+    }
+
+    #[test]
+    fn sited_mha_with_uniform_sites_matches_legacy() {
+        let (x, w, roms, data, accum) = gw_setup();
+        let p = MhaPrecision::uniform(QuantConfig { data, accum });
+        let (legacy, st_a) = mha_fixed(&x, &w, &roms, data, accum);
+        let (sited, st_b) = mha_fixed_sited(&x, &w, &roms, &p, None);
+        assert_eq!(legacy, sited);
+        assert_eq!(st_a.q_high_water, st_b.q_high_water);
+    }
+
+    #[test]
+    fn mixed_site_mha_batch_bitwise_matches_per_event() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 11).blocks[0].mha.clone();
+        let roms = Roms::new();
+        let mut g = Gen::new(33);
+        let p = MhaPrecision {
+            qkv: QuantConfig::from_spec(FixedSpec::new(14, 5)),
+            out: QuantConfig::from_spec(FixedSpec::new(11, 4)),
+            softmax: QuantConfig::from_spec(FixedSpec::new(10, 3)),
+        };
+        let events: Vec<Mat> = (0..3)
+            .map(|_| {
+                Mat::from_vec(
+                    m.config.seq_len,
+                    m.config.d_model,
+                    g.normal_vec(m.config.seq_len * m.config.d_model, 0.7),
+                )
+            })
+            .collect();
+        let refs: Vec<&Mat> = events.iter().collect();
+        let mut scratch = Scratch::new();
+        let (batched, _) =
+            mha_fixed_batch_sited(&Mat3::from_events(&refs), &w, &roms, &p, &mut scratch);
+        for (i, e) in events.iter().enumerate() {
+            let (per_event, _) = mha_fixed_sited(e, &w, &roms, &p, None);
+            assert_eq!(batched.event(i), per_event, "event {i}");
+            // every output lands on the out-site grid
+            for &v in per_event.data() {
+                assert_eq!(v, p.out.data.quantize(v));
+            }
+        }
+    }
+
+    #[test]
+    fn sited_recording_profiles_qkv_softmax_and_out() {
+        let (x, w, roms, data, accum) = gw_setup();
+        let p = MhaPrecision::uniform(QuantConfig { data, accum });
+        let mut prof = RangeProfile::new();
+        let _ = mha_fixed_sited(&x, &w, &roms, &p, Some(("block0", &mut prof)));
+        for site in ["block0.mha.qkv", "block0.mha.out", "softmax"] {
+            assert!(prof.max_abs(site).is_some(), "missing {site}");
+        }
+        // probabilities are bounded by 1 (softmax output dominates input
+        // only on degenerate rows, and scores here are small)
+        assert!(prof.max_abs("block0.mha.qkv").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sited_resources_match_legacy_when_uniform_and_scale_per_site() {
+        let data = FixedSpec::new(16, 6);
+        let legacy = mha_resources(50, 16, 2, 4, data, ReuseFactor(2), None);
+        let sited =
+            mha_resources_sited(50, 16, 2, 4, data, data, data, ReuseFactor(2), None);
+        assert_eq!(legacy, sited);
+        // shaving only the output path trims FF without touching the
+        // projections' DSP story
+        let slim = mha_resources_sited(
+            50, 16, 2, 4, data, FixedSpec::new(10, 4), data, ReuseFactor(2), None,
+        );
+        assert!(slim.ff < legacy.ff);
     }
 
     #[test]

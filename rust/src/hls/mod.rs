@@ -15,6 +15,12 @@
 //!   hardware, block latencies add);
 //! * **resources** — DSP/FF/LUT/BRAM estimates calibrated to the
 //!   trends of Figures 12-14 (see [`calibration`]).
+//!
+//! Quantization is governed per layer *site* by a [`PrecisionPlan`]
+//! ([`precision`]): every kernel receives its own data/accum
+//! `FixedSpec` pair, a uniform plan reproduces the legacy global
+//! [`QuantConfig`] bitwise, and [`calibrate_plan`] auto-assigns integer
+//! bits from profiled activation ranges.
 
 pub mod calibration;
 pub mod dense;
@@ -23,6 +29,7 @@ pub mod layernorm;
 pub mod pooling;
 pub mod mha;
 pub mod pipeline;
+pub mod precision;
 pub mod report;
 pub mod resources;
 pub mod scratch;
@@ -30,9 +37,12 @@ pub mod softmax;
 pub mod transformer;
 
 pub use pipeline::{PipelineModel, Stage};
+pub use precision::{
+    calibrate_plan, load_plan_file, MhaPrecision, PrecisionPlan, QuantConfig, RangeProfile,
+};
 pub use report::SynthesisReport;
 pub use resources::Resources;
-pub use transformer::{FixedTransformer, QuantConfig};
+pub use transformer::FixedTransformer;
 
 /// Reuse factor — the paper's central parallelization knob (§VI-B): the
 /// number of multiplications time-multiplexed onto each DSP.

@@ -1,0 +1,756 @@
+//! Per-layer heterogeneous precision: the [`PrecisionPlan`] that replaces
+//! the single global `QuantConfig` as the quantization authority of
+//! [`super::FixedTransformer`].
+//!
+//! The paper sweeps one uniform `ap_fixed<W,I>` across the whole model
+//! (§VI-A), but hls4ml itself configures precision **per layer**
+//! (`granularity="name"`), and the follow-up work (Laatu et al.,
+//! sub-µs jet tagging; Duarte et al. 1804.06913) gets its resource wins
+//! from per-layer bitwidths.  A plan maps every layer *site* of the
+//! model — `embed`, per-block `mha.qkv` / `mha.out` / `ln1` / `ln2` /
+//! `ffn1` / `ffn2`, `pool`, `head`, `out`, and the shared `softmax` LUT
+//! I/O — to its own data/accumulator [`FixedSpec`] pair.
+//!
+//! Contract: a *uniform* plan (every site at the same pair) is bitwise
+//! identical to the legacy global-`QuantConfig` path, per event and
+//! batched — pinned by the golden tests in `transformer.rs`.
+//!
+//! Plans serialize to a line-oriented text format (one `site
+//! ap_fixed<W,I>` per line, `#` comments) loadable via
+//! `--precision-plan` on `repro serve` / `repro synth` /
+//! `repro mixed-precision`; see README "Precision plans".
+
+use std::collections::BTreeMap;
+
+use super::calibration::int_bits_for_range;
+use crate::fixed::spec::ACCUM_INT_BITS;
+use crate::fixed::FixedSpec;
+use crate::models::config::ModelConfig;
+use crate::models::weights::{BlockWeights, LnWeights, MhaWeights, Weights};
+use crate::nn::tensor::Mat;
+
+/// Data/accumulator pair of one design point or one plan site
+/// (paper §VI-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantConfig {
+    /// Data type of weights and activations.
+    pub data: FixedSpec,
+    /// Accumulator type (10 integer bits, fractional width follows data).
+    pub accum: FixedSpec,
+}
+
+impl QuantConfig {
+    /// Paper convention: `ap_fixed<I + frac, I>` data with the 10-int-bit
+    /// accumulator at the same fractional width.
+    pub fn new(integer_bits: u32, frac_bits: u32) -> Self {
+        let data = FixedSpec::new(integer_bits + frac_bits, integer_bits);
+        Self { data, accum: data.accum() }
+    }
+
+    pub fn from_spec(data: FixedSpec) -> Self {
+        Self { data, accum: data.accum() }
+    }
+}
+
+/// Per-site pairs of one transformer block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockPrecision {
+    /// Stage-1 Q/K/V projections (weights, activations, score MACs).
+    pub qkv: QuantConfig,
+    /// Stage-3/4 output path: apply-V, concat, Wo, the residual adder.
+    pub mha_out: QuantConfig,
+    pub ln1: QuantConfig,
+    pub ln2: QuantConfig,
+    pub ffn1: QuantConfig,
+    pub ffn2: QuantConfig,
+}
+
+impl BlockPrecision {
+    pub fn uniform(q: QuantConfig) -> Self {
+        Self { qkv: q, mha_out: q, ln1: q, ln2: q, ffn1: q, ffn2: q }
+    }
+
+    /// The site triple one MHA engine consumes.
+    pub fn mha(&self, softmax: QuantConfig) -> MhaPrecision {
+        MhaPrecision { qkv: self.qkv, out: self.mha_out, softmax }
+    }
+}
+
+/// Site specs threaded through one MHA engine: stage-1 projections,
+/// the score-softmax LUT I/O, and the stage-3/4 output path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MhaPrecision {
+    pub qkv: QuantConfig,
+    pub out: QuantConfig,
+    pub softmax: QuantConfig,
+}
+
+impl MhaPrecision {
+    pub fn uniform(q: QuantConfig) -> Self {
+        Self { qkv: q, out: q, softmax: q }
+    }
+}
+
+/// Resolved site address: which field of the plan a site name denotes.
+#[derive(Clone, Copy)]
+enum SiteRef {
+    Embed,
+    Pool,
+    Head,
+    Out,
+    Softmax,
+    Block(usize, BlockField),
+}
+
+#[derive(Clone, Copy)]
+enum BlockField {
+    Qkv,
+    MhaOut,
+    Ln1,
+    Ln2,
+    Ffn1,
+    Ffn2,
+}
+
+/// Typed map from layer site to its `FixedSpec` data/accum pair — the
+/// quantization authority of a [`super::FixedTransformer`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrecisionPlan {
+    embed: QuantConfig,
+    blocks: Vec<BlockPrecision>,
+    pool: QuantConfig,
+    head: QuantConfig,
+    out: QuantConfig,
+    /// Softmax/sigmoid LUT I/O: MHA score rows in, probabilities out,
+    /// plus the final classifier nonlinearity.  One shared site (the
+    /// ROMs are shared hardware).
+    softmax: QuantConfig,
+}
+
+impl PrecisionPlan {
+    /// Every site at the same pair — the legacy `QuantConfig` behavior.
+    pub fn uniform(num_blocks: usize, q: QuantConfig) -> Self {
+        Self {
+            embed: q,
+            blocks: vec![BlockPrecision::uniform(q); num_blocks],
+            pool: q,
+            head: q,
+            out: q,
+            softmax: q,
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn embed(&self) -> QuantConfig {
+        self.embed
+    }
+
+    pub fn pool(&self) -> QuantConfig {
+        self.pool
+    }
+
+    pub fn head(&self) -> QuantConfig {
+        self.head
+    }
+
+    pub fn out(&self) -> QuantConfig {
+        self.out
+    }
+
+    pub fn softmax(&self) -> QuantConfig {
+        self.softmax
+    }
+
+    pub fn block(&self, b: usize) -> &BlockPrecision {
+        &self.blocks[b]
+    }
+
+    /// Canonical site order (execution order; also the serialization and
+    /// search order).
+    pub fn site_names(&self) -> Vec<String> {
+        let mut v = vec!["embed".to_string()];
+        for b in 0..self.blocks.len() {
+            for site in ["mha.qkv", "mha.out", "ln1", "ffn1", "ffn2", "ln2"] {
+                v.push(format!("block{b}.{site}"));
+            }
+        }
+        for site in ["pool", "head", "out", "softmax"] {
+            v.push(site.to_string());
+        }
+        v
+    }
+
+    /// The one place site names are parsed: both [`Self::get`] and the
+    /// mutable slot lookup resolve through here, so the name grammar
+    /// cannot diverge between the two.
+    fn resolve(&self, site: &str) -> Option<SiteRef> {
+        match site {
+            "embed" => Some(SiteRef::Embed),
+            "pool" => Some(SiteRef::Pool),
+            "head" => Some(SiteRef::Head),
+            "out" => Some(SiteRef::Out),
+            "softmax" => Some(SiteRef::Softmax),
+            _ => {
+                let rest = site.strip_prefix("block")?;
+                let (idx, field) = rest.split_once('.')?;
+                let b: usize = idx.parse().ok()?;
+                if b >= self.blocks.len() {
+                    return None;
+                }
+                let field = match field {
+                    "mha.qkv" => BlockField::Qkv,
+                    "mha.out" => BlockField::MhaOut,
+                    "ln1" => BlockField::Ln1,
+                    "ln2" => BlockField::Ln2,
+                    "ffn1" => BlockField::Ffn1,
+                    "ffn2" => BlockField::Ffn2,
+                    _ => return None,
+                };
+                Some(SiteRef::Block(b, field))
+            }
+        }
+    }
+
+    fn slot_mut(&mut self, site: &str) -> Option<&mut QuantConfig> {
+        Some(match self.resolve(site)? {
+            SiteRef::Embed => &mut self.embed,
+            SiteRef::Pool => &mut self.pool,
+            SiteRef::Head => &mut self.head,
+            SiteRef::Out => &mut self.out,
+            SiteRef::Softmax => &mut self.softmax,
+            SiteRef::Block(b, f) => {
+                let bp = &mut self.blocks[b];
+                match f {
+                    BlockField::Qkv => &mut bp.qkv,
+                    BlockField::MhaOut => &mut bp.mha_out,
+                    BlockField::Ln1 => &mut bp.ln1,
+                    BlockField::Ln2 => &mut bp.ln2,
+                    BlockField::Ffn1 => &mut bp.ffn1,
+                    BlockField::Ffn2 => &mut bp.ffn2,
+                }
+            }
+        })
+    }
+
+    pub fn get(&self, site: &str) -> Option<QuantConfig> {
+        Some(match self.resolve(site)? {
+            SiteRef::Embed => self.embed,
+            SiteRef::Pool => self.pool,
+            SiteRef::Head => self.head,
+            SiteRef::Out => self.out,
+            SiteRef::Softmax => self.softmax,
+            SiteRef::Block(b, f) => {
+                let bp = &self.blocks[b];
+                match f {
+                    BlockField::Qkv => bp.qkv,
+                    BlockField::MhaOut => bp.mha_out,
+                    BlockField::Ln1 => bp.ln1,
+                    BlockField::Ln2 => bp.ln2,
+                    BlockField::Ffn1 => bp.ffn1,
+                    BlockField::Ffn2 => bp.ffn2,
+                }
+            }
+        })
+    }
+
+    /// Assign one site; `Err` names the unknown site (the CLI contract:
+    /// one line, naming the offending entry).
+    pub fn set(&mut self, site: &str, q: QuantConfig) -> Result<(), String> {
+        let n = self.blocks.len();
+        match self.slot_mut(site) {
+            Some(slot) => {
+                *slot = q;
+                Ok(())
+            }
+            None => Err(format!(
+                "unknown site '{site}' (model has {n} blocks; sites: embed, \
+                 blockN.mha.qkv, blockN.mha.out, blockN.ln1, blockN.ffn1, \
+                 blockN.ffn2, blockN.ln2, pool, head, out, softmax)"
+            )),
+        }
+    }
+
+    /// Assign a data spec, deriving the accumulator by the paper's
+    /// convention (`FixedSpec::accum`).  Fallible end to end: a data
+    /// spec whose fractional width pushes the derived accumulator past
+    /// 48 bits is a one-line `Err`, never a panic (plan-file input
+    /// reaches here).
+    pub fn set_data(&mut self, site: &str, data: FixedSpec) -> Result<(), String> {
+        let accum = derive_accum(data)?;
+        self.set(site, QuantConfig { data, accum })
+    }
+
+    /// `Some(pair)` iff every site carries the same pair.
+    pub fn is_uniform(&self) -> Option<QuantConfig> {
+        let q = self.embed;
+        let all = self
+            .site_names()
+            .iter()
+            .all(|s| self.get(s) == Some(q));
+        all.then_some(q)
+    }
+
+    /// One-line description for reports: the single spec when uniform,
+    /// a site count otherwise.
+    pub fn summary(&self) -> String {
+        match self.is_uniform() {
+            Some(q) => format!("{}", q.data),
+            None => {
+                let (lo, hi) = self
+                    .site_names()
+                    .iter()
+                    .filter_map(|s| self.get(s))
+                    .fold((u32::MAX, 0u32), |(lo, hi), q| {
+                        (lo.min(q.data.width()), hi.max(q.data.width()))
+                    });
+                format!("mixed<{lo}..{hi}b,{} sites>", self.site_names().len())
+            }
+        }
+    }
+
+    /// Serialize to the plan text format: one `site ap_fixed<W,I>` line
+    /// per site (plus ` accum=ap_fixed<W,I>` when the accumulator is not
+    /// the derived `FixedSpec::accum` pair), `#` starting a comment.
+    pub fn serialize(&self) -> String {
+        let mut s = String::from("# precision plan: site -> ap_fixed<W,I> data spec\n");
+        for site in self.site_names() {
+            let q = self.get(&site).expect("site_names yields known sites");
+            s.push_str(&format!("{site} {}", q.data));
+            // write the accumulator only when it is not the derived
+            // default (derive_accum, not FixedSpec::accum: the latter
+            // panics on wide data specs carrying an explicit accum)
+            if derive_accum(q.data) != Ok(q.accum) {
+                s.push_str(&format!(" accum={}", q.accum));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Apply plan-text overrides onto this plan.  Unknown sites and
+    /// malformed specs produce a one-line error naming the offending
+    /// entry and its line number.
+    pub fn apply_overrides(&mut self, text: &str) -> Result<(), String> {
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let site = toks.next().expect("non-empty line has a token");
+            let spec_tok = toks.next().ok_or_else(|| {
+                format!(
+                    "plan line {}: site '{site}' is missing its ap_fixed<W,I> spec",
+                    lineno + 1
+                )
+            })?;
+            let data: FixedSpec = spec_tok
+                .parse()
+                .map_err(|e| format!("plan line {}: site '{site}': {e}", lineno + 1))?;
+            let accum = if let Some(extra) = toks.next() {
+                let a = extra.strip_prefix("accum=").ok_or_else(|| {
+                    format!(
+                        "plan line {}: site '{site}': unexpected token '{extra}' \
+                         (expected accum=ap_fixed<W,I>)",
+                        lineno + 1
+                    )
+                })?;
+                a.parse()
+                    .map_err(|e| format!("plan line {}: site '{site}': {e}", lineno + 1))?
+            } else {
+                derive_accum(data)
+                    .map_err(|e| format!("plan line {}: site '{site}': {e}", lineno + 1))?
+            };
+            let q = QuantConfig { data, accum };
+            if let Some(tr) = toks.next() {
+                return Err(format!(
+                    "plan line {}: site '{site}': trailing token '{tr}'",
+                    lineno + 1
+                ));
+            }
+            self.set(site, q)
+                .map_err(|e| format!("plan line {}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+}
+
+/// The paper-convention accumulator for a data spec, as a `Result`
+/// instead of `FixedSpec::accum`'s panic: `ACCUM_INT_BITS + frac` must
+/// stay within the 48-bit `ap_fixed` ceiling, and untrusted plan-file
+/// specs can violate that (e.g. `ap_fixed<48,2>`).
+fn derive_accum(data: FixedSpec) -> Result<FixedSpec, String> {
+    FixedSpec::try_new(ACCUM_INT_BITS + data.frac(), ACCUM_INT_BITS).ok_or_else(|| {
+        format!(
+            "{data} has too many fractional bits for the {ACCUM_INT_BITS}-int-bit \
+             accumulator (max {} fractional bits; or give accum=ap_fixed<W,I> explicitly)",
+            48 - ACCUM_INT_BITS
+        )
+    })
+}
+
+/// Read + apply a `--precision-plan` file over a uniform base plan.
+/// Errors are one line naming the file and the offending entry.
+pub fn load_plan_file(
+    path: &str,
+    num_blocks: usize,
+    base: QuantConfig,
+) -> Result<PrecisionPlan, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("--precision-plan {path}: {e}"))?;
+    let mut plan = PrecisionPlan::uniform(num_blocks, base);
+    plan.apply_overrides(&text)
+        .map_err(|e| format!("--precision-plan {path}: {e}"))?;
+    Ok(plan)
+}
+
+/// PTQ onto heterogeneous grids: every tensor quantized at its own
+/// site's data spec (the per-site twin of [`Weights::quantized`] — with
+/// a uniform plan the two agree exactly).
+pub fn quantize_weights_sited(w: &Weights, plan: &PrecisionPlan) -> Weights {
+    assert_eq!(w.blocks.len(), plan.num_blocks(), "plan/block count mismatch");
+    let qm = |m: &Mat, s: FixedSpec| m.map(|x| s.quantize(x));
+    let qv = |v: &[f32], s: FixedSpec| v.iter().map(|&x| s.quantize(x)).collect::<Vec<f32>>();
+    Weights {
+        embed: (qm(&w.embed.0, plan.embed().data), qv(&w.embed.1, plan.embed().data)),
+        blocks: w
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, blk)| {
+                let bp = *plan.block(b);
+                BlockWeights {
+                    mha: MhaWeights {
+                        wq: blk.mha.wq.iter().map(|m| qm(m, bp.qkv.data)).collect(),
+                        bq: blk.mha.bq.iter().map(|v| qv(v, bp.qkv.data)).collect(),
+                        wk: blk.mha.wk.iter().map(|m| qm(m, bp.qkv.data)).collect(),
+                        bk: blk.mha.bk.iter().map(|v| qv(v, bp.qkv.data)).collect(),
+                        wv: blk.mha.wv.iter().map(|m| qm(m, bp.qkv.data)).collect(),
+                        bv: blk.mha.bv.iter().map(|v| qv(v, bp.qkv.data)).collect(),
+                        wo: qm(&blk.mha.wo, bp.mha_out.data),
+                        bo: qv(&blk.mha.bo, bp.mha_out.data),
+                    },
+                    ln1: blk.ln1.as_ref().map(|l| LnWeights {
+                        gamma: qv(&l.gamma, bp.ln1.data),
+                        beta: qv(&l.beta, bp.ln1.data),
+                    }),
+                    ffn1: (qm(&blk.ffn1.0, bp.ffn1.data), qv(&blk.ffn1.1, bp.ffn1.data)),
+                    ffn2: (qm(&blk.ffn2.0, bp.ffn2.data), qv(&blk.ffn2.1, bp.ffn2.data)),
+                    ln2: blk.ln2.as_ref().map(|l| LnWeights {
+                        gamma: qv(&l.gamma, bp.ln2.data),
+                        beta: qv(&l.beta, bp.ln2.data),
+                    }),
+                }
+            })
+            .collect(),
+        head: (qm(&w.head.0, plan.head().data), qv(&w.head.1, plan.head().data)),
+        out: (qm(&w.out.0, plan.out().data), qv(&w.out.1, plan.out().data)),
+    }
+}
+
+/// Max-|value| profile per site, filled by
+/// [`super::FixedTransformer::forward_recorded`] during calibration.
+#[derive(Clone, Debug, Default)]
+pub struct RangeProfile {
+    max_abs: BTreeMap<String, f64>,
+}
+
+impl RangeProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, site: &str, values: &[f32]) {
+        let mut m = self.max_abs.get(site).copied().unwrap_or(0.0);
+        for &v in values {
+            let a = (v as f64).abs();
+            if a.is_finite() && a > m {
+                m = a;
+            }
+        }
+        self.max_abs.insert(site.to_string(), m);
+    }
+
+    pub fn max_abs(&self, site: &str) -> Option<f64> {
+        self.max_abs.get(site).copied()
+    }
+
+    pub fn sites(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.max_abs.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+/// Fold per-site *weight* magnitudes into a profile: weights live on the
+/// same data grid as the activations they feed, so the grid's integer
+/// width must cover both.
+pub fn record_weight_ranges(prof: &mut RangeProfile, w: &Weights) {
+    let mats = |p: &mut RangeProfile, site: &str, m: &Mat, b: &[f32]| {
+        p.record(site, m.data());
+        p.record(site, b);
+    };
+    mats(prof, "embed", &w.embed.0, &w.embed.1);
+    for (b, blk) in w.blocks.iter().enumerate() {
+        let qkv = format!("block{b}.mha.qkv");
+        for h in 0..blk.mha.wq.len() {
+            mats(prof, &qkv, &blk.mha.wq[h], &blk.mha.bq[h]);
+            mats(prof, &qkv, &blk.mha.wk[h], &blk.mha.bk[h]);
+            mats(prof, &qkv, &blk.mha.wv[h], &blk.mha.bv[h]);
+        }
+        mats(prof, &format!("block{b}.mha.out"), &blk.mha.wo, &blk.mha.bo);
+        if let Some(l) = &blk.ln1 {
+            prof.record(&format!("block{b}.ln1"), &l.gamma);
+            prof.record(&format!("block{b}.ln1"), &l.beta);
+        }
+        mats(prof, &format!("block{b}.ffn1"), &blk.ffn1.0, &blk.ffn1.1);
+        mats(prof, &format!("block{b}.ffn2"), &blk.ffn2.0, &blk.ffn2.1);
+        if let Some(l) = &blk.ln2 {
+            prof.record(&format!("block{b}.ln2"), &l.gamma);
+            prof.record(&format!("block{b}.ln2"), &l.beta);
+        }
+    }
+    mats(prof, "head", &w.head.0, &w.head.1);
+    mats(prof, "out", &w.out.0, &w.out.1);
+}
+
+/// Calibrate a per-site plan from observed ranges: run the profiling
+/// forward at a wide reference precision over `events`, fold in the
+/// weight magnitudes, then give every site the smallest integer width
+/// covering its range (`calibration::int_bits_for_range`) at
+/// `frac_bits` fractional bits.
+pub fn calibrate_plan(
+    cfg: &ModelConfig,
+    float_weights: &Weights,
+    events: &[Mat],
+    frac_bits: u32,
+) -> PrecisionPlan {
+    assert!(frac_bits <= 24, "frac_bits {frac_bits} out of range");
+    let wide = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(12, 18));
+    let t = super::FixedTransformer::with_plan(cfg.clone(), float_weights, wide);
+    let mut prof = RangeProfile::new();
+    for x in events {
+        t.forward_recorded(x, Some(&mut prof));
+    }
+    record_weight_ranges(&mut prof, float_weights);
+    let mut plan = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, frac_bits));
+    for site in plan.site_names() {
+        let max_abs = prof.max_abs(&site).unwrap_or(1.0);
+        let int_bits = int_bits_for_range(max_abs);
+        plan.set_data(&site, FixedSpec::new(int_bits + frac_bits, int_bits))
+            .expect("site_names yields known sites");
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Args;
+    use crate::models::weights::synthetic_weights;
+    use crate::models::zoo::zoo_model;
+    use crate::testutil::Gen;
+
+    #[test]
+    fn uniform_plan_reports_uniform() {
+        let q = QuantConfig::new(6, 10);
+        let p = PrecisionPlan::uniform(3, q);
+        assert_eq!(p.is_uniform(), Some(q));
+        assert_eq!(p.summary(), "ap_fixed<16,6>");
+        assert_eq!(p.site_names().len(), 1 + 3 * 6 + 4);
+    }
+
+    #[test]
+    fn set_and_get_every_site() {
+        let mut p = PrecisionPlan::uniform(2, QuantConfig::new(6, 10));
+        for (i, site) in p.site_names().into_iter().enumerate() {
+            let spec = FixedSpec::new(8 + (i as u32 % 4), 4);
+            p.set_data(&site, spec).unwrap();
+            assert_eq!(p.get(&site).unwrap().data, spec, "{site}");
+            assert_eq!(p.get(&site).unwrap().accum, spec.accum(), "{site}");
+        }
+        assert!(p.is_uniform().is_none());
+        assert!(p.summary().starts_with("mixed<"));
+    }
+
+    #[test]
+    fn unknown_sites_rejected_with_named_entry() {
+        let mut p = PrecisionPlan::uniform(2, QuantConfig::new(6, 10));
+        for bad in ["block2.mha.qkv", "block0.mha.wat", "blurb", "blocknope.ln1"] {
+            let err = p.set_data(bad, FixedSpec::new(8, 4)).unwrap_err();
+            assert!(err.contains(bad), "{err}");
+            assert!(!err.contains('\n'), "one line: {err}");
+        }
+    }
+
+    #[test]
+    fn serialize_round_trips_through_overrides() {
+        let mut g = Gen::new(42);
+        for _ in 0..20 {
+            let mut plan = PrecisionPlan::uniform(3, QuantConfig::new(6, 10));
+            for site in plan.site_names() {
+                plan.set_data(&site, g.fixed_spec_max_width(20)).unwrap();
+            }
+            let text = plan.serialize();
+            let mut rt = PrecisionPlan::uniform(3, QuantConfig::new(4, 4));
+            rt.apply_overrides(&text).unwrap();
+            assert_eq!(rt, plan, "round trip failed for:\n{text}");
+        }
+    }
+
+    #[test]
+    fn overrides_accept_comments_and_explicit_accum() {
+        let mut p = PrecisionPlan::uniform(1, QuantConfig::new(6, 10));
+        let text = "# heterogeneous working point\n\
+                    embed ap_fixed<12,4>   # tight input\n\
+                    \n\
+                    block0.ffn1 ap_fixed<10,3> accum=ap_fixed<20,12>\n";
+        p.apply_overrides(text).unwrap();
+        assert_eq!(p.embed().data, FixedSpec::new(12, 4));
+        assert_eq!(p.get("block0.ffn1").unwrap().accum, FixedSpec::new(20, 12));
+        assert!(p.serialize().contains("accum=ap_fixed<20,12>"));
+    }
+
+    #[test]
+    fn wide_frac_spec_is_error_not_panic() {
+        // ap_fixed<48,2> parses as a valid data spec but its derived
+        // accumulator would be ap_fixed<56,10> — beyond the 48-bit
+        // ceiling.  Must be a one-line Err, never a FixedSpec panic.
+        let mut p = PrecisionPlan::uniform(1, QuantConfig::new(6, 10));
+        let err = p.apply_overrides("embed ap_fixed<48,2>").unwrap_err();
+        assert!(err.contains("embed"), "{err}");
+        assert!(err.contains("fractional"), "{err}");
+        assert!(!err.contains('\n'), "one line: {err}");
+        // an explicit in-range accumulator makes the same data spec legal
+        p.apply_overrides("embed ap_fixed<48,2> accum=ap_fixed<48,10>").unwrap();
+        assert_eq!(p.embed().accum, FixedSpec::new(48, 10));
+        // and such a plan serializes (writing the accum) and round-trips
+        let text = p.serialize();
+        assert!(text.contains("accum=ap_fixed<48,10>"), "{text}");
+        let mut rt = PrecisionPlan::uniform(1, QuantConfig::new(6, 10));
+        rt.apply_overrides(&text).unwrap();
+        assert_eq!(rt, p);
+        // set_data is guarded the same way
+        let err = p.set_data("embed", FixedSpec::new(46, 2)).unwrap_err();
+        assert!(err.contains("fractional"), "{err}");
+    }
+
+    #[test]
+    fn malformed_spec_is_one_line_error_naming_the_entry() {
+        let mut p = PrecisionPlan::uniform(1, QuantConfig::new(6, 10));
+        for (text, needle) in [
+            ("embed ap_fixed<4>", "ap_fixed<4>"),
+            ("embed fixed<8,3>", "fixed<8,3>"),
+            ("embed ap_fixed<3,9>", "ap_fixed<3,9>"),
+            ("embed", "missing"),
+            ("embed ap_fixed<8,3> wat", "wat"),
+            ("block9.ffn1 ap_fixed<8,3>", "block9.ffn1"),
+        ] {
+            let err = p.clone().apply_overrides(text).unwrap_err();
+            assert!(err.contains(needle), "'{text}' -> {err}");
+            assert!(!err.contains('\n'), "one line: {err}");
+            assert!(err.contains("line 1"), "{err}");
+        }
+    }
+
+    /// The CLI contract driven the way `repro` drives it: flag parsed by
+    /// `Args`, file loaded over a uniform base, offending entry named.
+    #[test]
+    fn plan_flag_through_args_names_offending_entry() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("plan_test_{}.txt", std::process::id()));
+        std::fs::write(&path, "embed ap_fixed<12,4>\nblock7.ln1 ap_fixed<8,3>\n").unwrap();
+        let args = Args::parse(
+            ["serve", "--precision-plan", path.to_str().unwrap()].map(String::from),
+        )
+        .unwrap();
+        let flag = args.get("precision-plan").unwrap();
+        let err = load_plan_file(flag, 3, QuantConfig::new(6, 10)).unwrap_err();
+        assert!(err.contains("block7.ln1"), "{err}");
+        assert!(!err.contains('\n'), "one line: {err}");
+        // a well-formed file round-trips
+        std::fs::write(&path, PrecisionPlan::uniform(3, QuantConfig::new(8, 6)).serialize())
+            .unwrap();
+        let plan = load_plan_file(flag, 3, QuantConfig::new(6, 10)).unwrap();
+        assert_eq!(plan, PrecisionPlan::uniform(3, QuantConfig::new(8, 6)));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_plan_file_is_clean_error() {
+        let err = load_plan_file("/nonexistent/plan.txt", 2, QuantConfig::new(6, 10));
+        assert!(err.unwrap_err().contains("/nonexistent/plan.txt"));
+    }
+
+    #[test]
+    fn sited_weight_quantization_matches_uniform_legacy() {
+        let cfg = zoo_model("btag").unwrap().config;
+        let w = synthetic_weights(&cfg, 9);
+        let q = QuantConfig::new(6, 7);
+        let plan = PrecisionPlan::uniform(cfg.num_blocks, q);
+        let a = quantize_weights_sited(&w, &plan);
+        let b = w.quantized(q.data);
+        assert_eq!(a.embed.0.data(), b.embed.0.data());
+        assert_eq!(a.blocks[1].mha.wo.data(), b.blocks[1].mha.wo.data());
+        assert_eq!(a.blocks[2].ffn1.0.data(), b.blocks[2].ffn1.0.data());
+        assert_eq!(
+            a.blocks[0].ln1.as_ref().unwrap().gamma,
+            b.blocks[0].ln1.as_ref().unwrap().gamma
+        );
+        assert_eq!(a.out.0.data(), b.out.0.data());
+    }
+
+    #[test]
+    fn sited_weight_quantization_uses_each_sites_grid() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 10);
+        let mut plan = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 12));
+        let coarse = FixedSpec::new(5, 2);
+        plan.set_data("block0.ffn1", coarse).unwrap();
+        let q = quantize_weights_sited(&w, &plan);
+        for &v in q.blocks[0].ffn1.0.data() {
+            assert_eq!(v, coarse.quantize(v), "ffn1 weight off its site grid");
+        }
+        // a different site keeps the fine grid (some value moves if
+        // re-projected onto the coarse one)
+        let fine = q.blocks[0].ffn2.0.clone();
+        assert!(fine.map(|v| coarse.quantize(v)).max_abs_diff(&fine) > 0.0);
+    }
+
+    #[test]
+    fn calibrated_plan_covers_observed_ranges() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 11);
+        let mut g = Gen::new(5);
+        let events: Vec<Mat> = (0..4)
+            .map(|_| {
+                Mat::from_vec(
+                    cfg.seq_len,
+                    cfg.input_size,
+                    g.normal_vec(cfg.seq_len * cfg.input_size, 1.0),
+                )
+            })
+            .collect();
+        let plan = calibrate_plan(&cfg, &w, &events, 8);
+        assert_eq!(plan.num_blocks(), cfg.num_blocks);
+        // re-profile and check every site's range fits its assigned grid
+        let wide = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(12, 18));
+        let t = super::super::FixedTransformer::with_plan(cfg.clone(), &w, wide);
+        let mut prof = RangeProfile::new();
+        for x in &events {
+            t.forward_recorded(x, Some(&mut prof));
+        }
+        record_weight_ranges(&mut prof, &w);
+        for (site, max_abs) in prof.sites() {
+            let q = plan.get(site).expect("profiled site is a plan site");
+            // the rule's guarantee: 2^(I-1) strictly covers the range
+            assert!(
+                (q.data.integer() as f64 - 1.0).exp2() > max_abs,
+                "{site}: range {max_abs} exceeds {:?}",
+                q.data
+            );
+            assert_eq!(q.data.frac(), 8, "{site} keeps the requested frac bits");
+        }
+    }
+}

@@ -1,9 +1,10 @@
 //! Synthesis-style reporting — the stand-in for Vivado's utilization and
 //! timing reports, formatted per design point for the experiment harness.
 
+use super::precision::{PrecisionPlan, QuantConfig};
 use super::resources::{Device, Resources};
-use super::transformer::QuantConfig;
 use super::ReuseFactor;
+use crate::fixed::FixedSpec;
 use std::fmt;
 
 /// Per-layer line of the report.
@@ -14,14 +15,21 @@ pub struct LayerReport {
     pub ii: u64,
     pub rows: u64,
     pub latency: u64,
+    /// The layer site's data spec (heterogeneous plans differ per row;
+    /// the MHA row reports its QKV spec).
+    pub precision: FixedSpec,
     pub resources: Resources,
 }
 
-/// One "synthesized" design point (model x precision x reuse).
+/// One "synthesized" design point (model x precision plan x reuse).
 #[derive(Clone, Debug)]
 pub struct SynthesisReport {
     pub model: String,
+    /// The embed-site pair — the whole design's pair when the plan is
+    /// uniform (kept for the legacy single-`QuantConfig` consumers).
     pub quant: QuantConfig,
+    /// The full per-site precision map of this design point.
+    pub plan: PrecisionPlan,
     pub reuse: ReuseFactor,
     pub clk_ns: f64,
     pub latency_cycles: u64,
@@ -60,7 +68,7 @@ impl fmt::Display for SynthesisReport {
             f,
             "== {} @ {} {} | clk {:.3} ns | II {} cyc | latency {} cyc = {:.3} us",
             self.model,
-            self.quant.data,
+            self.plan.summary(),
             self.reuse,
             self.clk_ns,
             self.interval_cycles,
@@ -74,15 +82,23 @@ impl fmt::Display for SynthesisReport {
         )?;
         writeln!(
             f,
-            "   {:<16} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
-            "layer", "depth", "II", "rows", "latency", "DSP", "FF", "LUT", "BRAM18"
+            "   {:<16} {:>16} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
+            "layer", "precision", "depth", "II", "rows", "latency", "DSP", "FF", "LUT", "BRAM18"
         )?;
         for l in &self.layers {
             writeln!(
                 f,
-                "   {:<16} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
-                l.name, l.depth, l.ii, l.rows, l.latency,
-                l.resources.dsp, l.resources.ff, l.resources.lut, l.resources.bram18
+                "   {:<16} {:>16} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
+                l.name,
+                l.precision.to_string(),
+                l.depth,
+                l.ii,
+                l.rows,
+                l.latency,
+                l.resources.dsp,
+                l.resources.ff,
+                l.resources.lut,
+                l.resources.bram18
             )?;
         }
         Ok(())
@@ -95,9 +111,11 @@ mod tests {
     use crate::hls::resources::VU13P;
 
     fn sample() -> SynthesisReport {
+        let quant = QuantConfig::new(6, 8);
         SynthesisReport {
             model: "engine".into(),
-            quant: QuantConfig::new(6, 8),
+            quant,
+            plan: PrecisionPlan::uniform(3, quant),
             reuse: ReuseFactor(1),
             clk_ns: 6.86,
             latency_cycles: 257,
@@ -109,6 +127,7 @@ mod tests {
                 ii: 1,
                 rows: 50,
                 latency: 53,
+                precision: quant.data,
                 resources: Resources::new(16, 100, 200, 0),
             }],
             total: Resources::new(16, 100, 200, 0),
@@ -124,10 +143,21 @@ mod tests {
     }
 
     #[test]
-    fn display_renders_layers() {
+    fn display_renders_layers_with_precision_column() {
         let s = format!("{}", sample());
         assert!(s.contains("embed"));
         assert!(s.contains("ap_fixed<14,6>"));
+        assert!(s.contains("precision"));
+    }
+
+    #[test]
+    fn mixed_plan_header_says_mixed() {
+        let mut rep = sample();
+        rep.plan
+            .set_data("block0.ffn1", crate::fixed::FixedSpec::new(8, 3))
+            .unwrap();
+        let s = format!("{rep}");
+        assert!(s.contains("mixed<"), "{s}");
     }
 
     #[test]

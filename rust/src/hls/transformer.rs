@@ -2,17 +2,30 @@
 //! this reproduction: bit-accurate `ap_fixed` inference plus the
 //! synthesis-style latency/resource report for a (precision, reuse)
 //! design point.
+//!
+//! Quantization authority: a per-site [`PrecisionPlan`] (embed,
+//! per-block `mha.qkv`/`mha.out`/`ln1`/`ffn1`/`ffn2`/`ln2`, pool, head,
+//! out, shared softmax LUT I/O).  [`FixedTransformer::new`] wraps a
+//! legacy global [`QuantConfig`] into a *uniform* plan — bitwise
+//! identical to the pre-plan implementation (golden-tested below) —
+//! while [`FixedTransformer::with_plan`] takes a heterogeneous plan, the
+//! design points that actually minimize DSP/FF at iso-AUC.  At every
+//! site boundary the stream is re-grid cast onto the consumer's data
+//! grid (a no-op when producer and consumer share a grid).
 
 use super::dense::{dense_fixed, dense_fixed_batch, dense_resources, dense_stage};
 use super::layernorm::{
     layernorm_fixed_batch, layernorm_fixed_row, layernorm_resources, layernorm_stage,
 };
-use super::mha::{mha_fixed, mha_fixed_batch, mha_resources, mha_stage, MhaFifoStats};
+use super::mha::{
+    mha_fixed_batch_sited, mha_fixed_sited, mha_resources_sited, mha_stage, MhaFifoStats,
+};
 use super::pipeline::{PipelineModel, Stage};
 use super::pooling::{
     global_average_pool_fixed, global_average_pool_fixed_batch, pool_resources, pool_stage,
     sigmoid_fixed,
 };
+use super::precision::{quantize_weights_sited, PrecisionPlan, RangeProfile};
 use super::report::{LayerReport, SynthesisReport};
 use super::resources::Resources;
 use super::scratch::Scratch;
@@ -25,35 +38,15 @@ use crate::models::weights::Weights;
 use crate::nn::layers::Activation;
 use crate::nn::tensor::{Mat, Mat3};
 
-/// Quantization configuration of one design point (paper §VI-A).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct QuantConfig {
-    /// Data type of weights and activations.
-    pub data: FixedSpec,
-    /// Accumulator type (10 integer bits, fractional width follows data).
-    pub accum: FixedSpec,
-}
-
-impl QuantConfig {
-    /// Paper convention: `ap_fixed<I + frac, I>` data with the 10-int-bit
-    /// accumulator at the same fractional width.
-    pub fn new(integer_bits: u32, frac_bits: u32) -> Self {
-        let data = FixedSpec::new(integer_bits + frac_bits, integer_bits);
-        Self { data, accum: data.accum() }
-    }
-
-    pub fn from_spec(data: FixedSpec) -> Self {
-        Self { data, accum: data.accum() }
-    }
-}
+pub use super::precision::QuantConfig;
 
 /// Fixed-point inference engine for one zoo model at one design point.
 #[derive(Clone, Debug)]
 pub struct FixedTransformer {
     cfg: ModelConfig,
-    /// Weights pre-quantized onto the data grid (PTQ).
+    /// Weights pre-quantized onto each site's data grid (PTQ).
     weights: Weights,
-    quant: QuantConfig,
+    plan: PrecisionPlan,
     roms: Roms,
     /// FIFO stats observed during forward passes (sizes the BRAM model).
     last_fifo_stats: std::cell::Cell<MhaFifoStats>,
@@ -63,12 +56,29 @@ pub struct FixedTransformer {
 }
 
 impl FixedTransformer {
-    /// Build from float weights: quantizes them onto the data grid (PTQ).
+    /// Build from float weights at one uniform precision (the legacy
+    /// global-`QuantConfig` design point): every site gets the same
+    /// data/accum pair.
     pub fn new(cfg: ModelConfig, float_weights: &Weights, quant: QuantConfig) -> Self {
+        let plan = PrecisionPlan::uniform(cfg.num_blocks, quant);
+        Self::with_plan(cfg, float_weights, plan)
+    }
+
+    /// Build from float weights under a per-site precision plan:
+    /// quantizes each weight tensor onto its own site's grid (PTQ).
+    pub fn with_plan(cfg: ModelConfig, float_weights: &Weights, plan: PrecisionPlan) -> Self {
+        assert_eq!(
+            plan.num_blocks(),
+            cfg.num_blocks,
+            "plan has {} blocks, model '{}' has {}",
+            plan.num_blocks(),
+            cfg.name,
+            cfg.num_blocks
+        );
         Self {
+            weights: quantize_weights_sited(float_weights, &plan),
             cfg,
-            weights: float_weights.quantized(quant.data),
-            quant,
+            plan,
             roms: Roms::new(),
             last_fifo_stats: std::cell::Cell::new(MhaFifoStats::default()),
             scratch: std::cell::RefCell::new(Scratch::new()),
@@ -79,8 +89,14 @@ impl FixedTransformer {
         &self.cfg
     }
 
+    /// The embed-site pair — identical to the legacy global config when
+    /// the plan is uniform (use [`Self::plan`] for the full map).
     pub fn quant(&self) -> QuantConfig {
-        self.quant
+        self.plan.embed()
+    }
+
+    pub fn plan(&self) -> &PrecisionPlan {
+        &self.plan
     }
 
     /// Forward one event `(seq_len, input_size)` -> probabilities.
@@ -89,47 +105,182 @@ impl FixedTransformer {
     /// design bakes the final softmax/sigmoid in (paper §V: "the final
     /// layer is a SoftMax layer").
     pub fn forward(&self, x: &Mat) -> Vec<f32> {
-        let (data, accum) = (self.quant.data, self.quant.accum);
+        self.forward_recorded(x, None)
+    }
+
+    /// [`Self::forward`] with an optional per-site range recorder — the
+    /// calibration hook: when `rec` is present, the max-|value| of every
+    /// site's stream is folded into the profile (used by
+    /// [`super::precision::calibrate_plan`] to auto-assign integer bits).
+    pub fn forward_recorded(
+        &self,
+        x: &Mat,
+        mut rec: Option<&mut RangeProfile>,
+    ) -> Vec<f32> {
         assert_eq!(x.rows(), self.cfg.seq_len, "bad seq len");
         assert_eq!(x.cols(), self.cfg.input_size, "bad input size");
+        let p = &self.plan;
         let w = &self.weights;
-        // input quantization (the AXI boundary cast)
-        let xq = x.map(|v| data.quantize(v));
-        let mut h = dense_fixed(&xq, &w.embed.0, &w.embed.1, Activation::Linear, data, accum);
+        if let Some(r) = rec.as_deref_mut() {
+            r.record("embed", x.data());
+        }
+        // input quantization (the AXI boundary cast, on the embed grid)
+        let xq = x.map(|v| p.embed().data.quantize(v));
+        let mut h = dense_fixed(
+            &xq,
+            &w.embed.0,
+            &w.embed.1,
+            Activation::Linear,
+            p.embed().data,
+            p.embed().accum,
+        );
+        if let Some(r) = rec.as_deref_mut() {
+            r.record("embed", h.data());
+        }
         let mut fifo_stats = MhaFifoStats::default();
-        for b in &w.blocks {
-            let (attn, stats) = mha_fixed(&h, &b.mha, &self.roms, data, accum);
+        for (b, blk) in w.blocks.iter().enumerate() {
+            let bp = *p.block(b);
+            let prefix = format!("block{b}");
+            // re-grid cast: the stream enters the attention engine (and
+            // its residual bypass) on the QKV grid.  The *input* is
+            // recorded into the consumer site before each cast — the
+            // site's grid clamps exactly these values, so calibration
+            // must size the integer bits for them, not just the outputs.
+            if let Some(r) = rec.as_deref_mut() {
+                r.record(&format!("{prefix}.mha.qkv"), h.data());
+            }
+            h = quantize_mat(&h, bp.qkv.data);
+            let (attn, stats) = mha_fixed_sited(
+                &h,
+                &blk.mha,
+                &self.roms,
+                &bp.mha(p.softmax()),
+                rec.as_deref_mut().map(|r| (prefix.as_str(), r)),
+            );
             fifo_stats.q_high_water = fifo_stats.q_high_water.max(stats.q_high_water);
             fifo_stats.score_high_water =
                 fifo_stats.score_high_water.max(stats.score_high_water);
             fifo_stats.out_high_water = fifo_stats.out_high_water.max(stats.out_high_water);
-            h = quantize_mat(&h.add(&attn), data); // residual adder
-            if let Some(ln) = &b.ln1 {
+            let sum = h.add(&attn); // residual adder
+            if let Some(r) = rec.as_deref_mut() {
+                r.record(&format!("{prefix}.mha.out"), sum.data()); // pre-cast sum
+            }
+            h = quantize_mat(&sum, bp.mha_out.data);
+            if let Some(ln) = &blk.ln1 {
+                if let Some(r) = rec.as_deref_mut() {
+                    r.record(&format!("{prefix}.ln1"), h.data()); // cast input
+                }
+                h = quantize_mat(&h, bp.ln1.data); // re-grid cast
                 for r in 0..h.rows() {
-                    layernorm_fixed_row(h.row_mut(r), &ln.gamma, &ln.beta, &self.roms, data, accum);
+                    layernorm_fixed_row(
+                        h.row_mut(r),
+                        &ln.gamma,
+                        &ln.beta,
+                        &self.roms,
+                        bp.ln1.data,
+                        bp.ln1.accum,
+                    );
+                }
+                if let Some(r) = rec.as_deref_mut() {
+                    r.record(&format!("{prefix}.ln1"), h.data());
                 }
             }
-            let y = dense_fixed(&h, &b.ffn1.0, &b.ffn1.1, Activation::Relu, data, accum);
-            let y = dense_fixed(&y, &b.ffn2.0, &b.ffn2.1, Activation::Linear, data, accum);
-            h = quantize_mat(&h.add(&y), data); // residual adder
-            if let Some(ln) = &b.ln2 {
+            if let Some(r) = rec.as_deref_mut() {
+                r.record(&format!("{prefix}.ffn1"), h.data()); // cast input
+            }
+            h = quantize_mat(&h, bp.ffn1.data); // re-grid cast
+            let y = dense_fixed(
+                &h,
+                &blk.ffn1.0,
+                &blk.ffn1.1,
+                Activation::Relu,
+                bp.ffn1.data,
+                bp.ffn1.accum,
+            );
+            if let Some(r) = rec.as_deref_mut() {
+                r.record(&format!("{prefix}.ffn1"), y.data());
+                r.record(&format!("{prefix}.ffn2"), y.data()); // cast input
+            }
+            let y = dense_fixed(
+                &quantize_mat(&y, bp.ffn2.data), // re-grid cast
+                &blk.ffn2.0,
+                &blk.ffn2.1,
+                Activation::Linear,
+                bp.ffn2.data,
+                bp.ffn2.accum,
+            );
+            let sum = h.add(&y); // residual adder
+            if let Some(r) = rec.as_deref_mut() {
+                r.record(&format!("{prefix}.ffn2"), sum.data()); // pre-cast sum
+            }
+            h = quantize_mat(&sum, bp.ffn2.data);
+            if let Some(ln) = &blk.ln2 {
+                if let Some(r) = rec.as_deref_mut() {
+                    r.record(&format!("{prefix}.ln2"), h.data()); // cast input
+                }
+                h = quantize_mat(&h, bp.ln2.data); // re-grid cast
                 for r in 0..h.rows() {
-                    layernorm_fixed_row(h.row_mut(r), &ln.gamma, &ln.beta, &self.roms, data, accum);
+                    layernorm_fixed_row(
+                        h.row_mut(r),
+                        &ln.gamma,
+                        &ln.beta,
+                        &self.roms,
+                        bp.ln2.data,
+                        bp.ln2.accum,
+                    );
+                }
+                if let Some(r) = rec.as_deref_mut() {
+                    r.record(&format!("{prefix}.ln2"), h.data());
                 }
             }
         }
         self.last_fifo_stats.set(fifo_stats);
-        let pooled = global_average_pool_fixed(&h, data, accum);
-        let hid = dense_fixed(&pooled, &w.head.0, &w.head.1, Activation::Relu, data, accum);
-        let logits = dense_fixed(&hid, &w.out.0, &w.out.1, Activation::Linear, data, accum);
+        if let Some(r) = rec.as_deref_mut() {
+            r.record("pool", h.data()); // cast input
+        }
+        let pooled = global_average_pool_fixed(
+            &quantize_mat(&h, p.pool().data),
+            p.pool().data,
+            p.pool().accum,
+        );
+        if let Some(r) = rec.as_deref_mut() {
+            r.record("pool", pooled.data());
+            r.record("head", pooled.data()); // cast input
+        }
+        let hid = dense_fixed(
+            &quantize_mat(&pooled, p.head().data),
+            &w.head.0,
+            &w.head.1,
+            Activation::Relu,
+            p.head().data,
+            p.head().accum,
+        );
+        if let Some(r) = rec.as_deref_mut() {
+            r.record("head", hid.data());
+            r.record("out", hid.data()); // cast input
+        }
+        let logits = dense_fixed(
+            &quantize_mat(&hid, p.out().data),
+            &w.out.0,
+            &w.out.1,
+            Activation::Linear,
+            p.out().data,
+            p.out().accum,
+        );
+        if let Some(r) = rec.as_deref_mut() {
+            r.record("out", logits.data());
+        }
         let mut out = logits.row(0).to_vec();
         match self.cfg.final_activation() {
             FinalActivation::Sigmoid => {
-                out[0] = sigmoid_fixed(out[0], &self.roms, data);
+                out[0] = sigmoid_fixed(out[0], &self.roms, p.softmax().data);
             }
             FinalActivation::Softmax => {
-                softmax_fixed_row(&mut out, &self.roms, data, accum);
+                softmax_fixed_row(&mut out, &self.roms, p.softmax().data, p.softmax().accum);
             }
+        }
+        if let Some(r) = rec.as_deref_mut() {
+            r.record("softmax", &out);
         }
         out
     }
@@ -139,64 +290,94 @@ impl FixedTransformer {
     /// Batch-major `ap_fixed` execution: each layer's weight matrix
     /// streams once for the entire batch (weight-stationary loop order),
     /// and all temporaries come from the engine's reusable [`Scratch`]
-    /// arena.  Every intermediate still lands on the `FixedSpec` grid in
-    /// the same order as [`Self::forward`], so the result is **bitwise
-    /// identical** to scoring the events one at a time (property-tested
-    /// below) — batching changes throughput, never a probability.
+    /// arena.  Every intermediate still lands on its site's `FixedSpec`
+    /// grid in the same order as [`Self::forward`] (including the
+    /// inter-site re-grid casts), so the result is **bitwise identical**
+    /// to scoring the events one at a time (property-tested below) —
+    /// batching changes throughput, never a probability.
     pub fn forward_batch(&self, xs: &[&Mat]) -> Vec<Vec<f32>> {
         if xs.is_empty() {
             return Vec::new();
         }
-        let (data, accum) = (self.quant.data, self.quant.accum);
         for x in xs {
             assert_eq!(x.rows(), self.cfg.seq_len, "bad seq len");
             assert_eq!(x.cols(), self.cfg.input_size, "bad input size");
         }
+        let p = &self.plan;
         let w = &self.weights;
         let mut scratch_guard = self.scratch.borrow_mut();
         let scratch = &mut *scratch_guard;
-        // input quantization (the AXI boundary cast)
+        // input quantization (the AXI boundary cast, on the embed grid)
         let mut xq = Mat3::from_events(xs);
-        xq.map_in_place(|v| data.quantize(v));
-        let mut h = dense_fixed_batch(&xq, &w.embed.0, &w.embed.1, Activation::Linear,
-                                      data, accum, scratch);
+        let embed = p.embed();
+        xq.map_in_place(|v| embed.data.quantize(v));
+        let mut h = dense_fixed_batch(
+            &xq, &w.embed.0, &w.embed.1, Activation::Linear, embed.data, embed.accum, scratch,
+        );
         let mut fifo_stats = MhaFifoStats::default();
-        for b in &w.blocks {
-            let (attn, stats) = mha_fixed_batch(&h, &b.mha, &self.roms, data, accum, scratch);
+        for (b, blk) in w.blocks.iter().enumerate() {
+            let bp = *p.block(b);
+            // re-grid cast into the attention engine
+            h.map_in_place(|v| bp.qkv.data.quantize(v));
+            let (attn, stats) = mha_fixed_batch_sited(
+                &h, &blk.mha, &self.roms, &bp.mha(p.softmax()), scratch,
+            );
             fifo_stats.q_high_water = fifo_stats.q_high_water.max(stats.q_high_water);
             fifo_stats.score_high_water =
                 fifo_stats.score_high_water.max(stats.score_high_water);
             fifo_stats.out_high_water = fifo_stats.out_high_water.max(stats.out_high_water);
             h = h.add(&attn); // residual adder
-            h.map_in_place(|v| data.quantize(v));
-            if let Some(ln) = &b.ln1 {
-                layernorm_fixed_batch(&mut h, &ln.gamma, &ln.beta, &self.roms, data, accum);
+            h.map_in_place(|v| bp.mha_out.data.quantize(v));
+            if let Some(ln) = &blk.ln1 {
+                h.map_in_place(|v| bp.ln1.data.quantize(v)); // re-grid cast
+                layernorm_fixed_batch(
+                    &mut h, &ln.gamma, &ln.beta, &self.roms, bp.ln1.data, bp.ln1.accum,
+                );
             }
-            let y = dense_fixed_batch(&h, &b.ffn1.0, &b.ffn1.1, Activation::Relu,
-                                      data, accum, scratch);
-            let y = dense_fixed_batch(&y, &b.ffn2.0, &b.ffn2.1, Activation::Linear,
-                                      data, accum, scratch);
+            h.map_in_place(|v| bp.ffn1.data.quantize(v)); // re-grid cast
+            let y = dense_fixed_batch(
+                &h, &blk.ffn1.0, &blk.ffn1.1, Activation::Relu,
+                bp.ffn1.data, bp.ffn1.accum, scratch,
+            );
+            let mut y2_in = y;
+            y2_in.map_in_place(|v| bp.ffn2.data.quantize(v)); // re-grid cast
+            let y = dense_fixed_batch(
+                &y2_in, &blk.ffn2.0, &blk.ffn2.1, Activation::Linear,
+                bp.ffn2.data, bp.ffn2.accum, scratch,
+            );
             h = h.add(&y); // residual adder
-            h.map_in_place(|v| data.quantize(v));
-            if let Some(ln) = &b.ln2 {
-                layernorm_fixed_batch(&mut h, &ln.gamma, &ln.beta, &self.roms, data, accum);
+            h.map_in_place(|v| bp.ffn2.data.quantize(v));
+            if let Some(ln) = &blk.ln2 {
+                h.map_in_place(|v| bp.ln2.data.quantize(v)); // re-grid cast
+                layernorm_fixed_batch(
+                    &mut h, &ln.gamma, &ln.beta, &self.roms, bp.ln2.data, bp.ln2.accum,
+                );
             }
         }
         self.last_fifo_stats.set(fifo_stats);
-        let pooled = global_average_pool_fixed_batch(&h, data, accum);
-        let hid = dense_fixed_batch(&pooled, &w.head.0, &w.head.1, Activation::Relu,
-                                    data, accum, scratch);
-        let logits = dense_fixed_batch(&hid, &w.out.0, &w.out.1, Activation::Linear,
-                                       data, accum, scratch);
+        let pool = p.pool();
+        h.map_in_place(|v| pool.data.quantize(v)); // re-grid cast
+        let mut pooled = global_average_pool_fixed_batch(&h, pool.data, pool.accum);
+        let head = p.head();
+        pooled.map_in_place(|v| head.data.quantize(v)); // re-grid cast
+        let mut hid = dense_fixed_batch(
+            &pooled, &w.head.0, &w.head.1, Activation::Relu, head.data, head.accum, scratch,
+        );
+        let outq = p.out();
+        hid.map_in_place(|v| outq.data.quantize(v)); // re-grid cast
+        let logits = dense_fixed_batch(
+            &hid, &w.out.0, &w.out.1, Activation::Linear, outq.data, outq.accum, scratch,
+        );
+        let sm = p.softmax();
         (0..xs.len())
             .map(|i| {
                 let mut out = logits.event_row(i, 0).to_vec();
                 match self.cfg.final_activation() {
                     FinalActivation::Sigmoid => {
-                        out[0] = sigmoid_fixed(out[0], &self.roms, data);
+                        out[0] = sigmoid_fixed(out[0], &self.roms, sm.data);
                     }
                     FinalActivation::Softmax => {
-                        softmax_fixed_row(&mut out, &self.roms, data, accum);
+                        softmax_fixed_row(&mut out, &self.roms, sm.data, sm.accum);
                     }
                 }
                 out
@@ -237,33 +418,76 @@ impl FixedTransformer {
         p
     }
 
-    /// Per-layer resource estimates.
-    pub fn layer_resources(&self, r: ReuseFactor) -> Vec<(String, Resources)> {
+    /// Per-layer (name, data spec, resources) estimates — each layer at
+    /// its own site's width.  The MHA row reports the QKV spec (its
+    /// score/softmax/output sub-engines are folded into the resource
+    /// number via [`mha_resources_sited`]).
+    pub fn layer_resources(&self, r: ReuseFactor) -> Vec<(String, FixedSpec, Resources)> {
         let c = &self.cfg;
-        let d = self.quant.data;
+        let p = &self.plan;
         let fifo = {
             let st = self.last_fifo_stats.get();
             (st.q_high_water > 0).then_some(st)
         };
-        let mut v: Vec<(String, Resources)> = Vec::new();
-        v.push(("embed".into(), dense_resources(c.input_size, c.d_model, d, r)));
+        let mut v: Vec<(String, FixedSpec, Resources)> = Vec::new();
+        v.push((
+            "embed".into(),
+            p.embed().data,
+            dense_resources(c.input_size, c.d_model, p.embed().data, r),
+        ));
         for b in 0..c.num_blocks {
+            let bp = *p.block(b);
             v.push((
                 format!("block{b}.mha"),
-                mha_resources(c.seq_len, c.d_model, c.num_heads, c.head_dim, d, r, fifo),
+                bp.qkv.data,
+                mha_resources_sited(
+                    c.seq_len,
+                    c.d_model,
+                    c.num_heads,
+                    c.head_dim,
+                    bp.qkv.data,
+                    bp.mha_out.data,
+                    p.softmax().data,
+                    r,
+                    fifo,
+                ),
             ));
             if c.use_layernorm {
-                v.push((format!("block{b}.ln1"), layernorm_resources(c.d_model, d, r)));
+                v.push((
+                    format!("block{b}.ln1"),
+                    bp.ln1.data,
+                    layernorm_resources(c.d_model, bp.ln1.data, r),
+                ));
             }
-            v.push((format!("block{b}.ffn1"), dense_resources(c.d_model, c.ffn_dim, d, r)));
-            v.push((format!("block{b}.ffn2"), dense_resources(c.ffn_dim, c.d_model, d, r)));
+            v.push((
+                format!("block{b}.ffn1"),
+                bp.ffn1.data,
+                dense_resources(c.d_model, c.ffn_dim, bp.ffn1.data, r),
+            ));
+            v.push((
+                format!("block{b}.ffn2"),
+                bp.ffn2.data,
+                dense_resources(c.ffn_dim, c.d_model, bp.ffn2.data, r),
+            ));
             if c.use_layernorm {
-                v.push((format!("block{b}.ln2"), layernorm_resources(c.d_model, d, r)));
+                v.push((
+                    format!("block{b}.ln2"),
+                    bp.ln2.data,
+                    layernorm_resources(c.d_model, bp.ln2.data, r),
+                ));
             }
         }
-        v.push(("pool".into(), pool_resources(c.d_model, d, r)));
-        v.push(("head".into(), dense_resources(c.d_model, c.head_hidden, d, r)));
-        v.push(("out".into(), dense_resources(c.head_hidden, c.output_size, d, r)));
+        v.push(("pool".into(), p.pool().data, pool_resources(c.d_model, p.pool().data, r)));
+        v.push((
+            "head".into(),
+            p.head().data,
+            dense_resources(c.d_model, c.head_hidden, p.head().data, r),
+        ));
+        v.push((
+            "out".into(),
+            p.out().data,
+            dense_resources(c.head_hidden, c.output_size, p.out().data, r),
+        ));
         v
     }
 
@@ -291,7 +515,7 @@ impl FixedTransformer {
             .stages()
             .iter()
             .zip(self.layer_resources(r))
-            .map(|(s, (name, res))| {
+            .map(|(s, (name, precision, res))| {
                 debug_assert_eq!(s.name, name);
                 LayerReport {
                     name,
@@ -299,6 +523,7 @@ impl FixedTransformer {
                     ii: s.ii,
                     rows: s.rows,
                     latency: s.latency(),
+                    precision,
                     resources: res,
                 }
             })
@@ -306,7 +531,8 @@ impl FixedTransformer {
         let total: Resources = layers.iter().map(|l| l.resources).sum();
         SynthesisReport {
             model: self.cfg.name.clone(),
-            quant: self.quant,
+            quant: self.plan.embed(),
+            plan: self.plan.clone(),
             reuse: r,
             clk_ns,
             latency_cycles,
@@ -339,6 +565,94 @@ mod tests {
         )
     }
 
+    /// The pre-plan `FixedTransformer::forward` body, verbatim (PR 2):
+    /// the golden reference for the uniform-plan bitwise contract.
+    /// Takes weights already uniformly quantized via
+    /// `Weights::quantized(quant.data)` — the legacy PTQ step.
+    fn legacy_forward(
+        cfg: &ModelConfig,
+        w: &Weights,
+        roms: &Roms,
+        quant: QuantConfig,
+        x: &Mat,
+    ) -> Vec<f32> {
+        use super::super::mha::mha_fixed;
+        let (data, accum) = (quant.data, quant.accum);
+        let xq = x.map(|v| data.quantize(v));
+        let mut h = dense_fixed(&xq, &w.embed.0, &w.embed.1, Activation::Linear, data, accum);
+        for b in &w.blocks {
+            let (attn, _) = mha_fixed(&h, &b.mha, roms, data, accum);
+            h = quantize_mat(&h.add(&attn), data);
+            if let Some(ln) = &b.ln1 {
+                for r in 0..h.rows() {
+                    layernorm_fixed_row(h.row_mut(r), &ln.gamma, &ln.beta, roms, data, accum);
+                }
+            }
+            let y = dense_fixed(&h, &b.ffn1.0, &b.ffn1.1, Activation::Relu, data, accum);
+            let y = dense_fixed(&y, &b.ffn2.0, &b.ffn2.1, Activation::Linear, data, accum);
+            h = quantize_mat(&h.add(&y), data);
+            if let Some(ln) = &b.ln2 {
+                for r in 0..h.rows() {
+                    layernorm_fixed_row(h.row_mut(r), &ln.gamma, &ln.beta, roms, data, accum);
+                }
+            }
+        }
+        let pooled = global_average_pool_fixed(&h, data, accum);
+        let hid = dense_fixed(&pooled, &w.head.0, &w.head.1, Activation::Relu, data, accum);
+        let logits = dense_fixed(&hid, &w.out.0, &w.out.1, Activation::Linear, data, accum);
+        let mut out = logits.row(0).to_vec();
+        match cfg.final_activation() {
+            FinalActivation::Sigmoid => {
+                out[0] = sigmoid_fixed(out[0], roms, data);
+            }
+            FinalActivation::Softmax => {
+                softmax_fixed_row(&mut out, roms, data, accum);
+            }
+        }
+        out
+    }
+
+    /// The tentpole's golden contract: a *uniform* `PrecisionPlan`
+    /// reproduces the legacy global-`QuantConfig` outputs bitwise —
+    /// per-event AND batched — across all three zoo models and random
+    /// `FixedSpec`s.
+    #[test]
+    fn prop_uniform_plan_bitwise_matches_legacy_quantconfig_path() {
+        use crate::testutil::Prop;
+        Prop::new("uniform plan == legacy QuantConfig path").runs(3).check(|g| {
+            let roms = Roms::new();
+            for m in zoo() {
+                let quant = QuantConfig::from_spec(g.fixed_spec_max_width(22));
+                let w = synthetic_weights(&m.config, g.u64());
+                let legacy_w = w.quantized(quant.data);
+                let t = FixedTransformer::with_plan(
+                    m.config.clone(),
+                    &w,
+                    PrecisionPlan::uniform(m.config.num_blocks, quant),
+                );
+                let events: Vec<Mat> =
+                    (0..2).map(|i| event(&m.config, g.u64() ^ i)).collect();
+                for x in &events {
+                    assert_eq!(
+                        t.forward(x),
+                        legacy_forward(&m.config, &legacy_w, &roms, quant, x),
+                        "{} {quant:?} per-event",
+                        m.config.name
+                    );
+                }
+                let refs: Vec<&Mat> = events.iter().collect();
+                for (x, got) in events.iter().zip(&t.forward_batch(&refs)) {
+                    assert_eq!(
+                        got,
+                        &legacy_forward(&m.config, &legacy_w, &roms, quant, x),
+                        "{} {quant:?} batched",
+                        m.config.name
+                    );
+                }
+            }
+        });
+    }
+
     /// The PR's acceptance bar: batched HLS execution is bitwise
     /// identical to the per-event path — over random design points,
     /// batch sizes and inputs, every probability must be `==`, not
@@ -363,6 +677,43 @@ mod tests {
                 assert_eq!(got, &t.forward(x), "{:?} batch {bsz}", t.quant());
             }
         });
+    }
+
+    /// Same bit-exactness bar for *heterogeneous* plans: a mixed plan's
+    /// batched path must equal its per-event path exactly.
+    #[test]
+    fn mixed_plan_forward_batch_bitwise_identical_to_per_event() {
+        let mut g = Gen::new(77);
+        for m in zoo() {
+            let mut plan =
+                PrecisionPlan::uniform(m.config.num_blocks, QuantConfig::new(6, 10));
+            for (i, site) in plan.site_names().into_iter().enumerate() {
+                // vary widths site-by-site, keeping enough int bits to
+                // stay numerically alive
+                let frac = 6 + (i as u32 % 5);
+                let int = 4 + (i as u32 % 3);
+                plan.set_data(&site, FixedSpec::new(int + frac, int)).unwrap();
+            }
+            let w = synthetic_weights(&m.config, 51);
+            let t = FixedTransformer::with_plan(m.config.clone(), &w, plan);
+            let events: Vec<Mat> = (0..3).map(|_| event(&m.config, g.u64())).collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let batched = t.forward_batch(&refs);
+            for (x, got) in events.iter().zip(&batched) {
+                assert_eq!(got, &t.forward(x), "{} mixed plan", m.config.name);
+            }
+        }
+    }
+
+    #[test]
+    fn with_plan_rejects_wrong_block_count() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 5);
+        let plan = PrecisionPlan::uniform(m.config.num_blocks + 1, QuantConfig::new(6, 10));
+        let res = std::panic::catch_unwind(|| {
+            FixedTransformer::with_plan(m.config.clone(), &w, plan)
+        });
+        assert!(res.is_err());
     }
 
     #[test]
@@ -474,6 +825,29 @@ mod tests {
     }
 
     #[test]
+    fn coarsening_one_site_only_perturbs_less_than_coarsening_all() {
+        // heterogeneity is a real dial: shaving a single FFN site hurts
+        // fidelity less than shaving every site to the same width
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 8);
+        let fine = QuantConfig::new(8, 12);
+        let reference = FixedTransformer::new(m.config.clone(), &w, fine);
+        let mut one_site = PrecisionPlan::uniform(m.config.num_blocks, fine);
+        one_site.set_data("block1.ffn1", FixedSpec::new(8, 4)).unwrap();
+        let t_one = FixedTransformer::with_plan(m.config.clone(), &w, one_site);
+        let t_all = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(4, 4));
+        let mut err_one = 0.0f32;
+        let mut err_all = 0.0f32;
+        for seed in 0..6 {
+            let x = event(&m.config, seed);
+            let pr = reference.forward(&x);
+            err_one += (t_one.forward(&x)[0] - pr[0]).abs();
+            err_all += (t_all.forward(&x)[0] - pr[0]).abs();
+        }
+        assert!(err_one < err_all, "one-site {err_one} vs all-sites {err_all}");
+    }
+
+    #[test]
     fn synthesis_report_trends_match_paper() {
         let m = zoo_model("engine").unwrap();
         let w = synthetic_weights(&m.config, 7);
@@ -492,6 +866,36 @@ mod tests {
         assert!(r1.total.ff > r4.total.ff);
         // BRAM grows with R (array re-partitioning)
         assert!(r4.total.bram18 >= r1.total.bram18);
+    }
+
+    #[test]
+    fn mixed_plan_synthesis_reports_per_layer_precision_and_saves_resources() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 9);
+        let uniform = QuantConfig::new(6, 12); // width 18: above the DSP port
+        let t_uni = FixedTransformer::new(m.config.clone(), &w, uniform);
+        let mut plan = PrecisionPlan::uniform(m.config.num_blocks, uniform);
+        plan.set_data("block0.ffn1", FixedSpec::new(12, 5)).unwrap();
+        plan.set_data("block2.mha.qkv", FixedSpec::new(14, 6)).unwrap();
+        let t_mix = FixedTransformer::with_plan(m.config.clone(), &w, plan);
+        let rep_uni = t_uni.synthesize(ReuseFactor(1));
+        let rep_mix = t_mix.synthesize(ReuseFactor(1));
+        // shaved sites show their own spec in the per-layer column
+        let spec_of = |rep: &SynthesisReport, name: &str| {
+            rep.layers.iter().find(|l| l.name == name).unwrap().precision
+        };
+        assert_eq!(spec_of(&rep_mix, "block0.ffn1"), FixedSpec::new(12, 5));
+        assert_eq!(spec_of(&rep_mix, "block2.mha"), FixedSpec::new(14, 6));
+        assert_eq!(spec_of(&rep_mix, "embed"), uniform.data);
+        // crossing back under the DSP port width halves that layer's DSPs
+        let uni_ffn1 = rep_uni.layers.iter().find(|l| l.name == "block0.ffn1").unwrap();
+        let mix_ffn1 = rep_mix.layers.iter().find(|l| l.name == "block0.ffn1").unwrap();
+        assert!(mix_ffn1.resources.dsp < uni_ffn1.resources.dsp);
+        assert!(rep_mix.total.dsp + rep_mix.total.ff < rep_uni.total.dsp + rep_uni.total.ff);
+        // the rendered report carries the precision column
+        let text = format!("{rep_mix}");
+        assert!(text.contains("ap_fixed<12,5>"), "{text}");
+        assert!(text.contains("precision"), "{text}");
     }
 
     #[test]

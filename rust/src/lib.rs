@@ -10,6 +10,9 @@
 //! * [`fixed`] — `ap_fixed<W,I>` arithmetic + the LUT ROMs of §IV-B/§IV-C.
 //! * [`hls`] — the Vivado-HLS stand-in: bit-accurate fixed-point
 //!   transformer layers with cycle/resource models (DESIGN.md §6).
+//!   Quantization is governed per layer site by [`hls::PrecisionPlan`]
+//!   (uniform plans reproduce the legacy global `QuantConfig` bitwise;
+//!   `calibrate_plan` assigns integer bits from profiled ranges).
 //! * [`nn`] — exact-float reference network (the "Keras output" the
 //!   paper's AUC plots compare against), plus the batch-major execution
 //!   model (`Mat3`, weight-stationary kernels, bit-exactness contract)
@@ -17,7 +20,10 @@
 //! * [`models`] — Table-I model zoo, NNW weight loading.
 //! * [`data`] — synthetic stand-ins for FordA / CMS b-tagging / LIGO O3a.
 //! * [`metrics`] — ROC-AUC, accuracy, latency histograms.
-//! * [`quant`] — post-training-quantization sweep engine (Figures 9-11).
+//! * [`quant`] — post-training-quantization sweep engine (Figures 9-11)
+//!   plus the greedy per-site mixed-precision search
+//!   (`bit_shave_search`: fractional bits walk down per site under an
+//!   AUC-ratio floor).
 //! * [`runtime`] — PJRT client over the AOT artifacts (`*.hlo.txt`);
 //!   gated behind the `pjrt` cargo feature (stubbed otherwise).
 //! * [`coordinator`] — the trigger-style streaming server (L3): sharded

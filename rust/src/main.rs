@@ -7,8 +7,9 @@
 //! repro table-latency     --model engine|btag|gw
 //! repro figure-auc        --model engine|btag|gw [--events N] [--threads T] [--quick]
 //! repro figure-resources  --model engine|btag|gw
-//! repro synth             --model <m> [--reuse R] [--int I] [--frac F]
-//! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B] [--replicas R]
+//! repro synth             --model <m> [--reuse R] [--int I] [--frac F] [--precision-plan FILE]
+//! repro mixed-precision   --model <m> [--floor 0.99] [--min-frac 2] [--save-plan FILE]
+//! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B] [--replicas R] [--precision-plan FILE]
 //! repro report            (everything above, in sequence)
 //! ```
 
@@ -20,10 +21,12 @@ use hls4ml_transformer::coordinator::{
 use hls4ml_transformer::experiments::{
     artifacts_ready, auc_figures, latency_tables, load_checkpoints, resource_figures, table1,
 };
-use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::hls::{
+    load_plan_file, FixedTransformer, PrecisionPlan, QuantConfig, ReuseFactor,
+};
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::{zoo, zoo_model};
-use hls4ml_transformer::quant::EvalSet;
+use hls4ml_transformer::quant::{bit_shave_search, EvalSet};
 use hls4ml_transformer::{artifacts_dir, models::ModelConfig};
 
 fn main() {
@@ -50,8 +53,12 @@ fn usage() {
          \x20 figure-auc       --model <m>        Figures 9-11 (AUC vs precision)\n\
          \x20 figure-resources --model <m>        Figures 12-14 (resources)\n\
          \x20 synth            --model <m>        one synthesis report\n\
+         \x20                  [--precision-plan F]  per-site plan file\n\
+         \x20 mixed-precision  --model <m>        greedy per-site bit shaving\n\
+         \x20                  [--floor 0.99] [--min-frac 2] [--save-plan F]\n\
          \x20 serve            --backend <b>      run the trigger server\n\
          \x20                  [--replicas R]     worker-pool width per model\n\
+         \x20                  [--precision-plan F]  per-site plan file (HLS)\n\
          \x20 report                              all experiments in sequence\n\
          models: engine | btag | gw    backends: float | hls | pjrt"
     );
@@ -109,14 +116,20 @@ fn run(args: &Args) -> Result<()> {
             print!("{}", resource_figures::render(&cfg, &pts, &fracs));
         }
         "synth" => {
-            args.expect_only(&["model", "reuse", "int", "frac"])
+            args.expect_only(&["model", "reuse", "int", "frac", "precision-plan"])
                 .map_err(anyhow::Error::msg)?;
             let cfg = model_arg(args)?;
             let weights = weights_or_synthetic(&cfg)?;
             let reuse = args.get_parse("reuse", 1u32).map_err(anyhow::Error::msg)?;
             let int_bits = args.get_parse("int", 6u32).map_err(anyhow::Error::msg)?;
             let frac = args.get_parse("frac", 8u32).map_err(anyhow::Error::msg)?;
-            let t = FixedTransformer::new(cfg, &weights, QuantConfig::new(int_bits, frac));
+            let base = QuantConfig::new(int_bits, frac);
+            let plan = match args.get("precision-plan") {
+                Some(path) => load_plan_file(path, cfg.num_blocks, base)
+                    .map_err(anyhow::Error::msg)?,
+                None => PrecisionPlan::uniform(cfg.num_blocks, base),
+            };
+            let t = FixedTransformer::with_plan(cfg, &weights, plan);
             let rep = t.synthesize(ReuseFactor(reuse));
             print!("{rep}");
             println!(
@@ -124,9 +137,78 @@ fn run(args: &Args) -> Result<()> {
                 rep.utilization_summary(&hls4ml_transformer::hls::resources::VU13P)
             );
         }
+        "mixed-precision" => {
+            args.expect_only(&[
+                "model", "int", "frac", "floor", "min-frac", "events", "reuse", "save-plan",
+            ])
+            .map_err(anyhow::Error::msg)?;
+            let cfg = model_arg(args)?;
+            let weights = weights_or_synthetic(&cfg)?;
+            let int_bits = args.get_parse("int", 6u32).map_err(anyhow::Error::msg)?;
+            let frac = args.get_parse("frac", 12u32).map_err(anyhow::Error::msg)?;
+            let floor = args.get_parse("floor", 0.99f64).map_err(anyhow::Error::msg)?;
+            let min_frac = args.get_parse("min-frac", 2u32).map_err(anyhow::Error::msg)?;
+            let events = args.get_parse("events", 64usize).map_err(anyhow::Error::msg)?;
+            let reuse = args.get_parse("reuse", 1u32).map_err(anyhow::Error::msg)?;
+            let dir = artifacts_dir();
+            let eval = if artifacts_ready(&dir, &cfg.name) {
+                EvalSet::load(&dir, &cfg)?.truncate(events)
+            } else {
+                eprintln!(
+                    "(note: artifacts missing for {}; margin-labeled synthetic eval)",
+                    cfg.name
+                );
+                EvalSet::synthetic(&cfg, &weights, events, 0xBEEF)
+            };
+            let uniform = QuantConfig::new(int_bits, frac);
+            let r = bit_shave_search(
+                &cfg, &weights, &eval, uniform, floor, min_frac, ReuseFactor(reuse),
+            );
+            println!(
+                "mixed-precision search — {} | start {} | auc_ratio floor {floor} | \
+                 min frac {min_frac} | {} eval events | {} design points scored",
+                cfg.name,
+                uniform.data,
+                eval.len(),
+                r.points_scored
+            );
+            println!(
+                "  uniform: auc_ratio {:.4}  DSP {} FF {} LUT {} BRAM18 {}",
+                r.uniform_score.auc_ratio,
+                r.uniform_resources.dsp,
+                r.uniform_resources.ff,
+                r.uniform_resources.lut,
+                r.uniform_resources.bram18
+            );
+            println!(
+                "  found:   auc_ratio {:.4}  DSP {} FF {} LUT {} BRAM18 {}  ({} frac bits shaved)",
+                r.plan_score.auc_ratio,
+                r.plan_resources.dsp,
+                r.plan_resources.ff,
+                r.plan_resources.lut,
+                r.plan_resources.bram18,
+                r.bits_shaved
+            );
+            let saved =
+                (r.uniform_resources.dsp + r.uniform_resources.ff) as f64
+                    - (r.plan_resources.dsp + r.plan_resources.ff) as f64;
+            let base =
+                (r.uniform_resources.dsp + r.uniform_resources.ff).max(1) as f64;
+            println!("  DSP+FF saved vs uniform: {:.1}%", 100.0 * saved / base);
+            match args.get("save-plan") {
+                Some(path) => {
+                    std::fs::write(path, r.plan.serialize())
+                        .with_context(|| format!("writing plan to {path}"))?;
+                    println!("  plan written to {path}");
+                }
+                None => print!("{}", r.plan.serialize()),
+            }
+        }
         "serve" => {
-            args.expect_only(&["backend", "events", "rate", "batch", "models", "replicas"])
-                .map_err(anyhow::Error::msg)?;
+            args.expect_only(&[
+                "backend", "events", "rate", "batch", "models", "replicas", "precision-plan",
+            ])
+            .map_err(anyhow::Error::msg)?;
             let backend: BackendKind = args
                 .get_or("backend", "float")
                 .parse()
@@ -136,6 +218,24 @@ fn run(args: &Args) -> Result<()> {
             let batch = args.get_parse("batch", 8usize).map_err(anyhow::Error::msg)?;
             let replicas = args.get_parse("replicas", 1usize).map_err(anyhow::Error::msg)?;
             anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+            // plan files are per-model (block counts differ): read the
+            // text once here, parse against each pipeline's model inside
+            // the server (clean Err naming the offending entry)
+            let plan_text: Option<String> = match args.get("precision-plan") {
+                Some(path) => Some(
+                    std::fs::read_to_string(path)
+                        .with_context(|| format!("--precision-plan {path}"))?,
+                ),
+                None => None,
+            };
+            // only the HLS engine quantizes: silently accepting the flag
+            // for float/pjrt would serve the uniform engine while the
+            // operator believes the plan is in effect
+            anyhow::ensure!(
+                plan_text.is_none() || backend == BackendKind::Hls,
+                "--precision-plan only applies to the hls backend \
+                 (float/pjrt engines are not quantized)"
+            );
             let models: Vec<&'static str> = match args.get_or("models", "engine,btag,gw") {
                 "all" => vec!["engine", "btag", "gw"],
                 list => list
@@ -147,6 +247,15 @@ fn run(args: &Args) -> Result<()> {
                     })
                     .collect::<Result<_>>()?,
             };
+            // plans are per-model (site names carry block indices, and
+            // block counts differ across the zoo): serving one plan to
+            // the whole default model list would reject it on the first
+            // model with a different shape, so require a single model
+            anyhow::ensure!(
+                plan_text.is_none() || models.len() == 1,
+                "--precision-plan applies to a single model; pass --models <m> \
+                 (plans are per-model: site names carry block indices)"
+            );
             let cfg = ServerConfig {
                 pipelines: models
                     .into_iter()
@@ -154,6 +263,7 @@ fn run(args: &Args) -> Result<()> {
                         let mut pc = PipelineConfig::new(m, backend);
                         pc.batch = BatchPolicy { max_batch: batch, ..Default::default() };
                         pc.replicas = replicas;
+                        pc.precision_plan = plan_text.clone();
                         pc
                     })
                     .collect(),

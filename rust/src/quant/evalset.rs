@@ -79,6 +79,86 @@ impl EvalSet {
         })
     }
 
+    /// Synthetic eval set scored *and labeled* by the float reference
+    /// itself (no artifacts).  Binary / 2-class heads: generate
+    /// `n + margin` random events, label by thresholding the float
+    /// positive-class score at its median, and drop the `margin` events
+    /// nearest the threshold — `auc_float` is then 1.0 by construction,
+    /// so a design point's `auc_ratio` measures pure quantization
+    /// damage, which is what the mixed-precision search and the
+    /// resource benches need from an artifact-free set.  Heads with
+    /// more than 2 classes (scored via `macro_auc`) are labeled by the
+    /// float argmax instead: the macro-AUC baseline is near-1 (not
+    /// exactly 1 — one-vs-rest pairs can invert), but it is the same
+    /// fixed baseline for every design point, so ratios stay comparable.
+    pub fn synthetic(cfg: &ModelConfig, weights: &crate::models::Weights, n: usize, seed: u64) -> Self {
+        use crate::nn::FloatTransformer;
+        let float = FloatTransformer::new(cfg.clone(), weights.clone());
+        let mut g = crate::testutil::Gen::new(seed);
+        let multiclass = cfg.output_size > 2;
+        let margin = if multiclass { 0 } else { (n / 3).max(4) };
+        let total = n + margin;
+        let mut scored: Vec<(f32, Mat, Vec<f32>)> = Vec::with_capacity(total);
+        for _ in 0..total {
+            let x = Mat::from_vec(
+                cfg.seq_len,
+                cfg.input_size,
+                (0..cfg.seq_len * cfg.input_size).map(|_| g.normal()).collect(),
+            );
+            let p = float.probs(&float.forward(&x));
+            let score = if p.len() == 1 { p[0] } else { p[1.min(p.len() - 1)] };
+            scored.push((score, x, p));
+        }
+        let mut events = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let mut probs = Vec::with_capacity(n);
+        if multiclass {
+            for (_, x, p) in scored {
+                let argmax = p
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                events.push(x);
+                labels.push(argmax as u8);
+                probs.push(p);
+            }
+        } else {
+            scored.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let neg = n / 2;
+            let pos = n - neg;
+            // the rank-based margin drop only guarantees auc_float = 1
+            // if the boundary scores are strictly separated: ties
+            // straddling the threshold (e.g. saturated probabilities)
+            // would be tie-ranked by binary_auc and break the contract,
+            // so widen the drop tie-by-tie, trading kept events for a
+            // clean margin (never below 2 per side)
+            let (mut lo, mut hi) = (neg, total - pos);
+            while lo >= 3 && hi <= total - 3 && scored[lo - 1].0 >= scored[hi].0 {
+                lo -= 1;
+                hi += 1;
+            }
+            let keep: Vec<(usize, u8)> = (0..lo)
+                .map(|i| (i, 0u8))
+                .chain((hi..total).map(|i| (i, 1u8)))
+                .collect();
+            for (i, label) in keep {
+                let (_, x, p) = scored[i].clone();
+                events.push(x);
+                labels.push(label);
+                probs.push(p);
+            }
+        }
+        EvalSet {
+            events,
+            labels,
+            lut_probs: probs.clone(),
+            float_probs: probs,
+            num_classes: cfg.output_size.max(2),
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.events.len()
     }
@@ -146,6 +226,34 @@ mod tests {
         let es = EvalSet::from_nnw(&fake_nnw(&cfg, 6), &cfg).unwrap();
         assert_eq!(es.truncate(2).len(), 2);
         assert_eq!(es.truncate(99).len(), 6);
+    }
+
+    #[test]
+    fn synthetic_set_is_margin_labeled_and_separable() {
+        use crate::metrics::auc::binary_auc;
+        use crate::models::weights::synthetic_weights;
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 17);
+        let es = EvalSet::synthetic(&cfg, &w, 16, 3);
+        assert_eq!(es.len(), 16);
+        assert_eq!(es.labels.iter().filter(|&&l| l == 1).count(), 8);
+        // float scores separate the labels perfectly by construction
+        let scores: Vec<f32> = es.float_probs.iter().map(|p| p[1]).collect();
+        assert_eq!(binary_auc(&scores, &es.labels), 1.0);
+    }
+
+    #[test]
+    fn synthetic_multiclass_uses_argmax_labels() {
+        use crate::models::weights::synthetic_weights;
+        let cfg = zoo_model("btag").unwrap().config; // 3 classes -> macro_auc path
+        let w = synthetic_weights(&cfg, 19);
+        let es = EvalSet::synthetic(&cfg, &w, 12, 4);
+        assert_eq!(es.len(), 12);
+        for (p, &l) in es.float_probs.iter().zip(&es.labels) {
+            assert!((l as usize) < cfg.output_size);
+            let am = p.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+            assert_eq!(l as usize, am, "label must be the float argmax");
+        }
     }
 
     #[test]

@@ -5,4 +5,7 @@ pub mod evalset;
 pub mod sweep;
 
 pub use evalset::EvalSet;
-pub use sweep::{run_sweep, score_point, SweepPoint, SweepResult};
+pub use sweep::{
+    bit_shave_search, run_sweep, score_plan, score_point, BitShaveResult, PlanScore,
+    SweepPoint, SweepResult,
+};

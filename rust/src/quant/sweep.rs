@@ -6,8 +6,15 @@
 //! HLS-simulator) model relative to the Keras (here: exact-float jax
 //! export) model, both against ground truth.  We also record the mean
 //! absolute probability error as a direct output-fidelity measure.
+//!
+//! Beyond the paper's uniform grid, [`bit_shave_search`] walks
+//! *per-site* fractional bits down (greedy, subject to an AUC-ratio
+//! floor) over a [`PrecisionPlan`] — the mixed-precision design points
+//! hls4ml reaches with `granularity="name"`.
 
-use crate::hls::{FixedTransformer, QuantConfig};
+use crate::fixed::FixedSpec;
+use crate::hls::resources::Resources;
+use crate::hls::{FixedTransformer, PrecisionPlan, QuantConfig, ReuseFactor};
 use crate::metrics::auc::{binary_auc, macro_auc};
 use crate::models::config::ModelConfig;
 use crate::models::weights::Weights;
@@ -37,15 +44,23 @@ pub struct SweepResult {
     pub mean_abs_err: f64,
 }
 
-/// Score one model at one design point over the eval set.
-pub fn score_point(
+/// Fidelity of one precision plan over an eval set.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanScore {
+    pub auc_fixed: f64,
+    pub auc_float: f64,
+    pub auc_ratio: f64,
+    pub mean_abs_err: f64,
+}
+
+/// Score one model under one precision plan over the eval set.
+pub fn score_plan(
     cfg: &ModelConfig,
     weights: &Weights,
     eval: &EvalSet,
-    point: SweepPoint,
-) -> SweepResult {
-    let quant = QuantConfig::new(point.integer_bits, point.frac_bits);
-    let fixed = FixedTransformer::new(cfg.clone(), weights, quant);
+    plan: &PrecisionPlan,
+) -> PlanScore {
+    let fixed = FixedTransformer::with_plan(cfg.clone(), weights, plan.clone());
 
     let mut fixed_probs: Vec<Vec<f32>> = Vec::with_capacity(eval.len());
     for x in &eval.events {
@@ -79,8 +94,7 @@ pub fn score_point(
         }
     }
 
-    SweepResult {
-        point,
+    PlanScore {
         auc_fixed,
         auc_float,
         auc_ratio: if auc_float > 0.0 { auc_fixed / auc_float } else { 0.0 },
@@ -88,8 +102,30 @@ pub fn score_point(
     }
 }
 
+/// Score one model at one uniform design point over the eval set.
+pub fn score_point(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    eval: &EvalSet,
+    point: SweepPoint,
+) -> SweepResult {
+    let quant = QuantConfig::new(point.integer_bits, point.frac_bits);
+    let plan = PrecisionPlan::uniform(cfg.num_blocks, quant);
+    let s = score_plan(cfg, weights, eval, &plan);
+    SweepResult {
+        point,
+        auc_fixed: s.auc_fixed,
+        auc_float: s.auc_float,
+        auc_ratio: s.auc_ratio,
+        mean_abs_err: s.mean_abs_err,
+    }
+}
+
 /// Run many design points, fanned out over OS threads (std::thread::scope
-/// — the offline crate set has no rayon).
+/// — the offline crate set has no rayon).  Workers pull indices off a
+/// shared counter and send `(index, result)` down one mpsc channel; the
+/// receiver reorders by index, so results come back in `points` order
+/// regardless of scheduling.
 pub fn run_sweep(
     cfg: &ModelConfig,
     ptq_weights: &Weights,
@@ -98,29 +134,32 @@ pub fn run_sweep(
     points: &[SweepPoint],
     threads: usize,
 ) -> Vec<SweepResult> {
-    let threads = threads.max(1);
-    let mut results: Vec<Option<SweepResult>> = vec![None; points.len()];
+    let threads = threads.max(1).min(points.len().max(1));
     let next = std::sync::atomic::AtomicUsize::new(0);
-    let slots: Vec<std::sync::Mutex<Option<SweepResult>>> =
-        (0..points.len()).map(|_| std::sync::Mutex::new(None)).collect();
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, SweepResult)>();
     std::thread::scope(|scope| {
-        for _ in 0..threads.min(points.len().max(1)) {
-            scope.spawn(|| loop {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            scope.spawn(move || loop {
                 let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 if i >= points.len() {
                     break;
                 }
                 let p = points[i];
                 let w = if p.qat { qat_weights } else { ptq_weights };
-                let r = score_point(cfg, w, eval, p);
-                *slots[i].lock().unwrap() = Some(r);
+                if tx.send((i, score_point(cfg, w, eval, p))).is_err() {
+                    break; // receiver gone — nothing left to report to
+                }
             });
         }
-    });
-    for (i, slot) in slots.into_iter().enumerate() {
-        results[i] = slot.into_inner().unwrap();
-    }
-    results.into_iter().map(|r| r.expect("all points scored")).collect()
+        drop(tx); // workers hold the only remaining senders
+        let mut results: Vec<Option<SweepResult>> = vec![None; points.len()];
+        for (i, r) in rx {
+            results[i] = Some(r);
+        }
+        results.into_iter().map(|r| r.expect("all points scored")).collect()
+    })
 }
 
 /// The grid of the paper's Figures 9-11: integer bits 6..=10, fractional
@@ -137,9 +176,111 @@ pub fn paper_grid() -> Vec<SweepPoint> {
     v
 }
 
+/// Result of one greedy mixed-precision search.
+#[derive(Clone, Debug)]
+pub struct BitShaveResult {
+    /// The heterogeneous plan the search settled on.
+    pub plan: PrecisionPlan,
+    /// The uniform starting point.
+    pub uniform: QuantConfig,
+    pub auc_floor: f64,
+    pub uniform_score: PlanScore,
+    pub plan_score: PlanScore,
+    /// Synthesized totals at the search's reuse factor.
+    pub uniform_resources: Resources,
+    pub plan_resources: Resources,
+    /// Total fractional bits removed across all sites.
+    pub bits_shaved: u32,
+    /// Eval-set scorings the search spent.
+    pub points_scored: usize,
+}
+
+/// Greedy per-site bit shaving: starting from a uniform plan, repeatedly
+/// try to remove one fractional bit from each site in turn, keeping a
+/// shave only while the plan's `auc_ratio` stays at or above
+/// `auc_floor`; a site that refuses a shave is frozen.  Converges when a
+/// full pass changes nothing.  Sites the model doesn't instantiate
+/// (`ln1`/`ln2` on LN-free models) are skipped.
+///
+/// This is the mixed-precision analog of the paper's §VI-A sweep: the
+/// x-axis walks per site instead of globally, and the payoff is read
+/// from the resource model (`uniform_resources` vs `plan_resources`).
+pub fn bit_shave_search(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    eval: &EvalSet,
+    uniform: QuantConfig,
+    auc_floor: f64,
+    min_frac: u32,
+    reuse: ReuseFactor,
+) -> BitShaveResult {
+    let mut plan = PrecisionPlan::uniform(cfg.num_blocks, uniform);
+    let sites: Vec<String> = plan
+        .site_names()
+        .into_iter()
+        .filter(|s| cfg.use_layernorm || !(s.ends_with(".ln1") || s.ends_with(".ln2")))
+        .collect();
+    let uniform_score = score_plan(cfg, weights, eval, &plan);
+    let mut points_scored = 1usize;
+    let mut frozen: std::collections::HashSet<String> = Default::default();
+    loop {
+        let mut changed = false;
+        for site in &sites {
+            if frozen.contains(site) {
+                continue;
+            }
+            let cur = plan.get(site).expect("site_names yields known sites");
+            if cur.data.frac() <= min_frac || cur.data.width() <= cur.data.integer() + 1 {
+                frozen.insert(site.clone());
+                continue;
+            }
+            let shaved = FixedSpec::new(cur.data.width() - 1, cur.data.integer());
+            let mut cand = plan.clone();
+            cand.set_data(site, shaved).expect("known site");
+            let s = score_plan(cfg, weights, eval, &cand);
+            points_scored += 1;
+            if s.auc_ratio >= auc_floor {
+                plan = cand;
+                changed = true;
+            } else {
+                frozen.insert(site.clone());
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let plan_score = score_plan(cfg, weights, eval, &plan);
+    points_scored += 1;
+    let uniform_resources = FixedTransformer::new(cfg.clone(), weights, uniform)
+        .synthesize(reuse)
+        .total;
+    let plan_resources = FixedTransformer::with_plan(cfg.clone(), weights, plan.clone())
+        .synthesize(reuse)
+        .total;
+    let bits_shaved: u32 = plan
+        .site_names()
+        .iter()
+        .filter_map(|s| plan.get(s))
+        .map(|q| uniform.data.frac() - q.data.frac())
+        .sum();
+    BitShaveResult {
+        plan,
+        uniform,
+        auc_floor,
+        uniform_score,
+        plan_score,
+        uniform_resources,
+        plan_resources,
+        bits_shaved,
+        points_scored,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hls::resources::VU13P;
     use crate::models::weights::synthetic_weights;
     use crate::models::zoo::zoo_model;
     use crate::nn::FloatTransformer;
@@ -216,8 +357,82 @@ mod tests {
     }
 
     #[test]
+    fn run_sweep_with_more_threads_than_points_stays_ordered() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 24);
+        let eval = synthetic_eval(&cfg, &w, 6);
+        let points = vec![
+            SweepPoint { integer_bits: 6, frac_bits: 4, qat: false },
+            SweepPoint { integer_bits: 7, frac_bits: 5, qat: false },
+        ];
+        let r = run_sweep(&cfg, &w, &w, &eval, &points, 16);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].point, points[0]);
+        assert_eq!(r[1].point, points[1]);
+    }
+
+    #[test]
+    fn score_plan_uniform_matches_score_point() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 25);
+        let eval = synthetic_eval(&cfg, &w, 8);
+        let point = SweepPoint { integer_bits: 6, frac_bits: 8, qat: false };
+        let a = score_point(&cfg, &w, &eval, point);
+        let plan = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 8));
+        let b = score_plan(&cfg, &w, &eval, &plan);
+        assert_eq!(a.auc_fixed, b.auc_fixed);
+        assert_eq!(a.mean_abs_err, b.mean_abs_err);
+    }
+
+    #[test]
     fn paper_grid_size() {
         // 2 quant types x 5 integer widths x 10 fractional widths
         assert_eq!(paper_grid().len(), 100);
+    }
+
+    /// The tentpole's search acceptance bar: on a synthetic zoo model,
+    /// the found plan fits the VU13P with strictly fewer DSPs+FFs than
+    /// the uniform design at the same `auc_ratio >= 0.99` floor.
+    #[test]
+    fn bit_shave_search_beats_uniform_resources_at_iso_auc() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 31);
+        // margin-labeled eval: auc_float = 1 by construction, so the
+        // ratio floor measures pure quantization damage
+        let eval = EvalSet::synthetic(&cfg, &w, 24, 7);
+        let uniform = QuantConfig::new(6, 12); // width 18: above the DSP port
+        let r = bit_shave_search(&cfg, &w, &eval, uniform, 0.99, 2, ReuseFactor(1));
+        assert!(
+            r.plan_score.auc_ratio >= 0.99,
+            "found plan violates the floor: {}",
+            r.plan_score.auc_ratio
+        );
+        assert!(r.plan_resources.fits(&VU13P));
+        assert!(r.bits_shaved > 0, "search must shave at least one site");
+        assert!(
+            r.plan_resources.dsp + r.plan_resources.ff
+                < r.uniform_resources.dsp + r.uniform_resources.ff,
+            "plan {:?} not cheaper than uniform {:?}",
+            r.plan_resources,
+            r.uniform_resources
+        );
+        assert!(r.points_scored >= 2);
+    }
+
+    #[test]
+    fn bit_shave_search_respects_min_frac() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 32);
+        let eval = EvalSet::synthetic(&cfg, &w, 8, 9);
+        let uniform = QuantConfig::new(6, 6);
+        // floor 0 lets every shave through: all sites must stop at
+        // min_frac, never below
+        let r = bit_shave_search(&cfg, &w, &eval, uniform, 0.0, 4, ReuseFactor(1));
+        for site in r.plan.site_names() {
+            let q = r.plan.get(&site).unwrap();
+            if cfg.use_layernorm || !(site.ends_with(".ln1") || site.ends_with(".ln2")) {
+                assert_eq!(q.data.frac(), 4, "{site} at {:?}", q.data);
+            }
+        }
     }
 }
