@@ -1,7 +1,8 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_JSON trajectories (advisory perf report for CI).
+"""Diff two BENCH_JSON trajectories (perf report for CI).
 
 Usage: bench_diff.py PREV.json CURR.json [--key throughput_eps]
+                     [--fail-on-regression PCT]
 
 Each file holds one JSON object per line with a "bench" name plus numeric
 fields (see rust/benches/harness.rs::json_line).  Lines are joined on the
@@ -10,12 +11,20 @@ relative change is printed, with the batch-native serving sweep
 (`e2e_serving/batch_sweep/...`) broken out first — that's the trajectory
 the batched-execution work is measured by.
 
-Exit code is always 0: shared-runner perf is noisy, so this report is
-advisory and must never fail the job.
+By default the report is advisory and always exits 0: shared-runner perf
+is noisy.  With `--fail-on-regression PCT` the diff additionally scans
+every *latency-keyed* metric shared by both runs — fields ending in
+`_ns` or `_cycles`, or containing `latency` — and exits nonzero if any
+grew by more than PCT percent.  Latency keys are where lower is strictly
+better (wall-clock percentiles, modeled FPGA cycles), so a guarded
+increase is a real regression rather than a rebalanced trade-off;
+throughput-style keys stay advisory either way.
 """
 
 import json
 import sys
+
+LATENCY_SUFFIXES = ("_ns", "_cycles")
 
 
 def load(path):
@@ -41,7 +50,29 @@ def load(path):
 
 def metric(rec, key):
     v = rec.get(key)
-    return v if isinstance(v, (int, float)) else None
+    return v if isinstance(v, (int, float)) and not isinstance(v, bool) else None
+
+
+def is_latency_key(key):
+    return key.endswith(LATENCY_SUFFIXES) or "latency" in key
+
+
+def latency_regressions(prev, curr, shared, threshold_pct):
+    """(bench, key, prev, curr, pct) for every latency-keyed metric that
+    grew past the threshold."""
+    rows = []
+    for name in shared:
+        keys = set(prev[name]) & set(curr[name])
+        for key in sorted(keys):
+            if key == "bench" or not is_latency_key(key):
+                continue
+            a, b = metric(prev[name], key), metric(curr[name], key)
+            if a is None or b is None or a <= 0:
+                continue
+            pct = (b - a) / a * 100.0
+            if pct > threshold_pct:
+                rows.append((name, key, a, b, pct))
+    return rows
 
 
 def main(argv):
@@ -56,6 +87,22 @@ def main(argv):
             key = argv[key_at]
         else:
             print("(bench_diff: --key given without a value; using throughput_eps)")
+    fail_pct = None
+    if "--fail-on-regression" in argv:
+        at = argv.index("--fail-on-regression") + 1
+        if at < len(argv):
+            try:
+                fail_pct = float(argv[at])
+            except ValueError:
+                print(
+                    f"(bench_diff: --fail-on-regression '{argv[at]}' is not a number; "
+                    "staying advisory)"
+                )
+        else:
+            print(
+                "(bench_diff: --fail-on-regression given without a value; "
+                "staying advisory)"
+            )
     prev, curr = load(prev_path), load(curr_path)
     if not prev and not curr:
         print(f"(bench_diff: nothing to compare — prev={len(prev)} curr={len(curr)} lines)")
@@ -99,7 +146,7 @@ def main(argv):
     report(others, "other benches vs previous run", "mean_ns")
     # added/removed bench keys are lifecycle events, not errors: a rename
     # shows up as one "gone" plus one "new" and must never break the
-    # (always-advisory) diff
+    # (advisory-by-default) diff
     dropped = sorted(set(prev) - set(curr))
     added = sorted(set(curr) - set(prev))
     if dropped:
@@ -112,6 +159,14 @@ def main(argv):
         f"\n(bench_diff summary: {len(shared)} shared, "
         f"{len(added)} new, {len(dropped)} gone)"
     )
+    if fail_pct is not None:
+        regressions = latency_regressions(prev, curr, shared, fail_pct)
+        if regressions:
+            print(f"\n== latency regressions past {fail_pct:g}% (gating) ==")
+            for n, k, a, b, pct in regressions:
+                print(f"  {n:<60} {k}: {a:,.0f} -> {b:,.0f}  (+{pct:.1f}%)")
+            return 1
+        print(f"(no latency-keyed metric regressed past {fail_pct:g}%)")
     return 0
 
 

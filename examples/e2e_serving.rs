@@ -23,7 +23,9 @@ use hls4ml_transformer::coordinator::{
     BackendKind, BatchPolicy, PipelineConfig, ServerConfig, TriggerServer,
 };
 use hls4ml_transformer::experiments::{artifacts_ready, load_checkpoints};
-use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::hls::{
+    FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor,
+};
 use hls4ml_transformer::models::zoo;
 use std::time::Duration;
 
@@ -79,7 +81,8 @@ fn main() -> Result<()> {
     for z in zoo() {
         let weights = load_checkpoints(&dir, &z.config)?.0;
         let t = FixedTransformer::new(z.config.clone(), &weights, QuantConfig::new(6, 8));
-        let rep = t.synthesize(ReuseFactor(1));
+        let rep =
+            t.synthesize(&ParallelismPlan::uniform(z.config.num_blocks, ReuseFactor(1)));
         println!(
             "  {:7} R1: latency {:.3} us, interval {} cyc @ {:.3} ns",
             z.config.name, rep.latency_us, rep.interval_cycles, rep.clk_ns

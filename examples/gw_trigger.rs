@@ -12,7 +12,9 @@ use hls4ml_transformer::coordinator::{
     BackendKind, BatchPolicy, PipelineConfig, ServerConfig, TriggerServer, WeightsSource,
 };
 use hls4ml_transformer::experiments::{artifacts_ready, load_checkpoints};
-use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::hls::{
+    FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor,
+};
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo_model;
 use std::time::Duration;
@@ -56,7 +58,8 @@ fn main() -> Result<()> {
     let t = FixedTransformer::new(zoo.config.clone(), &weights, QuantConfig::new(6, 8));
     println!("\nmodeled FPGA deployment of this pipeline (paper Table IV):");
     for r in [1u32, 2, 4] {
-        let rep = t.synthesize(ReuseFactor(r));
+        let rep =
+            t.synthesize(&ParallelismPlan::uniform(zoo.config.num_blocks, ReuseFactor(r)));
         println!(
             "  R{r}: latency {:.3} us, sustained {:.0} windows/s/FPGA (II {} cyc @ {:.3} ns)",
             rep.latency_us,

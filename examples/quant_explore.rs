@@ -10,7 +10,9 @@ use hls4ml_transformer::artifacts_dir;
 use hls4ml_transformer::cli::Args;
 use hls4ml_transformer::experiments::{artifacts_ready, load_checkpoints};
 use hls4ml_transformer::hls::resources::VU13P;
-use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::hls::{
+    FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor,
+};
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo_model;
 use hls4ml_transformer::quant::{score_point, EvalSet, SweepPoint};
@@ -44,7 +46,7 @@ fn main() -> Result<()> {
         for r in [1u32, 2, 4] {
             let quant = QuantConfig::new(6, frac);
             let t = FixedTransformer::new(cfg.clone(), &weights, quant);
-            let rep = t.synthesize(ReuseFactor(r));
+            let rep = t.synthesize(&ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(r)));
             let u = rep.total.utilization(&VU13P);
             let (ratio, err) = match &eval {
                 Some(ev) => {

@@ -11,7 +11,9 @@ use anyhow::Result;
 use hls4ml_transformer::artifacts_dir;
 use hls4ml_transformer::data::{generator_for, EventGenerator};
 use hls4ml_transformer::experiments::artifacts_ready;
-use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::hls::{
+    FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor,
+};
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::{zoo_model, NnwFile, Weights};
 use hls4ml_transformer::nn::FloatTransformer;
@@ -60,7 +62,8 @@ fn main() -> Result<()> {
     }
 
     // 4. "synthesize" the design point the paper reports (Table II, R1)
-    let report = fixed.synthesize(ReuseFactor(1));
+    let report =
+        fixed.synthesize(&ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(1)));
     println!("\n{report}");
     println!(
         "paper Table II R1: clk 7.423 ns, interval 119, latency 257 cyc = 1.908 us"

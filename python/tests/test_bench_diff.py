@@ -1,6 +1,9 @@
 """ci/bench_diff.py contract: the advisory perf diff must survive bench
 renames (added/removed keys are reported as "new"/"gone", never an
-error), malformed CLI input and unreadable files, always exiting 0."""
+error), malformed CLI input and unreadable files, always exiting 0 —
+except under --fail-on-regression PCT, where a latency-keyed metric
+(*_ns / *_cycles / *latency*) growing past the threshold exits 1 while
+throughput-style changes stay advisory."""
 
 import importlib.util
 import pathlib
@@ -117,3 +120,95 @@ def test_malformed_json_lines_are_skipped(tmp_path, capsys):
     )
     assert rc == 0
     assert "1 shared" in capsys.readouterr().out
+
+
+def test_latency_regression_past_threshold_fails_with_flag(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", p99_ns=100)],
+        [line("e2e/x", p99_ns=160)],  # +60% > 25%
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "latency regressions past 25%" in out
+    assert "p99_ns" in out
+
+
+def test_latency_regression_is_advisory_without_flag(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", p99_ns=100)],
+        [line("e2e/x", p99_ns=400)],
+    )
+    assert rc == 0
+    assert "latency regressions" not in capsys.readouterr().out
+
+
+def test_regression_under_threshold_passes(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", mean_ns=100), line("fpga", latency_cycles=257)],
+        [line("e2e/x", mean_ns=110), line("fpga", latency_cycles=260)],  # +10%, +1.2%
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "no latency-keyed metric regressed past 25%" in out
+
+
+def test_modeled_latency_cycles_are_guarded(tmp_path, capsys):
+    # the reuse-plan sweep's schedule-derived cycles are latency-keyed
+    rc = run(
+        tmp_path,
+        [line("e2e_serving/reuse_plan_sweep/engine/uniform_r1", latency_cycles=257)],
+        [line("e2e_serving/reuse_plan_sweep/engine/uniform_r1", latency_cycles=600)],
+        extra=("--fail-on-regression", "10"),
+    )
+    assert rc == 1
+    assert "latency_cycles" in capsys.readouterr().out
+
+
+def test_throughput_drop_does_not_trip_the_latency_gate(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", throughput_eps=1000, dsp=100)],
+        [line("e2e/x", throughput_eps=200, dsp=500)],  # worse, but not latency-keyed
+        extra=("--fail-on-regression", "10"),
+    )
+    assert rc == 0
+    assert "no latency-keyed metric regressed" in capsys.readouterr().out
+
+
+def test_latency_improvement_passes_the_gate(tmp_path):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", p99_ns=400)],
+        [line("e2e/x", p99_ns=100)],
+        extra=("--fail-on-regression", "10"),
+    )
+    assert rc == 0
+
+
+def test_fail_on_regression_without_value_stays_advisory(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", p99_ns=100)],
+        [line("e2e/x", p99_ns=900)],
+        extra=("--fail-on-regression",),
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "without a value" in out
+
+
+def test_fail_on_regression_with_garbage_value_stays_advisory(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", p99_ns=100)],
+        [line("e2e/x", p99_ns=900)],
+        extra=("--fail-on-regression", "lots"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "is not a number" in out

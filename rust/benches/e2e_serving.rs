@@ -13,6 +13,10 @@ use hls4ml_transformer::coordinator::{
     BackendKind, BatchPolicy, PipelineConfig, ServerConfig, TriggerServer, WeightsSource,
 };
 use hls4ml_transformer::experiments::artifacts_ready;
+use hls4ml_transformer::hls::{FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor};
+use hls4ml_transformer::models::weights::synthetic_weights;
+use hls4ml_transformer::models::zoo::zoo_model;
+use hls4ml_transformer::quant::{pareto_explore, EvalSet, ParetoConfig};
 
 fn run(model: &'static str, backend: BackendKind, batch: usize, events: u64) {
     let have_artifacts = artifacts_ready(&artifacts_dir(), model);
@@ -182,6 +186,61 @@ fn replica_sweep() {
     }
 }
 
+/// Reuse-plan sweep: the *modeled* FPGA design point (latency / interval
+/// / resources from the schedule-derived `synthesize`) for the engine
+/// model under uniform reuse R ∈ {1,2,4,8} plus the Pareto-found mixed
+/// plan.  Each row is one `BENCH_JSON` line
+/// (`e2e_serving/reuse_plan_sweep/...`), so the per-site-parallelism
+/// trajectory is archived and diffed by CI alongside the serving
+/// throughput numbers — `latency_cycles` here is exactly the quantity
+/// `ci/bench_diff.py --fail-on-regression` guards.
+fn reuse_plan_sweep() {
+    harness::section("reuse-plan sweep: engine modeled design, uniform R 1/2/4/8 + pareto mix");
+    let m = zoo_model("engine").expect("zoo model");
+    let w = synthetic_weights(&m.config, 7);
+    let quant = QuantConfig::new(6, 8);
+    let t = FixedTransformer::new(m.config.clone(), &w, quant);
+    let emit = |tag: &str, rep: &hls4ml_transformer::hls::SynthesisReport| {
+        println!(
+            "  {tag:<12} lat {:>5} cyc  II {:>4} cyc  {:>7.3} us  DSP {:>6} FF {:>8}",
+            rep.latency_cycles,
+            rep.interval_cycles,
+            rep.latency_us,
+            rep.total.dsp,
+            rep.total.ff,
+        );
+        harness::json_line(
+            &format!("e2e_serving/reuse_plan_sweep/engine/{tag}"),
+            &[
+                ("latency_cycles", rep.latency_cycles as f64),
+                ("interval_cycles", rep.interval_cycles as f64),
+                ("latency_us", rep.latency_us),
+                ("dsp", rep.total.dsp as f64),
+                ("ff", rep.total.ff as f64),
+                ("bram18", rep.total.bram18 as f64),
+            ],
+        );
+    };
+    for r in [1u32, 2, 4, 8] {
+        let par = ParallelismPlan::uniform(m.config.num_blocks, ReuseFactor(r));
+        emit(&format!("uniform_r{r}"), &t.synthesize(&par));
+    }
+    // the joint explorer's dominating mixed plan (deterministic greedy
+    // phase; tiny eval set — reuse moves never re-score it anyway)
+    let eval = EvalSet::synthetic(&m.config, &w, 12, 11);
+    let pcfg = ParetoConfig { anneal_iters: 16, ..ParetoConfig::default() };
+    let res = pareto_explore(&m.config, &w, &eval, quant, &pcfg);
+    match res.mixed_dominator() {
+        Some(dom) => {
+            let rep = FixedTransformer::with_plan(m.config.clone(), &w, dom.precision.clone())
+                .synthesize(&dom.parallelism);
+            emit("pareto_mixed", &rep);
+            println!("    (mixed plan: {})", dom.parallelism.summary());
+        }
+        None => println!("  (no mixed-reuse dominator found this run)"),
+    }
+}
+
 fn main() {
     harness::section("E6: end-to-end trigger serving (throughput / latency)");
     println!("(sources run at max rate; latency includes queueing + batching)");
@@ -198,6 +257,8 @@ fn main() {
     batch_sweep();
 
     replica_sweep();
+
+    reuse_plan_sweep();
 
     harness::section("multi-model concurrent serving (all three pipelines)");
     let cfg = ServerConfig {

@@ -7,7 +7,9 @@ mod harness;
 use hls4ml_transformer::artifacts_dir;
 use hls4ml_transformer::experiments::{artifacts_ready, load_checkpoints, resource_figures};
 use hls4ml_transformer::hls::resources::{Resources, VU13P};
-use hls4ml_transformer::hls::{calibrate_plan, FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::hls::{
+    calibrate_plan, FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor,
+};
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::zoo;
 use hls4ml_transformer::nn::tensor::Mat;
@@ -63,8 +65,9 @@ fn main() {
     };
     for m in zoo() {
         let w = synthetic_weights(&m.config, 7);
+        let par1 = ParallelismPlan::uniform(m.config.num_blocks, ReuseFactor(1));
         let uni_total = FixedTransformer::new(m.config.clone(), &w, uniform)
-            .synthesize(ReuseFactor(1))
+            .synthesize(&par1)
             .total;
         emit(&m.config.name, "uniform", &uni_total);
         // calibrated plan: per-site integer bits from profiled ranges
@@ -80,7 +83,7 @@ fn main() {
             .collect();
         let cal = calibrate_plan(&m.config, &w, &events, uniform.data.frac());
         let cal_total = FixedTransformer::with_plan(m.config.clone(), &w, cal)
-            .synthesize(ReuseFactor(1))
+            .synthesize(&par1)
             .total;
         emit(&m.config.name, "calibrated", &cal_total);
         println!(
@@ -94,8 +97,9 @@ fn main() {
         let m = &zoo()[0];
         let w = synthetic_weights(&m.config, 7);
         let eval = EvalSet::synthetic(&m.config, &w, 16, 11);
+        let par1 = ParallelismPlan::uniform(m.config.num_blocks, ReuseFactor(1));
         let res = bit_shave_search(
-            &m.config, &w, &eval, uniform, 0.99, 2, ReuseFactor(1),
+            &m.config, &w, &eval, uniform, 0.99, 2, &par1,
         );
         emit(&m.config.name, "bit_shaved", &res.plan_resources);
         harness::json_line(

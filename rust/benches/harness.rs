@@ -13,7 +13,6 @@
 
 #![allow(dead_code)]
 
-use std::io::Write;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.
@@ -100,50 +99,11 @@ pub fn bench_with_target<F: FnMut()>(
 
 /// Append one machine-readable JSON line (`{"bench":...,"k":v,...}`) to
 /// the file named by `BENCH_JSON`, if set.  No-op otherwise, so human
-/// runs stay clean.  Non-finite values serialize as `null` to keep the
-/// output strictly JSON.
+/// runs stay clean.  Delegates to the library's shared writer
+/// ([`hls4ml_transformer::benchjson::emit`]) so the benches and the CLI
+/// (`repro pareto`) land in the same perf-trajectory format.
 pub fn json_line(bench: &str, fields: &[(&str, f64)]) {
-    let Ok(path) = std::env::var("BENCH_JSON") else { return };
-    if path.is_empty() {
-        return;
-    }
-    let mut line = format!("{{\"bench\":\"{}\"", json_escape(bench));
-    for (k, v) in fields {
-        line.push_str(&format!(",\"{}\":{}", json_escape(k), json_num(*v)));
-    }
-    line.push('}');
-    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
-        Ok(mut f) => {
-            if let Err(e) = writeln!(f, "{line}") {
-                eprintln!("(BENCH_JSON write failed: {e})");
-            }
-        }
-        Err(e) => eprintln!("(BENCH_JSON open '{path}' failed: {e})"),
-    }
-}
-
-fn json_num(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v}")
-    } else {
-        "null".to_string()
-    }
-}
-
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
+    hls4ml_transformer::benchjson::emit(bench, fields);
 }
 
 pub fn format_stats(s: &BenchStats) -> String {

@@ -5,7 +5,7 @@ mod harness;
 
 use hls4ml_transformer::artifacts_dir;
 use hls4ml_transformer::experiments::{artifacts_ready, latency_tables, load_checkpoints};
-use hls4ml_transformer::hls::{FixedTransformer, QuantConfig, ReuseFactor};
+use hls4ml_transformer::hls::{FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor};
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::zoo;
 
@@ -35,8 +35,9 @@ fn main() {
     for m in zoo() {
         let w = synthetic_weights(&m.config, 2);
         let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 8));
+        let par = ParallelismPlan::uniform(m.config.num_blocks, ReuseFactor(2));
         harness::bench(&format!("synthesize {}", m.config.name), || {
-            harness::black_box(t.synthesize(ReuseFactor(2)));
+            harness::black_box(t.synthesize(&par));
         });
     }
 }

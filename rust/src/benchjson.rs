@@ -1,0 +1,106 @@
+//! Machine-readable benchmark/metric output shared by the bench harness
+//! and the CLI: when the `BENCH_JSON` env var names a file, [`emit`]
+//! appends one JSON line (`{"bench":...,"k":v,...}`) per call.  CI runs
+//! archive these as `BENCH_*.json` artifacts and diff them across
+//! commits via `ci/bench_diff.py`; `repro pareto` uses the same channel
+//! for its frontier, so explorer output lands in the same perf
+//! trajectory as the benches.
+
+use std::io::Write;
+
+/// Append one JSON line to the `BENCH_JSON` file, if the env var is set
+/// and non-empty.  No-op otherwise, so human runs stay clean.
+/// Non-finite values serialize as `null` to keep the output strictly
+/// JSON.
+pub fn emit(bench: &str, fields: &[(&str, f64)]) {
+    let Ok(path) = std::env::var("BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    emit_to(&path, bench, fields);
+}
+
+/// [`emit`] with an explicit target path — the testable core (tests must
+/// not mutate the process-global env var: the default cargo-test harness
+/// runs threads in parallel and concurrent `setenv`/`getenv` is UB on
+/// glibc).
+pub fn emit_to(path: &str, bench: &str, fields: &[(&str, f64)]) {
+    let mut line = format!("{{\"bench\":\"{}\"", escape(bench));
+    for (k, v) in fields {
+        line.push_str(&format!(",\"{}\":{}", escape(k), num(*v)));
+    }
+    line.push('}');
+    match std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        Ok(mut f) => {
+            if let Err(e) = writeln!(f, "{line}") {
+                eprintln!("(BENCH_JSON write failed: {e})");
+            }
+        }
+        Err(e) => eprintln!("(BENCH_JSON open '{path}' failed: {e})"),
+    }
+}
+
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_covers_json_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("plain/name_1"), "plain/name_1");
+    }
+
+    #[test]
+    fn num_serializes_nonfinite_as_null() {
+        assert_eq!(num(1.5), "1.5");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn emit_to_appends_one_line_per_call() {
+        // exercised through the explicit-path core — no env-var mutation
+        // (parallel test threads + setenv is UB; see emit_to docs)
+        let path = std::env::temp_dir().join(format!(
+            "bench_json_test_{}.jsonl",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap();
+        emit_to(path_s, "pareto/engine/point0", &[("latency_cycles", 257.0), ("nan", f64::NAN)]);
+        emit_to(path_s, "pareto/engine/point1", &[("latency_cycles", 300.0)]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            "{\"bench\":\"pareto/engine/point0\",\"latency_cycles\":257,\"nan\":null}"
+        );
+        assert!(lines[1].contains("point1"));
+    }
+}

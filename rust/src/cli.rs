@@ -150,6 +150,38 @@ mod tests {
     }
 
     #[test]
+    fn reuse_plan_flag_parses_for_synth_and_serve() {
+        // the per-site parallelism plan rides this parser next to the
+        // precision plan; both flag forms must yield the path
+        let a = parse("synth --model engine --reuse 2 --reuse-plan plans/engine.reuse");
+        assert_eq!(a.get("reuse-plan"), Some("plans/engine.reuse"));
+        assert_eq!(a.get_parse("reuse", 1u32).unwrap(), 2);
+        let b = parse("serve --backend hls --models engine --reuse-plan=mixed.reuse");
+        assert_eq!(b.get("reuse-plan"), Some("mixed.reuse"));
+        // absent flag stays absent (the uniform design point)
+        assert_eq!(parse("synth --model engine").get("reuse-plan"), None);
+    }
+
+    #[test]
+    fn pareto_flags_parse() {
+        let a = parse(
+            "pareto --model gw --floor 0.995 --iters 128 --reuse-choices 1,2,4 --seed 9 \
+             --save-plan front.reuse",
+        );
+        assert_eq!(a.command, "pareto");
+        assert_eq!(a.get_parse("iters", 64usize).unwrap(), 128);
+        assert_eq!(a.get("reuse-choices"), Some("1,2,4"));
+        assert_eq!(a.get_parse("seed", 0u64).unwrap(), 9);
+        assert_eq!(a.get("save-plan"), Some("front.reuse"));
+        assert!(a
+            .expect_only(&[
+                "model", "int", "frac", "floor", "min-frac", "events", "iters", "seed",
+                "reuse-choices", "save-plan",
+            ])
+            .is_ok());
+    }
+
+    #[test]
     fn duplicate_flag_rejected() {
         assert!(Args::parse(["--a", "1", "--a", "2"].map(String::from)).is_err());
     }

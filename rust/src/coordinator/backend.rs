@@ -13,7 +13,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::hls::{FixedTransformer, PrecisionPlan};
+use crate::hls::{FixedTransformer, ParallelismPlan, PrecisionPlan, SynthesisReport};
 use crate::models::config::{FinalActivation, ModelConfig};
 use crate::models::weights::Weights;
 use crate::nn::tensor::Mat;
@@ -43,7 +43,13 @@ impl std::str::FromStr for BackendKind {
 /// A ready-to-serve inference engine for one model.
 pub enum Backend {
     Float(FloatTransformer),
-    Hls(FixedTransformer),
+    Hls {
+        engine: FixedTransformer,
+        /// The modeled FPGA design point's per-site reuse map — pure
+        /// schedule metadata (simulation output never depends on it);
+        /// [`Backend::modeled_design`] synthesizes under it.
+        par: ParallelismPlan,
+    },
     /// batch-1 and batch-N executables (router picks by batch fill).
     Pjrt { cfg: ModelConfig, b1: Executable, bn: Executable },
 }
@@ -52,15 +58,18 @@ impl Backend {
     /// Build a backend for `cfg`.
     ///
     /// `runtime` is required for [`BackendKind::Pjrt`] and ignored
-    /// otherwise; `plan` configures the HLS design point — a
+    /// otherwise.  `plan` configures the HLS quantization — a
     /// [`PrecisionPlan::uniform`] reproduces the legacy single
     /// `QuantConfig` engine bitwise, a heterogeneous plan builds the
-    /// mixed-precision engine.
+    /// mixed-precision engine.  `par` configures the modeled FPGA
+    /// schedule the HLS design point reports (it cannot change a
+    /// probability).
     pub fn build(
         kind: BackendKind,
         cfg: &ModelConfig,
         weights: &Weights,
         plan: &PrecisionPlan,
+        par: &ParallelismPlan,
         runtime: Option<&Runtime>,
         artifacts: &std::path::Path,
     ) -> Result<Self> {
@@ -71,13 +80,21 @@ impl Backend {
             cfg.name,
             cfg.num_blocks
         );
+        anyhow::ensure!(
+            par.num_blocks() == cfg.num_blocks,
+            "parallelism plan has {} blocks, model '{}' has {}",
+            par.num_blocks(),
+            cfg.name,
+            cfg.num_blocks
+        );
         Ok(match kind {
             BackendKind::Float => {
                 Backend::Float(FloatTransformer::new(cfg.clone(), weights.clone()))
             }
-            BackendKind::Hls => {
-                Backend::Hls(FixedTransformer::with_plan(cfg.clone(), weights, plan.clone()))
-            }
+            BackendKind::Hls => Backend::Hls {
+                engine: FixedTransformer::with_plan(cfg.clone(), weights, plan.clone()),
+                par: par.clone(),
+            },
             BackendKind::Pjrt => {
                 let rt = runtime.context("PJRT backend needs a Runtime")?;
                 let load = |batch: usize| {
@@ -95,8 +112,18 @@ impl Backend {
     pub fn kind(&self) -> BackendKind {
         match self {
             Backend::Float(_) => BackendKind::Float,
-            Backend::Hls(_) => BackendKind::Hls,
+            Backend::Hls { .. } => BackendKind::Hls,
             Backend::Pjrt { .. } => BackendKind::Pjrt,
+        }
+    }
+
+    /// The modeled FPGA design point of an HLS backend (its precision ×
+    /// parallelism plans synthesized); `None` for engines that model no
+    /// hardware.
+    pub fn modeled_design(&self) -> Option<SynthesisReport> {
+        match self {
+            Backend::Hls { engine, par } => Some(engine.synthesize(par)),
+            _ => None,
         }
     }
 
@@ -117,7 +144,7 @@ impl Backend {
             Backend::Float(t) => {
                 Ok(t.forward_batch(batch).iter().map(|l| t.probs(l)).collect())
             }
-            Backend::Hls(t) => Ok(t.forward_batch(batch)),
+            Backend::Hls { engine, .. } => Ok(engine.forward_batch(batch)),
             Backend::Pjrt { cfg, b1, bn } => {
                 let logits = if batch.len() == 1 {
                     b1.run_events(batch)?
@@ -195,6 +222,10 @@ mod tests {
         PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(i, f))
     }
 
+    fn upar(cfg: &ModelConfig) -> ParallelismPlan {
+        ParallelismPlan::uniform(cfg.num_blocks, crate::hls::ReuseFactor(1))
+    }
+
     fn events(cfg: &ModelConfig, n: usize) -> Vec<Mat> {
         let mut g = Gen::new(9);
         (0..n)
@@ -213,9 +244,9 @@ mod tests {
         let cfg = zoo_model("engine").unwrap().config;
         let w = synthetic_weights(&cfg, 13);
         let f = Backend::build(BackendKind::Float, &cfg, &w, &uniform(&cfg, 8, 12),
-                               None, std::path::Path::new(".")).unwrap();
+                               &upar(&cfg), None, std::path::Path::new(".")).unwrap();
         let h = Backend::build(BackendKind::Hls, &cfg, &w, &uniform(&cfg, 8, 12),
-                               None, std::path::Path::new(".")).unwrap();
+                               &upar(&cfg), None, std::path::Path::new(".")).unwrap();
         let evs = events(&cfg, 4);
         let refs: Vec<&Mat> = evs.iter().collect();
         let pf = f.infer(&refs).unwrap();
@@ -236,7 +267,7 @@ mod tests {
         let w = synthetic_weights(&cfg, 13);
         for kind in [BackendKind::Float, BackendKind::Hls] {
             let b = Backend::build(kind, &cfg, &w, &uniform(&cfg, 8, 12),
-                                   None, std::path::Path::new(".")).unwrap();
+                                   &upar(&cfg), None, std::path::Path::new(".")).unwrap();
             assert!(b.infer(&[]).unwrap().is_empty(), "{kind:?}");
         }
     }
@@ -250,7 +281,7 @@ mod tests {
         let w = synthetic_weights(&cfg, 3);
         for kind in [BackendKind::Float, BackendKind::Hls] {
             let b = Backend::build(kind, &cfg, &w, &uniform(&cfg, 8, 12),
-                                   None, std::path::Path::new(".")).unwrap();
+                                   &upar(&cfg), None, std::path::Path::new(".")).unwrap();
             let evs = events(&cfg, 5);
             let refs: Vec<&Mat> = evs.iter().collect();
             let batched = b.infer(&refs).unwrap();
@@ -289,7 +320,7 @@ mod tests {
         let cfg = zoo_model("engine").unwrap().config;
         let w = synthetic_weights(&cfg, 13);
         let r = Backend::build(BackendKind::Pjrt, &cfg, &w, &uniform(&cfg, 8, 12),
-                               None, std::path::Path::new("."));
+                               &upar(&cfg), None, std::path::Path::new("."));
         assert!(r.is_err());
     }
 
@@ -298,7 +329,7 @@ mod tests {
         let cfg = zoo_model("engine").unwrap().config;
         let w = synthetic_weights(&cfg, 14);
         let b = Backend::build(BackendKind::Hls, &cfg, &w, &uniform(&cfg, 6, 10),
-                               None, std::path::Path::new(".")).unwrap();
+                               &upar(&cfg), None, std::path::Path::new(".")).unwrap();
         let t = FixedTransformer::new(cfg.clone(), &w, QuantConfig::new(6, 10));
         let evs = events(&cfg, 3);
         let refs: Vec<&Mat> = evs.iter().collect();
@@ -315,7 +346,7 @@ mod tests {
         let mut plan = uniform(&cfg, 6, 12);
         plan.set_data("block0.ffn1", crate::fixed::FixedSpec::new(8, 4)).unwrap();
         let b = Backend::build(BackendKind::Hls, &cfg, &w, &plan,
-                               None, std::path::Path::new(".")).unwrap();
+                               &upar(&cfg), None, std::path::Path::new(".")).unwrap();
         let t = FixedTransformer::with_plan(cfg.clone(), &w, plan);
         let evs = events(&cfg, 2);
         let refs: Vec<&Mat> = evs.iter().collect();
@@ -331,7 +362,7 @@ mod tests {
         let w = synthetic_weights(&cfg, 16);
         let plan = PrecisionPlan::uniform(cfg.num_blocks + 2, QuantConfig::new(6, 10));
         let r = Backend::build(BackendKind::Hls, &cfg, &w, &plan,
-                               None, std::path::Path::new("."));
+                               &upar(&cfg), None, std::path::Path::new("."));
         assert!(r.is_err());
         assert!(format!("{:#}", r.unwrap_err()).contains("blocks"));
     }
@@ -342,5 +373,33 @@ mod tests {
         assert_eq!(BackendKind::from_str("hls").unwrap(), BackendKind::Hls);
         assert_eq!(BackendKind::from_str("pjrt").unwrap(), BackendKind::Pjrt);
         assert!(BackendKind::from_str("gpu").is_err());
+    }
+
+    #[test]
+    fn parallelism_plan_with_wrong_block_count_is_clean_error() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 17);
+        let par = ParallelismPlan::uniform(cfg.num_blocks + 1, crate::hls::ReuseFactor(2));
+        let r = Backend::build(BackendKind::Hls, &cfg, &w, &uniform(&cfg, 6, 10),
+                               &par, None, std::path::Path::new("."));
+        assert!(r.is_err());
+        assert!(format!("{:#}", r.unwrap_err()).contains("parallelism plan"));
+    }
+
+    #[test]
+    fn hls_backend_reports_its_modeled_design_under_the_reuse_plan() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 18);
+        let mut par = upar(&cfg);
+        par.set("pool", crate::hls::ReuseFactor(2)).unwrap();
+        let b = Backend::build(BackendKind::Hls, &cfg, &w, &uniform(&cfg, 6, 10),
+                               &par, None, std::path::Path::new(".")).unwrap();
+        let rep = b.modeled_design().expect("hls models hardware");
+        assert_eq!(rep.parallelism, par);
+        assert!(rep.parallelism.is_uniform().is_none());
+        // float backends model no FPGA
+        let f = Backend::build(BackendKind::Float, &cfg, &w, &uniform(&cfg, 6, 10),
+                               &upar(&cfg), None, std::path::Path::new(".")).unwrap();
+        assert!(f.modeled_design().is_none());
     }
 }

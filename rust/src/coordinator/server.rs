@@ -25,7 +25,7 @@ use super::router::{Router, Submit};
 use super::spsc;
 use super::stats::PipelineStats;
 use crate::data::generator_for;
-use crate::hls::{PrecisionPlan, QuantConfig};
+use crate::hls::{ParallelismPlan, PrecisionPlan, QuantConfig, ReuseFactor, SynthesisReport};
 use crate::models::weights::{synthetic_weights, Weights};
 use crate::models::zoo::zoo_model;
 use crate::models::NnwFile;
@@ -51,6 +51,12 @@ pub struct PipelineConfig {
     /// text): applied over a uniform `quant` base when the pipeline's
     /// engine is built.  `None` serves the uniform design point.
     pub precision_plan: Option<String>,
+    /// Uniform base reuse factor of the modeled FPGA design point.
+    pub reuse: ReuseFactor,
+    /// Serialized parallelism-plan overrides (the `--reuse-plan` file
+    /// text): applied over a uniform `reuse` base, resolved before any
+    /// pool spawns.  Schedule metadata only — scores never change.
+    pub reuse_plan: Option<String>,
     pub batch: BatchPolicy,
     /// Capacity of each shard's ring (not the pool total).
     pub ring_capacity: usize,
@@ -67,6 +73,8 @@ impl PipelineConfig {
             backend,
             quant: QuantConfig::new(6, 10),
             precision_plan: None,
+            reuse: ReuseFactor(1),
+            reuse_plan: None,
             batch: BatchPolicy::default(),
             ring_capacity: 1024,
             weights: WeightsSource::Artifacts,
@@ -96,6 +104,10 @@ pub struct ServerConfig {
 #[derive(Debug)]
 pub struct ServerReport {
     pub per_model: HashMap<&'static str, PipelineStats>,
+    /// Modeled FPGA design point per HLS pipeline (precision ×
+    /// parallelism plans synthesized at resolution time) — what the
+    /// served engine *would* cost and achieve on the part.
+    pub modeled_designs: HashMap<&'static str, SynthesisReport>,
     pub wall: Duration,
 }
 
@@ -121,6 +133,20 @@ impl std::fmt::Display for ServerReport {
         let mut models: Vec<_> = self.per_model.iter().collect();
         models.sort_by_key(|(m, _)| **m);
         for (m, s) in models {
+            if let Some(rep) = self.modeled_designs.get(m) {
+                writeln!(
+                    f,
+                    "  {m:8} modeled FPGA: {} {} | clk {:.3} ns | II {} cyc | \
+                     latency {:.3} us | DSP {} FF {}",
+                    rep.plan.summary(),
+                    rep.parallelism.summary(),
+                    rep.clk_ns,
+                    rep.interval_cycles,
+                    rep.latency_us,
+                    rep.total.dsp,
+                    rep.total.ff,
+                )?;
+            }
             writeln!(
                 f,
                 "  {m:8} accepted={} dropped={} batches={} fill={:.2} {}{}",
@@ -182,21 +208,39 @@ impl TriggerServer {
         // resolve every pipeline's model + weights BEFORE spawning any
         // thread: a failure past the first spawn would leak an entire
         // pool (workers blocked on rings nobody ever closes)
+        let mut modeled_designs: HashMap<&'static str, SynthesisReport> = HashMap::new();
         let mut resolved = Vec::with_capacity(cfg.pipelines.len());
         for pc in &cfg.pipelines {
             let zoo = zoo_model(pc.model)
                 .with_context(|| format!("unknown zoo model '{}'", pc.model))?;
             let mcfg = zoo.config.clone();
             let weights = Arc::new(load_weights(&cfg.artifacts_dir, pc, &mcfg)?);
-            // resolve the precision plan up front too: a malformed plan
-            // must be a clean Err before any pool spawns
+            // resolve both plans up front: a malformed plan must be a
+            // clean Err before any pool spawns
             let mut plan = PrecisionPlan::uniform(mcfg.num_blocks, pc.quant);
             if let Some(text) = &pc.precision_plan {
                 plan.apply_overrides(text)
                     .map_err(anyhow::Error::msg)
                     .with_context(|| format!("precision plan for model '{}'", pc.model))?;
             }
-            resolved.push((pc, mcfg, weights, plan));
+            let mut par = ParallelismPlan::uniform(mcfg.num_blocks, pc.reuse);
+            if let Some(text) = &pc.reuse_plan {
+                par.apply_overrides(text)
+                    .map_err(anyhow::Error::msg)
+                    .with_context(|| format!("reuse plan for model '{}'", pc.model))?;
+            }
+            // the modeled FPGA design point of an HLS pipeline, reported
+            // alongside the serving stats (computed once here, not per
+            // replica)
+            if pc.backend == BackendKind::Hls {
+                let engine = crate::hls::FixedTransformer::with_plan(
+                    mcfg.clone(),
+                    &weights,
+                    plan.clone(),
+                );
+                modeled_designs.insert(pc.model, engine.synthesize(&par));
+            }
+            resolved.push((pc, mcfg, weights, plan, par));
         }
 
         let mut router = Router::new();
@@ -210,7 +254,7 @@ impl TriggerServer {
         let ready = Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
 
         // per-model worker pools
-        for (pc, mcfg, weights, plan) in resolved {
+        for (pc, mcfg, weights, plan, par) in resolved {
             let replicas = pc.replicas.max(1);
             let mut shard_txs = Vec::with_capacity(replicas);
             for shard in 0..replicas {
@@ -220,6 +264,7 @@ impl TriggerServer {
                 let mcfg = mcfg.clone();
                 let weights = weights.clone();
                 let plan = plan.clone();
+                let par = par.clone();
                 let artifacts = cfg.artifacts_dir.clone();
                 let ready_w = ready.clone();
                 workers.push(std::thread::spawn(move || -> Result<(
@@ -242,6 +287,7 @@ impl TriggerServer {
                             &mcfg,
                             &weights,
                             &plan,
+                            &par,
                             runtime.as_ref(),
                             &artifacts,
                         )?;
@@ -357,7 +403,7 @@ impl TriggerServer {
             stats.rebalanced = router.rebalanced(model).unwrap_or(0);
         }
 
-        Ok(ServerReport { per_model, wall: t0.elapsed() })
+        Ok(ServerReport { per_model, modeled_designs, wall: t0.elapsed() })
     }
 }
 
@@ -504,6 +550,50 @@ mod tests {
         let s = &report.per_model["engine"];
         assert_eq!(s.accepted + s.dropped, 30);
         assert!(s.accepted > 0);
+    }
+
+    #[test]
+    fn serve_round_trips_a_serialized_reuse_plan() {
+        // mirror of the precision-plan round trip for the parallelism
+        // dial: feed `--reuse-plan` text through the pipeline config;
+        // the server must come up, score every event (reuse is schedule
+        // metadata, never semantics), and report the modeled design
+        // point under the mixed plan
+        let mut plan = ParallelismPlan::uniform(3, ReuseFactor(1));
+        plan.set("pool", ReuseFactor(2)).unwrap();
+        plan.set("block1.ffn1", ReuseFactor(4)).unwrap();
+        let text = plan.serialize();
+        let mut rt = ParallelismPlan::uniform(3, ReuseFactor(1));
+        rt.apply_overrides(&text).unwrap();
+        assert_eq!(rt, plan);
+        let mut cfg = base_cfg(BackendKind::Hls, 30);
+        cfg.pipelines[0].reuse_plan = Some(text);
+        let report = TriggerServer::run(&cfg).unwrap();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted + s.dropped, 30);
+        assert!(s.accepted > 0);
+        let modeled = report.modeled_designs.get("engine").expect("hls models a design");
+        assert_eq!(modeled.parallelism, plan);
+        let text = format!("{report}");
+        assert!(text.contains("modeled FPGA"), "{text}");
+        assert!(text.contains("Rmixed<1..4>"), "{text}");
+    }
+
+    #[test]
+    fn malformed_reuse_plan_errors_before_spawning() {
+        let mut cfg = base_cfg(BackendKind::Hls, 10);
+        cfg.pipelines[0].reuse_plan = Some("block0.ffn1 R0".into());
+        let err = TriggerServer::run(&cfg);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("block0.ffn1"), "{msg}");
+        assert!(msg.contains("engine"), "{msg}");
+    }
+
+    #[test]
+    fn float_pipeline_reports_no_modeled_design() {
+        let report = TriggerServer::run(&base_cfg(BackendKind::Float, 20)).unwrap();
+        assert!(report.modeled_designs.is_empty());
     }
 
     #[test]

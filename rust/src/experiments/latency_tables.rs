@@ -6,7 +6,9 @@
 //! *trends* (interval & latency grow ~linearly with R, clock shrinks,
 //! engine R1 lands in the ~2 µs regime).
 
-use crate::hls::{FixedTransformer, QuantConfig, ReuseFactor, SynthesisReport};
+use crate::hls::{
+    FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor, SynthesisReport,
+};
 use crate::models::config::ModelConfig;
 use crate::models::weights::Weights;
 
@@ -58,12 +60,16 @@ pub fn paper_quant(model: &str, qat: bool) -> QuantConfig {
     QuantConfig::new(integer, 8)
 }
 
-/// Measured rows for one model (PTQ + QAT x R1,R2,R4).
+/// Measured rows for one model (PTQ + QAT x R1,R2,R4).  The paper's
+/// design points are uniform, so each row synthesizes under a uniform
+/// [`ParallelismPlan`] — the schedule-derived path, golden-tested to
+/// reproduce the retired closed form.
 pub fn measure(cfg: &ModelConfig, weights: &Weights) -> Vec<(PaperRow, SynthesisReport)> {
     let mut out = Vec::new();
     for row in PAPER_ROWS.iter().filter(|r| r.model == cfg.name) {
         let t = FixedTransformer::new(cfg.clone(), weights, paper_quant(&cfg.name, row.qat));
-        let rep = t.synthesize(ReuseFactor(row.reuse));
+        let par = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(row.reuse));
+        let rep = t.synthesize(&par);
         out.push((*row, rep));
     }
     out

@@ -8,7 +8,7 @@
 //!     and decreasing in R,
 //!   * BRAM grows with R (register arrays re-partitioned into BRAM).
 
-use crate::hls::{FixedTransformer, QuantConfig, ReuseFactor, Resources};
+use crate::hls::{FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor, Resources};
 use crate::models::config::ModelConfig;
 use crate::models::weights::Weights;
 
@@ -31,9 +31,10 @@ pub fn sweep(
 ) -> Vec<ResourcePoint> {
     let mut out = Vec::new();
     for &r in reuse {
+        let par = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(r));
         for &f in frac_bits {
             let t = FixedTransformer::new(cfg.clone(), weights, QuantConfig::new(integer_bits, f));
-            let rep = t.synthesize(ReuseFactor(r));
+            let rep = t.synthesize(&par);
             out.push(ResourcePoint { reuse: r, frac_bits: f, resources: rep.total });
         }
     }

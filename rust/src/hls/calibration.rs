@@ -30,6 +30,29 @@ mod growth_tests {
         assert_eq!(reuse_depth_growth(16, ReuseFactor(2)), 3);
         assert_eq!(reuse_depth_growth(16, ReuseFactor(4)), 9);
     }
+
+    #[test]
+    fn interval_multiplier_ii_matches_reuse_form() {
+        for r in [1u64, 2, 3, 4, 8, 16] {
+            assert_eq!(interval_multiplier_ii(r), interval_multiplier(ReuseFactor(r as u32)));
+        }
+        assert_eq!(interval_multiplier_ii(0), 1, "degenerate II clamps to 1");
+    }
+
+    #[test]
+    fn dsp_widening_schedule() {
+        // depth: one cascade register per extra slice; free below the port
+        assert_eq!(dsp_cascade_depth(14), 0);
+        assert_eq!(dsp_cascade_depth(17), 0);
+        assert_eq!(dsp_cascade_depth(18), 1);
+        assert_eq!(dsp_cascade_depth(26), 1);
+        assert_eq!(dsp_cascade_depth(27), 3);
+        // II: full rate through the cascade, halved past the 26-bit port
+        assert_eq!(dsp_ii_widening(17), 1);
+        assert_eq!(dsp_ii_widening(18), 1, "Table III's width-18 rows keep their interval");
+        assert_eq!(dsp_ii_widening(26), 1);
+        assert_eq!(dsp_ii_widening(27), 2);
+    }
 }
 
 /// Flip-flops per (multiply / reuse) per data bit — DSP input/output
@@ -103,8 +126,37 @@ pub fn int_bits_for_range(max_abs: f64) -> u32 {
 
 /// `ceil(log2(2R))` — the interval growth schedule.
 pub fn interval_multiplier(r: ReuseFactor) -> u64 {
-    let x = 2 * r.get() as u64;
+    interval_multiplier_ii(r.get() as u64)
+}
+
+/// [`interval_multiplier`] on a raw per-stage initiation interval — the
+/// per-site schedule composes stage occupancies through this (a stage's
+/// re-arm rate grows with `ceil(log2(2·II))`, the partially-overlapped
+/// reuse-chunk schedule the Tables II-IV ratios pin).
+pub fn interval_multiplier_ii(ii: u64) -> u64 {
+    let x = 2 * ii.max(1);
     64 - (x.next_power_of_two()).leading_zeros() as u64 - 1
+}
+
+/// Extra pipeline-fill cycles a multiplier-bearing stage pays once its
+/// operand width crosses a DSP48E2 port: each extra slice of the
+/// decomposed multiply ([`crate::hls::resources::dsp_per_mult`]) adds
+/// one cascade/partial-product register.  Zero at or below 17 bits, so
+/// every paper design point at `ap_fixed<=17` keeps its calibrated
+/// depth exactly.
+pub fn dsp_cascade_depth(width_bits: u32) -> u64 {
+    crate::hls::resources::dsp_per_mult(width_bits) - 1
+}
+
+/// II-widening factor of the DSP decomposition.  The first decomposition
+/// level (18-26 bits) rides the DSP48 cascade at full rate — it costs
+/// registers ([`dsp_cascade_depth`]), not issue slots; the paper's own
+/// width-18 b-tagging rows (Table III) keep their 2S-shaped interval,
+/// which pins this.  Past the 26-bit port the 4-slice decomposition
+/// combines partial products in fabric and halves the issue rate, so
+/// the stage's II doubles.
+pub fn dsp_ii_widening(width_bits: u32) -> u64 {
+    crate::hls::resources::dsp_per_mult(width_bits).div_ceil(2)
 }
 
 /// Achievable clock period (ns) as a function of reuse factor.  Matches

@@ -106,16 +106,27 @@ pub fn dense_fixed_batch(
     y
 }
 
-/// Pipeline stage of a dense engine streaming `rows` rows.  Reuse both
-/// raises the per-row II and deepens the pipeline (the MAC loop is
-/// serialized into reuse chunks).
-pub fn dense_stage(name: &str, rows: usize, n_in: usize, r: ReuseFactor) -> Stage {
+/// Pipeline stage of a dense engine streaming `rows` rows, at one site's
+/// reuse factor *and* precision.  Reuse raises the per-row II and
+/// deepens the pipeline (the MAC loop is serialized into reuse chunks);
+/// precision widens the schedule once the operand crosses a DSP port —
+/// cascade registers per extra slice ([`cal::dsp_cascade_depth`]) and,
+/// past the 26-bit port, a halved issue rate
+/// ([`cal::dsp_ii_widening`]).
+pub fn dense_stage(
+    name: &str,
+    rows: usize,
+    n_in: usize,
+    r: ReuseFactor,
+    data: FixedSpec,
+) -> Stage {
     Stage::new(
         name,
         adder_tree_depth(n_in as u64)
             + cal::DENSE_DEPTH_EXTRA
-            + cal::reuse_depth_growth(n_in, r),
-        r.get() as u64,
+            + cal::reuse_depth_growth(n_in, r)
+            + cal::dsp_cascade_depth(data.width()),
+        r.get() as u64 * cal::dsp_ii_widening(data.width()),
         rows as u64,
     )
 }
@@ -286,13 +297,29 @@ mod tests {
 
     #[test]
     fn stage_shape() {
-        let s = dense_stage("d", 50, 16, ReuseFactor(2));
+        let narrow = FixedSpec::new(14, 6); // below the DSP port
+        let s = dense_stage("d", 50, 16, ReuseFactor(2), narrow);
         assert_eq!(s.ii, 2);
         assert_eq!(s.rows, 50);
         // base depth + one reuse level of MAC serialization (ceil(16/6) = 3)
         assert_eq!(s.depth, adder_tree_depth(16) + cal::DENSE_DEPTH_EXTRA + 3);
-        let s1 = dense_stage("d", 50, 16, ReuseFactor(1));
+        let s1 = dense_stage("d", 50, 16, ReuseFactor(1), narrow);
         assert_eq!(s1.depth, adder_tree_depth(16) + cal::DENSE_DEPTH_EXTRA);
+    }
+
+    #[test]
+    fn stage_widens_with_precision_past_the_dsp_ports() {
+        let r = ReuseFactor(2);
+        let base = dense_stage("d", 50, 16, r, FixedSpec::new(17, 6));
+        // 18-26 bits: one cascade register of depth, same issue rate
+        let two_slice = dense_stage("d", 50, 16, r, FixedSpec::new(18, 6));
+        assert_eq!(two_slice.depth, base.depth + 1);
+        assert_eq!(two_slice.ii, base.ii, "cascade decomposition keeps the issue rate");
+        // past the 26-bit port: fabric-combined 4-slice decomposition
+        // serializes — II doubles and the fill pays three extra registers
+        let four_slice = dense_stage("d", 50, 16, r, FixedSpec::new(27, 10));
+        assert_eq!(four_slice.depth, base.depth + 3);
+        assert_eq!(four_slice.ii, 2 * base.ii);
     }
 
     #[test]

@@ -64,7 +64,17 @@ pub fn layernorm_fixed_batch(
 
 /// Pipeline stage: the five sub-stages are themselves pipelined, so the
 /// layer streams rows at II = R after a fill depth of ~2 adder trees.
-pub fn layernorm_stage(name: &str, rows: usize, d: usize, r: ReuseFactor) -> Stage {
+/// The stage-3 squares and stage-5 gamma multiplies take one operand
+/// from a held register (the deviation / the ROM's 1/sqrt word), so
+/// wide grids add no cascade fill — but past the 26-bit port the
+/// decomposed multiply still halves the issue rate.
+pub fn layernorm_stage(
+    name: &str,
+    rows: usize,
+    d: usize,
+    r: ReuseFactor,
+    data: FixedSpec,
+) -> Stage {
     // one adder tree of fill: the mean and variance trees overlap in the
     // 5-stage pipeline (stage 3 streams behind stage 1)
     Stage::new(
@@ -72,7 +82,7 @@ pub fn layernorm_stage(name: &str, rows: usize, d: usize, r: ReuseFactor) -> Sta
         cal::LAYERNORM_DEPTH_BASE
             + adder_tree_depth(d as u64)
             + cal::reuse_depth_growth(d, r) / 2,
-        r.get() as u64,
+        r.get() as u64 * cal::dsp_ii_widening(data.width()),
         rows as u64,
     )
 }
@@ -150,9 +160,15 @@ mod tests {
 
     #[test]
     fn stage_depth_grows_with_width() {
-        let a = layernorm_stage("ln", 10, 16, ReuseFactor(1));
-        let b = layernorm_stage("ln", 10, 64, ReuseFactor(1));
+        let spec = FixedSpec::new(16, 6);
+        let a = layernorm_stage("ln", 10, 16, ReuseFactor(1), spec);
+        let b = layernorm_stage("ln", 10, 64, ReuseFactor(1), spec);
         assert!(b.depth > a.depth);
+        // past the 26-bit port the LN multiplies' issue rate halves, but
+        // the register-fed operands keep the fill depth flat
+        let wide = layernorm_stage("ln", 10, 16, ReuseFactor(1), FixedSpec::new(27, 10));
+        assert_eq!(wide.depth, a.depth);
+        assert!(wide.ii > a.ii);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use super::dense::{dense_fixed, dense_fixed_batch, dense_resources, dense_stage};
 use super::fifo::Fifo;
+use super::parallelism::MhaParallelism;
 use super::pipeline::{adder_tree_depth, PipelineModel, Stage};
 use super::precision::{MhaPrecision, QuantConfig, RangeProfile};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
@@ -269,27 +270,45 @@ pub fn mha_fixed_batch_sited(
     (out, stats)
 }
 
-/// The MHA dataflow pipeline (figure 4) as a composed stage.
+/// The MHA dataflow pipeline (figure 4) as a composed stage, with the
+/// stage-1/2 projection+score path at the `qkv` site's reuse/precision
+/// and the stage-3/4 output path at the `out` site's — the two dials a
+/// [`super::ParallelismPlan`] exposes per attention engine.
 ///
 /// Stage 2 cannot start scoring until K is fully resident, and the K/V
 /// registers are single-buffered, so the engine's occupancy per event is
 /// ~2 passes over the sequence — this is what makes the model-level
 /// initiation interval ≈ 2·S·R, matching Tables II-IV's intervals.
-pub fn mha_pipeline(s: usize, d: usize, k: usize, r: ReuseFactor) -> PipelineModel {
+pub fn mha_pipeline(
+    s: usize,
+    d: usize,
+    k: usize,
+    rp: MhaParallelism,
+    mp: &MhaPrecision,
+) -> PipelineModel {
     let mut p = PipelineModel::default();
-    p.push(dense_stage("mha.qkv_proj", s, d, r));
-    let mut score = softmax_stage("mha.score_softmax", s, s, r);
-    score.depth += adder_tree_depth(k as u64) + cal::DENSE_DEPTH_EXTRA; // QK^T tree
+    p.push(dense_stage("mha.qkv_proj", s, d, rp.qkv, mp.qkv.data));
+    // the score stage carries the softmax LUT I/O (its own site) plus the
+    // QK^T MAC tree on the qkv grid: depth adds, II takes the worse of
+    // the two widths' DSP widening
+    let mut score = softmax_stage("mha.score_softmax", s, s, rp.qkv, mp.softmax.data);
+    score.depth += adder_tree_depth(k as u64)
+        + cal::DENSE_DEPTH_EXTRA
+        + cal::dsp_cascade_depth(mp.qkv.data.width()); // QK^T tree
+    score.ii = score
+        .ii
+        .max(rp.qkv.get() as u64 * cal::dsp_ii_widening(mp.qkv.data.width()));
     p.push(score);
     p.push(Stage::new(
         "mha.apply_v",
         adder_tree_depth(s as u64)
             + cal::DENSE_DEPTH_EXTRA
-            + cal::reuse_depth_growth(k, r),
-        r.get() as u64,
+            + cal::reuse_depth_growth(k, rp.out)
+            + cal::dsp_cascade_depth(mp.out.data.width()),
+        rp.out.get() as u64 * cal::dsp_ii_widening(mp.out.data.width()),
         s as u64,
     ));
-    p.push(dense_stage("mha.concat_wo", s, d, r));
+    p.push(dense_stage("mha.concat_wo", s, d, rp.out, mp.out.data));
     p
 }
 
@@ -300,14 +319,15 @@ pub fn mha_pipeline(s: usize, d: usize, k: usize, r: ReuseFactor) -> PipelineMod
 /// (concat/Wo) drain row-by-row concurrently with the stage-2 stream,
 /// so they contribute occupancy, not fill (calibrated against the
 /// depth-dominated b-tagging rows of Table III).
-pub fn mha_stage(s: usize, d: usize, k: usize, r: ReuseFactor) -> Stage {
-    let p = mha_pipeline(s, d, k, r);
-    let df = p.dataflow();
+pub fn mha_stage(s: usize, d: usize, k: usize, rp: MhaParallelism, mp: &MhaPrecision) -> Stage {
+    let p = mha_pipeline(s, d, k, rp, mp);
+    let df = p.dataflow().expect("mha pipeline has stages");
     let fill: u64 = p.stages()[..2].iter().map(|st| st.depth).sum();
     Stage { name: "mha".into(), depth: fill, ii: df.ii, rows: 2 * s as u64 }
 }
 
-/// Resource estimate for the whole MHA layer at one uniform width.
+/// Resource estimate for the whole MHA layer at one uniform width and
+/// one uniform reuse factor.
 pub fn mha_resources(
     s: usize,
     d: usize,
@@ -317,14 +337,25 @@ pub fn mha_resources(
     r: ReuseFactor,
     fifo_stats: Option<MhaFifoStats>,
 ) -> Resources {
-    mha_resources_sited(s, d, heads, k, data, data, data, r, fifo_stats)
+    mha_resources_sited(
+        s,
+        d,
+        heads,
+        k,
+        data,
+        data,
+        data,
+        MhaParallelism::uniform(r),
+        fifo_stats,
+    )
 }
 
-/// Resource estimate with per-site widths: projections / score MACs /
-/// K-V registers / Q FIFO at the `qkv` spec, the softmax engines and
-/// score FIFO at the `softmax` spec, apply-V / Wo / output FIFO at the
-/// `out` spec.  With all three equal this reproduces [`mha_resources`]
-/// exactly.
+/// Resource estimate with per-site widths *and* per-path reuse:
+/// projections / score MACs / K-V registers / Q FIFO at the `qkv` spec
+/// and `rp.qkv` reuse, the softmax engines and score FIFO at the
+/// `softmax` spec (sequenced by the score path, so `rp.qkv`), apply-V /
+/// Wo / output FIFO at the `out` spec and `rp.out` reuse.  With all
+/// sites equal this reproduces [`mha_resources`] exactly.
 #[allow(clippy::too_many_arguments)]
 pub fn mha_resources_sited(
     s: usize,
@@ -334,18 +365,20 @@ pub fn mha_resources_sited(
     qkv: FixedSpec,
     out: FixedSpec,
     softmax: FixedSpec,
-    r: ReuseFactor,
+    rp: MhaParallelism,
     fifo_stats: Option<MhaFifoStats>,
 ) -> Resources {
     let wq = qkv.width() as u64;
     let wo_bits = out.width() as u64;
+    let r_qkv = rp.qkv;
+    let r_out = rp.out;
     // stage 1: three projections per head
     let proj: Resources = (0..3)
-        .map(|_| dense_resources(d, heads * k, qkv, r))
+        .map(|_| dense_resources(d, heads * k, qkv, r_qkv))
         .sum();
     // stage 2: per head, S×k MACs per row + softmax
     let score_mults = (heads * s * k) as u64;
-    let score_concurrent = score_mults.div_ceil(r.get() as u64);
+    let score_concurrent = score_mults.div_ceil(r_qkv.get() as u64);
     let score = Resources::new(
         score_concurrent * dsp_per_mult(qkv.width()),
         (score_concurrent as f64 * wq as f64 * cal::FF_PER_MULT_BIT) as u64,
@@ -353,22 +386,24 @@ pub fn mha_resources_sited(
         0,
     );
     let softmax_res: Resources =
-        (0..heads).map(|_| softmax_resources(s, softmax, r)).sum();
+        (0..heads).map(|_| softmax_resources(s, softmax, r_qkv)).sum();
     // stage 3: mirror of stage 2 (probs @ V), on the output-path grid
+    let apply_concurrent = score_mults.div_ceil(r_out.get() as u64);
     let apply_v = Resources::new(
-        score_concurrent * dsp_per_mult(out.width()),
-        (score_concurrent as f64 * wo_bits as f64 * cal::FF_PER_MULT_BIT) as u64,
-        (score_concurrent as f64 * wo_bits as f64 * cal::LUT_PER_MULT_BIT) as u64,
+        apply_concurrent * dsp_per_mult(out.width()),
+        (apply_concurrent as f64 * wo_bits as f64 * cal::FF_PER_MULT_BIT) as u64,
+        (apply_concurrent as f64 * wo_bits as f64 * cal::LUT_PER_MULT_BIT) as u64,
         0,
     );
     // stage 4: concat + Wo
-    let wo = dense_resources(heads * k, d, out, r);
-    // K/V register partitions: 2 matrices of S×k per head
+    let wo = dense_resources(heads * k, d, out, r_out);
+    // K/V register partitions: 2 matrices of S×k per head (filled and
+    // read by the qkv-path schedule)
     let kv_bits = (2 * heads * s * k) as u64 * wq;
-    let kv = if r.get() > 1 {
+    let kv = if r_qkv.get() > 1 {
         // reuse re-partitions a (1 - 1/R) share into BRAM (§VI-B)
-        let bram_share = kv_bits - kv_bits / r.get() as u64;
-        Resources::new(0, (kv_bits / r.get() as u64) as f64 as u64, 0, bram18_for_bits(bram_share))
+        let bram_share = kv_bits - kv_bits / r_qkv.get() as u64;
+        Resources::new(0, kv_bits / r_qkv.get() as u64, 0, bram18_for_bits(bram_share))
     } else {
         Resources::new(0, kv_bits, 0, 0)
     };
@@ -529,24 +564,57 @@ mod tests {
     #[test]
     fn sited_resources_match_legacy_when_uniform_and_scale_per_site() {
         let data = FixedSpec::new(16, 6);
+        let r2 = MhaParallelism::uniform(ReuseFactor(2));
         let legacy = mha_resources(50, 16, 2, 4, data, ReuseFactor(2), None);
-        let sited =
-            mha_resources_sited(50, 16, 2, 4, data, data, data, ReuseFactor(2), None);
+        let sited = mha_resources_sited(50, 16, 2, 4, data, data, data, r2, None);
         assert_eq!(legacy, sited);
         // shaving only the output path trims FF without touching the
         // projections' DSP story
         let slim = mha_resources_sited(
-            50, 16, 2, 4, data, FixedSpec::new(10, 4), data, ReuseFactor(2), None,
+            50, 16, 2, 4, data, FixedSpec::new(10, 4), data, r2, None,
         );
         assert!(slim.ff < legacy.ff);
+        // relaxing only the output path's parallelism trims its DSPs
+        // while the qkv-path projections keep theirs
+        let relaxed = mha_resources_sited(
+            50, 16, 2, 4, data, data, data,
+            MhaParallelism { qkv: ReuseFactor(2), out: ReuseFactor(8) },
+            None,
+        );
+        assert!(relaxed.dsp < legacy.dsp);
+    }
+
+    fn uniform_stage(s: usize, d: usize, k: usize, r: u32) -> Stage {
+        let q = QuantConfig::from_spec(FixedSpec::new(16, 6));
+        mha_stage(
+            s, d, k,
+            MhaParallelism::uniform(ReuseFactor(r)),
+            &MhaPrecision::uniform(q),
+        )
     }
 
     #[test]
     fn stage_occupancy_is_two_passes() {
-        let s = mha_stage(50, 16, 4, ReuseFactor(1));
+        let s = uniform_stage(50, 16, 4, 1);
         assert_eq!(s.occupancy(), 100);
-        let s2 = mha_stage(50, 16, 4, ReuseFactor(2));
+        let s2 = uniform_stage(50, 16, 4, 2);
         assert_eq!(s2.occupancy(), 200);
+    }
+
+    #[test]
+    fn mixed_reuse_mha_stage_gates_on_the_slower_path() {
+        // a relaxed output path slows the engine's II; the fill depth
+        // still belongs to the stage-1/2 qkv path
+        let q = QuantConfig::from_spec(FixedSpec::new(16, 6));
+        let mp = MhaPrecision::uniform(q);
+        let base = mha_stage(50, 16, 4, MhaParallelism::uniform(ReuseFactor(1)), &mp);
+        let slow_out = mha_stage(
+            50, 16, 4,
+            MhaParallelism { qkv: ReuseFactor(1), out: ReuseFactor(4) },
+            &mp,
+        );
+        assert_eq!(slow_out.depth, base.depth, "fill is the qkv path's");
+        assert_eq!(slow_out.ii, 4, "II gates on the slowest sub-stage");
     }
 
     #[test]

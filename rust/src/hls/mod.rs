@@ -21,14 +21,23 @@
 //! `FixedSpec` pair, a uniform plan reproduces the legacy global
 //! [`QuantConfig`] bitwise, and [`calibrate_plan`] auto-assigns integer
 //! bits from profiled activation ranges.
+//!
+//! Parallelism is governed per layer *site* by a [`ParallelismPlan`]
+//! ([`parallelism`]): every stage builder receives its own site's
+//! [`ReuseFactor`] (and precision, which widens the schedule past the
+//! DSP ports), a uniform plan reproduces the retired global-reuse
+//! closed forms, and latency/interval come from the composed per-stage
+//! schedule instead of a fitted formula.
 
 pub mod calibration;
 pub mod dense;
 pub mod fifo;
 pub mod layernorm;
+pub mod parallelism;
 pub mod pooling;
 pub mod mha;
 pub mod pipeline;
+pub(crate) mod planfile;
 pub mod precision;
 pub mod report;
 pub mod resources;
@@ -36,6 +45,9 @@ pub mod scratch;
 pub mod softmax;
 pub mod transformer;
 
+pub use parallelism::{
+    load_reuse_plan_file, BlockParallelism, MhaParallelism, ParallelismPlan,
+};
 pub use pipeline::{PipelineModel, Stage};
 pub use precision::{
     calibrate_plan, load_plan_file, MhaPrecision, PrecisionPlan, QuantConfig, RangeProfile,

@@ -1,0 +1,464 @@
+//! Per-site parallelism: the [`ParallelismPlan`] that replaces the single
+//! global `ReuseFactor` argument of `FixedTransformer::{pipeline,
+//! layer_resources, synthesize}`.
+//!
+//! The original hls4ml paper (Duarte et al., 1804.06913) defines the
+//! reuse factor as a *per-layer* throughput/resource dial — how many
+//! multiplications are time-multiplexed onto each DSP of that layer's
+//! engine — and "Ultra Fast Transformers on FPGAs" (2402.01047) tunes
+//! different parallelism per transformer engine.  This plan is the reuse
+//! twin of [`super::PrecisionPlan`]: the same typed site map (embed,
+//! per-block `mha.qkv` / `mha.out` / `ln1` / `ffn1` / `ffn2` / `ln2`,
+//! pool, head, out) assigning each site its own [`ReuseFactor`].  There
+//! is no `softmax` site: the softmax ROMs are shared lookup hardware
+//! whose schedule rides the score engine's reuse.
+//!
+//! Contract: a *uniform* plan (every site at the same R) reproduces the
+//! retired global-`ReuseFactor` schedule — pinned by the golden tests in
+//! `transformer.rs` against a verbatim copy of the closed form it
+//! replaced.
+//!
+//! Plans serialize to the same line-oriented skeleton as precision plans
+//! ([`super::planfile`]): one `site R` assignment per line (`R4` or bare
+//! `4`), `#` comments, loadable via `--reuse-plan` on `repro synth` /
+//! `repro serve`; see README "Parallelism plans".
+
+use super::planfile::apply_plan_lines;
+use super::ReuseFactor;
+
+/// Largest accepted per-site reuse factor.  Beyond this the schedule
+/// model is meaningless (every paper design point is R <= 8).
+pub const MAX_REUSE: u32 = 1024;
+
+/// Per-site reuse factors of one transformer block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockParallelism {
+    /// Stage-1 Q/K/V projections + the score MAC engine.
+    pub qkv: ReuseFactor,
+    /// Stage-3/4 output path: apply-V, concat, Wo.
+    pub mha_out: ReuseFactor,
+    pub ln1: ReuseFactor,
+    pub ln2: ReuseFactor,
+    pub ffn1: ReuseFactor,
+    pub ffn2: ReuseFactor,
+}
+
+impl BlockParallelism {
+    pub fn uniform(r: ReuseFactor) -> Self {
+        Self { qkv: r, mha_out: r, ln1: r, ln2: r, ffn1: r, ffn2: r }
+    }
+
+    /// The reuse pair one MHA engine consumes.
+    pub fn mha(&self) -> MhaParallelism {
+        MhaParallelism { qkv: self.qkv, out: self.mha_out }
+    }
+}
+
+/// Reuse factors threaded through one MHA engine: the stage-1/2
+/// projection+score path and the stage-3/4 output path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MhaParallelism {
+    pub qkv: ReuseFactor,
+    pub out: ReuseFactor,
+}
+
+impl MhaParallelism {
+    pub fn uniform(r: ReuseFactor) -> Self {
+        Self { qkv: r, out: r }
+    }
+}
+
+/// Resolved site address (the grammar is shared with `PrecisionPlan`
+/// minus the `softmax` site).
+#[derive(Clone, Copy)]
+enum SiteRef {
+    Embed,
+    Pool,
+    Head,
+    Out,
+    Block(usize, BlockField),
+}
+
+#[derive(Clone, Copy)]
+enum BlockField {
+    Qkv,
+    MhaOut,
+    Ln1,
+    Ln2,
+    Ffn1,
+    Ffn2,
+}
+
+/// Typed map from layer site to its reuse factor — the parallelism
+/// authority of a synthesized design point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParallelismPlan {
+    embed: ReuseFactor,
+    blocks: Vec<BlockParallelism>,
+    pool: ReuseFactor,
+    head: ReuseFactor,
+    out: ReuseFactor,
+}
+
+impl ParallelismPlan {
+    /// Every site at the same reuse — the legacy global-`ReuseFactor`
+    /// behavior.
+    pub fn uniform(num_blocks: usize, r: ReuseFactor) -> Self {
+        Self {
+            embed: r,
+            blocks: vec![BlockParallelism::uniform(r); num_blocks],
+            pool: r,
+            head: r,
+            out: r,
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn embed(&self) -> ReuseFactor {
+        self.embed
+    }
+
+    pub fn pool(&self) -> ReuseFactor {
+        self.pool
+    }
+
+    pub fn head(&self) -> ReuseFactor {
+        self.head
+    }
+
+    pub fn out(&self) -> ReuseFactor {
+        self.out
+    }
+
+    pub fn block(&self, b: usize) -> &BlockParallelism {
+        &self.blocks[b]
+    }
+
+    /// Canonical site order (execution order; also the serialization and
+    /// search order) — the precision-plan order minus `softmax`.
+    pub fn site_names(&self) -> Vec<String> {
+        let mut v = vec!["embed".to_string()];
+        for b in 0..self.blocks.len() {
+            for site in ["mha.qkv", "mha.out", "ln1", "ffn1", "ffn2", "ln2"] {
+                v.push(format!("block{b}.{site}"));
+            }
+        }
+        for site in ["pool", "head", "out"] {
+            v.push(site.to_string());
+        }
+        v
+    }
+
+    /// The one place site names are parsed (same rule as
+    /// `PrecisionPlan::resolve`): both `get` and the mutable slot lookup
+    /// resolve through here.
+    fn resolve(&self, site: &str) -> Option<SiteRef> {
+        match site {
+            "embed" => Some(SiteRef::Embed),
+            "pool" => Some(SiteRef::Pool),
+            "head" => Some(SiteRef::Head),
+            "out" => Some(SiteRef::Out),
+            _ => {
+                let rest = site.strip_prefix("block")?;
+                let (idx, field) = rest.split_once('.')?;
+                let b: usize = idx.parse().ok()?;
+                if b >= self.blocks.len() {
+                    return None;
+                }
+                let field = match field {
+                    "mha.qkv" => BlockField::Qkv,
+                    "mha.out" => BlockField::MhaOut,
+                    "ln1" => BlockField::Ln1,
+                    "ln2" => BlockField::Ln2,
+                    "ffn1" => BlockField::Ffn1,
+                    "ffn2" => BlockField::Ffn2,
+                    _ => return None,
+                };
+                Some(SiteRef::Block(b, field))
+            }
+        }
+    }
+
+    fn slot_mut(&mut self, site: &str) -> Option<&mut ReuseFactor> {
+        Some(match self.resolve(site)? {
+            SiteRef::Embed => &mut self.embed,
+            SiteRef::Pool => &mut self.pool,
+            SiteRef::Head => &mut self.head,
+            SiteRef::Out => &mut self.out,
+            SiteRef::Block(b, f) => {
+                let bp = &mut self.blocks[b];
+                match f {
+                    BlockField::Qkv => &mut bp.qkv,
+                    BlockField::MhaOut => &mut bp.mha_out,
+                    BlockField::Ln1 => &mut bp.ln1,
+                    BlockField::Ln2 => &mut bp.ln2,
+                    BlockField::Ffn1 => &mut bp.ffn1,
+                    BlockField::Ffn2 => &mut bp.ffn2,
+                }
+            }
+        })
+    }
+
+    pub fn get(&self, site: &str) -> Option<ReuseFactor> {
+        Some(match self.resolve(site)? {
+            SiteRef::Embed => self.embed,
+            SiteRef::Pool => self.pool,
+            SiteRef::Head => self.head,
+            SiteRef::Out => self.out,
+            SiteRef::Block(b, f) => {
+                let bp = &self.blocks[b];
+                match f {
+                    BlockField::Qkv => bp.qkv,
+                    BlockField::MhaOut => bp.mha_out,
+                    BlockField::Ln1 => bp.ln1,
+                    BlockField::Ln2 => bp.ln2,
+                    BlockField::Ffn1 => bp.ffn1,
+                    BlockField::Ffn2 => bp.ffn2,
+                }
+            }
+        })
+    }
+
+    /// Assign one site; `Err` names the unknown site (one line, the CLI
+    /// contract shared with `PrecisionPlan::set`).
+    pub fn set(&mut self, site: &str, r: ReuseFactor) -> Result<(), String> {
+        let n = self.blocks.len();
+        match self.slot_mut(site) {
+            Some(slot) => {
+                *slot = r;
+                Ok(())
+            }
+            None => Err(format!(
+                "unknown site '{site}' (model has {n} blocks; sites: embed, \
+                 blockN.mha.qkv, blockN.mha.out, blockN.ln1, blockN.ffn1, \
+                 blockN.ffn2, blockN.ln2, pool, head, out)"
+            )),
+        }
+    }
+
+    /// Every site's reuse in canonical order by direct field access —
+    /// the allocation-free twin of [`Self::site_names`] for the hot
+    /// paths (`synthesize` consults `max_reuse` on every design point
+    /// the Pareto explorer evaluates).
+    fn site_values(&self) -> impl Iterator<Item = ReuseFactor> + '_ {
+        std::iter::once(self.embed)
+            .chain(
+                self.blocks
+                    .iter()
+                    .flat_map(|b| [b.qkv, b.mha_out, b.ln1, b.ffn1, b.ffn2, b.ln2]),
+            )
+            .chain([self.pool, self.head, self.out])
+    }
+
+    /// `Some(r)` iff every site carries the same reuse factor.
+    pub fn is_uniform(&self) -> Option<ReuseFactor> {
+        let r = self.embed;
+        self.site_values().all(|v| v == r).then_some(r)
+    }
+
+    /// The largest reuse of any site — the most-serialized engine, which
+    /// is what sets achievable clock in the calibration model.
+    pub fn max_reuse(&self) -> ReuseFactor {
+        self.site_values()
+            .max_by_key(|r| r.get())
+            .unwrap_or(ReuseFactor(1))
+    }
+
+    /// One-line description for reports: the single `R` when uniform, a
+    /// range otherwise.
+    pub fn summary(&self) -> String {
+        match self.is_uniform() {
+            Some(r) => r.to_string(),
+            None => {
+                let (lo, hi) = self
+                    .site_values()
+                    .fold((u32::MAX, 0u32), |(lo, hi), r| (lo.min(r.get()), hi.max(r.get())));
+                format!("Rmixed<{lo}..{hi}>")
+            }
+        }
+    }
+
+    /// Serialize to the plan text format: one `site R<k>` line per site,
+    /// `#` starting a comment.  Round-trips through
+    /// [`Self::apply_overrides`].
+    pub fn serialize(&self) -> String {
+        let mut s = String::from("# parallelism plan: site -> reuse factor\n");
+        for site in self.site_names() {
+            let r = self.get(&site).expect("site_names yields known sites");
+            s.push_str(&format!("{site} {r}\n"));
+        }
+        s
+    }
+
+    /// Apply plan-text overrides onto this plan.  Unknown sites and
+    /// malformed reuse values produce a one-line error naming the
+    /// offending entry and its line number.
+    pub fn apply_overrides(&mut self, text: &str) -> Result<(), String> {
+        apply_plan_lines(text, |site, rest| {
+            let tok = match rest {
+                [] => {
+                    return Err(format!("site '{site}' is missing its reuse factor"));
+                }
+                [tok] => *tok,
+                [_, tr, ..] => {
+                    return Err(format!("site '{site}': trailing token '{tr}'"));
+                }
+            };
+            let r = parse_reuse(tok).map_err(|e| format!("site '{site}': {e}"))?;
+            self.set(site, r)
+        })
+    }
+}
+
+/// Parse one reuse token: `4` or `R4`, in `1..=MAX_REUSE`.
+pub fn parse_reuse(tok: &str) -> Result<ReuseFactor, String> {
+    let digits = tok.strip_prefix('R').unwrap_or(tok);
+    let r: u32 = digits
+        .parse()
+        .map_err(|_| format!("cannot parse reuse '{tok}' (expected an integer like 4 or R4)"))?;
+    if r == 0 || r > MAX_REUSE {
+        return Err(format!("reuse '{tok}' out of range (1..={MAX_REUSE})"));
+    }
+    Ok(ReuseFactor(r))
+}
+
+/// Read + apply a `--reuse-plan` file over a uniform base plan.  Errors
+/// are one line naming the file and the offending entry.
+pub fn load_reuse_plan_file(
+    path: &str,
+    num_blocks: usize,
+    base: ReuseFactor,
+) -> Result<ParallelismPlan, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("--reuse-plan {path}: {e}"))?;
+    let mut plan = ParallelismPlan::uniform(num_blocks, base);
+    plan.apply_overrides(&text)
+        .map_err(|e| format!("--reuse-plan {path}: {e}"))?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_plan_reports_uniform() {
+        let p = ParallelismPlan::uniform(3, ReuseFactor(4));
+        assert_eq!(p.is_uniform(), Some(ReuseFactor(4)));
+        assert_eq!(p.summary(), "R4");
+        assert_eq!(p.max_reuse(), ReuseFactor(4));
+        // precision sites minus softmax
+        assert_eq!(p.site_names().len(), 1 + 3 * 6 + 3);
+    }
+
+    #[test]
+    fn set_and_get_every_site() {
+        let mut p = ParallelismPlan::uniform(2, ReuseFactor(1));
+        for (i, site) in p.site_names().into_iter().enumerate() {
+            let r = ReuseFactor(1 + (i as u32 % 4));
+            p.set(&site, r).unwrap();
+            assert_eq!(p.get(&site), Some(r), "{site}");
+        }
+        assert!(p.is_uniform().is_none());
+        assert!(p.summary().starts_with("Rmixed<"));
+        assert_eq!(p.max_reuse(), ReuseFactor(4));
+    }
+
+    #[test]
+    fn unknown_sites_rejected_with_named_entry() {
+        let mut p = ParallelismPlan::uniform(2, ReuseFactor(1));
+        for bad in ["block2.mha.qkv", "block0.mha.wat", "softmax", "blurb"] {
+            let err = p.set(bad, ReuseFactor(2)).unwrap_err();
+            assert!(err.contains(bad), "{err}");
+            assert!(!err.contains('\n'), "one line: {err}");
+        }
+    }
+
+    #[test]
+    fn serialize_round_trips_through_overrides() {
+        let mut g = crate::testutil::Gen::new(17);
+        for _ in 0..20 {
+            let mut plan = ParallelismPlan::uniform(3, ReuseFactor(1));
+            for site in plan.site_names() {
+                plan.set(&site, ReuseFactor([1, 2, 4, 8][g.usize_in(0, 4)])).unwrap();
+            }
+            let text = plan.serialize();
+            let mut rt = ParallelismPlan::uniform(3, ReuseFactor(7));
+            rt.apply_overrides(&text).unwrap();
+            assert_eq!(rt, plan, "round trip failed for:\n{text}");
+        }
+    }
+
+    #[test]
+    fn overrides_accept_bare_integers_comments_and_r_prefix() {
+        let mut p = ParallelismPlan::uniform(1, ReuseFactor(1));
+        let text = "# engine working point\n\
+                    embed R2   # reuse the input engine\n\
+                    \n\
+                    block0.ffn1 4\n\
+                    pool R8\n";
+        p.apply_overrides(text).unwrap();
+        assert_eq!(p.embed(), ReuseFactor(2));
+        assert_eq!(p.get("block0.ffn1"), Some(ReuseFactor(4)));
+        assert_eq!(p.pool(), ReuseFactor(8));
+    }
+
+    #[test]
+    fn malformed_reuse_is_one_line_error_naming_the_entry() {
+        let p = ParallelismPlan::uniform(1, ReuseFactor(1));
+        for (text, needle) in [
+            ("embed", "missing"),
+            ("embed wat", "wat"),
+            ("embed R0", "out of range"),
+            ("embed 0", "out of range"),
+            ("embed 4 4", "trailing"),
+            ("embed 99999", "out of range"),
+            ("block9.ffn1 4", "block9.ffn1"),
+        ] {
+            let err = p.clone().apply_overrides(text).unwrap_err();
+            assert!(err.contains(needle), "'{text}' -> {err}");
+            assert!(!err.contains('\n'), "one line: {err}");
+            assert!(err.contains("line 1"), "{err}");
+        }
+    }
+
+    #[test]
+    fn parse_reuse_accepts_both_forms() {
+        assert_eq!(parse_reuse("4").unwrap(), ReuseFactor(4));
+        assert_eq!(parse_reuse("R16").unwrap(), ReuseFactor(16));
+        assert!(parse_reuse("R").is_err());
+        assert!(parse_reuse("-1").is_err());
+        assert!(parse_reuse("4.5").is_err());
+    }
+
+    #[test]
+    fn load_reuse_plan_file_round_trip_and_errors() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("reuse_plan_test_{}.txt", std::process::id()));
+        std::fs::write(&path, "embed R2\nblock7.ln1 4\n").unwrap();
+        let err =
+            load_reuse_plan_file(path.to_str().unwrap(), 3, ReuseFactor(1)).unwrap_err();
+        assert!(err.contains("block7.ln1"), "{err}");
+        assert!(!err.contains('\n'), "one line: {err}");
+        let good = ParallelismPlan::uniform(3, ReuseFactor(2)).serialize();
+        std::fs::write(&path, good).unwrap();
+        let plan = load_reuse_plan_file(path.to_str().unwrap(), 3, ReuseFactor(1)).unwrap();
+        assert_eq!(plan, ParallelismPlan::uniform(3, ReuseFactor(2)));
+        std::fs::remove_file(&path).ok();
+        let missing = load_reuse_plan_file("/nonexistent/reuse.txt", 2, ReuseFactor(1));
+        assert!(missing.unwrap_err().contains("/nonexistent/reuse.txt"));
+    }
+
+    #[test]
+    fn mha_pair_extraction() {
+        let mut p = ParallelismPlan::uniform(1, ReuseFactor(1));
+        p.set("block0.mha.qkv", ReuseFactor(4)).unwrap();
+        let m = p.block(0).mha();
+        assert_eq!(m.qkv, ReuseFactor(4));
+        assert_eq!(m.out, ReuseFactor(1));
+        assert_eq!(MhaParallelism::uniform(ReuseFactor(2)).out, ReuseFactor(2));
+    }
+}

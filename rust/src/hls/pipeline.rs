@@ -69,12 +69,18 @@ impl PipelineModel {
 
     /// Dataflow composition: concurrent stages linked by FIFOs.
     /// Latency = Σ depths + (rows-1)·max(ii); II = max stage occupancy.
-    pub fn dataflow(&self) -> Stage {
-        assert!(!self.stages.is_empty());
+    ///
+    /// Total: an empty chain has no composite stage, so this returns
+    /// `None` instead of asserting (degenerate configs — a zero-block
+    /// model, a filtered stage list — reach here through `synthesize()`).
+    pub fn dataflow(&self) -> Option<Stage> {
+        if self.stages.is_empty() {
+            return None;
+        }
         let depth: u64 = self.stages.iter().map(|s| s.depth).sum();
-        let ii = self.stages.iter().map(|s| s.ii).max().unwrap();
-        let rows = self.stages.iter().map(|s| s.rows).max().unwrap();
-        Stage { name: "dataflow".into(), depth, ii, rows }
+        let ii = self.stages.iter().map(|s| s.ii).max().expect("non-empty");
+        let rows = self.stages.iter().map(|s| s.rows).max().expect("non-empty");
+        Some(Stage { name: "dataflow".into(), depth, ii, rows })
     }
 
     /// Sequential (resource-shared) composition: the event flows through
@@ -91,6 +97,24 @@ impl PipelineModel {
 /// `ceil(log2(n))` pipeline depth of an n-input adder tree (>=1).
 pub fn adder_tree_depth(n: u64) -> u64 {
     (64 - n.max(2).next_power_of_two().leading_zeros() as u64) - 1
+}
+
+/// Depth (in rows) of the FIFO between a `producer` stage and the
+/// `consumer` it streams into, sized from their II mismatch.
+///
+/// A producer emitting a row every `p.ii` cycles into a consumer that
+/// absorbs one every `c.ii` backs up by `(c.ii - p.ii)/c.ii` of the
+/// streamed rows; a consumer at least as fast as its producer needs only
+/// the single ping-pong slot.  Matched-II chains (every uniform
+/// `ParallelismPlan`) therefore cost depth 1 everywhere — registers, not
+/// BRAM — which is what keeps the schedule-derived resource totals equal
+/// to the retired global-reuse model on uniform plans.
+pub fn fifo_depth(producer: &Stage, consumer: &Stage) -> u64 {
+    if producer.ii >= consumer.ii {
+        return 1;
+    }
+    let rows = producer.rows.min(consumer.rows).max(1);
+    (rows * (consumer.ii - producer.ii)).div_ceil(consumer.ii).max(1)
 }
 
 #[cfg(test)]
@@ -117,10 +141,18 @@ mod tests {
             Stage::new("b", 5, 2, 10),
             Stage::new("c", 2, 1, 10),
         ]);
-        let d = p.dataflow();
+        let d = p.dataflow().unwrap();
         assert_eq!(d.depth, 10);
         assert_eq!(d.ii, 2);
         assert_eq!(d.latency(), 10 + 9 * 2);
+    }
+
+    #[test]
+    fn empty_dataflow_is_none_not_panic() {
+        // regression: the old dataflow() asserted on an empty stage list
+        assert!(PipelineModel::default().dataflow().is_none());
+        // the sequential composition was already total
+        assert_eq!(PipelineModel::default().sequential(), (0, 1));
     }
 
     #[test]
@@ -175,7 +207,79 @@ mod tests {
                 .collect();
             let p = PipelineModel::new(stages);
             let (seq_lat, _) = p.sequential();
-            assert!(p.dataflow().latency() <= seq_lat);
+            assert!(p.dataflow().unwrap().latency() <= seq_lat);
         });
+    }
+
+    /// Dataflow composition with *unequal* per-stage row counts — the
+    /// shape heterogeneous reuse plans produce (an S-row FFN feeding a
+    /// 1-row head, a 2S-row MHA drain).  The equal-rows guarantee
+    /// (`dataflow <= sequential`) does not carry over, but the composite
+    /// must still dominate every constituent and inherit the worst II.
+    #[test]
+    fn prop_dataflow_unequal_rows_bounds() {
+        Prop::new("dataflow bounds (unequal rows)").runs(500).check(|g| {
+            let stages: Vec<Stage> = (0..g.usize_in(1, 6))
+                .map(|i| {
+                    Stage::new(
+                        format!("s{i}"),
+                        g.usize_in(1, 30) as u64,
+                        g.usize_in(1, 6) as u64,
+                        g.usize_in(1, 60) as u64, // rows differ per stage
+                    )
+                })
+                .collect();
+            let p = PipelineModel::new(stages.clone());
+            let d = p.dataflow().unwrap();
+            assert_eq!(d.depth, stages.iter().map(|s| s.depth).sum::<u64>());
+            assert_eq!(d.ii, stages.iter().map(|s| s.ii).max().unwrap());
+            assert_eq!(d.rows, stages.iter().map(|s| s.rows).max().unwrap());
+            for s in &stages {
+                assert!(
+                    d.latency() >= s.latency(),
+                    "composite {} must dominate stage {} ({})",
+                    d.latency(),
+                    s.name,
+                    s.latency()
+                );
+            }
+            // and the composite is exactly as deep as its parts: adding a
+            // stage never shortens the chain
+            let mut longer = stages;
+            longer.push(Stage::new("extra", 1, 1, 1));
+            let d2 = PipelineModel::new(longer).dataflow().unwrap();
+            assert!(d2.latency() >= d.latency());
+        });
+    }
+
+    #[test]
+    fn fifo_depth_matched_ii_is_one_slot() {
+        // every uniform plan: producer and consumer agree on II
+        for ii in [1u64, 2, 4, 8] {
+            let p = Stage::new("p", 3, ii, 50);
+            let c = Stage::new("c", 3, ii, 50);
+            assert_eq!(fifo_depth(&p, &c), 1);
+        }
+        // a fast consumer drains as fast as rows arrive
+        assert_eq!(fifo_depth(&Stage::new("p", 1, 4, 50), &Stage::new("c", 1, 1, 50)), 1);
+    }
+
+    #[test]
+    fn fifo_depth_grows_with_ii_mismatch_and_is_bounded_by_rows() {
+        let c_slow = |ii| Stage::new("c", 1, ii, 50);
+        let p = Stage::new("p", 1, 1, 50);
+        // backlog grows as the consumer slows...
+        assert_eq!(fifo_depth(&p, &c_slow(2)), 25);
+        assert_eq!(fifo_depth(&p, &c_slow(4)), 38);
+        let mut prev = 0;
+        for ii in 1..=16 {
+            let d = fifo_depth(&p, &c_slow(ii));
+            assert!(d >= prev, "monotone in consumer II");
+            assert!(d <= 50, "never beyond the streamed row count");
+            prev = d;
+        }
+        // ...and is bounded by the shorter stream
+        let short = Stage::new("c", 1, 8, 4);
+        assert!(fifo_depth(&p, &short) <= 4);
     }
 }

@@ -1,0 +1,64 @@
+//! Shared line-oriented plan-file machinery.
+//!
+//! Both plan families — the [`super::PrecisionPlan`] (`site ap_fixed<W,I>`)
+//! and the [`super::ParallelismPlan`] (`site R`) — serialize to the same
+//! skeleton: one `site value...` assignment per line, `#` starting a
+//! comment, errors one line long and naming the offending entry with its
+//! line number.  This module owns that skeleton so the two grammars
+//! cannot drift apart: comment stripping, tokenization, and the
+//! `plan line N:` error prefix live in exactly one place, and each plan
+//! type supplies only its value parser.
+
+/// Walk the assignment lines of a plan text, calling `apply(site, rest)`
+/// for every non-empty, non-comment line (`rest` is the whitespace-split
+/// tail after the site token).  The first `Err` from `apply` is returned
+/// prefixed with its 1-based line number; blank lines and `#` comments
+/// are skipped.
+pub(crate) fn apply_plan_lines(
+    text: &str,
+    mut apply: impl FnMut(&str, &[&str]) -> Result<(), String>,
+) -> Result<(), String> {
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let site = toks.next().expect("non-empty line has a token");
+        let rest: Vec<&str> = toks.collect();
+        apply(site, &rest).map_err(|e| format!("plan line {}: {e}", lineno + 1))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_blanks_are_skipped() {
+        let mut seen = Vec::new();
+        apply_plan_lines("# header\n\n  a 1  # trailing\nb 2 3\n", |site, rest| {
+            seen.push((site.to_string(), rest.len()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![("a".into(), 1), ("b".into(), 2)]);
+    }
+
+    #[test]
+    fn errors_carry_the_line_number() {
+        let err = apply_plan_lines("ok 1\nbad x\n", |site, _| {
+            if site == "bad" { Err("site 'bad': nope".into()) } else { Ok(()) }
+        })
+        .unwrap_err();
+        assert_eq!(err, "plan line 2: site 'bad': nope");
+        assert!(!err.contains('\n'), "one line: {err}");
+    }
+
+    #[test]
+    fn full_line_comment_does_not_shift_numbering() {
+        let err = apply_plan_lines("# one\n# two\nbad\n", |_, _| Err("x".into()));
+        assert_eq!(err.unwrap_err(), "plan line 3: x");
+    }
+}

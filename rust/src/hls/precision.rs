@@ -23,6 +23,7 @@
 use std::collections::BTreeMap;
 
 use super::calibration::int_bits_for_range;
+use super::planfile::apply_plan_lines;
 use crate::fixed::spec::ACCUM_INT_BITS;
 use crate::fixed::FixedSpec;
 use crate::models::config::ModelConfig;
@@ -332,49 +333,41 @@ impl PrecisionPlan {
 
     /// Apply plan-text overrides onto this plan.  Unknown sites and
     /// malformed specs produce a one-line error naming the offending
-    /// entry and its line number.
+    /// entry and its line number.  Line handling (comments, blanks, the
+    /// `plan line N:` prefix) is the shared [`apply_plan_lines`]
+    /// skeleton, so this grammar and the `ParallelismPlan` grammar
+    /// cannot drift apart.
     pub fn apply_overrides(&mut self, text: &str) -> Result<(), String> {
-        for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
-            if line.is_empty() {
-                continue;
-            }
-            let mut toks = line.split_whitespace();
-            let site = toks.next().expect("non-empty line has a token");
-            let spec_tok = toks.next().ok_or_else(|| {
-                format!(
-                    "plan line {}: site '{site}' is missing its ap_fixed<W,I> spec",
-                    lineno + 1
-                )
-            })?;
+        apply_plan_lines(text, |site, rest| {
+            let (spec_tok, accum_tok) = match rest {
+                [] => {
+                    return Err(format!(
+                        "site '{site}' is missing its ap_fixed<W,I> spec"
+                    ));
+                }
+                [spec] => (*spec, None),
+                [spec, accum] => (*spec, Some(*accum)),
+                [_, _, tr, ..] => {
+                    return Err(format!("site '{site}': trailing token '{tr}'"));
+                }
+            };
             let data: FixedSpec = spec_tok
                 .parse()
-                .map_err(|e| format!("plan line {}: site '{site}': {e}", lineno + 1))?;
-            let accum = if let Some(extra) = toks.next() {
-                let a = extra.strip_prefix("accum=").ok_or_else(|| {
-                    format!(
-                        "plan line {}: site '{site}': unexpected token '{extra}' \
-                         (expected accum=ap_fixed<W,I>)",
-                        lineno + 1
-                    )
-                })?;
-                a.parse()
-                    .map_err(|e| format!("plan line {}: site '{site}': {e}", lineno + 1))?
-            } else {
-                derive_accum(data)
-                    .map_err(|e| format!("plan line {}: site '{site}': {e}", lineno + 1))?
+                .map_err(|e| format!("site '{site}': {e}"))?;
+            let accum = match accum_tok {
+                Some(extra) => {
+                    let a = extra.strip_prefix("accum=").ok_or_else(|| {
+                        format!(
+                            "site '{site}': unexpected token '{extra}' \
+                             (expected accum=ap_fixed<W,I>)"
+                        )
+                    })?;
+                    a.parse().map_err(|e| format!("site '{site}': {e}"))?
+                }
+                None => derive_accum(data).map_err(|e| format!("site '{site}': {e}"))?,
             };
-            let q = QuantConfig { data, accum };
-            if let Some(tr) = toks.next() {
-                return Err(format!(
-                    "plan line {}: site '{site}': trailing token '{tr}'",
-                    lineno + 1
-                ));
-            }
-            self.set(site, q)
-                .map_err(|e| format!("plan line {}: {e}", lineno + 1))?;
-        }
-        Ok(())
+            self.set(site, QuantConfig { data, accum })
+        })
     }
 }
 

@@ -1,6 +1,7 @@
 //! Synthesis-style reporting — the stand-in for Vivado's utilization and
 //! timing reports, formatted per design point for the experiment harness.
 
+use super::parallelism::ParallelismPlan;
 use super::precision::{PrecisionPlan, QuantConfig};
 use super::resources::{Device, Resources};
 use super::ReuseFactor;
@@ -18,10 +19,14 @@ pub struct LayerReport {
     /// The layer site's data spec (heterogeneous plans differ per row;
     /// the MHA row reports its QKV spec).
     pub precision: FixedSpec,
+    /// The layer site's reuse factor (heterogeneous parallelism plans
+    /// differ per row; the MHA row reports its QKV-path reuse).
+    pub reuse: ReuseFactor,
     pub resources: Resources,
 }
 
-/// One "synthesized" design point (model x precision plan x reuse).
+/// One "synthesized" design point (model x precision plan x parallelism
+/// plan).
 #[derive(Clone, Debug)]
 pub struct SynthesisReport {
     pub model: String,
@@ -30,12 +35,19 @@ pub struct SynthesisReport {
     pub quant: QuantConfig,
     /// The full per-site precision map of this design point.
     pub plan: PrecisionPlan,
+    /// The full per-site reuse map of this design point.
+    pub parallelism: ParallelismPlan,
+    /// The worst (largest) site reuse — what gates the achievable clock;
+    /// equal to the single global factor when the plan is uniform.
     pub reuse: ReuseFactor,
     pub clk_ns: f64,
     pub latency_cycles: u64,
     pub interval_cycles: u64,
     pub latency_us: f64,
     pub layers: Vec<LayerReport>,
+    /// Inter-stage stream FIFOs sized from producer/consumer II mismatch
+    /// (zero on every uniform parallelism plan); included in `total`.
+    pub fifo: Resources,
     pub total: Resources,
 }
 
@@ -69,7 +81,7 @@ impl fmt::Display for SynthesisReport {
             "== {} @ {} {} | clk {:.3} ns | II {} cyc | latency {} cyc = {:.3} us",
             self.model,
             self.plan.summary(),
-            self.reuse,
+            self.parallelism.summary(),
             self.clk_ns,
             self.interval_cycles,
             self.latency_cycles,
@@ -80,17 +92,26 @@ impl fmt::Display for SynthesisReport {
             "   total: DSP {} FF {} LUT {} BRAM18 {}",
             self.total.dsp, self.total.ff, self.total.lut, self.total.bram18
         )?;
+        if self.fifo.bram18 > 0 {
+            writeln!(
+                f,
+                "   (includes {} BRAM18 of II-mismatch stream FIFOs)",
+                self.fifo.bram18
+            )?;
+        }
         writeln!(
             f,
-            "   {:<16} {:>16} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
-            "layer", "precision", "depth", "II", "rows", "latency", "DSP", "FF", "LUT", "BRAM18"
+            "   {:<16} {:>16} {:>6} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
+            "layer", "precision", "reuse", "depth", "II", "rows", "latency", "DSP", "FF",
+            "LUT", "BRAM18"
         )?;
         for l in &self.layers {
             writeln!(
                 f,
-                "   {:<16} {:>16} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
+                "   {:<16} {:>16} {:>6} {:>6} {:>4} {:>5} {:>8} {:>7} {:>9} {:>9} {:>7}",
                 l.name,
                 l.precision.to_string(),
+                l.reuse.to_string(),
                 l.depth,
                 l.ii,
                 l.rows,
@@ -116,6 +137,7 @@ mod tests {
             model: "engine".into(),
             quant,
             plan: PrecisionPlan::uniform(3, quant),
+            parallelism: ParallelismPlan::uniform(3, ReuseFactor(1)),
             reuse: ReuseFactor(1),
             clk_ns: 6.86,
             latency_cycles: 257,
@@ -128,8 +150,10 @@ mod tests {
                 rows: 50,
                 latency: 53,
                 precision: quant.data,
+                reuse: ReuseFactor(1),
                 resources: Resources::new(16, 100, 200, 0),
             }],
+            fifo: Resources::ZERO,
             total: Resources::new(16, 100, 200, 0),
         }
     }
@@ -143,11 +167,13 @@ mod tests {
     }
 
     #[test]
-    fn display_renders_layers_with_precision_column() {
+    fn display_renders_layers_with_precision_and_reuse_columns() {
         let s = format!("{}", sample());
         assert!(s.contains("embed"));
         assert!(s.contains("ap_fixed<14,6>"));
         assert!(s.contains("precision"));
+        assert!(s.contains("reuse"));
+        assert!(s.contains("R1"));
     }
 
     #[test]
@@ -158,6 +184,16 @@ mod tests {
             .unwrap();
         let s = format!("{rep}");
         assert!(s.contains("mixed<"), "{s}");
+    }
+
+    #[test]
+    fn mixed_parallelism_header_and_fifo_note() {
+        let mut rep = sample();
+        rep.parallelism.set("block0.ffn1", ReuseFactor(4)).unwrap();
+        rep.fifo = Resources::new(0, 0, 0, 3);
+        let s = format!("{rep}");
+        assert!(s.contains("Rmixed<1..4>"), "{s}");
+        assert!(s.contains("3 BRAM18 of II-mismatch stream FIFOs"), "{s}");
     }
 
     #[test]

@@ -171,14 +171,24 @@ pub fn softmax_fixed_legacy(
     }
 }
 
-/// Pipeline stage for the 3-stage softmax over `rows` rows of width `k`.
-pub fn softmax_stage(name: &str, rows: usize, k: usize, r: ReuseFactor) -> Stage {
+/// Pipeline stage for the 3-stage softmax over `rows` rows of width `k`,
+/// at the site's reuse and the LUT-I/O precision.  The stage-3 multiply
+/// takes one ROM-fed operand already held in a register, so wide grids
+/// cost no cascade fill here — but past the 26-bit port the decomposed
+/// multiply still halves the issue rate ([`cal::dsp_ii_widening`]).
+pub fn softmax_stage(
+    name: &str,
+    rows: usize,
+    k: usize,
+    r: ReuseFactor,
+    data: FixedSpec,
+) -> Stage {
     Stage::new(
         name,
         cal::SOFTMAX_DEPTH_BASE
             + adder_tree_depth(k as u64)
             + cal::reuse_depth_growth(k, r) / 2,
-        r.get() as u64,
+        r.get() as u64 * cal::dsp_ii_widening(data.width()),
         rows as u64,
     )
 }
@@ -364,7 +374,7 @@ mod tests {
 
     #[test]
     fn stage_and_resources_shapes() {
-        let s = softmax_stage("sm", 50, 50, ReuseFactor(2));
+        let s = softmax_stage("sm", 50, 50, ReuseFactor(2), FixedSpec::new(16, 6));
         assert_eq!(s.ii, 2);
         let r1 = softmax_resources(50, FixedSpec::new(16, 6), ReuseFactor(1));
         let r4 = softmax_resources(50, FixedSpec::new(16, 6), ReuseFactor(4));

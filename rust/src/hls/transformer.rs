@@ -20,14 +20,15 @@ use super::layernorm::{
 use super::mha::{
     mha_fixed_batch_sited, mha_fixed_sited, mha_resources_sited, mha_stage, MhaFifoStats,
 };
-use super::pipeline::{PipelineModel, Stage};
+use super::parallelism::ParallelismPlan;
+use super::pipeline::{fifo_depth, PipelineModel};
 use super::pooling::{
     global_average_pool_fixed, global_average_pool_fixed_batch, pool_resources, pool_stage,
     sigmoid_fixed,
 };
 use super::precision::{quantize_weights_sited, PrecisionPlan, RangeProfile};
 use super::report::{LayerReport, SynthesisReport};
-use super::resources::Resources;
+use super::resources::{bram18_for_bits, Resources};
 use super::scratch::Scratch;
 use super::softmax::softmax_fixed_row;
 use super::{calibration as cal, ReuseFactor};
@@ -395,51 +396,102 @@ impl FixedTransformer {
 
     /// Top-level pipeline under the paper's layered strategy: inner
     /// layers at the latency strategy, model top level resource-shared.
-    pub fn pipeline(&self, r: ReuseFactor) -> PipelineModel {
+    /// Every stage is built at its own site's reuse factor (the
+    /// [`ParallelismPlan`]) and its own site's precision (the engine's
+    /// [`PrecisionPlan`]), so both dials shape the schedule.
+    pub fn pipeline(&self, par: &ParallelismPlan) -> PipelineModel {
+        self.assert_par(par);
         let c = &self.cfg;
+        let pp = &self.plan;
         let mut p = PipelineModel::default();
-        p.push(dense_stage("embed", c.seq_len, c.input_size.max(2), r));
+        p.push(dense_stage(
+            "embed",
+            c.seq_len,
+            c.input_size.max(2),
+            par.embed(),
+            pp.embed().data,
+        ));
         for b in 0..c.num_blocks {
-            let mut m = mha_stage(c.seq_len, c.d_model, c.head_dim, r);
+            let bp = *pp.block(b);
+            let rp = *par.block(b);
+            let mut m = mha_stage(
+                c.seq_len,
+                c.d_model,
+                c.head_dim,
+                rp.mha(),
+                &bp.mha(pp.softmax()),
+            );
             m.name = format!("block{b}.mha");
             p.push(m);
             if c.use_layernorm {
-                p.push(layernorm_stage(&format!("block{b}.ln1"), c.seq_len, c.d_model, r));
+                p.push(layernorm_stage(
+                    &format!("block{b}.ln1"),
+                    c.seq_len,
+                    c.d_model,
+                    rp.ln1,
+                    bp.ln1.data,
+                ));
             }
-            p.push(dense_stage(&format!("block{b}.ffn1"), c.seq_len, c.d_model, r));
-            p.push(dense_stage(&format!("block{b}.ffn2"), c.seq_len, c.ffn_dim, r));
+            p.push(dense_stage(
+                &format!("block{b}.ffn1"),
+                c.seq_len,
+                c.d_model,
+                rp.ffn1,
+                bp.ffn1.data,
+            ));
+            p.push(dense_stage(
+                &format!("block{b}.ffn2"),
+                c.seq_len,
+                c.ffn_dim,
+                rp.ffn2,
+                bp.ffn2.data,
+            ));
             if c.use_layernorm {
-                p.push(layernorm_stage(&format!("block{b}.ln2"), c.seq_len, c.d_model, r));
+                p.push(layernorm_stage(
+                    &format!("block{b}.ln2"),
+                    c.seq_len,
+                    c.d_model,
+                    rp.ln2,
+                    bp.ln2.data,
+                ));
             }
         }
-        p.push(pool_stage("pool", c.seq_len, r));
-        p.push(dense_stage("head", 1, c.d_model, r));
-        p.push(dense_stage("out", 1, c.head_hidden, r));
+        p.push(pool_stage("pool", c.seq_len, par.pool()));
+        p.push(dense_stage("head", 1, c.d_model, par.head(), pp.head().data));
+        p.push(dense_stage("out", 1, c.head_hidden, par.out(), pp.out().data));
         p
     }
 
-    /// Per-layer (name, data spec, resources) estimates — each layer at
-    /// its own site's width.  The MHA row reports the QKV spec (its
-    /// score/softmax/output sub-engines are folded into the resource
-    /// number via [`mha_resources_sited`]).
-    pub fn layer_resources(&self, r: ReuseFactor) -> Vec<(String, FixedSpec, Resources)> {
+    /// Per-layer (name, data spec, reuse, resources) estimates — each
+    /// layer at its own site's width and its own site's reuse.  The MHA
+    /// row reports the QKV spec/reuse (its score/softmax/output
+    /// sub-engines are folded into the resource number via
+    /// [`mha_resources_sited`]).
+    pub fn layer_resources(
+        &self,
+        par: &ParallelismPlan,
+    ) -> Vec<(String, FixedSpec, ReuseFactor, Resources)> {
+        self.assert_par(par);
         let c = &self.cfg;
         let p = &self.plan;
         let fifo = {
             let st = self.last_fifo_stats.get();
             (st.q_high_water > 0).then_some(st)
         };
-        let mut v: Vec<(String, FixedSpec, Resources)> = Vec::new();
+        let mut v: Vec<(String, FixedSpec, ReuseFactor, Resources)> = Vec::new();
         v.push((
             "embed".into(),
             p.embed().data,
-            dense_resources(c.input_size, c.d_model, p.embed().data, r),
+            par.embed(),
+            dense_resources(c.input_size, c.d_model, p.embed().data, par.embed()),
         ));
         for b in 0..c.num_blocks {
             let bp = *p.block(b);
+            let rp = *par.block(b);
             v.push((
                 format!("block{b}.mha"),
                 bp.qkv.data,
+                rp.qkv,
                 mha_resources_sited(
                     c.seq_len,
                     c.d_model,
@@ -448,7 +500,7 @@ impl FixedTransformer {
                     bp.qkv.data,
                     bp.mha_out.data,
                     p.softmax().data,
-                    r,
+                    rp.mha(),
                     fifo,
                 ),
             ));
@@ -456,37 +508,48 @@ impl FixedTransformer {
                 v.push((
                     format!("block{b}.ln1"),
                     bp.ln1.data,
-                    layernorm_resources(c.d_model, bp.ln1.data, r),
+                    rp.ln1,
+                    layernorm_resources(c.d_model, bp.ln1.data, rp.ln1),
                 ));
             }
             v.push((
                 format!("block{b}.ffn1"),
                 bp.ffn1.data,
-                dense_resources(c.d_model, c.ffn_dim, bp.ffn1.data, r),
+                rp.ffn1,
+                dense_resources(c.d_model, c.ffn_dim, bp.ffn1.data, rp.ffn1),
             ));
             v.push((
                 format!("block{b}.ffn2"),
                 bp.ffn2.data,
-                dense_resources(c.ffn_dim, c.d_model, bp.ffn2.data, r),
+                rp.ffn2,
+                dense_resources(c.ffn_dim, c.d_model, bp.ffn2.data, rp.ffn2),
             ));
             if c.use_layernorm {
                 v.push((
                     format!("block{b}.ln2"),
                     bp.ln2.data,
-                    layernorm_resources(c.d_model, bp.ln2.data, r),
+                    rp.ln2,
+                    layernorm_resources(c.d_model, bp.ln2.data, rp.ln2),
                 ));
             }
         }
-        v.push(("pool".into(), p.pool().data, pool_resources(c.d_model, p.pool().data, r)));
+        v.push((
+            "pool".into(),
+            p.pool().data,
+            par.pool(),
+            pool_resources(c.d_model, p.pool().data, par.pool()),
+        ));
         v.push((
             "head".into(),
             p.head().data,
-            dense_resources(c.d_model, c.head_hidden, p.head().data, r),
+            par.head(),
+            dense_resources(c.d_model, c.head_hidden, p.head().data, par.head()),
         ));
         v.push((
             "out".into(),
             p.out().data,
-            dense_resources(c.head_hidden, c.output_size, p.out().data, r),
+            par.out(),
+            dense_resources(c.head_hidden, c.output_size, p.out().data, par.out()),
         ));
         v
     }
@@ -494,28 +557,62 @@ impl FixedTransformer {
     /// "Synthesize" the design point: latency, interval, clock, resources
     /// — the stand-in for a Vivado run (Tables II-IV / Figures 12-14).
     ///
-    /// The model top level is one dataflow (figure 5: FIFO streams
-    /// between layers), so the event latency is the sum of pipeline fill
-    /// depths plus the drain of the gating two-pass MHA stream, and the
-    /// initiation interval is the re-arm time of the busiest engine —
-    /// the closed forms in `calibration.rs` (fit to Tables II-IV).
-    pub fn synthesize(&self, r: ReuseFactor) -> SynthesisReport {
-        let pipe = self.pipeline(r);
+    /// Latency and interval are *composed from the per-site schedule*
+    /// rather than a closed form in the global reuse factor:
+    ///
+    /// * latency = Σ stage fill depths + the worst per-stage drain
+    ///   `(rows-1)·II` (the gating stream — the two-pass MHA drain on
+    ///   every zoo model) + the LN overlap penalty set by the slowest LN
+    ///   engine + `LATENCY_BASE`;
+    /// * interval = the worst per-stage re-arm occupancy
+    ///   `rows · ceil(log2(2·II))` + `II_BASE`, capped at the latency.
+    ///
+    /// Per-stage depth/II are functions of that site's reuse *and*
+    /// precision (`dense_stage` et al.), and inter-stage FIFOs are sized
+    /// from producer/consumer II mismatch ([`fifo_depth`]).  A uniform
+    /// plan at a sub-DSP-port width reproduces the retired global-reuse
+    /// closed form *exactly* (golden-tested below), so the calibrated
+    /// Tables II-IV fit carries over.
+    pub fn synthesize(&self, par: &ParallelismPlan) -> SynthesisReport {
+        let pipe = self.pipeline(par);
         let s = self.cfg.seq_len as u64;
         let depths: u64 = pipe.stages().iter().map(|st| st.depth).sum();
+        // drain of the gating stream: the worst per-stage (rows-1)·II
+        let drain = pipe
+            .stages()
+            .iter()
+            .map(|st| (st.rows - 1) * st.ii)
+            .max()
+            .unwrap_or(0);
         // layernorm models pay an extra ~1.5 streaming passes (the two
-        // LN instances per block are II-gating but partially overlapped)
-        let ln_extra = if self.cfg.use_layernorm { 3 * s * r.get() as u64 / 2 } else { 0 };
-        let latency_cycles =
-            depths + (2 * s - 1) * r.get() as u64 + ln_extra + cal::LATENCY_BASE;
-        let interval_cycles = 2 * s * cal::interval_multiplier(r) + cal::II_BASE;
+        // LN instances per block are II-gating but partially overlapped);
+        // the penalty is set by the slowest LN engine in the plan
+        let ln_extra = if self.cfg.use_layernorm {
+            let max_ln = (0..par.num_blocks())
+                .map(|b| par.block(b).ln1.get().max(par.block(b).ln2.get()) as u64)
+                .max()
+                .unwrap_or(0);
+            3 * s * max_ln / 2
+        } else {
+            0
+        };
+        let latency_cycles = depths + drain + ln_extra + cal::LATENCY_BASE;
+        let interval_cycles = pipe
+            .stages()
+            .iter()
+            .map(|st| st.rows * cal::interval_multiplier_ii(st.ii))
+            .max()
+            .unwrap_or(0)
+            + cal::II_BASE;
         let interval_cycles = interval_cycles.min(latency_cycles);
-        let clk_ns = cal::clock_ns(r);
+        // the most-serialized engine sets achievable clock
+        let reuse = par.max_reuse();
+        let clk_ns = cal::clock_ns(reuse);
         let layers: Vec<LayerReport> = pipe
             .stages()
             .iter()
-            .zip(self.layer_resources(r))
-            .map(|(s, (name, precision, res))| {
+            .zip(self.layer_resources(par))
+            .map(|(s, (name, precision, site_reuse, res))| {
                 debug_assert_eq!(s.name, name);
                 LayerReport {
                     name,
@@ -524,23 +621,86 @@ impl FixedTransformer {
                     rows: s.rows,
                     latency: s.latency(),
                     precision,
+                    reuse: site_reuse,
                     resources: res,
                 }
             })
             .collect();
-        let total: Resources = layers.iter().map(|l| l.resources).sum();
+        let fifo = self.interstage_fifo_resources(&pipe);
+        let total: Resources =
+            layers.iter().map(|l| l.resources).sum::<Resources>() + fifo;
         SynthesisReport {
             model: self.cfg.name.clone(),
             quant: self.plan.embed(),
             plan: self.plan.clone(),
-            reuse: r,
+            parallelism: par.clone(),
+            reuse,
             clk_ns,
             latency_cycles,
             interval_cycles,
             latency_us: latency_cycles as f64 * clk_ns / 1000.0,
             layers,
+            fifo,
             total,
         }
+    }
+
+    /// BRAM of the inter-stage streams, sized from producer/consumer II
+    /// mismatch ([`fifo_depth`]).  A matched chain (every uniform
+    /// parallelism plan) needs only ping-pong registers — depth 1, zero
+    /// BRAM — so uniform-plan resource totals are unchanged from the
+    /// retired global-reuse model; heterogeneous reuse pays for its
+    /// rate conversions here.
+    fn interstage_fifo_resources(&self, pipe: &PipelineModel) -> Resources {
+        let mut bits = 0u64;
+        for w in pipe.stages().windows(2) {
+            let depth = fifo_depth(&w[0], &w[1]);
+            if depth <= 1 {
+                continue; // a register slot, not a RAM
+            }
+            let (elems, spec) = self.stream_shape(&w[0].name);
+            bits += depth * elems as u64 * spec.width() as u64;
+        }
+        Resources::new(0, 0, 0, bram18_for_bits(bits))
+    }
+
+    /// Shape of the stream a stage emits: (elements per row, the data
+    /// grid it is carried on) — what the inter-stage FIFO stores.
+    fn stream_shape(&self, stage_name: &str) -> (usize, FixedSpec) {
+        let c = &self.cfg;
+        let p = &self.plan;
+        if let Some(rest) = stage_name.strip_prefix("block") {
+            if let Some((idx, field)) = rest.split_once('.') {
+                if let Ok(b) = idx.parse::<usize>() {
+                    let bp = p.block(b);
+                    return match field {
+                        "mha" => (c.d_model, bp.mha_out.data),
+                        "ln1" => (c.d_model, bp.ln1.data),
+                        "ffn1" => (c.ffn_dim, bp.ffn1.data),
+                        "ffn2" => (c.d_model, bp.ffn2.data),
+                        "ln2" => (c.d_model, bp.ln2.data),
+                        _ => (c.d_model, bp.ffn2.data),
+                    };
+                }
+            }
+        }
+        match stage_name {
+            "embed" => (c.d_model, p.embed().data),
+            "pool" => (c.d_model, p.pool().data),
+            "head" => (c.head_hidden, p.head().data),
+            _ => (c.output_size, p.out().data),
+        }
+    }
+
+    fn assert_par(&self, par: &ParallelismPlan) {
+        assert_eq!(
+            par.num_blocks(),
+            self.cfg.num_blocks,
+            "parallelism plan has {} blocks, model '{}' has {}",
+            par.num_blocks(),
+            self.cfg.name,
+            self.cfg.num_blocks
+        );
     }
 }
 
@@ -847,14 +1007,19 @@ mod tests {
         assert!(err_one < err_all, "one-site {err_one} vs all-sites {err_all}");
     }
 
+    /// Shorthand: a uniform plan for one model.
+    fn upar(cfg: &ModelConfig, r: u32) -> ParallelismPlan {
+        ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(r))
+    }
+
     #[test]
     fn synthesis_report_trends_match_paper() {
         let m = zoo_model("engine").unwrap();
         let w = synthetic_weights(&m.config, 7);
         let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 8));
-        let r1 = t.synthesize(ReuseFactor(1));
-        let r2 = t.synthesize(ReuseFactor(2));
-        let r4 = t.synthesize(ReuseFactor(4));
+        let r1 = t.synthesize(&upar(&m.config, 1));
+        let r2 = t.synthesize(&upar(&m.config, 2));
+        let r4 = t.synthesize(&upar(&m.config, 4));
         // Tables II-IV trends: latency & interval grow with R, clock shrinks
         assert!(r1.latency_cycles < r2.latency_cycles);
         assert!(r2.latency_cycles < r4.latency_cycles);
@@ -878,8 +1043,8 @@ mod tests {
         plan.set_data("block0.ffn1", FixedSpec::new(12, 5)).unwrap();
         plan.set_data("block2.mha.qkv", FixedSpec::new(14, 6)).unwrap();
         let t_mix = FixedTransformer::with_plan(m.config.clone(), &w, plan);
-        let rep_uni = t_uni.synthesize(ReuseFactor(1));
-        let rep_mix = t_mix.synthesize(ReuseFactor(1));
+        let rep_uni = t_uni.synthesize(&upar(&m.config, 1));
+        let rep_mix = t_mix.synthesize(&upar(&m.config, 1));
         // shaved sites show their own spec in the per-layer column
         let spec_of = |rep: &SynthesisReport, name: &str| {
             rep.layers.iter().find(|l| l.name == name).unwrap().precision
@@ -905,7 +1070,7 @@ mod tests {
         for (m, want_r1) in zoo().iter().zip([119u64, 49, 219]) {
             let w = synthetic_weights(&m.config, 8);
             let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 8));
-            let rep = t.synthesize(ReuseFactor(1));
+            let rep = t.synthesize(&upar(&m.config, 1));
             assert_eq!(
                 rep.interval_cycles,
                 2 * m.config.seq_len as u64 + cal::II_BASE,
@@ -922,5 +1087,215 @@ mod tests {
             assert!(delta < 0.06, "{}: {} vs paper {paper}", m.config.name, rep.interval_cycles);
             let _ = want_r1;
         }
+    }
+
+    /// The retired closed-form `synthesize(ReuseFactor)` of the
+    /// pre-ParallelismPlan code, verbatim: stage depths from the old
+    /// (precision-blind) builders, latency/interval from the fitted
+    /// global-R formulas of `calibration.rs`.  The golden reference for
+    /// the schedule-derived path.
+    fn legacy_closed_form(cfg: &ModelConfig, r: ReuseFactor) -> (u64, u64) {
+        use super::super::pipeline::adder_tree_depth;
+        let rg = r.get() as u64;
+        let rds = |inner: usize| cal::reuse_depth_growth(inner, r);
+        let dense_depth =
+            |n_in: usize| adder_tree_depth(n_in as u64) + cal::DENSE_DEPTH_EXTRA + rds(n_in);
+        let ln_depth = || {
+            cal::LAYERNORM_DEPTH_BASE
+                + adder_tree_depth(cfg.d_model as u64)
+                + rds(cfg.d_model) / 2
+        };
+        let s = cfg.seq_len as u64;
+        let mut depths = dense_depth(cfg.input_size.max(2)); // embed
+        for _ in 0..cfg.num_blocks {
+            // MHA fill = qkv_proj + score stages (apply-V/concat drain
+            // concurrently: occupancy, not fill)
+            depths += dense_depth(cfg.d_model);
+            depths += cal::SOFTMAX_DEPTH_BASE
+                + adder_tree_depth(s)
+                + rds(cfg.seq_len) / 2
+                + adder_tree_depth(cfg.head_dim as u64)
+                + cal::DENSE_DEPTH_EXTRA;
+            if cfg.use_layernorm {
+                depths += ln_depth();
+            }
+            depths += dense_depth(cfg.d_model); // ffn1
+            depths += dense_depth(cfg.ffn_dim); // ffn2
+            if cfg.use_layernorm {
+                depths += ln_depth();
+            }
+        }
+        depths += adder_tree_depth(s) + 2; // pool
+        depths += dense_depth(cfg.d_model); // head
+        depths += dense_depth(cfg.head_hidden); // out
+        let ln_extra = if cfg.use_layernorm { 3 * s * rg / 2 } else { 0 };
+        let latency = depths + (2 * s - 1) * rg + ln_extra + cal::LATENCY_BASE;
+        let interval = (2 * s * cal::interval_multiplier(r) + cal::II_BASE).min(latency);
+        (latency, interval)
+    }
+
+    /// The tentpole's golden contract: a *uniform* `ParallelismPlan(R)`
+    /// reproduces the retired `synthesize(ReuseFactor(R))` numbers for
+    /// all three zoo models — exactly at sub-DSP-port widths, and within
+    /// the existing calibration tolerance where the schedule now charges
+    /// the DSP-port cascade registers the closed form ignored (width-18
+    /// b-tagging); interval, clock and resources stay exact everywhere.
+    #[test]
+    fn golden_uniform_plan_reproduces_retired_closed_form() {
+        for m in zoo() {
+            let w = synthetic_weights(&m.config, 7);
+            for (quant, exact) in [
+                (QuantConfig::new(6, 8), true),   // width 14: below the port
+                (QuantConfig::new(10, 8), false), // width 18: pays cascade fill
+            ] {
+                let t = FixedTransformer::new(m.config.clone(), &w, quant);
+                for r in [1u32, 2, 4, 8] {
+                    let rf = ReuseFactor(r);
+                    let rep = t.synthesize(&upar(&m.config, r));
+                    let (legacy_lat, legacy_ii) = legacy_closed_form(&m.config, rf);
+                    let tag = format!("{} {:?} R{r}", m.config.name, quant.data);
+                    assert_eq!(rep.interval_cycles, legacy_ii, "{tag} interval");
+                    assert_eq!(rep.clk_ns, cal::clock_ns(rf), "{tag} clock");
+                    // uniform plans: no II mismatch, no stream FIFOs —
+                    // resource totals are exactly the per-layer sums of
+                    // the unchanged resource model
+                    assert_eq!(rep.fifo, Resources::ZERO, "{tag} fifo");
+                    assert_eq!(
+                        rep.total,
+                        rep.layers.iter().map(|l| l.resources).sum::<Resources>(),
+                        "{tag} totals"
+                    );
+                    if exact {
+                        assert_eq!(rep.latency_cycles, legacy_lat, "{tag} latency");
+                    } else {
+                        assert!(
+                            rep.latency_cycles >= legacy_lat,
+                            "{tag}: cascade registers only ever add fill"
+                        );
+                        let delta = (rep.latency_cycles - legacy_lat) as f64
+                            / legacy_lat as f64;
+                        assert!(
+                            delta < 0.10,
+                            "{tag}: {} vs retired {legacy_lat} (+{:.1}%)",
+                            rep.latency_cycles,
+                            100.0 * delta
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Schedule monotonicity in per-site reuse (the satellite property):
+    /// raising any single site's reuse factor never reduces modeled
+    /// latency or interval cycles.
+    #[test]
+    fn prop_schedule_monotone_in_per_site_reuse() {
+        use crate::testutil::Prop;
+        Prop::new("schedule monotone in per-site reuse").runs(60).check(|g| {
+            let zoo = zoo();
+            let m = &zoo[g.usize_in(0, zoo.len())];
+            let w = synthetic_weights(&m.config, 5);
+            let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 8));
+            let mut par = upar(&m.config, [1u32, 2, 4][g.usize_in(0, 3)]);
+            // randomize a few sites first so monotonicity holds from
+            // heterogeneous starting points too
+            let sites = par.site_names();
+            for _ in 0..g.usize_in(0, 4) {
+                let site = &sites[g.usize_in(0, sites.len())];
+                par.set(site, ReuseFactor([1u32, 2, 4, 8][g.usize_in(0, 4)])).unwrap();
+            }
+            let base = t.synthesize(&par);
+            let site = &sites[g.usize_in(0, sites.len())];
+            let cur = par.get(site).unwrap().get();
+            let mut bumped = par.clone();
+            bumped.set(site, ReuseFactor(cur * 2)).unwrap();
+            let after = t.synthesize(&bumped);
+            assert!(
+                after.latency_cycles >= base.latency_cycles,
+                "{site} x2: latency {} -> {}",
+                base.latency_cycles,
+                after.latency_cycles
+            );
+            assert!(
+                after.interval_cycles >= base.interval_cycles,
+                "{site} x2: interval {} -> {}",
+                base.interval_cycles,
+                after.interval_cycles
+            );
+        });
+    }
+
+    /// Heterogeneous reuse has schedule-visible structure: relaxing a
+    /// non-gating site (the adder-only pool engine to R2) is latency-
+    /// free, while relaxing the gating MHA path is not.
+    #[test]
+    fn relaxing_pool_is_latency_free_but_relaxing_mha_is_not() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 9);
+        let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 8));
+        let base = t.synthesize(&upar(&m.config, 1));
+        let mut pool2 = upar(&m.config, 1);
+        pool2.set("pool", ReuseFactor(2)).unwrap();
+        let rep_pool = t.synthesize(&pool2);
+        assert_eq!(rep_pool.latency_cycles, base.latency_cycles);
+        assert_eq!(rep_pool.interval_cycles, base.interval_cycles);
+        // pool halves its adders: strictly cheaper at the same schedule
+        assert!(rep_pool.total.ff < base.total.ff);
+        assert_eq!(rep_pool.total.dsp, base.total.dsp);
+        let mut mha2 = upar(&m.config, 1);
+        mha2.set("block0.mha.qkv", ReuseFactor(2)).unwrap();
+        let rep_mha = t.synthesize(&mha2);
+        assert!(rep_mha.latency_cycles > base.latency_cycles, "MHA gates the drain");
+        assert!(rep_mha.interval_cycles > base.interval_cycles);
+    }
+
+    /// Heterogeneous reuse also *pays* where it converts rates: a slow
+    /// consumer behind a fast producer needs a real FIFO, surfaced in
+    /// the report's `fifo` term.
+    #[test]
+    fn ii_mismatch_charges_stream_fifo_bram() {
+        let m = zoo_model("btag").unwrap();
+        let w = synthetic_weights(&m.config, 9);
+        let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 8));
+        let mut par = upar(&m.config, 1);
+        // ffn1 runs at R8 behind an R1 mha/ln chain: its input stream
+        // backs up and must buffer
+        par.set("block0.ffn1", ReuseFactor(8)).unwrap();
+        let rep = t.synthesize(&par);
+        assert!(rep.fifo.bram18 > 0, "II mismatch must charge FIFO BRAM");
+        assert_eq!(
+            rep.total.bram18,
+            rep.layers.iter().map(|l| l.resources.bram18).sum::<u64>() + rep.fifo.bram18
+        );
+    }
+
+    /// The dataflow-totality satellite, end to end: a degenerate
+    /// zero-block config must synthesize (no panic) with a sane report.
+    #[test]
+    fn zero_block_degenerate_config_synthesizes() {
+        let mut cfg = zoo_model("engine").unwrap().config;
+        cfg.name = "degenerate".into();
+        cfg.num_blocks = 0;
+        let w = synthetic_weights(&cfg, 3);
+        let t = FixedTransformer::new(cfg.clone(), &w, QuantConfig::new(6, 8));
+        let rep = t.synthesize(&ParallelismPlan::uniform(0, ReuseFactor(2)));
+        // embed, pool, head, out — no blocks
+        assert_eq!(rep.layers.len(), 4);
+        assert!(rep.latency_cycles > 0);
+        assert!(rep.interval_cycles <= rep.latency_cycles);
+        assert!(rep.total.dsp > 0);
+        // the zero-block forward also still runs
+        let p = t.forward(&event(&cfg, 1));
+        assert_eq!(p.len(), cfg.output_size);
+    }
+
+    #[test]
+    fn synthesize_rejects_wrong_block_count_plan() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 5);
+        let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 8));
+        let bad = ParallelismPlan::uniform(m.config.num_blocks + 1, ReuseFactor(1));
+        assert!(std::panic::catch_unwind(|| t.synthesize(&bad)).is_err());
     }
 }

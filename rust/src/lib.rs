@@ -20,10 +20,11 @@
 //! * [`models`] — Table-I model zoo, NNW weight loading.
 //! * [`data`] — synthetic stand-ins for FordA / CMS b-tagging / LIGO O3a.
 //! * [`metrics`] — ROC-AUC, accuracy, latency histograms.
-//! * [`quant`] — post-training-quantization sweep engine (Figures 9-11)
-//!   plus the greedy per-site mixed-precision search
-//!   (`bit_shave_search`: fractional bits walk down per site under an
-//!   AUC-ratio floor).
+//! * [`quant`] — post-training-quantization sweep engine (Figures 9-11),
+//!   the greedy per-site mixed-precision search (`bit_shave_search`:
+//!   fractional bits walk down per site under an AUC-ratio floor), and
+//!   the joint (precision × parallelism) Pareto explorer
+//!   (`pareto_explore`, surfaced as `repro pareto`).
 //! * [`runtime`] — PJRT client over the AOT artifacts (`*.hlo.txt`);
 //!   gated behind the `pjrt` cargo feature (stubbed otherwise).
 //! * [`coordinator`] — the trigger-style streaming server (L3): sharded
@@ -36,6 +37,7 @@
 //! * [`experiments`] — regenerates every table and figure of the paper.
 //! * [`testutil`] — property-test driver (offline proptest stand-in).
 
+pub mod benchjson;
 pub mod cli;
 pub mod coordinator;
 pub mod data;

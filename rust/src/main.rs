@@ -7,9 +7,10 @@
 //! repro table-latency     --model engine|btag|gw
 //! repro figure-auc        --model engine|btag|gw [--events N] [--threads T] [--quick]
 //! repro figure-resources  --model engine|btag|gw
-//! repro synth             --model <m> [--reuse R] [--int I] [--frac F] [--precision-plan FILE]
+//! repro synth             --model <m> [--reuse R] [--int I] [--frac F] [--precision-plan FILE] [--reuse-plan FILE]
 //! repro mixed-precision   --model <m> [--floor 0.99] [--min-frac 2] [--save-plan FILE]
-//! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B] [--replicas R] [--precision-plan FILE]
+//! repro pareto            --model <m> [--floor 0.99] [--iters N] [--reuse-choices 1,2,4,8] [--save-plan FILE]
+//! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B] [--replicas R] [--precision-plan FILE] [--reuse-plan FILE]
 //! repro report            (everything above, in sequence)
 //! ```
 
@@ -22,12 +23,13 @@ use hls4ml_transformer::experiments::{
     artifacts_ready, auc_figures, latency_tables, load_checkpoints, resource_figures, table1,
 };
 use hls4ml_transformer::hls::{
-    load_plan_file, FixedTransformer, PrecisionPlan, QuantConfig, ReuseFactor,
+    load_plan_file, load_reuse_plan_file, FixedTransformer, ParallelismPlan, PrecisionPlan,
+    QuantConfig, ReuseFactor,
 };
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::{zoo, zoo_model};
-use hls4ml_transformer::quant::{bit_shave_search, EvalSet};
-use hls4ml_transformer::{artifacts_dir, models::ModelConfig};
+use hls4ml_transformer::quant::{bit_shave_search, pareto_explore, EvalSet, ParetoConfig};
+use hls4ml_transformer::{artifacts_dir, benchjson, models::ModelConfig};
 
 fn main() {
     let args = match Args::from_env() {
@@ -53,12 +55,17 @@ fn usage() {
          \x20 figure-auc       --model <m>        Figures 9-11 (AUC vs precision)\n\
          \x20 figure-resources --model <m>        Figures 12-14 (resources)\n\
          \x20 synth            --model <m>        one synthesis report\n\
-         \x20                  [--precision-plan F]  per-site plan file\n\
+         \x20                  [--precision-plan F]  per-site precision file\n\
+         \x20                  [--reuse-plan F]      per-site reuse file\n\
          \x20 mixed-precision  --model <m>        greedy per-site bit shaving\n\
          \x20                  [--floor 0.99] [--min-frac 2] [--save-plan F]\n\
+         \x20 pareto           --model <m>        joint precision x reuse frontier\n\
+         \x20                  [--floor 0.99] [--iters N] [--reuse-choices 1,2,4,8]\n\
+         \x20                  [--save-plan F]    write the dominating mixed plans\n\
          \x20 serve            --backend <b>      run the trigger server\n\
          \x20                  [--replicas R]     worker-pool width per model\n\
-         \x20                  [--precision-plan F]  per-site plan file (HLS)\n\
+         \x20                  [--precision-plan F]  per-site precision file (HLS)\n\
+         \x20                  [--reuse-plan F]      per-site reuse file (HLS)\n\
          \x20 report                              all experiments in sequence\n\
          models: engine | btag | gw    backends: float | hls | pjrt"
     );
@@ -116,11 +123,12 @@ fn run(args: &Args) -> Result<()> {
             print!("{}", resource_figures::render(&cfg, &pts, &fracs));
         }
         "synth" => {
-            args.expect_only(&["model", "reuse", "int", "frac", "precision-plan"])
+            args.expect_only(&["model", "reuse", "int", "frac", "precision-plan", "reuse-plan"])
                 .map_err(anyhow::Error::msg)?;
             let cfg = model_arg(args)?;
             let weights = weights_or_synthetic(&cfg)?;
             let reuse = args.get_parse("reuse", 1u32).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(reuse >= 1, "--reuse must be >= 1");
             let int_bits = args.get_parse("int", 6u32).map_err(anyhow::Error::msg)?;
             let frac = args.get_parse("frac", 8u32).map_err(anyhow::Error::msg)?;
             let base = QuantConfig::new(int_bits, frac);
@@ -129,8 +137,13 @@ fn run(args: &Args) -> Result<()> {
                     .map_err(anyhow::Error::msg)?,
                 None => PrecisionPlan::uniform(cfg.num_blocks, base),
             };
+            let par = match args.get("reuse-plan") {
+                Some(path) => load_reuse_plan_file(path, cfg.num_blocks, ReuseFactor(reuse))
+                    .map_err(anyhow::Error::msg)?,
+                None => ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(reuse)),
+            };
             let t = FixedTransformer::with_plan(cfg, &weights, plan);
-            let rep = t.synthesize(ReuseFactor(reuse));
+            let rep = t.synthesize(&par);
             print!("{rep}");
             println!(
                 "   VU13P utilization: {}",
@@ -161,8 +174,9 @@ fn run(args: &Args) -> Result<()> {
                 EvalSet::synthetic(&cfg, &weights, events, 0xBEEF)
             };
             let uniform = QuantConfig::new(int_bits, frac);
+            let par = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(reuse));
             let r = bit_shave_search(
-                &cfg, &weights, &eval, uniform, floor, min_frac, ReuseFactor(reuse),
+                &cfg, &weights, &eval, uniform, floor, min_frac, &par,
             );
             println!(
                 "mixed-precision search — {} | start {} | auc_ratio floor {floor} | \
@@ -204,9 +218,145 @@ fn run(args: &Args) -> Result<()> {
                 None => print!("{}", r.plan.serialize()),
             }
         }
+        "pareto" => {
+            args.expect_only(&[
+                "model", "int", "frac", "floor", "min-frac", "events", "iters", "seed",
+                "reuse-choices", "save-plan",
+            ])
+            .map_err(anyhow::Error::msg)?;
+            let cfg = model_arg(args)?;
+            let weights = weights_or_synthetic(&cfg)?;
+            let int_bits = args.get_parse("int", 6u32).map_err(anyhow::Error::msg)?;
+            let frac = args.get_parse("frac", 12u32).map_err(anyhow::Error::msg)?;
+            let floor = args.get_parse("floor", 0.99f64).map_err(anyhow::Error::msg)?;
+            let min_frac = args.get_parse("min-frac", 2u32).map_err(anyhow::Error::msg)?;
+            let events = args.get_parse("events", 64usize).map_err(anyhow::Error::msg)?;
+            let iters = args.get_parse("iters", 64usize).map_err(anyhow::Error::msg)?;
+            let seed = args.get_parse("seed", 0xF0CA_CC1Au64).map_err(anyhow::Error::msg)?;
+            let reuse_choices: Vec<u32> = args
+                .get_or("reuse-choices", "1,2,4,8")
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<u32>()
+                        .map_err(|_| format!("--reuse-choices: cannot parse '{t}'"))
+                })
+                .collect::<Result<_, _>>()
+                .map_err(anyhow::Error::msg)?;
+            let dir = artifacts_dir();
+            let eval = if artifacts_ready(&dir, &cfg.name) {
+                EvalSet::load(&dir, &cfg)?.truncate(events)
+            } else {
+                eprintln!(
+                    "(note: artifacts missing for {}; margin-labeled synthetic eval)",
+                    cfg.name
+                );
+                EvalSet::synthetic(&cfg, &weights, events, 0xBEEF)
+            };
+            let pcfg = ParetoConfig {
+                auc_floor: floor,
+                min_frac,
+                reuse_choices,
+                anneal_iters: iters,
+                seed,
+                ..ParetoConfig::default()
+            };
+            let base = QuantConfig::new(int_bits, frac);
+            let res = pareto_explore(&cfg, &weights, &eval, base, &pcfg);
+            println!(
+                "pareto exploration — {} | base {} | auc_ratio floor {floor} | \
+                 {} eval events | {} schedule evals | {} eval-set scorings",
+                cfg.name,
+                base.data,
+                eval.len(),
+                res.evals,
+                res.scored
+            );
+            println!(
+                "  {:>3}  {:>9} {:>9} {:>10} {:>8} {:>9} {:>8}  plan",
+                "#", "lat(cyc)", "II(cyc)", "lat(us)", "DSP", "FF", "auc"
+            );
+            for (i, p) in res.frontier.iter().enumerate() {
+                println!(
+                    "  {:>3}  {:>9} {:>9} {:>10.3} {:>8} {:>9} {:>8.4}  {} {}",
+                    i,
+                    p.latency_cycles,
+                    p.interval_cycles,
+                    p.latency_us,
+                    p.resources.dsp,
+                    p.resources.ff,
+                    p.auc_ratio,
+                    p.precision.summary(),
+                    p.parallelism.summary(),
+                );
+                benchjson::emit(
+                    &format!("pareto/{}/point{i}", cfg.name),
+                    &[
+                        ("latency_cycles", p.latency_cycles as f64),
+                        ("interval_cycles", p.interval_cycles as f64),
+                        ("latency_us", p.latency_us),
+                        ("dsp", p.resources.dsp as f64),
+                        ("ff", p.resources.ff as f64),
+                        ("lut", p.resources.lut as f64),
+                        ("bram18", p.resources.bram18 as f64),
+                        ("auc_ratio", p.auc_ratio),
+                        ("mixed_reuse", p.is_mixed_reuse() as u64 as f64),
+                    ],
+                );
+            }
+            match (res.best_uniform.as_ref(), res.mixed_dominator()) {
+                (Some(bu), Some(dom)) => {
+                    println!(
+                        "  best uniform: {} at {} cyc / DSP+FF {}",
+                        bu.parallelism.summary(),
+                        bu.latency_cycles,
+                        bu.cost()
+                    );
+                    println!(
+                        "  dominated by mixed plan {} at {} cyc / DSP+FF {} \
+                         (saves {} DSP+FF at <= latency)",
+                        dom.parallelism.summary(),
+                        dom.latency_cycles,
+                        dom.cost(),
+                        bu.cost() - dom.cost()
+                    );
+                    benchjson::emit(
+                        &format!("pareto/{}/dominance", cfg.name),
+                        &[
+                            ("uniform_latency_cycles", bu.latency_cycles as f64),
+                            ("uniform_dsp_ff", bu.cost() as f64),
+                            ("mixed_latency_cycles", dom.latency_cycles as f64),
+                            ("mixed_dsp_ff", dom.cost() as f64),
+                            ("dsp_ff_saved", (bu.cost() - dom.cost()) as f64),
+                        ],
+                    );
+                    if let Some(path) = args.get("save-plan") {
+                        std::fs::write(path, dom.parallelism.serialize())
+                            .with_context(|| format!("writing reuse plan to {path}"))?;
+                        let ppath = format!("{path}.precision");
+                        std::fs::write(&ppath, dom.precision.serialize())
+                            .with_context(|| format!("writing precision plan to {ppath}"))?;
+                        println!("  plans written to {path} (+ {ppath})");
+                    }
+                }
+                (Some(bu), None) => {
+                    println!(
+                        "  best uniform: {} at {} cyc / DSP+FF {} — no mixed plan \
+                         dominated it this run",
+                        bu.parallelism.summary(),
+                        bu.latency_cycles,
+                        bu.cost()
+                    );
+                }
+                _ => println!(
+                    "  no feasible design point at auc_ratio floor {floor} on the VU13P"
+                ),
+            }
+        }
         "serve" => {
             args.expect_only(&[
                 "backend", "events", "rate", "batch", "models", "replicas", "precision-plan",
+                "reuse", "reuse-plan",
             ])
             .map_err(anyhow::Error::msg)?;
             let backend: BackendKind = args
@@ -236,6 +386,22 @@ fn run(args: &Args) -> Result<()> {
                 "--precision-plan only applies to the hls backend \
                  (float/pjrt engines are not quantized)"
             );
+            let reuse = args.get_parse("reuse", 1u32).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(reuse >= 1, "--reuse must be >= 1");
+            let reuse_plan_text: Option<String> = match args.get("reuse-plan") {
+                Some(path) => Some(
+                    std::fs::read_to_string(path)
+                        .with_context(|| format!("--reuse-plan {path}"))?,
+                ),
+                None => None,
+            };
+            // the reuse dial shapes the *modeled* FPGA design point, and
+            // only the HLS backend models one
+            anyhow::ensure!(
+                (reuse_plan_text.is_none() && reuse == 1) || backend == BackendKind::Hls,
+                "--reuse/--reuse-plan only apply to the hls backend \
+                 (float/pjrt engines model no FPGA schedule)"
+            );
             let models: Vec<&'static str> = match args.get_or("models", "engine,btag,gw") {
                 "all" => vec!["engine", "btag", "gw"],
                 list => list
@@ -256,6 +422,11 @@ fn run(args: &Args) -> Result<()> {
                 "--precision-plan applies to a single model; pass --models <m> \
                  (plans are per-model: site names carry block indices)"
             );
+            anyhow::ensure!(
+                reuse_plan_text.is_none() || models.len() == 1,
+                "--reuse-plan applies to a single model; pass --models <m> \
+                 (plans are per-model: site names carry block indices)"
+            );
             let cfg = ServerConfig {
                 pipelines: models
                     .into_iter()
@@ -264,6 +435,8 @@ fn run(args: &Args) -> Result<()> {
                         pc.batch = BatchPolicy { max_batch: batch, ..Default::default() };
                         pc.replicas = replicas;
                         pc.precision_plan = plan_text.clone();
+                        pc.reuse = ReuseFactor(reuse);
+                        pc.reuse_plan = reuse_plan_text.clone();
                         pc
                     })
                     .collect(),

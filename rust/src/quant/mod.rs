@@ -1,10 +1,13 @@
 //! Post-training-quantization machinery + the precision sweep engine
-//! behind Figures 9-11 (S8).
+//! behind Figures 9-11 (S8), plus the joint (precision × parallelism)
+//! Pareto explorer behind `repro pareto`.
 
 pub mod evalset;
+pub mod pareto;
 pub mod sweep;
 
 pub use evalset::EvalSet;
+pub use pareto::{pareto_explore, ParetoConfig, ParetoPoint, ParetoResult};
 pub use sweep::{
     bit_shave_search, run_sweep, score_plan, score_point, BitShaveResult, PlanScore,
     SweepPoint, SweepResult,

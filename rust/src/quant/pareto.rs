@@ -1,0 +1,536 @@
+//! Joint (precision plan × parallelism plan) design-space exploration:
+//! the latency-vs-resources Pareto frontier under a device budget and an
+//! AUC-ratio floor.
+//!
+//! The paper tunes two knobs per design point — fixed-point precision
+//! (§VI-A) and the reuse factor (§VI-B) — but only uniformly and only
+//! one at a time.  With both dials *per site* ([`PrecisionPlan`],
+//! [`ParallelismPlan`]) the design space is a lattice this module walks
+//! with a deterministic greedy phase (seed every uniform reuse choice,
+//! then relax non-gating sites while latency holds and cost falls, then
+//! shave fractional bits under the AUC floor) followed by a seeded
+//! annealing phase that jitters single sites to fill in the frontier.
+//!
+//! Two structural facts keep the search cheap:
+//! * reuse is *schedule-only* — it never changes a probability, so
+//!   parallelism moves need no eval-set re-scoring (AUC is cached per
+//!   precision plan);
+//! * the schedule is monotone in per-site reuse (property-tested in
+//!   `hls::transformer`), so latency-free resource savings exist exactly
+//!   at the sites that neither gate the drain nor the re-arm interval.
+
+use std::collections::HashMap;
+
+use crate::fixed::FixedSpec;
+use crate::hls::resources::{Device, Resources, VU13P};
+use crate::hls::{
+    FixedTransformer, ParallelismPlan, PrecisionPlan, QuantConfig, ReuseFactor,
+    SynthesisReport,
+};
+use crate::models::config::ModelConfig;
+use crate::models::weights::Weights;
+use crate::testutil::XorShift;
+
+use super::evalset::EvalSet;
+use super::sweep::score_plan;
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct ParetoConfig {
+    /// Feasibility floor on `auc_fixed / auc_float`.
+    pub auc_floor: f64,
+    /// Fractional bits below which no site is shaved.
+    pub min_frac: u32,
+    /// Per-site reuse factors the walk may assign (sorted, deduped).
+    pub reuse_choices: Vec<u32>,
+    /// Annealing iterations after the deterministic greedy phase.
+    pub anneal_iters: usize,
+    /// RNG seed of the annealing walk (the greedy phase and therefore
+    /// the headline dominance result are deterministic regardless).
+    pub seed: u64,
+    /// Device budget every feasible point must fit.
+    pub device: Device,
+}
+
+impl Default for ParetoConfig {
+    fn default() -> Self {
+        Self {
+            auc_floor: 0.99,
+            min_frac: 2,
+            reuse_choices: vec![1, 2, 4, 8],
+            anneal_iters: 64,
+            seed: 0xF0CA_CC1A,
+            device: VU13P,
+        }
+    }
+}
+
+/// One feasible design point on (or offered to) the frontier.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub precision: PrecisionPlan,
+    pub parallelism: ParallelismPlan,
+    pub latency_cycles: u64,
+    pub interval_cycles: u64,
+    pub latency_us: f64,
+    pub resources: Resources,
+    pub auc_ratio: f64,
+}
+
+impl ParetoPoint {
+    /// The resource objective: DSP + FF (the two axes the paper's
+    /// Figures 12-13 track and the mixed-precision work minimizes).
+    pub fn cost(&self) -> u64 {
+        self.resources.dsp + self.resources.ff
+    }
+
+    /// Strict Pareto dominance on (latency cycles, DSP+FF): at least as
+    /// good on both axes, strictly better on one.
+    pub fn dominates(&self, o: &ParetoPoint) -> bool {
+        (self.latency_cycles <= o.latency_cycles && self.cost() < o.cost())
+            || (self.latency_cycles < o.latency_cycles && self.cost() <= o.cost())
+    }
+
+    /// True iff the reuse map is heterogeneous.
+    pub fn is_mixed_reuse(&self) -> bool {
+        self.parallelism.is_uniform().is_none()
+    }
+}
+
+/// Result of one exploration.
+#[derive(Clone, Debug)]
+pub struct ParetoResult {
+    /// Non-dominated feasible points, sorted by latency then cost.
+    pub frontier: Vec<ParetoPoint>,
+    /// The best (lowest-latency, then cheapest) *feasible uniform-reuse*
+    /// design point — the baseline a mixed plan must beat.  `None` when
+    /// no uniform seed fits the budget at the AUC floor.
+    pub best_uniform: Option<ParetoPoint>,
+    /// Schedule/resource evaluations spent (`synthesize` calls).
+    pub evals: usize,
+    /// Eval-set scorings spent (one per distinct precision plan).
+    pub scored: usize,
+}
+
+impl ParetoResult {
+    /// The first frontier point with a heterogeneous reuse map that
+    /// strictly dominates [`Self::best_uniform`] — the acceptance
+    /// artifact of the explorer.
+    pub fn mixed_dominator(&self) -> Option<&ParetoPoint> {
+        let bu = self.best_uniform.as_ref()?;
+        self.frontier
+            .iter()
+            .find(|p| p.is_mixed_reuse() && p.dominates(bu))
+    }
+}
+
+/// Evaluation engine with per-precision-plan caches: the fixed-point
+/// engine (weights PTQ'd once per plan) and its AUC ratio (scored once
+/// per plan — reuse moves are schedule-only and never re-score).
+struct Explorer<'a> {
+    cfg: &'a ModelConfig,
+    weights: &'a Weights,
+    eval: &'a EvalSet,
+    pcfg: &'a ParetoConfig,
+    engines: HashMap<String, FixedTransformer>,
+    aucs: HashMap<String, f64>,
+    evals: usize,
+    scored: usize,
+}
+
+impl<'a> Explorer<'a> {
+    fn new(
+        cfg: &'a ModelConfig,
+        weights: &'a Weights,
+        eval: &'a EvalSet,
+        pcfg: &'a ParetoConfig,
+    ) -> Self {
+        Self {
+            cfg,
+            weights,
+            eval,
+            pcfg,
+            engines: HashMap::new(),
+            aucs: HashMap::new(),
+            evals: 0,
+            scored: 0,
+        }
+    }
+
+    fn synth(&mut self, pp: &PrecisionPlan, par: &ParallelismPlan) -> SynthesisReport {
+        let key = pp.serialize();
+        if !self.engines.contains_key(&key) {
+            self.engines.insert(
+                key.clone(),
+                FixedTransformer::with_plan(self.cfg.clone(), self.weights, pp.clone()),
+            );
+        }
+        self.evals += 1;
+        self.engines.get(&key).expect("just inserted").synthesize(par)
+    }
+
+    fn auc_ratio(&mut self, pp: &PrecisionPlan) -> f64 {
+        let key = pp.serialize();
+        if let Some(&a) = self.aucs.get(&key) {
+            return a;
+        }
+        self.scored += 1;
+        let a = score_plan(self.cfg, self.weights, self.eval, pp).auc_ratio;
+        self.aucs.insert(key, a);
+        a
+    }
+
+    fn point(&mut self, pp: &PrecisionPlan, par: &ParallelismPlan) -> ParetoPoint {
+        let rep = self.synth(pp, par);
+        ParetoPoint {
+            precision: pp.clone(),
+            parallelism: par.clone(),
+            latency_cycles: rep.latency_cycles,
+            interval_cycles: rep.interval_cycles,
+            latency_us: rep.latency_us,
+            resources: rep.total,
+            auc_ratio: self.auc_ratio(pp),
+        }
+    }
+
+    fn feasible(&self, p: &ParetoPoint) -> bool {
+        p.resources.fits(&self.pcfg.device) && p.auc_ratio >= self.pcfg.auc_floor
+    }
+}
+
+/// Insert `p` into the archive iff no member dominates or duplicates it,
+/// evicting anything it dominates.  Returns whether it was kept.
+fn offer(frontier: &mut Vec<ParetoPoint>, p: ParetoPoint) -> bool {
+    let duplicated = frontier
+        .iter()
+        .any(|q| q.dominates(&p) || (q.latency_cycles == p.latency_cycles && q.cost() == p.cost()));
+    if duplicated {
+        return false;
+    }
+    frontier.retain(|q| !p.dominates(q));
+    frontier.push(p);
+    true
+}
+
+/// Sites the model actually instantiates (LN sites are dead on LN-free
+/// configs and must not soak up moves).
+fn live_sites(cfg: &ModelConfig, names: Vec<String>) -> Vec<String> {
+    names
+        .into_iter()
+        .filter(|s| cfg.use_layernorm || !(s.ends_with(".ln1") || s.ends_with(".ln2")))
+        .collect()
+}
+
+/// Explore the joint (precision × parallelism) space from a uniform
+/// `base` precision; see the module docs for the phase structure.
+pub fn pareto_explore(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    eval: &EvalSet,
+    base: QuantConfig,
+    pcfg: &ParetoConfig,
+) -> ParetoResult {
+    let mut ex = Explorer::new(cfg, weights, eval, pcfg);
+    let mut choices = pcfg.reuse_choices.clone();
+    choices.retain(|&r| r >= 1);
+    choices.sort_unstable();
+    choices.dedup();
+    if choices.is_empty() {
+        choices.push(1);
+    }
+    let base_pp = PrecisionPlan::uniform(cfg.num_blocks, base);
+    let mut frontier: Vec<ParetoPoint> = Vec::new();
+    let mut best_uniform: Option<ParetoPoint> = None;
+    let mut seeds: Vec<ParetoPoint> = Vec::new();
+
+    // ---- phase 1: uniform seeds ---------------------------------------
+    for &r in &choices {
+        let par = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(r));
+        let p = ex.point(&base_pp, &par);
+        if !ex.feasible(&p) {
+            continue;
+        }
+        let better = match &best_uniform {
+            None => true,
+            Some(b) => (p.latency_cycles, p.cost()) < (b.latency_cycles, b.cost()),
+        };
+        if better {
+            best_uniform = Some(p.clone());
+        }
+        offer(&mut frontier, p.clone());
+        seeds.push(p);
+    }
+
+    // ---- phase 2: greedy reuse relaxation (deterministic) -------------
+    // From a starting point, raise one site's reuse at a time, keeping a
+    // move only when it is latency-free and strictly cheaper — the
+    // "relax every engine the schedule isn't gated by" walk.  Reuse
+    // moves never re-score the eval set, so this is pure schedule work.
+    let all_sites = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(1)).site_names();
+    let sites = live_sites(cfg, all_sites);
+    let relax = |ex: &mut Explorer, frontier: &mut Vec<ParetoPoint>, seed: ParetoPoint| {
+        let mut cur = seed;
+        loop {
+            let mut improved = false;
+            'scan: for site in &sites {
+                let r_now = cur.parallelism.get(site).expect("live site").get();
+                for &r in choices.iter().filter(|&&c| c > r_now) {
+                    let mut par = cur.parallelism.clone();
+                    par.set(site, ReuseFactor(r)).expect("live site");
+                    let cand = ex.point(&cur.precision, &par);
+                    if ex.feasible(&cand)
+                        && cand.latency_cycles <= cur.latency_cycles
+                        && cand.cost() < cur.cost()
+                    {
+                        offer(frontier, cand.clone());
+                        cur = cand;
+                        improved = true;
+                        break 'scan;
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    };
+    for seed in seeds {
+        relax(&mut ex, &mut frontier, seed);
+    }
+
+    // ---- phase 3: greedy precision shave off the best uniform ---------
+    // One pass of per-site fractional-bit shaving under the AUC floor,
+    // each kept step offered to the frontier (the joint dial: a shave
+    // can unlock a cheaper point at the same latency).
+    if let Some(bu) = best_uniform.clone() {
+        let mut cur = bu;
+        for site in live_sites(cfg, cur.precision.site_names()) {
+            let q = cur.precision.get(&site).expect("live site");
+            if q.data.frac() <= pcfg.min_frac || q.data.width() <= q.data.integer() + 1 {
+                continue;
+            }
+            let shaved = FixedSpec::new(q.data.width() - 1, q.data.integer());
+            let mut pp = cur.precision.clone();
+            if pp.set_data(&site, shaved).is_err() {
+                continue;
+            }
+            let cand = ex.point(&pp, &cur.parallelism);
+            if ex.feasible(&cand) && cand.cost() <= cur.cost() {
+                offer(&mut frontier, cand.clone());
+                cur = cand;
+            }
+        }
+    }
+
+    // ---- phase 4: annealing jitter ------------------------------------
+    // Single-site random moves (reuse up/down, frac shave/widen) from a
+    // walk state that restarts off the archive; worse-but-feasible moves
+    // are taken with a cooling probability so the walk can cross valleys.
+    let mut rng = XorShift::new(pcfg.seed);
+    let psites = live_sites(cfg, base_pp.site_names());
+    if let Some(first) = frontier.first().cloned() {
+        let mut walk = first;
+        for i in 0..pcfg.anneal_iters {
+            if !frontier.is_empty() && rng.next_f64() < 0.2 {
+                walk = frontier[(rng.next_u64() as usize) % frontier.len()].clone();
+            }
+            let temp = 1.0 - i as f64 / pcfg.anneal_iters.max(1) as f64;
+            let cand = match rng.next_u64() % 3 {
+                0 => {
+                    // reuse move: one site, one notch up or down
+                    let site = &sites[(rng.next_u64() as usize) % sites.len()];
+                    let r_now = walk.parallelism.get(site).expect("live site").get();
+                    let idx = choices.iter().position(|&c| c >= r_now).unwrap_or(0);
+                    let next = if rng.next_u64() & 1 == 1 {
+                        choices.get(idx + 1)
+                    } else {
+                        idx.checked_sub(1).and_then(|j| choices.get(j))
+                    };
+                    next.map(|&r| {
+                        let mut par = walk.parallelism.clone();
+                        par.set(site, ReuseFactor(r)).expect("live site");
+                        ex.point(&walk.precision, &par)
+                    })
+                }
+                1 => {
+                    // precision shave
+                    let site = &psites[(rng.next_u64() as usize) % psites.len()];
+                    let q = walk.precision.get(site).expect("live site");
+                    if q.data.frac() > pcfg.min_frac {
+                        let mut pp = walk.precision.clone();
+                        let shaved = FixedSpec::new(q.data.width() - 1, q.data.integer());
+                        match pp.set_data(site, shaved) {
+                            Ok(()) => Some(ex.point(&pp, &walk.parallelism)),
+                            Err(_) => None,
+                        }
+                    } else {
+                        None
+                    }
+                }
+                _ => {
+                    // precision widen, bounded by the base width
+                    let site = &psites[(rng.next_u64() as usize) % psites.len()];
+                    let q = walk.precision.get(site).expect("live site");
+                    if q.data.width() < base.data.width() {
+                        let mut pp = walk.precision.clone();
+                        let widened = FixedSpec::new(q.data.width() + 1, q.data.integer());
+                        match pp.set_data(site, widened) {
+                            Ok(()) => Some(ex.point(&pp, &walk.parallelism)),
+                            Err(_) => None,
+                        }
+                    } else {
+                        None
+                    }
+                }
+            };
+            if let Some(cand) = cand {
+                if ex.feasible(&cand) {
+                    offer(&mut frontier, cand.clone());
+                    if cand.dominates(&walk) || rng.next_f64() < 0.4 * temp {
+                        walk = cand;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- phase 5: final reuse relaxation over the frontier ------------
+    // Precision shaves (phases 3-4) can mint uniform-reuse points that
+    // dominate earlier mixed ones; a last relax pass over a snapshot
+    // restores the invariant that every surviving design has had its
+    // non-gating engines relaxed — in particular, the lowest-latency
+    // point always ends up with (or dominated only by) a latency-free
+    // cheaper mixed twin.
+    for p in frontier.clone() {
+        relax(&mut ex, &mut frontier, p);
+    }
+
+    frontier.sort_by(|a, b| {
+        (a.latency_cycles, a.cost()).cmp(&(b.latency_cycles, b.cost()))
+    });
+    ParetoResult { frontier, best_uniform, evals: ex.evals, scored: ex.scored }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::weights::synthetic_weights;
+    use crate::models::zoo::{zoo, zoo_model};
+
+    fn small_cfg(iters: usize) -> ParetoConfig {
+        ParetoConfig { anneal_iters: iters, ..ParetoConfig::default() }
+    }
+
+    /// The tentpole's acceptance bar: under the VU13P budget at AUC
+    /// floor 0.99, a mixed-reuse plan strictly dominates the best
+    /// uniform-reuse design point (lower latency at <= DSP+FF, or fewer
+    /// DSP+FF at <= latency) on at least one zoo model.
+    #[test]
+    fn pareto_mixed_reuse_dominates_best_uniform_on_a_zoo_model() {
+        let mut found = None;
+        for m in zoo() {
+            let w = synthetic_weights(&m.config, 31);
+            // margin-labeled eval: auc_float = 1 by construction, so the
+            // floor measures pure quantization damage
+            let eval = EvalSet::synthetic(&m.config, &w, 16, 7);
+            let r = pareto_explore(
+                &m.config,
+                &w,
+                &eval,
+                QuantConfig::new(6, 12),
+                &small_cfg(24),
+            );
+            let bu = match r.best_uniform.as_ref() {
+                Some(b) => b,
+                None => continue,
+            };
+            assert!(bu.parallelism.is_uniform().is_some());
+            if let Some(dom) = r.mixed_dominator() {
+                assert!(dom.is_mixed_reuse());
+                assert!(dom.dominates(bu), "mixed_dominator must dominate");
+                assert!(dom.resources.fits(&VU13P));
+                assert!(dom.auc_ratio >= 0.99);
+                // dominance spelled out: lower latency at <= resources,
+                // or fewer DSPs+FFs at <= latency
+                assert!(
+                    (dom.latency_cycles < bu.latency_cycles && dom.cost() <= bu.cost())
+                        || (dom.latency_cycles <= bu.latency_cycles
+                            && dom.cost() < bu.cost())
+                );
+                found = Some(m.config.name.clone());
+                break;
+            }
+        }
+        assert!(
+            found.is_some(),
+            "no zoo model produced a mixed-reuse plan dominating the best uniform point"
+        );
+    }
+
+    #[test]
+    fn frontier_is_mutually_non_dominated_and_sorted() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 32);
+        let eval = EvalSet::synthetic(&m.config, &w, 12, 9);
+        let r = pareto_explore(&m.config, &w, &eval, QuantConfig::new(6, 12), &small_cfg(32));
+        assert!(!r.frontier.is_empty());
+        for (i, a) in r.frontier.iter().enumerate() {
+            assert!(a.resources.fits(&VU13P));
+            assert!(a.auc_ratio >= 0.99, "infeasible point on the frontier");
+            for (j, b) in r.frontier.iter().enumerate() {
+                if i != j {
+                    assert!(!a.dominates(b), "frontier point {i} dominates {j}");
+                }
+            }
+        }
+        for w2 in r.frontier.windows(2) {
+            assert!(w2[0].latency_cycles <= w2[1].latency_cycles, "sorted by latency");
+            // along a frontier, more latency must buy fewer resources
+            assert!(w2[0].cost() > w2[1].cost(), "latency must buy resources");
+        }
+        assert!(r.evals >= r.frontier.len());
+        assert!(r.scored >= 1, "the base precision plan is scored once");
+    }
+
+    #[test]
+    fn reuse_moves_do_not_rescore_the_eval_set() {
+        // AUC is a function of precision alone; with annealing biased to
+        // reuse moves the scored count stays far below the eval count
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 33);
+        let eval = EvalSet::synthetic(&m.config, &w, 8, 11);
+        let pcfg = ParetoConfig { anneal_iters: 0, ..ParetoConfig::default() };
+        let r = pareto_explore(&m.config, &w, &eval, QuantConfig::new(6, 10), &pcfg);
+        // phases 1-2 are reuse-only; phase 3 shaves once per site at most
+        let sites = 1 + m.config.num_blocks * 6 + 4;
+        assert!(r.scored <= 1 + sites, "{} scorings for {} sites", r.scored, sites);
+        assert!(r.evals > 0);
+    }
+
+    #[test]
+    fn infeasible_floor_yields_empty_frontier() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 34);
+        let eval = EvalSet::synthetic(&m.config, &w, 8, 13);
+        let pcfg = ParetoConfig { auc_floor: 1.5, anneal_iters: 4, ..ParetoConfig::default() };
+        let r = pareto_explore(&m.config, &w, &eval, QuantConfig::new(6, 10), &pcfg);
+        assert!(r.frontier.is_empty());
+        assert!(r.best_uniform.is_none());
+        assert!(r.mixed_dominator().is_none());
+    }
+
+    #[test]
+    fn explorer_is_deterministic_for_a_seed() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 35);
+        let eval = EvalSet::synthetic(&m.config, &w, 8, 15);
+        let run = || {
+            pareto_explore(&m.config, &w, &eval, QuantConfig::new(6, 10), &small_cfg(16))
+                .frontier
+                .iter()
+                .map(|p| (p.latency_cycles, p.cost()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -14,7 +14,7 @@
 
 use crate::fixed::FixedSpec;
 use crate::hls::resources::Resources;
-use crate::hls::{FixedTransformer, PrecisionPlan, QuantConfig, ReuseFactor};
+use crate::hls::{FixedTransformer, ParallelismPlan, PrecisionPlan, QuantConfig};
 use crate::metrics::auc::{binary_auc, macro_auc};
 use crate::models::config::ModelConfig;
 use crate::models::weights::Weights;
@@ -186,7 +186,7 @@ pub struct BitShaveResult {
     pub auc_floor: f64,
     pub uniform_score: PlanScore,
     pub plan_score: PlanScore,
-    /// Synthesized totals at the search's reuse factor.
+    /// Synthesized totals under the search's parallelism plan.
     pub uniform_resources: Resources,
     pub plan_resources: Resources,
     /// Total fractional bits removed across all sites.
@@ -212,7 +212,7 @@ pub fn bit_shave_search(
     uniform: QuantConfig,
     auc_floor: f64,
     min_frac: u32,
-    reuse: ReuseFactor,
+    par: &ParallelismPlan,
 ) -> BitShaveResult {
     let mut plan = PrecisionPlan::uniform(cfg.num_blocks, uniform);
     let sites: Vec<String> = plan
@@ -253,10 +253,10 @@ pub fn bit_shave_search(
     let plan_score = score_plan(cfg, weights, eval, &plan);
     points_scored += 1;
     let uniform_resources = FixedTransformer::new(cfg.clone(), weights, uniform)
-        .synthesize(reuse)
+        .synthesize(par)
         .total;
     let plan_resources = FixedTransformer::with_plan(cfg.clone(), weights, plan.clone())
-        .synthesize(reuse)
+        .synthesize(par)
         .total;
     let bits_shaved: u32 = plan
         .site_names()
@@ -401,7 +401,8 @@ mod tests {
         // ratio floor measures pure quantization damage
         let eval = EvalSet::synthetic(&cfg, &w, 24, 7);
         let uniform = QuantConfig::new(6, 12); // width 18: above the DSP port
-        let r = bit_shave_search(&cfg, &w, &eval, uniform, 0.99, 2, ReuseFactor(1));
+        let par = ParallelismPlan::uniform(cfg.num_blocks, crate::hls::ReuseFactor(1));
+        let r = bit_shave_search(&cfg, &w, &eval, uniform, 0.99, 2, &par);
         assert!(
             r.plan_score.auc_ratio >= 0.99,
             "found plan violates the floor: {}",
@@ -427,7 +428,8 @@ mod tests {
         let uniform = QuantConfig::new(6, 6);
         // floor 0 lets every shave through: all sites must stop at
         // min_frac, never below
-        let r = bit_shave_search(&cfg, &w, &eval, uniform, 0.0, 4, ReuseFactor(1));
+        let par = ParallelismPlan::uniform(cfg.num_blocks, crate::hls::ReuseFactor(1));
+        let r = bit_shave_search(&cfg, &w, &eval, uniform, 0.0, 4, &par);
         for site in r.plan.site_names() {
             let q = r.plan.get(&site).unwrap();
             if cfg.use_layernorm || !(site.ends_with(".ln1") || site.ends_with(".ln2")) {
