@@ -64,6 +64,7 @@ fn main() -> Result<()> {
         events_per_source: events,
         rate_per_source: rate,
         artifacts_dir: dir.clone(),
+        ..Default::default()
     };
     let report = TriggerServer::run(&cfg)?;
     print!("{report}");

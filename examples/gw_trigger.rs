@@ -9,14 +9,17 @@ use anyhow::Result;
 use hls4ml_transformer::artifacts_dir;
 use hls4ml_transformer::cli::Args;
 use hls4ml_transformer::coordinator::{
-    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, TriggerServer, WeightsSource,
+    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, SourceMode, StreamSource,
+    TriggerServer, WeightsSource,
 };
+use hls4ml_transformer::data::StrainConfig;
 use hls4ml_transformer::experiments::{artifacts_ready, load_checkpoints};
 use hls4ml_transformer::hls::{
     FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor,
 };
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo_model;
+use hls4ml_transformer::stream::{analyze, StreamParams};
 use std::time::Duration;
 
 fn main() -> Result<()> {
@@ -44,9 +47,60 @@ fn main() -> Result<()> {
         events_per_source: events,
         rate_per_source: 0,
         artifacts_dir: artifacts_dir(),
+        ..Default::default()
     };
     let report = TriggerServer::run(&cfg)?;
     print!("{report}");
+
+    // The same trigger, fed the deployment way: a continuous strain
+    // stream windowized into overlapping model windows, scores clustered
+    // into de-duplicated trigger candidates.  With trained artifacts the
+    // GW model itself detects; without them we stream through the
+    // LN-free engine model programmed as an analytic excess-power
+    // detector, so the e2e stream -> trigger path is demonstrably
+    // recovering injections either way.
+    let (stream_model, stream_weights) = if have_artifacts {
+        ("gw", WeightsSource::Artifacts)
+    } else {
+        println!("\n(no artifacts: streaming demo uses the engine detector instead of gw)");
+        ("engine", WeightsSource::Detector)
+    };
+    let scfg = zoo_model(stream_model).unwrap().config;
+    let samples = 40_000u64;
+    let hop = scfg.seq_len / 2;
+    println!(
+        "\n== streaming {samples} strain samples through {stream_model} \
+         (hop {hop} = 50% overlap) =="
+    );
+    let stream_cfg = ServerConfig {
+        pipelines: vec![PipelineConfig {
+            weights: stream_weights,
+            ring_capacity: 8192,
+            source: SourceMode::Stream(StreamSource {
+                samples,
+                hop,
+                strain: StrainConfig::new(0xA11CE, scfg.input_size, scfg.seq_len),
+            }),
+            ..PipelineConfig::new(stream_model, backend)
+        }],
+        events_per_source: 0,
+        rate_per_source: 0,
+        artifacts_dir: artifacts_dir(),
+        ..Default::default()
+    };
+    let sreport = TriggerServer::run(&stream_cfg)?;
+    let st = &sreport.per_model[stream_model];
+    let truth = sreport
+        .stream_truth
+        .get(stream_model)
+        .map(|v| v.as_slice())
+        .unwrap_or(&[]);
+    let sr = analyze(
+        st.windows.clone(),
+        truth,
+        &StreamParams::for_windows(scfg.seq_len as u64),
+    );
+    print!("{sr}");
 
     // what the same stream would cost on the VU13P (paper Table IV)
     let zoo = zoo_model("gw").unwrap();

@@ -10,13 +10,16 @@ use std::time::Duration;
 
 use hls4ml_transformer::artifacts_dir;
 use hls4ml_transformer::coordinator::{
-    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, TriggerServer, WeightsSource,
+    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, SourceMode, StreamSource,
+    TriggerServer, WeightsSource,
 };
+use hls4ml_transformer::data::StrainConfig;
 use hls4ml_transformer::experiments::artifacts_ready;
 use hls4ml_transformer::hls::{FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor};
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::zoo_model;
 use hls4ml_transformer::quant::{pareto_explore, EvalSet, ParetoConfig};
+use hls4ml_transformer::stream::{analyze, StreamParams};
 
 fn run(model: &'static str, backend: BackendKind, batch: usize, events: u64) {
     let have_artifacts = artifacts_ready(&artifacts_dir(), model);
@@ -37,6 +40,7 @@ fn run(model: &'static str, backend: BackendKind, batch: usize, events: u64) {
         events_per_source: events,
         rate_per_source: 0,
         artifacts_dir: artifacts_dir(),
+        ..Default::default()
     };
     match TriggerServer::run(&cfg) {
         Ok(report) => {
@@ -98,6 +102,7 @@ fn batch_sweep() {
                 events_per_source: events,
                 rate_per_source: 0,
                 artifacts_dir: artifacts_dir(),
+                ..Default::default()
             };
             match TriggerServer::run(&cfg) {
                 Ok(report) => {
@@ -153,6 +158,7 @@ fn replica_sweep() {
             events_per_source: 12_000,
             rate_per_source: 0,
             artifacts_dir: artifacts_dir(),
+            ..Default::default()
         };
         match TriggerServer::run(&cfg) {
             Ok(report) => {
@@ -241,6 +247,86 @@ fn reuse_plan_sweep() {
     }
 }
 
+/// Continuous-stream sweep: hop ∈ {S/4, S/2, S} × {Float, Hls} on the
+/// engine model with analytic detector weights.  The first workload
+/// where sustained throughput is set by *overlap reuse* rather than
+/// batch size: halving the hop doubles the windows the backend must
+/// score for the same strain seconds, so samples/s falls while
+/// windows/s holds.  Each row is one BENCH_JSON line
+/// (`e2e_serving/stream_sweep/...`) carrying sustained throughput, p99
+/// trigger latency and detection efficiency — archived and diffed by
+/// the existing CI bench job.
+fn stream_sweep() {
+    harness::section("stream sweep: engine strain stream, hop S/4 | S/2 | S per backend");
+    println!("(detector weights; efficiency = injected chirps recovered by clustered triggers)");
+    let cfg = zoo_model("engine").expect("zoo model").config;
+    let s = cfg.seq_len;
+    for (backend, samples) in [(BackendKind::Float, 120_000u64), (BackendKind::Hls, 12_000)] {
+        for hop in [s / 4, s / 2, s] {
+            let server = ServerConfig {
+                pipelines: vec![PipelineConfig {
+                    weights: WeightsSource::Detector,
+                    ring_capacity: 16_384,
+                    source: SourceMode::Stream(StreamSource {
+                        samples,
+                        hop,
+                        strain: StrainConfig::new(0xA11CE, cfg.input_size, s),
+                    }),
+                    ..PipelineConfig::new("engine", backend)
+                }],
+                events_per_source: 0,
+                rate_per_source: 0,
+                artifacts_dir: artifacts_dir(),
+                ..Default::default()
+            };
+            match TriggerServer::run(&server) {
+                Ok(report) => {
+                    let st = &report.per_model["engine"];
+                    let truth = report
+                        .stream_truth
+                        .get("engine")
+                        .map(|v| v.as_slice())
+                        .unwrap_or(&[]);
+                    let sr = analyze(
+                        st.windows.clone(),
+                        truth,
+                        &StreamParams::for_windows(s as u64),
+                    );
+                    let wall = report.wall.as_secs_f64().max(1e-9);
+                    let sps = samples as f64 / wall;
+                    let wps = st.windows.len() as f64 / wall;
+                    println!(
+                        "  {backend:6?} hop {hop:>3}  {sps:>9.0} samples/s  {wps:>7.0} win/s  \
+                         eff {:>5.1}%  {}/{} inj  fa {}  trig p99 {:.1}us",
+                        100.0 * sr.efficiency(),
+                        sr.found,
+                        sr.injections,
+                        sr.false_alarms,
+                        sr.trigger_latency.quantile_ns(0.99) as f64 / 1000.0,
+                    );
+                    harness::json_line(
+                        &format!("e2e_serving/stream_sweep/engine/{backend:?}/hop{hop}"),
+                        &[
+                            ("hop", hop as f64),
+                            ("sustained_sps", sps),
+                            ("windows_per_s", wps),
+                            ("windows", st.windows.len() as f64),
+                            ("dropped", st.dropped as f64),
+                            ("efficiency", sr.efficiency()),
+                            ("injections", sr.injections as f64),
+                            ("found", sr.found as f64),
+                            ("false_alarms", sr.false_alarms as f64),
+                            ("trigger_p99_ns", sr.trigger_latency.quantile_ns(0.99) as f64),
+                            ("window_p99_ns", st.latency.quantile_ns(0.99) as f64),
+                        ],
+                    );
+                }
+                Err(e) => println!("  {backend:?} hop {hop} FAILED: {e:#}"),
+            }
+        }
+    }
+}
+
 fn main() {
     harness::section("E6: end-to-end trigger serving (throughput / latency)");
     println!("(sources run at max rate; latency includes queueing + batching)");
@@ -259,6 +345,8 @@ fn main() {
     replica_sweep();
 
     reuse_plan_sweep();
+
+    stream_sweep();
 
     harness::section("multi-model concurrent serving (all three pipelines)");
     let cfg = ServerConfig {
@@ -279,6 +367,7 @@ fn main() {
         events_per_source: 2000,
         rate_per_source: 0,
         artifacts_dir: artifacts_dir(),
+        ..Default::default()
     };
     let report = TriggerServer::run(&cfg).unwrap();
     print!("{report}");

@@ -182,6 +182,31 @@ mod tests {
     }
 
     #[test]
+    fn stream_flags_parse() {
+        // the continuous-stream subcommand rides this parser
+        let a = parse(
+            "stream --model engine --backend hls --samples 40000 --hop 25 \
+             --threshold 3.5 --amp-lo 5 --amp-hi 9 --mean-gap 1200 --replicas 2",
+        );
+        assert_eq!(a.command, "stream");
+        assert_eq!(a.get_parse("samples", 0u64).unwrap(), 40_000);
+        assert_eq!(a.get_parse("hop", 50usize).unwrap(), 25);
+        assert_eq!(a.get_parse("threshold", 3.0f32).unwrap(), 3.5);
+        assert_eq!(a.get_parse("amp-lo", 0.0f64).unwrap(), 5.0);
+        assert_eq!(a.get_parse("mean-gap", 0.0f64).unwrap(), 1200.0);
+        assert!(a
+            .expect_only(&[
+                "model", "backend", "samples", "hop", "seed", "mean-gap", "amp-lo",
+                "amp-hi", "threshold", "batch", "replicas", "rate", "ring",
+            ])
+            .is_ok());
+        // absent flags fall back to model-derived defaults at the caller
+        let b = parse("stream --backend float");
+        assert_eq!(b.get("hop"), None);
+        assert_eq!(b.get_parse("hop", 25usize).unwrap(), 25);
+    }
+
+    #[test]
     fn duplicate_flag_rejected() {
         assert!(Args::parse(["--a", "1", "--a", "2"].map(String::from)).is_err());
     }

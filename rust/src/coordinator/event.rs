@@ -14,13 +14,25 @@ pub struct TriggerEvent {
     pub x: Mat,
     /// Ground truth when generated synthetically (for online AUC).
     pub label: Option<u8>,
+    /// For stream-mode ingestion: the absolute sample index of this
+    /// window's first row.  `Some` makes the worker record a per-window
+    /// `stream::WindowScore` so the trigger analyzer can cluster the
+    /// scored stream; `None` (pre-cut events) keeps the seed behavior.
+    pub stream_pos: Option<u64>,
     /// Arrival timestamp (latency accounting starts here).
     pub t_arrival: Instant,
 }
 
 impl TriggerEvent {
     pub fn new(id: u64, model: &'static str, x: Mat, label: Option<u8>) -> Self {
-        Self { id, model, x, label, t_arrival: Instant::now() }
+        Self { id, model, x, label, stream_pos: None, t_arrival: Instant::now() }
+    }
+
+    /// A window cut from a continuous stream at sample offset `pos`.
+    /// Arrival time is *now* — the moment the window's last sample
+    /// exists — so recorded latency is true latency-from-arrival.
+    pub fn stream_window(id: u64, model: &'static str, x: Mat, pos: u64) -> Self {
+        Self { id, model, x, label: None, stream_pos: Some(pos), t_arrival: Instant::now() }
     }
 }
 
@@ -50,6 +62,15 @@ mod tests {
         assert_eq!(e.id, 7);
         assert_eq!(e.model, "engine");
         assert_eq!(e.label, Some(1));
+        assert_eq!(e.stream_pos, None, "pre-cut events carry no stream position");
         assert!(e.t_arrival.elapsed().as_secs() < 1);
+    }
+
+    #[test]
+    fn stream_window_carries_its_offset_and_no_label() {
+        let e = TriggerEvent::stream_window(3, "engine", Mat::zeros(50, 1), 1250);
+        assert_eq!(e.stream_pos, Some(1250));
+        assert_eq!(e.label, None);
+        assert_eq!(e.id, 3);
     }
 }

@@ -24,6 +24,13 @@
 //! fixed offered load to measure pool scaling.  Per-shard accounting
 //! ([`stats::ShardStats`]) folds into the per-model [`PipelineStats`]
 //! report.
+//!
+//! Ingestion comes in two modes ([`SourceMode`]): pre-cut labeled zoo
+//! events (the seed behavior), or **continuous-stream** ingestion — a
+//! [`crate::data::gw::StrainStream`] windowized in the source thread
+//! ([`crate::stream::Windowizer`]), with the router consuming windows
+//! through the same SPSC backpressure path and workers recording
+//! per-window scores for trigger clustering (`crate::stream::analyze`).
 
 pub mod backend;
 pub mod batcher;
@@ -37,6 +44,9 @@ pub use backend::{Backend, BackendKind};
 pub use batcher::{BatchPolicy, Batcher};
 pub use event::TriggerEvent;
 pub use router::{Router, Submit};
-pub use server::{PipelineConfig, ServerConfig, ServerReport, TriggerServer, WeightsSource};
+pub use server::{
+    PipelineConfig, ServerConfig, ServerReport, SourceMode, StreamSource, TriggerServer,
+    WeightsSource,
+};
 pub use spsc::SpscRing;
 pub use stats::{PipelineStats, ShardStats};

@@ -25,12 +25,15 @@ use super::router::{Router, Submit};
 use super::spsc;
 use super::stats::PipelineStats;
 use crate::data::generator_for;
+use crate::data::gw::{Injection, StrainConfig, StrainStream};
 use crate::hls::{ParallelismPlan, PrecisionPlan, QuantConfig, ReuseFactor, SynthesisReport};
 use crate::models::weights::{synthetic_weights, Weights};
 use crate::models::zoo::zoo_model;
 use crate::models::NnwFile;
 use crate::nn::tensor::Mat;
 use crate::runtime::Runtime;
+use crate::stream::{WindowScore, Windowizer};
+use crate::testutil::XorShift;
 
 /// Where a pipeline's weights come from.
 #[derive(Clone, Copy, Debug)]
@@ -39,6 +42,38 @@ pub enum WeightsSource {
     Artifacts,
     /// Deterministic random weights (artifact-free tests).
     Synthetic(u64),
+    /// Analytic excess-power detector weights
+    /// ([`crate::models::weights::detector_weights`]): the artifact-free
+    /// stand-in that genuinely detects injected chirps.  LN-free
+    /// architectures only (the zoo's `engine`).
+    Detector,
+}
+
+/// How a pipeline's source thread produces events.
+#[derive(Clone, Debug)]
+pub enum SourceMode {
+    /// Pre-cut labeled events from the model's zoo generator (the seed
+    /// behavior).
+    Events,
+    /// Continuous-stream ingestion: a [`StrainStream`] windowized into
+    /// overlapping model windows; the router consumes windows through
+    /// the same SPSC backpressure path, and workers record per-window
+    /// scores for trigger clustering.
+    Stream(StreamSource),
+}
+
+/// Configuration of one stream-mode source.
+#[derive(Clone, Debug)]
+pub struct StreamSource {
+    /// Total samples to stream (windows emitted:
+    /// `(samples - seq_len) / hop + 1` once `samples >= seq_len`).
+    pub samples: u64,
+    /// Window hop in samples (`seq_len/2` = 50% overlap; > `seq_len`
+    /// leaves coverage gaps).
+    pub hop: usize,
+    /// The strain source (seed, injection schedule, amplitudes).
+    /// `channels` must match the model's `input_size`.
+    pub strain: StrainConfig,
 }
 
 /// Per-model serving configuration.
@@ -64,6 +99,9 @@ pub struct PipelineConfig {
     /// Worker-pool width: number of batcher+backend replicas serving
     /// this model.  1 reproduces the original single-worker pipeline.
     pub replicas: usize,
+    /// What the source thread feeds this pipeline (pre-cut events by
+    /// default; `SourceMode::Stream` windowizes a continuous stream).
+    pub source: SourceMode,
 }
 
 impl PipelineConfig {
@@ -79,6 +117,7 @@ impl PipelineConfig {
             ring_capacity: 1024,
             weights: WeightsSource::Artifacts,
             replicas: 1,
+            source: SourceMode::Events,
         }
     }
 
@@ -93,11 +132,30 @@ impl PipelineConfig {
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub pipelines: Vec<PipelineConfig>,
-    /// Events each source generates before closing.
+    /// Events each event-mode source generates before closing (stream
+    /// sources are sized by their own `samples`).
     pub events_per_source: u64,
-    /// Source pacing in events/second (0 = as fast as possible).
+    /// Source pacing (0 = as fast as possible): events/second for
+    /// event-mode sources, samples/second for stream sources.
     pub rate_per_source: u64,
+    /// Event-mode arrival shape when paced: 1 = the seed's uniform
+    /// spacing; > 1 = randomized bursts (sizes uniform in
+    /// `[1, 2*burst)`, exponential inter-burst gaps at the same mean
+    /// rate) — the compound-Poisson traffic a real trigger feed has.
+    pub burst_per_source: u64,
     pub artifacts_dir: PathBuf,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            pipelines: Vec::new(),
+            events_per_source: 1000,
+            rate_per_source: 0,
+            burst_per_source: 1,
+            artifacts_dir: crate::artifacts_dir(),
+        }
+    }
 }
 
 /// Aggregated result of one server run.
@@ -108,6 +166,11 @@ pub struct ServerReport {
     /// parallelism plans synthesized at resolution time) — what the
     /// served engine *would* cost and achieve on the part.
     pub modeled_designs: HashMap<&'static str, SynthesisReport>,
+    /// Stream-mode ground truth: the injections each stream source
+    /// planted (empty for event-mode pipelines).  Pair with the model's
+    /// recorded `PipelineStats::windows` in `stream::analyze` for the
+    /// detection-efficiency report.
+    pub stream_truth: HashMap<&'static str, Vec<Injection>>,
     pub wall: Duration,
 }
 
@@ -159,6 +222,14 @@ impl std::fmt::Display for ServerReport {
                     .map(|a| format!(" auc={a:.4}"))
                     .unwrap_or_default()
             )?;
+            if !s.windows.is_empty() {
+                writeln!(
+                    f,
+                    "    stream: {} windows scored (cluster with stream::analyze \
+                     for triggers + detection efficiency)",
+                    s.windows.len()
+                )?;
+            }
             // shard breakdown only matters for real pools
             if s.shards.len() > 1 {
                 writeln!(
@@ -228,6 +299,19 @@ impl TriggerServer {
                 par.apply_overrides(text)
                     .map_err(anyhow::Error::msg)
                     .with_context(|| format!("reuse plan for model '{}'", pc.model))?;
+            }
+            // stream geometry must be a clean Err before any pool spawns
+            // (a mismatched window shape would otherwise shed every
+            // single window at the router)
+            if let SourceMode::Stream(ss) = &pc.source {
+                anyhow::ensure!(
+                    ss.strain.channels == mcfg.input_size,
+                    "stream source for model '{}' has {} channels, model takes {}",
+                    pc.model,
+                    ss.strain.channels,
+                    mcfg.input_size
+                );
+                anyhow::ensure!(ss.hop >= 1, "stream hop must be >= 1");
             }
             // the modeled FPGA design point of an HLS pipeline, reported
             // alongside the serving stats (computed once here, not per
@@ -316,6 +400,14 @@ impl TriggerServer {
                                 stats.scored_pos.push(backend.score(p));
                                 stats.scored_labels.push((label == 1) as u8);
                             }
+                            if let Some(pos) = e.stream_pos {
+                                stats.windows.push(WindowScore {
+                                    pos,
+                                    score: backend.score(p),
+                                    latency_ns: lat.as_nanos().min(u64::MAX as u128)
+                                        as u64,
+                                });
+                            }
                         }
                     }
                     Ok((pc.model, shard, stats))
@@ -342,45 +434,26 @@ impl TriggerServer {
             let model = pc.model;
             let n = cfg.events_per_source;
             let rate = cfg.rate_per_source;
-            sources.push(std::thread::spawn(move || -> (u64, u64) {
-                let mut gen = generator_for(model, 0xFEED ^ n).expect("zoo generator");
-                let mut shed = 0u64;
-                let t_start = Instant::now();
-                for i in 0..n {
-                    if rate > 0 {
-                        // pace the source: event i is due at i/rate seconds;
-                        // sleep for the bulk of the wait, yield for the rest
-                        // (pure spinning starves the pipeline on small hosts)
-                        let due = Duration::from_nanos(i * 1_000_000_000 / rate);
-                        loop {
-                            let elapsed = t_start.elapsed();
-                            if elapsed >= due {
-                                break;
-                            }
-                            let remaining = due - elapsed;
-                            if remaining > Duration::from_micros(300) {
-                                std::thread::sleep(remaining - Duration::from_micros(200));
-                            } else {
-                                std::thread::yield_now();
-                            }
-                        }
+            let burst = cfg.burst_per_source.max(1);
+            let mode = pc.source.clone();
+            sources.push(std::thread::spawn(move || -> SourceOutcome {
+                match mode {
+                    SourceMode::Events => {
+                        run_event_source(&router, model, n, rate, burst)
                     }
-                    let e = gen.next_event();
-                    let ev = TriggerEvent::new(i, model, e.x, Some(e.label));
-                    match router.submit(ev) {
-                        Submit::Accepted => {}
-                        Submit::Shed => shed += 1,
-                        s => panic!("source rejected: {s:?}"),
-                    }
+                    SourceMode::Stream(ss) => run_stream_source(&router, model, &ss, rate),
                 }
-                (n, shed)
             }));
         }
 
         let mut source_shed: HashMap<&'static str, u64> = HashMap::new();
+        let mut stream_truth: HashMap<&'static str, Vec<Injection>> = HashMap::new();
         for (s, pc) in sources.into_iter().zip(&cfg.pipelines) {
-            let (_n, shed) = s.join().expect("source thread");
-            *source_shed.entry(pc.model).or_default() += shed;
+            let out = s.join().expect("source thread");
+            *source_shed.entry(pc.model).or_default() += out.shed;
+            if !out.injections.is_empty() {
+                stream_truth.entry(pc.model).or_default().extend(out.injections);
+            }
         }
         router.close_all();
 
@@ -403,8 +476,112 @@ impl TriggerServer {
             stats.rebalanced = router.rebalanced(model).unwrap_or(0);
         }
 
-        Ok(ServerReport { per_model, modeled_designs, wall: t0.elapsed() })
+        Ok(ServerReport { per_model, modeled_designs, stream_truth, wall: t0.elapsed() })
     }
+}
+
+/// What one source thread produced.
+struct SourceOutcome {
+    shed: u64,
+    /// Stream-mode ground truth (empty for event sources).
+    injections: Vec<Injection>,
+}
+
+/// Sleep-then-yield until `due` past `t_start` (pure spinning starves
+/// the pipeline on small hosts).
+fn pace_until(t_start: Instant, due: Duration) {
+    loop {
+        let elapsed = t_start.elapsed();
+        if elapsed >= due {
+            return;
+        }
+        let remaining = due - elapsed;
+        if remaining > Duration::from_micros(300) {
+            std::thread::sleep(remaining - Duration::from_micros(200));
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// The seed event source: `n` labeled zoo events, paced to `rate`
+/// events/s when nonzero.  `burst > 1` randomizes arrivals into bursts
+/// (sizes uniform in `[1, 2*burst)`, exponential inter-burst gaps) while
+/// preserving the same mean rate — bursty detector traffic for the soak
+/// tests.
+fn run_event_source(
+    router: &Router,
+    model: &'static str,
+    n: u64,
+    rate: u64,
+    burst: u64,
+) -> SourceOutcome {
+    let mut gen = generator_for(model, 0xFEED ^ n).expect("zoo generator");
+    let mut shed = 0u64;
+    let t_start = Instant::now();
+    let mut rng = XorShift::new(0xB1157 ^ n);
+    let mut burst_left = 0u64;
+    let mut burst_due = Duration::ZERO;
+    for i in 0..n {
+        if rate > 0 {
+            if burst <= 1 {
+                // uniform pacing: event i is due at i/rate seconds
+                pace_until(t_start, Duration::from_nanos(i * 1_000_000_000 / rate));
+            } else {
+                if burst_left == 0 {
+                    burst_left = 1 + rng.next_u64() % (2 * burst - 1);
+                    // exponential gap sized so the long-run rate matches:
+                    // mean gap = burst_size_mean / rate
+                    let mean_ns = burst as f64 * 1e9 / rate as f64;
+                    burst_due += Duration::from_nanos(rng.exponential(mean_ns) as u64);
+                    pace_until(t_start, burst_due);
+                }
+                burst_left -= 1;
+            }
+        }
+        let e = gen.next_event();
+        let ev = TriggerEvent::new(i, model, e.x, Some(e.label));
+        match router.submit(ev) {
+            Submit::Accepted => {}
+            Submit::Shed => shed += 1,
+            s => panic!("source rejected: {s:?}"),
+        }
+    }
+    SourceOutcome { shed, injections: Vec::new() }
+}
+
+/// Stream-mode source: drive a continuous [`StrainStream`] through a
+/// [`Windowizer`] and submit every completed window through the router's
+/// normal SPSC backpressure path.  Pacing (`rate` > 0) is in samples/s.
+fn run_stream_source(
+    router: &Router,
+    model: &'static str,
+    ss: &StreamSource,
+    rate: u64,
+) -> SourceOutcome {
+    let seq_len = zoo_model(model).expect("resolved earlier").config.seq_len;
+    let mut strain = StrainStream::new(ss.strain.clone());
+    let mut wz = Windowizer::new(seq_len, ss.strain.channels, ss.hop);
+    let mut sample = vec![0.0f32; ss.strain.channels];
+    let mut shed = 0u64;
+    let mut windows = 0u64;
+    let t_start = Instant::now();
+    for i in 0..ss.samples {
+        if rate > 0 {
+            pace_until(t_start, Duration::from_nanos(i * 1_000_000_000 / rate));
+        }
+        strain.next_sample(&mut sample);
+        if let Some(w) = wz.push(&sample) {
+            let ev = TriggerEvent::stream_window(windows, model, w.x, w.start);
+            windows += 1;
+            match router.submit(ev) {
+                Submit::Accepted => {}
+                Submit::Shed => shed += 1,
+                s => panic!("stream source rejected: {s:?}"),
+            }
+        }
+    }
+    SourceOutcome { shed, injections: strain.take_injections() }
 }
 
 fn load_weights(
@@ -414,6 +591,14 @@ fn load_weights(
 ) -> Result<Weights> {
     match pc.weights {
         WeightsSource::Synthetic(seed) => Ok(synthetic_weights(mcfg, seed)),
+        WeightsSource::Detector => {
+            anyhow::ensure!(
+                !mcfg.use_layernorm,
+                "detector weights need an LN-free model, '{}' has LayerNorm",
+                mcfg.name
+            );
+            Ok(crate::models::weights::detector_weights(mcfg))
+        }
         WeightsSource::Artifacts => {
             let path = dir.join(format!("{}.weights.nnw", pc.model));
             let file = NnwFile::load(&path)?;
@@ -435,6 +620,26 @@ mod tests {
             events_per_source: n,
             rate_per_source: 0,
             artifacts_dir: PathBuf::from("."),
+            ..Default::default()
+        }
+    }
+
+    fn stream_cfg(samples: u64, hop: usize) -> ServerConfig {
+        let seq_len = zoo_model("engine").unwrap().config.seq_len;
+        ServerConfig {
+            pipelines: vec![PipelineConfig {
+                weights: WeightsSource::Detector,
+                source: SourceMode::Stream(StreamSource {
+                    samples,
+                    hop,
+                    strain: StrainConfig::new(0xA11CE, 1, seq_len),
+                }),
+                ..PipelineConfig::new("engine", BackendKind::Float)
+            }],
+            events_per_source: 0,
+            rate_per_source: 0,
+            artifacts_dir: PathBuf::from("."),
+            ..Default::default()
         }
     }
 
@@ -630,6 +835,67 @@ mod tests {
         let err = TriggerServer::run(&cfg);
         assert!(err.is_err());
         assert!(format!("{:#}", err.unwrap_err()).contains("duplicate pipeline"));
+    }
+
+    #[test]
+    fn stream_mode_scores_every_window_with_positions_and_truth() {
+        let (samples, hop) = (6_000u64, 25usize);
+        let report = TriggerServer::run(&stream_cfg(samples, hop)).unwrap();
+        let s = &report.per_model["engine"];
+        let seq_len = zoo_model("engine").unwrap().config.seq_len as u64;
+        let expect = (samples - seq_len) / hop as u64 + 1;
+        assert_eq!(s.accepted + s.dropped, expect);
+        assert_eq!(s.dropped, 0, "1024-deep ring must absorb this stream");
+        assert_eq!(s.windows.len() as u64, expect, "every window recorded");
+        assert!(s.scored_labels.is_empty(), "stream windows carry no labels");
+        // positions are exactly the hop grid (sort: batches interleave)
+        let mut got: Vec<u64> = s.windows.iter().map(|w| w.pos).collect();
+        got.sort_unstable();
+        let want: Vec<u64> = (0..expect).map(|k| k * hop as u64).collect();
+        assert_eq!(got, want);
+        // truth came through, and every center is inside the stream
+        let truth = &report.stream_truth["engine"];
+        assert!(!truth.is_empty());
+        assert!(truth.iter().all(|i| i.t0 < samples + seq_len));
+        // the report mentions the streamed windows
+        let text = format!("{report}");
+        assert!(text.contains("windows scored"), "{text}");
+    }
+
+    #[test]
+    fn stream_channel_mismatch_errors_before_spawning() {
+        let mut cfg = stream_cfg(2_000, 25);
+        if let SourceMode::Stream(ss) = &mut cfg.pipelines[0].source {
+            ss.strain.channels = 3; // engine takes 1
+        }
+        let err = TriggerServer::run(&cfg);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("channels"), "{msg}");
+        assert!(msg.contains("engine"), "{msg}");
+    }
+
+    #[test]
+    fn detector_weights_reject_ln_models_cleanly() {
+        let mut cfg = base_cfg(BackendKind::Float, 10);
+        cfg.pipelines[0] = PipelineConfig {
+            weights: WeightsSource::Detector,
+            ..PipelineConfig::new("gw", BackendKind::Float)
+        };
+        let err = TriggerServer::run(&cfg);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("LN-free"));
+    }
+
+    #[test]
+    fn bursty_paced_source_still_delivers_every_event() {
+        let mut cfg = base_cfg(BackendKind::Float, 400);
+        cfg.rate_per_source = 20_000;
+        cfg.burst_per_source = 16;
+        let report = TriggerServer::run(&cfg).unwrap();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted + s.dropped, 400);
+        assert_eq!(s.dropped, 0, "bursts of ~16 cannot fill a 1024 ring");
     }
 
     #[test]

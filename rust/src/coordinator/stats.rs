@@ -6,6 +6,7 @@
 //! snapshot per replica so pool imbalance is visible in the report.
 
 use crate::metrics::LatencyHistogram;
+use crate::stream::WindowScore;
 
 /// Per-replica (shard) accounting within one model's worker pool.
 #[derive(Clone, Debug, Default)]
@@ -44,6 +45,11 @@ pub struct PipelineStats {
     /// Online classification accounting (when labels are known).
     pub scored_pos: Vec<f32>,
     pub scored_labels: Vec<u8>,
+    /// Per-window records of stream-mode ingestion (empty for pre-cut
+    /// event sources).  Fed to `stream::analyze` for trigger clustering;
+    /// order is per-shard arrival order, NOT stream order — the analyzer
+    /// sorts.
+    pub windows: Vec<WindowScore>,
     /// Per-shard view of the pool (empty on worker-local stats; one
     /// entry per replica after server aggregation).
     pub shards: Vec<ShardStats>,
@@ -86,6 +92,7 @@ impl PipelineStats {
         self.latency.merge(&s.latency);
         self.scored_pos.extend_from_slice(&s.scored_pos);
         self.scored_labels.extend_from_slice(&s.scored_labels);
+        self.windows.extend_from_slice(&s.windows);
     }
 
     pub fn merge(&mut self, other: &PipelineStats) {
@@ -97,6 +104,7 @@ impl PipelineStats {
         self.latency.merge(&other.latency);
         self.scored_pos.extend_from_slice(&other.scored_pos);
         self.scored_labels.extend_from_slice(&other.scored_labels);
+        self.windows.extend_from_slice(&other.windows);
         self.shards.extend(other.shards.iter().cloned());
     }
 }
@@ -145,8 +153,14 @@ mod tests {
             s.latency.record(1000 * (shard as u64 + 1));
             s.scored_pos.push(0.5);
             s.scored_labels.push((shard % 2) as u8);
+            s.windows.push(WindowScore {
+                pos: 100 * shard as u64,
+                score: 0.5,
+                latency_ns: 900,
+            });
             total.absorb_shard(shard, &s);
         }
+        assert_eq!(total.windows.len(), 3, "stream records fold across shards");
         assert_eq!(total.accepted, 33);
         assert_eq!(total.batches, 6);
         assert_eq!(total.latency.count(), 3);

@@ -13,7 +13,7 @@ pub mod gw;
 
 pub use btag::BtagGenerator;
 pub use engine::EngineGenerator;
-pub use gw::GwGenerator;
+pub use gw::{GwGenerator, Injection, StrainConfig, StrainStream};
 
 use crate::nn::tensor::Mat;
 

@@ -14,10 +14,16 @@
 /// tail after the site token).  The first `Err` from `apply` is returned
 /// prefixed with its 1-based line number; blank lines and `#` comments
 /// are skipped.
+///
+/// A site assigned twice in the same text is an error naming the entry
+/// and both lines: a duplicate is always operator confusion (which of
+/// the two values did they think won?), and silently letting the last
+/// line win buries the mistake.
 pub(crate) fn apply_plan_lines(
     text: &str,
     mut apply: impl FnMut(&str, &[&str]) -> Result<(), String>,
 ) -> Result<(), String> {
+    let mut seen: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
@@ -25,6 +31,13 @@ pub(crate) fn apply_plan_lines(
         }
         let mut toks = line.split_whitespace();
         let site = toks.next().expect("non-empty line has a token");
+        if let Some(first) = seen.insert(site.to_string(), lineno + 1) {
+            return Err(format!(
+                "plan line {}: duplicate assignment for site '{site}' \
+                 (first assigned at line {first})",
+                lineno + 1
+            ));
+        }
         let rest: Vec<&str> = toks.collect();
         apply(site, &rest).map_err(|e| format!("plan line {}: {e}", lineno + 1))?;
     }
@@ -60,5 +73,18 @@ mod tests {
     fn full_line_comment_does_not_shift_numbering() {
         let err = apply_plan_lines("# one\n# two\nbad\n", |_, _| Err("x".into()));
         assert_eq!(err.unwrap_err(), "plan line 3: x");
+    }
+
+    #[test]
+    fn duplicate_site_is_a_one_line_error_naming_both_lines() {
+        let err = apply_plan_lines("a 1\nb 2\n\n# c\na 3\n", |_, _| Ok(()))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            "plan line 5: duplicate assignment for site 'a' (first assigned at line 1)"
+        );
+        assert!(!err.contains('\n'), "one line: {err}");
+        // distinct sites stay fine
+        apply_plan_lines("a 1\nb 2\nc 3\n", |_, _| Ok(())).unwrap();
     }
 }

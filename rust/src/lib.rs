@@ -34,8 +34,14 @@
 //!   batches through `forward_batch`).  The `e2e_serving` bench sweeps
 //!   pool widths 1/2/4/8 and batch caps 1/2/4/8/16 per backend and
 //!   emits `BENCH_JSON` lines for CI perf archiving.
+//! * [`stream`] — continuous-stream windowed inference: ring-buffered
+//!   windowizer over a seedable strain source with injected chirps,
+//!   robust-z trigger clustering, detection-efficiency + trigger-latency
+//!   analysis.  Served through the coordinator's stream ingestion mode
+//!   (`repro stream`; `e2e_serving` sweeps hop ∈ {S/4, S/2, S}).
 //! * [`experiments`] — regenerates every table and figure of the paper.
-//! * [`testutil`] — property-test driver (offline proptest stand-in).
+//! * [`testutil`] — property-test driver (offline proptest stand-in) and
+//!   the golden-vector conformance corpus writer (`testutil::golden`).
 
 pub mod benchjson;
 pub mod cli;
@@ -49,6 +55,7 @@ pub mod models;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod stream;
 pub mod testutil;
 
 /// Crate-wide result type.

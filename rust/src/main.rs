@@ -11,14 +11,17 @@
 //! repro mixed-precision   --model <m> [--floor 0.99] [--min-frac 2] [--save-plan FILE]
 //! repro pareto            --model <m> [--floor 0.99] [--iters N] [--reuse-choices 1,2,4,8] [--save-plan FILE]
 //! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B] [--replicas R] [--precision-plan FILE] [--reuse-plan FILE]
+//! repro stream            --backend float|hls [--model engine] [--samples N] [--hop H] [--threshold Z] ...
 //! repro report            (everything above, in sequence)
 //! ```
 
 use anyhow::{bail, Context, Result};
 use hls4ml_transformer::cli::Args;
 use hls4ml_transformer::coordinator::{
-    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, TriggerServer,
+    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, SourceMode, StreamSource,
+    TriggerServer, WeightsSource,
 };
+use hls4ml_transformer::data::StrainConfig;
 use hls4ml_transformer::experiments::{
     artifacts_ready, auc_figures, latency_tables, load_checkpoints, resource_figures, table1,
 };
@@ -29,6 +32,7 @@ use hls4ml_transformer::hls::{
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::{zoo, zoo_model};
 use hls4ml_transformer::quant::{bit_shave_search, pareto_explore, EvalSet, ParetoConfig};
+use hls4ml_transformer::stream::{analyze, StreamParams};
 use hls4ml_transformer::{artifacts_dir, benchjson, models::ModelConfig};
 
 fn main() {
@@ -66,6 +70,12 @@ fn usage() {
          \x20                  [--replicas R]     worker-pool width per model\n\
          \x20                  [--precision-plan F]  per-site precision file (HLS)\n\
          \x20                  [--reuse-plan F]      per-site reuse file (HLS)\n\
+         \x20 stream           --backend <b>      continuous-stream trigger run:\n\
+         \x20                  windowized strain -> coordinator -> clustered\n\
+         \x20                  triggers, detection efficiency + latency report\n\
+         \x20                  [--model engine] [--samples N] [--hop H]\n\
+         \x20                  [--threshold Z] [--mean-gap G] [--amp-lo A --amp-hi B]\n\
+         \x20                  [--seed S] [--batch B] [--replicas R] [--rate SPS]\n\
          \x20 report                              all experiments in sequence\n\
          models: engine | btag | gw    backends: float | hls | pjrt"
     );
@@ -443,9 +453,118 @@ fn run(args: &Args) -> Result<()> {
                 events_per_source: events,
                 rate_per_source: rate,
                 artifacts_dir: artifacts_dir(),
+                ..Default::default()
             };
             let report = TriggerServer::run(&cfg)?;
             print!("{report}");
+        }
+        "stream" => {
+            args.expect_only(&[
+                "model", "backend", "samples", "hop", "seed", "mean-gap", "amp-lo",
+                "amp-hi", "threshold", "batch", "replicas", "rate", "ring",
+            ])
+            .map_err(anyhow::Error::msg)?;
+            let cfg = model_arg(args)?;
+            let model: &'static str = Box::leak(cfg.name.clone().into_boxed_str());
+            let backend: BackendKind = args
+                .get_or("backend", "float")
+                .parse()
+                .map_err(|e: anyhow::Error| e)?;
+            anyhow::ensure!(
+                backend != BackendKind::Pjrt,
+                "stream mode serves float/hls (the PJRT artifacts are exported \
+                 for the pre-cut event shapes)"
+            );
+            let samples = args.get_parse("samples", 100_000u64).map_err(anyhow::Error::msg)?;
+            let hop = args
+                .get_parse("hop", (cfg.seq_len / 2).max(1))
+                .map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(hop >= 1, "--hop must be >= 1");
+            let seed = args.get_parse("seed", 0xA11CEu64).map_err(anyhow::Error::msg)?;
+            let mean_gap = args.get_parse("mean-gap", 1000.0f64).map_err(anyhow::Error::msg)?;
+            let amp_lo = args.get_parse("amp-lo", 5.0f64).map_err(anyhow::Error::msg)?;
+            let amp_hi = args.get_parse("amp-hi", 9.0f64).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(amp_lo > 0.0 && amp_hi >= amp_lo, "bad --amp-lo/--amp-hi");
+            let threshold = args.get_parse("threshold", 3.0f32).map_err(anyhow::Error::msg)?;
+            let batch = args.get_parse("batch", 8usize).map_err(anyhow::Error::msg)?;
+            let replicas = args.get_parse("replicas", 1usize).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+            let rate = args.get_parse("rate", 0u64).map_err(anyhow::Error::msg)?;
+            let ring = args.get_parse("ring", 8192usize).map_err(anyhow::Error::msg)?;
+            let dir = artifacts_dir();
+            let weights = if artifacts_ready(&dir, &cfg.name) {
+                WeightsSource::Artifacts
+            } else if !cfg.use_layernorm {
+                eprintln!(
+                    "(note: artifacts missing for {}; analytic excess-power \
+                     detector weights)",
+                    cfg.name
+                );
+                WeightsSource::Detector
+            } else {
+                eprintln!(
+                    "(note: artifacts missing for {}; synthetic weights — an \
+                     untrained model will recover few injections)",
+                    cfg.name
+                );
+                WeightsSource::Synthetic(7)
+            };
+            let mut strain = StrainConfig::new(seed, cfg.input_size, cfg.seq_len);
+            strain.mean_gap = mean_gap;
+            strain.amp = (amp_lo, amp_hi);
+            let server = ServerConfig {
+                pipelines: vec![PipelineConfig {
+                    batch: BatchPolicy { max_batch: batch, ..Default::default() },
+                    replicas,
+                    ring_capacity: ring,
+                    weights,
+                    source: SourceMode::Stream(StreamSource { samples, hop, strain }),
+                    ..PipelineConfig::new(model, backend)
+                }],
+                events_per_source: 0,
+                rate_per_source: rate,
+                artifacts_dir: dir,
+                ..Default::default()
+            };
+            let report = TriggerServer::run(&server)?;
+            print!("{report}");
+            let s = &report.per_model[model];
+            let truth = report
+                .stream_truth
+                .get(model)
+                .map(|v| v.as_slice())
+                .unwrap_or(&[]);
+            let mut params = StreamParams::for_windows(cfg.seq_len as u64);
+            params.threshold = threshold;
+            let sr = analyze(s.windows.clone(), truth, &params);
+            print!("{sr}");
+            let wall = report.wall.as_secs_f64().max(1e-9);
+            let sustained_sps = samples as f64 / wall;
+            let windows_per_s = s.windows.len() as f64 / wall;
+            println!(
+                "sustained: {sustained_sps:.0} samples/s = {windows_per_s:.0} windows/s \
+                 at hop {hop} (x{:.1} overlap)",
+                cfg.seq_len as f64 / hop as f64
+            );
+            benchjson::emit(
+                // the parsed enum, not the raw flag: aliases like
+                // `--backend fixed` must land on the same perf-series key
+                &format!("stream/{model}/{backend:?}/hop{hop}"),
+                &[
+                    ("samples", samples as f64),
+                    ("hop", hop as f64),
+                    ("sustained_sps", sustained_sps),
+                    ("windows_per_s", windows_per_s),
+                    ("windows", s.windows.len() as f64),
+                    ("dropped", s.dropped as f64),
+                    ("efficiency", sr.efficiency()),
+                    ("injections", sr.injections as f64),
+                    ("found", sr.found as f64),
+                    ("false_alarms", sr.false_alarms as f64),
+                    ("trigger_p99_ns", sr.trigger_latency.quantile_ns(0.99) as f64),
+                    ("window_p99_ns", s.latency.quantile_ns(0.99) as f64),
+                ],
+            );
         }
         "report" => {
             args.expect_only(&["events", "threads"]).map_err(anyhow::Error::msg)?;

@@ -232,6 +232,109 @@ pub fn synthetic_weights(cfg: &ModelConfig, seed: u64) -> Weights {
     }
 }
 
+/// Sigmoid slope of the detector head: the positive-class score is
+/// `sigma(2 * DETECTOR_BETA * (mean|sum_c x| - DETECTOR_M0))`.
+pub const DETECTOR_BETA: f32 = 1.0;
+/// Center of the detector head: `E|N(0,1)| ~ 0.798`, the background's
+/// expected mean absolute amplitude on a unit-variance stream.
+pub const DETECTOR_M0: f32 = 0.8;
+
+/// Analytically constructed *excess-power detector* weights: program the
+/// transformer to compute `sigma(2*beta*(mean_t |sum_c x_tc| - m0))` —
+/// a classic burst-search statistic — so the full serving stack
+/// (quantization, LUT softmax, batching, streaming) can be exercised
+/// end-to-end with a model that genuinely detects injected chirps even
+/// when no trained artifacts exist.  The streaming analog of
+/// `EvalSet::synthetic`'s margin labeling: deterministic, artifact-free,
+/// and discriminative by construction.
+///
+/// Construction (LN-free architectures only — LayerNorm erases the
+/// amplitude statistic this detector pools):
+/// * embed: lane 0 = `+sum_c x`, lane 1 = `-sum_c x`, rest zero;
+/// * block 0 FFN: ReLU-rectify lanes 0/1 and add `|sum_c x|` into
+///   lane 2 (the residual keeps lanes 0/1 intact);
+/// * every MHA is zero-weight (uniform attention over zero V — which
+///   still drives the score-softmax path, LUT ROMs included);
+/// * later blocks are identity (zero FFN);
+/// * pool -> head picks lane 2 (`mean|sum_c x|`), and the output layer
+///   applies the `+-beta` contrast with a `-+beta*m0` bias.
+///
+/// Panics on a LayerNorm architecture or one with fewer than 3 embed
+/// lanes / 2 FFN lanes (the zoo's `engine` model satisfies all of it).
+pub fn detector_weights(cfg: &ModelConfig) -> Weights {
+    assert!(
+        !cfg.use_layernorm,
+        "detector weights need an LN-free architecture ('{}' has LayerNorm: \
+         per-row normalization erases the pooled amplitude statistic)",
+        cfg.name
+    );
+    assert!(cfg.d_model >= 3 && cfg.ffn_dim >= 2 && cfg.head_hidden >= 1);
+    let (d, f, hh) = (cfg.d_model, cfg.ffn_dim, cfg.head_hidden);
+    let zero_mat = |r: usize, c: usize| Mat::zeros(r, c);
+    let mut embed = Mat::zeros(cfg.input_size, d);
+    for c in 0..cfg.input_size {
+        *embed.at_mut(c, 0) = 1.0;
+        *embed.at_mut(c, 1) = -1.0;
+    }
+    let zero_mha = MhaWeights {
+        wq: vec![zero_mat(d, cfg.head_dim); cfg.num_heads],
+        bq: vec![vec![0.0; cfg.head_dim]; cfg.num_heads],
+        wk: vec![zero_mat(d, cfg.head_dim); cfg.num_heads],
+        bk: vec![vec![0.0; cfg.head_dim]; cfg.num_heads],
+        wv: vec![zero_mat(d, cfg.head_dim); cfg.num_heads],
+        bv: vec![vec![0.0; cfg.head_dim]; cfg.num_heads],
+        wo: zero_mat(cfg.num_heads * cfg.head_dim, d),
+        bo: vec![0.0; d],
+    };
+    let mut blocks = Vec::with_capacity(cfg.num_blocks);
+    for b in 0..cfg.num_blocks {
+        let (mut ffn1, mut ffn2) = (zero_mat(d, f), zero_mat(f, d));
+        if b == 0 {
+            // ReLU(lane0) + ReLU(lane1) = |s|, landed in lane 2
+            *ffn1.at_mut(0, 0) = 1.0;
+            *ffn1.at_mut(1, 1) = 1.0;
+            *ffn2.at_mut(0, 2) = 1.0;
+            *ffn2.at_mut(1, 2) = 1.0;
+        }
+        blocks.push(BlockWeights {
+            mha: zero_mha.clone(),
+            ln1: None,
+            ffn1: (ffn1, vec![0.0; f]),
+            ffn2: (ffn2, vec![0.0; d]),
+            ln2: None,
+        });
+    }
+    let mut head = Mat::zeros(d, hh);
+    *head.at_mut(2, 0) = 1.0;
+    let mut out = Mat::zeros(hh, cfg.output_size);
+    let bias = match cfg.output_size {
+        // sigmoid head: logit = 2*beta*(m - m0)
+        1 => {
+            *out.at_mut(0, 0) = 2.0 * DETECTOR_BETA;
+            vec![-2.0 * DETECTOR_BETA * DETECTOR_M0]
+        }
+        // softmax head: logits (-beta(m-m0), +beta(m-m0), 0, ...).  For
+        // the 2-class head this is exactly sigma(2*beta*(m-m0)); extra
+        // classes would add (k-2) e^0 terms to the denominator — still
+        // strictly monotone in m, but no longer the sigmoid closed form
+        // (every LN-free zoo model today is 2-class)
+        _ => {
+            *out.at_mut(0, 0) = -DETECTOR_BETA;
+            *out.at_mut(0, 1) = DETECTOR_BETA;
+            let mut b = vec![0.0; cfg.output_size];
+            b[0] = DETECTOR_BETA * DETECTOR_M0;
+            b[1] = -DETECTOR_BETA * DETECTOR_M0;
+            b
+        }
+    };
+    Weights {
+        embed: (embed, vec![0.0; d]),
+        blocks,
+        head: (head, vec![0.0; hh]),
+        out: (out, bias),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +346,37 @@ mod tests {
             let w = synthetic_weights(&m.config, 1);
             assert_eq!(w.param_count(), m.config.param_count(), "{}", m.config.name);
         }
+    }
+
+    #[test]
+    fn detector_weights_compute_the_excess_power_statistic() {
+        use crate::nn::FloatTransformer;
+        let cfg = crate::models::zoo::zoo_model("engine").unwrap().config;
+        let w = detector_weights(&cfg);
+        assert_eq!(w.param_count(), cfg.param_count(), "schema shapes hold");
+        let t = FloatTransformer::new(cfg.clone(), w);
+        // closed form: score = sigma(2*beta*(mean|x| - m0))
+        let score_of = |x: &Mat| t.score(&t.forward(x));
+        let xs = |v: f32| Mat::from_vec(cfg.seq_len, 1, vec![v; cfg.seq_len]);
+        for v in [0.0f32, 0.5, 0.8, 2.0, 6.0] {
+            let want =
+                1.0 / (1.0 + (-2.0 * DETECTOR_BETA * (v - DETECTOR_M0)).exp());
+            let got = score_of(&xs(v));
+            assert!((got - want).abs() < 1e-5, "|x|={v}: {got} vs {want}");
+        }
+        // monotone in window amplitude, saturating for chirp-sized input
+        assert!(score_of(&xs(0.2)) < score_of(&xs(1.5)));
+        assert!(score_of(&xs(5.0)) > 0.99);
+        // sign-blind: the rectifier sees |x|
+        let neg = Mat::from_vec(cfg.seq_len, 1, vec![-2.0; cfg.seq_len]);
+        assert_eq!(score_of(&neg), score_of(&xs(2.0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "LN-free")]
+    fn detector_weights_reject_layernorm_architectures() {
+        let cfg = crate::models::zoo::zoo_model("gw").unwrap().config;
+        detector_weights(&cfg);
     }
 
     #[test]

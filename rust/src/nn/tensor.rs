@@ -114,6 +114,13 @@ impl Mat {
         }
     }
 
+    /// Consume the matrix, returning its backing storage (row-major).
+    /// The stream windowizer recycles served windows' buffers through
+    /// the scratch pool with this.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
     /// Maximum absolute elementwise difference (test helper).
     pub fn max_abs_diff(&self, other: &Mat) -> f32 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));

@@ -1,0 +1,54 @@
+//! Continuous-stream windowed inference (the stream-to-trigger
+//! tentpole): the path from an always-on strain stream to de-duplicated
+//! trigger candidates — the actual deployment scenario behind the
+//! paper's sub-2 µs "real-time applications" claim (PAPER.md; Duarte et
+//! al. 2018 frame the same always-on trigger setting).
+//!
+//! ```text
+//!  StrainStream ──► Windowizer ──► coordinator (router/batcher/backend)
+//!  (continuous      ((S,d) hops,        │  per-window scores
+//!   samples +        ring buffer)       ▼
+//!   injected                     robust z statistic ──► TriggerFinder
+//!   chirps)                      (median/MAD, self-     (threshold +
+//!                                 calibrating)           peak-over-cluster)
+//!                                                            │
+//!                              detection efficiency + trigger latency
+//! ```
+//!
+//! * [`crate::data::gw::StrainStream`] — seedable continuous source with
+//!   chirps injected at known sample offsets (the ground truth).
+//! * [`Windowizer`] — ring-buffered stream -> `(seq_len, channels)`
+//!   window slicer, bitwise identical to a naive re-slice, allocation-
+//!   free per window once its scratch pool is warm.
+//! * [`TriggerFinder`] — threshold + peak-over-cluster de-duplication.
+//! * [`analyze`] — robust-z statistic, clustering, efficiency vs the
+//!   injection truth, trigger-latency percentiles.
+//!
+//! The coordinator consumes this as an ingestion mode: a
+//! `PipelineConfig` whose `source` is `SourceMode::Stream` runs the
+//! windowizer in the source thread, submits windows through the same
+//! router/SPSC backpressure path as pre-cut events, and workers record
+//! per-window [`WindowScore`]s for the analyzer.  Unlike batch size,
+//! hop is a *coverage* dial: throughput at hop S/2 is set by overlap
+//! reuse, not batch fill.
+
+pub mod report;
+pub mod trigger;
+pub mod window;
+
+pub use report::{analyze, StreamParams, StreamReport};
+pub use trigger::{Trigger, TriggerFinder};
+pub use window::{StreamWindow, Windowizer};
+
+/// One scored stream window, as recorded by a coordinator worker:
+/// stream position in, model score and serving latency out.  The
+/// analyzer consumes these (in any order — shards interleave).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowScore {
+    /// Absolute sample index of the window's first row.
+    pub pos: u64,
+    /// The model's positive-class score for this window.
+    pub score: f32,
+    /// Arrival (last sample) -> scored latency in nanoseconds.
+    pub latency_ns: u64,
+}

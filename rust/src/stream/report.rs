@@ -1,0 +1,286 @@
+//! Detection-efficiency + latency analysis of a scored window stream.
+//!
+//! The per-window detection statistic is a robust two-sided z-score of
+//! the model's positive-class score against the stream's own background:
+//! `z = |score - median| / (1.4826 * MAD)`.  Injections are sparse (a
+//! few percent of windows), so median/MAD are background-dominated and
+//! the statistic is self-calibrating — no separate noise-only pass, and
+//! no dependence on where an untrained/quantized model centers its
+//! scores.  MAD is floored so a saturated (near-constant) background
+//! cannot divide by zero.
+
+use super::trigger::{Trigger, TriggerFinder};
+use super::WindowScore;
+use crate::data::gw::{Injection, CHIRP_HALF_SPAN};
+use crate::metrics::LatencyHistogram;
+
+/// Analysis knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamParams {
+    /// Threshold on the robust z statistic.
+    pub threshold: f32,
+    /// Cluster merge gap in samples (see [`TriggerFinder`]).
+    pub merge_gap: u64,
+    /// Model window length in samples.
+    pub seq_len: u64,
+}
+
+impl StreamParams {
+    /// Defaults for a model with `seq_len`-sample windows: z >= 3,
+    /// clusters merge within one window length.
+    pub fn for_windows(seq_len: u64) -> Self {
+        Self { threshold: 3.0, merge_gap: seq_len, seq_len }
+    }
+}
+
+/// Result of analyzing one scored stream against its injection truth.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    /// Scored windows analyzed.
+    pub windows: u64,
+    /// De-duplicated trigger candidates, in stream order.
+    pub triggers: Vec<Trigger>,
+    /// Injections whose chirp support the scored stream fully covered.
+    pub injections: usize,
+    /// Covered injections matched by at least one trigger.
+    pub found: usize,
+    /// Triggers matching no injection at all (noise triggers).
+    pub false_alarms: usize,
+    /// Background score center/spread the z statistic used.
+    pub bg_median: f32,
+    pub bg_mad: f32,
+    /// Latency of each trigger's peak window (arrival -> scored).
+    pub trigger_latency: LatencyHistogram,
+}
+
+impl StreamReport {
+    /// Fraction of covered injections recovered (1.0 when none were
+    /// injected — a null stream has nothing to miss).
+    pub fn efficiency(&self) -> f64 {
+        if self.injections == 0 {
+            1.0
+        } else {
+            self.found as f64 / self.injections as f64
+        }
+    }
+}
+
+impl std::fmt::Display for StreamReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "stream analysis: {} windows -> {} triggers | {}/{} injections recovered \
+             (efficiency {:.1}%) | {} false alarms",
+            self.windows,
+            self.triggers.len(),
+            self.found,
+            self.injections,
+            100.0 * self.efficiency(),
+            self.false_alarms,
+        )?;
+        writeln!(
+            f,
+            "  background score: median {:.4} mad {:.4}",
+            self.bg_median, self.bg_mad
+        )?;
+        writeln!(f, "  trigger latency: {}", self.trigger_latency.summary())
+    }
+}
+
+/// Does `trig` account for an injection centered at `t0`?  The peak
+/// window's center must lie within one window length of the center —
+/// tight enough that a noise trigger elsewhere cannot claim it, loose
+/// enough that a peak on the chirp's edge still counts.
+fn matches(trig: &Trigger, t0: u64, seq_len: u64) -> bool {
+    let center = trig.peak_pos + seq_len / 2;
+    center.abs_diff(t0) <= seq_len
+}
+
+/// Cluster a scored window stream and score it against the injection
+/// ground truth.  Windows may arrive in any order (sharded pools
+/// interleave); they are sorted by stream position first.
+pub fn analyze(
+    mut windows: Vec<WindowScore>,
+    injections: &[Injection],
+    p: &StreamParams,
+) -> StreamReport {
+    windows.sort_by_key(|w| w.pos);
+    let n = windows.len();
+    // robust background stats over the whole scored stream
+    let mut scores: Vec<f32> = windows.iter().map(|w| w.score).collect();
+    let bg_median = median(&mut scores);
+    let mut devs: Vec<f32> = windows.iter().map(|w| (w.score - bg_median).abs()).collect();
+    let bg_mad = (median(&mut devs) * 1.4826).max(1e-4);
+    let mut finder = TriggerFinder::new(p.threshold, p.merge_gap);
+    for w in &windows {
+        finder.observe(w.pos, (w.score - bg_median).abs() / bg_mad, w.latency_ns);
+    }
+    let triggers = finder.finish();
+    // injections whose chirp support the scored windows fully cover
+    let last_end = windows.last().map(|w| w.pos + p.seq_len).unwrap_or(0);
+    let half = CHIRP_HALF_SPAN as u64;
+    let covered: Vec<&Injection> = injections
+        .iter()
+        .filter(|i| i.t0 >= half && i.t0 + half <= last_end)
+        .collect();
+    let found = covered
+        .iter()
+        .filter(|i| triggers.iter().any(|t| matches(t, i.t0, p.seq_len)))
+        .count();
+    // a trigger near *any* injection (covered or edge) is not a false
+    // alarm — only triggers explained by nothing count
+    let false_alarms = triggers
+        .iter()
+        .filter(|t| !injections.iter().any(|i| matches(t, i.t0, p.seq_len)))
+        .count();
+    let mut trigger_latency = LatencyHistogram::new();
+    for t in &triggers {
+        trigger_latency.record(t.latency_ns);
+    }
+    StreamReport {
+        windows: n as u64,
+        triggers,
+        injections: covered.len(),
+        found,
+        false_alarms,
+        bg_median,
+        bg_mad,
+        trigger_latency,
+    }
+}
+
+fn median(v: &mut [f32]) -> f32 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let mid = v.len() / 2;
+    v.sort_by(|a, b| a.total_cmp(b));
+    if v.len() % 2 == 1 {
+        v[mid]
+    } else {
+        (v[mid - 1] + v[mid]) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(pos: u64, score: f32) -> WindowScore {
+        WindowScore { pos, score, latency_ns: 5_000 }
+    }
+
+    /// Background at 0.5 with tiny spread; outliers where requested.
+    fn stream_with(outliers: &[(u64, f32)]) -> Vec<WindowScore> {
+        let mut v = Vec::new();
+        for k in 0..200u64 {
+            let pos = k * 50;
+            let base = 0.5 + if k % 2 == 0 { 0.01 } else { -0.01 };
+            let score = outliers
+                .iter()
+                .find(|(p, _)| *p == pos)
+                .map(|(_, s)| *s)
+                .unwrap_or(base);
+            v.push(w(pos, score));
+        }
+        v
+    }
+
+    #[test]
+    fn injected_outliers_are_recovered_and_nulls_are_clean() {
+        let p = StreamParams::for_windows(100);
+        // two injections, each lighting up two overlapping windows
+        let windows = stream_with(&[(1000, 0.95), (1050, 0.9), (5000, 0.05)]);
+        let inj = [
+            Injection { t0: 1050, amp: 6.0 },
+            Injection { t0: 5050, amp: 7.0 },
+        ];
+        let r = analyze(windows, &inj, &p);
+        assert_eq!(r.injections, 2);
+        assert_eq!(r.found, 2);
+        assert_eq!(r.false_alarms, 0);
+        assert_eq!(r.triggers.len(), 2);
+        assert_eq!(r.efficiency(), 1.0);
+        assert!((r.bg_median - 0.5).abs() < 0.02, "{}", r.bg_median);
+        assert_eq!(r.trigger_latency.count(), 2);
+        // the display renders the headline numbers
+        let text = format!("{r}");
+        assert!(text.contains("2/2 injections"), "{text}");
+        assert!(text.contains("efficiency 100.0%"), "{text}");
+    }
+
+    #[test]
+    fn unexplained_outlier_is_a_false_alarm() {
+        let p = StreamParams::for_windows(100);
+        let windows = stream_with(&[(3000, 0.99)]);
+        let r = analyze(windows, &[], &p);
+        assert_eq!(r.injections, 0);
+        assert_eq!(r.false_alarms, 1);
+        assert_eq!(r.efficiency(), 1.0, "null stream misses nothing");
+    }
+
+    #[test]
+    fn missed_injection_lowers_efficiency() {
+        let p = StreamParams::for_windows(100);
+        let windows = stream_with(&[(1000, 0.95)]);
+        let inj = [
+            Injection { t0: 1050, amp: 6.0 },
+            Injection { t0: 7000, amp: 5.0 }, // nothing lit up here
+        ];
+        let r = analyze(windows, &inj, &p);
+        assert_eq!((r.found, r.injections), (1, 2));
+        assert!((r.efficiency() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn injections_outside_the_scored_band_are_not_counted() {
+        let p = StreamParams::for_windows(100);
+        // windows cover [0, 10_000); an injection at 50_000 was never
+        // streamed and must not count against efficiency
+        let windows = stream_with(&[(1000, 0.95)]);
+        let inj = [
+            Injection { t0: 1050, amp: 6.0 },
+            Injection { t0: 50_000, amp: 6.0 },
+        ];
+        let r = analyze(windows, &inj, &p);
+        assert_eq!(r.injections, 1);
+        assert_eq!(r.efficiency(), 1.0);
+    }
+
+    #[test]
+    fn out_of_order_windows_are_sorted_before_clustering() {
+        let p = StreamParams::for_windows(100);
+        let mut windows = stream_with(&[(1000, 0.95), (1050, 0.9)]);
+        windows.reverse(); // shard interleaving, adversarially
+        let r = analyze(windows, &[Injection { t0: 1050, amp: 6.0 }], &p);
+        assert_eq!(r.found, 1);
+        assert_eq!(r.triggers.len(), 1, "still one de-duplicated trigger");
+    }
+
+    #[test]
+    fn saturated_background_does_not_divide_by_zero() {
+        let p = StreamParams::for_windows(100);
+        let windows: Vec<WindowScore> = (0..100).map(|k| w(k * 50, 1.0)).collect();
+        let r = analyze(windows, &[], &p);
+        assert!(r.bg_mad >= 1e-4);
+        assert!(r.triggers.is_empty());
+    }
+
+    #[test]
+    fn empty_stream_is_calm() {
+        let p = StreamParams::for_windows(100);
+        let r = analyze(Vec::new(), &[Injection { t0: 500, amp: 6.0 }], &p);
+        assert_eq!(r.windows, 0);
+        assert_eq!(r.injections, 0, "nothing was covered");
+        assert!(r.triggers.is_empty());
+    }
+
+    #[test]
+    fn median_of_small_slices() {
+        let mut empty: [f32; 0] = [];
+        assert_eq!(median(&mut empty), 0.0);
+        assert_eq!(median(&mut [3.0f32]), 3.0);
+        assert_eq!(median(&mut [1.0f32, 2.0]), 1.5);
+        assert_eq!(median(&mut [5.0f32, 1.0, 3.0]), 3.0);
+    }
+}

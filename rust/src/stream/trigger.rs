@@ -1,0 +1,184 @@
+//! Trigger clustering: per-window detection statistics in, de-duplicated
+//! trigger candidates out.
+//!
+//! A window whose statistic crosses the threshold opens (or extends) a
+//! cluster; any observation more than `merge_gap` samples past the
+//! cluster's last over-threshold window closes it.  Each closed cluster
+//! becomes exactly one [`Trigger`] carrying the *peak* window — the
+//! standard peak-over-cluster de-duplication of burst searches (one
+//! astrophysical event excites every overlapping window; reporting them
+//! all would multiply the trigger rate by the overlap factor).
+//!
+//! Observations must arrive in non-decreasing stream order; the analyzer
+//! sorts the scored windows first (a sharded worker pool completes them
+//! out of order).
+
+/// One de-duplicated trigger candidate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trigger {
+    /// Start sample of the first over-threshold window in the cluster.
+    pub onset: u64,
+    /// Start sample of the peak (highest-statistic) window.
+    pub peak_pos: u64,
+    /// The peak window's detection statistic.
+    pub peak_stat: f32,
+    /// Over-threshold windows folded into this trigger.
+    pub windows: usize,
+    /// Latency of the peak window (ns, last-sample arrival -> scored) —
+    /// the "how stale is this trigger" number a downstream veto cares
+    /// about.
+    pub latency_ns: u64,
+}
+
+struct OpenCluster {
+    onset: u64,
+    last: u64,
+    peak_pos: u64,
+    peak_stat: f32,
+    peak_latency: u64,
+    windows: usize,
+}
+
+/// Streaming threshold + peak-over-cluster trigger finder.
+pub struct TriggerFinder {
+    threshold: f32,
+    merge_gap: u64,
+    open: Option<OpenCluster>,
+    last_pos: Option<u64>,
+    triggers: Vec<Trigger>,
+}
+
+impl TriggerFinder {
+    /// `threshold` on the detection statistic; over-threshold windows
+    /// whose starts are within `merge_gap` samples coalesce.
+    pub fn new(threshold: f32, merge_gap: u64) -> Self {
+        Self {
+            threshold,
+            merge_gap,
+            open: None,
+            last_pos: None,
+            triggers: Vec::new(),
+        }
+    }
+
+    fn close(&mut self) {
+        if let Some(c) = self.open.take() {
+            self.triggers.push(Trigger {
+                onset: c.onset,
+                peak_pos: c.peak_pos,
+                peak_stat: c.peak_stat,
+                windows: c.windows,
+                latency_ns: c.peak_latency,
+            });
+        }
+    }
+
+    /// Feed one scored window (start sample, statistic, scoring latency).
+    /// Panics if windows arrive out of stream order.
+    pub fn observe(&mut self, pos: u64, stat: f32, latency_ns: u64) {
+        if let Some(p) = self.last_pos {
+            assert!(pos >= p, "windows must arrive in stream order ({pos} after {p})");
+        }
+        self.last_pos = Some(pos);
+        if let Some(c) = &self.open {
+            if pos - c.last > self.merge_gap {
+                self.close();
+            }
+        }
+        if stat >= self.threshold {
+            match &mut self.open {
+                Some(c) => {
+                    c.last = pos;
+                    c.windows += 1;
+                    if stat > c.peak_stat {
+                        c.peak_pos = pos;
+                        c.peak_stat = stat;
+                        c.peak_latency = latency_ns;
+                    }
+                }
+                None => {
+                    self.open = Some(OpenCluster {
+                        onset: pos,
+                        last: pos,
+                        peak_pos: pos,
+                        peak_stat: stat,
+                        peak_latency: latency_ns,
+                        windows: 1,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Close any open cluster and return every trigger, in stream order.
+    pub fn finish(mut self) -> Vec<Trigger> {
+        self.close();
+        self.triggers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(obs: &[(u64, f32)], thr: f32, gap: u64) -> Vec<Trigger> {
+        let mut f = TriggerFinder::new(thr, gap);
+        for &(pos, stat) in obs {
+            f.observe(pos, stat, 1_000 + pos);
+        }
+        f.finish()
+    }
+
+    #[test]
+    fn overlapping_windows_dedup_to_one_trigger_at_the_peak() {
+        // one event excites four overlapping windows; one trigger, at
+        // the argmax, counting all four
+        let t = run(
+            &[(0, 0.1), (25, 4.0), (50, 9.0), (75, 6.5), (100, 3.5), (125, 0.2)],
+            3.0,
+            100,
+        );
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].onset, 25);
+        assert_eq!(t[0].peak_pos, 50);
+        assert_eq!(t[0].peak_stat, 9.0);
+        assert_eq!(t[0].windows, 4);
+        assert_eq!(t[0].latency_ns, 1_050, "latency is the peak window's");
+    }
+
+    #[test]
+    fn distant_events_stay_separate_triggers() {
+        let t = run(&[(0, 5.0), (500, 0.0), (1000, 7.0)], 3.0, 100);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].peak_pos, 0);
+        assert_eq!(t[1].peak_pos, 1000);
+    }
+
+    #[test]
+    fn sub_threshold_stream_yields_no_triggers() {
+        assert!(run(&[(0, 0.5), (25, 2.9), (50, 1.0)], 3.0, 100).is_empty());
+    }
+
+    #[test]
+    fn gap_exactly_at_merge_gap_still_merges() {
+        let t = run(&[(0, 4.0), (100, 5.0)], 3.0, 100);
+        assert_eq!(t.len(), 1, "<= merge_gap coalesces");
+        let t = run(&[(0, 4.0), (101, 5.0)], 3.0, 100);
+        assert_eq!(t.len(), 2, "> merge_gap separates");
+    }
+
+    #[test]
+    fn open_cluster_flushes_at_finish() {
+        let t = run(&[(0, 0.1), (25, 8.0)], 3.0, 100);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].windows, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "stream order")]
+    fn out_of_order_observation_panics() {
+        let mut f = TriggerFinder::new(3.0, 100);
+        f.observe(50, 0.0, 0);
+        f.observe(25, 0.0, 0);
+    }
+}

@@ -1,0 +1,239 @@
+//! The windowizer: slices a continuous multi-channel sample stream into
+//! overlapping `(seq_len, channels)` model windows with a configurable
+//! hop, using a fixed ring buffer — no per-window work proportional to
+//! the overlap.  Drivers that score windows in place and hand them back
+//! via [`Windowizer::recycle`] allocate nothing per window once the
+//! scratch pool is warm; the trigger server's stream source instead
+//! *moves* each window into its SPSC ring (ownership leaves with the
+//! event), which costs exactly one buffer allocation per window.
+//!
+//! Contract (property-tested below): every emitted window is **bitwise
+//! identical** to the naive re-slice `stream[k*hop .. k*hop + seq_len]`
+//! of the recorded stream, for any hop >= 1 — including hop > seq_len,
+//! where the windows have gaps between them and the ring simply skips
+//! the uncovered samples.
+
+use crate::hls::scratch::Scratch;
+use crate::nn::tensor::Mat;
+
+/// One window cut from the stream.
+#[derive(Debug)]
+pub struct StreamWindow {
+    /// Absolute sample index of the window's first row.
+    pub start: u64,
+    /// `(seq_len, channels)` feature matrix (same layout the router
+    /// validates for the model).
+    pub x: Mat,
+}
+
+/// Ring-buffered stream -> window slicer.
+pub struct Windowizer {
+    seq_len: usize,
+    channels: usize,
+    hop: usize,
+    /// The last `seq_len` samples, sample-major: slot `t` holds the
+    /// sample with absolute index `i` where `i % seq_len == t`.
+    ring: Vec<f32>,
+    /// Samples pushed so far.
+    n: u64,
+    /// Window buffers are drawn from (and recycled into) this pool, so
+    /// a steady-state stream driver allocates nothing per window.
+    scratch: Scratch,
+}
+
+impl Windowizer {
+    pub fn new(seq_len: usize, channels: usize, hop: usize) -> Self {
+        assert!(seq_len >= 1 && channels >= 1, "degenerate window shape");
+        assert!(hop >= 1, "hop must be >= 1");
+        Self {
+            seq_len,
+            channels,
+            hop,
+            ring: vec![0.0; seq_len * channels],
+            n: 0,
+            scratch: Scratch::new(),
+        }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn hop(&self) -> usize {
+        self.hop
+    }
+
+    /// Samples pushed so far.
+    pub fn pushed(&self) -> u64 {
+        self.n
+    }
+
+    /// Windows emitted so far: one per hop once the first `seq_len`
+    /// samples have arrived.
+    pub fn emitted(&self) -> u64 {
+        if self.n < self.seq_len as u64 {
+            0
+        } else {
+            (self.n - self.seq_len as u64) / self.hop as u64 + 1
+        }
+    }
+
+    /// Push one sample (one value per channel).  Returns the completed
+    /// window when this sample is the last row of one — at most one
+    /// window per push, since windows complete `hop >= 1` samples apart.
+    pub fn push(&mut self, sample: &[f32]) -> Option<StreamWindow> {
+        assert_eq!(sample.len(), self.channels, "bad channel count");
+        let slot = (self.n % self.seq_len as u64) as usize * self.channels;
+        self.ring[slot..slot + self.channels].copy_from_slice(sample);
+        self.n += 1;
+        // window [s, s + seq_len) completes at sample s + seq_len - 1,
+        // i.e. when n - seq_len is a window start (a multiple of hop)
+        let s = self.seq_len as u64;
+        if self.n >= s && (self.n - s) % self.hop as u64 == 0 {
+            Some(self.emit())
+        } else {
+            None
+        }
+    }
+
+    fn emit(&mut self) -> StreamWindow {
+        let start = self.n - self.seq_len as u64;
+        let ch = self.channels;
+        let mut buf = self.scratch.take_row(self.seq_len * ch);
+        for t in 0..self.seq_len {
+            // absolute index start + t lives in ring slot (start+t) % S
+            let slot = ((start + t as u64) % self.seq_len as u64) as usize * ch;
+            buf[t * ch..(t + 1) * ch].copy_from_slice(&self.ring[slot..slot + ch]);
+        }
+        StreamWindow { start, x: Mat::from_vec(self.seq_len, ch, buf) }
+    }
+
+    /// Return a served window's buffer to the pool so the next emission
+    /// reuses its allocation.  Optional: windows handed to another owner
+    /// (e.g. the trigger server's rings) simply cost one allocation each.
+    pub fn recycle(&mut self, w: StreamWindow) {
+        self.scratch.put_row(w.x.into_vec());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{Gen, Prop};
+
+    /// Naive reference: record the whole stream, then re-slice.
+    fn naive_windows(stream: &[f32], ch: usize, s: usize, hop: usize) -> Vec<(u64, Vec<f32>)> {
+        let total = stream.len() / ch;
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        while start + s <= total {
+            out.push((start as u64, stream[start * ch..(start + s) * ch].to_vec()));
+            start += hop;
+        }
+        out
+    }
+
+    fn drive(stream: &[f32], ch: usize, s: usize, hop: usize) -> Vec<(u64, Vec<f32>)> {
+        let mut wz = Windowizer::new(s, ch, hop);
+        let mut out = Vec::new();
+        for sample in stream.chunks(ch) {
+            if let Some(w) = wz.push(sample) {
+                out.push((w.start, w.x.data().to_vec()));
+                wz.recycle(w);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_streamed_windows_bitwise_match_naive_reslice() {
+        Prop::new("windowizer == naive re-slice").runs(300).check(|g| {
+            let ch = g.usize_in(1, 4);
+            let s = g.usize_in(1, 24);
+            // hop deliberately ranges past s (gapped windows)
+            let hop = g.usize_in(1, 2 * s + 4);
+            let total = g.usize_in(0, 6 * s + 3);
+            let stream: Vec<f32> = (0..total * ch).map(|_| g.normal()).collect();
+            let got = drive(&stream, ch, s, hop);
+            let want = naive_windows(&stream, ch, s, hop);
+            assert_eq!(got.len(), want.len(), "S={s} hop={hop} total={total}");
+            for ((gp, gx), (wp, wx)) in got.iter().zip(&want) {
+                assert_eq!(gp, wp, "window start");
+                assert_eq!(gx, wx, "S={s} hop={hop} start={gp}");
+            }
+        });
+    }
+
+    #[test]
+    fn stream_shorter_than_window_emits_nothing() {
+        let mut wz = Windowizer::new(10, 2, 3);
+        for i in 0..9 {
+            assert!(wz.push(&[i as f32, 0.0]).is_none());
+        }
+        assert_eq!(wz.emitted(), 0);
+        // the 10th sample completes the first window
+        let w = wz.push(&[9.0, 0.0]).expect("first window at sample 10");
+        assert_eq!(w.start, 0);
+        assert_eq!(wz.emitted(), 1);
+    }
+
+    #[test]
+    fn hop_larger_than_window_leaves_gaps() {
+        // S=4, hop=6: windows [0,4), [6,10), [12,16) — samples 4,5 and
+        // 10,11 belong to no window
+        let stream: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let got = drive(&stream, 1, 4, 6);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], (0, vec![0.0, 1.0, 2.0, 3.0]));
+        assert_eq!(got[1], (6, vec![6.0, 7.0, 8.0, 9.0]));
+        assert_eq!(got[2], (12, vec![12.0, 13.0, 14.0, 15.0]));
+    }
+
+    #[test]
+    fn exact_multiple_tail_emits_final_window_on_last_sample() {
+        // total = S + 2*hop exactly: the last window completes on the
+        // very last pushed sample, nothing is left dangling
+        let (s, hop) = (8usize, 3usize);
+        let total = s + 2 * hop;
+        let stream: Vec<f32> = (0..total).map(|v| v as f32).collect();
+        let mut wz = Windowizer::new(s, 1, hop);
+        let mut last = None;
+        for (i, sample) in stream.chunks(1).enumerate() {
+            if let Some(w) = wz.push(sample) {
+                last = Some((i, w.start));
+            }
+        }
+        assert_eq!(last, Some((total - 1, 2 * hop as u64)));
+        assert_eq!(wz.emitted(), 3);
+        // one sample short of the next window: still 3
+        wz.push(&[99.0]);
+        assert_eq!(wz.emitted(), 3);
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused_not_reallocated() {
+        let mut wz = Windowizer::new(6, 2, 2);
+        let mut g = Gen::new(5);
+        let mut ptr = None;
+        for i in 0..40 {
+            let s = [g.normal(), g.normal()];
+            if let Some(w) = wz.push(&s) {
+                let p = w.x.data().as_ptr();
+                match ptr {
+                    None => ptr = Some(p),
+                    // single-buffer steady state: the recycled allocation
+                    // is handed back every time
+                    Some(prev) => assert_eq!(prev, p, "window {i} reallocated"),
+                }
+                wz.recycle(w);
+            }
+        }
+        assert!(wz.emitted() > 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "hop must be >= 1")]
+    fn zero_hop_rejected() {
+        Windowizer::new(4, 1, 0);
+    }
+}

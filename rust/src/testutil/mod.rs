@@ -6,6 +6,7 @@
 //! setting `PROP_SEED`.  No shrinking — generators are kept small and
 //! value-printing is the caller's job via assert messages.
 
+pub mod golden;
 pub mod rng;
 
 pub use rng::XorShift;

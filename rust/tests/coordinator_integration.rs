@@ -29,6 +29,7 @@ fn three_pipelines_serve_concurrently() {
         events_per_source: 400,
         rate_per_source: 0,
         artifacts_dir: PathBuf::from("."),
+        ..Default::default()
     };
     let report = TriggerServer::run(&cfg).unwrap();
     assert_eq!(report.per_model.len(), 3);
@@ -52,6 +53,7 @@ fn paced_sources_keep_latency_low() {
             events_per_source: 400,
             rate_per_source: rate,
             artifacts_dir: PathBuf::from("."),
+            ..Default::default()
         };
         TriggerServer::run(&cfg).unwrap()
     };
@@ -87,6 +89,7 @@ fn overload_sheds_and_recovers() {
         events_per_source: 200,
         rate_per_source: 0,
         artifacts_dir: PathBuf::from("."),
+        ..Default::default()
     };
     let report = TriggerServer::run(&cfg).unwrap();
     let s = &report.per_model["gw"];
@@ -121,6 +124,7 @@ fn unknown_model_in_config_is_an_error() {
         events_per_source: 1,
         rate_per_source: 0,
         artifacts_dir: PathBuf::from("."),
+        ..Default::default()
     };
     // zoo lookup fails before any thread spawns
     assert!(std::panic::catch_unwind(|| TriggerServer::run(&cfg)).is_err()
@@ -140,6 +144,7 @@ fn four_replica_pool_scores_every_event_exactly_once() {
         events_per_source: n,
         rate_per_source: 0,
         artifacts_dir: PathBuf::from("."),
+        ..Default::default()
     };
     let report = TriggerServer::run(&cfg).unwrap();
     let s = &report.per_model["engine"];
@@ -178,6 +183,7 @@ fn replica_count_does_not_change_scores() {
             events_per_source: 300,
             rate_per_source: 0,
             artifacts_dir: PathBuf::from("."),
+            ..Default::default()
         };
         let report = TriggerServer::run(&cfg).unwrap();
         let s = &report.per_model["engine"];
@@ -205,6 +211,7 @@ fn sharded_overload_sheds_only_when_all_shards_full() {
         events_per_source: 200,
         rate_per_source: 0,
         artifacts_dir: PathBuf::from("."),
+        ..Default::default()
     };
     let report = TriggerServer::run(&cfg).unwrap();
     let s = &report.per_model["gw"];
@@ -216,6 +223,52 @@ fn sharded_overload_sheds_only_when_all_shards_full() {
 }
 
 #[test]
+fn soak_multi_replica_bursty_arrivals_exactly_once() {
+    // The soak bar: a 3-replica pool under bursty randomized arrivals
+    // (compound-Poisson pacing: burst sizes uniform in [1, 2*burst),
+    // exponential inter-burst gaps) must lose nothing, score every
+    // event exactly once, and the per-shard accounting must reconcile
+    // with the injected count to the event.
+    let n = 3_000u64;
+    let mut pc = pipeline("engine", BackendKind::Float);
+    pc.replicas = 3;
+    let cfg = ServerConfig {
+        pipelines: vec![pc],
+        events_per_source: n,
+        // mean rate well inside float capacity; bursts of ~24 slam the
+        // rings but sit far below the 1024/shard capacity, so any drop
+        // is a real routing bug, not designed shedding
+        rate_per_source: 30_000,
+        burst_per_source: 24,
+        artifacts_dir: PathBuf::from("."),
+    };
+    let report = TriggerServer::run(&cfg).unwrap();
+    let s = &report.per_model["engine"];
+    // zero drops
+    assert_eq!(s.dropped, 0, "bursty load within capacity must not shed");
+    // exactly-once scoring: n accepted, n latencies, n labeled scores
+    assert_eq!(s.accepted, n);
+    assert_eq!(s.latency.count(), n);
+    assert_eq!(s.scored_labels.len(), n as usize);
+    assert_eq!(s.scored_pos.len(), n as usize);
+    // ShardStats totals reconcile with the injected count
+    assert_eq!(s.shards.len(), 3);
+    assert_eq!(s.shards.iter().map(|sh| sh.accepted).sum::<u64>(), n);
+    assert_eq!(s.shards.iter().map(|sh| sh.latency.count()).sum::<u64>(), n);
+    assert_eq!(s.shards.iter().map(|sh| sh.batches).sum::<u64>(), s.batches);
+    assert_eq!(
+        s.shards.iter().map(|sh| sh.batch_fill_sum).sum::<u64>(),
+        s.batch_fill_sum
+    );
+    assert_eq!(s.batch_fill_sum, n, "every accepted event sits in exactly one batch");
+    // bursts really did interleave work across the pool
+    assert!(
+        s.shards.iter().filter(|sh| sh.accepted > 0).count() >= 2,
+        "bursty round-robin must exercise multiple shards"
+    );
+}
+
+#[test]
 fn hls_and_float_backends_rank_events_consistently() {
     // same events through both backends: online AUCs must be close
     let run = |backend| {
@@ -224,6 +277,7 @@ fn hls_and_float_backends_rank_events_consistently() {
             events_per_source: 150,
             rate_per_source: 0,
             artifacts_dir: PathBuf::from("."),
+            ..Default::default()
         };
         TriggerServer::run(&cfg).unwrap().per_model["engine"]
             .online_auc()

@@ -1,0 +1,109 @@
+//! Golden-vector conformance suite (ISSUE 5 satellite): the committed
+//! fixtures under `tests/golden/` pin the float forward's logits and
+//! the HLS forward's probabilities **bitwise**, per zoo model ×
+//! {uniform, mixed} precision plan.  Any cross-PR drift of either
+//! forward fails here, naming the case and the first differing value.
+//!
+//! Sealing flow (see `testutil::golden` for the rationale):
+//! * committed fixtures always carry the sealed *inputs* (integer-only
+//!   RNG, platform-independent bit patterns);
+//! * output lines reading `unsealed` are rewritten in place with the
+//!   computed bit patterns on the first run — commit the sealed file;
+//! * sealed output lines are compared bitwise and must match exactly.
+//!
+//! No network, no generation step: `cargo test` + the committed corpus.
+
+use hls4ml_transformer::testutil::golden::{bits_of, compute, corpus, parse, render};
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn diff_bits(case: &str, what: &str, got: &[u32], want: &[u32]) {
+    assert_eq!(
+        got.len(),
+        want.len(),
+        "{case}: {what} length {} != sealed {}",
+        got.len(),
+        want.len()
+    );
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g, w,
+            "{case}: {what}[{i}] drifted: got {:08x} ({}), sealed {:08x} ({})\n\
+             The bit-exact contract of the forward changed — if this is an\n\
+             intentional numeric change, regenerate the corpus by deleting the\n\
+             output lines (or the files) under tests/golden/ and committing\n\
+             the re-sealed fixtures with an explanation.",
+            g,
+            f32::from_bits(*g),
+            w,
+            f32::from_bits(*w),
+        );
+    }
+}
+
+#[test]
+fn golden_corpus_is_bitwise_stable() {
+    let dir = golden_dir();
+    let mut sealed_now = Vec::new();
+    for case in corpus() {
+        let name = case.file_name();
+        let path = dir.join(&name);
+        let v = compute(&case);
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!(
+                "{name}: committed golden fixture missing ({e}); the corpus in \
+                 tests/golden/ is part of the repository — restore it or re-seal \
+                 by committing the output of testutil::golden::render"
+            )
+        });
+        let f = parse(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(f.model, case.model, "{name}: fixture/corpus model mismatch");
+        assert_eq!(f.plan, case.plan.tag(), "{name}: fixture/corpus plan mismatch");
+        assert_eq!(f.input_seed, case.input_seed, "{name}: input seed drifted");
+        assert_eq!(f.weights_seed, case.weights_seed, "{name}: weights seed drifted");
+        // the committed inputs must be exactly what the corpus definition
+        // regenerates — guards the generator itself
+        diff_bits(&name, "input", &bits_of(v.input.data()), &f.input_bits);
+        match (&f.float_logits_bits, &f.fixed_probs_bits) {
+            (Some(fl), Some(fx)) => {
+                diff_bits(&name, "float-logits", &bits_of(&v.float_logits), fl);
+                diff_bits(&name, "fixed-probs", &bits_of(&v.fixed_probs), fx);
+            }
+            _ => {
+                // first run on this corpus revision: seal in place
+                std::fs::write(&path, render(&v, true))
+                    .unwrap_or_else(|e| panic!("{name}: sealing failed: {e}"));
+                sealed_now.push(name);
+            }
+        }
+    }
+    if !sealed_now.is_empty() {
+        eprintln!(
+            "golden conformance: sealed output bit patterns into {} fixture(s): \
+             {:?}\nCommit the updated files under rust/tests/golden/ so later \
+             PRs are held to these exact bits.",
+            sealed_now.len(),
+            sealed_now
+        );
+    }
+}
+
+#[test]
+fn sealed_fixture_detects_a_single_flipped_bit() {
+    // the guard must actually guard: take the real computed vector,
+    // seal it, flip one mantissa bit, and the comparison must fail
+    let case = &corpus()[0];
+    let v = compute(case);
+    let sealed = render(&v, true);
+    let f = parse(&sealed).unwrap();
+    let mut bad = f.fixed_probs_bits.clone().unwrap();
+    bad[0] ^= 1;
+    let name = case.file_name();
+    let res = std::panic::catch_unwind(|| {
+        diff_bits(&name, "fixed-probs", &bits_of(&v.fixed_probs), &bad)
+    });
+    assert!(res.is_err(), "a one-bit drift must fail the conformance suite");
+}

@@ -1,0 +1,128 @@
+//! Property tests for the shared plan-file skeleton (`hls/planfile.rs`)
+//! through its two public grammars: `PrecisionPlan` (`site ap_fixed<W,I>`)
+//! and `ParallelismPlan` (`site R`).
+//!
+//! * parse -> format -> parse identity for random valid plans (any block
+//!   count, any site values, with and without explicit accumulators);
+//! * error paths — unknown site, malformed `ap_fixed`, duplicate line —
+//!   are ONE line and name the offending entry with its line number.
+
+use hls4ml_transformer::fixed::FixedSpec;
+use hls4ml_transformer::hls::{ParallelismPlan, PrecisionPlan, QuantConfig, ReuseFactor};
+use hls4ml_transformer::testutil::{Gen, Prop};
+
+fn random_precision_plan(g: &mut Gen) -> PrecisionPlan {
+    let blocks = g.usize_in(0, 5);
+    let mut plan = PrecisionPlan::uniform(blocks, QuantConfig::new(6, 10));
+    for site in plan.site_names() {
+        if g.bool() {
+            plan.set_data(&site, g.fixed_spec_max_width(24)).unwrap();
+        } else {
+            // explicit (non-derived) accumulator exercises the second
+            // token of the grammar
+            let data = g.fixed_spec_max_width(20);
+            let accum = FixedSpec::new(
+                30 + (g.usize_in(0, 10) as u32),
+                10 + (g.usize_in(0, 5) as u32),
+            );
+            plan.set(&site, QuantConfig { data, accum }).unwrap();
+        }
+    }
+    plan
+}
+
+#[test]
+fn prop_precision_plan_parse_format_parse_identity() {
+    Prop::new("precision plan serialize round-trip").runs(200).check(|g| {
+        let plan = random_precision_plan(g);
+        let text = plan.serialize();
+        // parse onto an unrelated base: every site must be overwritten
+        let mut rt = PrecisionPlan::uniform(plan.num_blocks(), QuantConfig::new(4, 4));
+        rt.apply_overrides(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+        assert_eq!(rt, plan, "parse(format(plan)) != plan for:\n{text}");
+        // format is a fixpoint: format(parse(format(plan))) == format(plan)
+        assert_eq!(rt.serialize(), text);
+    });
+}
+
+#[test]
+fn prop_parallelism_plan_parse_format_parse_identity() {
+    Prop::new("parallelism plan serialize round-trip").runs(200).check(|g| {
+        let blocks = g.usize_in(0, 5);
+        let mut plan = ParallelismPlan::uniform(blocks, ReuseFactor(1));
+        for site in plan.site_names() {
+            let r = [1u32, 2, 3, 4, 8, 16, 64, 1024][g.usize_in(0, 8)];
+            plan.set(&site, ReuseFactor(r)).unwrap();
+        }
+        let text = plan.serialize();
+        let mut rt = ParallelismPlan::uniform(blocks, ReuseFactor(7));
+        rt.apply_overrides(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+        assert_eq!(rt, plan, "parse(format(plan)) != plan for:\n{text}");
+        assert_eq!(rt.serialize(), text);
+    });
+}
+
+/// Every error is one line, carries the 1-based line number, and names
+/// the offending entry.
+fn assert_one_line_error(err: &str, line: usize, needle: &str) {
+    assert!(!err.contains('\n'), "one line: {err}");
+    assert!(err.contains(&format!("line {line}")), "line number: {err}");
+    assert!(err.contains(needle), "names '{needle}': {err}");
+}
+
+#[test]
+fn precision_error_paths_name_the_bad_entry() {
+    let base = || PrecisionPlan::uniform(2, QuantConfig::new(6, 10));
+    // unknown site (second line, so numbering is visible)
+    let err = base()
+        .apply_overrides("embed ap_fixed<12,4>\nblock7.ln1 ap_fixed<8,3>\n")
+        .unwrap_err();
+    assert_one_line_error(&err, 2, "block7.ln1");
+    // malformed ap_fixed
+    let err = base().apply_overrides("embed ap_fixd<8,3>\n").unwrap_err();
+    assert_one_line_error(&err, 1, "ap_fixd<8,3>");
+    // structurally valid but inconsistent widths
+    let err = base().apply_overrides("embed ap_fixed<3,9>\n").unwrap_err();
+    assert_one_line_error(&err, 1, "ap_fixed<3,9>");
+    // duplicate line
+    let err = base()
+        .apply_overrides("embed ap_fixed<12,4>\npool ap_fixed<8,3>\nembed ap_fixed<10,4>\n")
+        .unwrap_err();
+    assert_one_line_error(&err, 3, "duplicate assignment for site 'embed'");
+    assert!(err.contains("first assigned at line 1"), "{err}");
+}
+
+#[test]
+fn parallelism_error_paths_name_the_bad_entry() {
+    let base = || ParallelismPlan::uniform(2, ReuseFactor(1));
+    let err = base().apply_overrides("pool R2\nblock9.ffn1 4\n").unwrap_err();
+    assert_one_line_error(&err, 2, "block9.ffn1");
+    let err = base().apply_overrides("pool R0\n").unwrap_err();
+    assert_one_line_error(&err, 1, "out of range");
+    // softmax is a precision-only site: the reuse grammar rejects it
+    let err = base().apply_overrides("softmax 4\n").unwrap_err();
+    assert_one_line_error(&err, 1, "softmax");
+    let err = base().apply_overrides("pool R2\n\n# c\npool 4\n").unwrap_err();
+    assert_one_line_error(&err, 4, "duplicate assignment for site 'pool'");
+}
+
+#[test]
+fn prop_duplicate_of_any_random_site_is_rejected_by_both_grammars() {
+    Prop::new("duplicate site rejected").runs(100).check(|g| {
+        let blocks = g.usize_in(1, 4);
+        let plan = PrecisionPlan::uniform(blocks, QuantConfig::new(6, 10));
+        let sites = plan.site_names();
+        let site = &sites[g.usize_in(0, sites.len())];
+        let text = format!("{site} ap_fixed<12,4>\n{site} ap_fixed<10,3>\n");
+        let err = plan.clone().apply_overrides(&text).unwrap_err();
+        assert_one_line_error(&err, 2, &format!("'{site}'"));
+        // the reuse grammar shares the skeleton (minus softmax)
+        if site != "softmax" {
+            let mut par = ParallelismPlan::uniform(blocks, ReuseFactor(1));
+            let err = par
+                .apply_overrides(&format!("{site} 2\n{site} 4\n"))
+                .unwrap_err();
+            assert_one_line_error(&err, 2, &format!("'{site}'"));
+        }
+    });
+}
