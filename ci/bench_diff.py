@@ -19,6 +19,13 @@ grew by more than PCT percent.  Latency keys are where lower is strictly
 better (wall-clock percentiles, modeled FPGA cycles), so a guarded
 increase is a real regression rather than a rebalanced trade-off;
 throughput-style keys stay advisory either way.
+
+Under `--fail-on-regression`, a latency series that was tracked in the
+previous run and is missing from the current one — the whole bench gone,
+or just its latency field — is also a hard error: a gating lane must not
+go silently green because the regressed series stopped being emitted.
+Renames and removals in advisory mode remain lifecycle notes, not
+errors.
 """
 
 import json
@@ -72,6 +79,22 @@ def latency_regressions(prev, curr, shared, threshold_pct):
             pct = (b - a) / a * 100.0
             if pct > threshold_pct:
                 rows.append((name, key, a, b, pct))
+    return rows
+
+
+def vanished_latency_series(prev, curr):
+    """(bench, key) for every latency series the previous run tracked
+    that the current run no longer emits — either the bench vanished
+    entirely or the record lost its latency field."""
+    rows = []
+    for name in sorted(prev):
+        for key in sorted(prev[name]):
+            if key == "bench" or not is_latency_key(key):
+                continue
+            if metric(prev[name], key) is None:
+                continue
+            if name not in curr or metric(curr.get(name, {}), key) is None:
+                rows.append((name, key))
     return rows
 
 
@@ -160,11 +183,20 @@ def main(argv):
         f"{len(added)} new, {len(dropped)} gone)"
     )
     if fail_pct is not None:
+        failed = False
         regressions = latency_regressions(prev, curr, shared, fail_pct)
         if regressions:
             print(f"\n== latency regressions past {fail_pct:g}% (gating) ==")
             for n, k, a, b, pct in regressions:
                 print(f"  {n:<60} {k}: {a:,.0f} -> {b:,.0f}  (+{pct:.1f}%)")
+            failed = True
+        vanished = vanished_latency_series(prev, curr)
+        if vanished:
+            print("\n== latency series missing from the current run (gating) ==")
+            for n, k in vanished:
+                print(f"  {n:<60} {k}: tracked last run, not emitted now")
+            failed = True
+        if failed:
             return 1
         print(f"(no latency-keyed metric regressed past {fail_pct:g}%)")
     return 0

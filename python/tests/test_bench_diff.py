@@ -3,7 +3,10 @@ renames (added/removed keys are reported as "new"/"gone", never an
 error), malformed CLI input and unreadable files, always exiting 0 —
 except under --fail-on-regression PCT, where a latency-keyed metric
 (*_ns / *_cycles / *latency*) growing past the threshold exits 1 while
-throughput-style changes stay advisory."""
+throughput-style changes stay advisory.  Also under the flag, a latency
+series tracked last run but missing now (vanished bench, or a record
+that lost its latency field) is a hard error — the gate must not go
+green because a regressed series stopped being emitted."""
 
 import importlib.util
 import pathlib
@@ -188,6 +191,59 @@ def test_latency_improvement_passes_the_gate(tmp_path):
         extra=("--fail-on-regression", "10"),
     )
     assert rc == 0
+
+
+def test_vanished_latency_bench_fails_under_the_gate(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("hotpath/dense", p99_ns=100), line("kept", p99_ns=5)],
+        [line("kept", p99_ns=5)],
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "latency series missing from the current run" in out
+    assert "hotpath/dense" in out
+
+
+def test_lost_latency_field_fails_under_the_gate(tmp_path, capsys):
+    # the bench still reports, but its latency field went away
+    rc = run(
+        tmp_path,
+        [line("hotpath/dense", p99_ns=100, throughput_eps=50)],
+        [line("hotpath/dense", throughput_eps=55)],
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "p99_ns" in out
+    assert "tracked last run, not emitted now" in out
+
+
+def test_vanished_latency_bench_is_advisory_without_the_flag(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("hotpath/dense", p99_ns=100), line("kept", p99_ns=5)],
+        [line("kept", p99_ns=5)],
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "gone since last run: hotpath/dense" in out
+    assert "missing from the current run" not in out
+
+
+def test_vanished_throughput_bench_does_not_trip_the_gate(tmp_path, capsys):
+    # only latency-keyed series are guarded; a retired throughput line
+    # stays a lifecycle note even under the flag
+    rc = run(
+        tmp_path,
+        [line("sweep/x", throughput_eps=100), line("kept", p99_ns=5)],
+        [line("kept", p99_ns=5)],
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "gone since last run: sweep/x" in out
 
 
 def test_fail_on_regression_without_value_stays_advisory(tmp_path, capsys):

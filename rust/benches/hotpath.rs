@@ -1,11 +1,22 @@
 //! Bench: micro-benchmarks of every hot path the perf pass optimizes
-//! (EXPERIMENTS.md §Perf).  `cargo bench --bench hotpath`.
+//! (EXPERIMENTS.md §Perf, E10).  `cargo bench --bench hotpath`.
+//!
+//! The "integer hot path vs f64 reference" sections time the
+//! integer-mantissa kernels against the retained f64 reference — same
+//! output bits, different arithmetic — via the `hls::hotpath` switch
+//! (safe here: a bench `main` is single-threaded).  When the
+//! `HOTPATH_ASSERT_SPEEDUP` env var is set (e.g. `2.0`), the run fails
+//! unless the full-model integer path beats the reference by at least
+//! that factor on the widest zoo model — CI's absolute floor alongside
+//! the relative `ci/bench_diff.py` gate.
 
 mod harness;
 
 use hls4ml_transformer::coordinator::spsc;
 use hls4ml_transformer::fixed::{FixedSpec, LutKind, LutTable};
-use hls4ml_transformer::hls::{dense, layernorm, mha, softmax, FixedTransformer, QuantConfig};
+use hls4ml_transformer::hls::{
+    dense, hotpath, layernorm, mha, pooling, softmax, FixedTransformer, QuantConfig,
+};
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::zoo;
 use hls4ml_transformer::nn::tensor::Mat;
@@ -73,7 +84,60 @@ fn main() {
         });
     }
 
+    harness::section("integer hot path vs f64 reference (per kernel)");
+    {
+        // on-grid inputs: what the transformer delivers at every site,
+        // and the only regime where the two paths are comparable work
+        let x = Mat::from_vec(100, 32, g.normal_vec(3200, 1.0)).map(|v| data.quantize(v));
+        let w = Mat::from_vec(32, 32, g.normal_vec(1024, 0.3)).map(|v| data.quantize(v));
+        let b: Vec<f32> =
+            g.normal_vec(32, 0.1).iter().map(|&v| data.quantize(v)).collect();
+        let act = hls4ml_transformer::nn::layers::Activation::Relu;
+        harness::bench("dense_fixed_int 100x32 @ 32x32", || {
+            harness::black_box(dense::dense_fixed_int(&x, &w, &b, act, data, accum));
+        });
+        harness::bench("dense_fixed_ref 100x32 @ 32x32", || {
+            harness::black_box(dense::dense_fixed_ref(&x, &w, &b, act, data, accum));
+        });
+        let row0: Vec<f32> =
+            g.normal_vec(100, 1.0).iter().map(|&v| data.quantize(v)).collect();
+        harness::bench("softmax_fixed_row_int k=100", || {
+            let mut r = row0.clone();
+            softmax::softmax_fixed_row_int(&mut r, &roms, data, accum);
+            harness::black_box(&r);
+        });
+        harness::bench("softmax_fixed_row_ref k=100", || {
+            let mut r = row0.clone();
+            softmax::softmax_fixed_row_ref(&mut r, &roms, data, accum);
+            harness::black_box(&r);
+        });
+        let gamma = vec![1.0f32; 100];
+        let beta = vec![0.0f32; 100];
+        harness::bench("layernorm_fixed_row_int k=100", || {
+            let mut r = row0.clone();
+            layernorm::layernorm_fixed_row_int(&mut r, &gamma, &beta, &roms, data, accum);
+            harness::black_box(&r);
+        });
+        harness::bench("layernorm_fixed_row_ref k=100", || {
+            let mut r = row0.clone();
+            layernorm::layernorm_fixed_row_ref(&mut r, &gamma, &beta, &roms, data, accum);
+            harness::black_box(&r);
+        });
+        let mut pooled = vec![0.0f32; 32];
+        harness::bench("pool_int_core 100x32", || {
+            pooling::pool_int_core(x.data(), &mut pooled, 100, 32, data, accum);
+            harness::black_box(&pooled);
+        });
+        harness::bench("pool_ref 100x32", || {
+            harness::black_box(pooling::global_average_pool_fixed_ref(&x, data, accum));
+        });
+    }
+
     harness::section("full-model inference (single event)");
+    // the absolute gate: integer path vs f64 reference on the widest
+    // zoo model (gw: S=100, the largest MAC volume), asserted when
+    // HOTPATH_ASSERT_SPEEDUP is set
+    let mut gated_speedup: Option<f64> = None;
     for m in zoo() {
         let w = synthetic_weights(&m.config, 9);
         let x = Mat::from_vec(
@@ -82,13 +146,41 @@ fn main() {
             g.normal_vec(m.config.seq_len * m.config.input_size, 1.0),
         );
         let fx = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 10));
-        harness::bench(&format!("hls-sim forward {}", m.config.name), || {
+        hotpath::force_f64_reference(false);
+        let int_stats = harness::bench(&format!("hls-sim forward {}", m.config.name), || {
             harness::black_box(fx.forward(&x));
         });
+        hotpath::force_f64_reference(true);
+        let ref_stats =
+            harness::bench(&format!("hls-sim forward {} (f64 reference)", m.config.name), || {
+                harness::black_box(fx.forward(&x));
+            });
+        hotpath::force_f64_reference(cfg!(feature = "f64-reference"));
+        let speedup = ref_stats.mean_ns / int_stats.mean_ns;
+        println!("    -> integer hot path speedup {speedup:.2}x");
+        harness::json_line(
+            &format!("hotpath speedup {}", m.config.name),
+            &[("speedup_x", speedup)],
+        );
+        if m.config.name == "gw" {
+            gated_speedup = Some(speedup);
+        }
         let fl = FloatTransformer::new(m.config.clone(), w);
         harness::bench(&format!("float forward {}", m.config.name), || {
             harness::black_box(fl.forward(&x));
         });
+    }
+    if let Ok(floor) = std::env::var("HOTPATH_ASSERT_SPEEDUP") {
+        let floor: f64 = floor.parse().expect("HOTPATH_ASSERT_SPEEDUP must be a number");
+        let got = gated_speedup.expect("gw model must be in the zoo");
+        if got < floor {
+            eprintln!(
+                "FAIL: integer hot path speedup {got:.2}x on gw is below the \
+                 required {floor:.2}x floor"
+            );
+            std::process::exit(1);
+        }
+        println!("    hotpath speedup gate passed: {got:.2}x >= {floor:.2}x");
     }
 
     harness::section("coordinator primitives");

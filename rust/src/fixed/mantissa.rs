@@ -1,0 +1,469 @@
+//! Mantissa-native quantize/requantize — the integer hot path's core
+//! (ROADMAP item 1: stop emulating `ap_fixed` ops through f64 grid
+//! projection per scalar).
+//!
+//! On-grid values are integer mantissas scaled by a power-of-two step,
+//! so a DSP multiply-accumulate is an `i64` multiply, a shift-and-round,
+//! and a saturating clamp — no `exp2`, no `round_ties_even` on floats.
+//! The contract is **bitwise identity** with the f64 reference path
+//! ([`crate::fixed::Quantizer`] / [`FixedSpec::quantize_f64`]) whenever
+//! the [`int_mac_eligible`] predicate holds; outside that regime the
+//! kernels fall back to the reference path, so results never change —
+//! only speed does.
+//!
+//! Why identity holds (the same argument the [`crate::fixed::Fixed`]
+//! witness makes per-op, extended to whole MAC chains):
+//!
+//! * an on-grid `f32` with spec width ≤ 25 stores its mantissa exactly
+//!   ([`f32_grid_exact`]), so conversion is lossless both ways;
+//! * the f64 product of two such values is `m_a·m_b · step_a·step_b`
+//!   with `|m_a·m_b| ≤ 2^48 < 2^52` — exact — so the reference path's
+//!   `round_ties_even` on it equals an integer round-half-even shift
+//!   ([`rhe_shr`]) of the mantissa product, and saturation clamps the
+//!   same two's-complement range on both sides;
+//! * the reference accumulates accumulator-grid multiples in f64, which
+//!   stays exact while partial sums fit 52 bits ([`f64_sum_exact`]) —
+//!   exactly what an `i64` sum of the same mantissas computes;
+//! * converting the final `i64` sum back (`m as f64 * step`) is exact
+//!   under the same bound, so the float epilogue (bias, activation,
+//!   data-grid projection) sees bit-identical inputs.
+
+use super::spec::FixedSpec;
+
+/// Ceiling of the f64-exact-integer range used by the eligibility
+/// predicates, with margin below 2^53 (one headroom bit keeps every
+/// *partial* sum exact, not just the total).
+const F64_EXACT_BITS: u32 = 52;
+
+/// Conservative ceiling (just under `2^24 = 16_777_216`) for the f32
+/// partial-sum exactness bound used by the apply-V dynamic gate in
+/// [`crate::hls::mha`]: if every partial sum's accumulator-grid mantissa
+/// stays below this, the reference path's f32 accumulation never rounds
+/// and the integer sum reproduces it bit-for-bit.
+pub const F32_EXACT_LIMIT: f64 = 16_700_000.0;
+
+/// `ceil(log2(n))` for `n >= 1`.
+fn ceil_log2(n: u64) -> u32 {
+    64 - (n - 1).leading_zeros()
+}
+
+/// True when an on-grid `f32` of this spec stores its mantissa exactly:
+/// every `|m| <= 2^(W-1)` fits f32's 24-bit significand for `W <= 25`.
+#[inline]
+pub fn f32_grid_exact(spec: FixedSpec) -> bool {
+    spec.width() <= 25
+}
+
+/// True when `n_terms` sequential f64 additions of `term`-grid values
+/// are exact: every partial sum's mantissa is at most
+/// `n_terms * 2^(W-1)`, which must fit [`F64_EXACT_BITS`].
+#[inline]
+pub fn f64_sum_exact(term: FixedSpec, n_terms: usize) -> bool {
+    term.width() - 1 + ceil_log2(n_terms.max(1) as u64 + 1) <= F64_EXACT_BITS
+}
+
+/// The integer MAC path reproduces the f64 reference bit-for-bit for a
+/// dot product of `n_in` `data`-grid operand pairs accumulated (plus a
+/// bias term) on the `accum` grid.
+#[inline]
+pub fn int_mac_eligible(data: FixedSpec, accum: FixedSpec, n_in: usize) -> bool {
+    // data <= 25 also bounds the raw mantissa product by 2^48 <= 2^52,
+    // so the per-product requantization equivalence is implied
+    f32_grid_exact(data) && f64_sum_exact(accum, n_in + 1)
+}
+
+/// Round-half-even arithmetic right shift by `s` bits — the integer
+/// twin of `round_ties_even` on an exact dyadic value (and the same
+/// idiom as [`crate::fixed::Fixed::cast`]'s narrowing branch).
+///
+/// Precondition: `|m| < 2^62` (every caller holds clamped mantissas or
+/// products of ≤ 25-bit-spec mantissas, far below this).
+#[inline(always)]
+pub fn rhe_shr(m: i64, s: u32) -> i64 {
+    if s == 0 {
+        return m;
+    }
+    if s >= 63 {
+        // |m| < 2^62 = half-step at s = 63: everything rounds to zero
+        return 0;
+    }
+    let floor = m >> s;
+    let rem = m - (floor << s);
+    let half = 1i64 << (s - 1);
+    if rem > half || (rem == half && (floor & 1) == 1) {
+        floor + 1
+    } else {
+        floor
+    }
+}
+
+/// f32 ↔ mantissa conversion for one grid, constants hoisted like
+/// [`crate::fixed::Quantizer`].
+#[derive(Clone, Copy, Debug)]
+pub struct MantissaConv {
+    inv_step: f64,
+    step: f64,
+    min_m: i64,
+    max_m: i64,
+}
+
+impl MantissaConv {
+    pub fn new(spec: FixedSpec) -> Self {
+        Self {
+            inv_step: 1.0 / spec.step(),
+            step: spec.step(),
+            min_m: -(1i64 << (spec.width() - 1)),
+            max_m: (1i64 << (spec.width() - 1)) - 1,
+        }
+    }
+
+    /// Mantissa of an `f32` — identical to [`FixedSpec::mantissa_of`]:
+    /// round-half-even onto the grid, saturate at the two's-complement
+    /// range.  The `as i64` cast saturates and maps NaN to 0 (matching
+    /// `quantize`'s NaN-to-zero), and the clamp narrows the cast's
+    /// wider-than-grid range to the spec's.
+    #[inline(always)]
+    pub fn to_m(&self, v: f32) -> i64 {
+        ((v as f64 * self.inv_step).round_ties_even() as i64).clamp(self.min_m, self.max_m)
+    }
+
+    /// Exact value of a mantissa (`|m| < 2^48 < 2^52`, so no rounding).
+    #[inline(always)]
+    pub fn to_f64(&self, m: i64) -> f64 {
+        m as f64 * self.step
+    }
+
+    pub fn min_m(&self) -> i64 {
+        self.min_m
+    }
+
+    pub fn max_m(&self) -> i64 {
+        self.max_m
+    }
+}
+
+/// Requantizer for raw mantissa products: takes `m_a·m_b` (fractional
+/// width = sum of the operand fractional widths) into an accumulator
+/// grid by shift-and-round + saturation — the integer form of
+/// `Quantizer::q(a * b)`.
+#[derive(Clone, Copy, Debug)]
+pub struct MacQuantizer {
+    /// `accum.frac() - frac_in_total`; non-negative means left shift.
+    shift: i32,
+    min_m: i64,
+    max_m: i64,
+    /// For the left-shift branch: `p << shift` over/underflows the accum
+    /// range iff `p` lies outside `[lo_pre, hi_pre]` (floor-divided
+    /// bounds), so the clamp happens *before* the shift and `i64`
+    /// overflow is impossible.
+    lo_pre: i64,
+    hi_pre: i64,
+}
+
+impl MacQuantizer {
+    /// Product requantizer for two `data`-grid operands into `accum` —
+    /// the dense/score MAC configuration.
+    pub fn new(data: FixedSpec, accum: FixedSpec) -> Self {
+        Self::from_fracs(2 * data.frac(), accum)
+    }
+
+    /// General form: the input is on a grid with `frac_in_total`
+    /// fractional bits (e.g. a softmax-grid × qkv-grid product, or a
+    /// plain data-grid sum being cast into the accumulator).
+    pub fn from_fracs(frac_in_total: u32, accum: FixedSpec) -> Self {
+        let shift = accum.frac() as i32 - frac_in_total as i32;
+        let min_m = -(1i64 << (accum.width() - 1));
+        let max_m = (1i64 << (accum.width() - 1)) - 1;
+        let (lo_pre, hi_pre) = if (0..63).contains(&shift) {
+            // min_m is a power of two, so the floor division is exact;
+            // hi_pre = floor(max_m / 2^s) makes `p > hi_pre` equivalent
+            // to `p·2^s > max_m` for integer p
+            (min_m >> shift, max_m >> shift)
+        } else {
+            (min_m, max_m)
+        };
+        Self { shift, min_m, max_m, lo_pre, hi_pre }
+    }
+
+    /// Saturate a raw accumulator sum at the accum range — the integer
+    /// form of the reference path's final `qa.q(acc)` (whose round is
+    /// the identity on an exact on-grid sum).
+    #[inline(always)]
+    pub fn clamp(&self, m: i64) -> i64 {
+        m.clamp(self.min_m, self.max_m)
+    }
+
+    /// Requantize a raw input-grid mantissa onto the accum grid:
+    /// shift-and-round (half-even) + saturation.  Bit-identical to
+    /// `accum.quantize_f64(p · 2^-frac_in_total)` for `|p| <= 2^52`.
+    #[inline(always)]
+    pub fn requant(&self, p: i64) -> i64 {
+        if self.shift >= 0 {
+            // saturating left shift: the reference clamps the *value*,
+            // so an out-of-range product lands on max_m/min_m exactly
+            // (not on a multiple of 2^shift)
+            if p > self.hi_pre {
+                self.max_m
+            } else if p < self.lo_pre {
+                self.min_m
+            } else {
+                p << self.shift
+            }
+        } else {
+            rhe_shr(p, (-self.shift) as u32).clamp(self.min_m, self.max_m)
+        }
+    }
+
+    /// One DSP multiply rounded into the accumulator grid — the integer
+    /// form of `qa.q(a * b)` on mantissas.
+    #[inline(always)]
+    pub fn product(&self, am: i64, bm: i64) -> i64 {
+        self.requant(am * bm)
+    }
+
+    /// `accum.frac() - frac_in_total` (exposed for the apply-V dynamic
+    /// bound, which scales input-grid magnitudes into accum units).
+    pub fn shift(&self) -> i32 {
+        self.shift
+    }
+
+    pub fn min_m(&self) -> i64 {
+        self.min_m
+    }
+
+    pub fn max_m(&self) -> i64 {
+        self.max_m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Fixed, Quantizer};
+    use crate::testutil::{Gen, Prop};
+
+    /// A random spec the integer MAC path accepts (paired with its
+    /// paper-convention accumulator).
+    fn eligible_spec(g: &mut Gen) -> (FixedSpec, FixedSpec) {
+        let data = g.fixed_spec_max_width(24);
+        (data, data.accum())
+    }
+
+    #[test]
+    fn rhe_shr_matches_round_ties_even() {
+        for (m, s, want) in [
+            (5i64, 1u32, 2i64),   // 2.5 -> 2 (tie to even)
+            (7, 1, 4),            // 3.5 -> 4 (tie to even)
+            (-5, 1, -2),          // -2.5 -> -2
+            (-7, 1, -4),          // -3.5 -> -4
+            (6, 2, 2),            // 1.5 -> 2
+            (10, 2, 2),           // 2.5 -> 2
+            (9, 2, 2),            // 2.25 -> 2
+            (11, 2, 3),           // 2.75 -> 3
+            (0, 5, 0),
+            (42, 0, 42),
+            (1 << 40, 63, 0),     // below the half step: rounds to zero
+            (-(1 << 40), 63, 0),
+        ] {
+            assert_eq!(rhe_shr(m, s), want, "m={m} s={s}");
+        }
+    }
+
+    #[test]
+    fn prop_rhe_shr_equals_f64_round_ties_even() {
+        Prop::new("rhe_shr == f64 round_ties_even").runs(2000).check(|g| {
+            let m = (g.u64() % (1 << 50)) as i64 - (1 << 49);
+            let s = g.usize_in(1, 53) as u32;
+            let exact = m as f64 / (s as f64).exp2(); // dyadic, exact
+            assert_eq!(rhe_shr(m, s), exact.round_ties_even() as i64, "m={m} s={s}");
+        });
+    }
+
+    #[test]
+    fn prop_to_m_matches_mantissa_of() {
+        Prop::new("MantissaConv::to_m == FixedSpec::mantissa_of").runs(3000).check(|g| {
+            let spec = g.fixed_spec();
+            let conv = MantissaConv::new(spec);
+            let x = g.f32_in(-1e5, 1e5);
+            assert_eq!(conv.to_m(x), spec.mantissa_of(x as f64), "{spec} {x}");
+            // and the roundtrip reproduces the quantized value exactly
+            assert_eq!(conv.to_f64(conv.to_m(x)), spec.quantize_f64(x as f64), "{spec} {x}");
+        });
+    }
+
+    #[test]
+    fn to_m_saturates_at_the_lane_edges() {
+        for spec in [FixedSpec::new(8, 4), FixedSpec::new(25, 10), FixedSpec::new(3, 3)] {
+            let conv = MantissaConv::new(spec);
+            let max_m = (1i64 << (spec.width() - 1)) - 1;
+            let min_m = -(1i64 << (spec.width() - 1));
+            assert_eq!(conv.to_m(f32::INFINITY), max_m, "{spec}");
+            assert_eq!(conv.to_m(f32::NEG_INFINITY), min_m, "{spec}");
+            assert_eq!(conv.to_m(1e30), max_m, "{spec}");
+            assert_eq!(conv.to_m(-1e30), min_m, "{spec}");
+            assert_eq!(conv.to_m(f32::NAN), 0, "{spec}");
+            // exactly the range edges stay put
+            assert_eq!(conv.to_m(spec.max_value() as f32), max_m, "{spec}");
+            assert_eq!(conv.to_m(spec.min_value() as f32), min_m, "{spec}");
+        }
+    }
+
+    #[test]
+    fn prop_product_matches_f64_reference() {
+        Prop::new("MacQuantizer::product == Quantizer::q(a*b)").runs(3000).check(|g| {
+            let (data, accum) = eligible_spec(g);
+            let conv = MantissaConv::new(data);
+            let mq = MacQuantizer::new(data, accum);
+            let qa = Quantizer::new(accum);
+            // on-grid operands spanning the full lane range, saturation
+            // cases included (the scale pushes well past most grids)
+            let a = data.quantize(g.f32_in(-600.0, 600.0));
+            let b = data.quantize(g.f32_in(-600.0, 600.0));
+            let want = accum.mantissa_of(qa.q(a as f64 * b as f64));
+            let got = mq.product(conv.to_m(a), conv.to_m(b));
+            assert_eq!(got, want, "{data}x{data}->{accum} {a}*{b}");
+            assert_eq!(got as f64 * accum.step(), qa.q(a as f64 * b as f64));
+        });
+    }
+
+    #[test]
+    fn prop_product_matches_fixed_witness() {
+        // the same cross-check the f64 path carries in fixed/value.rs:
+        // width <= 20 keeps the witness inside its own proven regime
+        Prop::new("MacQuantizer::product == Fixed::mul").runs(2000).check(|g| {
+            let data = g.fixed_spec_max_width(20);
+            let accum = data.accum();
+            let conv = MantissaConv::new(data);
+            let mq = MacQuantizer::new(data, accum);
+            let a = data.quantize(g.f32_in(-4.0, 4.0));
+            let b = data.quantize(g.f32_in(-4.0, 4.0));
+            let witness = Fixed::from_f64(a as f64, data).mul(&Fixed::from_f64(b as f64, data), accum);
+            assert_eq!(
+                mq.product(conv.to_m(a), conv.to_m(b)),
+                witness.mantissa(),
+                "{data} {a}*{b}"
+            );
+        });
+    }
+
+    #[test]
+    fn product_saturates_like_the_value_clamp() {
+        // ap_fixed<8,8>: integer-only lanes, mantissas in [-128, 127];
+        // accum ap_fixed<10,10> holds [-512, 511] — products overflow
+        let data = FixedSpec::new(8, 8);
+        let accum = data.accum();
+        assert_eq!(accum, FixedSpec::new(10, 10));
+        let conv = MantissaConv::new(data);
+        let mq = MacQuantizer::new(data, accum);
+        let qa = Quantizer::new(accum);
+        for (a, b) in [(127.0f32, 127.0f32), (-128.0, 127.0), (-128.0, -128.0), (100.0, -100.0)] {
+            let want = accum.mantissa_of(qa.q(a as f64 * b as f64));
+            assert_eq!(mq.product(conv.to_m(a), conv.to_m(b)), want, "{a}*{b}");
+        }
+        assert_eq!(mq.product(127, 127), 511, "positive saturation");
+        assert_eq!(mq.product(-128, 127), -512, "negative saturation");
+    }
+
+    #[test]
+    fn requant_rounds_ties_at_the_half_step_to_even() {
+        // data frac 2, explicit accum frac 1: products carry frac 4, so
+        // the requantization right-shifts by 3 — a half step is 4
+        let accum = FixedSpec::new(11, 10);
+        let mq = MacQuantizer::from_fracs(4, accum);
+        assert_eq!(mq.requant(4), 0, "0.25 -> 0 (tie to even)");
+        assert_eq!(mq.requant(12), 2, "0.75 -> 1.0 (tie to even)");
+        assert_eq!(mq.requant(-4), 0);
+        assert_eq!(mq.requant(-12), -2);
+        // against the f64 reference on the same values
+        let qa = Quantizer::new(accum);
+        for p in -40i64..=40 {
+            let want = accum.mantissa_of(qa.q(p as f64 / 16.0));
+            assert_eq!(mq.requant(p), want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn zero_frac_specs_use_the_left_shift_branch() {
+        // W == I: no fractional bits anywhere on the data side, so the
+        // accumulator cast is a left shift (satellite edge case)
+        let data = FixedSpec::new(6, 6);
+        for accum in [FixedSpec::new(10, 10), FixedSpec::new(14, 10), data.accum()] {
+            let conv = MantissaConv::new(data);
+            let mq = MacQuantizer::new(data, accum);
+            let qa = Quantizer::new(accum);
+            assert!(mq.shift() >= 0, "{accum}");
+            for a in [-32.0f32, -17.0, -1.0, 0.0, 1.0, 5.0, 31.0] {
+                for b in [-32.0f32, -3.0, 0.0, 2.0, 31.0] {
+                    let want = accum.mantissa_of(qa.q(a as f64 * b as f64));
+                    assert_eq!(mq.product(conv.to_m(a), conv.to_m(b)), want, "{accum} {a}*{b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_requant_left_shift_matches_reference() {
+        // random shift >= 0 configurations (accum frac above the input
+        // frac), sweeping products across and beyond the accum range
+        Prop::new("requant left shift == f64 reference").runs(2000).check(|g| {
+            let accum = g.fixed_spec();
+            let f_in = g.usize_in(0, accum.frac() as usize + 1) as u32;
+            let mq = MacQuantizer::from_fracs(f_in, accum);
+            assert!(mq.shift() >= 0);
+            let qa = Quantizer::new(accum);
+            let p = (g.u64() % (1 << 50)) as i64 - (1 << 49);
+            let want = accum.mantissa_of(qa.q(p as f64 * (-(f_in as f64)).exp2()));
+            assert_eq!(mq.requant(p), want, "{accum} f_in={f_in} p={p}");
+        });
+    }
+
+    #[test]
+    fn eligibility_bounds() {
+        let a20 = FixedSpec::new(16, 6).accum(); // ap_fixed<20,10>
+        assert!(int_mac_eligible(FixedSpec::new(16, 6), a20, 64));
+        assert!(int_mac_eligible(FixedSpec::new(25, 10), FixedSpec::new(25, 10).accum(), 1024));
+        // f32 can't store 26-bit mantissas exactly
+        assert!(!int_mac_eligible(FixedSpec::new(26, 10), FixedSpec::new(26, 10).accum(), 8));
+        // a 48-bit accumulator leaves only 5 headroom bits
+        let wide = FixedSpec::new(48, 10);
+        assert!(int_mac_eligible(FixedSpec::new(25, 10), wide, 15));
+        assert!(!int_mac_eligible(FixedSpec::new(25, 10), wide, 63));
+        // sum-exactness alone, for the pooling/layernorm/softmax gates
+        assert!(f64_sum_exact(FixedSpec::new(25, 10), 1 << 26));
+        assert!(!f64_sum_exact(FixedSpec::new(25, 10), 1 << 29));
+        assert!(f32_grid_exact(FixedSpec::new(25, 1)));
+        assert!(!f32_grid_exact(FixedSpec::new(26, 1)));
+    }
+
+    #[test]
+    fn prop_dot_product_chain_matches_reference() {
+        // the whole-kernel argument in miniature: an n-term MAC chain
+        // plus bias, integer vs f64 reference, bitwise equal outputs
+        Prop::new("int MAC chain == f64 MAC chain").runs(500).check(|g| {
+            let (data, accum) = eligible_spec(g);
+            let n = g.usize_in(1, 65);
+            if !int_mac_eligible(data, accum, n) {
+                return;
+            }
+            let conv = MantissaConv::new(data);
+            let mq = MacQuantizer::new(data, accum);
+            let qa = Quantizer::new(accum);
+            let xs: Vec<f32> = (0..n).map(|_| data.quantize(g.normal() * 2.0)).collect();
+            let ws: Vec<f32> = (0..n).map(|_| data.quantize(g.normal())).collect();
+            let bias = data.quantize(g.normal());
+            // f64 reference: the dense kernel's exact loop
+            let mut acc = 0.0f64;
+            for (&x, &w) in xs.iter().zip(&ws) {
+                acc += qa.q(x as f64 * w as f64);
+            }
+            let want = qa.q(acc + bias as f64);
+            // integer path
+            let mut acc_m = 0i64;
+            for (&x, &w) in xs.iter().zip(&ws) {
+                acc_m += mq.product(conv.to_m(x), conv.to_m(w));
+            }
+            let got = qa.q(acc_m as f64 * accum.step() + bias as f64);
+            assert!(got == want, "{data} n={n}: {got} != {want}");
+        });
+    }
+}

@@ -8,16 +8,22 @@
 //!   round-to-nearest-even + saturation (hls4ml `AP_RND_CONV`/`AP_SAT`).
 //! * [`value::Fixed`] — an integer-mantissa value type proving the grid
 //!   arithmetic is exact (used by unit tests and the bit-true MAC path).
+//! * [`mantissa`] — the integer hot path: mantissa-native quantize /
+//!   requantize (shift-and-round + saturate on `i64` lanes) that the HLS
+//!   kernels run instead of per-scalar f64 grid projection whenever
+//!   [`mantissa::int_mac_eligible`] proves bitwise identity.
 //! * [`lut`] — the ROM tables of the paper's SoftMax (§IV-B) and
 //!   LayerNorm (§IV-C), bit-identical to `python/compile/kernels/tables.py`
 //!   (asserted against `artifacts/tables.nnw` in `rust/tests/`).
 
 pub mod lut;
+pub mod mantissa;
 pub mod quantizer;
 pub mod spec;
 pub mod value;
 
 pub use lut::{LutKind, LutTable};
+pub use mantissa::{MacQuantizer, MantissaConv};
 pub use quantizer::Quantizer;
 pub use spec::FixedSpec;
 pub use value::Fixed;

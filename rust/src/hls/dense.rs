@@ -2,11 +2,12 @@
 //! FFN/head layers): forward + pipeline + resources in one place.
 
 use super::calibration as cal;
+use super::hotpath;
 use super::pipeline::{adder_tree_depth, Stage};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
 use super::scratch::Scratch;
 use super::ReuseFactor;
-use crate::fixed::FixedSpec;
+use crate::fixed::{FixedSpec, MacQuantizer, MantissaConv};
 use crate::nn::layers::Activation;
 use crate::nn::tensor::{Mat, Mat3};
 
@@ -16,7 +17,34 @@ use crate::nn::tensor::{Mat, Mat3};
 /// products are rounded into the accumulator grid (the paper's 10-int-bit
 /// accumulator), the sum saturates at the accumulator range, and the
 /// activated output is projected back to the data grid.
+///
+/// Dispatch ([`hotpath`]): runs the integer-mantissa MAC core whenever
+/// [`crate::fixed::mantissa::int_mac_eligible`] proves it bit-identical
+/// for this spec/shape (all zoo plans), else the f64 reference
+/// [`dense_fixed_ref`].  Either way the output bits are the same —
+/// property-tested below and pinned by the sealed golden corpus.
 pub fn dense_fixed(
+    x: &Mat,
+    w: &Mat,
+    b: &[f32],
+    act: Activation,
+    data: FixedSpec,
+    accum: FixedSpec,
+) -> Mat {
+    assert_eq!(x.cols(), w.rows());
+    assert_eq!(w.cols(), b.len());
+    if hotpath::int_path_enabled(data, accum, w.rows()) {
+        return dense_fixed_int(x, w, b, act, data, accum);
+    }
+    dense_fixed_ref(x, w, b, act, data, accum)
+}
+
+/// The f64 grid-projection reference path of [`dense_fixed`] — one
+/// `Quantizer::q` per MAC.  Retained (and still exercised by wide-grid
+/// dispatch, the `f64-reference` CI legs, and the hotpath bench's
+/// before/after comparison) as the semantic ground truth the integer
+/// core must reproduce bit-for-bit.
+pub fn dense_fixed_ref(
     x: &Mat,
     w: &Mat,
     b: &[f32],
@@ -52,6 +80,127 @@ pub fn dense_fixed(
     y
 }
 
+/// Row-tile height of the integer MAC loop: a tile of `TILE x n_out`
+/// `i64` accumulator lanes stays L1-resident while each weight row
+/// streams across it once.
+const TILE: usize = 8;
+
+/// Integer-mantissa dense core shared by the per-event and batched
+/// wrappers: `n` flat activation rows through one weight matrix.
+///
+/// Layout: weights are converted to a row-major mantissa tile once per
+/// call; activations to a *transposed* tile (`xt[i*n + r]`) so the
+/// i-major MAC loop reads a contiguous column per weight row; the `i64`
+/// accumulator tile is walked in row tiles of [`TILE`].  The inner loop
+/// is an 8-wide manually unrolled `i64` multiply + shift-and-round
+/// ([`MacQuantizer::product`]); the float epilogue (bias, activation,
+/// data-grid projection) is byte-for-byte the reference's, fed the
+/// bit-identical exact sums.
+///
+/// Bit-exactness vs [`dense_fixed_ref`] / [`dense_fixed_batch_ref`]:
+/// integer sums are order-independent and exact, and under
+/// `int_mac_eligible` the reference's f64 sums are exact too, so both
+/// loop orders produce the same accumulator — see
+/// [`crate::fixed::mantissa`] for the full argument.
+#[allow(clippy::too_many_arguments)]
+fn dense_int_core(
+    x: &[f32],
+    out: &mut [f32],
+    n: usize,
+    w: &Mat,
+    b: &[f32],
+    act: Activation,
+    data: FixedSpec,
+    accum: FixedSpec,
+    wm: &mut [i64],
+    xt: &mut [i64],
+    acc: &mut [i64],
+) {
+    let n_in = w.rows();
+    let n_out = w.cols();
+    let conv = MantissaConv::new(data);
+    let mq = MacQuantizer::new(data, accum);
+    let qa = crate::fixed::Quantizer::new(accum);
+    let qd = crate::fixed::Quantizer::new(data);
+    let step_a = accum.step();
+    for (dst, &src) in wm.iter_mut().zip(w.data()) {
+        *dst = conv.to_m(src);
+    }
+    for r in 0..n {
+        let xr = &x[r * n_in..(r + 1) * n_in];
+        for (i, &v) in xr.iter().enumerate() {
+            xt[i * n + r] = conv.to_m(v);
+        }
+    }
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + TILE).min(n);
+        for i in 0..n_in {
+            let wrow = &wm[i * n_out..(i + 1) * n_out];
+            let xcol = &xt[i * n..(i + 1) * n];
+            for r in r0..r1 {
+                let xi = xcol[r];
+                if xi == 0 {
+                    continue; // a zero lane contributes exact 0 on both paths
+                }
+                let a = &mut acc[r * n_out..(r + 1) * n_out];
+                let mut ac = a.chunks_exact_mut(8);
+                let mut wc = wrow.chunks_exact(8);
+                for (av, wv) in (&mut ac).zip(&mut wc) {
+                    av[0] += mq.product(xi, wv[0]);
+                    av[1] += mq.product(xi, wv[1]);
+                    av[2] += mq.product(xi, wv[2]);
+                    av[3] += mq.product(xi, wv[3]);
+                    av[4] += mq.product(xi, wv[4]);
+                    av[5] += mq.product(xi, wv[5]);
+                    av[6] += mq.product(xi, wv[6]);
+                    av[7] += mq.product(xi, wv[7]);
+                }
+                for (av, &wv) in ac.into_remainder().iter_mut().zip(wc.remainder()) {
+                    *av += mq.product(xi, wv);
+                }
+            }
+        }
+        r0 = r1;
+    }
+    for r in 0..n {
+        let yr = &mut out[r * n_out..(r + 1) * n_out];
+        let a = &acc[r * n_out..(r + 1) * n_out];
+        for ((o, &am), &bias) in yr.iter_mut().zip(a).zip(b) {
+            let s = qa.q(am as f64 * step_a + bias as f64);
+            *o = qd.q32(act.apply(s as f32));
+        }
+    }
+}
+
+/// Integer-mantissa per-event dense (tiles from the thread-local
+/// scratch pool).  Callers normally go through [`dense_fixed`], which
+/// checks eligibility first; calling this directly outside the eligible
+/// regime computes on implicitly grid-clamped inputs.
+pub fn dense_fixed_int(
+    x: &Mat,
+    w: &Mat,
+    b: &[f32],
+    act: Activation,
+    data: FixedSpec,
+    accum: FixedSpec,
+) -> Mat {
+    assert_eq!(x.cols(), w.rows());
+    assert_eq!(w.cols(), b.len());
+    let n = x.rows();
+    let mut y = Mat::zeros(n, w.cols());
+    let mut wm = hotpath::tls_take_ints(w.rows() * w.cols());
+    let mut xt = hotpath::tls_take_ints(n * w.rows());
+    let mut acc = hotpath::tls_take_ints(n * w.cols());
+    dense_int_core(
+        x.data(), y.data_mut(), n, w, b, act, data, accum, &mut wm, &mut xt, &mut acc,
+    );
+    hotpath::tls_put_ints(acc);
+    hotpath::tls_put_ints(xt);
+    hotpath::tls_put_ints(wm);
+    y
+}
+
 /// Batched quantized dense: every event streams through `w` in one pass.
 ///
 /// Weight-stationary loop order — each row of `w` is applied to all
@@ -68,7 +217,59 @@ pub fn dense_fixed(
 /// the output is **bitwise identical** to [`dense_fixed`] per event
 /// (property-tested below, including against the integer-mantissa
 /// [`crate::fixed::Fixed`] witness).
+///
+/// Dispatches like [`dense_fixed`]: integer-mantissa core when
+/// eligible, f64 reference [`dense_fixed_batch_ref`] otherwise — with
+/// the same eligibility inputs as the per-event form, so batch and
+/// per-event always take the same path and stay bitwise equal.
 pub fn dense_fixed_batch(
+    x: &Mat3,
+    w: &Mat,
+    b: &[f32],
+    act: Activation,
+    data: FixedSpec,
+    accum: FixedSpec,
+    scratch: &mut Scratch,
+) -> Mat3 {
+    assert_eq!(x.cols(), w.rows());
+    assert_eq!(w.cols(), b.len());
+    if hotpath::int_path_enabled(data, accum, w.rows()) {
+        return dense_fixed_batch_int(x, w, b, act, data, accum, scratch);
+    }
+    dense_fixed_batch_ref(x, w, b, act, data, accum, scratch)
+}
+
+/// Integer-mantissa batched dense: the [`dense_int_core`] over the
+/// batch's flat rows, with mantissa tiles drawn from the caller's
+/// [`Scratch`] arena.
+pub fn dense_fixed_batch_int(
+    x: &Mat3,
+    w: &Mat,
+    b: &[f32],
+    act: Activation,
+    data: FixedSpec,
+    accum: FixedSpec,
+    scratch: &mut Scratch,
+) -> Mat3 {
+    assert_eq!(x.cols(), w.rows());
+    assert_eq!(w.cols(), b.len());
+    let n = x.flat_rows();
+    let mut y = Mat3::zeros(x.batch(), x.rows(), w.cols());
+    let mut wm = scratch.take_ints(w.rows() * w.cols());
+    let mut xt = scratch.take_ints(n * w.rows());
+    let mut acc = scratch.take_ints(n * w.cols());
+    dense_int_core(
+        x.data(), y.data_mut(), n, w, b, act, data, accum, &mut wm, &mut xt, &mut acc,
+    );
+    scratch.put_ints(acc);
+    scratch.put_ints(xt);
+    scratch.put_ints(wm);
+    y
+}
+
+/// The f64 reference path of [`dense_fixed_batch`] (see
+/// [`dense_fixed_ref`] for why it is retained).
+pub fn dense_fixed_batch_ref(
     x: &Mat3,
     w: &Mat,
     b: &[f32],
@@ -293,6 +494,92 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// The tentpole contract: the integer-mantissa core and the f64
+    /// reference are bitwise identical over random eligible specs, both
+    /// per event and batched.  Calls the `_int`/`_ref` kernels directly
+    /// (not the dispatching entry points) so the comparison is real in
+    /// every build, including the `f64-reference` CI legs.
+    #[test]
+    fn prop_int_dense_bitwise_matches_ref() {
+        use crate::fixed::mantissa::int_mac_eligible;
+        Prop::new("dense int path == f64 ref path").runs(200).check(|g| {
+            let data = g.fixed_spec();
+            let accum = data.accum();
+            let (bsz, rows, cin, cout) =
+                (g.usize_in(1, 4), g.usize_in(1, 6), g.usize_in(1, 20), g.usize_in(1, 12));
+            assert!(int_mac_eligible(data, accum, cin), "{data}");
+            let w = Mat::from_vec(cin, cout, g.normal_vec(cin * cout, 0.8))
+                .map(|v| data.quantize(v));
+            let b: Vec<f32> = g.normal_vec(cout, 0.3).iter().map(|&v| data.quantize(v)).collect();
+            // on-grid inputs with a scale that exercises accumulator
+            // saturation on narrow grids
+            let events: Vec<Mat> = (0..bsz)
+                .map(|_| {
+                    Mat::from_vec(rows, cin, g.normal_vec(rows * cin, 2.0))
+                        .map(|v| data.quantize(v))
+                })
+                .collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let x3 = Mat3::from_events(&refs);
+            let mut scratch = Scratch::new();
+            for act in [Activation::Linear, Activation::Relu, Activation::Sigmoid] {
+                let bi = dense_fixed_batch_int(&x3, &w, &b, act, data, accum, &mut scratch);
+                let br = dense_fixed_batch_ref(&x3, &w, &b, act, data, accum, &mut scratch);
+                assert_eq!(bi.data(), br.data(), "{data} batch {act:?}");
+                for (i, e) in events.iter().enumerate() {
+                    let pi = dense_fixed_int(e, &w, &b, act, data, accum);
+                    let pr = dense_fixed_ref(e, &w, &b, act, data, accum);
+                    assert_eq!(pi, pr, "{data} per-event {act:?} event {i}");
+                    assert_eq!(bi.event(i), pi, "{data} batch-vs-event {act:?} event {i}");
+                }
+            }
+        });
+    }
+
+    /// Satellite edge cases at the lane limits: integer-only grids whose
+    /// products slam the accumulator's ±2^(W-1) saturation rails, and
+    /// zero-width fractional specs (the left-shift requant branch).
+    #[test]
+    fn int_dense_saturation_and_zero_frac_match_ref() {
+        for data in [FixedSpec::new(8, 8), FixedSpec::new(6, 6), FixedSpec::new(10, 9)] {
+            let accum = data.accum();
+            let mut g = Gen::new(0xD5A7);
+            // values spanning the full representable range, on-grid
+            let x = Mat::from_vec(5, 7, g.normal_vec(35, 80.0)).map(|v| data.quantize(v));
+            let w = Mat::from_vec(7, 4, g.normal_vec(28, 80.0)).map(|v| data.quantize(v));
+            let b: Vec<f32> =
+                g.normal_vec(4, 40.0).iter().map(|&v| data.quantize(v)).collect();
+            let pi = dense_fixed_int(&x, &w, &b, Activation::Linear, data, accum);
+            let pr = dense_fixed_ref(&x, &w, &b, Activation::Linear, data, accum);
+            assert_eq!(pi, pr, "{data}");
+            // extreme corners: every operand at min/max
+            let lo = data.min_value() as f32;
+            let hi = data.max_value() as f32;
+            let xe = Mat::from_vec(2, 2, vec![lo, hi, hi, lo]);
+            let we = Mat::from_vec(2, 2, vec![hi, lo, lo, hi]);
+            let be = vec![hi, lo];
+            let ei = dense_fixed_int(&xe, &we, &be, Activation::Linear, data, accum);
+            let er = dense_fixed_ref(&xe, &we, &be, Activation::Linear, data, accum);
+            assert_eq!(ei, er, "{data} rails");
+        }
+    }
+
+    #[test]
+    fn dispatch_falls_back_on_wide_grids() {
+        // width 32 is outside f32-exact mantissa storage: the public
+        // entry must take the reference path (same bits as _ref by
+        // construction), not the integer core
+        let wide = FixedSpec::new(32, 12);
+        assert!(!crate::fixed::mantissa::int_mac_eligible(wide, wide.accum(), 8));
+        let mut g = Gen::new(7);
+        let x = Mat::from_vec(3, 8, g.normal_vec(24, 1.0));
+        let w = Mat::from_vec(8, 5, g.normal_vec(40, 0.5));
+        let b = g.normal_vec(5, 0.1);
+        let via_dispatch = dense_fixed(&x, &w, &b, Activation::Relu, wide, wide.accum());
+        let via_ref = dense_fixed_ref(&x, &w, &b, Activation::Relu, wide, wide.accum());
+        assert_eq!(via_dispatch, via_ref);
     }
 
     #[test]

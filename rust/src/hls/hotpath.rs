@@ -1,0 +1,115 @@
+//! Hot-path selection: integer-mantissa kernels vs the f64 reference.
+//!
+//! Every fixed-point kernel dispatches *inside* its existing public
+//! entry point (`dense_fixed`, `mha_fixed_sited`, `layernorm_fixed_row`,
+//! `softmax_fixed_row`, `global_average_pool_fixed`, and their `_batch`
+//! twins), so `FixedTransformer::forward`/`forward_batch` switch to the
+//! integer path wholesale with no caller changes.  The decision per
+//! call:
+//!
+//! * the [`crate::fixed::mantissa`] eligibility predicate must prove the
+//!   integer path bit-identical for this spec/shape (every zoo plan
+//!   qualifies; exotic wide grids fall back to the reference), and
+//! * the global [`f64_reference_forced`] switch must be off.  It
+//!   defaults to on under the `f64-reference` Cargo feature — the CI
+//!   cross-seal legs build with it to prove both paths regenerate the
+//!   same sealed golden corpus — and the hotpath bench flips it at
+//!   runtime to time one path against the other.
+//!
+//! The switch is a process-wide atomic: benches toggle it only from
+//! single-threaded `main`s.  Tests never toggle it — they call the
+//! `*_ref` kernels directly instead, so parallel test threads can't
+//! race the dispatch of an unrelated conformance test.
+
+use crate::fixed::mantissa;
+use crate::fixed::FixedSpec;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static FORCE_REF: AtomicBool = AtomicBool::new(cfg!(feature = "f64-reference"));
+
+/// Force every kernel onto the f64 reference path (`true`) or restore
+/// eligibility-based dispatch (`false`).  Bench/CLI use only — see the
+/// module docs for the threading contract.
+pub fn force_f64_reference(on: bool) {
+    FORCE_REF.store(on, Ordering::SeqCst);
+}
+
+/// Whether the reference path is currently forced (feature default or
+/// [`force_f64_reference`]).
+pub fn f64_reference_forced() -> bool {
+    FORCE_REF.load(Ordering::Relaxed)
+}
+
+/// Dispatch predicate for MAC kernels (dense, QK^T): integer path iff
+/// not forced off and provably bit-identical at this spec/shape.
+#[inline]
+pub fn int_path_enabled(data: FixedSpec, accum: FixedSpec, n_in: usize) -> bool {
+    !f64_reference_forced() && mantissa::int_mac_eligible(data, accum, n_in)
+}
+
+/// Dispatch predicate for plain grid-value sums (pooling, the softmax
+/// exp-sum, the LayerNorm mean): integer path iff not forced off and
+/// the reference's f64 accumulation is exact for `n` terms.
+#[inline]
+pub fn int_sum_enabled(term: FixedSpec, n: usize) -> bool {
+    !f64_reference_forced() && mantissa::f32_grid_exact(term) && mantissa::f64_sum_exact(term, n)
+}
+
+thread_local! {
+    /// Mantissa-tile pool for the *per-event* kernels, which have no
+    /// caller-provided [`super::scratch::Scratch`] in their signatures.
+    /// Tiles are moved out (owned `Vec`s), so no `RefCell` borrow is
+    /// held while a kernel runs and nested kernel calls can't conflict.
+    static TLS_SCRATCH: RefCell<super::scratch::Scratch> =
+        RefCell::new(super::scratch::Scratch::new());
+}
+
+/// Take a zero-filled `i64` tile from the thread-local pool.
+pub(crate) fn tls_take_ints(n: usize) -> Vec<i64> {
+    TLS_SCRATCH.with(|s| s.borrow_mut().take_ints(n))
+}
+
+/// Return a tile taken with [`tls_take_ints`] for reuse.
+pub(crate) fn tls_put_ints(v: Vec<i64>) {
+    TLS_SCRATCH.with(|s| s.borrow_mut().put_ints(v));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_plan_specs_are_eligible() {
+        // the shapes the sealed golden corpus actually runs: every
+        // uniform QuantConfig::new(6, 10) site and the mixed-plan sites
+        // must take the integer path (this is what makes the hotpath
+        // lane's speedup assertion meaningful)
+        let data = FixedSpec::new(16, 6);
+        assert!(mantissa::int_mac_eligible(data, data.accum(), 128));
+        for (w, i) in [(14u32, 5u32), (11, 4), (10, 3), (22, 8)] {
+            let d = FixedSpec::new(w, i);
+            assert!(mantissa::int_mac_eligible(d, d.accum(), 128), "{d}");
+            assert!(mantissa::f64_sum_exact(d, 1024), "{d}");
+        }
+    }
+
+    #[test]
+    fn wide_grids_fall_back() {
+        let wide = FixedSpec::new(32, 12);
+        assert!(!mantissa::int_mac_eligible(wide, wide.accum(), 8));
+    }
+
+    #[test]
+    fn tls_tiles_are_zeroed_and_reused() {
+        let mut t = tls_take_ints(8);
+        assert_eq!(t, vec![0i64; 8]);
+        t[0] = 7;
+        let cap = t.capacity();
+        tls_put_ints(t);
+        let t2 = tls_take_ints(4);
+        assert_eq!(t2, vec![0i64; 4]);
+        assert!(t2.capacity() >= cap.min(4));
+        tls_put_ints(t2);
+    }
+}

@@ -2,14 +2,42 @@
 //! mean -> deviation -> variance -> ROM 1/sqrt(var) -> gamma/beta.
 
 use super::calibration as cal;
+use super::hotpath;
 use super::pipeline::{adder_tree_depth, Stage};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
 use super::ReuseFactor;
 use crate::fixed::lut::Roms;
-use crate::fixed::FixedSpec;
+use crate::fixed::mantissa;
+use crate::fixed::{FixedSpec, MacQuantizer, MantissaConv};
 
 /// Normalize one row in place on the `ap_fixed` grid.
+///
+/// Dispatch ([`hotpath`]): the mean sum and the variance MAC run on
+/// `i64` mantissa lanes ([`layernorm_fixed_row_int`]) when provably
+/// bit-identical for this spec/length, else the f64 reference
+/// [`layernorm_fixed_row_ref`].
 pub fn layernorm_fixed_row(
+    row: &mut [f32],
+    gamma: &[f32],
+    beta: &[f32],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    // the mean needs the stage-1 data-grid sum exact too (the variance
+    // MAC's accum-grid bound is the int_mac predicate)
+    if hotpath::int_path_enabled(data, accum, row.len())
+        && mantissa::f64_sum_exact(data, row.len())
+    {
+        return layernorm_fixed_row_int(row, gamma, beta, roms, data, accum);
+    }
+    layernorm_fixed_row_ref(row, gamma, beta, roms, data, accum);
+}
+
+/// The f64 reference path of [`layernorm_fixed_row`] — semantic ground
+/// truth for the integer variant, still live for wide grids and the
+/// `f64-reference` CI legs.
+pub fn layernorm_fixed_row_ref(
     row: &mut [f32],
     gamma: &[f32],
     beta: &[f32],
@@ -35,6 +63,76 @@ pub fn layernorm_fixed_row(
         var += qa.q(*v as f64 * *v as f64);
     }
     let var = qa.q(var / k) as f32;
+    // stage 4: 1/sqrt via ROM
+    let inv = qd.q32(roms.invsqrt.lookup(var));
+    // stage 5: scale + affine
+    for (v, (&g, &b)) in row.iter_mut().zip(gamma.iter().zip(beta)) {
+        let normalized = qd.q32(*v * inv);
+        *v = qd.q32(normalized * g + b);
+    }
+}
+
+/// Integer-mantissa variant of [`layernorm_fixed_row`]: stage 1 sums
+/// data-grid mantissas and stage 3 runs the squared-deviation MAC on
+/// `i64` lanes, both 8-wide unrolled.  Stage 2 stays float on purpose —
+/// the reference rounds `(v - mean)` to f32 *mid-expression* before the
+/// grid projection, and that rounding must be replayed, not integerized.
+/// Only bit-identical when the [`layernorm_fixed_row`] gate holds; call
+/// through the dispatcher unless you are the hotpath bench.
+pub fn layernorm_fixed_row_int(
+    row: &mut [f32],
+    gamma: &[f32],
+    beta: &[f32],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    assert_eq!(row.len(), gamma.len());
+    assert_eq!(row.len(), beta.len());
+    let qa = crate::fixed::Quantizer::new(accum);
+    let qd = crate::fixed::Quantizer::new(data);
+    let k = row.len() as f64;
+    let conv = MantissaConv::new(data);
+    let mqv = MacQuantizer::new(data, accum);
+    let mut tile = hotpath::tls_take_ints(row.len());
+    // stage 1: mean — the f64 reference sum of on-grid values is exact,
+    // so the mantissa sum times the grid step reproduces it bit-for-bit
+    for (m, &v) in tile.iter_mut().zip(row.iter()) {
+        *m = conv.to_m(v);
+    }
+    let mut sum_m = 0i64;
+    let mut c = tile.chunks_exact(8);
+    for ch in &mut c {
+        let mut lanes = 0i64;
+        for l in 0..8 {
+            lanes += ch[l];
+        }
+        sum_m += lanes;
+    }
+    for &m in c.remainder() {
+        sum_m += m;
+    }
+    let mean = qa.q(sum_m as f64 * data.step() / k);
+    // stage 2: deviations, float (see above)
+    for (v, m) in row.iter_mut().zip(tile.iter_mut()) {
+        *v = qd.q32((*v as f64 - mean) as f32);
+        *m = conv.to_m(*v);
+    }
+    // stage 3: variance MAC on the deviation mantissas
+    let mut var_m = 0i64;
+    let mut c = tile.chunks_exact(8);
+    for ch in &mut c {
+        let mut lanes = 0i64;
+        for l in 0..8 {
+            lanes += mqv.product(ch[l], ch[l]);
+        }
+        var_m += lanes;
+    }
+    for &m in c.remainder() {
+        var_m += mqv.product(m, m);
+    }
+    hotpath::tls_put_ints(tile);
+    let var = qa.q(var_m as f64 * accum.step() / k) as f32;
     // stage 4: 1/sqrt via ROM
     let inv = qd.q32(roms.invsqrt.lookup(var));
     // stage 5: scale + affine
@@ -156,6 +254,32 @@ mod tests {
         for &v in &row {
             assert_eq!(v, data.quantize(v));
         }
+    }
+
+    #[test]
+    fn prop_int_layernorm_bitwise_matches_ref() {
+        Prop::new("layernorm int == f64 ref").runs(200).check(|g| {
+            let roms = Roms::new();
+            let data = g.fixed_spec();
+            let accum = data.accum();
+            let k = g.usize_in(1, 48);
+            assert!(crate::fixed::mantissa::int_mac_eligible(data, accum, k), "{data}");
+            assert!(crate::fixed::mantissa::f64_sum_exact(data, k), "{data}");
+            let gamma: Vec<f32> =
+                g.normal_vec(k, 1.0).iter().map(|&v| data.quantize(v)).collect();
+            let beta: Vec<f32> =
+                g.normal_vec(k, 0.5).iter().map(|&v| data.quantize(v)).collect();
+            // on-grid rows, occasionally scaled hard enough to saturate
+            // the variance accumulator on narrow grids
+            let scale = if g.bool() { 1.5 } else { 50.0 };
+            let row: Vec<f32> =
+                g.normal_vec(k, scale).iter().map(|&v| data.quantize(v)).collect();
+            let mut want = row.clone();
+            layernorm_fixed_row_ref(&mut want, &gamma, &beta, &roms, data, accum);
+            let mut got = row;
+            layernorm_fixed_row_int(&mut got, &gamma, &beta, &roms, data, accum);
+            assert_eq!(got, want, "{data} k={k}");
+        });
     }
 
     #[test]

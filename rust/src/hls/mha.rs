@@ -15,6 +15,7 @@
 
 use super::dense::{dense_fixed, dense_fixed_batch, dense_resources, dense_stage};
 use super::fifo::Fifo;
+use super::hotpath;
 use super::parallelism::MhaParallelism;
 use super::pipeline::{adder_tree_depth, PipelineModel, Stage};
 use super::precision::{MhaPrecision, QuantConfig, RangeProfile};
@@ -23,7 +24,8 @@ use super::scratch::Scratch;
 use super::softmax::{softmax_fixed_row, softmax_resources, softmax_stage};
 use super::{calibration as cal, ReuseFactor};
 use crate::fixed::lut::Roms;
-use crate::fixed::FixedSpec;
+use crate::fixed::mantissa::{self, F32_EXACT_LIMIT};
+use crate::fixed::{FixedSpec, MacQuantizer, MantissaConv};
 use crate::models::weights::MhaWeights;
 use crate::nn::layers::Activation;
 use crate::nn::tensor::{Mat, Mat3};
@@ -86,6 +88,158 @@ fn apply_v_row(
     }
 }
 
+/// Integer-lane twin of [`score_q_row`]: `km_m` is the head's K block
+/// already on the qkv mantissa grid (hoisted once per head, so the
+/// per-row cost is one O(k) Q-row conversion), the dot runs on `i64`
+/// lanes with 8-wide unrolling, and the epilogue replays the reference's
+/// f64 -> f32 -> scale -> grid chain on the same exact f64 value — hence
+/// the same output bits (see [`crate::fixed::mantissa`]).
+#[allow(clippy::too_many_arguments)]
+fn score_q_row_int(
+    q_row: &[f32],
+    km_m: &[i64],
+    score_row: &mut [f32],
+    scale: f32,
+    conv: &MantissaConv,
+    mq: &MacQuantizer,
+    step_a: f64,
+    qd: &crate::fixed::Quantizer,
+) {
+    let k = q_row.len();
+    let mut qm = hotpath::tls_take_ints(k);
+    for (m, &v) in qm.iter_mut().zip(q_row) {
+        *m = conv.to_m(v);
+    }
+    for (j, sc) in score_row.iter_mut().enumerate() {
+        let krow = &km_m[j * k..(j + 1) * k];
+        let mut acc = 0i64;
+        let mut qc = qm.chunks_exact(8);
+        let mut kc = krow.chunks_exact(8);
+        for (qv, kv) in (&mut qc).zip(&mut kc) {
+            let mut lanes = 0i64;
+            for l in 0..8 {
+                lanes += mq.product(qv[l], kv[l]);
+            }
+            acc += lanes;
+        }
+        for (qv, kv) in qc.remainder().iter().zip(kc.remainder()) {
+            acc += mq.product(*qv, *kv);
+        }
+        *sc = qd.q32((mq.clamp(acc) as f64 * step_a) as f32 * scale);
+    }
+    hotpath::tls_put_ints(qm);
+}
+
+/// Integer-lane twin of [`apply_v_row`] with a per-row exactness guard.
+///
+/// The reference accumulates in *f32*, so the integer rewrite is only
+/// bit-identical while every reference partial sum stays inside the
+/// f32-exact integer window: the accumulator mantissa is bounded by
+/// `Σ|p_m| · max|v_m| · 2^shift + S/2` (each product requantizes with at
+/// most a half-step of rounding, and saturation only shrinks it).  Rows
+/// whose bound reaches [`F32_EXACT_LIMIT`] fall back to the f32
+/// reference — bit-identical either way, and the guard is a pure
+/// function of the row's own inputs, so batch and per-event dispatch in
+/// lockstep.
+#[allow(clippy::too_many_arguments)]
+fn apply_v_row_int(
+    p_row: &[f32],
+    vm_m: &[i64],
+    max_abs_vm: i64,
+    vm_f: &[f32],
+    out_row: &mut [f32],
+    conv_sm: &MantissaConv,
+    mq: &MacQuantizer,
+    step_a: f64,
+    qa: &crate::fixed::Quantizer,
+    qd: &crate::fixed::Quantizer,
+) {
+    let s = p_row.len();
+    let k = out_row.len();
+    let mut pm = hotpath::tls_take_ints(s);
+    let mut sum_abs = 0i64;
+    for (m, &v) in pm.iter_mut().zip(p_row) {
+        *m = conv_sm.to_m(v);
+        sum_abs += (*m).abs();
+    }
+    let bound =
+        sum_abs as f64 * max_abs_vm as f64 * (mq.shift() as f64).exp2() + 0.5 * s as f64;
+    if bound >= F32_EXACT_LIMIT {
+        hotpath::tls_put_ints(pm);
+        apply_v_row(p_row, vm_f, out_row, qa, qd);
+        return;
+    }
+    let mut om = hotpath::tls_take_ints(k);
+    for (j, &pmj) in pm.iter().enumerate() {
+        if pmj == 0 {
+            continue; // the reference adds an exact +0.0 here
+        }
+        let vrow = &vm_m[j * k..(j + 1) * k];
+        let mut oc = om.chunks_exact_mut(8);
+        let mut vc = vrow.chunks_exact(8);
+        for (ov, vv) in (&mut oc).zip(&mut vc) {
+            for l in 0..8 {
+                ov[l] += mq.product(pmj, vv[l]);
+            }
+        }
+        for (o, &vv) in oc.into_remainder().iter_mut().zip(vc.remainder()) {
+            *o += mq.product(pmj, vv);
+        }
+    }
+    for (o, &m) in out_row.iter_mut().zip(om.iter()) {
+        *o = qd.q32((mq.clamp(m) as f64 * step_a) as f32);
+    }
+    hotpath::tls_put_ints(om);
+    hotpath::tls_put_ints(pm);
+}
+
+/// The per-call hot-path decisions and requantizer set shared by the
+/// per-event and batched MHA bodies, so the two can never disagree.
+struct MhaHotPath {
+    use_int_score: bool,
+    use_int_apply: bool,
+    conv_qkv: MantissaConv,
+    mq_score: MacQuantizer,
+    step_qkv_a: f64,
+    conv_sm: MantissaConv,
+    mq_apply: MacQuantizer,
+    step_out_a: f64,
+}
+
+impl MhaHotPath {
+    fn new(p: &MhaPrecision, k: usize) -> Self {
+        Self {
+            // QK^T is a k-term MAC on the qkv grid — the dense predicate
+            use_int_score: hotpath::int_path_enabled(p.qkv.data, p.qkv.accum, k),
+            // apply-V is guarded per row (f32 reference accumulation),
+            // so the static gate only needs both operand grids f32-exact
+            use_int_apply: !hotpath::f64_reference_forced()
+                && mantissa::f32_grid_exact(p.softmax.data)
+                && mantissa::f32_grid_exact(p.qkv.data),
+            conv_qkv: MantissaConv::new(p.qkv.data),
+            mq_score: MacQuantizer::new(p.qkv.data, p.qkv.accum),
+            step_qkv_a: p.qkv.accum.step(),
+            conv_sm: MantissaConv::new(p.softmax.data),
+            mq_apply: MacQuantizer::from_fracs(
+                p.softmax.data.frac() + p.qkv.data.frac(),
+                p.out.accum,
+            ),
+            step_out_a: p.out.accum.step(),
+        }
+    }
+
+    /// Convert a K or V block to mantissas into `dst` (sized by the
+    /// caller), returning the max |mantissa| for the apply-V row guard.
+    fn convert_block(&self, src: &[f32], dst: &mut [i64]) -> i64 {
+        let mut max_abs = 0i64;
+        for (m, &v) in dst.iter_mut().zip(src) {
+            *m = self.conv_qkv.to_m(v);
+            max_abs = max_abs.max((*m).abs());
+        }
+        max_abs
+    }
+}
+
 /// Fixed-point MHA forward at one uniform precision: x (S, d) -> (S, d).
 /// Thin wrapper over [`mha_fixed_sited`] with every site at the same
 /// pair — the legacy global-`QuantConfig` signature.
@@ -125,6 +279,7 @@ pub fn mha_fixed_sited(
     let qd_sm = crate::fixed::Quantizer::new(p.softmax.data);
     let qa_out = crate::fixed::Quantizer::new(p.out.accum);
     let qd_out = crate::fixed::Quantizer::new(p.out.data);
+    let hp = MhaHotPath::new(p, k);
     let mut stats = MhaFifoStats::default();
 
     let mut head_outputs: Vec<Fifo<Vec<f32>>> = Vec::with_capacity(heads);
@@ -146,11 +301,26 @@ pub fn mha_fixed_sited(
         }
         stats.q_high_water = stats.q_high_water.max(q_fifo.high_water());
 
+        // hoist the K/V mantissa conversions once per head — the
+        // per-row conversions below are then only O(k) and O(S)
+        let mut km_m = hotpath::tls_take_ints(if hp.use_int_score { s * k } else { 0 });
+        if hp.use_int_score {
+            hp.convert_block(km.data(), &mut km_m);
+        }
+        let mut vm_m = hotpath::tls_take_ints(if hp.use_int_apply { s * k } else { 0 });
+        let max_vm =
+            if hp.use_int_apply { hp.convert_block(vm.data(), &mut vm_m) } else { 0 };
+
         // ---- stage 2: Q.K^T, scale, LUT softmax ------------------------
         let mut score_fifo = Fifo::new(format!("h{h}.score"), s);
         while let Some(q_row) = q_fifo.pop() {
             let mut score_row = vec![0.0f32; s];
-            score_q_row(&q_row, km.data(), &mut score_row, scale, &qa_qkv, &qd_sm);
+            if hp.use_int_score {
+                score_q_row_int(&q_row, &km_m, &mut score_row, scale, &hp.conv_qkv,
+                                &hp.mq_score, hp.step_qkv_a, &qd_sm);
+            } else {
+                score_q_row(&q_row, km.data(), &mut score_row, scale, &qa_qkv, &qd_sm);
+            }
             if let Some((_, prof)) = rec.as_mut() {
                 prof.record("softmax", &score_row); // LUT input
             }
@@ -166,11 +336,18 @@ pub fn mha_fixed_sited(
         let mut out_fifo = Fifo::new(format!("h{h}.out"), s);
         while let Some(p_row) = score_fifo.pop() {
             let mut out_row = vec![0.0f32; k];
-            apply_v_row(&p_row, vm.data(), &mut out_row, &qa_out, &qd_out);
+            if hp.use_int_apply {
+                apply_v_row_int(&p_row, &vm_m, max_vm, vm.data(), &mut out_row,
+                                &hp.conv_sm, &hp.mq_apply, hp.step_out_a, &qa_out, &qd_out);
+            } else {
+                apply_v_row(&p_row, vm.data(), &mut out_row, &qa_out, &qd_out);
+            }
             out_fifo.push(out_row).expect("out fifo sized to S");
         }
         stats.out_high_water = stats.out_high_water.max(out_fifo.high_water());
         head_outputs.push(out_fifo);
+        hotpath::tls_put_ints(vm_m);
+        hotpath::tls_put_ints(km_m);
     }
 
     // ---- stage 4: concat + output projection ---------------------------
@@ -234,6 +411,7 @@ pub fn mha_fixed_batch_sited(
     let qd_sm = crate::fixed::Quantizer::new(p.softmax.data);
     let qa_out = crate::fixed::Quantizer::new(p.out.accum);
     let qd_out = crate::fixed::Quantizer::new(p.out.data);
+    let hp = MhaHotPath::new(p, k);
 
     let mut concat = Mat3::zeros(bsz, s, heads * k);
     let mut score_row = scratch.take_row(s);
@@ -245,17 +423,49 @@ pub fn mha_fixed_batch_sited(
                                    p.qkv.data, p.qkv.accum, scratch);
         let vm = dense_fixed_batch(x, &w.wv[h], &w.bv[h], Activation::Linear,
                                    p.qkv.data, p.qkv.accum, scratch);
+        // K/V mantissa hoist, one pass per head; max|v_m| is tracked
+        // per event so the apply-V row guard sees exactly the values
+        // the per-event path would
+        let mut km_m = scratch.take_ints(if hp.use_int_score { bsz * s * k } else { 0 });
+        if hp.use_int_score {
+            for b in 0..bsz {
+                hp.convert_block(km.event_slice(b), &mut km_m[b * s * k..(b + 1) * s * k]);
+            }
+        }
+        let mut vm_m = scratch.take_ints(if hp.use_int_apply { bsz * s * k } else { 0 });
+        let mut max_vm = scratch.take_ints(bsz);
+        if hp.use_int_apply {
+            for b in 0..bsz {
+                max_vm[b] =
+                    hp.convert_block(vm.event_slice(b), &mut vm_m[b * s * k..(b + 1) * s * k]);
+            }
+        }
         for b in 0..bsz {
             for r in 0..s {
                 // ---- stage 2: Q.K^T, scale, LUT softmax --------------
-                score_q_row(q.event_row(b, r), km.event_slice(b), &mut score_row,
-                            scale, &qa_qkv, &qd_sm);
+                if hp.use_int_score {
+                    score_q_row_int(q.event_row(b, r), &km_m[b * s * k..(b + 1) * s * k],
+                                    &mut score_row, scale, &hp.conv_qkv, &hp.mq_score,
+                                    hp.step_qkv_a, &qd_sm);
+                } else {
+                    score_q_row(q.event_row(b, r), km.event_slice(b), &mut score_row,
+                                scale, &qa_qkv, &qd_sm);
+                }
                 softmax_fixed_row(&mut score_row, roms, p.softmax.data, p.softmax.accum);
                 // ---- stage 3: weighted sum of V, into the concat slot
                 let out_row = &mut concat.event_row_mut(b, r)[h * k..(h + 1) * k];
-                apply_v_row(&score_row, vm.event_slice(b), out_row, &qa_out, &qd_out);
+                if hp.use_int_apply {
+                    apply_v_row_int(&score_row, &vm_m[b * s * k..(b + 1) * s * k], max_vm[b],
+                                    vm.event_slice(b), out_row, &hp.conv_sm, &hp.mq_apply,
+                                    hp.step_out_a, &qa_out, &qd_out);
+                } else {
+                    apply_v_row(&score_row, vm.event_slice(b), out_row, &qa_out, &qd_out);
+                }
             }
         }
+        scratch.put_ints(max_vm);
+        scratch.put_ints(vm_m);
+        scratch.put_ints(km_m);
     }
     scratch.put_row(score_row);
 
@@ -545,6 +755,74 @@ mod tests {
                 assert_eq!(v, p.out.data.quantize(v));
             }
         }
+    }
+
+    #[test]
+    fn prop_int_score_row_matches_ref() {
+        use crate::testutil::Prop;
+        Prop::new("score_q_row int == ref").runs(200).check(|g| {
+            let data = g.fixed_spec();
+            let accum = data.accum();
+            let sm = g.fixed_spec();
+            let (s, k) = (g.usize_in(1, 12), g.usize_in(1, 20));
+            let qa = crate::fixed::Quantizer::new(accum);
+            let qd = crate::fixed::Quantizer::new(sm);
+            let scale = 1.0 / (k as f32).sqrt();
+            let q_row: Vec<f32> =
+                g.normal_vec(k, 2.0).iter().map(|&v| data.quantize(v)).collect();
+            let km: Vec<f32> =
+                g.normal_vec(s * k, 2.0).iter().map(|&v| data.quantize(v)).collect();
+            let conv = MantissaConv::new(data);
+            let mq = MacQuantizer::new(data, accum);
+            let km_m: Vec<i64> = km.iter().map(|&v| conv.to_m(v)).collect();
+            let mut want = vec![0.0f32; s];
+            score_q_row(&q_row, &km, &mut want, scale, &qa, &qd);
+            let mut got = vec![0.0f32; s];
+            score_q_row_int(&q_row, &km_m, &mut got, scale, &conv, &mq, accum.step(), &qd);
+            assert_eq!(got, want, "{data} sm {sm}");
+        });
+    }
+
+    #[test]
+    fn prop_int_apply_v_row_matches_ref() {
+        use crate::testutil::Prop;
+        Prop::new("apply_v_row int == ref").runs(200).check(|g| {
+            let qkv = g.fixed_spec();
+            let sm = g.fixed_spec();
+            let out = g.fixed_spec();
+            let accum = out.accum();
+            let qa = crate::fixed::Quantizer::new(accum);
+            let qd = crate::fixed::Quantizer::new(out);
+            let (s, k) = (g.usize_in(1, 16), g.usize_in(1, 12));
+            // a mix of softmax-like rows and large off-distribution rows
+            // so the per-row exactness guard takes both branches
+            let p_scale = if g.bool() { 1.0 } else { 60.0 };
+            let p_row: Vec<f32> = g
+                .normal_vec(s, p_scale)
+                .iter()
+                .map(|&v| sm.quantize(v.abs()))
+                .collect();
+            let vm: Vec<f32> =
+                g.normal_vec(s * k, 2.0).iter().map(|&v| qkv.quantize(v)).collect();
+            let conv_qkv = MantissaConv::new(qkv);
+            let conv_sm = MantissaConv::new(sm);
+            let mq = MacQuantizer::from_fracs(sm.frac() + qkv.frac(), accum);
+            let mut max_vm = 0i64;
+            let vm_m: Vec<i64> = vm
+                .iter()
+                .map(|&v| {
+                    let m = conv_qkv.to_m(v);
+                    max_vm = max_vm.max(m.abs());
+                    m
+                })
+                .collect();
+            let mut want = vec![0.0f32; k];
+            apply_v_row(&p_row, &vm, &mut want, &qa, &qd);
+            let mut got = vec![0.0f32; k];
+            apply_v_row_int(&p_row, &vm_m, max_vm, &vm, &mut got, &conv_sm, &mq,
+                            accum.step(), &qa, &qd);
+            assert_eq!(got, want, "qkv {qkv} sm {sm} out {out}");
+        });
     }
 
     #[test]

@@ -22,6 +22,14 @@
 //! [`QuantConfig`] bitwise, and [`calibrate_plan`] auto-assigns integer
 //! bits from profiled activation ranges.
 //!
+//! Arithmetic is executed on one of two interchangeable paths
+//! ([`hotpath`]): the integer-mantissa hot path (`i64` lanes,
+//! shift-and-round requantization, unrolled MAC loops) whenever the
+//! [`crate::fixed::mantissa`] predicates prove it bit-identical for the
+//! site's specs, else the retained f64 grid-projection reference — the
+//! `f64-reference` Cargo feature pins every kernel to the latter so CI
+//! can cross-seal the two against the same golden corpus.
+//!
 //! Parallelism is governed per layer *site* by a [`ParallelismPlan`]
 //! ([`parallelism`]): every stage builder receives its own site's
 //! [`ReuseFactor`] (and precision, which widens the schedule past the
@@ -32,6 +40,7 @@
 pub mod calibration;
 pub mod dense;
 pub mod fifo;
+pub mod hotpath;
 pub mod layernorm;
 pub mod parallelism;
 pub mod pooling;

@@ -1,14 +1,31 @@
 //! Fixed-point global-average pooling + the softmax/sigmoid output heads.
 
+use super::hotpath;
 use super::pipeline::{adder_tree_depth, Stage};
 use super::resources::Resources;
 use super::ReuseFactor;
 use crate::fixed::lut::Roms;
-use crate::fixed::FixedSpec;
+use crate::fixed::{FixedSpec, MantissaConv};
+
 use crate::nn::tensor::{Mat, Mat3};
 
 /// Column means, accumulated on the accumulator grid: (S, d) -> (1, d).
+///
+/// Dispatch ([`hotpath`]): integer-mantissa column sums
+/// ([`pool_int_core`]) when the reference's f64 accumulation is provably
+/// exact for this grid and sequence length, else the f64 reference
+/// [`global_average_pool_fixed_ref`].
 pub fn global_average_pool_fixed(x: &Mat, data: FixedSpec, accum: FixedSpec) -> Mat {
+    if hotpath::int_sum_enabled(data, x.rows()) {
+        let mut out = Mat::zeros(1, x.cols());
+        pool_int_core(x.data(), out.data_mut(), x.rows(), x.cols(), data, accum);
+        return out;
+    }
+    global_average_pool_fixed_ref(x, data, accum)
+}
+
+/// The f64 reference path of [`global_average_pool_fixed`].
+pub fn global_average_pool_fixed_ref(x: &Mat, data: FixedSpec, accum: FixedSpec) -> Mat {
     let mut out = Mat::zeros(1, x.cols());
     for c in 0..x.cols() {
         let mut acc = 0.0f64;
@@ -21,10 +38,60 @@ pub fn global_average_pool_fixed(x: &Mat, data: FixedSpec, accum: FixedSpec) -> 
     out
 }
 
-/// Batched column means: (B, S, d) -> (B, 1, d), the same per-column
-/// r-ascending accumulation as [`global_average_pool_fixed`] so the two
-/// are bitwise identical per event.
+/// Integer column sums for one event: row-major traversal (the
+/// reference strides column-major; integer addition is order-blind, so
+/// the cache-friendly order costs nothing in bits), per-column `i64`
+/// accumulators from the TLS pool, then the reference's exact
+/// mean-and-project epilogue on the same f64 values.
+pub fn pool_int_core(
+    x: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    cols: usize,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    let conv = MantissaConv::new(data);
+    let mut sums = hotpath::tls_take_ints(cols);
+    for row in x.chunks_exact(cols) {
+        for (s, &v) in sums.iter_mut().zip(row) {
+            *s += conv.to_m(v);
+        }
+    }
+    for (o, &s) in out.iter_mut().zip(sums.iter()) {
+        let mean = accum.quantize_f64(s as f64 * data.step() / rows as f64);
+        *o = data.quantize(mean as f32);
+    }
+    hotpath::tls_put_ints(sums);
+}
+
+/// Batched column means: (B, S, d) -> (B, 1, d), dispatching exactly
+/// like [`global_average_pool_fixed`] so the two are bitwise identical
+/// per event.
 pub fn global_average_pool_fixed_batch(x: &Mat3, data: FixedSpec, accum: FixedSpec) -> Mat3 {
+    if hotpath::int_sum_enabled(data, x.rows()) {
+        let mut out = Mat3::zeros(x.batch(), 1, x.cols());
+        for b in 0..x.batch() {
+            pool_int_core(
+                x.event_slice(b),
+                out.event_row_mut(b, 0),
+                x.rows(),
+                x.cols(),
+                data,
+                accum,
+            );
+        }
+        return out;
+    }
+    global_average_pool_fixed_batch_ref(x, data, accum)
+}
+
+/// The f64 reference path of [`global_average_pool_fixed_batch`].
+pub fn global_average_pool_fixed_batch_ref(
+    x: &Mat3,
+    data: FixedSpec,
+    accum: FixedSpec,
+) -> Mat3 {
     let mut out = Mat3::zeros(x.batch(), 1, x.cols());
     for b in 0..x.batch() {
         for c in 0..x.cols() {
@@ -91,6 +158,31 @@ mod tests {
         let data = FixedSpec::new(18, 8);
         assert!(sigmoid_fixed(20.0, &roms, data) > 0.9);
         assert!(sigmoid_fixed(-20.0, &roms, data) < 0.1);
+    }
+
+    #[test]
+    fn prop_int_pool_bitwise_matches_ref() {
+        use crate::testutil::Prop;
+        Prop::new("pool int == f64 ref").runs(200).check(|g| {
+            let data = g.fixed_spec();
+            let accum = data.accum();
+            let (rows, cols) = (g.usize_in(1, 40), g.usize_in(1, 12));
+            assert!(crate::fixed::mantissa::f64_sum_exact(data, rows), "{data}");
+            // on-grid inputs, sometimes hot enough to saturate the mean
+            let scale = if g.bool() { 1.0 } else { 60.0 };
+            let x = Mat::from_vec(rows, cols, g.normal_vec(rows * cols, scale))
+                .map(|v| data.quantize(v));
+            let want = global_average_pool_fixed_ref(&x, data, accum);
+            // the int core directly (not the dispatcher), so the
+            // comparison is live in the `f64-reference` build too
+            let mut got = Mat::zeros(1, cols);
+            pool_int_core(x.data(), got.data_mut(), rows, cols, data, accum);
+            assert_eq!(got, want, "{data} {rows}x{cols}");
+            let b3 = Mat3::from_events(&[&x, &x]);
+            let wantb = global_average_pool_fixed_batch_ref(&b3, data, accum);
+            let gotb = global_average_pool_fixed_batch(&b3, data, accum);
+            assert_eq!(gotb.data(), wantb.data(), "{data} batch");
+        });
     }
 
     #[test]

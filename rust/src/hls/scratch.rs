@@ -13,11 +13,12 @@
 //! — which is what keeps the bit-exactness contract (see [`crate::nn`])
 //! trivially safe.
 
-/// Growable pool of accumulator and row buffers.
+/// Growable pool of accumulator, row, and integer-mantissa buffers.
 #[derive(Clone, Debug, Default)]
 pub struct Scratch {
     acc: Vec<f64>,
     rows: Vec<Vec<f32>>,
+    ints: Vec<Vec<i64>>,
 }
 
 impl Scratch {
@@ -50,6 +51,22 @@ impl Scratch {
     pub fn put_row(&mut self, row: Vec<f32>) {
         self.rows.push(row);
     }
+
+    /// Take a zero-filled `i64` mantissa tile of length `n` from the
+    /// pool — the integer hot path's weight/activation/accumulator
+    /// tiles ([`crate::hls::hotpath`]).  Owned `Vec`s (like
+    /// [`Scratch::take_row`]) so several tiles can be live at once;
+    /// return with [`Scratch::put_ints`].
+    pub fn take_ints(&mut self, n: usize) -> Vec<i64> {
+        let mut tile = self.ints.pop().unwrap_or_default();
+        tile.clear();
+        tile.resize(n, 0);
+        tile
+    }
+
+    pub fn put_ints(&mut self, tile: Vec<i64>) {
+        self.ints.push(tile);
+    }
 }
 
 #[cfg(test)]
@@ -63,6 +80,21 @@ mod tests {
         assert!(s.acc_zeroed(3).iter().all(|&v| v == 0.0));
         // growing past the old capacity stays zeroed too
         assert!(s.acc_zeroed(8).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn int_tiles_are_zeroed_on_reuse() {
+        let mut s = Scratch::new();
+        let mut t = s.take_ints(4);
+        t.copy_from_slice(&[1, 2, 3, 4]);
+        s.put_ints(t);
+        assert_eq!(s.take_ints(3), vec![0i64; 3]);
+        // several tiles live simultaneously, each its own allocation
+        let a = s.take_ints(2);
+        let b = s.take_ints(5);
+        assert_eq!((a.len(), b.len()), (2, 5));
+        s.put_ints(a);
+        s.put_ints(b);
     }
 
     #[test]

@@ -6,11 +6,12 @@
 //! [`softmax_fixed_legacy`] implements it for the ablation bench.
 
 use super::calibration as cal;
+use super::hotpath;
 use super::pipeline::{adder_tree_depth, Stage};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
 use super::ReuseFactor;
 use crate::fixed::lut::Roms;
-use crate::fixed::FixedSpec;
+use crate::fixed::{FixedSpec, MacQuantizer, MantissaConv};
 
 /// One row of LUT softmax on the `ap_fixed` grid.
 ///
@@ -20,8 +21,25 @@ use crate::fixed::FixedSpec;
 /// formulation silently saturates into garbage (see DESIGN.md §2).
 /// [`softmax_fixed_legacy`] keeps the raw O(k²) pre-paper baseline and
 /// [`softmax_fixed_raw`] the paper's unshifted O(k) version for the
-/// ablation bench.
+/// ablation bench (both always on the reference arithmetic).
+///
+/// Dispatch ([`hotpath`]): the stage-2 exp-sum runs on `i64` mantissa
+/// lanes ([`softmax_fixed_row_int`]) when provably bit-identical, else
+/// the f64 reference [`softmax_fixed_row_ref`].
 pub fn softmax_fixed_row(
+    row: &mut [f32],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    if hotpath::int_sum_enabled(data, row.len()) {
+        return softmax_fixed_row_int(row, roms, data, accum);
+    }
+    softmax_fixed_row_ref(row, roms, data, accum);
+}
+
+/// The f64 reference path of [`softmax_fixed_row`].
+pub fn softmax_fixed_row_ref(
     row: &mut [f32],
     roms: &Roms,
     data: FixedSpec,
@@ -49,6 +67,39 @@ pub fn softmax_fixed_row(
     }
     let inv = qd.q32(roms.inv.lookup(sum));
     // stage 3: elementwise multiply
+    for v in row.iter_mut() {
+        *v = qd.q32(*v * inv);
+    }
+}
+
+/// Integer-mantissa variant of [`softmax_fixed_row`]: the ROM lookups
+/// and the stage-3 multiply are float exactly as the reference, but the
+/// stage-2 exp-sum accumulates data-grid mantissas on an `i64` lane and
+/// requantizes with one shift-and-round — the reference's exact f64 sum
+/// plus `Quantizer::q`, reproduced bit-for-bit (including the zero-sum
+/// comparator: no nonzero mantissa multiple rounds to an f32 zero).
+/// Only bit-identical when the [`softmax_fixed_row`] gate holds.
+pub fn softmax_fixed_row_int(
+    row: &mut [f32],
+    roms: &Roms,
+    data: FixedSpec,
+    accum: FixedSpec,
+) {
+    let qd = crate::fixed::Quantizer::new(data);
+    let conv = MantissaConv::new(data);
+    let mq = MacQuantizer::from_fracs(data.frac(), accum);
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum_m = 0i64;
+    for v in row.iter_mut() {
+        *v = qd.q32(roms.exp.lookup(*v - max));
+        sum_m += conv.to_m(*v);
+    }
+    let sum = (mq.requant(sum_m) as f64 * accum.step()) as f32;
+    if sum == 0.0 {
+        uniform_row(row, &qd);
+        return;
+    }
+    let inv = qd.q32(roms.inv.lookup(sum));
     for v in row.iter_mut() {
         *v = qd.q32(*v * inv);
     }
@@ -280,6 +331,45 @@ mod tests {
         for &v in &row {
             assert_eq!(v, data.quantize(v));
         }
+    }
+
+    #[test]
+    fn prop_int_softmax_bitwise_matches_ref() {
+        Prop::new("softmax int == f64 ref").runs(200).check(|g| {
+            let roms = Roms::new();
+            let data = g.fixed_spec();
+            let accum = data.accum();
+            let k = g.usize_in(1, 64);
+            assert!(crate::fixed::mantissa::f32_grid_exact(data));
+            assert!(crate::fixed::mantissa::f64_sum_exact(data, k), "{data}");
+            // scores on the data grid (as the MHA score stage delivers
+            // them), spread wide enough to underflow coarse exp grids
+            let row: Vec<f32> =
+                g.normal_vec(k, 4.0).iter().map(|&v| data.quantize(v)).collect();
+            let mut want = row.clone();
+            softmax_fixed_row_ref(&mut want, &roms, data, accum);
+            let mut got = row;
+            softmax_fixed_row_int(&mut got, &roms, data, accum);
+            assert_eq!(got, want, "{data} k={k}");
+        });
+    }
+
+    #[test]
+    fn int_softmax_zero_exp_sum_matches_ref_uniform_bypass() {
+        // ap_fixed<1,1> forces every exp output to quantize to zero: the
+        // integer path's requantized sum must trip the same zero-sum
+        // comparator and emit the same uniform fallback as the reference
+        let roms = Roms::new();
+        let data = FixedSpec::new(1, 1);
+        let mut want = vec![0.0f32, -1.0, 0.0];
+        softmax_fixed_row_ref(&mut want, &roms, data, data.accum());
+        let mut got = vec![0.0f32, -1.0, 0.0];
+        softmax_fixed_row_int(&mut got, &roms, data, data.accum());
+        assert_eq!(got, want);
+        // and the dispatcher takes the integer path on this grid
+        let mut via = vec![0.0f32, -1.0, 0.0];
+        softmax_fixed_row(&mut via, &roms, data, data.accum());
+        assert_eq!(via, want);
     }
 
     #[test]

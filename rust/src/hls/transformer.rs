@@ -105,6 +105,12 @@ impl FixedTransformer {
     /// Unlike the float reference (which returns logits), the hardware
     /// design bakes the final softmax/sigmoid in (paper §V: "the final
     /// layer is a SoftMax layer").
+    ///
+    /// Arithmetic: every kernel this calls dispatches through
+    /// [`super::hotpath`], so the whole forward switches wholesale
+    /// between the integer-mantissa hot path and the retained f64
+    /// reference (the `f64-reference` feature) — same bits either way,
+    /// sealed by the golden corpus.
     pub fn forward(&self, x: &Mat) -> Vec<f32> {
         self.forward_recorded(x, None)
     }
@@ -295,7 +301,10 @@ impl FixedTransformer {
     /// grid in the same order as [`Self::forward`] (including the
     /// inter-site re-grid casts), so the result is **bitwise identical**
     /// to scoring the events one at a time (property-tested below) —
-    /// batching changes throughput, never a probability.
+    /// batching changes throughput, never a probability.  The batched
+    /// kernels dispatch through [`super::hotpath`] exactly like
+    /// [`Self::forward`], so per-event and batched execution take the
+    /// integer path (or the f64 reference) in lockstep.
     pub fn forward_batch(&self, xs: &[&Mat]) -> Vec<Vec<f32>> {
         if xs.is_empty() {
             return Vec::new();

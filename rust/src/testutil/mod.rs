@@ -20,6 +20,17 @@ pub struct Prop {
     seed: u64,
 }
 
+/// Global cap on property cases from the `PROP_RUNS` env var, applied
+/// after [`Prop::runs`]: slow interpreted harnesses (the CI miri lane)
+/// set it to keep wall time sane without touching each test.  The seed
+/// stream is unchanged — the capped run checks a prefix of the full one.
+fn prop_runs_cap() -> u64 {
+    std::env::var("PROP_RUNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(u64::MAX)
+}
+
 impl Prop {
     pub fn new(name: &'static str) -> Self {
         // hash the name so different properties explore different streams
@@ -41,7 +52,8 @@ impl Prop {
 
     /// Run the property; panics (with the case seed) on the first failure.
     pub fn check<F: Fn(&mut Gen)>(self, f: F) {
-        for case in 0..self.runs {
+        let runs = self.runs.min(prop_runs_cap());
+        for case in 0..runs {
             let case_seed = self.seed.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
             let mut g = Gen::new(case_seed);
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
