@@ -26,6 +26,14 @@ or just its latency field — is also a hard error: a gating lane must not
 go silently green because the regressed series stopped being emitted.
 Renames and removals in advisory mode remain lifecycle notes, not
 errors.
+
+With `--plans`, PREV and CURR are instead `repro lint-plan --json`
+verifier reports (one JSON object per line keyed "plan", carrying
+"errors"/"warnings" counts and a "diagnostics" array).  The diff is
+always gating in this mode: any plan that was clean (errors == 0) in the
+previous run and carries verifier ERRORs now exits 1, printing the
+gained ERROR diagnostics.  Added and removed plans are lifecycle notes,
+exactly like bench renames.
 """
 
 import json
@@ -53,6 +61,82 @@ def load(path):
     except OSError as e:
         print(f"(bench_diff: cannot read {path}: {e})")
     return out
+
+
+def load_plans(path):
+    """Like load(), but joined on the verifier report's "plan" key."""
+    out = {}
+    try:
+        with open(path, encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                name = rec.get("plan")
+                if isinstance(name, str):
+                    # last occurrence wins (lint-plan appends reruns)
+                    out[name] = rec
+    except OSError as e:
+        print(f"(bench_diff: cannot read {path}: {e})")
+    return out
+
+
+def error_count(rec):
+    v = rec.get("errors")
+    return v if isinstance(v, int) and not isinstance(v, bool) else None
+
+
+def plan_verdict_regressions(prev, curr):
+    """(plan, curr_errors, error_diags) for every plan that was clean in
+    the previous run and carries verifier ERRORs in the current one."""
+    rows = []
+    for name in sorted(set(prev) & set(curr)):
+        a, b = error_count(prev[name]), error_count(curr[name])
+        if a is None or b is None:
+            continue
+        if a == 0 and b > 0:
+            diags = [
+                d
+                for d in curr[name].get("diagnostics", [])
+                if isinstance(d, dict) and d.get("severity") == "error"
+            ]
+            rows.append((name, b, diags))
+    return rows
+
+
+def plans_main(prev_path, curr_path):
+    prev, curr = load_plans(prev_path), load_plans(curr_path)
+    if not prev and not curr:
+        print(f"(bench_diff: nothing to compare — prev={len(prev)} curr={len(curr)} plans)")
+        return 0
+    shared = sorted(set(prev) & set(curr))
+    if shared:
+        print("== plan verification verdicts vs previous run ==")
+        for name in shared:
+            a, b = error_count(prev[name]), error_count(curr[name])
+            print(f"  {name:<50} errors: {a} -> {b}")
+    dropped = sorted(set(prev) - set(curr))
+    added = sorted(set(curr) - set(prev))
+    if dropped:
+        print(f"(plans gone since last run: {', '.join(dropped)})")
+    if added:
+        print(f"(new plans this run: {', '.join(added)})")
+    regressions = plan_verdict_regressions(prev, curr)
+    if regressions:
+        print("\n== previously-clean plans now carrying verifier ERRORs (gating) ==")
+        for name, n_errors, diags in regressions:
+            print(f"  {name}: {n_errors} error(s)")
+            for d in diags:
+                site = d.get("site", "?")
+                msg = d.get("message", "?")
+                print(f"    site '{site}': {msg}")
+        return 1
+    print("(no previously-clean plan gained verifier errors)")
+    return 0
 
 
 def metric(rec, key):
@@ -103,6 +187,8 @@ def main(argv):
         print(__doc__)
         return 0
     prev_path, curr_path = argv[1], argv[2]
+    if "--plans" in argv:
+        return plans_main(prev_path, curr_path)
     key = "throughput_eps"
     if "--key" in argv:
         key_at = argv.index("--key") + 1

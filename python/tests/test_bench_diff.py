@@ -246,6 +246,104 @@ def test_vanished_throughput_bench_does_not_trip_the_gate(tmp_path, capsys):
     assert "gone since last run: sweep/x" in out
 
 
+def plan_line(name, errors=0, warnings=0, diagnostics="[]"):
+    return (
+        f'{{"plan":"{name}","model":"engine","errors":{errors},'
+        f'"warnings":{warnings},"infos":0,"diagnostics":{diagnostics}}}'
+    )
+
+
+def run_plans(tmp_path, prev_lines, curr_lines):
+    prev = tmp_path / "prev_plans.json"
+    curr = tmp_path / "curr_plans.json"
+    prev.write_text("\n".join(prev_lines) + "\n")
+    curr.write_text("\n".join(curr_lines) + "\n")
+    return MOD.main(["bench_diff.py", str(prev), str(curr), "--plans"])
+
+
+def test_plans_clean_to_clean_passes(tmp_path, capsys):
+    rc = run_plans(
+        tmp_path,
+        [plan_line("engine/uniform"), plan_line("btag/uniform", warnings=3)],
+        [plan_line("engine/uniform"), plan_line("btag/uniform", warnings=4)],
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "no previously-clean plan gained verifier errors" in out
+    assert "errors: 0 -> 0" in out
+
+
+def test_plans_gained_error_fails_and_prints_the_diagnostic(tmp_path, capsys):
+    diag = (
+        '[{"severity":"error","pass":"interval","site":"block0.ffn1",'
+        '"message":"observed |x| 2.5 exceeds data grid"}]'
+    )
+    rc = run_plans(
+        tmp_path,
+        [plan_line("engine/uniform")],
+        [plan_line("engine/uniform", errors=1, diagnostics=diag)],
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "previously-clean plans now carrying verifier ERRORs" in out
+    assert "engine/uniform: 1 error(s)" in out
+    assert "site 'block0.ffn1'" in out
+    assert "observed |x| 2.5" in out
+
+
+def test_plans_that_were_already_dirty_do_not_gate(tmp_path, capsys):
+    # only clean -> dirty transitions gate: a known-bad plan staying bad
+    # (or getting worse) is not a regression introduced by this change
+    rc = run_plans(
+        tmp_path,
+        [plan_line("engine/mixed", errors=2)],
+        [plan_line("engine/mixed", errors=3)],
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "errors: 2 -> 3" in out
+
+
+def test_plans_fixed_error_passes(tmp_path, capsys):
+    rc = run_plans(
+        tmp_path,
+        [plan_line("gw/uniform", errors=1)],
+        [plan_line("gw/uniform", errors=0)],
+    )
+    assert rc == 0
+    assert "errors: 1 -> 0" in capsys.readouterr().out
+
+
+def test_plans_added_and_removed_are_lifecycle_notes(tmp_path, capsys):
+    # a brand-new plan may even carry errors without gating: there is no
+    # previous clean verdict to regress from
+    rc = run_plans(
+        tmp_path,
+        [plan_line("old/uniform")],
+        [plan_line("new/uniform", errors=1)],
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "plans gone since last run: old/uniform" in out
+    assert "new plans this run: new/uniform" in out
+
+
+def test_plans_both_empty_is_a_noop(tmp_path, capsys):
+    rc = run_plans(tmp_path, [""], [""])
+    assert rc == 0
+    assert "nothing to compare" in capsys.readouterr().out
+
+
+def test_plans_malformed_lines_are_skipped(tmp_path, capsys):
+    rc = run_plans(
+        tmp_path,
+        [plan_line("engine/uniform"), "not json {", '{"plan":42}'],
+        [plan_line("engine/uniform")],
+    )
+    assert rc == 0
+    assert "errors: 0 -> 0" in capsys.readouterr().out
+
+
 def test_fail_on_regression_without_value_stays_advisory(tmp_path, capsys):
     rc = run(
         tmp_path,

@@ -40,7 +40,9 @@ pub fn emit_to(path: &str, bench: &str, fields: &[(&str, f64)]) {
     }
 }
 
-fn num(v: f64) -> String {
+/// Serialize one JSON number (non-finite values become `null`).  Shared
+/// with the verifier's diagnostic renderer ([`crate::analysis`]).
+pub(crate) fn num(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {
@@ -48,7 +50,9 @@ fn num(v: f64) -> String {
     }
 }
 
-fn escape(s: &str) -> String {
+/// Escape a string for a JSON literal.  Shared with the verifier's
+/// diagnostic renderer ([`crate::analysis`]).
+pub(crate) fn escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

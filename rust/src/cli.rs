@@ -207,6 +207,31 @@ mod tests {
     }
 
     #[test]
+    fn lint_plan_flags_parse() {
+        // the static verifier subcommand rides this parser
+        let a = parse(
+            "lint-plan --model btag --preset mixed --events 32 --seed 7 \
+             --json reports/plan.json --strict",
+        );
+        assert_eq!(a.command, "lint-plan");
+        assert_eq!(a.get("preset"), Some("mixed"));
+        assert_eq!(a.get_parse("events", 16usize).unwrap(), 32);
+        assert_eq!(a.get_parse("seed", 0u64).unwrap(), 7);
+        assert_eq!(a.get("json"), Some("reports/plan.json"));
+        assert!(a.has("strict"));
+        assert!(a
+            .expect_only(&[
+                "model", "int", "frac", "reuse", "precision-plan", "reuse-plan", "preset",
+                "events", "seed", "json", "strict",
+            ])
+            .is_ok());
+        // worst-case mode is the 0-event spelling, not a separate flag
+        let b = parse("lint-plan --model engine --events 0");
+        assert_eq!(b.get_parse("events", 16usize).unwrap(), 0);
+        assert!(!b.has("strict"), "strict defaults off (advisory lint)");
+    }
+
+    #[test]
     fn duplicate_flag_rejected() {
         assert!(Args::parse(["--a", "1", "--a", "2"].map(String::from)).is_err());
     }

@@ -317,6 +317,28 @@ impl TriggerServer {
             // alongside the serving stats (computed once here, not per
             // replica)
             if pc.backend == BackendKind::Hls {
+                // static plan verification gates the spawn: a plan the
+                // verifier flags as ERROR (saturating grid, degenerate
+                // schedule) must be a clean Err here, not a silently
+                // mis-triggering pool
+                let verdict = crate::analysis::verify_plan(
+                    &mcfg,
+                    &weights,
+                    &plan,
+                    &par,
+                    &crate::analysis::VerifyConfig::default(),
+                );
+                if verdict.has_errors() {
+                    let first = verdict.errors().next().expect("has_errors");
+                    anyhow::bail!(
+                        "plan verification failed for model '{}' ({} error(s)); \
+                         first: site '{}': {}",
+                        pc.model,
+                        verdict.count(crate::analysis::Severity::Error),
+                        first.site,
+                        first.message
+                    );
+                }
                 let engine = crate::hls::FixedTransformer::with_plan(
                     mcfg.clone(),
                     &weights,
@@ -810,6 +832,36 @@ mod tests {
         let msg = format!("{:#}", err.unwrap_err());
         assert!(msg.contains("blurb"), "{msg}");
         assert!(msg.contains("engine"), "{msg}");
+    }
+
+    #[test]
+    fn saturating_precision_plan_is_refused_before_spawning() {
+        // a plan the static verifier flags as ERROR must be a clean Err
+        // during up-front resolution — no pool spawns, no modeled design.
+        // ap_fixed<2,1> caps block1.ffn1's input cast at 0.5 while the
+        // residual stream runs well past it on the fixed probe inputs.
+        let mut cfg = base_cfg(BackendKind::Hls, 10);
+        cfg.pipelines[0].precision_plan = Some("block1.ffn1 ap_fixed<2,1>".into());
+        let err = TriggerServer::run(&cfg);
+        assert!(err.is_err(), "verifier must refuse the saturating plan");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("plan verification failed"), "{msg}");
+        assert!(msg.contains("block1.ffn1"), "{msg}");
+        assert!(msg.contains("engine"), "{msg}");
+    }
+
+    #[test]
+    fn clamp_violating_precision_plan_is_refused_before_spawning() {
+        // the structural pass (data int bits above the 10-bit accumulator
+        // clamp) gates the spawn profile-free — deterministic regardless
+        // of the probe margin
+        let mut cfg = base_cfg(BackendKind::Hls, 10);
+        cfg.pipelines[0].precision_plan = Some("block0.ffn1 ap_fixed<16,12>".into());
+        let err = TriggerServer::run(&cfg);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("block0.ffn1"), "{msg}");
+        assert!(msg.contains("plan verification failed"), "{msg}");
     }
 
     #[test]

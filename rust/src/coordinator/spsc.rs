@@ -23,7 +23,18 @@ struct Inner<T> {
     closed: AtomicBool,
 }
 
+// SAFETY AUDIT: `UnsafeCell<MaybeUninit<T>>` suppresses the auto impls,
+// but `Inner` is only ever shared between exactly one Producer and one
+// Consumer (the halves are not Clone), and every slot access goes through
+// the cursor protocol below: a slot is touched by at most one thread at a
+// time, with the Release store on the advancing cursor publishing the
+// write to the Acquire load on the other side.  `T: Send` is required
+// because items physically move across the thread boundary; no `T: Sync`
+// is needed because no `&T` is ever shared.
 unsafe impl<T: Send> Send for Inner<T> {}
+// SAFETY AUDIT: see the Send impl — `&Inner` is shared across the two
+// halves' threads, but all mutation funnels through the atomics plus the
+// single-owner slot protocol, never through aliased `&mut T`.
 unsafe impl<T: Send> Sync for Inner<T> {}
 
 /// Create a ring of capacity `cap` (rounded up to a power of two).
@@ -64,6 +75,14 @@ impl<T: Send> Producer<T> {
             return Err(item); // full
         }
         let idx = (tail & self.inner.mask) as usize;
+        // SAFETY AUDIT: slot `tail & mask` is exclusively ours right now:
+        // the consumer only reads slots with index < tail (Acquire-loaded
+        // below its pop), and this slot's previous occupant was popped —
+        // the Acquire load of `head` above observed `tail - cap < head`,
+        // so the consumer's Release store after reading it happens-before
+        // this write.  `write` on MaybeUninit does not drop any previous
+        // value, which is correct: the slot is conceptually uninitialized
+        // (its old item was moved out by `assume_init_read`).
         unsafe {
             (*self.inner.slots[idx].get()).write(item);
         }
@@ -105,6 +124,13 @@ impl<T: Send> Consumer<T> {
             return None; // empty
         }
         let idx = (head & self.inner.mask) as usize;
+        // SAFETY AUDIT: `head < tail` was just established with an
+        // Acquire load of `tail`, so the producer's `write` to this slot
+        // (sequenced before its Release store of `tail`) happens-before
+        // this read — the slot is initialized.  `assume_init_read` moves
+        // the item out exactly once: the Release store of `head + 1`
+        // below transfers the now-vacant slot back to the producer, and
+        // no other pop can observe this `head` value (single consumer).
         let item = unsafe { (*self.inner.slots[idx].get()).assume_init_read() };
         self.inner.head.store(head.wrapping_add(1), Ordering::Release);
         Some(item)
@@ -152,6 +178,13 @@ impl<T> Drop for Consumer<T> {
         let tail = self.inner.tail.load(Ordering::Acquire);
         while head != tail {
             let idx = (head & self.inner.mask) as usize;
+            // SAFETY AUDIT: every slot in `[head, tail)` holds an item
+            // the producer published (Acquire load of `tail` above) and
+            // no pop consumed; `&mut self` proves the consumer thread is
+            // done popping, so each slot is dropped exactly once.  If the
+            // producer outlives us it can refill these slots — `write`
+            // does not double-drop — and the final Release store of
+            // `head` keeps its full/empty arithmetic coherent.
             unsafe {
                 (*self.inner.slots[idx].get()).assume_init_drop();
             }
@@ -234,6 +267,47 @@ mod tests {
         }
         producer.join().unwrap();
         assert_eq!(expected, n);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stress_over_a_tiny_ring() {
+        // the cursor protocol's worst case: a capacity-2 ring, so nearly
+        // every push lands in a slot the consumer *just* vacated and
+        // every happens-before edge in the safety audit is exercised
+        // constantly; heap-owning items let miri catch any double-drop,
+        // leak or uninitialized read the interleaving could produce
+        let (p, c) = ring::<Box<u64>>(2);
+        let n: u64 = if cfg!(miri) { 400 } else { 40_000 };
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                let mut item = Box::new(i);
+                loop {
+                    match p.try_push(item) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            item = back;
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                // stutter the producer so the consumer alternates between
+                // seeing a full, half-full and empty ring
+                if i % 3 == 0 {
+                    std::thread::yield_now();
+                }
+            }
+            p.close();
+        });
+        let mut expected = 0u64;
+        let mut checksum = 0u64;
+        while let Some(v) = c.pop_blocking() {
+            assert_eq!(*v, expected, "FIFO order violated");
+            checksum = checksum.wrapping_add(*v);
+            expected += 1;
+        }
+        producer.join().unwrap();
+        assert_eq!(expected, n, "every pushed item must be popped exactly once");
+        assert_eq!(checksum, n * (n - 1) / 2);
     }
 
     #[test]

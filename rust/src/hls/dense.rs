@@ -332,6 +332,20 @@ pub fn dense_stage(
     )
 }
 
+/// [`dense_stage`] that refuses (site-named, one line) a reuse factor
+/// that does not evenly divide the `n_in`-long MAC row instead of
+/// silently rounding the chunk count up.
+pub fn dense_stage_checked(
+    name: &str,
+    rows: usize,
+    n_in: usize,
+    r: ReuseFactor,
+    data: FixedSpec,
+) -> Result<Stage, String> {
+    super::pipeline::check_reuse_divides(name, r, n_in)?;
+    Ok(dense_stage(name, rows, n_in, r, data))
+}
+
 /// Resource estimate for a dense engine (`n_in x n_out` MACs shared
 /// across rows; reuse divides the concurrent multiplier count).
 pub fn dense_resources(

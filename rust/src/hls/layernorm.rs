@@ -185,6 +185,20 @@ pub fn layernorm_stage(
     )
 }
 
+/// [`layernorm_stage`] that refuses (site-named, one line) a reuse
+/// factor that does not evenly divide the `d`-channel row instead of
+/// silently rounding the chunk count up.
+pub fn layernorm_stage_checked(
+    name: &str,
+    rows: usize,
+    d: usize,
+    r: ReuseFactor,
+    data: FixedSpec,
+) -> Result<Stage, String> {
+    super::pipeline::check_reuse_divides(name, r, d)?;
+    Ok(layernorm_stage(name, rows, d, r, data))
+}
+
 /// Resources: d/R multipliers for stage 3 squares + d/R for the gamma
 /// dot-product unit, one invsqrt ROM, adder trees in fabric.
 pub fn layernorm_resources(d: usize, data: FixedSpec, r: ReuseFactor) -> Resources {

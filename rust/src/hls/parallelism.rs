@@ -140,16 +140,7 @@ impl ParallelismPlan {
     /// Canonical site order (execution order; also the serialization and
     /// search order) — the precision-plan order minus `softmax`.
     pub fn site_names(&self) -> Vec<String> {
-        let mut v = vec!["embed".to_string()];
-        for b in 0..self.blocks.len() {
-            for site in ["mha.qkv", "mha.out", "ln1", "ffn1", "ffn2", "ln2"] {
-                v.push(format!("block{b}.{site}"));
-            }
-        }
-        for site in ["pool", "head", "out"] {
-            v.push(site.to_string());
-        }
-        v
+        crate::ir::schedule_site_names(self.blocks.len())
     }
 
     /// The one place site names are parsed (same rule as

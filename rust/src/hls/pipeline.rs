@@ -117,6 +117,43 @@ pub fn fifo_depth(producer: &Stage, consumer: &Stage) -> u64 {
     (rows * (consumer.ii - producer.ii)).div_ceil(consumer.ii).max(1)
 }
 
+/// Site-named one-line error (the planfile error style) when a reuse
+/// factor does not evenly divide a site's per-row work — the condition
+/// the unchecked builders and resource models round up silently
+/// (`div_ceil`), over-spending a fraction of a DSP column and skewing
+/// the schedule.  Shared by the `_checked` stage builders and the
+/// static verifier's schedule pass.
+pub fn check_reuse_divides(
+    site: &str,
+    r: super::ReuseFactor,
+    per_row: usize,
+) -> Result<(), String> {
+    if per_row % r.get() as usize != 0 {
+        return Err(format!(
+            "site '{site}': reuse factor {r} does not evenly divide its \
+             {per_row} multiplications per row (the schedule rounds up to \
+             {} chunks)",
+            per_row.div_ceil(r.get() as usize)
+        ));
+    }
+    Ok(())
+}
+
+/// [`fifo_depth`] without the silent `.max(1)` clamp: errors (naming
+/// both stages, one line) when either side streams zero rows — a
+/// degenerate schedule that would deadlock the stream instead of sizing
+/// a FIFO for it.
+pub fn fifo_depth_checked(producer: &Stage, consumer: &Stage) -> Result<u64, String> {
+    if producer.rows == 0 || consumer.rows == 0 {
+        return Err(format!(
+            "stream '{}' -> '{}': producer streams {} rows, consumer {} — \
+             a zero-row side starves the chain (degenerate schedule)",
+            producer.name, consumer.name, producer.rows, consumer.rows
+        ));
+    }
+    Ok(fifo_depth(producer, consumer))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +211,57 @@ mod tests {
         assert_eq!(adder_tree_depth(4), 2);
         assert_eq!(adder_tree_depth(64), 6);
         assert_eq!(adder_tree_depth(65), 7);
+    }
+
+    #[test]
+    fn non_dividing_reuse_is_a_site_named_one_line_error() {
+        let err = check_reuse_divides("block0.ffn1", super::super::ReuseFactor(8), 12)
+            .unwrap_err();
+        assert!(err.contains("site 'block0.ffn1'"), "{err}");
+        assert!(err.contains("reuse factor R8"), "{err}");
+        assert!(err.contains("does not evenly divide"), "{err}");
+        assert!(err.contains("12 multiplications"), "{err}");
+        assert!(err.contains("2 chunks"), "{err}");
+        assert!(!err.contains('\n'), "one line: {err}");
+        assert!(check_reuse_divides("block0.ffn1", super::super::ReuseFactor(4), 12).is_ok());
+        assert!(check_reuse_divides("embed", super::super::ReuseFactor(1), 7).is_ok());
+    }
+
+    #[test]
+    fn checked_builders_share_the_divisibility_error() {
+        use crate::fixed::FixedSpec;
+        let r = super::super::ReuseFactor(3);
+        let data = FixedSpec::new(16, 6);
+        let d_err = super::super::dense::dense_stage_checked("head", 1, 16, r, data)
+            .unwrap_err();
+        assert!(d_err.contains("site 'head'"), "{d_err}");
+        let s_err = super::super::softmax::softmax_stage_checked("softmax", 4, 50, r, data)
+            .unwrap_err();
+        assert!(s_err.contains("site 'softmax'"), "{s_err}");
+        let l_err =
+            super::super::layernorm::layernorm_stage_checked("block0.ln1", 15, 64, r, data)
+                .unwrap_err();
+        assert!(l_err.contains("site 'block0.ln1'"), "{l_err}");
+        let p_err = super::super::pooling::pool_stage_checked("pool", 100, r).unwrap_err();
+        assert!(p_err.contains("site 'pool'"), "{p_err}");
+        // dividing factors build the exact same stage as the unchecked form
+        let ok = super::super::dense::dense_stage_checked("head", 1, 16, super::super::ReuseFactor(4), data)
+            .unwrap();
+        assert_eq!(ok, super::super::dense::dense_stage("head", 1, 16, super::super::ReuseFactor(4), data));
+    }
+
+    #[test]
+    fn zero_row_stream_is_a_checked_fifo_error() {
+        // Stage::new clamps rows to >= 1, so build the degenerate side
+        // directly — the struct fields are pub for exactly this reason.
+        let mut p = Stage::new("a", 3, 1, 10);
+        let c = Stage::new("b", 5, 2, 10);
+        assert_eq!(fifo_depth_checked(&p, &c).unwrap(), fifo_depth(&p, &c));
+        p.rows = 0;
+        let err = fifo_depth_checked(&p, &c).unwrap_err();
+        assert!(err.contains("stream 'a' -> 'b'"), "{err}");
+        assert!(err.contains("starves the chain"), "{err}");
+        assert!(!err.contains('\n'), "one line: {err}");
     }
 
     #[test]

@@ -118,6 +118,18 @@ pub fn pool_stage(name: &str, rows: usize, r: ReuseFactor) -> Stage {
     Stage::new(name, adder_tree_depth(rows as u64) + 2, r.get() as u64, rows as u64)
 }
 
+/// [`pool_stage`] that refuses (site-named, one line) a reuse factor
+/// that does not evenly divide the pooled sequence instead of silently
+/// rounding the chunk count up.
+pub fn pool_stage_checked(
+    name: &str,
+    rows: usize,
+    r: ReuseFactor,
+) -> Result<Stage, String> {
+    super::pipeline::check_reuse_divides(name, r, rows)?;
+    Ok(pool_stage(name, rows, r))
+}
+
 /// Pooling is adder-tree-only: no DSPs (the 1/S multiply is a constant
 /// shift-add), modest fabric.
 pub fn pool_resources(d: usize, data: FixedSpec, r: ReuseFactor) -> Resources {

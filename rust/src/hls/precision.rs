@@ -172,16 +172,7 @@ impl PrecisionPlan {
     /// Canonical site order (execution order; also the serialization and
     /// search order).
     pub fn site_names(&self) -> Vec<String> {
-        let mut v = vec!["embed".to_string()];
-        for b in 0..self.blocks.len() {
-            for site in ["mha.qkv", "mha.out", "ln1", "ffn1", "ffn2", "ln2"] {
-                v.push(format!("block{b}.{site}"));
-            }
-        }
-        for site in ["pool", "head", "out", "softmax"] {
-            v.push(site.to_string());
-        }
-        v
+        crate::ir::canonical_site_names(self.blocks.len())
     }
 
     /// The one place site names are parsed: both [`Self::get`] and the

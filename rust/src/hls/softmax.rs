@@ -244,6 +244,20 @@ pub fn softmax_stage(
     )
 }
 
+/// [`softmax_stage`] that refuses (site-named, one line) a reuse factor
+/// that does not evenly divide the `k`-wide row instead of silently
+/// rounding the chunk count up.
+pub fn softmax_stage_checked(
+    name: &str,
+    rows: usize,
+    k: usize,
+    r: ReuseFactor,
+    data: FixedSpec,
+) -> Result<Stage, String> {
+    super::pipeline::check_reuse_divides(name, r, k)?;
+    Ok(softmax_stage(name, rows, k, r, data))
+}
+
 /// Resources: two ROMs + k/R multipliers (stage 3) + the adder tree.
 pub fn softmax_resources(k: usize, data: FixedSpec, r: ReuseFactor) -> Resources {
     let w = data.width() as u64;

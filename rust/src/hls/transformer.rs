@@ -13,26 +13,20 @@
 //! site boundary the stream is re-grid cast onto the consumer's data
 //! grid (a no-op when producer and consumer share a grid).
 
-use super::dense::{dense_fixed, dense_fixed_batch, dense_resources, dense_stage};
-use super::layernorm::{
-    layernorm_fixed_batch, layernorm_fixed_row, layernorm_resources, layernorm_stage,
-};
-use super::mha::{
-    mha_fixed_batch_sited, mha_fixed_sited, mha_resources_sited, mha_stage, MhaFifoStats,
-};
+use super::dense::{dense_fixed, dense_fixed_batch};
+use super::layernorm::{layernorm_fixed_batch, layernorm_fixed_row};
+use super::mha::{mha_fixed_batch_sited, mha_fixed_sited, MhaFifoStats};
 use super::parallelism::ParallelismPlan;
-use super::pipeline::{fifo_depth, PipelineModel};
-use super::pooling::{
-    global_average_pool_fixed, global_average_pool_fixed_batch, pool_resources, pool_stage,
-    sigmoid_fixed,
-};
+use super::pipeline::PipelineModel;
+use super::pooling::{global_average_pool_fixed, global_average_pool_fixed_batch, sigmoid_fixed};
 use super::precision::{quantize_weights_sited, PrecisionPlan, RangeProfile};
 use super::report::{LayerReport, SynthesisReport};
-use super::resources::{bram18_for_bits, Resources};
+use super::resources::Resources;
 use super::scratch::Scratch;
 use super::softmax::softmax_fixed_row;
 use super::{calibration as cal, ReuseFactor};
 use crate::fixed::lut::Roms;
+use crate::ir::SiteGraph;
 use crate::fixed::FixedSpec;
 use crate::models::config::{FinalActivation, ModelConfig};
 use crate::models::weights::Weights;
@@ -403,164 +397,46 @@ impl FixedTransformer {
         }
     }
 
+    /// The site-graph IR of this engine under `par`: one typed node per
+    /// layer site carrying its `FixedSpec` pair, reuse factor, stage
+    /// schedule and resource estimate; edges carry the inter-stage
+    /// stream shapes.  Built once per design point — [`Self::pipeline`],
+    /// [`Self::layer_resources`] and [`Self::synthesize`] are all views
+    /// of this graph, as are the static-verifier passes
+    /// ([`crate::analysis`]).
+    pub fn site_graph(&self, par: &ParallelismPlan) -> SiteGraph {
+        self.assert_par(par);
+        let fifo = {
+            let st = self.last_fifo_stats.get();
+            (st.q_high_water > 0).then_some(st)
+        };
+        SiteGraph::build(&self.cfg, &self.plan, par, fifo)
+    }
+
     /// Top-level pipeline under the paper's layered strategy: inner
     /// layers at the latency strategy, model top level resource-shared.
     /// Every stage is built at its own site's reuse factor (the
     /// [`ParallelismPlan`]) and its own site's precision (the engine's
-    /// [`PrecisionPlan`]), so both dials shape the schedule.
+    /// [`PrecisionPlan`]), so both dials shape the schedule.  This is
+    /// the schedule view of [`Self::site_graph`].
     pub fn pipeline(&self, par: &ParallelismPlan) -> PipelineModel {
-        self.assert_par(par);
-        let c = &self.cfg;
-        let pp = &self.plan;
-        let mut p = PipelineModel::default();
-        p.push(dense_stage(
-            "embed",
-            c.seq_len,
-            c.input_size.max(2),
-            par.embed(),
-            pp.embed().data,
-        ));
-        for b in 0..c.num_blocks {
-            let bp = *pp.block(b);
-            let rp = *par.block(b);
-            let mut m = mha_stage(
-                c.seq_len,
-                c.d_model,
-                c.head_dim,
-                rp.mha(),
-                &bp.mha(pp.softmax()),
-            );
-            m.name = format!("block{b}.mha");
-            p.push(m);
-            if c.use_layernorm {
-                p.push(layernorm_stage(
-                    &format!("block{b}.ln1"),
-                    c.seq_len,
-                    c.d_model,
-                    rp.ln1,
-                    bp.ln1.data,
-                ));
-            }
-            p.push(dense_stage(
-                &format!("block{b}.ffn1"),
-                c.seq_len,
-                c.d_model,
-                rp.ffn1,
-                bp.ffn1.data,
-            ));
-            p.push(dense_stage(
-                &format!("block{b}.ffn2"),
-                c.seq_len,
-                c.ffn_dim,
-                rp.ffn2,
-                bp.ffn2.data,
-            ));
-            if c.use_layernorm {
-                p.push(layernorm_stage(
-                    &format!("block{b}.ln2"),
-                    c.seq_len,
-                    c.d_model,
-                    rp.ln2,
-                    bp.ln2.data,
-                ));
-            }
-        }
-        p.push(pool_stage("pool", c.seq_len, par.pool()));
-        p.push(dense_stage("head", 1, c.d_model, par.head(), pp.head().data));
-        p.push(dense_stage("out", 1, c.head_hidden, par.out(), pp.out().data));
-        p
+        self.site_graph(par).pipeline_model()
     }
 
     /// Per-layer (name, data spec, reuse, resources) estimates — each
     /// layer at its own site's width and its own site's reuse.  The MHA
     /// row reports the QKV spec/reuse (its score/softmax/output
-    /// sub-engines are folded into the resource number via
-    /// [`mha_resources_sited`]).
+    /// sub-engines are folded into the resource number).  This is the
+    /// resource view of [`Self::site_graph`].
     pub fn layer_resources(
         &self,
         par: &ParallelismPlan,
     ) -> Vec<(String, FixedSpec, ReuseFactor, Resources)> {
-        self.assert_par(par);
-        let c = &self.cfg;
-        let p = &self.plan;
-        let fifo = {
-            let st = self.last_fifo_stats.get();
-            (st.q_high_water > 0).then_some(st)
-        };
-        let mut v: Vec<(String, FixedSpec, ReuseFactor, Resources)> = Vec::new();
-        v.push((
-            "embed".into(),
-            p.embed().data,
-            par.embed(),
-            dense_resources(c.input_size, c.d_model, p.embed().data, par.embed()),
-        ));
-        for b in 0..c.num_blocks {
-            let bp = *p.block(b);
-            let rp = *par.block(b);
-            v.push((
-                format!("block{b}.mha"),
-                bp.qkv.data,
-                rp.qkv,
-                mha_resources_sited(
-                    c.seq_len,
-                    c.d_model,
-                    c.num_heads,
-                    c.head_dim,
-                    bp.qkv.data,
-                    bp.mha_out.data,
-                    p.softmax().data,
-                    rp.mha(),
-                    fifo,
-                ),
-            ));
-            if c.use_layernorm {
-                v.push((
-                    format!("block{b}.ln1"),
-                    bp.ln1.data,
-                    rp.ln1,
-                    layernorm_resources(c.d_model, bp.ln1.data, rp.ln1),
-                ));
-            }
-            v.push((
-                format!("block{b}.ffn1"),
-                bp.ffn1.data,
-                rp.ffn1,
-                dense_resources(c.d_model, c.ffn_dim, bp.ffn1.data, rp.ffn1),
-            ));
-            v.push((
-                format!("block{b}.ffn2"),
-                bp.ffn2.data,
-                rp.ffn2,
-                dense_resources(c.ffn_dim, c.d_model, bp.ffn2.data, rp.ffn2),
-            ));
-            if c.use_layernorm {
-                v.push((
-                    format!("block{b}.ln2"),
-                    bp.ln2.data,
-                    rp.ln2,
-                    layernorm_resources(c.d_model, bp.ln2.data, rp.ln2),
-                ));
-            }
-        }
-        v.push((
-            "pool".into(),
-            p.pool().data,
-            par.pool(),
-            pool_resources(c.d_model, p.pool().data, par.pool()),
-        ));
-        v.push((
-            "head".into(),
-            p.head().data,
-            par.head(),
-            dense_resources(c.d_model, c.head_hidden, p.head().data, par.head()),
-        ));
-        v.push((
-            "out".into(),
-            p.out().data,
-            par.out(),
-            dense_resources(c.head_hidden, c.output_size, p.out().data, par.out()),
-        ));
-        v
+        self.site_graph(par)
+            .nodes
+            .into_iter()
+            .map(|n| (n.name, n.data, n.reuse, n.resources))
+            .collect()
     }
 
     /// "Synthesize" the design point: latency, interval, clock, resources
@@ -583,14 +459,14 @@ impl FixedTransformer {
     /// closed form *exactly* (golden-tested below), so the calibrated
     /// Tables II-IV fit carries over.
     pub fn synthesize(&self, par: &ParallelismPlan) -> SynthesisReport {
-        let pipe = self.pipeline(par);
+        let graph = self.site_graph(par);
         let s = self.cfg.seq_len as u64;
-        let depths: u64 = pipe.stages().iter().map(|st| st.depth).sum();
+        let depths: u64 = graph.nodes.iter().map(|n| n.stage.depth).sum();
         // drain of the gating stream: the worst per-stage (rows-1)·II
-        let drain = pipe
-            .stages()
+        let drain = graph
+            .nodes
             .iter()
-            .map(|st| (st.rows - 1) * st.ii)
+            .map(|n| (n.stage.rows - 1) * n.stage.ii)
             .max()
             .unwrap_or(0);
         // layernorm models pay an extra ~1.5 streaming passes (the two
@@ -606,10 +482,10 @@ impl FixedTransformer {
             0
         };
         let latency_cycles = depths + drain + ln_extra + cal::LATENCY_BASE;
-        let interval_cycles = pipe
-            .stages()
+        let interval_cycles = graph
+            .nodes
             .iter()
-            .map(|st| st.rows * cal::interval_multiplier_ii(st.ii))
+            .map(|n| n.stage.rows * cal::interval_multiplier_ii(n.stage.ii))
             .max()
             .unwrap_or(0)
             + cal::II_BASE;
@@ -617,25 +493,21 @@ impl FixedTransformer {
         // the most-serialized engine sets achievable clock
         let reuse = par.max_reuse();
         let clk_ns = cal::clock_ns(reuse);
-        let layers: Vec<LayerReport> = pipe
-            .stages()
-            .iter()
-            .zip(self.layer_resources(par))
-            .map(|(s, (name, precision, site_reuse, res))| {
-                debug_assert_eq!(s.name, name);
-                LayerReport {
-                    name,
-                    depth: s.depth,
-                    ii: s.ii,
-                    rows: s.rows,
-                    latency: s.latency(),
-                    precision,
-                    reuse: site_reuse,
-                    resources: res,
-                }
+        let fifo = graph.fifo_resources();
+        let layers: Vec<LayerReport> = graph
+            .nodes
+            .into_iter()
+            .map(|n| LayerReport {
+                latency: n.stage.latency(),
+                name: n.name,
+                depth: n.stage.depth,
+                ii: n.stage.ii,
+                rows: n.stage.rows,
+                precision: n.data,
+                reuse: n.reuse,
+                resources: n.resources,
             })
             .collect();
-        let fifo = self.interstage_fifo_resources(&pipe);
         let total: Resources =
             layers.iter().map(|l| l.resources).sum::<Resources>() + fifo;
         SynthesisReport {
@@ -651,53 +523,6 @@ impl FixedTransformer {
             layers,
             fifo,
             total,
-        }
-    }
-
-    /// BRAM of the inter-stage streams, sized from producer/consumer II
-    /// mismatch ([`fifo_depth`]).  A matched chain (every uniform
-    /// parallelism plan) needs only ping-pong registers — depth 1, zero
-    /// BRAM — so uniform-plan resource totals are unchanged from the
-    /// retired global-reuse model; heterogeneous reuse pays for its
-    /// rate conversions here.
-    fn interstage_fifo_resources(&self, pipe: &PipelineModel) -> Resources {
-        let mut bits = 0u64;
-        for w in pipe.stages().windows(2) {
-            let depth = fifo_depth(&w[0], &w[1]);
-            if depth <= 1 {
-                continue; // a register slot, not a RAM
-            }
-            let (elems, spec) = self.stream_shape(&w[0].name);
-            bits += depth * elems as u64 * spec.width() as u64;
-        }
-        Resources::new(0, 0, 0, bram18_for_bits(bits))
-    }
-
-    /// Shape of the stream a stage emits: (elements per row, the data
-    /// grid it is carried on) — what the inter-stage FIFO stores.
-    fn stream_shape(&self, stage_name: &str) -> (usize, FixedSpec) {
-        let c = &self.cfg;
-        let p = &self.plan;
-        if let Some(rest) = stage_name.strip_prefix("block") {
-            if let Some((idx, field)) = rest.split_once('.') {
-                if let Ok(b) = idx.parse::<usize>() {
-                    let bp = p.block(b);
-                    return match field {
-                        "mha" => (c.d_model, bp.mha_out.data),
-                        "ln1" => (c.d_model, bp.ln1.data),
-                        "ffn1" => (c.ffn_dim, bp.ffn1.data),
-                        "ffn2" => (c.d_model, bp.ffn2.data),
-                        "ln2" => (c.d_model, bp.ln2.data),
-                        _ => (c.d_model, bp.ffn2.data),
-                    };
-                }
-            }
-        }
-        match stage_name {
-            "embed" => (c.d_model, p.embed().data),
-            "pool" => (c.d_model, p.pool().data),
-            "head" => (c.head_hidden, p.head().data),
-            _ => (c.output_size, p.out().data),
         }
     }
 

@@ -1,0 +1,451 @@
+//! Site-graph IR: the typed layer-site graph shared by the precision
+//! and parallelism plans, the schedule model, and the static verifier.
+//!
+//! The same site vocabulary (embed, per-block `mha.qkv` / `mha.out` /
+//! `ln1` / `ffn1` / `ffn2` / `ln2`, pool, head, out, softmax) used to be
+//! re-derived in four places: `PrecisionPlan::site_names`,
+//! `ParallelismPlan::site_names`, `FixedTransformer::pipeline` and
+//! `FixedTransformer::layer_resources`.  This module is now the single
+//! authority: [`canonical_site_names`] / [`schedule_site_names`] define
+//! the name grammar the planfile loaders resolve against, and
+//! [`SiteGraph::build`] materializes the dataflow graph — one node per
+//! pipeline stage carrying its `FixedSpec` pair, reuse factor, stage
+//! schedule and resource estimate; one edge per inter-stage stream
+//! carrying the shape `(elements per row, data grid)` the FIFO model
+//! stores.
+//!
+//! Contract: the graph is a *pure reorganization* of the retired
+//! `pipeline()` / `layer_resources()` walks — `synthesize()` rebuilt on
+//! it reproduces its reports bit-for-bit (golden-tested in
+//! `hls::transformer`).
+
+use crate::fixed::FixedSpec;
+use crate::hls::dense::{dense_resources, dense_stage};
+use crate::hls::layernorm::{layernorm_resources, layernorm_stage};
+use crate::hls::mha::{mha_resources_sited, mha_stage, MhaFifoStats};
+use crate::hls::parallelism::ParallelismPlan;
+use crate::hls::pipeline::{fifo_depth, PipelineModel, Stage};
+use crate::hls::pooling::{pool_resources, pool_stage};
+use crate::hls::precision::{PrecisionPlan, QuantConfig};
+use crate::hls::resources::{bram18_for_bits, Resources};
+use crate::hls::ReuseFactor;
+use crate::models::config::ModelConfig;
+
+/// Canonical *precision* site order (execution order; also the
+/// serialization and search order): embed, per-block
+/// `mha.qkv`/`mha.out`/`ln1`/`ffn1`/`ffn2`/`ln2`, pool, head, out, and
+/// the shared softmax LUT site.  `PrecisionPlan::site_names` delegates
+/// here.
+pub fn canonical_site_names(num_blocks: usize) -> Vec<String> {
+    let mut v = vec!["embed".to_string()];
+    for b in 0..num_blocks {
+        for site in ["mha.qkv", "mha.out", "ln1", "ffn1", "ffn2", "ln2"] {
+            v.push(format!("block{b}.{site}"));
+        }
+    }
+    for site in ["pool", "head", "out", "softmax"] {
+        v.push(site.to_string());
+    }
+    v
+}
+
+/// Canonical *schedule* site order — the parallelism-plan vocabulary.
+/// Identical to [`canonical_site_names`] minus `softmax` (the shared LUT
+/// has no reuse dial of its own) and with the per-block order the reuse
+/// grammar documents.  `ParallelismPlan::site_names` delegates here.
+pub fn schedule_site_names(num_blocks: usize) -> Vec<String> {
+    let mut v = vec!["embed".to_string()];
+    for b in 0..num_blocks {
+        for site in ["mha.qkv", "mha.out", "ln1", "ffn1", "ffn2", "ln2"] {
+            v.push(format!("block{b}.{site}"));
+        }
+    }
+    for site in ["pool", "head", "out"] {
+        v.push(site.to_string());
+    }
+    v
+}
+
+/// What kind of kernel a graph node runs — the metadata the static
+/// verifier needs to reason about each site's arithmetic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NodeOp {
+    /// Dense MAC layer: `n_in`-long dot products, `n_out` outputs/row.
+    Dense { n_in: usize, n_out: usize },
+    /// Whole attention engine (projections, QK^T, softmax, apply-V, Wo).
+    /// The node's own spec/reuse are the QKV site; the output path and
+    /// the shared softmax LUT site ride along here.
+    Mha {
+        heads: usize,
+        head_dim: usize,
+        out: QuantConfig,
+        softmax: QuantConfig,
+        out_reuse: ReuseFactor,
+    },
+    /// LayerNorm over `d` channels per row.
+    LayerNorm { d: usize },
+    /// Global average pool over `rows` sequence positions.
+    Pool { rows: usize },
+}
+
+/// One typed layer site of the dataflow graph.
+#[derive(Clone, Debug)]
+pub struct SiteNode {
+    /// Stage name (`embed`, `block0.mha`, ..., `out`) — matches the
+    /// schedule and report naming exactly.
+    pub name: String,
+    /// Precision-plan site whose grid this node's data rides on (the MHA
+    /// node reports its QKV site; the out/softmax sites are in the op).
+    pub precision_site: String,
+    pub op: NodeOp,
+    /// Data grid of the node (weights + activations).
+    pub data: FixedSpec,
+    /// Accumulator grid of the node.
+    pub accum: FixedSpec,
+    /// The site's reuse factor (schedule dial).
+    pub reuse: ReuseFactor,
+    /// Composed stage schedule (depth, II, rows).
+    pub stage: Stage,
+    /// Analytic resource estimate of the node.
+    pub resources: Resources,
+}
+
+/// One inter-stage stream: producer row flows to consumer, carried on
+/// the producer's output grid.  What the inter-stage FIFO stores.
+#[derive(Clone, Debug)]
+pub struct SiteEdge {
+    /// Index of the producing node in [`SiteGraph::nodes`].
+    pub from: usize,
+    /// Index of the consuming node.
+    pub to: usize,
+    /// Elements per row on the stream.
+    pub elems: usize,
+    /// Data grid the stream is carried on.
+    pub spec: FixedSpec,
+}
+
+/// The site-graph IR of one `(TransformerConfig, PrecisionPlan,
+/// ParallelismPlan)` triple — built once, consumed by `synthesize()`,
+/// `pareto_explore` and the static verifier.
+#[derive(Clone, Debug)]
+pub struct SiteGraph {
+    pub nodes: Vec<SiteNode>,
+    pub edges: Vec<SiteEdge>,
+}
+
+impl SiteGraph {
+    /// Materialize the graph.  Panics when the plans' block counts do
+    /// not match the config (same contract as the engine constructors).
+    /// `fifo` carries observed MHA FIFO high-water stats when a forward
+    /// pass has run (sizes the attention engine's BRAM share).
+    pub fn build(
+        cfg: &ModelConfig,
+        pp: &PrecisionPlan,
+        par: &ParallelismPlan,
+        fifo: Option<MhaFifoStats>,
+    ) -> Self {
+        assert_eq!(pp.num_blocks(), cfg.num_blocks, "precision plan/config block mismatch");
+        assert_eq!(par.num_blocks(), cfg.num_blocks, "parallelism plan/config block mismatch");
+        let c = cfg;
+        let mut nodes: Vec<SiteNode> = Vec::new();
+        let mut push = |precision_site: String,
+                        op: NodeOp,
+                        q: QuantConfig,
+                        reuse: ReuseFactor,
+                        stage: Stage,
+                        resources: Resources| {
+            nodes.push(SiteNode {
+                name: stage.name.clone(),
+                precision_site,
+                op,
+                data: q.data,
+                accum: q.accum,
+                reuse,
+                stage,
+                resources,
+            });
+        };
+        push(
+            "embed".into(),
+            NodeOp::Dense { n_in: c.input_size, n_out: c.d_model },
+            pp.embed(),
+            par.embed(),
+            dense_stage("embed", c.seq_len, c.input_size.max(2), par.embed(), pp.embed().data),
+            dense_resources(c.input_size, c.d_model, pp.embed().data, par.embed()),
+        );
+        for b in 0..c.num_blocks {
+            let bp = *pp.block(b);
+            let rp = *par.block(b);
+            let mut m = mha_stage(
+                c.seq_len,
+                c.d_model,
+                c.head_dim,
+                rp.mha(),
+                &bp.mha(pp.softmax()),
+            );
+            m.name = format!("block{b}.mha");
+            push(
+                format!("block{b}.mha.qkv"),
+                NodeOp::Mha {
+                    heads: c.num_heads,
+                    head_dim: c.head_dim,
+                    out: bp.mha_out,
+                    softmax: pp.softmax(),
+                    out_reuse: rp.mha_out,
+                },
+                bp.qkv,
+                rp.qkv,
+                m,
+                mha_resources_sited(
+                    c.seq_len,
+                    c.d_model,
+                    c.num_heads,
+                    c.head_dim,
+                    bp.qkv.data,
+                    bp.mha_out.data,
+                    pp.softmax().data,
+                    rp.mha(),
+                    fifo,
+                ),
+            );
+            if c.use_layernorm {
+                push(
+                    format!("block{b}.ln1"),
+                    NodeOp::LayerNorm { d: c.d_model },
+                    bp.ln1,
+                    rp.ln1,
+                    layernorm_stage(&format!("block{b}.ln1"), c.seq_len, c.d_model, rp.ln1, bp.ln1.data),
+                    layernorm_resources(c.d_model, bp.ln1.data, rp.ln1),
+                );
+            }
+            push(
+                format!("block{b}.ffn1"),
+                NodeOp::Dense { n_in: c.d_model, n_out: c.ffn_dim },
+                bp.ffn1,
+                rp.ffn1,
+                dense_stage(&format!("block{b}.ffn1"), c.seq_len, c.d_model, rp.ffn1, bp.ffn1.data),
+                dense_resources(c.d_model, c.ffn_dim, bp.ffn1.data, rp.ffn1),
+            );
+            push(
+                format!("block{b}.ffn2"),
+                NodeOp::Dense { n_in: c.ffn_dim, n_out: c.d_model },
+                bp.ffn2,
+                rp.ffn2,
+                dense_stage(&format!("block{b}.ffn2"), c.seq_len, c.ffn_dim, rp.ffn2, bp.ffn2.data),
+                dense_resources(c.ffn_dim, c.d_model, bp.ffn2.data, rp.ffn2),
+            );
+            if c.use_layernorm {
+                push(
+                    format!("block{b}.ln2"),
+                    NodeOp::LayerNorm { d: c.d_model },
+                    bp.ln2,
+                    rp.ln2,
+                    layernorm_stage(&format!("block{b}.ln2"), c.seq_len, c.d_model, rp.ln2, bp.ln2.data),
+                    layernorm_resources(c.d_model, bp.ln2.data, rp.ln2),
+                );
+            }
+        }
+        push(
+            "pool".into(),
+            NodeOp::Pool { rows: c.seq_len },
+            pp.pool(),
+            par.pool(),
+            pool_stage("pool", c.seq_len, par.pool()),
+            pool_resources(c.d_model, pp.pool().data, par.pool()),
+        );
+        push(
+            "head".into(),
+            NodeOp::Dense { n_in: c.d_model, n_out: c.head_hidden },
+            pp.head(),
+            par.head(),
+            dense_stage("head", 1, c.d_model, par.head(), pp.head().data),
+            dense_resources(c.d_model, c.head_hidden, pp.head().data, par.head()),
+        );
+        push(
+            "out".into(),
+            NodeOp::Dense { n_in: c.head_hidden, n_out: c.output_size },
+            pp.out(),
+            par.out(),
+            dense_stage("out", 1, c.head_hidden, par.out(), pp.out().data),
+            dense_resources(c.head_hidden, c.output_size, pp.out().data, par.out()),
+        );
+        // edges: the linear dataflow chain, each stream carried on the
+        // grid the producer emits (the retired `stream_shape` table)
+        let edges = (1..nodes.len())
+            .map(|to| {
+                let (elems, spec) = stream_shape(cfg, pp, &nodes[to - 1].name);
+                SiteEdge { from: to - 1, to, elems, spec }
+            })
+            .collect();
+        Self { nodes, edges }
+    }
+
+    /// The schedule view: every node's stage in pipeline order.
+    pub fn pipeline_model(&self) -> PipelineModel {
+        let mut p = PipelineModel::default();
+        for n in &self.nodes {
+            p.push(n.stage.clone());
+        }
+        p
+    }
+
+    /// BRAM of the inter-stage streams, sized from producer/consumer II
+    /// mismatch ([`fifo_depth`]).  A matched chain (every uniform
+    /// parallelism plan) needs only ping-pong registers — depth 1, zero
+    /// BRAM; heterogeneous reuse pays for its rate conversions here.
+    pub fn fifo_resources(&self) -> Resources {
+        let mut bits = 0u64;
+        for e in &self.edges {
+            let depth = fifo_depth(&self.nodes[e.from].stage, &self.nodes[e.to].stage);
+            if depth <= 1 {
+                continue; // a register slot, not a RAM
+            }
+            bits += depth * e.elems as u64 * e.spec.width() as u64;
+        }
+        Resources::new(0, 0, 0, bram18_for_bits(bits))
+    }
+
+    /// Look a node up by stage name.
+    pub fn node(&self, name: &str) -> Option<&SiteNode> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+}
+
+/// Shape of the stream a stage emits: (elements per row, the data grid
+/// it is carried on) — what the inter-stage FIFO stores.
+fn stream_shape(c: &ModelConfig, p: &PrecisionPlan, stage_name: &str) -> (usize, FixedSpec) {
+    if let Some(rest) = stage_name.strip_prefix("block") {
+        if let Some((idx, field)) = rest.split_once('.') {
+            if let Ok(b) = idx.parse::<usize>() {
+                let bp = p.block(b);
+                return match field {
+                    "mha" => (c.d_model, bp.mha_out.data),
+                    "ln1" => (c.d_model, bp.ln1.data),
+                    "ffn1" => (c.ffn_dim, bp.ffn1.data),
+                    "ffn2" => (c.d_model, bp.ffn2.data),
+                    "ln2" => (c.d_model, bp.ln2.data),
+                    _ => (c.d_model, bp.ffn2.data),
+                };
+            }
+        }
+    }
+    match stage_name {
+        "embed" => (c.d_model, p.embed().data),
+        "pool" => (c.d_model, p.pool().data),
+        "head" => (c.head_hidden, p.head().data),
+        _ => (c.output_size, p.out().data),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::{zoo, zoo_model};
+
+    fn graph_for(model: &str, r: u32) -> (ModelConfig, SiteGraph) {
+        let cfg = zoo_model(model).unwrap().config;
+        let pp = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 10));
+        let par = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(r));
+        let g = SiteGraph::build(&cfg, &pp, &par, None);
+        (cfg, g)
+    }
+
+    #[test]
+    fn canonical_names_are_the_plan_vocabulary() {
+        // the plans delegate here; pin the grammar itself
+        let names = canonical_site_names(2);
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[1], "block0.mha.qkv");
+        assert_eq!(names[6], "block0.ln2");
+        assert_eq!(names.last().unwrap(), "softmax");
+        assert_eq!(names.len(), 1 + 2 * 6 + 4);
+        let sched = schedule_site_names(2);
+        assert_eq!(sched.len(), names.len() - 1);
+        assert!(!sched.iter().any(|s| s == "softmax"));
+        assert_eq!(&names[..names.len() - 1], &sched[..]);
+    }
+
+    #[test]
+    fn graph_is_a_linear_chain_in_stage_order() {
+        for m in zoo() {
+            let (cfg, g) = graph_for(&m.config.name, 1);
+            let per_block = if cfg.use_layernorm { 5 } else { 3 };
+            assert_eq!(g.nodes.len(), 1 + cfg.num_blocks * per_block + 3);
+            assert_eq!(g.edges.len(), g.nodes.len() - 1);
+            for (i, e) in g.edges.iter().enumerate() {
+                assert_eq!((e.from, e.to), (i, i + 1));
+            }
+            assert_eq!(g.nodes[0].name, "embed");
+            assert_eq!(g.nodes[1].name, "block0.mha");
+            assert_eq!(g.nodes.last().unwrap().name, "out");
+            // node names and stage names agree everywhere
+            for n in &g.nodes {
+                assert_eq!(n.name, n.stage.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mha_node_carries_its_three_precision_sites() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let mut pp = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 10));
+        pp.set_data("block1.mha.qkv", FixedSpec::new(12, 4)).unwrap();
+        pp.set_data("block1.mha.out", FixedSpec::new(10, 3)).unwrap();
+        pp.set_data("softmax", FixedSpec::new(14, 5)).unwrap();
+        let par = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(1));
+        let g = SiteGraph::build(&cfg, &pp, &par, None);
+        let n = g.node("block1.mha").unwrap();
+        assert_eq!(n.precision_site, "block1.mha.qkv");
+        assert_eq!(n.data, FixedSpec::new(12, 4));
+        match &n.op {
+            NodeOp::Mha { out, softmax, heads, head_dim, .. } => {
+                assert_eq!(out.data, FixedSpec::new(10, 3));
+                assert_eq!(softmax.data, FixedSpec::new(14, 5));
+                assert_eq!(*heads, cfg.num_heads);
+                assert_eq!(*head_dim, cfg.head_dim);
+            }
+            op => panic!("mha node has op {op:?}"),
+        }
+    }
+
+    #[test]
+    fn edges_carry_the_producer_stream_shape() {
+        let (cfg, g) = graph_for("gw", 1);
+        // embed -> block0.mha streams d_model elems on the embed grid
+        let e0 = &g.edges[0];
+        assert_eq!(e0.elems, cfg.d_model);
+        assert_eq!(e0.spec, g.nodes[0].data);
+        // ffn1 -> ffn2 streams ffn_dim elems on the ffn1 grid
+        let ffn1_idx = g.nodes.iter().position(|n| n.name == "block0.ffn1").unwrap();
+        let e = g.edges.iter().find(|e| e.from == ffn1_idx).unwrap();
+        assert_eq!(e.elems, cfg.ffn_dim);
+        assert_eq!(e.spec, g.nodes[ffn1_idx].data);
+    }
+
+    #[test]
+    fn uniform_plan_graph_has_no_fifo_bram() {
+        for m in zoo() {
+            let (_, g) = graph_for(&m.config.name, 2);
+            assert_eq!(g.fifo_resources(), Resources::ZERO, "{}", m.config.name);
+        }
+    }
+
+    #[test]
+    fn ii_mismatch_shows_up_as_fifo_bram_on_the_edge_model() {
+        let cfg = zoo_model("btag").unwrap().config;
+        let pp = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 10));
+        let mut par = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(1));
+        par.set("block0.ffn1", ReuseFactor(8)).unwrap();
+        let g = SiteGraph::build(&cfg, &pp, &par, None);
+        assert!(g.fifo_resources().bram18 > 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn build_rejects_mismatched_block_counts() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let pp = PrecisionPlan::uniform(cfg.num_blocks + 1, QuantConfig::new(6, 10));
+        let par = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(1));
+        SiteGraph::build(&cfg, &pp, &par, None);
+    }
+}

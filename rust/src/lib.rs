@@ -42,7 +42,18 @@
 //! * [`experiments`] — regenerates every table and figure of the paper.
 //! * [`testutil`] — property-test driver (offline proptest stand-in) and
 //!   the golden-vector conformance corpus writer (`testutil::golden`).
+//! * [`ir`] — the site-graph IR: one typed node per layer site with its
+//!   `FixedSpec` pair, reuse factor and stage schedule; edges carry the
+//!   inter-stage stream shapes.  Built once per plan triple, consumed by
+//!   `synthesize()`, the Pareto explorer and the static verifier.
+//! * [`analysis`] — the static plan verifier (`repro lint-plan`): three
+//!   dataflow passes over the site graph (interval/overflow, hotpath
+//!   eligibility, schedule/FIFO consistency) emitting severity-ranked,
+//!   site-addressed diagnostics.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod benchjson;
 pub mod cli;
 pub mod coordinator;
@@ -50,6 +61,7 @@ pub mod data;
 pub mod experiments;
 pub mod fixed;
 pub mod hls;
+pub mod ir;
 pub mod metrics;
 pub mod models;
 pub mod nn;

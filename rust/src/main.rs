@@ -10,13 +10,16 @@
 //! repro synth             --model <m> [--reuse R] [--int I] [--frac F] [--precision-plan FILE] [--reuse-plan FILE]
 //! repro mixed-precision   --model <m> [--floor 0.99] [--min-frac 2] [--save-plan FILE]
 //! repro pareto            --model <m> [--floor 0.99] [--iters N] [--reuse-choices 1,2,4,8] [--save-plan FILE]
+//! repro lint-plan         --model <m> [--int I] [--frac F] [--reuse R] [--precision-plan FILE] [--reuse-plan FILE] [--preset mixed] [--events N] [--seed S] [--json FILE] [--strict]
 //! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B] [--replicas R] [--precision-plan FILE] [--reuse-plan FILE]
 //! repro stream            --backend float|hls [--model engine] [--samples N] [--hop H] [--threshold Z] ...
 //! repro report            (everything above, in sequence)
 //! ```
 
 use anyhow::{bail, Context, Result};
+use hls4ml_transformer::analysis::{verify_plan, VerifyConfig, PROBE_EVENTS, PROBE_SEED};
 use hls4ml_transformer::cli::Args;
+use hls4ml_transformer::fixed::FixedSpec;
 use hls4ml_transformer::coordinator::{
     BackendKind, BatchPolicy, PipelineConfig, ServerConfig, SourceMode, StreamSource,
     TriggerServer, WeightsSource,
@@ -66,6 +69,12 @@ fn usage() {
          \x20 pareto           --model <m>        joint precision x reuse frontier\n\
          \x20                  [--floor 0.99] [--iters N] [--reuse-choices 1,2,4,8]\n\
          \x20                  [--save-plan F]    write the dominating mixed plans\n\
+         \x20 lint-plan        --model <m>        static plan verification\n\
+         \x20                  [--precision-plan F] [--reuse-plan F]\n\
+         \x20                  [--preset mixed]   golden mixed-precision assignment\n\
+         \x20                  [--events N]       probe events (0 = worst-case mode)\n\
+         \x20                  [--json F]         append one JSON report line\n\
+         \x20                  [--strict]         exit nonzero on any ERROR\n\
          \x20 serve            --backend <b>      run the trigger server\n\
          \x20                  [--replicas R]     worker-pool width per model\n\
          \x20                  [--precision-plan F]  per-site precision file (HLS)\n\
@@ -275,12 +284,14 @@ fn run(args: &Args) -> Result<()> {
             let res = pareto_explore(&cfg, &weights, &eval, base, &pcfg);
             println!(
                 "pareto exploration — {} | base {} | auc_ratio floor {floor} | \
-                 {} eval events | {} schedule evals | {} eval-set scorings",
+                 {} eval events | {} schedule evals | {} eval-set scorings | \
+                 {} statically pruned",
                 cfg.name,
                 base.data,
                 eval.len(),
                 res.evals,
-                res.scored
+                res.scored,
+                res.pruned
             );
             println!(
                 "  {:>3}  {:>9} {:>9} {:>10} {:>8} {:>9} {:>8}  plan",
@@ -361,6 +372,82 @@ fn run(args: &Args) -> Result<()> {
                 _ => println!(
                     "  no feasible design point at auc_ratio floor {floor} on the VU13P"
                 ),
+            }
+        }
+        "lint-plan" => {
+            args.expect_only(&[
+                "model", "int", "frac", "reuse", "precision-plan", "reuse-plan", "preset",
+                "events", "seed", "json", "strict",
+            ])
+            .map_err(anyhow::Error::msg)?;
+            let cfg = model_arg(args)?;
+            let weights = weights_or_synthetic(&cfg)?;
+            let int_bits = args.get_parse("int", 6u32).map_err(anyhow::Error::msg)?;
+            let frac = args.get_parse("frac", 8u32).map_err(anyhow::Error::msg)?;
+            let reuse = args.get_parse("reuse", 1u32).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(reuse >= 1, "--reuse must be >= 1");
+            let base = QuantConfig::new(int_bits, frac);
+            anyhow::ensure!(
+                !(args.has("preset") && args.has("precision-plan")),
+                "--preset and --precision-plan are mutually exclusive"
+            );
+            let (mut plan, label): (PrecisionPlan, String) = match args.get("precision-plan")
+            {
+                Some(path) => (
+                    load_plan_file(path, cfg.num_blocks, base).map_err(anyhow::Error::msg)?,
+                    format!("{}/{path}", cfg.name),
+                ),
+                None => (
+                    PrecisionPlan::uniform(cfg.num_blocks, base),
+                    format!("{}/uniform", cfg.name),
+                ),
+            };
+            let label = match args.get("preset") {
+                Some("mixed") => {
+                    // the golden mixed assignment of the conformance
+                    // corpus: deterministic per-site widths cycling
+                    // frac 6..=10 and int 4..=6 over the canonical order
+                    for (i, site) in
+                        hls4ml_transformer::ir::canonical_site_names(cfg.num_blocks)
+                            .iter()
+                            .enumerate()
+                    {
+                        let (int_b, frac_b) = (4 + (i as u32 % 3), 6 + (i as u32 % 5));
+                        plan.set_data(site, FixedSpec::new(int_b + frac_b, int_b))
+                            .map_err(anyhow::Error::msg)?;
+                    }
+                    format!("{}/mixed", cfg.name)
+                }
+                Some(other) => bail!("unknown --preset '{other}' (expected: mixed)"),
+                None => label,
+            };
+            let par = match args.get("reuse-plan") {
+                Some(path) => load_reuse_plan_file(path, cfg.num_blocks, ReuseFactor(reuse))
+                    .map_err(anyhow::Error::msg)?,
+                None => ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(reuse)),
+            };
+            let vc = VerifyConfig {
+                events: args.get_parse("events", PROBE_EVENTS).map_err(anyhow::Error::msg)?,
+                seed: args.get_parse("seed", PROBE_SEED).map_err(anyhow::Error::msg)?,
+            };
+            let report = verify_plan(&cfg, &weights, &plan, &par, &vc);
+            print!("{}", report.render_text());
+            if let Some(path) = args.get("json") {
+                use std::io::Write as _;
+                let mut f = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)
+                    .with_context(|| format!("--json {path}"))?;
+                writeln!(f, "{}", report.render_json(&label))
+                    .with_context(|| format!("--json {path}"))?;
+                println!("report appended to {path}");
+            }
+            if args.has("strict") && report.has_errors() {
+                bail!(
+                    "plan '{label}' has {} verification error(s)",
+                    report.count(hls4ml_transformer::analysis::Severity::Error)
+                );
             }
         }
         "serve" => {

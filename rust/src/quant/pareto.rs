@@ -110,6 +110,9 @@ pub struct ParetoResult {
     pub evals: usize,
     /// Eval-set scorings spent (one per distinct precision plan).
     pub scored: usize,
+    /// Candidates rejected by the static verifier before any schedule or
+    /// eval-set work was spent on them.
+    pub pruned: usize,
 }
 
 impl ParetoResult {
@@ -136,6 +139,7 @@ struct Explorer<'a> {
     aucs: HashMap<String, f64>,
     evals: usize,
     scored: usize,
+    pruned: usize,
 }
 
 impl<'a> Explorer<'a> {
@@ -154,6 +158,7 @@ impl<'a> Explorer<'a> {
             aucs: HashMap::new(),
             evals: 0,
             scored: 0,
+            pruned: 0,
         }
     }
 
@@ -180,9 +185,17 @@ impl<'a> Explorer<'a> {
         a
     }
 
-    fn point(&mut self, pp: &PrecisionPlan, par: &ParallelismPlan) -> ParetoPoint {
+    /// Evaluate one candidate, or `None` when the static verifier's
+    /// profile-free passes flag it as ERROR — a plan that would saturate
+    /// its own accumulator clamp or deadlock its schedule is rejected
+    /// before any synthesis or eval-set scoring is spent on it.
+    fn point(&mut self, pp: &PrecisionPlan, par: &ParallelismPlan) -> Option<ParetoPoint> {
+        if crate::analysis::static_plan_errors(self.cfg, pp, par) > 0 {
+            self.pruned += 1;
+            return None;
+        }
         let rep = self.synth(pp, par);
-        ParetoPoint {
+        Some(ParetoPoint {
             precision: pp.clone(),
             parallelism: par.clone(),
             latency_cycles: rep.latency_cycles,
@@ -190,7 +203,7 @@ impl<'a> Explorer<'a> {
             latency_us: rep.latency_us,
             resources: rep.total,
             auc_ratio: self.auc_ratio(pp),
-        }
+        })
     }
 
     fn feasible(&self, p: &ParetoPoint) -> bool {
@@ -246,7 +259,7 @@ pub fn pareto_explore(
     // ---- phase 1: uniform seeds ---------------------------------------
     for &r in &choices {
         let par = ParallelismPlan::uniform(cfg.num_blocks, ReuseFactor(r));
-        let p = ex.point(&base_pp, &par);
+        let Some(p) = ex.point(&base_pp, &par) else { continue };
         if !ex.feasible(&p) {
             continue;
         }
@@ -277,7 +290,7 @@ pub fn pareto_explore(
                 for &r in choices.iter().filter(|&&c| c > r_now) {
                     let mut par = cur.parallelism.clone();
                     par.set(site, ReuseFactor(r)).expect("live site");
-                    let cand = ex.point(&cur.precision, &par);
+                    let Some(cand) = ex.point(&cur.precision, &par) else { continue };
                     if ex.feasible(&cand)
                         && cand.latency_cycles <= cur.latency_cycles
                         && cand.cost() < cur.cost()
@@ -314,7 +327,7 @@ pub fn pareto_explore(
             if pp.set_data(&site, shaved).is_err() {
                 continue;
             }
-            let cand = ex.point(&pp, &cur.parallelism);
+            let Some(cand) = ex.point(&pp, &cur.parallelism) else { continue };
             if ex.feasible(&cand) && cand.cost() <= cur.cost() {
                 offer(&mut frontier, cand.clone());
                 cur = cand;
@@ -346,7 +359,7 @@ pub fn pareto_explore(
                     } else {
                         idx.checked_sub(1).and_then(|j| choices.get(j))
                     };
-                    next.map(|&r| {
+                    next.and_then(|&r| {
                         let mut par = walk.parallelism.clone();
                         par.set(site, ReuseFactor(r)).expect("live site");
                         ex.point(&walk.precision, &par)
@@ -360,7 +373,7 @@ pub fn pareto_explore(
                         let mut pp = walk.precision.clone();
                         let shaved = FixedSpec::new(q.data.width() - 1, q.data.integer());
                         match pp.set_data(site, shaved) {
-                            Ok(()) => Some(ex.point(&pp, &walk.parallelism)),
+                            Ok(()) => ex.point(&pp, &walk.parallelism),
                             Err(_) => None,
                         }
                     } else {
@@ -375,7 +388,7 @@ pub fn pareto_explore(
                         let mut pp = walk.precision.clone();
                         let widened = FixedSpec::new(q.data.width() + 1, q.data.integer());
                         match pp.set_data(site, widened) {
-                            Ok(()) => Some(ex.point(&pp, &walk.parallelism)),
+                            Ok(()) => ex.point(&pp, &walk.parallelism),
                             Err(_) => None,
                         }
                     } else {
@@ -408,7 +421,13 @@ pub fn pareto_explore(
     frontier.sort_by(|a, b| {
         (a.latency_cycles, a.cost()).cmp(&(b.latency_cycles, b.cost()))
     });
-    ParetoResult { frontier, best_uniform, evals: ex.evals, scored: ex.scored }
+    ParetoResult {
+        frontier,
+        best_uniform,
+        evals: ex.evals,
+        scored: ex.scored,
+        pruned: ex.pruned,
+    }
 }
 
 #[cfg(test)]
@@ -517,6 +536,33 @@ mod tests {
         assert!(r.frontier.is_empty());
         assert!(r.best_uniform.is_none());
         assert!(r.mixed_dominator().is_none());
+    }
+
+    #[test]
+    fn structurally_invalid_base_precision_is_pruned_before_scoring() {
+        // base int bits 12 > the 10-bit accumulator clamp: every seed the
+        // explorer would mint carries the structural ERROR, so the static
+        // verifier prunes the whole walk before a single synthesize or
+        // eval-set scoring is spent
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 36);
+        let eval = EvalSet::synthetic(&m.config, &w, 8, 17);
+        let r = pareto_explore(&m.config, &w, &eval, QuantConfig::new(12, 6), &small_cfg(8));
+        assert!(r.frontier.is_empty(), "no invalid plan may reach the frontier");
+        assert!(r.best_uniform.is_none());
+        assert!(r.pruned > 0, "the uniform seeds must be pruned");
+        assert_eq!(r.evals, 0, "pruning happens before synthesis");
+        assert_eq!(r.scored, 0, "pruning happens before eval-set scoring");
+    }
+
+    #[test]
+    fn valid_plans_are_never_pruned() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 37);
+        let eval = EvalSet::synthetic(&m.config, &w, 8, 19);
+        let r = pareto_explore(&m.config, &w, &eval, QuantConfig::new(6, 10), &small_cfg(8));
+        assert_eq!(r.pruned, 0, "well-formed candidates must all be scored");
+        assert!(!r.frontier.is_empty());
     }
 
     #[test]
