@@ -17,15 +17,19 @@ every *latency-keyed* metric shared by both runs — fields ending in
 `_ns` or `_cycles`, or containing `latency` — and exits nonzero if any
 grew by more than PCT percent.  Latency keys are where lower is strictly
 better (wall-clock percentiles, modeled FPGA cycles), so a guarded
-increase is a real regression rather than a rebalanced trade-off;
+increase is a real regression rather than a rebalanced trade-off.
+*Speedup-keyed* metrics — fields ending in `speedup_x` or containing
+`speedup` — gate in the opposite direction: they are ratios where higher
+is better (integer path vs f64 reference, compiled plan vs per-call
+lift), so a DROP of more than PCT percent exits nonzero.  Other
 throughput-style keys stay advisory either way.
 
-Under `--fail-on-regression`, a latency series that was tracked in the
-previous run and is missing from the current one — the whole bench gone,
-or just its latency field — is also a hard error: a gating lane must not
-go silently green because the regressed series stopped being emitted.
-Renames and removals in advisory mode remain lifecycle notes, not
-errors.
+Under `--fail-on-regression`, a latency or speedup series that was
+tracked in the previous run and is missing from the current one — the
+whole bench gone, or just the field — is also a hard error: a gating
+lane must not go silently green because the regressed series stopped
+being emitted.  Renames and removals in advisory mode remain lifecycle
+notes, not errors.
 
 With `--plans`, PREV and CURR are instead `repro lint-plan --json`
 verifier reports (one JSON object per line keyed "plan", carrying
@@ -148,6 +152,10 @@ def is_latency_key(key):
     return key.endswith(LATENCY_SUFFIXES) or "latency" in key
 
 
+def is_speedup_key(key):
+    return key.endswith("speedup_x") or "speedup" in key
+
+
 def latency_regressions(prev, curr, shared, threshold_pct):
     """(bench, key, prev, curr, pct) for every latency-keyed metric that
     grew past the threshold."""
@@ -166,6 +174,25 @@ def latency_regressions(prev, curr, shared, threshold_pct):
     return rows
 
 
+def speedup_regressions(prev, curr, shared, threshold_pct):
+    """(bench, key, prev, curr, pct) for every speedup-keyed metric that
+    DROPPED past the threshold (speedups are higher-is-better ratios, so
+    the gate is the mirror image of the latency one)."""
+    rows = []
+    for name in shared:
+        keys = set(prev[name]) & set(curr[name])
+        for key in sorted(keys):
+            if key == "bench" or not is_speedup_key(key):
+                continue
+            a, b = metric(prev[name], key), metric(curr[name], key)
+            if a is None or b is None or a <= 0:
+                continue
+            pct = (a - b) / a * 100.0
+            if pct > threshold_pct:
+                rows.append((name, key, a, b, pct))
+    return rows
+
+
 def vanished_latency_series(prev, curr):
     """(bench, key) for every latency series the previous run tracked
     that the current run no longer emits — either the bench vanished
@@ -174,6 +201,21 @@ def vanished_latency_series(prev, curr):
     for name in sorted(prev):
         for key in sorted(prev[name]):
             if key == "bench" or not is_latency_key(key):
+                continue
+            if metric(prev[name], key) is None:
+                continue
+            if name not in curr or metric(curr.get(name, {}), key) is None:
+                rows.append((name, key))
+    return rows
+
+
+def vanished_speedup_series(prev, curr):
+    """Speedup twin of vanished_latency_series: a tracked speedup ratio
+    the current run stopped emitting is a hard error under the gate."""
+    rows = []
+    for name in sorted(prev):
+        for key in sorted(prev[name]):
+            if key == "bench" or not is_speedup_key(key):
                 continue
             if metric(prev[name], key) is None:
                 continue
@@ -276,15 +318,27 @@ def main(argv):
             for n, k, a, b, pct in regressions:
                 print(f"  {n:<60} {k}: {a:,.0f} -> {b:,.0f}  (+{pct:.1f}%)")
             failed = True
+        slower = speedup_regressions(prev, curr, shared, fail_pct)
+        if slower:
+            print(f"\n== speedup drops past {fail_pct:g}% (gating) ==")
+            for n, k, a, b, pct in slower:
+                print(f"  {n:<60} {k}: {a:.2f}x -> {b:.2f}x  (-{pct:.1f}%)")
+            failed = True
         vanished = vanished_latency_series(prev, curr)
         if vanished:
             print("\n== latency series missing from the current run (gating) ==")
             for n, k in vanished:
                 print(f"  {n:<60} {k}: tracked last run, not emitted now")
             failed = True
+        vanished_speedups = vanished_speedup_series(prev, curr)
+        if vanished_speedups:
+            print("\n== speedup series missing from the current run (gating) ==")
+            for n, k in vanished_speedups:
+                print(f"  {n:<60} {k}: tracked last run, not emitted now")
+            failed = True
         if failed:
             return 1
-        print(f"(no latency-keyed metric regressed past {fail_pct:g}%)")
+        print(f"(no latency- or speedup-keyed metric regressed past {fail_pct:g}%)")
     return 0
 
 

@@ -2,11 +2,12 @@
 renames (added/removed keys are reported as "new"/"gone", never an
 error), malformed CLI input and unreadable files, always exiting 0 —
 except under --fail-on-regression PCT, where a latency-keyed metric
-(*_ns / *_cycles / *latency*) growing past the threshold exits 1 while
-throughput-style changes stay advisory.  Also under the flag, a latency
-series tracked last run but missing now (vanished bench, or a record
-that lost its latency field) is a hard error — the gate must not go
-green because a regressed series stopped being emitted."""
+(*_ns / *_cycles / *latency*) growing past the threshold, or a
+speedup-keyed metric (*speedup_x / *speedup*) DROPPING past it, exits 1
+while throughput-style changes stay advisory.  Also under the flag, a
+latency or speedup series tracked last run but missing now (vanished
+bench, or a record that lost the field) is a hard error — the gate must
+not go green because a regressed series stopped being emitted."""
 
 import importlib.util
 import pathlib
@@ -157,7 +158,7 @@ def test_regression_under_threshold_passes(tmp_path, capsys):
     )
     out = capsys.readouterr().out
     assert rc == 0
-    assert "no latency-keyed metric regressed past 25%" in out
+    assert "no latency- or speedup-keyed metric regressed past 25%" in out
 
 
 def test_modeled_latency_cycles_are_guarded(tmp_path, capsys):
@@ -180,7 +181,7 @@ def test_throughput_drop_does_not_trip_the_latency_gate(tmp_path, capsys):
         extra=("--fail-on-regression", "10"),
     )
     assert rc == 0
-    assert "no latency-keyed metric regressed" in capsys.readouterr().out
+    assert "no latency- or speedup-keyed metric regressed" in capsys.readouterr().out
 
 
 def test_latency_improvement_passes_the_gate(tmp_path):
@@ -244,6 +245,79 @@ def test_vanished_throughput_bench_does_not_trip_the_gate(tmp_path, capsys):
     out = capsys.readouterr().out
     assert rc == 0
     assert "gone since last run: sweep/x" in out
+
+
+def test_speedup_drop_past_threshold_fails_with_flag(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("hotpath compiled gw", speedup_x=2.0)],
+        [line("hotpath compiled gw", speedup_x=1.2)],  # -40% < -25%
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "speedup drops past 25%" in out
+    assert "speedup_x" in out
+    assert "2.00x -> 1.20x" in out
+
+
+def test_speedup_drop_under_threshold_passes(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("hotpath compiled gw", speedup_x=2.0, batch8_speedup_x=3.0)],
+        [line("hotpath compiled gw", speedup_x=1.8, batch8_speedup_x=2.9)],  # -10%, -3%
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "no latency- or speedup-keyed metric regressed past 25%" in out
+
+
+def test_speedup_improvement_passes_the_gate(tmp_path):
+    rc = run(
+        tmp_path,
+        [line("hotpath speedup gw", speedup_x=2.0)],
+        [line("hotpath speedup gw", speedup_x=4.0)],
+        extra=("--fail-on-regression", "10"),
+    )
+    assert rc == 0
+
+
+def test_speedup_drop_is_advisory_without_flag(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("hotpath compiled gw", speedup_x=3.0)],
+        [line("hotpath compiled gw", speedup_x=1.0)],
+    )
+    assert rc == 0
+    assert "speedup drops" not in capsys.readouterr().out
+
+
+def test_vanished_speedup_bench_fails_under_the_gate(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("hotpath compiled gw", speedup_x=2.0), line("kept", p99_ns=5)],
+        [line("kept", p99_ns=5)],
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "speedup series missing from the current run" in out
+    assert "hotpath compiled gw" in out
+
+
+def test_lost_speedup_field_fails_under_the_gate(tmp_path, capsys):
+    # the bench still reports, but its batch-8 speedup ratio went away
+    rc = run(
+        tmp_path,
+        [line("hotpath compiled gw", speedup_x=2.0, batch8_speedup_x=3.0)],
+        [line("hotpath compiled gw", speedup_x=2.0)],
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "batch8_speedup_x" in out
+    assert "tracked last run, not emitted now" in out
 
 
 def plan_line(name, errors=0, warnings=0, diagnostics="[]"):

@@ -9,13 +9,20 @@
 //! unless the full-model integer path beats the reference by at least
 //! that factor on the widest zoo model — CI's absolute floor alongside
 //! the relative `ci/bench_diff.py` gate.
+//!
+//! The "compiled plan vs per-call lift" section times the same integer
+//! kernels through the build-once `CompiledModel` artifact against the
+//! lift-on-every-call dispatchers (same bits either way), and
+//! `HOTPATH_ASSERT_COMPILED_SPEEDUP` gates the batch-1 full-model
+//! speedup on gw the same way.
 
 mod harness;
 
 use hls4ml_transformer::coordinator::spsc;
 use hls4ml_transformer::fixed::{FixedSpec, LutKind, LutTable};
 use hls4ml_transformer::hls::{
-    dense, hotpath, layernorm, mha, pooling, softmax, FixedTransformer, QuantConfig,
+    dense, hotpath, layernorm, mha, pooling, softmax, CompiledDense, FixedTransformer,
+    QuantConfig,
 };
 use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::zoo;
@@ -181,6 +188,102 @@ fn main() {
             std::process::exit(1);
         }
         println!("    hotpath speedup gate passed: {got:.2}x >= {floor:.2}x");
+    }
+
+    harness::section("compiled plan vs per-call lift");
+    // both sides run the same integer kernels and return the same bits;
+    // the compiled side reads the artifact's pre-lifted mantissa tiles
+    // while the per-call side re-quantizes weights and re-lifts them on
+    // every call.  When HOTPATH_ASSERT_COMPILED_SPEEDUP is set, the run
+    // fails unless the compiled full-model path beats per-call lift by
+    // at least that factor at batch 1 on the widest zoo model (gw).
+    hotpath::force_f64_reference(false);
+    {
+        let w = Mat::from_vec(32, 32, g.normal_vec(1024, 0.3)).map(|v| data.quantize(v));
+        let b: Vec<f32> =
+            g.normal_vec(32, 0.1).iter().map(|&v| data.quantize(v)).collect();
+        let x = Mat::from_vec(100, 32, g.normal_vec(3200, 1.0)).map(|v| data.quantize(v));
+        let act = hls4ml_transformer::nn::layers::Activation::Relu;
+        let site = CompiledDense::build(&w, &b, QuantConfig::new(6, 10));
+        let pre = harness::bench("dense_fixed_compiled 100x32 @ 32x32", || {
+            harness::black_box(dense::dense_fixed_compiled(&x, &w, &site, act));
+        });
+        let per = harness::bench("dense_fixed (per-call lift) 100x32 @ 32x32", || {
+            harness::black_box(dense::dense_fixed(&x, &w, &b, act, data, accum));
+        });
+        harness::json_line(
+            "hotpath compiled dense",
+            &[("speedup_x", per.mean_ns / pre.mean_ns)],
+        );
+    }
+    let mut gated_compiled: Option<f64> = None;
+    for m in zoo() {
+        let w = synthetic_weights(&m.config, 9);
+        let fx = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 10));
+        let events: Vec<Mat> = (0..8)
+            .map(|_| {
+                Mat::from_vec(
+                    m.config.seq_len,
+                    m.config.input_size,
+                    g.normal_vec(m.config.seq_len * m.config.input_size, 1.0),
+                )
+            })
+            .collect();
+        let x = &events[0];
+        let c1 = harness::bench(&format!("forward compiled {}", m.config.name), || {
+            harness::black_box(fx.forward(x));
+        });
+        let p1 =
+            harness::bench(&format!("forward per-call lift {}", m.config.name), || {
+                harness::black_box(fx.forward_percall(x));
+            });
+        let refs: Vec<&Mat> = events.iter().collect();
+        let c8 = harness::bench(
+            &format!("forward_batch(8) compiled {}", m.config.name),
+            || {
+                harness::black_box(fx.forward_batch(&refs));
+            },
+        );
+        let p8 = harness::bench(
+            &format!("forward_batch(8) per-call lift {}", m.config.name),
+            || {
+                harness::black_box(fx.forward_batch_percall(&refs));
+            },
+        );
+        let b1 = p1.mean_ns / c1.mean_ns;
+        let b8 = p8.mean_ns / c8.mean_ns;
+        println!("    -> compiled-plan speedup {b1:.2}x (batch 1), {b8:.2}x (batch 8)");
+        harness::json_line(
+            &format!("hotpath compiled {}", m.config.name),
+            &[("speedup_x", b1), ("batch8_speedup_x", b8)],
+        );
+        if m.config.name == "gw" {
+            gated_compiled = Some(b1);
+        }
+    }
+    hotpath::force_f64_reference(cfg!(feature = "f64-reference"));
+    {
+        let pool = hotpath::tls_pool_stats();
+        harness::json_line(
+            "hotpath tls pool",
+            &[
+                ("high_water_ints", pool.high_water_ints as f64),
+                ("shrinks", pool.shrinks as f64),
+            ],
+        );
+    }
+    if let Ok(floor) = std::env::var("HOTPATH_ASSERT_COMPILED_SPEEDUP") {
+        let floor: f64 =
+            floor.parse().expect("HOTPATH_ASSERT_COMPILED_SPEEDUP must be a number");
+        let got = gated_compiled.expect("gw model must be in the zoo");
+        if got < floor {
+            eprintln!(
+                "FAIL: compiled-plan speedup {got:.2}x on gw (batch 1) is below \
+                 the required {floor:.2}x floor"
+            );
+            std::process::exit(1);
+        }
+        println!("    compiled speedup gate passed: {got:.2}x >= {floor:.2}x");
     }
 
     harness::section("coordinator primitives");

@@ -7,13 +7,22 @@
 //! * [`BackendKind::Pjrt`] — the AOT artifact through the PJRT CPU
 //!   client (the production serving path of this reproduction).
 //!
-//! Backends are not shared between threads: in a sharded worker pool
-//! each replica builds its own `Backend` (and, for PJRT, its own client)
-//! so pool scaling never serializes on a single inference engine.
+//! Backend *handles* are per-replica — in a sharded worker pool each
+//! replica owns its own `Backend` value (and, for PJRT, its own client)
+//! so pool scaling never serializes on a single inference engine — but
+//! the heavy HLS state is not duplicated: a [`FixedTransformer`] clone
+//! shares the site-quantized weights and the build-once
+//! [`CompiledModel`] artifact behind `Arc`s, so R replicas of one model
+//! hold R handles to one immutable compiled copy
+//! ([`Backend::from_hls_engine`], checked by pointer equality in the
+//! coordinator tests).
 
 use anyhow::{Context, Result};
+use std::sync::Arc;
 
-use crate::hls::{FixedTransformer, ParallelismPlan, PrecisionPlan, SynthesisReport};
+use crate::hls::{
+    CompiledModel, FixedTransformer, ParallelismPlan, PrecisionPlan, SynthesisReport,
+};
 use crate::models::config::{FinalActivation, ModelConfig};
 use crate::models::weights::Weights;
 use crate::nn::tensor::Mat;
@@ -107,6 +116,22 @@ impl Backend {
                 Backend::Pjrt { cfg: cfg.clone(), b1: load(1)?, bn: load(8)? }
             }
         })
+    }
+
+    /// Wrap an already-built HLS engine — the replica-shard path: the
+    /// server builds (and compiles) each model's engine once, then hands
+    /// every worker a cheap clone sharing the same `Arc<CompiledModel>`.
+    pub fn from_hls_engine(engine: FixedTransformer, par: ParallelismPlan) -> Self {
+        Backend::Hls { engine, par }
+    }
+
+    /// The HLS backend's compiled artifact (`None` for other kinds) —
+    /// replica sharing is observable as `Arc::ptr_eq` across backends.
+    pub fn compiled(&self) -> Option<&Arc<CompiledModel>> {
+        match self {
+            Backend::Hls { engine, .. } => Some(engine.compiled()),
+            _ => None,
+        }
     }
 
     pub fn kind(&self) -> BackendKind {
@@ -354,6 +379,35 @@ mod tests {
         for (e, got) in evs.iter().zip(&probs) {
             assert_eq!(got, &t.forward(e), "mixed-plan backend must match its engine");
         }
+    }
+
+    #[test]
+    fn replica_backends_share_one_compiled_artifact() {
+        // satellite: R replica shards of one model hold R handles to ONE
+        // immutable compiled copy — pointer equality, not just equal bits
+        let cfg = zoo_model("gw").unwrap().config;
+        let w = synthetic_weights(&cfg, 21);
+        let engine = FixedTransformer::with_plan(cfg.clone(), &w, uniform(&cfg, 6, 10));
+        let replicas: Vec<Backend> = (0..3)
+            .map(|_| Backend::from_hls_engine(engine.clone(), upar(&cfg)))
+            .collect();
+        let first = replicas[0].compiled().expect("hls backend has an artifact");
+        assert!(first.bytes() > 0);
+        for r in &replicas[1..] {
+            assert!(Arc::ptr_eq(first, r.compiled().unwrap()), "replicas must share");
+        }
+        // sharing is invisible to serving: every replica scores bitwise
+        // identically
+        let evs = events(&cfg, 2);
+        let refs: Vec<&Mat> = evs.iter().collect();
+        let want = replicas[0].infer(&refs).unwrap();
+        for r in &replicas[1..] {
+            assert_eq!(r.infer(&refs).unwrap(), want);
+        }
+        // non-HLS backends expose no artifact
+        let f = Backend::build(BackendKind::Float, &cfg, &w, &uniform(&cfg, 6, 10),
+                               &upar(&cfg), None, std::path::Path::new(".")).unwrap();
+        assert!(f.compiled().is_none());
     }
 
     #[test]

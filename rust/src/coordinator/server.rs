@@ -26,7 +26,9 @@ use super::spsc;
 use super::stats::PipelineStats;
 use crate::data::generator_for;
 use crate::data::gw::{Injection, StrainConfig, StrainStream};
-use crate::hls::{ParallelismPlan, PrecisionPlan, QuantConfig, ReuseFactor, SynthesisReport};
+use crate::hls::{
+    FixedTransformer, ParallelismPlan, PrecisionPlan, QuantConfig, ReuseFactor, SynthesisReport,
+};
 use crate::models::weights::{synthetic_weights, Weights};
 use crate::models::zoo::zoo_model;
 use crate::models::NnwFile;
@@ -158,6 +160,19 @@ impl Default for ServerConfig {
     }
 }
 
+/// Cost of the compile-once plan execution for one HLS pipeline: the
+/// plan's weight mantissas were lifted exactly once at resolution time,
+/// and every replica shard serves through that one immutable artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct CompiledInfo {
+    /// Wall time of the one `CompiledModel::build` for this model.
+    pub build_micros: u64,
+    /// Size of the shared artifact (weight tiles + bias rows + lifts).
+    pub bytes: usize,
+    /// How many replica shards share the single `Arc<CompiledModel>`.
+    pub replicas: usize,
+}
+
 /// Aggregated result of one server run.
 #[derive(Debug)]
 pub struct ServerReport {
@@ -166,6 +181,8 @@ pub struct ServerReport {
     /// parallelism plans synthesized at resolution time) — what the
     /// served engine *would* cost and achieve on the part.
     pub modeled_designs: HashMap<&'static str, SynthesisReport>,
+    /// Per-HLS-pipeline compile-once accounting (see [`CompiledInfo`]).
+    pub compiled: HashMap<&'static str, CompiledInfo>,
     /// Stream-mode ground truth: the injections each stream source
     /// planted (empty for event-mode pipelines).  Pair with the model's
     /// recorded `PipelineStats::windows` in `stream::analyze` for the
@@ -208,6 +225,16 @@ impl std::fmt::Display for ServerReport {
                     rep.latency_us,
                     rep.total.dsp,
                     rep.total.ff,
+                )?;
+            }
+            if let Some(ci) = self.compiled.get(m) {
+                writeln!(
+                    f,
+                    "  {m:8} compiled plan: built once in {} us, {:.1} KiB \
+                     shared by {} replica(s)",
+                    ci.build_micros,
+                    ci.bytes as f64 / 1024.0,
+                    ci.replicas,
                 )?;
             }
             writeln!(
@@ -280,6 +307,7 @@ impl TriggerServer {
         // thread: a failure past the first spawn would leak an entire
         // pool (workers blocked on rings nobody ever closes)
         let mut modeled_designs: HashMap<&'static str, SynthesisReport> = HashMap::new();
+        let mut compiled: HashMap<&'static str, CompiledInfo> = HashMap::new();
         let mut resolved = Vec::with_capacity(cfg.pipelines.len());
         for pc in &cfg.pipelines {
             let zoo = zoo_model(pc.model)
@@ -315,7 +343,10 @@ impl TriggerServer {
             }
             // the modeled FPGA design point of an HLS pipeline, reported
             // alongside the serving stats (computed once here, not per
-            // replica)
+            // replica).  The engine itself is also kept: the pool's
+            // replica shards clone it (Arc-shared weights + compiled
+            // plan) instead of re-lifting the weight mantissas R times.
+            let mut engine: Option<FixedTransformer> = None;
             if pc.backend == BackendKind::Hls {
                 // static plan verification gates the spawn: a plan the
                 // verifier flags as ERROR (saturating grid, degenerate
@@ -339,14 +370,19 @@ impl TriggerServer {
                         first.message
                     );
                 }
-                let engine = crate::hls::FixedTransformer::with_plan(
-                    mcfg.clone(),
-                    &weights,
-                    plan.clone(),
+                let e = FixedTransformer::with_plan(mcfg.clone(), &weights, plan.clone());
+                modeled_designs.insert(pc.model, e.synthesize(&par));
+                compiled.insert(
+                    pc.model,
+                    CompiledInfo {
+                        build_micros: e.compiled().build_micros(),
+                        bytes: e.compiled().bytes(),
+                        replicas: pc.replicas.max(1),
+                    },
                 );
-                modeled_designs.insert(pc.model, engine.synthesize(&par));
+                engine = Some(e);
             }
-            resolved.push((pc, mcfg, weights, plan, par));
+            resolved.push((pc, mcfg, weights, plan, par, engine));
         }
 
         let mut router = Router::new();
@@ -360,7 +396,7 @@ impl TriggerServer {
         let ready = Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
 
         // per-model worker pools
-        for (pc, mcfg, weights, plan, par) in resolved {
+        for (pc, mcfg, weights, plan, par, engine) in resolved {
             let replicas = pc.replicas.max(1);
             let mut shard_txs = Vec::with_capacity(replicas);
             for shard in 0..replicas {
@@ -371,6 +407,9 @@ impl TriggerServer {
                 let weights = weights.clone();
                 let plan = plan.clone();
                 let par = par.clone();
+                // cheap: Arc-shared weights + compiled artifact, so all
+                // R shards serve through ONE immutable copy
+                let engine = engine.clone();
                 let artifacts = cfg.artifacts_dir.clone();
                 let ready_w = ready.clone();
                 workers.push(std::thread::spawn(move || -> Result<(
@@ -383,6 +422,12 @@ impl TriggerServer {
                     // result is held until *after* the readiness signal
                     // so a failed replica can't deadlock the sources.
                     let built = (|| -> Result<(Option<Runtime>, Backend)> {
+                        // HLS: adopt the engine built once at resolution
+                        // time instead of re-lifting the plan's weight
+                        // mantissas per replica
+                        if let Some(engine) = engine {
+                            return Ok((None, Backend::from_hls_engine(engine, par.clone())));
+                        }
                         let runtime = if pc.backend == BackendKind::Pjrt {
                             Some(Runtime::cpu()?)
                         } else {
@@ -498,7 +543,7 @@ impl TriggerServer {
             stats.rebalanced = router.rebalanced(model).unwrap_or(0);
         }
 
-        Ok(ServerReport { per_model, modeled_designs, stream_truth, wall: t0.elapsed() })
+        Ok(ServerReport { per_model, modeled_designs, compiled, stream_truth, wall: t0.elapsed() })
     }
 }
 
@@ -821,6 +866,28 @@ mod tests {
     fn float_pipeline_reports_no_modeled_design() {
         let report = TriggerServer::run(&base_cfg(BackendKind::Float, 20)).unwrap();
         assert!(report.modeled_designs.is_empty());
+        assert!(report.compiled.is_empty(), "float pipelines compile nothing");
+        assert!(!format!("{report}").contains("compiled plan"));
+    }
+
+    #[test]
+    fn hls_pool_reports_the_shared_compiled_artifact() {
+        // the compile-once line of `repro serve`: build time + artifact
+        // size recorded at resolution, replica count of the pool that
+        // shares it (Arc sharing itself is asserted in backend.rs —
+        // `replica_backends_share_one_compiled_artifact`)
+        let mut cfg = base_cfg(BackendKind::Hls, 60);
+        cfg.pipelines[0].replicas = 3;
+        let report = TriggerServer::run(&cfg).unwrap();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted + s.dropped, 60);
+        assert_eq!(s.shards.len(), 3);
+        let ci = report.compiled.get("engine").expect("hls pipeline reports its artifact");
+        assert!(ci.bytes > 0, "artifact has weight tiles");
+        assert_eq!(ci.replicas, 3);
+        let text = format!("{report}");
+        assert!(text.contains("compiled plan: built once in"), "{text}");
+        assert!(text.contains("shared by 3 replica(s)"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,500 @@
+//! Compile-once execution artifact for one (weights, [`PrecisionPlan`])
+//! pair.
+//!
+//! The FPGA keeps weights *stationary* — only activations stream — yet
+//! the integer hot path used to re-lift every weight matrix, bias and
+//! LN affine onto the mantissa grid on every `forward` call, and every
+//! replica backend rebuilt its own copy.  A [`CompiledModel`] hoists all
+//! of that out of the per-call path: per site it owns the pre-lifted
+//! row-major **and** pre-transposed `i64` weight mantissa tiles, the
+//! quantized bias rows, the LN gamma/beta vectors, the prebuilt
+//! [`MantissaConv`]/[`MacQuantizer`] pairs, the shared exp/inv/invsqrt
+//! ROMs, and the *pure* part of the hotpath dispatch verdict.  The whole
+//! artifact is immutable plain data (`Send + Sync`), so the coordinator
+//! shares one copy across R replica shards behind an `Arc` instead of
+//! building R clones.
+//!
+//! Dispatch verdicts are stored as pure eligibility predicates
+//! (functions of specs and shapes only) and are ANDed with
+//! [`super::hotpath::f64_reference_forced`] at *call* time, so flipping
+//! the reference override still reroutes a compiled engine exactly like
+//! the per-call path.
+//!
+//! Bit-exactness contract: every compiled kernel consumes these tiles
+//! through the same requantizers and the same accumulation order as the
+//! per-call-lift kernels (or an order-only permutation of exact `i64`
+//! sums), so compiled `forward`/`forward_batch` are bitwise identical to
+//! the per-call path — property-tested in `transformer.rs` and pinned by
+//! the sealed golden corpus.
+
+use super::hotpath;
+use super::precision::{MhaPrecision, PrecisionPlan, QuantConfig};
+use crate::fixed::lut::{LutKind, Roms};
+use crate::fixed::mantissa::{f32_grid_exact, f64_sum_exact, int_mac_eligible};
+use crate::fixed::{FixedSpec, MacQuantizer, MantissaConv};
+use crate::models::config::ModelConfig;
+use crate::models::weights::{LnWeights, Weights};
+use crate::nn::tensor::Mat;
+
+/// One dense site, fully lifted: both tile layouts plus the site's
+/// conversion/requantization constants and its pure dispatch verdict.
+#[derive(Clone, Debug)]
+pub struct CompiledDense {
+    /// Row-major mantissa tile — same element order as `Mat::data()`,
+    /// consumed by the weight-stationary batched core.
+    wm: Vec<i64>,
+    /// Transposed tile (`wm_t[j * n_in + i] == wm[i * n_out + j]`):
+    /// output column `j` is contiguous, consumed by the single-event
+    /// dot-product core (register accumulation, no activation scatter).
+    wm_t: Vec<i64>,
+    /// Bias row on the site's data grid (already site-quantized).
+    bias: Vec<f32>,
+    n_in: usize,
+    n_out: usize,
+    conv: MantissaConv,
+    mq: MacQuantizer,
+    data: FixedSpec,
+    accum: FixedSpec,
+    /// Pure `int_mac_eligible(data, accum, n_in)` — AND with
+    /// `!f64_reference_forced()` per call.
+    int_eligible: bool,
+}
+
+impl CompiledDense {
+    /// Lift one site-quantized `(w, b)` onto the mantissa grid of `q`.
+    pub fn build(w: &Mat, b: &[f32], q: QuantConfig) -> Self {
+        assert_eq!(w.cols(), b.len());
+        let (n_in, n_out) = (w.rows(), w.cols());
+        let conv = MantissaConv::new(q.data);
+        let mut wm = vec![0i64; n_in * n_out];
+        for (dst, &src) in wm.iter_mut().zip(w.data()) {
+            *dst = conv.to_m(src);
+        }
+        let mut wm_t = vec![0i64; n_in * n_out];
+        for i in 0..n_in {
+            for j in 0..n_out {
+                wm_t[j * n_in + i] = wm[i * n_out + j];
+            }
+        }
+        Self {
+            wm,
+            wm_t,
+            bias: b.to_vec(),
+            n_in,
+            n_out,
+            conv,
+            mq: MacQuantizer::new(q.data, q.accum),
+            data: q.data,
+            accum: q.accum,
+            int_eligible: int_mac_eligible(q.data, q.accum, n_in),
+        }
+    }
+
+    /// Live dispatch verdict: the compiled pure predicate gated by the
+    /// process-wide reference override, exactly like
+    /// [`hotpath::int_path_enabled`] on the per-call path.
+    #[inline(always)]
+    pub fn use_int(&self) -> bool {
+        self.int_eligible && !hotpath::f64_reference_forced()
+    }
+
+    pub fn wm(&self) -> &[i64] {
+        &self.wm
+    }
+
+    pub fn wm_t(&self) -> &[i64] {
+        &self.wm_t
+    }
+
+    pub fn bias(&self) -> &[f32] {
+        &self.bias
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    pub fn conv(&self) -> MantissaConv {
+        self.conv
+    }
+
+    pub fn mq(&self) -> MacQuantizer {
+        self.mq
+    }
+
+    pub fn data(&self) -> FixedSpec {
+        self.data
+    }
+
+    pub fn accum(&self) -> FixedSpec {
+        self.accum
+    }
+
+    /// Artifact bytes of this site (both tiles + the bias row).
+    pub fn bytes(&self) -> usize {
+        (self.wm.len() + self.wm_t.len()) * std::mem::size_of::<i64>()
+            + self.bias.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// One LayerNorm site: the affine vectors plus the compiled verdict for
+/// the mean-sum/variance-MAC integer stages.
+#[derive(Clone, Debug)]
+pub struct CompiledLn {
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+    data: FixedSpec,
+    accum: FixedSpec,
+    /// Pure: variance MAC eligibility AND stage-1 mean-sum exactness for
+    /// the `d`-channel row.
+    int_eligible: bool,
+}
+
+impl CompiledLn {
+    pub fn build(ln: &LnWeights, q: QuantConfig) -> Self {
+        let d = ln.gamma.len();
+        Self {
+            gamma: ln.gamma.clone(),
+            beta: ln.beta.clone(),
+            data: q.data,
+            accum: q.accum,
+            int_eligible: int_mac_eligible(q.data, q.accum, d) && f64_sum_exact(q.data, d),
+        }
+    }
+
+    #[inline(always)]
+    pub fn use_int(&self) -> bool {
+        self.int_eligible && !hotpath::f64_reference_forced()
+    }
+
+    pub fn gamma(&self) -> &[f32] {
+        &self.gamma
+    }
+
+    pub fn beta(&self) -> &[f32] {
+        &self.beta
+    }
+
+    pub fn data(&self) -> FixedSpec {
+        self.data
+    }
+
+    pub fn accum(&self) -> FixedSpec {
+        self.accum
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.gamma.len() + self.beta.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// The shared softmax/sigmoid LUT-I/O site.  Softmax rows come in two
+/// lengths (MHA score rows and the final classifier), so the compiled
+/// verdict bakes the length-independent half (`f32_grid_exact`) and
+/// evaluates the trivial length check per call.
+#[derive(Clone, Copy, Debug)]
+pub struct CompiledSoftmax {
+    data: FixedSpec,
+    accum: FixedSpec,
+    grid_exact: bool,
+}
+
+impl CompiledSoftmax {
+    pub fn build(q: QuantConfig) -> Self {
+        Self { data: q.data, accum: q.accum, grid_exact: f32_grid_exact(q.data) }
+    }
+
+    /// Live verdict for a `len`-wide row — identical to
+    /// [`hotpath::int_sum_enabled`] on the per-call path.
+    #[inline(always)]
+    pub fn use_int(&self, len: usize) -> bool {
+        self.grid_exact
+            && f64_sum_exact(self.data, len)
+            && !hotpath::f64_reference_forced()
+    }
+
+    pub fn data(&self) -> FixedSpec {
+        self.data
+    }
+
+    pub fn accum(&self) -> FixedSpec {
+        self.accum
+    }
+}
+
+/// The global-average-pool site: sequence length is fixed per model, so
+/// the sum-exactness verdict is fully baked.
+#[derive(Clone, Copy, Debug)]
+pub struct CompiledPool {
+    data: FixedSpec,
+    accum: FixedSpec,
+    sum_eligible: bool,
+}
+
+impl CompiledPool {
+    pub fn build(q: QuantConfig, seq_len: usize) -> Self {
+        Self {
+            data: q.data,
+            accum: q.accum,
+            sum_eligible: f32_grid_exact(q.data) && f64_sum_exact(q.data, seq_len),
+        }
+    }
+
+    #[inline(always)]
+    pub fn use_int(&self) -> bool {
+        self.sum_eligible && !hotpath::f64_reference_forced()
+    }
+
+    pub fn data(&self) -> FixedSpec {
+        self.data
+    }
+
+    pub fn accum(&self) -> FixedSpec {
+        self.accum
+    }
+}
+
+/// One MHA engine: per-head Q/K/V projection tiles, the output
+/// projection tile, and the pure score/apply dispatch verdicts
+/// ([`super::mha::MhaHotPath`] re-derives its live verdicts from these).
+#[derive(Clone, Debug)]
+pub struct CompiledMha {
+    pub q: Vec<CompiledDense>,
+    pub k: Vec<CompiledDense>,
+    pub v: Vec<CompiledDense>,
+    pub out: CompiledDense,
+    p: MhaPrecision,
+    head_dim: usize,
+    /// Pure `int_mac_eligible(qkv.data, qkv.accum, head_dim)`.
+    score_eligible: bool,
+    /// Pure `f32_grid_exact(softmax.data) && f32_grid_exact(qkv.data)`.
+    apply_grid_exact: bool,
+}
+
+impl CompiledMha {
+    pub fn build(w: &crate::models::weights::MhaWeights, p: MhaPrecision) -> Self {
+        let k = w.wq[0].cols();
+        let lift = |ws: &[Mat], bs: &[Vec<f32>]| -> Vec<CompiledDense> {
+            ws.iter()
+                .zip(bs)
+                .map(|(wm, bm)| CompiledDense::build(wm, bm, p.qkv))
+                .collect()
+        };
+        Self {
+            q: lift(&w.wq, &w.bq),
+            k: lift(&w.wk, &w.bk),
+            v: lift(&w.wv, &w.bv),
+            out: CompiledDense::build(&w.wo, &w.bo, p.out),
+            p,
+            head_dim: k,
+            score_eligible: int_mac_eligible(p.qkv.data, p.qkv.accum, k),
+            apply_grid_exact: f32_grid_exact(p.softmax.data) && f32_grid_exact(p.qkv.data),
+        }
+    }
+
+    pub fn precision(&self) -> MhaPrecision {
+        self.p
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    pub fn score_eligible(&self) -> bool {
+        self.score_eligible
+    }
+
+    pub fn apply_grid_exact(&self) -> bool {
+        self.apply_grid_exact
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.q.iter().map(CompiledDense::bytes).sum::<usize>()
+            + self.k.iter().map(CompiledDense::bytes).sum::<usize>()
+            + self.v.iter().map(CompiledDense::bytes).sum::<usize>()
+            + self.out.bytes()
+    }
+}
+
+/// One transformer block of compiled sites.
+#[derive(Clone, Debug)]
+pub struct CompiledBlock {
+    pub mha: CompiledMha,
+    pub ln1: Option<CompiledLn>,
+    pub ffn1: CompiledDense,
+    pub ffn2: CompiledDense,
+    pub ln2: Option<CompiledLn>,
+}
+
+impl CompiledBlock {
+    pub fn bytes(&self) -> usize {
+        self.mha.bytes()
+            + self.ln1.as_ref().map_or(0, CompiledLn::bytes)
+            + self.ffn1.bytes()
+            + self.ffn2.bytes()
+            + self.ln2.as_ref().map_or(0, CompiledLn::bytes)
+    }
+}
+
+/// The full build-once artifact: every site lifted, the ROMs
+/// materialized, build cost and footprint recorded for the serving
+/// report.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    pub embed: CompiledDense,
+    pub blocks: Vec<CompiledBlock>,
+    pub head: CompiledDense,
+    pub out: CompiledDense,
+    pub pool: CompiledPool,
+    pub softmax: CompiledSoftmax,
+    pub roms: Roms,
+    build_micros: u64,
+    bytes: usize,
+}
+
+impl CompiledModel {
+    /// Lift every site of an already *site-quantized* weight set (the
+    /// output of [`super::precision::quantize_weights_sited`]) under
+    /// `plan`.  Built once per (weights, plan); `FixedTransformer`
+    /// clones share it behind an `Arc`.
+    pub fn build(cfg: &ModelConfig, qw: &Weights, plan: &PrecisionPlan) -> Self {
+        let t0 = std::time::Instant::now();
+        let blocks: Vec<CompiledBlock> = qw
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, blk)| {
+                let bp = plan.block(b);
+                CompiledBlock {
+                    mha: CompiledMha::build(&blk.mha, bp.mha(plan.softmax())),
+                    ln1: blk.ln1.as_ref().map(|l| CompiledLn::build(l, bp.ln1)),
+                    ffn1: CompiledDense::build(&blk.ffn1.0, &blk.ffn1.1, bp.ffn1),
+                    ffn2: CompiledDense::build(&blk.ffn2.0, &blk.ffn2.1, bp.ffn2),
+                    ln2: blk.ln2.as_ref().map(|l| CompiledLn::build(l, bp.ln2)),
+                }
+            })
+            .collect();
+        let embed = CompiledDense::build(&qw.embed.0, &qw.embed.1, plan.embed());
+        let head = CompiledDense::build(&qw.head.0, &qw.head.1, plan.head());
+        let out = CompiledDense::build(&qw.out.0, &qw.out.1, plan.out());
+        let rom_words: usize = [LutKind::Exp, LutKind::Inv, LutKind::InvSqrt]
+            .iter()
+            .map(|k| k.geometry().2)
+            .sum();
+        let bytes = embed.bytes()
+            + blocks.iter().map(CompiledBlock::bytes).sum::<usize>()
+            + head.bytes()
+            + out.bytes()
+            + rom_words * std::mem::size_of::<f32>();
+        Self {
+            embed,
+            blocks,
+            head,
+            out,
+            pool: CompiledPool::build(plan.pool(), cfg.seq_len),
+            softmax: CompiledSoftmax::build(plan.softmax()),
+            roms: Roms::new(),
+            build_micros: t0.elapsed().as_micros() as u64,
+            bytes,
+        }
+    }
+
+    /// Wall-clock microseconds the lift took (the cost `forward` used to
+    /// re-pay per call, now paid once).
+    pub fn build_micros(&self) -> u64 {
+        self.build_micros
+    }
+
+    /// Artifact footprint: mantissa tiles (both layouts), bias/affine
+    /// rows, and the ROM words.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::weights::synthetic_weights;
+    use crate::models::zoo::zoo;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn compiled_model_is_shareable_across_threads() {
+        // the whole point: one Arc<CompiledModel> serves R replica shards
+        assert_send_sync::<CompiledModel>();
+        assert_send_sync::<std::sync::Arc<CompiledModel>>();
+    }
+
+    #[test]
+    fn transposed_tile_is_the_row_major_tile_permuted() {
+        let models = zoo();
+        let cfg = &models[0].config;
+        let w = synthetic_weights(cfg, 11);
+        let plan = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 10));
+        let qw = super::super::precision::quantize_weights_sited(&w, &plan);
+        let cm = CompiledModel::build(cfg, &qw, &plan);
+        let d = &cm.embed;
+        assert_eq!(d.wm().len(), d.n_in() * d.n_out());
+        assert_eq!(d.wm_t().len(), d.wm().len());
+        for i in 0..d.n_in() {
+            for j in 0..d.n_out() {
+                assert_eq!(d.wm_t()[j * d.n_in() + i], d.wm()[i * d.n_out() + j]);
+            }
+        }
+        // and the row-major tile is the per-call lift of the same site
+        let conv = MantissaConv::new(plan.embed().data);
+        for (m, &src) in d.wm().iter().zip(qw.embed.0.data()) {
+            assert_eq!(*m, conv.to_m(src));
+        }
+    }
+
+    #[test]
+    fn verdicts_are_pure_and_match_the_hotpath_predicates() {
+        for m in zoo() {
+            let cfg = &m.config;
+            let w = synthetic_weights(cfg, 5);
+            let plan = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 10));
+            let qw = super::super::precision::quantize_weights_sited(&w, &plan);
+            let cm = CompiledModel::build(cfg, &qw, &plan);
+            let q = plan.embed();
+            assert_eq!(
+                cm.embed.int_eligible,
+                int_mac_eligible(q.data, q.accum, cfg.input_size),
+                "{}",
+                cfg.name
+            );
+            for blk in &cm.blocks {
+                assert_eq!(
+                    blk.mha.score_eligible(),
+                    int_mac_eligible(q.data, q.accum, cfg.head_dim)
+                );
+            }
+            assert_eq!(
+                cm.pool.use_int() || hotpath::f64_reference_forced(),
+                hotpath::int_sum_enabled(q.data, cfg.seq_len)
+                    || hotpath::f64_reference_forced()
+            );
+        }
+    }
+
+    #[test]
+    fn artifact_reports_nonzero_footprint() {
+        let models = zoo();
+        let cfg = &models[0].config;
+        let w = synthetic_weights(cfg, 8);
+        let plan = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 10));
+        let qw = super::super::precision::quantize_weights_sited(&w, &plan);
+        let cm = CompiledModel::build(cfg, &qw, &plan);
+        // at minimum: both embed tiles + ROMs
+        assert!(cm.bytes() > 2 * cfg.input_size * cfg.d_model * 8);
+        // bytes is a sum over all sites, so every block contributes
+        let per_block: usize = cm.blocks.iter().map(CompiledBlock::bytes).sum();
+        assert!(per_block > 0);
+    }
+}

@@ -2,6 +2,7 @@
 //! FFN/head layers): forward + pipeline + resources in one place.
 
 use super::calibration as cal;
+use super::compiled::CompiledDense;
 use super::hotpath;
 use super::pipeline::{adder_tree_depth, Stage};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
@@ -116,16 +117,40 @@ fn dense_int_core(
     xt: &mut [i64],
     acc: &mut [i64],
 ) {
-    let n_in = w.rows();
-    let n_out = w.cols();
+    let conv = MantissaConv::new(data);
+    for (dst, &src) in wm.iter_mut().zip(w.data()) {
+        *dst = conv.to_m(src);
+    }
+    dense_int_core_prelifted(
+        x, out, n, w.rows(), w.cols(), wm, b, act, data, accum, xt, acc,
+    );
+}
+
+/// [`dense_int_core`] past the weight lift: the tiled MAC loop over an
+/// already-lifted row-major mantissa tile `wm`.  The per-call-lift
+/// wrapper above and the compiled batched path
+/// ([`dense_fixed_batch_compiled`]) both land here, so the accumulation
+/// order — hence every output bit — is shared by construction.
+#[allow(clippy::too_many_arguments)]
+fn dense_int_core_prelifted(
+    x: &[f32],
+    out: &mut [f32],
+    n: usize,
+    n_in: usize,
+    n_out: usize,
+    wm: &[i64],
+    b: &[f32],
+    act: Activation,
+    data: FixedSpec,
+    accum: FixedSpec,
+    xt: &mut [i64],
+    acc: &mut [i64],
+) {
     let conv = MantissaConv::new(data);
     let mq = MacQuantizer::new(data, accum);
     let qa = crate::fixed::Quantizer::new(accum);
     let qd = crate::fixed::Quantizer::new(data);
     let step_a = accum.step();
-    for (dst, &src) in wm.iter_mut().zip(w.data()) {
-        *dst = conv.to_m(src);
-    }
     for r in 0..n {
         let xr = &x[r * n_in..(r + 1) * n_in];
         for (i, &v) in xr.iter().enumerate() {
@@ -305,6 +330,131 @@ pub fn dense_fixed_batch_ref(
         }
     }
     y
+}
+
+/// Single-event compiled dense core: register-accumulated dot products
+/// over the site's *transposed* mantissa tile (`wm_t[j*n_in + i]`, one
+/// contiguous weight column per output).  Compared to the tiled core
+/// this skips the per-call weight lift, the activation transpose
+/// scatter, and the accumulator tile's zero + read-modify-write
+/// traffic — the whole point of compiling the site.
+///
+/// Bit-exactness: each output `(r, j)` accumulates exactly the multiset
+/// of requantized products `mq.product(x_m[i], w_m[i][j])` in ascending
+/// `i`; `i64` addition is exact under `int_mac_eligible`, so regrouping
+/// the sum (8-lane chunks here, row-tile RMW in
+/// [`dense_int_core_prelifted`]) cannot change a bit.  The float
+/// epilogue is byte-for-byte the reference's.
+fn dense_int_dot_prelifted(
+    x: &[f32],
+    out: &mut [f32],
+    n: usize,
+    site: &CompiledDense,
+    act: Activation,
+    xm: &mut [i64],
+) {
+    let n_in = site.n_in();
+    let n_out = site.n_out();
+    let conv = site.conv();
+    let mq = site.mq();
+    let qa = crate::fixed::Quantizer::new(site.accum());
+    let qd = crate::fixed::Quantizer::new(site.data());
+    let step_a = site.accum().step();
+    // activation lift in natural row-major order (no transpose scatter)
+    for (dst, &src) in xm.iter_mut().zip(x) {
+        *dst = conv.to_m(src);
+    }
+    let wm_t = site.wm_t();
+    for r in 0..n {
+        let xr = &xm[r * n_in..(r + 1) * n_in];
+        let yr = &mut out[r * n_out..(r + 1) * n_out];
+        for (j, (o, &bias)) in yr.iter_mut().zip(site.bias()).enumerate() {
+            let wcol = &wm_t[j * n_in..(j + 1) * n_in];
+            let mut am = 0i64;
+            let mut xc = xr.chunks_exact(8);
+            let mut wc = wcol.chunks_exact(8);
+            for (xv, wv) in (&mut xc).zip(&mut wc) {
+                let mut lanes = 0i64;
+                for l in 0..8 {
+                    lanes += mq.product(xv[l], wv[l]);
+                }
+                am += lanes;
+            }
+            for (&xv, &wv) in xc.remainder().iter().zip(wc.remainder()) {
+                am += mq.product(xv, wv);
+            }
+            let s = qa.q(am as f64 * step_a + bias as f64);
+            *o = qd.q32(act.apply(s as f32));
+        }
+    }
+}
+
+/// Compiled per-event dense: [`dense_fixed`] with the weight lift and
+/// the eligibility predicate hoisted into a prebuilt [`CompiledDense`].
+/// `w` is consumed only by the f64 reference fallback (wide grids, the
+/// `f64-reference` override) — the integer path touches nothing but the
+/// compiled tiles and the activations.
+///
+/// Bitwise identical to `dense_fixed(x, w, site.bias(), act, ...)`:
+/// same dispatch verdict (the compiled pure predicate ANDed with the
+/// live reference override), same reference fallback, and an
+/// order-equivalent exact integer sum on the hot path.
+pub fn dense_fixed_compiled(
+    x: &Mat,
+    w: &Mat,
+    site: &CompiledDense,
+    act: Activation,
+) -> Mat {
+    assert_eq!(x.cols(), site.n_in());
+    assert_eq!(w.rows(), site.n_in());
+    if site.use_int() {
+        let n = x.rows();
+        let mut y = Mat::zeros(n, site.n_out());
+        let mut xm = hotpath::tls_take_ints(n * site.n_in());
+        dense_int_dot_prelifted(x.data(), y.data_mut(), n, site, act, &mut xm);
+        hotpath::tls_put_ints(xm);
+        return y;
+    }
+    dense_fixed_ref(x, w, site.bias(), act, site.data(), site.accum())
+}
+
+/// Compiled batched dense: the weight-stationary tiled core over the
+/// site's pre-lifted row-major tile — [`dense_fixed_batch`] minus the
+/// per-call weight lift.  Bitwise identical to it (the two share
+/// [`dense_int_core_prelifted`] and the reference fallback).
+pub fn dense_fixed_batch_compiled(
+    x: &Mat3,
+    w: &Mat,
+    site: &CompiledDense,
+    act: Activation,
+    scratch: &mut Scratch,
+) -> Mat3 {
+    assert_eq!(x.cols(), site.n_in());
+    assert_eq!(w.rows(), site.n_in());
+    if site.use_int() {
+        let n = x.flat_rows();
+        let mut y = Mat3::zeros(x.batch(), x.rows(), site.n_out());
+        let mut xt = scratch.take_ints(n * site.n_in());
+        let mut acc = scratch.take_ints(n * site.n_out());
+        dense_int_core_prelifted(
+            x.data(),
+            y.data_mut(),
+            n,
+            site.n_in(),
+            site.n_out(),
+            site.wm(),
+            site.bias(),
+            act,
+            site.data(),
+            site.accum(),
+            &mut xt,
+            &mut acc,
+        );
+        scratch.put_ints(acc);
+        scratch.put_ints(xt);
+        return y;
+    }
+    dense_fixed_batch_ref(x, w, site.bias(), act, site.data(), site.accum(), scratch)
 }
 
 /// Pipeline stage of a dense engine streaming `rows` rows, at one site's
@@ -550,6 +700,86 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// Compiled-artifact contract: the prelifted kernels (single-event
+    /// transposed dot core, batched prelifted tiled core) are bitwise
+    /// identical to the per-call-lift dispatch path over random eligible
+    /// specs — in every build, including `f64-reference` (where both
+    /// sides take the same reference fallback).
+    #[test]
+    fn prop_compiled_dense_bitwise_matches_per_call_lift() {
+        use crate::hls::QuantConfig;
+        Prop::new("compiled dense == per-call lift").runs(200).check(|g| {
+            let data = g.fixed_spec();
+            let accum = data.accum();
+            let (bsz, rows, cin, cout) =
+                (g.usize_in(1, 4), g.usize_in(1, 6), g.usize_in(1, 20), g.usize_in(1, 12));
+            let w = Mat::from_vec(cin, cout, g.normal_vec(cin * cout, 0.8))
+                .map(|v| data.quantize(v));
+            let b: Vec<f32> =
+                g.normal_vec(cout, 0.3).iter().map(|&v| data.quantize(v)).collect();
+            let site = CompiledDense::build(&w, &b, QuantConfig { data, accum });
+            let events: Vec<Mat> = (0..bsz)
+                .map(|_| {
+                    Mat::from_vec(rows, cin, g.normal_vec(rows * cin, 2.0))
+                        .map(|v| data.quantize(v))
+                })
+                .collect();
+            let refs: Vec<&Mat> = events.iter().collect();
+            let x3 = Mat3::from_events(&refs);
+            let mut scratch = Scratch::new();
+            for act in [Activation::Linear, Activation::Relu, Activation::Sigmoid] {
+                let bc = dense_fixed_batch_compiled(&x3, &w, &site, act, &mut scratch);
+                let bl = dense_fixed_batch(&x3, &w, &b, act, data, accum, &mut scratch);
+                assert_eq!(bc.data(), bl.data(), "{data} batch {act:?}");
+                for (i, e) in events.iter().enumerate() {
+                    let pc = dense_fixed_compiled(e, &w, &site, act);
+                    let pl = dense_fixed(e, &w, &b, act, data, accum);
+                    assert_eq!(pc, pl, "{data} per-event {act:?} event {i}");
+                }
+            }
+        });
+    }
+
+    /// Compiled rails: integer-only grids whose products slam the
+    /// accumulator saturation, through both compiled cores.
+    #[test]
+    fn compiled_dense_saturation_matches_per_call_lift() {
+        use crate::hls::QuantConfig;
+        for data in [FixedSpec::new(8, 8), FixedSpec::new(10, 9)] {
+            let accum = data.accum();
+            let mut g = Gen::new(0xC0DE);
+            let x = Mat::from_vec(5, 7, g.normal_vec(35, 80.0)).map(|v| data.quantize(v));
+            let w = Mat::from_vec(7, 4, g.normal_vec(28, 80.0)).map(|v| data.quantize(v));
+            let b: Vec<f32> =
+                g.normal_vec(4, 40.0).iter().map(|&v| data.quantize(v)).collect();
+            let site = CompiledDense::build(&w, &b, QuantConfig { data, accum });
+            let pc = dense_fixed_compiled(&x, &w, &site, Activation::Linear);
+            let pl = dense_fixed(&x, &w, &b, Activation::Linear, data, accum);
+            assert_eq!(pc, pl, "{data}");
+            let x3 = Mat3::from_events(&[&x, &x]);
+            let mut scratch = Scratch::new();
+            let bc = dense_fixed_batch_compiled(&x3, &w, &site, Activation::Linear, &mut scratch);
+            assert_eq!(bc.event(0), pl, "{data} batch");
+        }
+    }
+
+    /// The compiled entry must take the reference fallback on wide grids
+    /// (pure predicate false) — same bits as `_ref` by construction.
+    #[test]
+    fn compiled_dense_falls_back_on_wide_grids() {
+        use crate::hls::QuantConfig;
+        let wide = FixedSpec::new(32, 12);
+        let mut g = Gen::new(7);
+        let x = Mat::from_vec(3, 8, g.normal_vec(24, 1.0));
+        let w = Mat::from_vec(8, 5, g.normal_vec(40, 0.5));
+        let b = g.normal_vec(5, 0.1);
+        let site = CompiledDense::build(&w, &b, QuantConfig::from_spec(wide));
+        assert!(!site.use_int(), "wide grid must compile an ineligible verdict");
+        let via_compiled = dense_fixed_compiled(&x, &w, &site, Activation::Relu);
+        let via_ref = dense_fixed_ref(&x, &w, &b, Activation::Relu, wide, wide.accum());
+        assert_eq!(via_compiled, via_ref);
     }
 
     /// Satellite edge cases at the lane limits: integer-only grids whose

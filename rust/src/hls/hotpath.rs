@@ -24,7 +24,7 @@
 use crate::fixed::mantissa;
 use crate::fixed::FixedSpec;
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 static FORCE_REF: AtomicBool = AtomicBool::new(cfg!(feature = "f64-reference"));
 
@@ -65,13 +65,49 @@ thread_local! {
         RefCell::new(super::scratch::Scratch::new());
 }
 
+/// Per-tile retention cap for the thread-local pool, in `i64` words
+/// (512 KiB).  Every steady-state tile in the zoo is far below this;
+/// an oversized one-off request (a huge ad-hoc batch) still succeeds,
+/// but its allocation is trimmed back to the cap on return instead of
+/// pinning the high-water footprint for the rest of the thread's life.
+pub const TLS_TILE_CAP: usize = 1 << 16;
+
+static TLS_HIGH_WATER: AtomicUsize = AtomicUsize::new(0);
+static TLS_SHRINKS: AtomicUsize = AtomicUsize::new(0);
+
+/// Lifetime counters for the tile pool, aggregated over all threads:
+/// the largest tile ever requested and how many oversized returns were
+/// shrunk back to [`TLS_TILE_CAP`].  Monotone — the bench harness
+/// reports them per run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub high_water_ints: usize,
+    pub shrinks: usize,
+}
+
+/// Snapshot the pool counters (see [`PoolStats`]).
+pub fn tls_pool_stats() -> PoolStats {
+    PoolStats {
+        high_water_ints: TLS_HIGH_WATER.load(Ordering::Relaxed),
+        shrinks: TLS_SHRINKS.load(Ordering::Relaxed),
+    }
+}
+
 /// Take a zero-filled `i64` tile from the thread-local pool.
 pub(crate) fn tls_take_ints(n: usize) -> Vec<i64> {
+    TLS_HIGH_WATER.fetch_max(n, Ordering::Relaxed);
     TLS_SCRATCH.with(|s| s.borrow_mut().take_ints(n))
 }
 
-/// Return a tile taken with [`tls_take_ints`] for reuse.
-pub(crate) fn tls_put_ints(v: Vec<i64>) {
+/// Return a tile taken with [`tls_take_ints`] for reuse.  Allocations
+/// beyond [`TLS_TILE_CAP`] are released here (`truncate` first —
+/// `shrink_to` never drops below the length).
+pub(crate) fn tls_put_ints(mut v: Vec<i64>) {
+    if v.capacity() > TLS_TILE_CAP {
+        v.truncate(TLS_TILE_CAP);
+        v.shrink_to(TLS_TILE_CAP);
+        TLS_SHRINKS.fetch_add(1, Ordering::Relaxed);
+    }
     TLS_SCRATCH.with(|s| s.borrow_mut().put_ints(v));
 }
 
@@ -98,6 +134,21 @@ mod tests {
     fn wide_grids_fall_back() {
         let wide = FixedSpec::new(32, 12);
         assert!(!mantissa::int_mac_eligible(wide, wide.accum(), 8));
+    }
+
+    #[test]
+    fn oversized_tiles_are_shrunk_on_put() {
+        let before = tls_pool_stats();
+        let t = tls_take_ints(TLS_TILE_CAP + 1000);
+        assert!(t.capacity() > TLS_TILE_CAP);
+        tls_put_ints(t);
+        let after = tls_pool_stats();
+        assert!(after.shrinks > before.shrinks, "shrink not counted");
+        assert!(after.high_water_ints >= TLS_TILE_CAP + 1000);
+        // the retained allocation is back under the cap
+        let t2 = tls_take_ints(8);
+        assert!(t2.capacity() <= TLS_TILE_CAP, "cap {} retained", t2.capacity());
+        tls_put_ints(t2);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! mean -> deviation -> variance -> ROM 1/sqrt(var) -> gamma/beta.
 
 use super::calibration as cal;
+use super::compiled::CompiledLn;
 use super::hotpath;
 use super::pipeline::{adder_tree_depth, Stage};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
@@ -32,6 +33,20 @@ pub fn layernorm_fixed_row(
         return layernorm_fixed_row_int(row, gamma, beta, roms, data, accum);
     }
     layernorm_fixed_row_ref(row, gamma, beta, roms, data, accum);
+}
+
+/// [`layernorm_fixed_row`] through a prebuilt [`CompiledLn`] site: the
+/// dispatch verdict comes from the artifact (ANDed with the live
+/// reference override) instead of being re-derived per row, and the
+/// gamma/beta rows are the artifact's copies.  **Bitwise identical** to
+/// the dispatcher at the site's specs.
+pub fn layernorm_fixed_row_compiled(row: &mut [f32], site: &CompiledLn, roms: &Roms) {
+    if site.use_int() {
+        return layernorm_fixed_row_int(
+            row, site.gamma(), site.beta(), roms, site.data(), site.accum(),
+        );
+    }
+    layernorm_fixed_row_ref(row, site.gamma(), site.beta(), roms, site.data(), site.accum());
 }
 
 /// The f64 reference path of [`layernorm_fixed_row`] — semantic ground
@@ -157,6 +172,17 @@ pub fn layernorm_fixed_batch(
 ) {
     for i in 0..x.flat_rows() {
         layernorm_fixed_row(x.flat_row_mut(i), gamma, beta, roms, data, accum);
+    }
+}
+
+/// Batched twin of [`layernorm_fixed_row_compiled`].
+pub fn layernorm_fixed_batch_compiled(
+    x: &mut crate::nn::tensor::Mat3,
+    site: &CompiledLn,
+    roms: &Roms,
+) {
+    for i in 0..x.flat_rows() {
+        layernorm_fixed_row_compiled(x.flat_row_mut(i), site, roms);
     }
 }
 
@@ -294,6 +320,29 @@ mod tests {
             layernorm_fixed_row_int(&mut got, &gamma, &beta, &roms, data, accum);
             assert_eq!(got, want, "{data} k={k}");
         });
+    }
+
+    #[test]
+    fn compiled_layernorm_bitwise_matches_dispatcher() {
+        use crate::hls::QuantConfig;
+        use crate::models::weights::LnWeights;
+        let roms = Roms::new();
+        let mut g = Gen::new(7);
+        let k = 24;
+        let gamma = g.normal_vec(k, 1.0);
+        let beta = g.normal_vec(k, 0.5);
+        let ln = LnWeights { gamma: gamma.clone(), beta: beta.clone() };
+        // one int-eligible grid, one wide grid that must fall back
+        for data in [FixedSpec::new(14, 6), FixedSpec::new(32, 12)] {
+            let accum = data.accum();
+            let site = CompiledLn::build(&ln, QuantConfig { data, accum });
+            let row: Vec<f32> = g.normal_vec(k, 1.5);
+            let mut want = row.clone();
+            layernorm_fixed_row(&mut want, &gamma, &beta, &roms, data, accum);
+            let mut got = row;
+            layernorm_fixed_row_compiled(&mut got, &site, &roms);
+            assert_eq!(got, want, "{data}");
+        }
     }
 
     #[test]

@@ -13,7 +13,11 @@
 //! The FIFO traffic is real (the functional sim pushes/pops rows), so the
 //! BRAM estimate uses observed high-water marks, not guesses.
 
-use super::dense::{dense_fixed, dense_fixed_batch, dense_resources, dense_stage};
+use super::compiled::CompiledMha;
+use super::dense::{
+    dense_fixed, dense_fixed_batch, dense_fixed_batch_compiled, dense_fixed_compiled,
+    dense_resources, dense_stage,
+};
 use super::fifo::Fifo;
 use super::hotpath;
 use super::parallelism::MhaParallelism;
@@ -208,14 +212,25 @@ struct MhaHotPath {
 
 impl MhaHotPath {
     fn new(p: &MhaPrecision, k: usize) -> Self {
-        Self {
-            // QK^T is a k-term MAC on the qkv grid — the dense predicate
-            use_int_score: hotpath::int_path_enabled(p.qkv.data, p.qkv.accum, k),
-            // apply-V is guarded per row (f32 reference accumulation),
-            // so the static gate only needs both operand grids f32-exact
-            use_int_apply: !hotpath::f64_reference_forced()
-                && mantissa::f32_grid_exact(p.softmax.data)
+        // QK^T is a k-term MAC on the qkv grid — the dense predicate;
+        // apply-V is guarded per row (f32 reference accumulation), so
+        // its static gate only needs both operand grids f32-exact
+        Self::with_verdicts(
+            p,
+            mantissa::int_mac_eligible(p.qkv.data, p.qkv.accum, k),
+            mantissa::f32_grid_exact(p.softmax.data)
                 && mantissa::f32_grid_exact(p.qkv.data),
+        )
+    }
+
+    /// Build from precomputed *pure* verdicts (the compiled artifact
+    /// stores exactly these), ANDing in the live reference override so
+    /// compiled and per-call dispatch can never disagree.
+    fn with_verdicts(p: &MhaPrecision, score_eligible: bool, apply_grid_exact: bool) -> Self {
+        let forced = hotpath::f64_reference_forced();
+        Self {
+            use_int_score: score_eligible && !forced,
+            use_int_apply: apply_grid_exact && !forced,
             conv_qkv: MantissaConv::new(p.qkv.data),
             mq_score: MacQuantizer::new(p.qkv.data, p.qkv.accum),
             step_qkv_a: p.qkv.accum.step(),
@@ -226,6 +241,10 @@ impl MhaHotPath {
             ),
             step_out_a: p.out.accum.step(),
         }
+    }
+
+    fn from_compiled(cm: &CompiledMha) -> Self {
+        Self::with_verdicts(&cm.precision(), cm.score_eligible(), cm.apply_grid_exact())
     }
 
     /// Convert a K or V block to mantissas into `dst` (sized by the
@@ -269,7 +288,34 @@ pub fn mha_fixed_sited(
     w: &MhaWeights,
     roms: &Roms,
     p: &MhaPrecision,
+    rec: Option<(&str, &mut RangeProfile)>,
+) -> (Mat, MhaFifoStats) {
+    mha_fixed_sited_inner(x, w, roms, p, rec, None)
+}
+
+/// Per-event MHA through a prebuilt [`CompiledMha`]: all `3*heads + 1`
+/// projection sites use their pre-lifted mantissa tiles (activation
+/// lifts only per call), dispatch comes from the artifact's stored
+/// verdicts.  **Bitwise identical** to [`mha_fixed_sited`] at the
+/// artifact's precision.
+pub fn mha_fixed_sited_compiled(
+    x: &Mat,
+    w: &MhaWeights,
+    cm: &CompiledMha,
+    roms: &Roms,
+    rec: Option<(&str, &mut RangeProfile)>,
+) -> (Mat, MhaFifoStats) {
+    let p = cm.precision();
+    mha_fixed_sited_inner(x, w, roms, &p, rec, Some(cm))
+}
+
+fn mha_fixed_sited_inner(
+    x: &Mat,
+    w: &MhaWeights,
+    roms: &Roms,
+    p: &MhaPrecision,
     mut rec: Option<(&str, &mut RangeProfile)>,
+    cm: Option<&CompiledMha>,
 ) -> (Mat, MhaFifoStats) {
     let s = x.rows();
     let heads = w.wq.len();
@@ -279,16 +325,28 @@ pub fn mha_fixed_sited(
     let qd_sm = crate::fixed::Quantizer::new(p.softmax.data);
     let qa_out = crate::fixed::Quantizer::new(p.out.accum);
     let qd_out = crate::fixed::Quantizer::new(p.out.data);
-    let hp = MhaHotPath::new(p, k);
+    let hp = match cm {
+        Some(c) => MhaHotPath::from_compiled(c),
+        None => MhaHotPath::new(p, k),
+    };
     let mut stats = MhaFifoStats::default();
 
     let mut head_outputs: Vec<Fifo<Vec<f32>>> = Vec::with_capacity(heads);
     for h in 0..heads {
         // ---- stage 1: projections --------------------------------------
         // Q rows stream through a FIFO; K/V are register-partitioned.
-        let q = dense_fixed(x, &w.wq[h], &w.bq[h], Activation::Linear, p.qkv.data, p.qkv.accum);
-        let km = dense_fixed(x, &w.wk[h], &w.bk[h], Activation::Linear, p.qkv.data, p.qkv.accum);
-        let vm = dense_fixed(x, &w.wv[h], &w.bv[h], Activation::Linear, p.qkv.data, p.qkv.accum);
+        let (q, km, vm) = match cm {
+            Some(c) => (
+                dense_fixed_compiled(x, &w.wq[h], &c.q[h], Activation::Linear),
+                dense_fixed_compiled(x, &w.wk[h], &c.k[h], Activation::Linear),
+                dense_fixed_compiled(x, &w.wv[h], &c.v[h], Activation::Linear),
+            ),
+            None => (
+                dense_fixed(x, &w.wq[h], &w.bq[h], Activation::Linear, p.qkv.data, p.qkv.accum),
+                dense_fixed(x, &w.wk[h], &w.bk[h], Activation::Linear, p.qkv.data, p.qkv.accum),
+                dense_fixed(x, &w.wv[h], &w.bv[h], Activation::Linear, p.qkv.data, p.qkv.accum),
+            ),
+        };
         if let Some((prefix, prof)) = rec.as_mut() {
             let site = format!("{prefix}.mha.qkv");
             prof.record(&site, q.data());
@@ -358,7 +416,10 @@ pub fn mha_fixed_sited(
             concat.row_mut(r)[h * k..(h + 1) * k].copy_from_slice(&row);
         }
     }
-    let out = dense_fixed(&concat, &w.wo, &w.bo, Activation::Linear, p.out.data, p.out.accum);
+    let out = match cm {
+        Some(c) => dense_fixed_compiled(&concat, &w.wo, &c.out, Activation::Linear),
+        None => dense_fixed(&concat, &w.wo, &w.bo, Activation::Linear, p.out.data, p.out.accum),
+    };
     if let Some((prefix, prof)) = rec.as_mut() {
         let site = format!("{prefix}.mha.out");
         prof.record(&site, concat.data()); // apply-V outputs live here too
@@ -403,6 +464,31 @@ pub fn mha_fixed_batch_sited(
     p: &MhaPrecision,
     scratch: &mut Scratch,
 ) -> (Mat3, MhaFifoStats) {
+    mha_fixed_batch_sited_inner(x, w, roms, p, scratch, None)
+}
+
+/// Batched MHA through a prebuilt [`CompiledMha`] — the batch-major twin
+/// of [`mha_fixed_sited_compiled`], **bitwise identical** to
+/// [`mha_fixed_batch_sited`] at the artifact's precision.
+pub fn mha_fixed_batch_sited_compiled(
+    x: &Mat3,
+    w: &MhaWeights,
+    cm: &CompiledMha,
+    roms: &Roms,
+    scratch: &mut Scratch,
+) -> (Mat3, MhaFifoStats) {
+    let p = cm.precision();
+    mha_fixed_batch_sited_inner(x, w, roms, &p, scratch, Some(cm))
+}
+
+fn mha_fixed_batch_sited_inner(
+    x: &Mat3,
+    w: &MhaWeights,
+    roms: &Roms,
+    p: &MhaPrecision,
+    scratch: &mut Scratch,
+    cm: Option<&CompiledMha>,
+) -> (Mat3, MhaFifoStats) {
     let (bsz, s) = (x.batch(), x.rows());
     let heads = w.wq.len();
     let k = w.wq[0].cols();
@@ -411,18 +497,30 @@ pub fn mha_fixed_batch_sited(
     let qd_sm = crate::fixed::Quantizer::new(p.softmax.data);
     let qa_out = crate::fixed::Quantizer::new(p.out.accum);
     let qd_out = crate::fixed::Quantizer::new(p.out.data);
-    let hp = MhaHotPath::new(p, k);
+    let hp = match cm {
+        Some(c) => MhaHotPath::from_compiled(c),
+        None => MhaHotPath::new(p, k),
+    };
 
     let mut concat = Mat3::zeros(bsz, s, heads * k);
     let mut score_row = scratch.take_row(s);
     for h in 0..heads {
         // ---- stage 1: projections, one weight pass per matrix --------
-        let q = dense_fixed_batch(x, &w.wq[h], &w.bq[h], Activation::Linear,
-                                  p.qkv.data, p.qkv.accum, scratch);
-        let km = dense_fixed_batch(x, &w.wk[h], &w.bk[h], Activation::Linear,
-                                   p.qkv.data, p.qkv.accum, scratch);
-        let vm = dense_fixed_batch(x, &w.wv[h], &w.bv[h], Activation::Linear,
-                                   p.qkv.data, p.qkv.accum, scratch);
+        let (q, km, vm) = match cm {
+            Some(c) => (
+                dense_fixed_batch_compiled(x, &w.wq[h], &c.q[h], Activation::Linear, scratch),
+                dense_fixed_batch_compiled(x, &w.wk[h], &c.k[h], Activation::Linear, scratch),
+                dense_fixed_batch_compiled(x, &w.wv[h], &c.v[h], Activation::Linear, scratch),
+            ),
+            None => (
+                dense_fixed_batch(x, &w.wq[h], &w.bq[h], Activation::Linear,
+                                  p.qkv.data, p.qkv.accum, scratch),
+                dense_fixed_batch(x, &w.wk[h], &w.bk[h], Activation::Linear,
+                                  p.qkv.data, p.qkv.accum, scratch),
+                dense_fixed_batch(x, &w.wv[h], &w.bv[h], Activation::Linear,
+                                  p.qkv.data, p.qkv.accum, scratch),
+            ),
+        };
         // K/V mantissa hoist, one pass per head; max|v_m| is tracked
         // per event so the apply-V row guard sees exactly the values
         // the per-event path would
@@ -470,8 +568,11 @@ pub fn mha_fixed_batch_sited(
     scratch.put_row(score_row);
 
     // ---- stage 4: output projection, one weight pass -----------------
-    let out = dense_fixed_batch(&concat, &w.wo, &w.bo, Activation::Linear,
-                                p.out.data, p.out.accum, scratch);
+    let out = match cm {
+        Some(c) => dense_fixed_batch_compiled(&concat, &w.wo, &c.out, Activation::Linear, scratch),
+        None => dense_fixed_batch(&concat, &w.wo, &w.bo, Activation::Linear,
+                                  p.out.data, p.out.accum, scratch),
+    };
     let stats = MhaFifoStats {
         q_high_water: s,
         score_high_water: s,
@@ -754,6 +855,49 @@ mod tests {
             for &v in per_event.data() {
                 assert_eq!(v, p.out.data.quantize(v));
             }
+        }
+    }
+
+    #[test]
+    fn compiled_mha_bitwise_matches_per_call_lift() {
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 11).blocks[0].mha.clone();
+        let roms = Roms::new();
+        let mut g = Gen::new(44);
+        let plans = [
+            MhaPrecision::uniform(QuantConfig::from_spec(FixedSpec::new(16, 6))),
+            MhaPrecision {
+                qkv: QuantConfig::from_spec(FixedSpec::new(14, 5)),
+                out: QuantConfig::from_spec(FixedSpec::new(11, 4)),
+                softmax: QuantConfig::from_spec(FixedSpec::new(10, 3)),
+            },
+            // a wide grid that fails the int-MAC predicate: the compiled
+            // path must fall back to the reference bit-for-bit too
+            MhaPrecision::uniform(QuantConfig::from_spec(FixedSpec::new(32, 12))),
+        ];
+        for p in &plans {
+            let cm = CompiledMha::build(&w, *p);
+            let events: Vec<Mat> = (0..3)
+                .map(|_| {
+                    Mat::from_vec(
+                        m.config.seq_len,
+                        m.config.d_model,
+                        g.normal_vec(m.config.seq_len * m.config.d_model, 0.7),
+                    )
+                })
+                .collect();
+            for e in &events {
+                let (want, _) = mha_fixed_sited(e, &w, &roms, p, None);
+                let (got, _) = mha_fixed_sited_compiled(e, &w, &cm, &roms, None);
+                assert_eq!(got, want);
+            }
+            let refs: Vec<&Mat> = events.iter().collect();
+            let x3 = Mat3::from_events(&refs);
+            let mut scratch = Scratch::new();
+            let (want_b, _) = mha_fixed_batch_sited(&x3, &w, &roms, p, &mut scratch);
+            let (got_b, _) =
+                mha_fixed_batch_sited_compiled(&x3, &w, &cm, &roms, &mut scratch);
+            assert_eq!(got_b, want_b);
         }
     }
 

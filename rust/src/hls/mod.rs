@@ -28,7 +28,11 @@
 //! [`crate::fixed::mantissa`] predicates prove it bit-identical for the
 //! site's specs, else the retained f64 grid-projection reference — the
 //! `f64-reference` Cargo feature pins every kernel to the latter so CI
-//! can cross-seal the two against the same golden corpus.
+//! can cross-seal the two against the same golden corpus.  Weight-side
+//! lift work is hoisted out of the per-call path entirely by the
+//! [`compiled`] artifact: a [`CompiledModel`] built once per
+//! (weights, plan) owns every site's mantissa tiles and dispatch
+//! verdicts, and is shared across replica shards behind an `Arc`.
 //!
 //! Parallelism is governed per layer *site* by a [`ParallelismPlan`]
 //! ([`parallelism`]): every stage builder receives its own site's
@@ -38,6 +42,7 @@
 //! schedule instead of a fitted formula.
 
 pub mod calibration;
+pub mod compiled;
 pub mod dense;
 pub mod fifo;
 pub mod hotpath;
@@ -54,6 +59,7 @@ pub mod scratch;
 pub mod softmax;
 pub mod transformer;
 
+pub use compiled::{CompiledDense, CompiledModel};
 pub use parallelism::{
     load_reuse_plan_file, BlockParallelism, MhaParallelism, ParallelismPlan,
 };

@@ -1,5 +1,6 @@
 //! Fixed-point global-average pooling + the softmax/sigmoid output heads.
 
+use super::compiled::CompiledPool;
 use super::hotpath;
 use super::pipeline::{adder_tree_depth, Stage};
 use super::resources::Resources;
@@ -22,6 +23,20 @@ pub fn global_average_pool_fixed(x: &Mat, data: FixedSpec, accum: FixedSpec) -> 
         return out;
     }
     global_average_pool_fixed_ref(x, data, accum)
+}
+
+/// [`global_average_pool_fixed`] through a prebuilt [`CompiledPool`]
+/// site: the sum-exactness verdict (a function of the grid and the
+/// sequence length the artifact was compiled for) is read from the
+/// artifact instead of re-derived.  **Bitwise identical** to the
+/// dispatcher when `x.rows()` matches the compiled sequence length.
+pub fn global_average_pool_fixed_compiled(x: &Mat, site: &CompiledPool) -> Mat {
+    if site.use_int() {
+        let mut out = Mat::zeros(1, x.cols());
+        pool_int_core(x.data(), out.data_mut(), x.rows(), x.cols(), site.data(), site.accum());
+        return out;
+    }
+    global_average_pool_fixed_ref(x, site.data(), site.accum())
 }
 
 /// The f64 reference path of [`global_average_pool_fixed`].
@@ -84,6 +99,25 @@ pub fn global_average_pool_fixed_batch(x: &Mat3, data: FixedSpec, accum: FixedSp
         return out;
     }
     global_average_pool_fixed_batch_ref(x, data, accum)
+}
+
+/// Batched twin of [`global_average_pool_fixed_compiled`].
+pub fn global_average_pool_fixed_batch_compiled(x: &Mat3, site: &CompiledPool) -> Mat3 {
+    if site.use_int() {
+        let mut out = Mat3::zeros(x.batch(), 1, x.cols());
+        for b in 0..x.batch() {
+            pool_int_core(
+                x.event_slice(b),
+                out.event_row_mut(b, 0),
+                x.rows(),
+                x.cols(),
+                site.data(),
+                site.accum(),
+            );
+        }
+        return out;
+    }
+    global_average_pool_fixed_batch_ref(x, site.data(), site.accum())
 }
 
 /// The f64 reference path of [`global_average_pool_fixed_batch`].
@@ -207,6 +241,25 @@ mod tests {
         let batched = global_average_pool_fixed_batch(&Mat3::from_events(&refs), data, data.accum());
         for (i, e) in events.iter().enumerate() {
             assert_eq!(batched.event(i), global_average_pool_fixed(e, data, data.accum()));
+        }
+    }
+
+    #[test]
+    fn compiled_pool_bitwise_matches_dispatcher() {
+        use crate::hls::QuantConfig;
+        let mut g = Gen::new(12);
+        let rows = 10;
+        // one sum-exact grid, one wide grid forcing the reference path
+        for data in [FixedSpec::new(12, 5), FixedSpec::new(32, 12)] {
+            let accum = data.accum();
+            let site = CompiledPool::build(QuantConfig { data, accum }, rows);
+            let x = Mat::from_vec(rows, 4, g.normal_vec(rows * 4, 1.0));
+            let want = global_average_pool_fixed(&x, data, accum);
+            assert_eq!(global_average_pool_fixed_compiled(&x, &site), want, "{data}");
+            let b3 = Mat3::from_events(&[&x, &x]);
+            let wantb = global_average_pool_fixed_batch(&b3, data, accum);
+            let gotb = global_average_pool_fixed_batch_compiled(&b3, &site);
+            assert_eq!(gotb.data(), wantb.data(), "{data} batch");
         }
     }
 

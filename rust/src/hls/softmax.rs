@@ -6,6 +6,7 @@
 //! [`softmax_fixed_legacy`] implements it for the ablation bench.
 
 use super::calibration as cal;
+use super::compiled::CompiledSoftmax;
 use super::hotpath;
 use super::pipeline::{adder_tree_depth, Stage};
 use super::resources::{bram18_for_bits, dsp_per_mult, Resources};
@@ -36,6 +37,18 @@ pub fn softmax_fixed_row(
         return softmax_fixed_row_int(row, roms, data, accum);
     }
     softmax_fixed_row_ref(row, roms, data, accum);
+}
+
+/// [`softmax_fixed_row`] through a prebuilt [`CompiledSoftmax`] site:
+/// the grid-exactness half of the dispatch verdict comes from the
+/// artifact; only the length-dependent sum bound (and the live
+/// reference override) is evaluated per row.  **Bitwise identical** to
+/// the dispatcher at the site's specs.
+pub fn softmax_fixed_row_compiled(row: &mut [f32], site: &CompiledSoftmax, roms: &Roms) {
+    if site.use_int(row.len()) {
+        return softmax_fixed_row_int(row, roms, site.data(), site.accum());
+    }
+    softmax_fixed_row_ref(row, roms, site.data(), site.accum());
 }
 
 /// The f64 reference path of [`softmax_fixed_row`].

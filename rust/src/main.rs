@@ -199,11 +199,13 @@ fn run(args: &Args) -> Result<()> {
             );
             println!(
                 "mixed-precision search — {} | start {} | auc_ratio floor {floor} | \
-                 min frac {min_frac} | {} eval events | {} design points scored",
+                 min frac {min_frac} | {} eval events | {} design points scored | \
+                 {} engines compiled",
                 cfg.name,
                 uniform.data,
                 eval.len(),
-                r.points_scored
+                r.points_scored,
+                r.engines_built
             );
             println!(
                 "  uniform: auc_ratio {:.4}  DSP {} FF {} LUT {} BRAM18 {}",

@@ -9,6 +9,6 @@ pub mod sweep;
 pub use evalset::EvalSet;
 pub use pareto::{pareto_explore, ParetoConfig, ParetoPoint, ParetoResult};
 pub use sweep::{
-    bit_shave_search, run_sweep, score_plan, score_point, BitShaveResult, PlanScore,
-    SweepPoint, SweepResult,
+    bit_shave_search, run_sweep, score_plan, score_plan_with, score_point, BitShaveResult,
+    PlanCache, PlanScore, SweepPoint, SweepResult,
 };

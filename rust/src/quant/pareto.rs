@@ -19,20 +19,15 @@
 //!   `hls::transformer`), so latency-free resource savings exist exactly
 //!   at the sites that neither gate the drain nor the re-arm interval.
 
-use std::collections::HashMap;
-
 use crate::fixed::FixedSpec;
 use crate::hls::resources::{Device, Resources, VU13P};
-use crate::hls::{
-    FixedTransformer, ParallelismPlan, PrecisionPlan, QuantConfig, ReuseFactor,
-    SynthesisReport,
-};
+use crate::hls::{ParallelismPlan, PrecisionPlan, QuantConfig, ReuseFactor, SynthesisReport};
 use crate::models::config::ModelConfig;
 use crate::models::weights::Weights;
 use crate::testutil::XorShift;
 
 use super::evalset::EvalSet;
-use super::sweep::score_plan;
+use super::sweep::PlanCache;
 
 /// Search configuration.
 #[derive(Clone, Debug)]
@@ -110,6 +105,10 @@ pub struct ParetoResult {
     pub evals: usize,
     /// Eval-set scorings spent (one per distinct precision plan).
     pub scored: usize,
+    /// Engines built — one per distinct precision plan, shared between
+    /// the AUC scoring and every `synthesize` of that plan (the
+    /// compile-once [`PlanCache`] contract).
+    pub engines_built: usize,
     /// Candidates rejected by the static verifier before any schedule or
     /// eval-set work was spent on them.
     pub pruned: usize,
@@ -127,18 +126,17 @@ impl ParetoResult {
     }
 }
 
-/// Evaluation engine with per-precision-plan caches: the fixed-point
-/// engine (weights PTQ'd once per plan) and its AUC ratio (scored once
-/// per plan — reuse moves are schedule-only and never re-score).
+/// Evaluation engine over one shared [`PlanCache`]: the fixed-point
+/// engine (weights PTQ'd + mantissas lifted once per distinct plan) is
+/// reused by both the schedule synthesis and the AUC scoring, and the
+/// AUC itself is scored once per plan (reuse moves are schedule-only
+/// and never re-score).
 struct Explorer<'a> {
     cfg: &'a ModelConfig,
-    weights: &'a Weights,
     eval: &'a EvalSet,
     pcfg: &'a ParetoConfig,
-    engines: HashMap<String, FixedTransformer>,
-    aucs: HashMap<String, f64>,
+    cache: PlanCache<'a>,
     evals: usize,
-    scored: usize,
     pruned: usize,
 }
 
@@ -151,38 +149,21 @@ impl<'a> Explorer<'a> {
     ) -> Self {
         Self {
             cfg,
-            weights,
             eval,
             pcfg,
-            engines: HashMap::new(),
-            aucs: HashMap::new(),
+            cache: PlanCache::new(cfg, weights),
             evals: 0,
-            scored: 0,
             pruned: 0,
         }
     }
 
     fn synth(&mut self, pp: &PrecisionPlan, par: &ParallelismPlan) -> SynthesisReport {
-        let key = pp.serialize();
-        if !self.engines.contains_key(&key) {
-            self.engines.insert(
-                key.clone(),
-                FixedTransformer::with_plan(self.cfg.clone(), self.weights, pp.clone()),
-            );
-        }
         self.evals += 1;
-        self.engines.get(&key).expect("just inserted").synthesize(par)
+        self.cache.engine(pp).synthesize(par)
     }
 
     fn auc_ratio(&mut self, pp: &PrecisionPlan) -> f64 {
-        let key = pp.serialize();
-        if let Some(&a) = self.aucs.get(&key) {
-            return a;
-        }
-        self.scored += 1;
-        let a = score_plan(self.cfg, self.weights, self.eval, pp).auc_ratio;
-        self.aucs.insert(key, a);
-        a
+        self.cache.score(self.eval, pp).auc_ratio
     }
 
     /// Evaluate one candidate, or `None` when the static verifier's
@@ -425,7 +406,8 @@ pub fn pareto_explore(
         frontier,
         best_uniform,
         evals: ex.evals,
-        scored: ex.scored,
+        scored: ex.cache.scorings(),
+        engines_built: ex.cache.builds(),
         pruned: ex.pruned,
     }
 }
@@ -509,6 +491,11 @@ mod tests {
         }
         assert!(r.evals >= r.frontier.len());
         assert!(r.scored >= 1, "the base precision plan is scored once");
+        // compile-once: every distinct precision plan is built exactly
+        // once and that one engine serves both its scoring and all of
+        // its synthesize calls
+        assert_eq!(r.engines_built, r.scored);
+        assert!(r.evals > r.engines_built, "reuse moves must not rebuild engines");
     }
 
     #[test]
@@ -553,6 +540,7 @@ mod tests {
         assert!(r.pruned > 0, "the uniform seeds must be pruned");
         assert_eq!(r.evals, 0, "pruning happens before synthesis");
         assert_eq!(r.scored, 0, "pruning happens before eval-set scoring");
+        assert_eq!(r.engines_built, 0, "pruning happens before any engine build");
     }
 
     #[test]

@@ -54,6 +54,10 @@ pub struct PlanScore {
 }
 
 /// Score one model under one precision plan over the eval set.
+///
+/// Builds a fresh engine (weights quantized + mantissas lifted into the
+/// compiled artifact) per call; search loops that revisit plans should
+/// go through a [`PlanCache`] instead.
 pub fn score_plan(
     cfg: &ModelConfig,
     weights: &Weights,
@@ -61,7 +65,16 @@ pub fn score_plan(
     plan: &PrecisionPlan,
 ) -> PlanScore {
     let fixed = FixedTransformer::with_plan(cfg.clone(), weights, plan.clone());
+    score_plan_with(&fixed, cfg, eval)
+}
 
+/// [`score_plan`] against an already-built engine: the compile-once
+/// entry point — no weight re-quantization, no mantissa re-lift.
+pub fn score_plan_with(
+    fixed: &FixedTransformer,
+    cfg: &ModelConfig,
+    eval: &EvalSet,
+) -> PlanScore {
     let mut fixed_probs: Vec<Vec<f32>> = Vec::with_capacity(eval.len());
     for x in &eval.events {
         fixed_probs.push(fixed.forward(x));
@@ -176,6 +189,72 @@ pub fn paper_grid() -> Vec<SweepPoint> {
     v
 }
 
+/// Plan-keyed cache of built engines and their eval-set scores, for the
+/// search loops ([`bit_shave_search`], the Pareto front) that visit the
+/// same [`PrecisionPlan`] more than once.  The key is the plan's
+/// canonical serialization, so two plans that print identically share
+/// one engine — one weight quantization, one mantissa lift, one
+/// compiled artifact — and one scoring.
+pub struct PlanCache<'a> {
+    cfg: &'a ModelConfig,
+    weights: &'a Weights,
+    engines: std::collections::HashMap<String, FixedTransformer>,
+    scores: std::collections::HashMap<String, PlanScore>,
+    builds: usize,
+    scorings: usize,
+}
+
+impl<'a> PlanCache<'a> {
+    pub fn new(cfg: &'a ModelConfig, weights: &'a Weights) -> Self {
+        Self {
+            cfg,
+            weights,
+            engines: Default::default(),
+            scores: Default::default(),
+            builds: 0,
+            scorings: 0,
+        }
+    }
+
+    /// The engine for `plan`, built on first request and reused after
+    /// (same `Arc<CompiledModel>` every time).
+    pub fn engine(&mut self, plan: &PrecisionPlan) -> &FixedTransformer {
+        let key = plan.serialize();
+        if !self.engines.contains_key(&key) {
+            self.builds += 1;
+            self.engines.insert(
+                key.clone(),
+                FixedTransformer::with_plan(self.cfg.clone(), self.weights, plan.clone()),
+            );
+        }
+        &self.engines[&key]
+    }
+
+    /// Score `plan` over `eval`, running the model only on the first
+    /// request per plan.
+    pub fn score(&mut self, eval: &EvalSet, plan: &PrecisionPlan) -> PlanScore {
+        let key = plan.serialize();
+        if let Some(s) = self.scores.get(&key) {
+            return *s;
+        }
+        let cfg = self.cfg;
+        let s = score_plan_with(self.engine(plan), cfg, eval);
+        self.scorings += 1;
+        self.scores.insert(key, s);
+        s
+    }
+
+    /// Engines actually built (cache misses of [`Self::engine`]).
+    pub fn builds(&self) -> usize {
+        self.builds
+    }
+
+    /// Eval-set scorings actually run (cache misses of [`Self::score`]).
+    pub fn scorings(&self) -> usize {
+        self.scorings
+    }
+}
+
 /// Result of one greedy mixed-precision search.
 #[derive(Clone, Debug)]
 pub struct BitShaveResult {
@@ -191,8 +270,13 @@ pub struct BitShaveResult {
     pub plan_resources: Resources,
     /// Total fractional bits removed across all sites.
     pub bits_shaved: u32,
-    /// Eval-set scorings the search spent.
+    /// Eval-set scorings the search actually ran ([`PlanCache`] misses;
+    /// revisited plans — the accepted final plan, the uniform baseline —
+    /// are free).
     pub points_scored: usize,
+    /// Engines built ([`PlanCache`] misses): each one quantized the
+    /// weights and lifted the mantissa tiles exactly once.
+    pub engines_built: usize,
 }
 
 /// Greedy per-site bit shaving: starting from a uniform plan, repeatedly
@@ -220,8 +304,8 @@ pub fn bit_shave_search(
         .into_iter()
         .filter(|s| cfg.use_layernorm || !(s.ends_with(".ln1") || s.ends_with(".ln2")))
         .collect();
-    let uniform_score = score_plan(cfg, weights, eval, &plan);
-    let mut points_scored = 1usize;
+    let mut cache = PlanCache::new(cfg, weights);
+    let uniform_score = cache.score(eval, &plan);
     let mut frozen: std::collections::HashSet<String> = Default::default();
     loop {
         let mut changed = false;
@@ -237,8 +321,7 @@ pub fn bit_shave_search(
             let shaved = FixedSpec::new(cur.data.width() - 1, cur.data.integer());
             let mut cand = plan.clone();
             cand.set_data(site, shaved).expect("known site");
-            let s = score_plan(cfg, weights, eval, &cand);
-            points_scored += 1;
+            let s = cache.score(eval, &cand);
             if s.auc_ratio >= auc_floor {
                 plan = cand;
                 changed = true;
@@ -250,14 +333,13 @@ pub fn bit_shave_search(
             break;
         }
     }
-    let plan_score = score_plan(cfg, weights, eval, &plan);
-    points_scored += 1;
-    let uniform_resources = FixedTransformer::new(cfg.clone(), weights, uniform)
-        .synthesize(par)
-        .total;
-    let plan_resources = FixedTransformer::with_plan(cfg.clone(), weights, plan.clone())
-        .synthesize(par)
-        .total;
+    // the final plan was scored the moment its last shave was accepted,
+    // and the uniform engine was built for the baseline score — both are
+    // pure cache hits here
+    let plan_score = cache.score(eval, &plan);
+    let uniform_plan = PrecisionPlan::uniform(cfg.num_blocks, uniform);
+    let uniform_resources = cache.engine(&uniform_plan).synthesize(par).total;
+    let plan_resources = cache.engine(&plan).synthesize(par).total;
     let bits_shaved: u32 = plan
         .site_names()
         .iter()
@@ -273,7 +355,8 @@ pub fn bit_shave_search(
         uniform_resources,
         plan_resources,
         bits_shaved,
-        points_scored,
+        points_scored: cache.scorings(),
+        engines_built: cache.builds(),
     }
 }
 
@@ -385,6 +468,35 @@ mod tests {
     }
 
     #[test]
+    fn plan_cache_builds_and_scores_each_plan_once() {
+        let cfg = zoo_model("engine").unwrap().config;
+        let w = synthetic_weights(&cfg, 41);
+        let eval = synthetic_eval(&cfg, &w, 8);
+        let mut cache = PlanCache::new(&cfg, &w);
+        let plan = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 8));
+        let a = cache.score(&eval, &plan);
+        let b = cache.score(&eval, &plan);
+        assert_eq!(a.auc_fixed, b.auc_fixed);
+        assert_eq!(a.mean_abs_err, b.mean_abs_err);
+        assert_eq!(cache.scorings(), 1, "second score is a cache hit");
+        assert_eq!(cache.builds(), 1);
+        // repeat requests return the SAME compiled artifact, not an
+        // equal rebuild
+        let first = cache.engine(&plan).compiled().clone();
+        assert!(std::sync::Arc::ptr_eq(&first, cache.engine(&plan).compiled()));
+        assert_eq!(cache.builds(), 1);
+        // a different plan is a genuine miss
+        let other = PrecisionPlan::uniform(cfg.num_blocks, QuantConfig::new(6, 9));
+        cache.score(&eval, &other);
+        assert_eq!(cache.scorings(), 2);
+        assert_eq!(cache.builds(), 2);
+        // and the cached score matches the uncached entry point exactly
+        let direct = score_plan(&cfg, &w, &eval, &plan);
+        assert_eq!(a.auc_fixed, direct.auc_fixed);
+        assert_eq!(a.mean_abs_err, direct.mean_abs_err);
+    }
+
+    #[test]
     fn paper_grid_size() {
         // 2 quant types x 5 integer widths x 10 fractional widths
         assert_eq!(paper_grid().len(), 100);
@@ -418,6 +530,9 @@ mod tests {
             r.uniform_resources
         );
         assert!(r.points_scored >= 2);
+        // compile-once accounting: the final re-score and both resource
+        // syntheses reused cached engines, so builds == scorings
+        assert_eq!(r.engines_built, r.points_scored);
     }
 
     #[test]
