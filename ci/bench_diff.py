@@ -21,15 +21,18 @@ increase is a real regression rather than a rebalanced trade-off.
 *Speedup-keyed* metrics — fields ending in `speedup_x` or containing
 `speedup` — gate in the opposite direction: they are ratios where higher
 is better (integer path vs f64 reference, compiled plan vs per-call
-lift), so a DROP of more than PCT percent exits nonzero.  Other
-throughput-style keys stay advisory either way.
+lift), so a DROP of more than PCT percent exits nonzero.
+*Throughput-keyed* metrics — fields ending in `_sps` or containing
+`throughput` — gate the same way as speedups: rates where higher is
+better (events/s, sustained samples/s), so a DROP of more than PCT
+percent exits nonzero.
 
-Under `--fail-on-regression`, a latency or speedup series that was
-tracked in the previous run and is missing from the current one — the
-whole bench gone, or just the field — is also a hard error: a gating
-lane must not go silently green because the regressed series stopped
-being emitted.  Renames and removals in advisory mode remain lifecycle
-notes, not errors.
+Under `--fail-on-regression`, a latency, speedup or throughput series
+that was tracked in the previous run and is missing from the current
+one — the whole bench gone, or just the field — is also a hard error: a
+gating lane must not go silently green because the regressed series
+stopped being emitted.  Renames and removals in advisory mode remain
+lifecycle notes, not errors.
 
 With `--plans`, PREV and CURR are instead `repro lint-plan --json`
 verifier reports (one JSON object per line keyed "plan", carrying
@@ -156,6 +159,10 @@ def is_speedup_key(key):
     return key.endswith("speedup_x") or "speedup" in key
 
 
+def is_throughput_key(key):
+    return key.endswith("_sps") or "throughput" in key
+
+
 def latency_regressions(prev, curr, shared, threshold_pct):
     """(bench, key, prev, curr, pct) for every latency-keyed metric that
     grew past the threshold."""
@@ -193,6 +200,25 @@ def speedup_regressions(prev, curr, shared, threshold_pct):
     return rows
 
 
+def throughput_regressions(prev, curr, shared, threshold_pct):
+    """(bench, key, prev, curr, pct) for every throughput-keyed metric
+    that DROPPED past the threshold — like speedups, throughputs are
+    higher-is-better rates, so the gate mirrors the latency one."""
+    rows = []
+    for name in shared:
+        keys = set(prev[name]) & set(curr[name])
+        for key in sorted(keys):
+            if key == "bench" or not is_throughput_key(key):
+                continue
+            a, b = metric(prev[name], key), metric(curr[name], key)
+            if a is None or b is None or a <= 0:
+                continue
+            pct = (a - b) / a * 100.0
+            if pct > threshold_pct:
+                rows.append((name, key, a, b, pct))
+    return rows
+
+
 def vanished_latency_series(prev, curr):
     """(bench, key) for every latency series the previous run tracked
     that the current run no longer emits — either the bench vanished
@@ -216,6 +242,21 @@ def vanished_speedup_series(prev, curr):
     for name in sorted(prev):
         for key in sorted(prev[name]):
             if key == "bench" or not is_speedup_key(key):
+                continue
+            if metric(prev[name], key) is None:
+                continue
+            if name not in curr or metric(curr.get(name, {}), key) is None:
+                rows.append((name, key))
+    return rows
+
+
+def vanished_throughput_series(prev, curr):
+    """Throughput twin of vanished_latency_series: a tracked rate the
+    current run stopped emitting is a hard error under the gate."""
+    rows = []
+    for name in sorted(prev):
+        for key in sorted(prev[name]):
+            if key == "bench" or not is_throughput_key(key):
                 continue
             if metric(prev[name], key) is None:
                 continue
@@ -324,6 +365,12 @@ def main(argv):
             for n, k, a, b, pct in slower:
                 print(f"  {n:<60} {k}: {a:.2f}x -> {b:.2f}x  (-{pct:.1f}%)")
             failed = True
+        slower_rates = throughput_regressions(prev, curr, shared, fail_pct)
+        if slower_rates:
+            print(f"\n== throughput drops past {fail_pct:g}% (gating) ==")
+            for n, k, a, b, pct in slower_rates:
+                print(f"  {n:<60} {k}: {a:,.0f} -> {b:,.0f}  (-{pct:.1f}%)")
+            failed = True
         vanished = vanished_latency_series(prev, curr)
         if vanished:
             print("\n== latency series missing from the current run (gating) ==")
@@ -336,9 +383,18 @@ def main(argv):
             for n, k in vanished_speedups:
                 print(f"  {n:<60} {k}: tracked last run, not emitted now")
             failed = True
+        vanished_rates = vanished_throughput_series(prev, curr)
+        if vanished_rates:
+            print("\n== throughput series missing from the current run (gating) ==")
+            for n, k in vanished_rates:
+                print(f"  {n:<60} {k}: tracked last run, not emitted now")
+            failed = True
         if failed:
             return 1
-        print(f"(no latency- or speedup-keyed metric regressed past {fail_pct:g}%)")
+        print(
+            f"(no latency-, speedup- or throughput-keyed metric regressed "
+            f"past {fail_pct:g}%)"
+        )
     return 0
 
 

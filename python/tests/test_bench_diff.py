@@ -3,11 +3,12 @@ renames (added/removed keys are reported as "new"/"gone", never an
 error), malformed CLI input and unreadable files, always exiting 0 —
 except under --fail-on-regression PCT, where a latency-keyed metric
 (*_ns / *_cycles / *latency*) growing past the threshold, or a
-speedup-keyed metric (*speedup_x / *speedup*) DROPPING past it, exits 1
-while throughput-style changes stay advisory.  Also under the flag, a
-latency or speedup series tracked last run but missing now (vanished
-bench, or a record that lost the field) is a hard error — the gate must
-not go green because a regressed series stopped being emitted."""
+speedup-keyed metric (*speedup_x / *speedup*) or throughput-keyed
+metric (*_sps / *throughput*) DROPPING past it, exits 1.  Also under
+the flag, a latency, speedup or throughput series tracked last run but
+missing now (vanished bench, or a record that lost the field) is a hard
+error — the gate must not go green because a regressed series stopped
+being emitted."""
 
 import importlib.util
 import pathlib
@@ -158,7 +159,7 @@ def test_regression_under_threshold_passes(tmp_path, capsys):
     )
     out = capsys.readouterr().out
     assert rc == 0
-    assert "no latency- or speedup-keyed metric regressed past 25%" in out
+    assert "no latency-, speedup- or throughput-keyed metric regressed past 25%" in out
 
 
 def test_modeled_latency_cycles_are_guarded(tmp_path, capsys):
@@ -173,15 +174,63 @@ def test_modeled_latency_cycles_are_guarded(tmp_path, capsys):
     assert "latency_cycles" in capsys.readouterr().out
 
 
-def test_throughput_drop_does_not_trip_the_latency_gate(tmp_path, capsys):
+def test_throughput_drop_past_threshold_fails_with_flag(tmp_path, capsys):
     rc = run(
         tmp_path,
         [line("e2e/x", throughput_eps=1000, dsp=100)],
-        [line("e2e/x", throughput_eps=200, dsp=500)],  # worse, but not latency-keyed
+        [line("e2e/x", throughput_eps=200, dsp=500)],  # -80% < -10%
+        extra=("--fail-on-regression", "10"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "throughput drops past 10%" in out
+    assert "throughput_eps" in out
+    # resource keys (dsp) still stay advisory: only the rate gates
+
+
+def test_sustained_sps_drop_past_threshold_fails_with_flag(tmp_path, capsys):
+    # the stream sweep's sustained samples/s is throughput-keyed via _sps
+    rc = run(
+        tmp_path,
+        [line("e2e_serving/stream_sweep/engine/Hls/hop25", sustained_sps=4000)],
+        [line("e2e_serving/stream_sweep/engine/Hls/hop25", sustained_sps=2000)],
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "sustained_sps" in out
+
+
+def test_throughput_drop_under_threshold_passes(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", throughput_eps=1000)],
+        [line("e2e/x", throughput_eps=950)],  # -5% > -25%
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "no latency-, speedup- or throughput-keyed metric regressed past 25%" in out
+
+
+def test_throughput_improvement_passes_the_gate(tmp_path):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", throughput_eps=1000)],
+        [line("e2e/x", throughput_eps=4000)],
         extra=("--fail-on-regression", "10"),
     )
     assert rc == 0
-    assert "no latency- or speedup-keyed metric regressed" in capsys.readouterr().out
+
+
+def test_throughput_drop_is_advisory_without_flag(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("e2e/x", throughput_eps=1000)],
+        [line("e2e/x", throughput_eps=100)],
+    )
+    assert rc == 0
+    assert "throughput drops" not in capsys.readouterr().out
 
 
 def test_latency_improvement_passes_the_gate(tmp_path):
@@ -233,9 +282,10 @@ def test_vanished_latency_bench_is_advisory_without_the_flag(tmp_path, capsys):
     assert "missing from the current run" not in out
 
 
-def test_vanished_throughput_bench_does_not_trip_the_gate(tmp_path, capsys):
-    # only latency-keyed series are guarded; a retired throughput line
-    # stays a lifecycle note even under the flag
+def test_vanished_throughput_bench_fails_under_the_gate(tmp_path, capsys):
+    # a retired throughput line is a hard error under the flag, exactly
+    # like latency and speedup series: the gate must not go silently
+    # green because the regressed rate stopped being emitted
     rc = run(
         tmp_path,
         [line("sweep/x", throughput_eps=100), line("kept", p99_ns=5)],
@@ -243,8 +293,35 @@ def test_vanished_throughput_bench_does_not_trip_the_gate(tmp_path, capsys):
         extra=("--fail-on-regression", "25"),
     )
     out = capsys.readouterr().out
+    assert rc == 1
+    assert "throughput series missing from the current run" in out
+    assert "sweep/x" in out
+
+
+def test_lost_throughput_field_fails_under_the_gate(tmp_path, capsys):
+    # the bench still reports, but its sustained rate went away
+    rc = run(
+        tmp_path,
+        [line("sweep/x", sustained_sps=100, windows=12)],
+        [line("sweep/x", windows=12)],
+        extra=("--fail-on-regression", "25"),
+    )
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "sustained_sps" in out
+    assert "tracked last run, not emitted now" in out
+
+
+def test_vanished_throughput_bench_is_advisory_without_the_flag(tmp_path, capsys):
+    rc = run(
+        tmp_path,
+        [line("sweep/x", throughput_eps=100), line("kept", p99_ns=5)],
+        [line("kept", p99_ns=5)],
+    )
+    out = capsys.readouterr().out
     assert rc == 0
     assert "gone since last run: sweep/x" in out
+    assert "missing from the current run" not in out
 
 
 def test_speedup_drop_past_threshold_fails_with_flag(tmp_path, capsys):
@@ -270,7 +347,7 @@ def test_speedup_drop_under_threshold_passes(tmp_path, capsys):
     )
     out = capsys.readouterr().out
     assert rc == 0
-    assert "no latency- or speedup-keyed metric regressed past 25%" in out
+    assert "no latency-, speedup- or throughput-keyed metric regressed past 25%" in out
 
 
 def test_speedup_improvement_passes_the_gate(tmp_path):

@@ -271,6 +271,7 @@ fn stream_sweep() {
                         samples,
                         hop,
                         strain: StrainConfig::new(0xA11CE, cfg.input_size, s),
+                        reuse: true,
                     }),
                     ..PipelineConfig::new("engine", backend)
                 }],
@@ -327,6 +328,76 @@ fn stream_sweep() {
     }
 }
 
+/// Cross-window reuse sweep: the same strain stream served with the
+/// incremental window cache on vs the naive full recompute, hop ∈
+/// {S/4, S/2, S} per backend.  Reuse never changes the scores (bitwise,
+/// pinned by `stream_integration`), only the work per window: at hop h
+/// the per-row prefix reuses (S-h)/S of its MACs and the block-0 raw
+/// score block ((S-h)/S)^2 of its dot products, so the speedup should
+/// grow as the hop shrinks and collapse to ~1x at hop = S (no overlap).
+/// Each hop is one BENCH_JSON line (`e2e_serving/stream_reuse/...`)
+/// carrying both sustained throughputs plus `reuse_speedup_x` — the
+/// measured series behind EXPERIMENTS.md E13 and, on the engine/Hls
+/// hop-S/4 point, the `STREAM_ASSERT_REUSE_SPEEDUP` hotpath CI gate.
+fn stream_reuse_sweep() {
+    harness::section("stream reuse sweep: incremental vs full recompute, hop S/4 | S/2 | S");
+    println!("(same stream both ways; scores are bitwise identical — only the work differs)");
+    let cfg = zoo_model("engine").expect("zoo model").config;
+    let s = cfg.seq_len;
+    let run = |backend: BackendKind, samples: u64, hop: usize, reuse: bool| -> Option<f64> {
+        let server = ServerConfig {
+            pipelines: vec![PipelineConfig {
+                weights: WeightsSource::Detector,
+                ring_capacity: 16_384,
+                source: SourceMode::Stream(StreamSource {
+                    samples,
+                    hop,
+                    strain: StrainConfig::new(0xCAFE, cfg.input_size, s),
+                    reuse,
+                }),
+                ..PipelineConfig::new("engine", backend)
+            }],
+            events_per_source: 0,
+            rate_per_source: 0,
+            artifacts_dir: artifacts_dir(),
+            ..Default::default()
+        };
+        match TriggerServer::run(&server) {
+            Ok(report) => {
+                let wall = report.wall.as_secs_f64().max(1e-9);
+                Some(samples as f64 / wall)
+            }
+            Err(e) => {
+                println!("  {backend:?} hop {hop} reuse={reuse} FAILED: {e:#}");
+                None
+            }
+        }
+    };
+    for (backend, samples) in [(BackendKind::Float, 120_000u64), (BackendKind::Hls, 12_000)] {
+        for hop in [s / 4, s / 2, s] {
+            let (Some(inc), Some(full)) =
+                (run(backend, samples, hop, true), run(backend, samples, hop, false))
+            else {
+                continue;
+            };
+            let speedup = inc / full;
+            println!(
+                "  {backend:6?} hop {hop:>3}  incremental {inc:>9.0} samples/s  \
+                 full {full:>9.0} samples/s  x{speedup:.2}",
+            );
+            harness::json_line(
+                &format!("e2e_serving/stream_reuse/engine/{backend:?}/hop{hop}"),
+                &[
+                    ("hop", hop as f64),
+                    ("incremental_sps", inc),
+                    ("full_sps", full),
+                    ("reuse_speedup_x", speedup),
+                ],
+            );
+        }
+    }
+}
+
 fn main() {
     harness::section("E6: end-to-end trigger serving (throughput / latency)");
     println!("(sources run at max rate; latency includes queueing + batching)");
@@ -347,6 +418,8 @@ fn main() {
     reuse_plan_sweep();
 
     stream_sweep();
+
+    stream_reuse_sweep();
 
     harness::section("multi-model concurrent serving (all three pipelines)");
     let cfg = ServerConfig {

@@ -286,6 +286,64 @@ fn main() {
         println!("    compiled speedup gate passed: {got:.2}x >= {floor:.2}x");
     }
 
+    harness::section("incremental window reuse vs full recompute (engine, hop S/4)");
+    // consecutive stream windows at hop h share S-h token rows;
+    // `forward_incremental` reuses their embed/Q/K/V rows and the
+    // block-0 raw score block while `forward` recomputes everything.
+    // Same output bits either way (pinned by hls::transformer tests) —
+    // only the work differs.  When STREAM_ASSERT_REUSE_SPEEDUP is set
+    // (e.g. `1.2`), the run fails unless the incremental path sustains
+    // at least that speedup over full recompute at hop S/4.
+    {
+        let m = zoo()
+            .into_iter()
+            .find(|m| m.config.name == "engine")
+            .expect("engine model must be in the zoo");
+        let w = synthetic_weights(&m.config, 9);
+        let fx = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 10));
+        let (s, d) = (m.config.seq_len, m.config.input_size);
+        let hop = (s / 4).max(1);
+        let n_windows = 64usize;
+        let buf: Vec<f32> = g.normal_vec((s + hop * n_windows) * d, 1.0);
+        let windows: Vec<(u64, Mat)> = (0..n_windows)
+            .map(|i| {
+                let start = i * hop;
+                (start as u64, Mat::from_vec(s, d, buf[start * d..(start + s) * d].to_vec()))
+            })
+            .collect();
+        // the cache persists across bench iterations: each pass replays
+        // the stream from pos 0, so exactly one window per pass is cold
+        let mut cache = fx.window_cache();
+        let inc = harness::bench("stream x64 windows incremental (hop S/4)", || {
+            for (pos, x) in &windows {
+                harness::black_box(fx.forward_incremental(x, *pos, &mut cache));
+            }
+        });
+        let full = harness::bench("stream x64 windows full recompute (hop S/4)", || {
+            for (_, x) in &windows {
+                harness::black_box(fx.forward(x));
+            }
+        });
+        let speedup = full.mean_ns / inc.mean_ns;
+        println!("    -> incremental reuse speedup {speedup:.2}x at hop {hop}");
+        harness::json_line(
+            "hotpath stream reuse engine",
+            &[("hop", hop as f64), ("reuse_speedup_x", speedup)],
+        );
+        if let Ok(floor) = std::env::var("STREAM_ASSERT_REUSE_SPEEDUP") {
+            let floor: f64 =
+                floor.parse().expect("STREAM_ASSERT_REUSE_SPEEDUP must be a number");
+            if speedup < floor {
+                eprintln!(
+                    "FAIL: incremental stream reuse speedup {speedup:.2}x on engine \
+                     (hop S/4) is below the required {floor:.2}x floor"
+                );
+                std::process::exit(1);
+            }
+            println!("    stream reuse gate passed: {speedup:.2}x >= {floor:.2}x");
+        }
+    }
+
     harness::section("coordinator primitives");
     {
         let (p, c) = spsc::ring::<u64>(1024);

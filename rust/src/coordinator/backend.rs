@@ -26,8 +26,9 @@ use crate::hls::{
 use crate::models::config::{FinalActivation, ModelConfig};
 use crate::models::weights::Weights;
 use crate::nn::tensor::Mat;
-use crate::nn::FloatTransformer;
+use crate::nn::{FloatTransformer, FloatWindowCache};
 use crate::runtime::{Executable, Runtime};
+use crate::stream::ReuseCounters;
 
 /// Which engine serves a model's batches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -203,6 +204,76 @@ impl Backend {
             probs[1.min(probs.len() - 1)]
         }
     }
+
+    /// A fresh per-stream incremental cache for [`Self::infer_window`].
+    /// One per (shard, stream): the router hands each shard a strided
+    /// sub-stream, and the cache keys reuse off that shard's own
+    /// position deltas.
+    pub fn window_cache(&self) -> BackendWindowCache {
+        match self {
+            Backend::Float(t) => BackendWindowCache::Float(t.window_cache()),
+            Backend::Hls { engine, .. } => BackendWindowCache::Hls(engine.window_cache()),
+            Backend::Pjrt { .. } => BackendWindowCache::Full(ReuseCounters::default()),
+        }
+    }
+
+    /// Score one stream window at absolute sample position `pos`,
+    /// reusing the overlapping-row work retained in `cache` when sound
+    /// (consecutive windows of one stream, hop < seq_len).  **Bitwise
+    /// identical** to `infer(&[x])` on every backend — PJRT has no
+    /// incremental path and falls back to a full single-window infer
+    /// (counted as a full window in the cache's counters).
+    pub fn infer_window(
+        &self,
+        x: &Mat,
+        pos: u64,
+        cache: &mut BackendWindowCache,
+    ) -> Result<Vec<f32>> {
+        match (self, cache) {
+            (Backend::Float(t), BackendWindowCache::Float(c)) => {
+                Ok(t.probs(&t.forward_incremental(x, pos, c)))
+            }
+            (Backend::Hls { engine, .. }, BackendWindowCache::Hls(c)) => {
+                Ok(engine.forward_incremental(x, pos, c))
+            }
+            (Backend::Pjrt { .. }, BackendWindowCache::Full(counters)) => {
+                counters.windows_full += 1;
+                counters.rows_recomputed += x.rows() as u64;
+                Ok(self.infer(&[x])?.remove(0))
+            }
+            _ => anyhow::bail!("window cache built for a different backend kind"),
+        }
+    }
+}
+
+/// Per-stream incremental state for [`Backend::infer_window`], matching
+/// the backend kind it was built from.
+pub enum BackendWindowCache {
+    Float(FloatWindowCache),
+    Hls(crate::hls::WindowCache),
+    /// Backends with no incremental path (PJRT): full-recompute
+    /// accounting only.
+    Full(ReuseCounters),
+}
+
+impl BackendWindowCache {
+    /// Reuse/recompute accounting accumulated through this cache.
+    pub fn counters(&self) -> ReuseCounters {
+        match self {
+            BackendWindowCache::Float(c) => c.counters(),
+            BackendWindowCache::Hls(c) => c.counters(),
+            BackendWindowCache::Full(c) => *c,
+        }
+    }
+
+    /// Drop any retained window: the next call recomputes in full.
+    pub fn invalidate(&mut self) {
+        match self {
+            BackendWindowCache::Float(c) => c.invalidate(),
+            BackendWindowCache::Hls(c) => c.invalidate(),
+            BackendWindowCache::Full(_) => {}
+        }
+    }
 }
 
 /// Chunk boundaries for running `len` events through a batch-`cap`
@@ -338,6 +409,53 @@ mod tests {
             }
             assert_eq!(covered, len);
         }
+    }
+
+    #[test]
+    fn infer_window_bitwise_matches_infer_on_overlapping_stream() {
+        // the serving-layer face of the incremental tentpole: streamed
+        // windows through the per-shard cache score bitwise identically
+        // to a naive full infer, Float and HLS alike
+        let cfg = zoo_model("gw").unwrap().config;
+        let w = synthetic_weights(&cfg, 23);
+        let (s, d) = (cfg.seq_len, cfg.input_size);
+        let hop = (s / 4).max(1);
+        let mut g = Gen::new(41);
+        let buf = g.normal_vec((s + hop * 5) * d, 1.0);
+        for kind in [BackendKind::Float, BackendKind::Hls] {
+            let b = Backend::build(kind, &cfg, &w, &uniform(&cfg, 6, 10),
+                                   &upar(&cfg), None, std::path::Path::new(".")).unwrap();
+            let mut cache = b.window_cache();
+            for wi in 0..5usize {
+                let pos = wi * hop;
+                let x = Mat::from_vec(s, d, buf[pos * d..(pos + s) * d].to_vec());
+                let inc = b.infer_window(&x, pos as u64, &mut cache).unwrap();
+                assert_eq!(inc, b.infer(&[&x]).unwrap()[0], "{kind:?} window {wi}");
+            }
+            let c = cache.counters();
+            assert_eq!(c.windows_full, 1, "{kind:?}");
+            assert_eq!(c.windows_incremental, 4, "{kind:?}");
+            // invalidate() drops the carry without breaking correctness
+            cache.invalidate();
+            let pos = 5 * hop;
+            let x = Mat::from_vec(s, d, buf[pos * d..(pos + s) * d].to_vec());
+            let inc = b.infer_window(&x, pos as u64, &mut cache).unwrap();
+            assert_eq!(inc, b.infer(&[&x]).unwrap()[0], "{kind:?} post-invalidate");
+            assert_eq!(cache.counters().windows_full, 2, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn infer_window_rejects_mismatched_cache() {
+        let cfg = zoo_model("btag").unwrap().config;
+        let w = synthetic_weights(&cfg, 24);
+        let f = Backend::build(BackendKind::Float, &cfg, &w, &uniform(&cfg, 6, 10),
+                               &upar(&cfg), None, std::path::Path::new(".")).unwrap();
+        let h = Backend::build(BackendKind::Hls, &cfg, &w, &uniform(&cfg, 6, 10),
+                               &upar(&cfg), None, std::path::Path::new(".")).unwrap();
+        let mut hc = h.window_cache();
+        let x = events(&cfg, 1).remove(0);
+        assert!(f.infer_window(&x, 0, &mut hc).is_err());
     }
 
     #[test]

@@ -25,6 +25,11 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Longest single park while waiting out a batch deadline: short enough
+/// that the wake-up lands within a scheduler quantum of the deadline,
+/// long enough that an idle shard actually sleeps instead of spinning.
+const PARK_SLICE: Duration = Duration::from_micros(50);
+
 /// Pulls events off a ring and forms batches.
 pub struct Batcher {
     policy: BatchPolicy,
@@ -57,17 +62,22 @@ impl Batcher {
                     idle = 0;
                 }
                 None => {
-                    if Instant::now() >= deadline {
+                    let now = Instant::now();
+                    if now >= deadline {
                         break;
                     }
-                    // brief spin for the low-latency case, then yield the
-                    // core — on small machines a pure spin starves the
-                    // producer and *adds* latency
+                    // staged idle backoff: a brief spin for the
+                    // low-latency case, a few yields, then short parks
+                    // bounded by the time left — an idle shard stops
+                    // burning its core (a pure spin starves the producer
+                    // on small machines) without overshooting max_wait
                     idle += 1;
                     if idle < 16 {
                         std::hint::spin_loop();
-                    } else {
+                    } else if idle < 64 {
                         std::thread::yield_now();
+                    } else {
+                        std::thread::sleep((deadline - now).min(PARK_SLICE));
                     }
                 }
             }
@@ -121,6 +131,31 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_millis(50));
         p.close();
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn idle_wait_honors_the_deadline_within_tolerance() {
+        // regression for the staged backoff: with one pending event and
+        // an otherwise idle ring, next_batch must hold the batch open
+        // until ~max_wait (not flush early) and the parked waits must
+        // not overshoot the deadline by more than scheduler noise
+        let (p, c) = ring(8);
+        p.try_push(ev(1)).unwrap();
+        let max_wait = Duration::from_millis(5);
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait }, c);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            waited >= max_wait - Duration::from_micros(200),
+            "flushed {waited:?} before the {max_wait:?} deadline"
+        );
+        assert!(
+            waited < max_wait + Duration::from_millis(30),
+            "overshot the {max_wait:?} deadline: waited {waited:?}"
+        );
+        drop(p);
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub mod server;
 pub mod spsc;
 pub mod stats;
 
-pub use backend::{Backend, BackendKind};
+pub use backend::{Backend, BackendKind, BackendWindowCache};
 pub use batcher::{BatchPolicy, Batcher};
 pub use event::TriggerEvent;
 pub use router::{Router, Submit};

@@ -76,6 +76,12 @@ pub struct StreamSource {
     /// The strain source (seed, injection schedule, amplitudes).
     /// `channels` must match the model's `input_size`.
     pub strain: StrainConfig,
+    /// Incremental cross-window reuse: each worker shard keeps a
+    /// [`super::backend::BackendWindowCache`] and serves overlapping
+    /// windows through `Backend::infer_window` (bitwise identical to a
+    /// full recompute; [`PipelineStats::reuse`] accounts for the saved
+    /// work).  `false` forces the naive full-recompute path.
+    pub reuse: bool,
 }
 
 /// Per-model serving configuration.
@@ -256,6 +262,19 @@ impl std::fmt::Display for ServerReport {
                      for triggers + detection efficiency)",
                     s.windows.len()
                 )?;
+                if s.reuse.windows() > 0 {
+                    writeln!(
+                        f,
+                        "    reuse: {}/{} windows incremental | prefix rows \
+                         {:.1}% reused | score entries {:.1}% reused | cache \
+                         {:.1} KiB high-water",
+                        s.reuse.windows_incremental,
+                        s.reuse.windows(),
+                        100.0 * s.reuse.row_reuse_fraction(),
+                        100.0 * s.reuse.score_reuse_fraction(),
+                        s.reuse.cache_bytes as f64 / 1024.0,
+                    )?;
+                }
             }
             // shard breakdown only matters for real pools
             if s.shards.len() > 1 {
@@ -453,9 +472,39 @@ impl TriggerServer {
                     let (_runtime, backend) = built?;
                     let mut batcher = Batcher::new(pc.batch, rx);
                     let mut stats = PipelineStats::default();
+                    // stream-mode reuse: one incremental cache per shard.
+                    // The router hands this shard a strided, in-order
+                    // subsequence of the stream, so consecutive events'
+                    // position deltas key the overlap soundly (a delta
+                    // >= seq_len simply recomputes in full).
+                    let mut wcache = match &pc.source {
+                        SourceMode::Stream(ss) if ss.reuse => {
+                            Some(backend.window_cache())
+                        }
+                        _ => None,
+                    };
                     while let Some(batch) = batcher.next_batch() {
-                        let mats: Vec<&Mat> = batch.iter().map(|e| &e.x).collect();
-                        let probs = backend.infer(&mats)?;
+                        let probs = match wcache.as_mut() {
+                            Some(wc) => {
+                                // per-event, in arrival order — reuse
+                                // needs the previous window resident
+                                let mut out = Vec::with_capacity(batch.len());
+                                for e in &batch {
+                                    out.push(match e.stream_pos {
+                                        Some(pos) => {
+                                            backend.infer_window(&e.x, pos, wc)?
+                                        }
+                                        None => backend.infer(&[&e.x])?.remove(0),
+                                    });
+                                }
+                                out
+                            }
+                            None => {
+                                let mats: Vec<&Mat> =
+                                    batch.iter().map(|e| &e.x).collect();
+                                backend.infer(&mats)?
+                            }
+                        };
                         let now = Instant::now();
                         stats.batches += 1;
                         stats.batch_fill_sum += batch.len() as u64;
@@ -476,6 +525,9 @@ impl TriggerServer {
                                 });
                             }
                         }
+                    }
+                    if let Some(wc) = &wcache {
+                        stats.reuse = wc.counters();
                     }
                     Ok((pc.model, shard, stats))
                 }));
@@ -700,6 +752,7 @@ mod tests {
                     samples,
                     hop,
                     strain: StrainConfig::new(0xA11CE, 1, seq_len),
+                    reuse: true,
                 }),
                 ..PipelineConfig::new("engine", BackendKind::Float)
             }],
@@ -979,6 +1032,55 @@ mod tests {
         // the report mentions the streamed windows
         let text = format!("{report}");
         assert!(text.contains("windows scored"), "{text}");
+    }
+
+    #[test]
+    fn stream_reuse_counters_fold_into_the_report() {
+        // single shard, hop < seq_len: the first window is cold, every
+        // later one goes through the incremental path with exactly
+        // seq_len - hop carried rows
+        let (samples, hop) = (6_000u64, 25usize);
+        let report = TriggerServer::run(&stream_cfg(samples, hop)).unwrap();
+        let s = &report.per_model["engine"];
+        let seq_len = zoo_model("engine").unwrap().config.seq_len as u64;
+        let expect = (samples - seq_len) / hop as u64 + 1;
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.reuse.windows(), expect);
+        assert_eq!(s.reuse.windows_full, 1);
+        assert_eq!(s.reuse.windows_incremental, expect - 1);
+        assert_eq!(s.reuse.rows_reused, (expect - 1) * (seq_len - hop as u64));
+        assert!(s.reuse.cache_bytes > 0);
+        let text = format!("{report}");
+        assert!(text.contains("reuse:"), "{text}");
+        assert!(text.contains("windows incremental"), "{text}");
+    }
+
+    #[test]
+    fn stream_reuse_scores_bitwise_match_the_naive_path() {
+        // the serving-level contract: reuse on/off (and sharded/unsharded)
+        // must produce the exact same (pos, score) set
+        let run = |reuse: bool, replicas: usize| {
+            let mut cfg = stream_cfg(5_000, 30);
+            if let SourceMode::Stream(ss) = &mut cfg.pipelines[0].source {
+                ss.reuse = reuse;
+            }
+            cfg.pipelines[0].replicas = replicas;
+            let report = TriggerServer::run(&cfg).unwrap();
+            let s = &report.per_model["engine"];
+            assert_eq!(s.dropped, 0, "ring must not shed this stream");
+            let mut w: Vec<(u64, u32)> =
+                s.windows.iter().map(|w| (w.pos, w.score.to_bits())).collect();
+            w.sort_unstable();
+            (w, s.reuse.any_reuse())
+        };
+        let (naive, naive_reuse) = run(false, 1);
+        let (inc, inc_reuse) = run(true, 1);
+        assert!(!naive_reuse, "reuse=false must not engage the cache");
+        assert!(inc_reuse, "hop < seq_len must engage reuse");
+        assert_eq!(inc, naive, "incremental scores must be bitwise identical");
+        // a sharded pool sees strided deltas; still bitwise identical
+        let (pooled, _) = run(true, 3);
+        assert_eq!(pooled, naive, "sharded incremental scores must match");
     }
 
     #[test]

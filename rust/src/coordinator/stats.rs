@@ -6,7 +6,7 @@
 //! snapshot per replica so pool imbalance is visible in the report.
 
 use crate::metrics::LatencyHistogram;
-use crate::stream::WindowScore;
+use crate::stream::{ReuseCounters, WindowScore};
 
 /// Per-replica (shard) accounting within one model's worker pool.
 #[derive(Clone, Debug, Default)]
@@ -50,6 +50,10 @@ pub struct PipelineStats {
     /// order is per-shard arrival order, NOT stream order — the analyzer
     /// sorts.
     pub windows: Vec<WindowScore>,
+    /// Incremental cross-window reuse accounting for stream-mode
+    /// ingestion (all-zero for pre-cut event sources or with reuse
+    /// disabled); folded across shard caches.
+    pub reuse: ReuseCounters,
     /// Per-shard view of the pool (empty on worker-local stats; one
     /// entry per replica after server aggregation).
     pub shards: Vec<ShardStats>,
@@ -93,6 +97,7 @@ impl PipelineStats {
         self.scored_pos.extend_from_slice(&s.scored_pos);
         self.scored_labels.extend_from_slice(&s.scored_labels);
         self.windows.extend_from_slice(&s.windows);
+        self.reuse.merge(&s.reuse);
     }
 
     pub fn merge(&mut self, other: &PipelineStats) {
@@ -105,6 +110,7 @@ impl PipelineStats {
         self.scored_pos.extend_from_slice(&other.scored_pos);
         self.scored_labels.extend_from_slice(&other.scored_labels);
         self.windows.extend_from_slice(&other.windows);
+        self.reuse.merge(&other.reuse);
         self.shards.extend(other.shards.iter().cloned());
     }
 }
@@ -158,9 +164,15 @@ mod tests {
                 score: 0.5,
                 latency_ns: 900,
             });
+            s.reuse.windows_incremental = 4;
+            s.reuse.rows_reused = 40;
+            s.reuse.cache_bytes = 1000 + shard as u64;
             total.absorb_shard(shard, &s);
         }
         assert_eq!(total.windows.len(), 3, "stream records fold across shards");
+        assert_eq!(total.reuse.windows_incremental, 12, "reuse counters fold");
+        assert_eq!(total.reuse.rows_reused, 120);
+        assert_eq!(total.reuse.cache_bytes, 1002, "bytes high-water across shards");
         assert_eq!(total.accepted, 33);
         assert_eq!(total.batches, 6);
         assert_eq!(total.latency.count(), 3);

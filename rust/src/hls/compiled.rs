@@ -414,6 +414,24 @@ impl CompiledModel {
     pub fn bytes(&self) -> usize {
         self.bytes
     }
+
+    /// Resident f32 bytes one incremental stream window cache
+    /// (`FixedTransformer::forward_incremental`) holds against this
+    /// artifact: the `(S, d_model)` block-0 prefix rows plus, per
+    /// block-0 head, the `(S, k)` Q/K/V rows and the `(S, S)` raw score
+    /// block.  Sizing input for the serving report — matches the
+    /// cache's own `cache_bytes` high-water exactly (pinned in the
+    /// transformer suite).
+    pub fn window_cache_bytes(&self, seq_len: usize) -> u64 {
+        let s = seq_len as u64;
+        let prefix = s * self.embed.n_out() as u64;
+        let mha = self.blocks.first().map_or(0, |b| {
+            let heads = b.mha.q.len() as u64;
+            let k = b.mha.head_dim() as u64;
+            heads * (3 * s * k + s * s)
+        });
+        (prefix + mha) * std::mem::size_of::<f32>() as u64
+    }
 }
 
 #[cfg(test)]

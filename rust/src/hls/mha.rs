@@ -581,6 +581,213 @@ fn mha_fixed_batch_sited_inner(
     (out, stats)
 }
 
+/// Retained block-0 attention state for one stream's HLS window cache:
+/// per-head Q/K/V projections (on the qkv data grid) and the *raw*
+/// post-scale, pre-softmax score matrices (on the softmax data grid).
+/// Raw scores are cached — not softmaxed rows — because softmax is
+/// row-global: the next hop appends fresh columns to every row, so only
+/// the pre-softmax overlap block is shareable.
+#[derive(Clone, Debug)]
+pub struct MhaWindowState {
+    pub q: Vec<Mat>,
+    pub k: Vec<Mat>,
+    pub v: Vec<Mat>,
+    pub scores: Vec<Mat>,
+}
+
+impl MhaWindowState {
+    pub fn new(heads: usize, s: usize, k: usize) -> Self {
+        Self {
+            q: (0..heads).map(|_| Mat::zeros(s, k)).collect(),
+            v: (0..heads).map(|_| Mat::zeros(s, k)).collect(),
+            k: (0..heads).map(|_| Mat::zeros(s, k)).collect(),
+            scores: (0..heads).map(|_| Mat::zeros(s, s)).collect(),
+        }
+    }
+
+    /// Resident bytes of the cached state (f32 payloads).
+    pub fn bytes(&self) -> u64 {
+        let f = |ms: &[Mat]| ms.iter().map(|m| m.data().len() * 4).sum::<usize>() as u64;
+        f(&self.q) + f(&self.k) + f(&self.v) + f(&self.scores)
+    }
+}
+
+/// Window-cached fixed-point MHA: the incremental twin of
+/// [`mha_fixed_sited`] / [`mha_fixed_sited_compiled`].
+///
+/// With `fresh = None` (cold cache, restart, reuse disabled) everything
+/// recomputes and `st` is repopulated.  With `fresh = Some(delta)`,
+/// `0 < delta < S`, the leading `S - delta` rows of `x` are bitwise
+/// carry-overs from the cached window: only the trailing `delta` rows
+/// run the Q/K/V projections, and only the fresh score rows/columns run
+/// the dot-product kernel — the cached `(S-delta)^2` raw-score overlap
+/// block supplies the rest.  Softmax-onward runs full, per row, exactly
+/// as the regular path.
+///
+/// **Bitwise identical** to the non-cached entries either way: the
+/// dense kernels and both score cores compute each output row/entry
+/// purely from its own input row(s) (see [`score_q_row`]), hot-path
+/// dispatch is a pure function of the plan (not of row count), and the
+/// apply-V row guard sees the same full-block `max|v_m|` the regular
+/// path hoists.  Pinned by `window_mha_bitwise_matches_sited` below and
+/// the transformer/coordinator suites.
+pub fn mha_fixed_sited_window(
+    x: &Mat,
+    w: &MhaWeights,
+    roms: &Roms,
+    p: &MhaPrecision,
+    cm: Option<&CompiledMha>,
+    st: &mut MhaWindowState,
+    fresh: Option<usize>,
+) -> (Mat, MhaFifoStats) {
+    let s = x.rows();
+    let heads = w.wq.len();
+    let k = w.wq[0].cols();
+    let scale = 1.0 / (k as f32).sqrt();
+    let qa_qkv = crate::fixed::Quantizer::new(p.qkv.accum);
+    let qd_sm = crate::fixed::Quantizer::new(p.softmax.data);
+    let qa_out = crate::fixed::Quantizer::new(p.out.accum);
+    let qd_out = crate::fixed::Quantizer::new(p.out.data);
+    let hp = match cm {
+        Some(c) => MhaHotPath::from_compiled(c),
+        None => MhaHotPath::new(p, k),
+    };
+    let delta = fresh.filter(|&f| f > 0 && f < s);
+    let x_fresh = delta.map(|f| crate::nn::layers::rows_tail(x, f));
+    let mut concat = Mat::zeros(s, heads * k);
+    let mut prob_row = vec![0.0f32; s];
+    for h in 0..heads {
+        // ---- stage 1 + raw stage 2: projections and fresh raw scores
+        let mut km_m = hotpath::tls_take_ints(if hp.use_int_score { s * k } else { 0 });
+        match (delta, &x_fresh) {
+            (Some(f), Some(xf)) => {
+                let keep = s - f;
+                crate::nn::layers::shift_rows_up(&mut st.q[h], f);
+                crate::nn::layers::shift_rows_up(&mut st.k[h], f);
+                crate::nn::layers::shift_rows_up(&mut st.v[h], f);
+                crate::nn::layers::shift_score_block(&mut st.scores[h], f);
+                let (qf, kf, vf) = match cm {
+                    Some(c) => (
+                        dense_fixed_compiled(xf, &w.wq[h], &c.q[h], Activation::Linear),
+                        dense_fixed_compiled(xf, &w.wk[h], &c.k[h], Activation::Linear),
+                        dense_fixed_compiled(xf, &w.wv[h], &c.v[h], Activation::Linear),
+                    ),
+                    None => (
+                        dense_fixed(xf, &w.wq[h], &w.bq[h], Activation::Linear,
+                                    p.qkv.data, p.qkv.accum),
+                        dense_fixed(xf, &w.wk[h], &w.bk[h], Activation::Linear,
+                                    p.qkv.data, p.qkv.accum),
+                        dense_fixed(xf, &w.wv[h], &w.bv[h], Activation::Linear,
+                                    p.qkv.data, p.qkv.accum),
+                    ),
+                };
+                for i in 0..f {
+                    st.q[h].row_mut(keep + i).copy_from_slice(qf.row(i));
+                    st.k[h].row_mut(keep + i).copy_from_slice(kf.row(i));
+                    st.v[h].row_mut(keep + i).copy_from_slice(vf.row(i));
+                }
+                if hp.use_int_score {
+                    hp.convert_block(st.k[h].data(), &mut km_m);
+                }
+                // carried rows: only the fresh trailing columns
+                for i in 0..keep {
+                    let q_row = st.q[h].row(i);
+                    let score_row = st.scores[h].row_mut(i);
+                    if hp.use_int_score {
+                        score_q_row_int(q_row, &km_m[keep * k..], &mut score_row[keep..],
+                                        scale, &hp.conv_qkv, &hp.mq_score, hp.step_qkv_a,
+                                        &qd_sm);
+                    } else {
+                        score_q_row(q_row, &st.k[h].data()[keep * k..],
+                                    &mut score_row[keep..], scale, &qa_qkv, &qd_sm);
+                    }
+                }
+                // fresh rows: the whole row
+                for i in keep..s {
+                    let q_row = st.q[h].row(i);
+                    let score_row = st.scores[h].row_mut(i);
+                    if hp.use_int_score {
+                        score_q_row_int(q_row, &km_m, score_row, scale, &hp.conv_qkv,
+                                        &hp.mq_score, hp.step_qkv_a, &qd_sm);
+                    } else {
+                        score_q_row(q_row, st.k[h].data(), score_row, scale, &qa_qkv,
+                                    &qd_sm);
+                    }
+                }
+            }
+            _ => {
+                let (q, km, vm) = match cm {
+                    Some(c) => (
+                        dense_fixed_compiled(x, &w.wq[h], &c.q[h], Activation::Linear),
+                        dense_fixed_compiled(x, &w.wk[h], &c.k[h], Activation::Linear),
+                        dense_fixed_compiled(x, &w.wv[h], &c.v[h], Activation::Linear),
+                    ),
+                    None => (
+                        dense_fixed(x, &w.wq[h], &w.bq[h], Activation::Linear,
+                                    p.qkv.data, p.qkv.accum),
+                        dense_fixed(x, &w.wk[h], &w.bk[h], Activation::Linear,
+                                    p.qkv.data, p.qkv.accum),
+                        dense_fixed(x, &w.wv[h], &w.bv[h], Activation::Linear,
+                                    p.qkv.data, p.qkv.accum),
+                    ),
+                };
+                st.q[h] = q;
+                st.k[h] = km;
+                st.v[h] = vm;
+                if hp.use_int_score {
+                    hp.convert_block(st.k[h].data(), &mut km_m);
+                }
+                for i in 0..s {
+                    let q_row = st.q[h].row(i);
+                    let score_row = st.scores[h].row_mut(i);
+                    if hp.use_int_score {
+                        score_q_row_int(q_row, &km_m, score_row, scale, &hp.conv_qkv,
+                                        &hp.mq_score, hp.step_qkv_a, &qd_sm);
+                    } else {
+                        score_q_row(q_row, st.k[h].data(), score_row, scale, &qa_qkv,
+                                    &qd_sm);
+                    }
+                }
+            }
+        }
+        hotpath::tls_put_ints(km_m);
+
+        // ---- softmax + stage 3: full, per row, on a copy of the raw
+        // scores so the cached overlap block survives the next hop
+        let mut vm_m = hotpath::tls_take_ints(if hp.use_int_apply { s * k } else { 0 });
+        let max_vm =
+            if hp.use_int_apply { hp.convert_block(st.v[h].data(), &mut vm_m) } else { 0 };
+        for i in 0..s {
+            prob_row.copy_from_slice(st.scores[h].row(i));
+            softmax_fixed_row(&mut prob_row, roms, p.softmax.data, p.softmax.accum);
+            let out_row = &mut concat.row_mut(i)[h * k..(h + 1) * k];
+            if hp.use_int_apply {
+                apply_v_row_int(&prob_row, &vm_m, max_vm, st.v[h].data(), out_row,
+                                &hp.conv_sm, &hp.mq_apply, hp.step_out_a, &qa_out, &qd_out);
+            } else {
+                apply_v_row(&prob_row, st.v[h].data(), out_row, &qa_out, &qd_out);
+            }
+        }
+        hotpath::tls_put_ints(vm_m);
+    }
+
+    // ---- stage 4: concat + output projection ---------------------------
+    let out = match cm {
+        Some(c) => dense_fixed_compiled(&concat, &w.wo, &c.out, Activation::Linear),
+        None => dense_fixed(&concat, &w.wo, &w.bo, Activation::Linear, p.out.data,
+                            p.out.accum),
+    };
+    // the functional schedule fills every FIFO to S before draining, so
+    // the window path reports the same high-water marks as the regular
+    // per-event path (see `fifo_high_water_is_full_sequence`)
+    let stats = MhaFifoStats {
+        q_high_water: s,
+        score_high_water: s,
+        out_high_water: s,
+    };
+    (out, stats)
+}
+
 /// The MHA dataflow pipeline (figure 4) as a composed stage, with the
 /// stage-1/2 projection+score path at the `qkv` site's reuse/precision
 /// and the stage-3/4 output path at the `out` site's — the two dials a
@@ -898,6 +1105,60 @@ mod tests {
             let (got_b, _) =
                 mha_fixed_batch_sited_compiled(&x3, &w, &cm, &roms, &mut scratch);
             assert_eq!(got_b, want_b);
+        }
+    }
+
+    #[test]
+    fn window_mha_bitwise_matches_sited_across_hops_and_plans() {
+        // simulated stream windows: the cached incremental path must
+        // reproduce the from-scratch sited MHA bit for bit — per-call
+        // and compiled, uniform and mixed plans, int-eligible and
+        // reference-fallback grids, every hop geometry incl. no-reuse
+        let m = zoo_model("engine").unwrap();
+        let w = synthetic_weights(&m.config, 11).blocks[0].mha.clone();
+        let roms = Roms::new();
+        let (s, d) = (m.config.seq_len, m.config.d_model);
+        let plans = [
+            MhaPrecision::uniform(QuantConfig::from_spec(FixedSpec::new(16, 6))),
+            MhaPrecision {
+                qkv: QuantConfig::from_spec(FixedSpec::new(14, 5)),
+                out: QuantConfig::from_spec(FixedSpec::new(11, 4)),
+                softmax: QuantConfig::from_spec(FixedSpec::new(10, 3)),
+            },
+            // wide grid: int predicate fails, reference fallback path
+            MhaPrecision::uniform(QuantConfig::from_spec(FixedSpec::new(32, 12))),
+        ];
+        let mut g = Gen::new(55);
+        for p in &plans {
+            let cm = CompiledMha::build(&w, *p);
+            for hop in [s / 4, s / 2, s] {
+                let hop = hop.max(1);
+                let total = s + 2 * hop;
+                let stream = Mat::from_vec(total, d, g.normal_vec(total * d, 0.7));
+                let heads = w.wq.len();
+                let k = w.wq[0].cols();
+                let mut st = MhaWindowState::new(heads, s, k);
+                let mut st_cm = MhaWindowState::new(heads, s, k);
+                let mut prev: Option<usize> = None;
+                let mut start = 0usize;
+                while start + s <= total {
+                    let mut x = Mat::zeros(s, d);
+                    for t in 0..s {
+                        x.row_mut(t).copy_from_slice(stream.row(start + t));
+                    }
+                    let fresh = prev.map(|pv| start - pv);
+                    let (want, _) = mha_fixed_sited(&x, &w, &roms, p, None);
+                    let (got, stats) =
+                        mha_fixed_sited_window(&x, &w, &roms, p, None, &mut st, fresh);
+                    assert_eq!(got, want, "percall hop {hop} start {start}");
+                    assert_eq!(stats.q_high_water, s);
+                    let (got_cm, _) = mha_fixed_sited_window(&x, &w, &roms, p, Some(&cm),
+                                                             &mut st_cm, fresh);
+                    assert_eq!(got_cm, want, "compiled hop {hop} start {start}");
+                    prev = Some(start);
+                    start += hop;
+                }
+            }
         }
     }
 

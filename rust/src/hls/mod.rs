@@ -69,7 +69,7 @@ pub use precision::{
 };
 pub use report::SynthesisReport;
 pub use resources::Resources;
-pub use transformer::FixedTransformer;
+pub use transformer::{FixedTransformer, WindowCache};
 
 /// Reuse factor — the paper's central parallelization knob (§VI-B): the
 /// number of multiplications time-multiplexed onto each DSP.

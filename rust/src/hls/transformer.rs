@@ -23,7 +23,7 @@ use super::layernorm::{
 };
 use super::mha::{
     mha_fixed_batch_sited, mha_fixed_batch_sited_compiled, mha_fixed_sited,
-    mha_fixed_sited_compiled, MhaFifoStats,
+    mha_fixed_sited_compiled, mha_fixed_sited_window, MhaFifoStats, MhaWindowState,
 };
 use super::parallelism::ParallelismPlan;
 use super::pipeline::PipelineModel;
@@ -42,8 +42,9 @@ use std::sync::Arc;
 use crate::fixed::FixedSpec;
 use crate::models::config::{FinalActivation, ModelConfig};
 use crate::models::weights::Weights;
-use crate::nn::layers::Activation;
+use crate::nn::layers::{rows_tail, shift_rows_up, Activation};
 use crate::nn::tensor::{Mat, Mat3};
+use crate::stream::ReuseCounters;
 
 pub use super::precision::QuantConfig;
 
@@ -69,6 +70,42 @@ pub struct FixedTransformer {
     /// Reusable buffers for the batched kernels — allocated on first use
     /// and reused across every later batch served by this engine.
     scratch: std::cell::RefCell<Scratch>,
+}
+
+/// Per-stream incremental state for [`FixedTransformer::forward_incremental`]:
+/// the block-0 prefix rows (embed output already cast onto the block-0
+/// QKV grid) plus the block-0 MHA window state (Q/K/V rows and raw
+/// pre-softmax scores), keyed by the absolute sample position of the
+/// last window served.  One cache per (engine, stream) pair — a sharded
+/// worker pool holds one per shard, since the router hands each shard a
+/// strided sub-stream whose own deltas key the reuse.
+///
+/// All cached values are the canonical on-grid `f32` representation the
+/// kernels exchange, so replaying them is bitwise identical to
+/// recomputing them; integer-mantissa hoists are re-derived per window
+/// (a deterministic conversion).
+#[derive(Clone, Debug)]
+pub struct WindowCache {
+    pos: Option<u64>,
+    /// Embed output rows, cast onto the block-0 QKV data grid (the
+    /// representation entering the block-0 attention engine).
+    h_qkv: Mat,
+    mha: MhaWindowState,
+    counters: ReuseCounters,
+}
+
+impl WindowCache {
+    /// Reuse/recompute accounting accumulated by every
+    /// [`FixedTransformer::forward_incremental`] call through this cache.
+    pub fn counters(&self) -> ReuseCounters {
+        self.counters
+    }
+
+    /// Drop the retained window: the next call recomputes everything
+    /// (and repopulates), regardless of position delta.
+    pub fn invalidate(&mut self) {
+        self.pos = None;
+    }
 }
 
 impl FixedTransformer {
@@ -558,6 +595,169 @@ impl FixedTransformer {
         }
     }
 
+    /// A fresh per-stream cache for [`Self::forward_incremental`], sized
+    /// from this engine's dimensions.
+    pub fn window_cache(&self) -> WindowCache {
+        let s = self.cfg.seq_len;
+        let (heads, k) = match self.weights.blocks.first() {
+            Some(b) => (b.mha.wq.len(), b.mha.wq[0].cols()),
+            None => (0, 0),
+        };
+        WindowCache {
+            pos: None,
+            h_qkv: Mat::zeros(s, self.weights.embed.0.cols()),
+            mha: MhaWindowState::new(heads, s, k),
+            counters: ReuseCounters::default(),
+        }
+    }
+
+    /// [`Self::forward`] for consecutive stream windows: reuses the
+    /// block-0 prefix rows (embed -> QKV-grid cast -> Q/K/V projections)
+    /// and the raw QK^T overlap block that the previous window at
+    /// position `cache.pos` already computed.  `pos` is the absolute
+    /// sample index of the window's first row; reuse engages iff the
+    /// delta to the cached window is positive and smaller than
+    /// `seq_len` (same stream, overlapping rows).  Anything else — first
+    /// window, hop >= S, a stream restart (backwards position), a
+    /// duplicate position — falls back to a full recompute and
+    /// repopulates the cache.
+    ///
+    /// **Bitwise identical** to [`Self::forward`] on the same window:
+    /// the zoo models carry no positional encoding, every reused kernel
+    /// computes each output row/entry purely from its own input rows,
+    /// and softmax-onward always recomputes (softmax is row-global —
+    /// fresh columns land in every row).  Pinned below across zoo
+    /// models, uniform and mixed plans, and by the coordinator's
+    /// streamed-vs-naive suite.
+    pub fn forward_incremental(
+        &self,
+        x: &Mat,
+        pos: u64,
+        cache: &mut WindowCache,
+    ) -> Vec<f32> {
+        assert_eq!(x.rows(), self.cfg.seq_len, "bad seq len");
+        assert_eq!(x.cols(), self.cfg.input_size, "bad input size");
+        let p = &self.plan;
+        let w = &*self.weights;
+        let c = &*self.compiled;
+        let roms = &c.roms;
+        let s = self.cfg.seq_len;
+        let delta = match cache.pos {
+            Some(prev)
+                if pos > prev && pos - prev < s as u64 && !w.blocks.is_empty() =>
+            {
+                (pos - prev) as usize
+            }
+            _ => 0,
+        };
+        cache.pos = Some(pos);
+        if w.blocks.is_empty() {
+            // degenerate (not in the zoo): nothing is cacheable
+            cache.counters.windows_full += 1;
+            cache.counters.rows_recomputed += s as u64;
+            return self.forward(x);
+        }
+        let heads = w.blocks[0].mha.wq.len() as u64;
+        let su = s as u64;
+        let bp0 = *p.block(0);
+        if delta > 0 {
+            // carried rows shift up; only the `delta` fresh tail rows pay
+            // the embed dense + QKV-grid cast
+            let keep = s - delta;
+            shift_rows_up(&mut cache.h_qkv, delta);
+            let xf = rows_tail(x, delta);
+            let xq = xf.map(|v| p.embed().data.quantize(v));
+            let ef = dense_fixed_compiled(&xq, &w.embed.0, &c.embed, Activation::Linear);
+            let ef = quantize_mat(&ef, bp0.qkv.data);
+            for i in 0..delta {
+                cache.h_qkv.row_mut(keep + i).copy_from_slice(ef.row(i));
+            }
+            let d = delta as u64;
+            cache.counters.windows_incremental += 1;
+            cache.counters.rows_recomputed += d;
+            cache.counters.rows_reused += su - d;
+            cache.counters.score_block_hits += heads;
+            cache.counters.score_entries_fresh += heads * (su * su - (su - d) * (su - d));
+            cache.counters.score_entries_reused += heads * (su - d) * (su - d);
+        } else {
+            let xq = x.map(|v| p.embed().data.quantize(v));
+            let e = dense_fixed_compiled(&xq, &w.embed.0, &c.embed, Activation::Linear);
+            cache.h_qkv = quantize_mat(&e, bp0.qkv.data);
+            cache.counters.windows_full += 1;
+            cache.counters.rows_recomputed += su;
+            cache.counters.score_entries_fresh += heads * su * su;
+        }
+        let resident = (cache.h_qkv.data().len() * 4) as u64 + cache.mha.bytes();
+        cache.counters.cache_bytes = cache.counters.cache_bytes.max(resident);
+        let mut h = cache.h_qkv.clone();
+        let mut fifo_stats = MhaFifoStats::default();
+        for (b, blk) in w.blocks.iter().enumerate() {
+            let bp = *p.block(b);
+            // re-grid cast onto the QKV grid — idempotent for block 0,
+            // whose cached rows already live there
+            h = quantize_mat(&h, bp.qkv.data);
+            let (attn, stats) = if b == 0 {
+                let cm = &c.blocks[b].mha;
+                let pm = cm.precision();
+                mha_fixed_sited_window(
+                    &h,
+                    &blk.mha,
+                    roms,
+                    &pm,
+                    Some(cm),
+                    &mut cache.mha,
+                    (delta > 0).then_some(delta),
+                )
+            } else {
+                mha_fixed_sited_compiled(&h, &blk.mha, &c.blocks[b].mha, roms, None)
+            };
+            fifo_stats.q_high_water = fifo_stats.q_high_water.max(stats.q_high_water);
+            fifo_stats.score_high_water =
+                fifo_stats.score_high_water.max(stats.score_high_water);
+            fifo_stats.out_high_water = fifo_stats.out_high_water.max(stats.out_high_water);
+            let sum = h.add(&attn); // residual adder
+            h = quantize_mat(&sum, bp.mha_out.data);
+            if blk.ln1.is_some() {
+                h = quantize_mat(&h, bp.ln1.data); // re-grid cast
+                let site = c.blocks[b].ln1.as_ref().expect("compiled LN follows weights");
+                for r in 0..h.rows() {
+                    layernorm_fixed_row_compiled(h.row_mut(r), site, roms);
+                }
+            }
+            h = quantize_mat(&h, bp.ffn1.data); // re-grid cast
+            let y = dense_fixed_compiled(&h, &blk.ffn1.0, &c.blocks[b].ffn1, Activation::Relu);
+            let y2_in = quantize_mat(&y, bp.ffn2.data); // re-grid cast
+            let y =
+                dense_fixed_compiled(&y2_in, &blk.ffn2.0, &c.blocks[b].ffn2, Activation::Linear);
+            let sum = h.add(&y); // residual adder
+            h = quantize_mat(&sum, bp.ffn2.data);
+            if blk.ln2.is_some() {
+                h = quantize_mat(&h, bp.ln2.data); // re-grid cast
+                let site = c.blocks[b].ln2.as_ref().expect("compiled LN follows weights");
+                for r in 0..h.rows() {
+                    layernorm_fixed_row_compiled(h.row_mut(r), site, roms);
+                }
+            }
+        }
+        self.last_fifo_stats.set(fifo_stats);
+        let pool_in = quantize_mat(&h, p.pool().data);
+        let pooled = global_average_pool_fixed_compiled(&pool_in, &c.pool);
+        let head_in = quantize_mat(&pooled, p.head().data);
+        let hid = dense_fixed_compiled(&head_in, &w.head.0, &c.head, Activation::Relu);
+        let out_in = quantize_mat(&hid, p.out().data);
+        let logits = dense_fixed_compiled(&out_in, &w.out.0, &c.out, Activation::Linear);
+        let mut out = logits.row(0).to_vec();
+        match self.cfg.final_activation() {
+            FinalActivation::Sigmoid => {
+                out[0] = sigmoid_fixed(out[0], roms, p.softmax().data);
+            }
+            FinalActivation::Softmax => {
+                softmax_fixed_row_compiled(&mut out, &c.softmax, roms);
+            }
+        }
+        out
+    }
+
     /// The site-graph IR of this engine under `par`: one typed node per
     /// layer site carrying its `FixedSpec` pair, reuse factor, stage
     /// schedule and resource estimate; edges carry the inter-stage
@@ -921,6 +1121,128 @@ mod tests {
                 m.config.name
             );
         }
+    }
+
+    /// Continuous stream of `n` samples at one model's input width; a
+    /// window at absolute sample position `pos` is the naive re-slice.
+    fn stream_buf(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<f32> {
+        let mut g = Gen::new(seed);
+        g.normal_vec(n * cfg.input_size, 1.0)
+    }
+
+    fn window_at(cfg: &ModelConfig, buf: &[f32], pos: usize) -> Mat {
+        let d = cfg.input_size;
+        Mat::from_vec(
+            cfg.seq_len,
+            d,
+            buf[pos * d..(pos + cfg.seq_len) * d].to_vec(),
+        )
+    }
+
+    /// The incremental tentpole's hard contract: streamed windows served
+    /// through [`FixedTransformer::forward_incremental`] are bitwise
+    /// identical to a naive full recompute of every window — across all
+    /// zoo models, uniform AND mixed plans, and hops S/4, S/2, S and
+    /// beyond-S (the no-overlap fallback).
+    #[test]
+    fn incremental_forward_bitwise_matches_full_across_zoo_plans_and_hops() {
+        for m in zoo() {
+            let w = synthetic_weights(&m.config, 11);
+            let uniform = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 10));
+            let mut plan =
+                PrecisionPlan::uniform(m.config.num_blocks, QuantConfig::new(6, 10));
+            for (i, site) in plan.site_names().into_iter().enumerate() {
+                let frac = 6 + (i as u32 % 5);
+                let int = 4 + (i as u32 % 3);
+                plan.set_data(&site, FixedSpec::new(int + frac, int)).unwrap();
+            }
+            let mixed = FixedTransformer::with_plan(m.config.clone(), &w, plan);
+            let s = m.config.seq_len;
+            let hops =
+                [s.div_ceil(4).max(1), s.div_ceil(2).max(1), s, s + 3];
+            for t in [&uniform, &mixed] {
+                for hop in hops {
+                    let n_win = 4;
+                    let buf = stream_buf(&m.config, s + hop * n_win, 9 ^ hop as u64);
+                    let mut cache = t.window_cache();
+                    for wi in 0..n_win {
+                        let pos = wi * hop;
+                        let x = window_at(&m.config, &buf, pos);
+                        assert_eq!(
+                            t.forward_incremental(&x, pos as u64, &mut cache),
+                            t.forward(&x),
+                            "{} hop {hop} window {wi}",
+                            m.config.name
+                        );
+                    }
+                    if hop < s {
+                        assert!(cache.counters().any_reuse(), "{} hop {hop}", m.config.name);
+                    } else {
+                        assert_eq!(cache.counters().windows_incremental, 0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Steady-state accounting is *exact*: after the cold window, every
+    /// warm window recomputes precisely `hop` prefix rows and
+    /// `heads * (S^2 - (S-hop)^2)` fresh score entries per block-0 head.
+    #[test]
+    fn incremental_steady_state_counters_are_exact() {
+        let m = zoo_model("gw").unwrap();
+        let w = synthetic_weights(&m.config, 13);
+        let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 10));
+        let s = m.config.seq_len;
+        let heads = m.config.num_heads as u64;
+        let hop = (s / 4).max(1);
+        let warm = 4u64;
+        let buf = stream_buf(&m.config, s + hop * warm as usize, 21);
+        let mut cache = t.window_cache();
+        for wi in 0..=warm as usize {
+            let pos = wi * hop;
+            t.forward_incremental(&window_at(&m.config, &buf, pos), pos as u64, &mut cache);
+        }
+        let (su, h, d) = (s as u64, hop as u64, cache.counters());
+        assert_eq!(d.windows_full, 1);
+        assert_eq!(d.windows_incremental, warm);
+        assert_eq!(d.rows_recomputed, su + warm * h);
+        assert_eq!(d.rows_reused, warm * (su - h));
+        assert_eq!(d.score_block_hits, warm * heads);
+        assert_eq!(
+            d.score_entries_fresh,
+            heads * su * su + warm * heads * (su * su - (su - h) * (su - h))
+        );
+        assert_eq!(d.score_entries_reused, warm * heads * (su - h) * (su - h));
+        // the resident footprint matches the artifact's sizing estimate
+        assert_eq!(d.cache_bytes, t.compiled().window_cache_bytes(s));
+        assert!(d.cache_bytes > 0);
+    }
+
+    /// Restarts and non-monotonic positions fall back to a full
+    /// recompute — still bitwise right, never a stale carry.
+    #[test]
+    fn incremental_stream_restart_falls_back_to_full_recompute() {
+        let m = zoo_model("btag").unwrap();
+        let w = synthetic_weights(&m.config, 17);
+        let t = FixedTransformer::new(m.config.clone(), &w, QuantConfig::new(6, 10));
+        let mut cache = t.window_cache();
+        // unrelated windows at adversarial positions: backwards, equal
+        for (seed, pos) in [(1u64, 1000u64), (2, 0), (3, 0), (4, 5000)] {
+            let x = event(&m.config, seed);
+            let inc = t.forward_incremental(&x, pos, &mut cache);
+            assert_eq!(inc, t.forward(&x), "pos {pos}");
+        }
+        // pos 0 -> 5000 is a forward jump past S: also a full recompute
+        assert_eq!(cache.counters().windows_full, 4);
+        assert_eq!(cache.counters().windows_incremental, 0);
+        // invalidate() forces the fallback even on a friendly delta
+        let x = event(&m.config, 9);
+        t.forward_incremental(&x, 5001, &mut cache);
+        cache.invalidate();
+        let y = event(&m.config, 10);
+        assert_eq!(t.forward_incremental(&y, 5002, &mut cache), t.forward(&y));
+        assert_eq!(cache.counters().windows_incremental, 1); // only the 5000->5001 hop
     }
 
     /// Clones share the artifact by pointer — the property the

@@ -85,6 +85,7 @@ fn usage() {
          \x20                  [--model engine] [--samples N] [--hop H]\n\
          \x20                  [--threshold Z] [--mean-gap G] [--amp-lo A --amp-hi B]\n\
          \x20                  [--seed S] [--batch B] [--replicas R] [--rate SPS]\n\
+         \x20                  [--no-reuse]       naive full recompute per window\n\
          \x20 report                              all experiments in sequence\n\
          models: engine | btag | gw    backends: float | hls | pjrt"
     );
@@ -550,7 +551,7 @@ fn run(args: &Args) -> Result<()> {
         "stream" => {
             args.expect_only(&[
                 "model", "backend", "samples", "hop", "seed", "mean-gap", "amp-lo",
-                "amp-hi", "threshold", "batch", "replicas", "rate", "ring",
+                "amp-hi", "threshold", "batch", "replicas", "rate", "ring", "no-reuse",
             ])
             .map_err(anyhow::Error::msg)?;
             let cfg = model_arg(args)?;
@@ -580,6 +581,10 @@ fn run(args: &Args) -> Result<()> {
             anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
             let rate = args.get_parse("rate", 0u64).map_err(anyhow::Error::msg)?;
             let ring = args.get_parse("ring", 8192usize).map_err(anyhow::Error::msg)?;
+            // incremental cross-window reuse is on by default (bitwise
+            // identical to the naive path); --no-reuse forces the full
+            // recompute for A/B measurement
+            let reuse = !args.has("no-reuse");
             let dir = artifacts_dir();
             let weights = if artifacts_ready(&dir, &cfg.name) {
                 WeightsSource::Artifacts
@@ -607,7 +612,7 @@ fn run(args: &Args) -> Result<()> {
                     replicas,
                     ring_capacity: ring,
                     weights,
-                    source: SourceMode::Stream(StreamSource { samples, hop, strain }),
+                    source: SourceMode::Stream(StreamSource { samples, hop, strain, reuse }),
                     ..PipelineConfig::new(model, backend)
                 }],
                 events_per_source: 0,
@@ -635,6 +640,24 @@ fn run(args: &Args) -> Result<()> {
                  at hop {hop} (x{:.1} overlap)",
                 cfg.seq_len as f64 / hop as f64
             );
+            let ru = s.reuse;
+            if reuse {
+                println!(
+                    "reuse: {}/{} windows incremental | {} prefix rows reused / {} \
+                     recomputed ({:.1}%) | {} score entries reused ({:.1}%) | \
+                     cache {:.1} KiB high-water",
+                    ru.windows_incremental,
+                    ru.windows(),
+                    ru.rows_reused,
+                    ru.rows_recomputed,
+                    100.0 * ru.row_reuse_fraction(),
+                    ru.score_entries_reused,
+                    100.0 * ru.score_reuse_fraction(),
+                    ru.cache_bytes as f64 / 1024.0,
+                );
+            } else {
+                println!("reuse: disabled (--no-reuse; naive full recompute per window)");
+            }
             benchjson::emit(
                 // the parsed enum, not the raw flag: aliases like
                 // `--backend fixed` must land on the same perf-series key
@@ -652,6 +675,11 @@ fn run(args: &Args) -> Result<()> {
                     ("false_alarms", sr.false_alarms as f64),
                     ("trigger_p99_ns", sr.trigger_latency.quantile_ns(0.99) as f64),
                     ("window_p99_ns", s.latency.quantile_ns(0.99) as f64),
+                    ("reuse_enabled", reuse as u64 as f64),
+                    ("windows_incremental", ru.windows_incremental as f64),
+                    ("row_reuse_fraction", ru.row_reuse_fraction()),
+                    ("score_reuse_fraction", ru.score_reuse_fraction()),
+                    ("reuse_cache_bytes", ru.cache_bytes as f64),
                 ],
             );
         }

@@ -204,6 +204,144 @@ pub fn mha_batch(x: &Mat3, w: &MhaWeights) -> Mat3 {
     dense_batch(&concat, &w.wo, &w.bo, Activation::Linear)
 }
 
+/// Retained block-0 attention state for one stream's float window
+/// cache: per-head Q/K/V projections and the *raw* (pre-softmax) scaled
+/// score matrix.  Raw scores are kept because softmax is row-global —
+/// a cached window's score row gains fresh columns at the next hop, so
+/// only the pre-softmax entries are shareable.
+#[derive(Clone, Debug)]
+pub struct MhaWindowState {
+    pub q: Vec<Mat>,
+    pub k: Vec<Mat>,
+    pub v: Vec<Mat>,
+    pub scores: Vec<Mat>,
+}
+
+impl MhaWindowState {
+    pub fn new(heads: usize, s: usize, k: usize) -> Self {
+        Self {
+            q: (0..heads).map(|_| Mat::zeros(s, k)).collect(),
+            v: (0..heads).map(|_| Mat::zeros(s, k)).collect(),
+            k: (0..heads).map(|_| Mat::zeros(s, k)).collect(),
+            scores: (0..heads).map(|_| Mat::zeros(s, s)).collect(),
+        }
+    }
+
+    /// Resident bytes of the cached state (f32 payloads).
+    pub fn bytes(&self) -> u64 {
+        let f = |ms: &[Mat]| ms.iter().map(|m| m.data().len() * 4).sum::<usize>() as u64;
+        f(&self.q) + f(&self.k) + f(&self.v) + f(&self.scores)
+    }
+}
+
+/// Shift the leading `rows - delta` rows of `m` up by `delta` rows in
+/// place (memmove semantics) — the cache's "carry the overlap" step.
+pub(crate) fn shift_rows_up(m: &mut Mat, delta: usize) {
+    let cols = m.cols();
+    m.data_mut().copy_within(delta * cols.., 0);
+}
+
+/// Shift the `(s - delta) x (s - delta)` trailing sub-block of a square
+/// score matrix to its top-left corner in place: new entry `(i, j)` is
+/// old entry `(i + delta, j + delta)` — the overlap block of QK^T
+/// between two windows `delta` samples apart.
+pub(crate) fn shift_score_block(m: &mut Mat, delta: usize) {
+    let s = m.cols();
+    let keep = s - delta;
+    for i in 0..keep {
+        let src = (i + delta) * s + delta;
+        m.data_mut().copy_within(src..src + keep, i * s);
+    }
+}
+
+/// Copy of the trailing `fresh` rows of `x` (the new tokens).
+pub(crate) fn rows_tail(x: &Mat, fresh: usize) -> Mat {
+    let lo = x.rows() - fresh;
+    let mut out = Mat::zeros(fresh, x.cols());
+    for i in 0..fresh {
+        out.row_mut(i).copy_from_slice(x.row(lo + i));
+    }
+    out
+}
+
+/// Multi-head attention over a window cache: with `fresh = None` (or a
+/// cold cache) this recomputes everything, populating `st`; with
+/// `fresh = Some(delta)`, `0 < delta < S`, the leading `S - delta` rows
+/// of `x` are carried over from the previous window, so only the
+/// trailing `delta` rows run the Q/K/V projections and only the fresh
+/// score rows/columns run the dot-product kernel — the cached overlap
+/// block supplies the rest.  **Bitwise identical** to [`mha`] either
+/// way: dense rows and score entries depend only on their own input
+/// rows, and the softmax/apply-V epilogue below replays [`mha`]'s exact
+/// per-row operation order on the same raw score values.
+pub fn mha_window(x: &Mat, w: &MhaWeights, st: &mut MhaWindowState, fresh: Option<usize>) -> Mat {
+    let s = x.rows();
+    let heads = w.wq.len();
+    let k = w.wq[0].cols();
+    let scale = 1.0 / (k as f32).sqrt();
+    let delta = fresh.filter(|&f| f > 0 && f < s);
+    let x_fresh = delta.map(|f| rows_tail(x, f));
+    let mut concat = Mat::zeros(s, heads * k);
+    let mut prob_row = vec![0.0f32; s];
+    for h in 0..heads {
+        match (delta, &x_fresh) {
+            (Some(f), Some(xf)) => {
+                let keep = s - f;
+                shift_rows_up(&mut st.q[h], f);
+                shift_rows_up(&mut st.k[h], f);
+                shift_rows_up(&mut st.v[h], f);
+                shift_score_block(&mut st.scores[h], f);
+                let qf = dense(xf, &w.wq[h], &w.bq[h], Activation::Linear);
+                let kf = dense(xf, &w.wk[h], &w.bk[h], Activation::Linear);
+                let vf = dense(xf, &w.wv[h], &w.bv[h], Activation::Linear);
+                for i in 0..f {
+                    st.q[h].row_mut(keep + i).copy_from_slice(qf.row(i));
+                    st.k[h].row_mut(keep + i).copy_from_slice(kf.row(i));
+                    st.v[h].row_mut(keep + i).copy_from_slice(vf.row(i));
+                }
+                // fresh score entries: new columns of carried rows, then
+                // the all-fresh rows — each entry is an independent dot
+                for i in 0..keep {
+                    for j in keep..s {
+                        *st.scores[h].at_mut(i, j) =
+                            dot(st.q[h].row(i), st.k[h].row(j)) * scale;
+                    }
+                }
+                for i in keep..s {
+                    for j in 0..s {
+                        *st.scores[h].at_mut(i, j) =
+                            dot(st.q[h].row(i), st.k[h].row(j)) * scale;
+                    }
+                }
+            }
+            _ => {
+                st.q[h] = dense(x, &w.wq[h], &w.bq[h], Activation::Linear);
+                st.k[h] = dense(x, &w.wk[h], &w.bk[h], Activation::Linear);
+                st.v[h] = dense(x, &w.wv[h], &w.bv[h], Activation::Linear);
+                for i in 0..s {
+                    for j in 0..s {
+                        *st.scores[h].at_mut(i, j) =
+                            dot(st.q[h].row(i), st.k[h].row(j)) * scale;
+                    }
+                }
+            }
+        }
+        // softmax + apply-V per row, in [`Mat::matmul`]'s accumulation
+        // order, on a copy so the cached raw scores survive the hop
+        for i in 0..s {
+            prob_row.copy_from_slice(st.scores[h].row(i));
+            softmax_row_in_place(&mut prob_row);
+            let out = &mut concat.row_mut(i)[h * k..(h + 1) * k];
+            for (kk, &p) in prob_row.iter().enumerate() {
+                for (o, &vv) in out.iter_mut().zip(st.v[h].row(kk)) {
+                    *o += p * vv;
+                }
+            }
+        }
+    }
+    dense(&concat, &w.wo, &w.bo, Activation::Linear)
+}
+
 /// Column-wise mean over the sequence: (S, d) -> (1, d).
 pub fn global_average_pool(x: &Mat) -> Mat {
     let mut out = Mat::zeros(1, x.cols());
@@ -338,6 +476,49 @@ mod tests {
                     // accumulator's addition sequence exactly
                     assert_eq!(batched.event(i), dense(e, &w, &b, act));
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mha_window_bitwise_matches_mha_across_hops() {
+        // a simulated stream: consecutive windows share rows, and the
+        // cached path must reproduce the from-scratch MHA bit for bit —
+        // including the cold first window, hop >= S (no reuse), and a
+        // mid-stream cache invalidation (fresh = None on a warm cache)
+        Prop::new("mha_window == mha").runs(40).check(|g| {
+            let (s, d) = (g.usize_in(2, 8), 8usize);
+            let heads = 2;
+            let k = d / heads;
+            let w = MhaWeights {
+                wq: (0..heads).map(|_| rand_mat(g, d, k, 0.5)).collect(),
+                bq: (0..heads).map(|_| g.normal_vec(k, 0.1)).collect(),
+                wk: (0..heads).map(|_| rand_mat(g, d, k, 0.5)).collect(),
+                bk: (0..heads).map(|_| g.normal_vec(k, 0.1)).collect(),
+                wv: (0..heads).map(|_| rand_mat(g, d, k, 0.5)).collect(),
+                bv: (0..heads).map(|_| g.normal_vec(k, 0.1)).collect(),
+                wo: rand_mat(g, heads * k, d, 0.5),
+                bo: g.normal_vec(d, 0.1),
+            };
+            let hop = g.usize_in(1, s + 2);
+            let stream = rand_mat(g, s + 4 * hop, d, 1.0);
+            let mut st = MhaWindowState::new(heads, s, k);
+            let mut prev_start: Option<usize> = None;
+            let mut start = 0usize;
+            while start + s <= stream.rows() {
+                let mut x = Mat::zeros(s, d);
+                for t in 0..s {
+                    x.row_mut(t).copy_from_slice(stream.row(start + t));
+                }
+                let fresh = match prev_start {
+                    Some(p) if start - p < s && g.usize_in(0, 9) > 0 => Some(start - p),
+                    // occasional None on a warm cache = forced repopulate
+                    _ => None,
+                };
+                let got = mha_window(&x, &w, &mut st, fresh);
+                assert_eq!(got, mha(&x, &w), "s={s} hop={hop} start={start}");
+                prev_start = Some(start);
+                start += hop;
             }
         });
     }

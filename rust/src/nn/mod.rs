@@ -31,4 +31,4 @@ pub mod tensor;
 pub mod transformer;
 
 pub use tensor::{Mat, Mat3};
-pub use transformer::FloatTransformer;
+pub use transformer::{FloatTransformer, FloatWindowCache};

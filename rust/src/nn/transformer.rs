@@ -4,17 +4,47 @@
 
 use super::layers::{
     dense, dense_batch, global_average_pool, global_average_pool_batch,
-    layernorm_batch, layernorm_rows, mha, mha_batch, Activation,
+    layernorm_batch, layernorm_rows, mha, mha_batch, mha_window, rows_tail,
+    shift_rows_up, Activation, MhaWindowState,
 };
 use super::tensor::{Mat, Mat3};
 use crate::models::config::{FinalActivation, ModelConfig};
 use crate::models::weights::Weights;
+use crate::stream::ReuseCounters;
 
 /// Exact-float inference engine for one zoo model.
 #[derive(Clone, Debug)]
 pub struct FloatTransformer {
     cfg: ModelConfig,
     weights: Weights,
+}
+
+/// Per-stream state for [`FloatTransformer::forward_incremental`]: the
+/// previous window's embed output plus its block-0 attention state
+/// (Q/K/V rows and raw QK^T scores), keyed by the window's absolute
+/// sample position.  One cache per stream per shard — never share one
+/// across interleaved streams.
+#[derive(Clone, Debug)]
+pub struct FloatWindowCache {
+    /// Start position of the cached window (None = cold).
+    pos: Option<u64>,
+    /// Embed-dense output rows for the cached window (S, d_model).
+    embed: Mat,
+    /// Block-0 attention state (see [`MhaWindowState`]).
+    mha: MhaWindowState,
+    counters: ReuseCounters,
+}
+
+impl FloatWindowCache {
+    pub fn counters(&self) -> &ReuseCounters {
+        &self.counters
+    }
+
+    /// Drop the cached window (e.g. on stream restart): the next
+    /// [`FloatTransformer::forward_incremental`] call recomputes fully.
+    pub fn invalidate(&mut self) {
+        self.pos = None;
+    }
 }
 
 impl FloatTransformer {
@@ -90,6 +120,110 @@ impl FloatTransformer {
         let hid = dense_batch(&pooled, &w.head.0, &w.head.1, Activation::Relu);
         let logits = dense_batch(&hid, &w.out.0, &w.out.1, Activation::Linear);
         (0..xs.len()).map(|i| logits.event_row(i, 0).to_vec()).collect()
+    }
+
+    /// Fresh per-stream cache for [`Self::forward_incremental`].
+    pub fn window_cache(&self) -> FloatWindowCache {
+        let s = self.cfg.seq_len;
+        let w = &self.weights;
+        let (heads, k) = match w.blocks.first() {
+            Some(b) => (b.mha.wq.len(), b.mha.wq[0].cols()),
+            None => (0, 0),
+        };
+        FloatWindowCache {
+            pos: None,
+            embed: Mat::zeros(s, w.embed.0.cols()),
+            mha: MhaWindowState::new(heads, s, k),
+            counters: ReuseCounters::default(),
+        }
+    }
+
+    /// Forward one stream window starting at absolute sample `pos`,
+    /// reusing the overlap with the cached previous window when sound.
+    ///
+    /// The zoo transformers carry no positional encoding, so when two
+    /// consecutive windows share `S - delta` token rows the embed
+    /// output, the block-0 Q/K/V rows, and the `(S-delta)^2` overlap
+    /// block of raw block-0 QK^T scores for those rows are **bitwise
+    /// identical** — each depends only on its own token row(s).  This
+    /// entry recomputes exactly the fresh rows/entries and is bitwise
+    /// identical to [`Self::forward`] (property-tested); anything that
+    /// makes reuse unsound — cold cache, non-overlapping or backwards
+    /// `pos` (stream restart), a model without attention blocks —
+    /// falls back to a full recompute that repopulates the cache.
+    pub fn forward_incremental(
+        &self,
+        x: &Mat,
+        pos: u64,
+        cache: &mut FloatWindowCache,
+    ) -> Vec<f32> {
+        assert_eq!(x.rows(), self.cfg.seq_len, "bad seq len");
+        assert_eq!(x.cols(), self.cfg.input_size, "bad input size");
+        let s = self.cfg.seq_len;
+        let w = &self.weights;
+        let delta = match cache.pos {
+            Some(p) if pos > p && pos - p < s as u64 && !w.blocks.is_empty() => {
+                (pos - p) as usize
+            }
+            _ => 0, // full recompute (and repopulate)
+        };
+        cache.pos = Some(pos);
+        if w.blocks.is_empty() {
+            cache.counters.windows_full += 1;
+            cache.counters.rows_recomputed += s as u64;
+            return self.forward(x);
+        }
+        let heads = w.blocks[0].mha.wq.len() as u64;
+        let su = s as u64;
+        let mut h = if delta > 0 {
+            let keep = s - delta;
+            shift_rows_up(&mut cache.embed, delta);
+            let ef = dense(&rows_tail(x, delta), &w.embed.0, &w.embed.1, Activation::Linear);
+            for i in 0..delta {
+                cache.embed.row_mut(keep + i).copy_from_slice(ef.row(i));
+            }
+            let c = &mut cache.counters;
+            c.windows_incremental += 1;
+            c.rows_reused += keep as u64;
+            c.rows_recomputed += delta as u64;
+            c.score_block_hits += heads;
+            c.score_entries_reused += heads * (keep as u64) * (keep as u64);
+            c.score_entries_fresh += heads * (su * su - (keep as u64) * (keep as u64));
+            cache.embed.clone()
+        } else {
+            cache.embed = dense(x, &w.embed.0, &w.embed.1, Activation::Linear);
+            let c = &mut cache.counters;
+            c.windows_full += 1;
+            c.rows_recomputed += su;
+            c.score_entries_fresh += heads * su * su;
+            cache.embed.clone()
+        };
+        cache.counters.cache_bytes = cache
+            .counters
+            .cache_bytes
+            .max(cache.embed.data().len() as u64 * 4 + cache.mha.bytes());
+        for (bi, b) in w.blocks.iter().enumerate() {
+            let attn = if bi == 0 {
+                let fresh = if delta > 0 { Some(delta) } else { None };
+                mha_window(&h, &b.mha, &mut cache.mha, fresh)
+            } else {
+                mha(&h, &b.mha)
+            };
+            h = h.add(&attn); // residual
+            if let Some(ln) = &b.ln1 {
+                h = layernorm_rows(&h, &ln.gamma, &ln.beta);
+            }
+            let y = dense(&h, &b.ffn1.0, &b.ffn1.1, Activation::Relu);
+            let y = dense(&y, &b.ffn2.0, &b.ffn2.1, Activation::Linear);
+            h = h.add(&y); // residual
+            if let Some(ln) = &b.ln2 {
+                h = layernorm_rows(&h, &ln.gamma, &ln.beta);
+            }
+        }
+        let pooled = global_average_pool(&h);
+        let hid = dense(&pooled, &w.head.0, &w.head.1, Activation::Relu);
+        let logits = dense(&hid, &w.out.0, &w.out.1, Activation::Linear);
+        logits.row(0).to_vec()
     }
 
     /// Logits -> probabilities per the model's head.
@@ -198,6 +332,99 @@ mod tests {
         let m = &zoo()[0];
         let t = FloatTransformer::new(m.config.clone(), synthetic_weights(&m.config, 1));
         assert!(t.forward_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn incremental_forward_bitwise_matches_full_across_zoo_and_hops() {
+        // windows cut from one continuous stream: the incremental path
+        // must equal the from-scratch forward bit for bit at every hop,
+        // including hop >= S (zero reuse) and the cold first window
+        for m in zoo() {
+            let t = FloatTransformer::new(m.config.clone(), synthetic_weights(&m.config, 13));
+            let s = m.config.seq_len;
+            let d = m.config.input_size;
+            let mut g = Gen::new(17);
+            for hop in [s.div_ceil(4).max(1), s.div_ceil(2).max(1), s, s + 3] {
+                let total = s + 3 * hop;
+                let stream: Vec<f32> = g.normal_vec(total * d, 1.0);
+                let mut cache = t.window_cache();
+                let mut start = 0usize;
+                while start + s <= total {
+                    let x = Mat::from_vec(s, d, stream[start * d..(start + s) * d].to_vec());
+                    let inc = t.forward_incremental(&x, start as u64, &mut cache);
+                    assert_eq!(inc, t.forward(&x), "{} hop {hop} start {start}",
+                               m.config.name);
+                    start += hop;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_steady_state_counters_are_exact() {
+        let m = &zoo()[0];
+        let t = FloatTransformer::new(m.config.clone(), synthetic_weights(&m.config, 5));
+        let s = m.config.seq_len;
+        let d = m.config.input_size;
+        let heads = t.weights().blocks[0].mha.wq.len() as u64;
+        let hop = (s / 4).max(1);
+        let mut g = Gen::new(23);
+        let n_windows = 5usize;
+        let total = s + (n_windows - 1) * hop;
+        let stream: Vec<f32> = g.normal_vec(total * d, 1.0);
+        let mut cache = t.window_cache();
+        for w in 0..n_windows {
+            let start = w * hop;
+            let x = Mat::from_vec(s, d, stream[start * d..(start + s) * d].to_vec());
+            t.forward_incremental(&x, start as u64, &mut cache);
+        }
+        let c = cache.counters();
+        let (su, ku) = (s as u64, (s - hop) as u64);
+        assert_eq!(c.windows_full, 1, "only the cold window recomputes fully");
+        assert_eq!(c.windows_incremental, n_windows as u64 - 1);
+        // each warm window recomputes exactly hop prefix rows...
+        assert_eq!(c.rows_recomputed, su + (n_windows as u64 - 1) * hop as u64);
+        assert_eq!(c.rows_reused, (n_windows as u64 - 1) * ku);
+        // ...and exactly heads * (S^2 - (S-hop)^2) fresh score entries
+        assert_eq!(
+            c.score_entries_fresh,
+            heads * su * su + (n_windows as u64 - 1) * heads * (su * su - ku * ku)
+        );
+        assert_eq!(c.score_entries_reused, (n_windows as u64 - 1) * heads * ku * ku);
+        assert_eq!(c.score_block_hits, (n_windows as u64 - 1) * heads);
+        assert!(c.cache_bytes > 0);
+    }
+
+    #[test]
+    fn incremental_stream_restart_falls_back_to_full_recompute() {
+        let m = &zoo()[0];
+        let t = FloatTransformer::new(m.config.clone(), synthetic_weights(&m.config, 5));
+        let (s, d) = (m.config.seq_len, m.config.input_size);
+        let mut g = Gen::new(29);
+        let mk = |g: &mut Gen| {
+            Mat::from_vec(s, d, g.normal_vec(s * d, 1.0))
+        };
+        let mut cache = t.window_cache();
+        let a = mk(&mut g);
+        t.forward_incremental(&a, 1000, &mut cache);
+        // position going backwards = restarted stream: must not reuse,
+        // and must still be bitwise correct
+        let b = mk(&mut g);
+        let got = t.forward_incremental(&b, 0, &mut cache);
+        assert_eq!(got, t.forward(&b));
+        assert_eq!(cache.counters().windows_full, 2);
+        assert_eq!(cache.counters().windows_incremental, 0);
+        // same position again (delta = 0) is also a full recompute
+        let c = mk(&mut g);
+        let got = t.forward_incremental(&c, 0, &mut cache);
+        assert_eq!(got, t.forward(&c));
+        assert_eq!(cache.counters().windows_full, 3);
+        // explicit invalidation too
+        let dmat = mk(&mut g);
+        cache.invalidate();
+        let got = t.forward_incremental(&dmat, 5, &mut cache);
+        assert_eq!(got, t.forward(&dmat));
+        assert_eq!(cache.counters().windows_full, 4);
     }
 
     #[test]

@@ -33,10 +33,12 @@
 //! reuse, not batch fill.
 
 pub mod report;
+pub mod reuse;
 pub mod trigger;
 pub mod window;
 
 pub use report::{analyze, StreamParams, StreamReport};
+pub use reuse::ReuseCounters;
 pub use trigger::{Trigger, TriggerFinder};
 pub use window::{StreamWindow, Windowizer};
 

@@ -1,0 +1,134 @@
+//! Counters for incremental cross-window reuse.
+//!
+//! At hop `h < S` consecutive stream windows share `S - h` identical
+//! token rows (the zoo transformers carry no positional encoding), so
+//! the block-0 prefix work for those rows — embed projection, the QKV
+//! re-grid cast, the Q/K/V head projections — and the `(S-h) x (S-h)`
+//! overlap block of raw block-0 QK^T scores are bitwise identical
+//! between windows.  The incremental executors in `nn::transformer` and
+//! `hls::transformer` retain exactly that state per stream and account
+//! for what they reused here; the coordinator folds per-shard counters
+//! into the [`crate::coordinator::ServerReport`] and `repro stream`
+//! prints them.
+//!
+//! Steady-state contract (pinned by tests): once warm, every window at
+//! hop `h` recomputes exactly `h` prefix rows (`rows_reused = S - h`)
+//! and exactly `heads * (S^2 - (S-h)^2)` fresh block-0 score entries.
+
+/// Reuse accounting for one incremental window cache (or, after server
+/// aggregation, one whole worker pool).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReuseCounters {
+    /// Windows scored through the full-recompute path (cold cache,
+    /// non-overlapping hop, stream restart, or reuse disabled).
+    pub windows_full: u64,
+    /// Windows scored through the incremental path.
+    pub windows_incremental: u64,
+    /// Block-0 prefix token rows carried over from the previous window
+    /// (embed output / QKV-grid rows; counted once per window, not per
+    /// projection site).
+    pub rows_reused: u64,
+    /// Block-0 prefix token rows recomputed (the whole window on the
+    /// full path; exactly the fresh rows on the incremental path).
+    pub rows_recomputed: u64,
+    /// Per-head overlap score blocks served from the cache (one per
+    /// head per incremental window).
+    pub score_block_hits: u64,
+    /// Raw block-0 QK^T entries actually computed, summed over heads.
+    pub score_entries_fresh: u64,
+    /// Raw block-0 QK^T entries served from the cached overlap block.
+    pub score_entries_reused: u64,
+    /// Resident bytes of the window cache (f32 rows + raw score
+    /// blocks); a high-water mark across merges.
+    pub cache_bytes: u64,
+}
+
+impl ReuseCounters {
+    /// Fold another cache's (or shard's) counters into this one.
+    pub fn merge(&mut self, other: &ReuseCounters) {
+        self.windows_full += other.windows_full;
+        self.windows_incremental += other.windows_incremental;
+        self.rows_reused += other.rows_reused;
+        self.rows_recomputed += other.rows_recomputed;
+        self.score_block_hits += other.score_block_hits;
+        self.score_entries_fresh += other.score_entries_fresh;
+        self.score_entries_reused += other.score_entries_reused;
+        self.cache_bytes = self.cache_bytes.max(other.cache_bytes);
+    }
+
+    /// Total windows scored.
+    pub fn windows(&self) -> u64 {
+        self.windows_full + self.windows_incremental
+    }
+
+    /// Fraction of prefix rows served from the cache, in `[0, 1]`.
+    pub fn row_reuse_fraction(&self) -> f64 {
+        let total = self.rows_reused + self.rows_recomputed;
+        if total == 0 {
+            0.0
+        } else {
+            self.rows_reused as f64 / total as f64
+        }
+    }
+
+    /// Fraction of block-0 score entries served from the cache.
+    pub fn score_reuse_fraction(&self) -> f64 {
+        let total = self.score_entries_fresh + self.score_entries_reused;
+        if total == 0 {
+            0.0
+        } else {
+            self.score_entries_reused as f64 / total as f64
+        }
+    }
+
+    pub fn any_reuse(&self) -> bool {
+        self.windows_incremental > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_counts_and_high_waters_bytes() {
+        let mut a = ReuseCounters {
+            windows_full: 1,
+            windows_incremental: 3,
+            rows_reused: 30,
+            rows_recomputed: 14,
+            score_block_hits: 3,
+            score_entries_fresh: 700,
+            score_entries_reused: 300,
+            cache_bytes: 4096,
+        };
+        let b = ReuseCounters {
+            windows_full: 2,
+            windows_incremental: 5,
+            rows_reused: 50,
+            rows_recomputed: 26,
+            score_block_hits: 5,
+            score_entries_fresh: 900,
+            score_entries_reused: 500,
+            cache_bytes: 2048,
+        };
+        a.merge(&b);
+        assert_eq!(a.windows(), 11);
+        assert_eq!(a.rows_reused, 80);
+        assert_eq!(a.rows_recomputed, 40);
+        assert_eq!(a.score_block_hits, 8);
+        assert_eq!(a.score_entries_fresh, 1600);
+        assert_eq!(a.score_entries_reused, 800);
+        assert_eq!(a.cache_bytes, 4096, "bytes are a high-water mark");
+        assert!((a.row_reuse_fraction() - 80.0 / 120.0).abs() < 1e-12);
+        assert!((a.score_reuse_fraction() - 800.0 / 2400.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_counters_report_zero_fractions() {
+        let c = ReuseCounters::default();
+        assert_eq!(c.row_reuse_fraction(), 0.0);
+        assert_eq!(c.score_reuse_fraction(), 0.0);
+        assert!(!c.any_reuse());
+    }
+}

@@ -24,6 +24,21 @@ pub struct StreamWindow {
     /// `(seq_len, channels)` feature matrix (same layout the router
     /// validates for the model).
     pub x: Mat,
+    /// Row lineage: how many trailing rows of `x` are new relative to
+    /// the previously emitted window of this stream.  The first window
+    /// (and any window at hop >= seq_len) is all fresh; at hop h < S a
+    /// steady-state window carries `S - h` rows and grows `h` fresh
+    /// ones.  The leading `seq_len - fresh_rows` rows are bitwise
+    /// copies of the previous window's trailing rows (property-tested
+    /// below) — exactly the rows an incremental executor may reuse.
+    pub fresh_rows: usize,
+}
+
+impl StreamWindow {
+    /// Rows carried over (bitwise) from the previously emitted window.
+    pub fn carried_rows(&self) -> usize {
+        self.x.rows() - self.fresh_rows
+    }
 }
 
 /// Ring-buffered stream -> window slicer.
@@ -36,6 +51,8 @@ pub struct Windowizer {
     ring: Vec<f32>,
     /// Samples pushed so far.
     n: u64,
+    /// Start of the previously emitted window (lineage anchor).
+    last_start: Option<u64>,
     /// Window buffers are drawn from (and recycled into) this pool, so
     /// a steady-state stream driver allocates nothing per window.
     scratch: Scratch,
@@ -51,6 +68,7 @@ impl Windowizer {
             hop,
             ring: vec![0.0; seq_len * channels],
             n: 0,
+            last_start: None,
             scratch: Scratch::new(),
         }
     }
@@ -105,7 +123,15 @@ impl Windowizer {
             let slot = ((start + t as u64) % self.seq_len as u64) as usize * ch;
             buf[t * ch..(t + 1) * ch].copy_from_slice(&self.ring[slot..slot + ch]);
         }
-        StreamWindow { start, x: Mat::from_vec(self.seq_len, ch, buf) }
+        // lineage: rows [0, S - delta) are bitwise copies of the previous
+        // window's rows [delta, S); a first window (or hop >= S) shares
+        // nothing and is all fresh
+        let fresh_rows = match self.last_start {
+            Some(prev) => (start - prev).min(self.seq_len as u64) as usize,
+            None => self.seq_len,
+        };
+        self.last_start = Some(start);
+        StreamWindow { start, x: Mat::from_vec(self.seq_len, ch, buf), fresh_rows }
     }
 
     /// Return a served window's buffer to the pool so the next emission
@@ -235,5 +261,94 @@ mod tests {
     #[should_panic(expected = "hop must be >= 1")]
     fn zero_hop_rejected() {
         Windowizer::new(4, 1, 0);
+    }
+
+    /// Drive a stream keeping full windows plus their lineage claims.
+    fn drive_lineage(
+        stream: &[f32],
+        ch: usize,
+        s: usize,
+        hop: usize,
+    ) -> Vec<(u64, usize, Vec<f32>)> {
+        let mut wz = Windowizer::new(s, ch, hop);
+        let mut out = Vec::new();
+        for sample in stream.chunks(ch) {
+            if let Some(w) = wz.push(sample) {
+                out.push((w.start, w.fresh_rows, w.x.data().to_vec()));
+                wz.recycle(w);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_row_lineage_matches_brute_force_overlap() {
+        // The lineage contract an incremental executor leans on: the
+        // leading `S - fresh_rows` rows of every window are *bitwise*
+        // copies of the previous window's trailing rows, and fresh_rows
+        // equals the brute-force start-delta overlap — over random
+        // (S, d, hop) including hop >= S (zero reuse) and hop = S
+        // (exact tail, zero reuse).
+        Prop::new("windowizer lineage == brute-force overlap").runs(300).check(|g| {
+            let ch = g.usize_in(1, 4);
+            let s = g.usize_in(1, 24);
+            let hop = g.usize_in(1, 2 * s + 4); // deliberately past S
+            let total = g.usize_in(0, 6 * s + 3);
+            let stream: Vec<f32> = (0..total * ch).map(|_| g.normal()).collect();
+            let wins = drive_lineage(&stream, ch, s, hop);
+            for (i, (start, fresh, x)) in wins.iter().enumerate() {
+                if i == 0 {
+                    assert_eq!(*fresh, s, "first window is all fresh");
+                    continue;
+                }
+                let (prev_start, _, prev_x) = &wins[i - 1];
+                let delta = (*start - *prev_start) as usize;
+                let want_fresh = delta.min(s);
+                assert_eq!(*fresh, want_fresh, "S={s} hop={hop} start={start}");
+                // brute force: every claimed-carried row must be a
+                // bitwise copy of the previous window's shifted row
+                for t in 0..s - want_fresh {
+                    assert_eq!(
+                        &x[t * ch..(t + 1) * ch],
+                        &prev_x[(t + delta) * ch..(t + delta + 1) * ch],
+                        "S={s} hop={hop} window {i} row {t} not carried"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn lineage_at_hop_equal_to_seq_len_is_all_fresh() {
+        // hop = S: windows tile the stream exactly, sharing no rows
+        let stream: Vec<f32> = (0..32).map(|v| v as f32).collect();
+        let wins = drive_lineage(&stream, 1, 8, 8);
+        assert_eq!(wins.len(), 4);
+        for (_, fresh, _) in &wins {
+            assert_eq!(*fresh, 8, "hop == S must claim zero reuse");
+        }
+    }
+
+    #[test]
+    fn lineage_steady_state_fresh_rows_equal_hop() {
+        let stream: Vec<f32> = (0..64).map(|v| v as f32).collect();
+        let wins = drive_lineage(&stream, 1, 16, 4);
+        assert!(wins.len() > 3);
+        assert_eq!(wins[0].1, 16);
+        for (_, fresh, _) in &wins[1..] {
+            assert_eq!(*fresh, 4, "steady state grows exactly hop rows");
+        }
+    }
+
+    #[test]
+    fn stream_restart_resets_lineage_to_all_fresh() {
+        // a restarted stream (new Windowizer) must not claim carried
+        // rows from the dead stream — downstream caches key on this
+        let stream: Vec<f32> = (0..24).map(|v| v as f32).collect();
+        let first_run = drive_lineage(&stream, 1, 8, 2);
+        assert!(first_run.len() > 1);
+        assert_eq!(first_run[1].1, 2, "warm stream reuses");
+        let restarted = drive_lineage(&stream[10..], 1, 8, 2);
+        assert_eq!(restarted[0].1, 8, "restart claims nothing");
     }
 }

@@ -39,6 +39,7 @@ fn stream_server_cfg(
                 samples,
                 hop,
                 strain: StrainConfig::new(seed, 1, seq_len),
+                reuse: true,
             }),
             ..PipelineConfig::new("engine", backend)
         }],
@@ -78,6 +79,8 @@ fn backend_for(kind: BackendKind) -> Backend {
 
 /// Streamed-through-the-coordinator scores must equal direct per-window
 /// scoring of the naively re-sliced stream, bitwise, float and HLS.
+/// Cross-window reuse is on (the default), so this pins the incremental
+/// path to the naive recompute at the integration level too.
 #[test]
 fn streamed_scores_bitwise_match_naive_reslice_per_backend() {
     for (backend, samples, hop) in
@@ -88,6 +91,10 @@ fn streamed_scores_bitwise_match_naive_reslice_per_backend() {
             TriggerServer::run(&stream_server_cfg(backend, samples, hop, seed, 1)).unwrap();
         let s = &report.per_model["engine"];
         assert_eq!(s.dropped, 0, "{backend:?}: ring must absorb the whole stream");
+        assert!(
+            s.reuse.windows_incremental > 0,
+            "{backend:?}: hop {hop} < S must engage incremental reuse"
+        );
         let mut got: Vec<(u64, f32)> = s.windows.iter().map(|w| (w.pos, w.score)).collect();
         got.sort_unstable_by_key(|(p, _)| *p);
         let want = naive_windows(samples, hop, seed);
