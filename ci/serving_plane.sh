@@ -1,0 +1,125 @@
+#!/usr/bin/env bash
+# Gating CI lane for the network serving plane: a release `repro serve`
+# on loopback, driven by `repro send` with a bursty flood and a
+# mid-stream hot plan swap, observed only through the scrapeable
+# Prometheus endpoint.  Asserts:
+#
+#   * the endpoint serves valid exposition text while the server runs,
+#   * zero events shed and zero dropped across the flood AND the swap,
+#   * exactly one completed plan swap,
+#   * the autoscaler left the floor (>= 2 shards) under the flood and
+#     stayed inside the 1..4 band,
+#   * the scraped counters agree with the server's own final report.
+#
+# Env: BIN (default rust/target/release/repro), SERVE_ADDR, METRICS_ADDR.
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/repro}
+SERVE_ADDR=${SERVE_ADDR:-127.0.0.1:17071}
+METRICS_ADDR=${METRICS_ADDR:-127.0.0.1:17091}
+EVENTS=4000
+SWAP_AT=2000
+
+work=$(mktemp -d)
+SERVE_PID=""
+cleanup() {
+    [ -n "$SERVE_PID" ] && kill "$SERVE_PID" 2>/dev/null || true
+    rm -rf "$work"
+}
+trap cleanup EXIT
+
+metric() {
+    # first sample whose name{labels} matches exactly (prometheus text
+    # puts the value in field 2); empty if the scrape or metric is absent
+    curl -sf "http://$METRICS_ADDR/metrics" \
+        | awk -v m="$1" '$1 == m { print $2; exit }'
+}
+
+"$BIN" serve --backend hls --models engine --listen "$SERVE_ADDR" \
+    --metrics-addr "$METRICS_ADDR" --autoscale 1..4 --ring 4096 \
+    >"$work/serve.log" 2>&1 &
+SERVE_PID=$!
+
+echo "== waiting for the metrics endpoint"
+up=""
+for _ in $(seq 1 150); do
+    if curl -sf "http://$METRICS_ADDR/metrics" >/dev/null 2>&1; then
+        up=1
+        break
+    fi
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "FAIL: server exited before coming up"
+        cat "$work/serve.log"
+        exit 1
+    fi
+    sleep 0.2
+done
+[ -n "$up" ] || { echo "FAIL: metrics endpoint never came up"; cat "$work/serve.log"; exit 1; }
+
+echo "== scrape 1: exposition sanity"
+curl -s "http://$METRICS_ADDR/metrics" >"$work/scrape1.txt"
+grep -q '^# TYPE repro_event_latency_ns histogram$' "$work/scrape1.txt"
+grep -q '^# TYPE repro_events_shed_total counter$' "$work/scrape1.txt"
+grep -q 'repro_shards{model="engine"} 1$' "$work/scrape1.txt"
+
+# an unpaced flood (rate 0) far outruns inference, so the queue depth
+# must cross the scale-up threshold; 4000 events < ring 4096 bounds the
+# worst-case backlog below capacity, so ANY shed is a real bug
+echo "block0.ffn1 ap_fixed<18,8>" >"$work/swap.plan"
+echo "== driving $EVENTS events with a hot swap at $SWAP_AT"
+"$BIN" send --to "$SERVE_ADDR" --model engine --events "$EVENTS" \
+    --rate 0 --burst 64 --seed 7 \
+    --swap-at "$SWAP_AT" --precision-plan "$work/swap.plan"
+
+echo "== scrape 2 (mid-drain), then poll until everything is scored"
+mid=$(metric 'repro_events_scored_total{model="engine"}')
+echo "   mid-drain scored=$mid"
+scored=""
+for _ in $(seq 1 600); do
+    scored=$(metric 'repro_events_scored_total{model="engine"}')
+    [ "${scored:-0}" = "$EVENTS" ] && break
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "FAIL: server died mid-drain"
+        cat "$work/serve.log"
+        exit 1
+    fi
+    sleep 0.5
+done
+[ "${scored:-0}" = "$EVENTS" ] || {
+    echo "FAIL: scored $scored of $EVENTS"
+    curl -s "http://$METRICS_ADDR/metrics"
+    exit 1
+}
+[ "${mid:-0}" -le "$scored" ] || { echo "FAIL: counter went backwards"; exit 1; }
+
+echo "== final scrape: zero-loss + swap + autoscale assertions"
+accepted=$(metric 'repro_events_accepted_total{model="engine"}')
+shed=$(metric 'repro_events_shed_total{model="engine"}')
+dropped=$(metric 'repro_events_dropped_total{model="engine"}')
+swaps=$(metric 'repro_plan_swaps_total{model="engine"}')
+ups=$(metric 'repro_scale_ups_total{model="engine"}')
+shards=$(metric 'repro_shards{model="engine"}')
+hist_count=$(metric 'repro_event_latency_ns_count{model="engine"}')
+echo "   accepted=$accepted shed=$shed dropped=$dropped swaps=$swaps" \
+     "scale_ups=$ups shards=$shards hist_count=$hist_count"
+[ "$accepted" = "$EVENTS" ] || { echo "FAIL: accepted != $EVENTS"; exit 1; }
+[ "$shed" = "0" ] || { echo "FAIL: events shed under a sub-capacity flood"; exit 1; }
+[ "$dropped" = "0" ] || { echo "FAIL: events dropped across the hot swap"; exit 1; }
+[ "$swaps" = "1" ] || { echo "FAIL: expected exactly 1 completed plan swap"; exit 1; }
+[ "$hist_count" = "$EVENTS" ] || { echo "FAIL: latency histogram disagrees with scored"; exit 1; }
+[ "${ups:-0}" -ge 1 ] || { echo "FAIL: autoscaler never scaled up under the flood"; exit 1; }
+[ "$shards" -ge 2 ] && [ "$shards" -le 4 ] || { echo "FAIL: width $shards outside 2..4"; exit 1; }
+
+echo "== shutdown and scrape-vs-report agreement"
+"$BIN" send --to "$SERVE_ADDR" --shutdown
+wait "$SERVE_PID"
+SERVE_PID=""
+cat "$work/serve.log"
+rep_accepted=$(grep -o 'accepted=[0-9]*' "$work/serve.log" | head -1 | cut -d= -f2)
+rep_shed=$(grep -o 'shed=[0-9]*' "$work/serve.log" | head -1 | cut -d= -f2)
+rep_dropped=$(grep -o 'dropped=[0-9]*' "$work/serve.log" | head -1 | cut -d= -f2)
+[ "$rep_accepted" = "$accepted" ] || { echo "FAIL: report accepted=$rep_accepted vs scraped $accepted"; exit 1; }
+[ "$rep_shed" = "$shed" ] || { echo "FAIL: report shed=$rep_shed vs scraped $shed"; exit 1; }
+[ "$rep_dropped" = "$dropped" ] || { echo "FAIL: report dropped=$rep_dropped vs scraped $dropped"; exit 1; }
+
+echo "OK: $EVENTS events, 0 shed, 0 dropped, 1 hot swap, width $shards"

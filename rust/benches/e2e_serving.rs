@@ -10,10 +10,10 @@ use std::time::Duration;
 
 use hls4ml_transformer::artifacts_dir;
 use hls4ml_transformer::coordinator::{
-    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, SourceMode, StreamSource,
-    TriggerServer, WeightsSource,
+    net, serve_net, BackendKind, BatchPolicy, Frame, NetEvent, NetServeOptions, PipelineConfig,
+    ServerConfig, SourceMode, StreamSource, TriggerServer, WeightsSource,
 };
-use hls4ml_transformer::data::StrainConfig;
+use hls4ml_transformer::data::{generator_for, StrainConfig};
 use hls4ml_transformer::experiments::artifacts_ready;
 use hls4ml_transformer::hls::{FixedTransformer, ParallelismPlan, QuantConfig, ReuseFactor};
 use hls4ml_transformer::models::weights::synthetic_weights;
@@ -60,6 +60,7 @@ fn run(model: &'static str, backend: BackendKind, batch: usize, events: u64) {
                     ("p50_ns", s.latency.quantile_ns(0.50) as f64),
                     ("p99_ns", s.latency.quantile_ns(0.99) as f64),
                     ("accepted", s.accepted as f64),
+                    ("shed", s.shed as f64),
                     ("dropped", s.dropped as f64),
                 ],
             );
@@ -126,6 +127,7 @@ fn batch_sweep() {
                             ("mean_fill", s.mean_batch_fill()),
                             ("mean_ns", s.latency.mean_ns()),
                             ("p99_ns", s.latency.quantile_ns(0.99) as f64),
+                            ("shed", s.shed as f64),
                             ("dropped", s.dropped as f64),
                         ],
                     );
@@ -172,7 +174,7 @@ fn replica_sweep() {
                 let speedup = if base_eps > 0.0 { eps / base_eps } else { f64::NAN };
                 println!(
                     "  replicas={replicas}  {eps:>9.0} ev/s  x{speedup:.2} vs r1  shed={}  lat {}",
-                    s.dropped,
+                    s.shed,
                     s.latency.summary(),
                 );
                 harness::json_line(
@@ -183,6 +185,7 @@ fn replica_sweep() {
                         ("speedup_vs_r1", speedup),
                         ("mean_ns", s.latency.mean_ns()),
                         ("p99_ns", s.latency.quantile_ns(0.99) as f64),
+                        ("shed", s.shed as f64),
                         ("dropped", s.dropped as f64),
                     ],
                 );
@@ -312,6 +315,7 @@ fn stream_sweep() {
                             ("sustained_sps", sps),
                             ("windows_per_s", wps),
                             ("windows", st.windows.len() as f64),
+                            ("shed", st.shed as f64),
                             ("dropped", st.dropped as f64),
                             ("efficiency", sr.efficiency()),
                             ("injections", sr.injections as f64),
@@ -398,6 +402,76 @@ fn stream_reuse_sweep() {
     }
 }
 
+/// Network serving plane over loopback: the same engine/Float pipeline
+/// fed through the length-prefixed TCP framing (`repro serve --listen`)
+/// instead of an in-process source.  Measures the sustained wire-to-score
+/// rate of one connection -> dispatcher -> pool path; the BENCH_JSON row
+/// (`e2e_serving/net_loopback/...`) archives it next to the in-process
+/// numbers so framing+dispatch overhead stays visible as a series.
+fn net_loopback() {
+    harness::section("network serving plane: engine/Float over loopback TCP framing");
+    let events = 20_000u64;
+    let cfg = ServerConfig {
+        pipelines: vec![PipelineConfig {
+            weights: WeightsSource::Synthetic(7),
+            ring_capacity: 8192,
+            ..PipelineConfig::new("engine", BackendKind::Float)
+        }],
+        artifacts_dir: artifacts_dir(),
+        ..Default::default()
+    };
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_net(&cfg, listener, NetServeOptions { metrics: None, autoscale: None })
+    });
+    let mut conn = std::net::TcpStream::connect(addr).expect("connect loopback");
+    conn.set_nodelay(true).ok();
+    let mut gen = generator_for("engine", 7).expect("zoo generator");
+    let t0 = std::time::Instant::now();
+    for i in 0..events {
+        let e = gen.next_event();
+        net::write_frame(
+            &mut conn,
+            &Frame::Event(NetEvent {
+                id: i,
+                model: "engine".into(),
+                x: e.x,
+                label: Some(e.label),
+                stream_pos: None,
+            }),
+        )
+        .expect("write frame");
+    }
+    let send_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    net::write_frame(&mut conn, &Frame::Shutdown).expect("write shutdown");
+    drop(conn);
+    let report = server.join().expect("server thread").expect("server report");
+    let s = &report.per_model["engine"];
+    let eps = report.throughput_eps();
+    println!(
+        "  wire rate {:>9.0} ev/s  scored {eps:>9.0} ev/s  accepted={} shed={} dropped={}  lat {}",
+        events as f64 / send_wall,
+        s.accepted,
+        s.shed,
+        s.dropped,
+        s.latency.summary(),
+    );
+    harness::json_line(
+        "e2e_serving/net_loopback/engine/Float",
+        &[
+            ("events", events as f64),
+            ("wire_eps", events as f64 / send_wall),
+            ("throughput_eps", eps),
+            ("accepted", s.accepted as f64),
+            ("shed", s.shed as f64),
+            ("dropped", s.dropped as f64),
+            ("mean_ns", s.latency.mean_ns()),
+            ("p99_ns", s.latency.quantile_ns(0.99) as f64),
+        ],
+    );
+}
+
 fn main() {
     harness::section("E6: end-to-end trigger serving (throughput / latency)");
     println!("(sources run at max rate; latency includes queueing + batching)");
@@ -420,6 +494,8 @@ fn main() {
     stream_sweep();
 
     stream_reuse_sweep();
+
+    net_loopback();
 
     harness::section("multi-model concurrent serving (all three pipelines)");
     let cfg = ServerConfig {

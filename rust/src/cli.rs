@@ -232,6 +232,57 @@ mod tests {
     }
 
     #[test]
+    fn network_serving_flags_parse() {
+        // the network serving plane rides this parser on `serve`
+        let a = parse(
+            "serve --backend hls --models engine --listen 127.0.0.1:7071 \
+             --metrics-addr 127.0.0.1:7091 --autoscale 1..4 --ring 4096",
+        );
+        assert_eq!(a.get("listen"), Some("127.0.0.1:7071"));
+        assert_eq!(a.get("metrics-addr"), Some("127.0.0.1:7091"));
+        assert_eq!(a.get("autoscale"), Some("1..4"));
+        assert_eq!(a.get_parse("ring", 8192usize).unwrap(), 4096);
+        assert!(a
+            .expect_only(&[
+                "backend", "events", "rate", "batch", "models", "replicas",
+                "precision-plan", "reuse", "reuse-plan", "listen", "metrics-addr",
+                "autoscale", "ring",
+            ])
+            .is_ok());
+        // batch mode stays the default: no --listen, no plane flags
+        let b = parse("serve --backend float");
+        assert_eq!(b.get("listen"), None);
+        assert!(!b.has("autoscale"));
+    }
+
+    #[test]
+    fn send_flags_parse() {
+        // the loopback client subcommand rides this parser
+        let a = parse(
+            "send --to 127.0.0.1:7071 --model engine --events 4000 --rate 200000 \
+             --burst 64 --swap-at 2000 --precision-plan swap.plan --shutdown",
+        );
+        assert_eq!(a.command, "send");
+        assert_eq!(a.get("to"), Some("127.0.0.1:7071"));
+        assert_eq!(a.get_parse("events", 0u64).unwrap(), 4000);
+        assert_eq!(a.get_parse("rate", 0u64).unwrap(), 200_000);
+        assert_eq!(a.get_parse("burst", 1u64).unwrap(), 64);
+        assert_eq!(a.get_parse("swap-at", 0u64).unwrap(), 2000);
+        assert_eq!(a.get("precision-plan"), Some("swap.plan"));
+        assert!(a.has("shutdown"));
+        assert!(a
+            .expect_only(&[
+                "to", "model", "events", "rate", "burst", "seed", "swap-at",
+                "precision-plan", "reuse-plan", "shutdown",
+            ])
+            .is_ok());
+        // a shutdown-only invocation carries no event flags at all
+        let b = parse("send --to 127.0.0.1:7071 --shutdown");
+        assert!(b.has("shutdown"));
+        assert_eq!(b.get("events"), None);
+    }
+
+    #[test]
     fn duplicate_flag_rejected() {
         assert!(Args::parse(["--a", "1", "--a", "2"].map(String::from)).is_err());
     }

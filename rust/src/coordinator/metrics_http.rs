@@ -1,0 +1,538 @@
+//! Scrapeable metrics endpoint: Prometheus text exposition (version
+//! 0.0.4) rendered straight off a [`PlaneSnapshot`], served by a tiny
+//! single-threaded HTTP responder.
+//!
+//! The latency histogram is exported VERBATIM from
+//! [`LatencyHistogram`]'s log2 buckets: each finite bucket's `le` label
+//! is its *inclusive* integer upper edge in nanoseconds
+//! (`LatencyHistogram::bucket_upper_edge_ns`), the last bucket is
+//! `+Inf`, and the cumulative counts are exact — a scrape aggregator
+//! merging several planes sees the same algebra the in-process
+//! [`LatencyHistogram::merge`] implements (commutative + associative;
+//! pinned by the histogram property tests).
+//!
+//! Metric families (all prefixed `repro_`):
+//!
+//! | family | type | labels |
+//! |---|---|---|
+//! | `repro_uptime_seconds` | gauge | — |
+//! | `repro_events_rejected_unknown_model_total` | counter | — |
+//! | `repro_events_rejected_bad_shape_total` | counter | — |
+//! | `repro_events_accepted_total` | counter | model |
+//! | `repro_events_shed_total` | counter | model |
+//! | `repro_events_rebalanced_total` | counter | model |
+//! | `repro_events_scored_total` | counter | model |
+//! | `repro_events_dropped_total` | counter | model |
+//! | `repro_batches_total` | counter | model |
+//! | `repro_windows_total` | counter | model |
+//! | `repro_reuse_windows_incremental_total` | counter | model |
+//! | `repro_reuse_rows_reused_total` | counter | model |
+//! | `repro_plan_swaps_total` | counter | model |
+//! | `repro_scale_ups_total` | counter | model |
+//! | `repro_scale_downs_total` | counter | model |
+//! | `repro_shards` | gauge | model |
+//! | `repro_shard_queue_depth` | gauge | model, shard |
+//! | `repro_shard_scored_total` | counter | model, shard |
+//! | `repro_shard_dropped_total` | counter | model, shard |
+//! | `repro_event_latency_ns` | histogram | model |
+//!
+//! `accepted` counts router-side queueing; `scored` counts worker-side
+//! completions — under load the two differ by exactly the in-flight
+//! queue depth, and `accepted == scored + dropped` once drained.
+
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::pool::{PlaneSnapshot, ServingPlane};
+use crate::metrics::LatencyHistogram;
+
+/// Render one snapshot as Prometheus text exposition 0.0.4.
+pub fn render_prometheus(snap: &PlaneSnapshot) -> String {
+    let mut out = String::with_capacity(4096);
+    let mut family = |out: &mut String, name: &str, kind: &str, help: &str| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+    };
+
+    family(&mut out, "repro_uptime_seconds", "gauge", "Seconds since the plane started.");
+    let _ = writeln!(out, "repro_uptime_seconds {:.3}", snap.uptime_secs);
+    family(
+        &mut out,
+        "repro_events_rejected_unknown_model_total",
+        "counter",
+        "Events refused: no pool serves the named model.",
+    );
+    let _ = writeln!(
+        out,
+        "repro_events_rejected_unknown_model_total {}",
+        snap.rejected_unknown
+    );
+    family(
+        &mut out,
+        "repro_events_rejected_bad_shape_total",
+        "counter",
+        "Events refused: matrix shape mismatched the model.",
+    );
+    let _ = writeln!(
+        out,
+        "repro_events_rejected_bad_shape_total {}",
+        snap.rejected_bad_shape
+    );
+
+    // per-model counter families, each rendered for every model under
+    // one HELP/TYPE header (exposition requires families be contiguous)
+    struct F {
+        name: &'static str,
+        kind: &'static str,
+        help: &'static str,
+        get: fn(&super::pool::ModelSnapshot) -> u64,
+    }
+    let families = [
+        F {
+            name: "repro_events_accepted_total",
+            kind: "counter",
+            help: "Events the router queued onto a shard ring.",
+            get: |m| m.router_accepted,
+        },
+        F {
+            name: "repro_events_shed_total",
+            kind: "counter",
+            help: "Events shed at the router: every shard ring full.",
+            get: |m| m.shed,
+        },
+        F {
+            name: "repro_events_rebalanced_total",
+            kind: "counter",
+            help: "Events accepted by a non-round-robin shard under backpressure.",
+            get: |m| m.rebalanced,
+        },
+        F {
+            name: "repro_events_scored_total",
+            kind: "counter",
+            help: "Events scored by the workers (retired + live shards).",
+            get: |m| m.scored(),
+        },
+        F {
+            name: "repro_events_dropped_total",
+            kind: "counter",
+            help: "Events dropped worker-side: their batch failed inference.",
+            get: |m| m.dropped(),
+        },
+        F {
+            name: "repro_batches_total",
+            kind: "counter",
+            help: "Batches executed across all shards.",
+            get: |m| m.shards.iter().map(|s| s.batches).sum(),
+        },
+        F {
+            name: "repro_windows_total",
+            kind: "counter",
+            help: "Stream windows scored across all shards.",
+            get: |m| m.shards.iter().map(|s| s.windows).sum(),
+        },
+        F {
+            name: "repro_reuse_windows_incremental_total",
+            kind: "counter",
+            help: "Stream windows served through the incremental-reuse path.",
+            get: |m| m.shards.iter().map(|s| s.reuse.windows_incremental).sum(),
+        },
+        F {
+            name: "repro_reuse_rows_reused_total",
+            kind: "counter",
+            help: "Prefix token rows carried over between overlapping windows.",
+            get: |m| m.shards.iter().map(|s| s.reuse.rows_reused).sum(),
+        },
+        F {
+            name: "repro_plan_swaps_total",
+            kind: "counter",
+            help: "Completed zero-drop hot plan swaps.",
+            get: |m| m.swaps,
+        },
+        F {
+            name: "repro_scale_ups_total",
+            kind: "counter",
+            help: "Autoscaler scale-up steps taken.",
+            get: |m| m.scale_ups,
+        },
+        F {
+            name: "repro_scale_downs_total",
+            kind: "counter",
+            help: "Autoscaler scale-down steps taken.",
+            get: |m| m.scale_downs,
+        },
+    ];
+    for f in &families {
+        family(&mut out, f.name, f.kind, f.help);
+        for m in &snap.models {
+            let _ = writeln!(out, "{}{{model=\"{}\"}} {}", f.name, m.model, (f.get)(m));
+        }
+    }
+
+    family(&mut out, "repro_shards", "gauge", "Live worker shards in the pool.");
+    for m in &snap.models {
+        let _ = writeln!(out, "repro_shards{{model=\"{}\"}} {}", m.model, m.replicas);
+    }
+    family(
+        &mut out,
+        "repro_shard_queue_depth",
+        "gauge",
+        "Events queued on one shard's ring right now.",
+    );
+    for m in &snap.models {
+        for &(id, depth) in &m.queue_depths {
+            let _ = writeln!(
+                out,
+                "repro_shard_queue_depth{{model=\"{}\",shard=\"{id}\"}} {depth}",
+                m.model
+            );
+        }
+    }
+    family(
+        &mut out,
+        "repro_shard_scored_total",
+        "counter",
+        "Events scored per shard (retired + live).",
+    );
+    for m in &snap.models {
+        for s in &m.shards {
+            let _ = writeln!(
+                out,
+                "repro_shard_scored_total{{model=\"{}\",shard=\"{}\"}} {}",
+                m.model, s.shard, s.accepted
+            );
+        }
+    }
+    family(
+        &mut out,
+        "repro_shard_dropped_total",
+        "counter",
+        "Events dropped per shard (batch inference failures).",
+    );
+    for m in &snap.models {
+        for s in &m.shards {
+            let _ = writeln!(
+                out,
+                "repro_shard_dropped_total{{model=\"{}\",shard=\"{}\"}} {}",
+                m.model, s.shard, s.dropped
+            );
+        }
+    }
+
+    // the latency histogram, straight off LatencyHistogram's buckets:
+    // le labels are the INCLUSIVE integer edges, cumulative counts
+    family(
+        &mut out,
+        "repro_event_latency_ns",
+        "histogram",
+        "End-to-end event latency (arrival to scored), nanoseconds.",
+    );
+    for m in &snap.models {
+        let h = m.latency();
+        let mut cum = 0u64;
+        for (i, &c) in h.bucket_counts().iter().enumerate() {
+            cum += c;
+            match LatencyHistogram::bucket_upper_edge_ns(i) {
+                Some(edge) => {
+                    let _ = writeln!(
+                        out,
+                        "repro_event_latency_ns_bucket{{model=\"{}\",le=\"{edge}\"}} {cum}",
+                        m.model
+                    );
+                }
+                None => {
+                    let _ = writeln!(
+                        out,
+                        "repro_event_latency_ns_bucket{{model=\"{}\",le=\"+Inf\"}} {cum}",
+                        m.model
+                    );
+                }
+            }
+        }
+        let _ = writeln!(
+            out,
+            "repro_event_latency_ns_sum{{model=\"{}\"}} {}",
+            m.model,
+            h.sum_ns()
+        );
+        let _ = writeln!(
+            out,
+            "repro_event_latency_ns_count{{model=\"{}\"}} {}",
+            m.model,
+            h.count()
+        );
+    }
+    out
+}
+
+/// Minimal HTTP responder for scrapes: accepts serially, answers any GET
+/// with the current exposition.  Not a general web server — one scrape
+/// every few seconds is the design load.
+pub struct MetricsServer {
+    stop: Arc<AtomicBool>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl MetricsServer {
+    pub fn start(listener: TcpListener, plane: Arc<ServingPlane>) -> Self {
+        listener.set_nonblocking(true).expect("nonblocking listener");
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let join = std::thread::spawn(move || {
+            while !stop_t.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((mut stream, _peer)) => {
+                        stream
+                            .set_read_timeout(Some(Duration::from_secs(2)))
+                            .ok();
+                        if let Err(e) = respond(&mut stream, &plane) {
+                            eprintln!("metrics: scrape failed: {e}");
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        eprintln!("metrics: accept failed: {e}");
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        });
+        Self { stop, join }
+    }
+
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = self.join.join();
+    }
+}
+
+fn respond(stream: &mut std::net::TcpStream, plane: &ServingPlane) -> std::io::Result<()> {
+    // read until the header terminator (cap 8 KiB — a scrape request is
+    // one line plus a few headers)
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(()); // peer closed before finishing the request
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+            break;
+        }
+    }
+    let request = String::from_utf8_lossy(&buf);
+    let is_get = request.lines().next().is_some_and(|l| l.starts_with("GET "));
+    let (status, body) = if is_get {
+        ("200 OK", render_prometheus(&plane.snapshot()))
+    } else {
+        ("405 Method Not Allowed", String::from("metrics endpoint: GET only\n"))
+    };
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; \
+         charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::{ModelSnapshot, PlaneSnapshot};
+    use crate::coordinator::stats::ShardStats;
+    use std::collections::HashMap;
+
+    fn snapshot_with_latencies(ns: &[u64]) -> (PlaneSnapshot, LatencyHistogram) {
+        let mut h = LatencyHistogram::new();
+        let mut shard = ShardStats { shard: 0, ..ShardStats::default() };
+        for &v in ns {
+            h.record(v);
+            shard.latency.record(v);
+            shard.accepted += 1;
+        }
+        shard.batches = 3;
+        let snap = PlaneSnapshot {
+            models: vec![ModelSnapshot {
+                model: "engine",
+                router_accepted: ns.len() as u64,
+                shed: 2,
+                rebalanced: 1,
+                replicas: 1,
+                queue_depths: vec![(0, 4)],
+                shards: vec![shard],
+                swaps: 1,
+                scale_ups: 2,
+                scale_downs: 1,
+            }],
+            rejected_unknown: 3,
+            rejected_bad_shape: 0,
+            uptime_secs: 1.5,
+        };
+        (snap, h)
+    }
+
+    /// Parse exposition text into (name, labels, value) samples,
+    /// validating the line grammar as we go.
+    fn parse(text: &str) -> Vec<(String, String, f64)> {
+        let mut samples = Vec::new();
+        let mut typed: HashMap<String, String> = HashMap::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().unwrap().to_string();
+                let kind = it.next().unwrap().to_string();
+                assert!(
+                    ["counter", "gauge", "histogram"].contains(&kind.as_str()),
+                    "bad TYPE: {line}"
+                );
+                assert!(typed.insert(name, kind).is_none(), "duplicate TYPE: {line}");
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let (head, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+                panic!("sample line without value: {line}")
+            });
+            let value: f64 = value.parse().unwrap_or_else(|_| {
+                panic!("non-numeric value in: {line}")
+            });
+            let (name, labels) = match head.split_once('{') {
+                Some((n, l)) => {
+                    assert!(l.ends_with('}'), "unclosed labels: {line}");
+                    (n.to_string(), l[..l.len() - 1].to_string())
+                }
+                None => (head.to_string(), String::new()),
+            };
+            // every sample belongs to a declared family (histogram
+            // samples map to their base name)
+            let base = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .filter(|b| typed.contains_key(*b))
+                .unwrap_or(&name);
+            assert!(typed.contains_key(base), "sample without TYPE: {line}");
+            // counters end in _total (histogram series are exempt)
+            if typed.get(base).map(String::as_str) == Some("counter") {
+                assert!(name.ends_with("_total"), "counter without _total: {line}");
+            }
+            samples.push((name, labels, value));
+        }
+        samples
+    }
+
+    #[test]
+    fn exposition_is_valid_and_buckets_match_the_histogram_exactly() {
+        let ns = [100u64, 100, 900, 64, 63, 5_000_000, u64::MAX];
+        let (snap, h) = snapshot_with_latencies(&ns);
+        let text = render_prometheus(&snap);
+        let samples = parse(&text);
+
+        // pull the engine's bucket series back out
+        let buckets: Vec<(String, f64)> = samples
+            .iter()
+            .filter(|(n, l, _)| {
+                n == "repro_event_latency_ns_bucket" && l.contains("model=\"engine\"")
+            })
+            .map(|(_, l, v)| {
+                let le = l
+                    .split("le=\"")
+                    .nth(1)
+                    .and_then(|s| s.split('"').next())
+                    .expect("le label")
+                    .to_string();
+                (le, *v)
+            })
+            .collect();
+        assert_eq!(buckets.len(), LatencyHistogram::NUM_BUCKETS);
+
+        // edges agree EXACTLY with the in-process histogram, cumulative
+        // counts agree exactly with its bucket contents
+        let mut cum = 0u64;
+        for (i, (le, v)) in buckets.iter().enumerate() {
+            cum += h.bucket_counts()[i];
+            assert_eq!(*v, cum as f64, "cumulative count at bucket {i}");
+            match LatencyHistogram::bucket_upper_edge_ns(i) {
+                Some(edge) => assert_eq!(le, &edge.to_string(), "edge of bucket {i}"),
+                None => assert_eq!(le, "+Inf"),
+            }
+        }
+        // cumulative monotone + +Inf == _count
+        for w in buckets.windows(2) {
+            assert!(w[0].1 <= w[1].1, "bucket counts must be cumulative");
+        }
+        let count = samples
+            .iter()
+            .find(|(n, l, _)| n == "repro_event_latency_ns_count" && l.contains("engine"))
+            .unwrap()
+            .2;
+        assert_eq!(count, ns.len() as f64);
+        assert_eq!(buckets.last().unwrap().1, count, "+Inf equals _count");
+        let sum = samples
+            .iter()
+            .find(|(n, l, _)| n == "repro_event_latency_ns_sum" && l.contains("engine"))
+            .unwrap()
+            .2;
+        assert_eq!(sum, h.sum_ns() as f64, "sum matches (f64-rounded)");
+    }
+
+    #[test]
+    fn counters_and_gauges_export_the_snapshot() {
+        let (snap, _) = snapshot_with_latencies(&[1000, 2000]);
+        let text = render_prometheus(&snap);
+        let samples = parse(&text);
+        let get = |name: &str, label_frag: &str| -> f64 {
+            samples
+                .iter()
+                .find(|(n, l, _)| n == name && l.contains(label_frag))
+                .unwrap_or_else(|| panic!("missing {name}{{{label_frag}}}"))
+                .2
+        };
+        assert_eq!(get("repro_events_accepted_total", "engine"), 2.0);
+        assert_eq!(get("repro_events_shed_total", "engine"), 2.0);
+        assert_eq!(get("repro_events_scored_total", "engine"), 2.0);
+        assert_eq!(get("repro_events_dropped_total", "engine"), 0.0);
+        assert_eq!(get("repro_events_rebalanced_total", "engine"), 1.0);
+        assert_eq!(get("repro_shards", "engine"), 1.0);
+        assert_eq!(get("repro_shard_queue_depth", "shard=\"0\""), 4.0);
+        assert_eq!(get("repro_shard_scored_total", "shard=\"0\""), 2.0);
+        assert_eq!(get("repro_plan_swaps_total", "engine"), 1.0);
+        assert_eq!(get("repro_scale_ups_total", "engine"), 2.0);
+        assert_eq!(get("repro_scale_downs_total", "engine"), 1.0);
+        assert_eq!(get("repro_batches_total", "engine"), 3.0);
+        let unknowns = samples
+            .iter()
+            .find(|(n, _, _)| n == "repro_events_rejected_unknown_model_total")
+            .unwrap()
+            .2;
+        assert_eq!(unknowns, 3.0);
+    }
+
+    #[test]
+    fn empty_plane_renders_cleanly() {
+        let snap = PlaneSnapshot {
+            models: Vec::new(),
+            rejected_unknown: 0,
+            rejected_bad_shape: 0,
+            uptime_secs: 0.0,
+        };
+        let text = render_prometheus(&snap);
+        // still a valid exposition: families declared, no model samples
+        let samples = parse(&text);
+        assert!(samples
+            .iter()
+            .any(|(n, _, _)| n == "repro_uptime_seconds"));
+        assert!(!samples
+            .iter()
+            .any(|(n, _, _)| n.starts_with("repro_event_latency_ns")));
+    }
+}

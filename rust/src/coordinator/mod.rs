@@ -31,11 +31,27 @@
 //! ([`crate::stream::Windowizer`]), with the router consuming windows
 //! through the same SPSC backpressure path and workers recording
 //! per-window scores for trigger clustering (`crate::stream::analyze`).
+//!
+//! On top of the batch server sits the **network serving plane**
+//! (`repro serve --listen`): external producers speak the
+//! length-prefixed TCP framing of [`net`], every connection funnels into
+//! ONE dispatcher thread (preserving the rings' single-producer
+//! contract), and each model's pool becomes *elastic* — the [`scaler`]
+//! reconcile loop grows/shrinks the shard set between `--autoscale
+//! min..max` on queue depth and p99, and [`pool`] performs zero-drop hot
+//! plan swaps (spawn replacement on the newly verified+compiled plan,
+//! then drain the old shard, one at a time).  [`metrics_http`] exposes
+//! the whole thing as Prometheus text built verbatim on
+//! [`crate::metrics::LatencyHistogram`] buckets.
 
 pub mod backend;
 pub mod batcher;
 pub mod event;
+pub mod metrics_http;
+pub mod net;
+pub mod pool;
 pub mod router;
+pub mod scaler;
 pub mod server;
 pub mod spsc;
 pub mod stats;
@@ -43,7 +59,11 @@ pub mod stats;
 pub use backend::{Backend, BackendKind, BackendWindowCache};
 pub use batcher::{BatchPolicy, Batcher};
 pub use event::TriggerEvent;
+pub use metrics_http::{render_prometheus, MetricsServer};
+pub use net::{Frame, NetEvent, PlanSwap};
+pub use pool::{serve_net, ModelPool, NetServeOptions, PlaneSnapshot, ServingPlane};
 pub use router::{Router, Submit};
+pub use scaler::{parse_autoscale, AutoscaleConfig, Scaler};
 pub use server::{
     PipelineConfig, ServerConfig, ServerReport, SourceMode, StreamSource, TriggerServer,
     WeightsSource,

@@ -1,0 +1,517 @@
+//! Network ingestion frontier: length-prefixed TCP framing for
+//! [`TriggerEvent`]-shaped payloads, decoded into the router's normal
+//! submit path by the serving plane (`super::pool`).
+//!
+//! # Frame format (all integers little-endian)
+//!
+//! ```text
+//! [u32 frame_len] [u8 kind] [payload; frame_len - 1 bytes]
+//! ```
+//!
+//! `frame_len` counts the kind byte plus the payload. Kinds:
+//!
+//! * `0` — EVENT: `u64 id`, `u8 model_len`, `model_len` UTF-8 bytes,
+//!   `u8 flags` (bit 0: label follows, bit 1: stream position follows),
+//!   optional `u8 label`, optional `u64 stream_pos`, `u32 rows`,
+//!   `u32 cols`, then `rows * cols` f32 values row-major.
+//! * `1` — SHUTDOWN: empty payload; the server drains and reports.
+//! * `2` — SWAP_PLAN: `u8 model_len` + model bytes, `u32 precision_len`
+//!   + serialized precision-plan text, `u32 reuse_len` + serialized
+//!   reuse-plan text (a zero length means "no override for this dial").
+//!
+//! The framing is deliberately dumb: one length prefix, fixed-width
+//! fields, no compression — decode cost must stay negligible against a
+//! microsecond-scale inference budget.  A reader treats EOF *between*
+//! frames as a clean close and EOF *inside* a frame as an error.
+
+use std::io::{self, Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::nn::tensor::Mat;
+
+/// Hard cap on a single frame (16 MiB): a corrupt or hostile length
+/// prefix must not allocate unbounded memory.
+pub const MAX_FRAME_BYTES: u32 = 1 << 24;
+
+/// Cap on `rows * cols` of one event (far above any zoo model's
+/// `seq_len * input_size`, far below an allocation bomb).
+pub const MAX_EVENT_ELEMS: u64 = 1 << 22;
+
+const KIND_EVENT: u8 = 0;
+const KIND_SHUTDOWN: u8 = 1;
+const KIND_SWAP: u8 = 2;
+
+const FLAG_LABEL: u8 = 1;
+const FLAG_STREAM_POS: u8 = 2;
+
+/// A decoded event frame: the wire-side twin of
+/// [`super::event::TriggerEvent`] (the arrival timestamp is stamped at
+/// decode, not carried on the wire — clocks don't cross sockets).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetEvent {
+    pub id: u64,
+    pub model: String,
+    pub x: Mat,
+    pub label: Option<u8>,
+    pub stream_pos: Option<u64>,
+}
+
+/// A decoded plan-swap request: rebuild `model`'s backend under new
+/// plan overrides, one shard at a time, without dropping anything.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanSwap {
+    pub model: String,
+    /// Serialized precision-plan overrides (`PrecisionPlan::serialize`
+    /// text); `None` keeps the pipeline's uniform base.
+    pub precision: Option<String>,
+    /// Serialized reuse-plan overrides; `None` keeps the uniform base.
+    pub reuse: Option<String>,
+}
+
+/// One decoded frame off the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Event(NetEvent),
+    Shutdown,
+    Swap(PlanSwap),
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str8(buf: &mut Vec<u8>, s: &str) -> io::Result<()> {
+    if s.len() > u8::MAX as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("name too long for a u8 length: {} bytes", s.len()),
+        ));
+    }
+    buf.push(s.len() as u8);
+    buf.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+/// Encode one frame onto `w` (a single buffered write: the frame body is
+/// assembled in memory first so a slow socket never sees a torn frame).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    let mut body = Vec::with_capacity(64);
+    match frame {
+        Frame::Event(e) => {
+            body.push(KIND_EVENT);
+            put_u64(&mut body, e.id);
+            put_str8(&mut body, &e.model)?;
+            let mut flags = 0u8;
+            if e.label.is_some() {
+                flags |= FLAG_LABEL;
+            }
+            if e.stream_pos.is_some() {
+                flags |= FLAG_STREAM_POS;
+            }
+            body.push(flags);
+            if let Some(l) = e.label {
+                body.push(l);
+            }
+            if let Some(p) = e.stream_pos {
+                put_u64(&mut body, p);
+            }
+            put_u32(&mut body, e.x.rows() as u32);
+            put_u32(&mut body, e.x.cols() as u32);
+            for &v in e.x.data() {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::Shutdown => body.push(KIND_SHUTDOWN),
+        Frame::Swap(s) => {
+            body.push(KIND_SWAP);
+            put_str8(&mut body, &s.model)?;
+            for text in [&s.precision, &s.reuse] {
+                let t = text.as_deref().unwrap_or("");
+                put_u32(&mut body, t.len() as u32);
+                body.extend_from_slice(t.as_bytes());
+            }
+        }
+    }
+    if body.len() as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame of {} bytes exceeds MAX_FRAME_BYTES", body.len()),
+        ));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    Ok(())
+}
+
+/// Cursor over one received frame body with bounds-checked reads.
+struct Body<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Body<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.at + n > self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "frame truncated: field runs past the length prefix",
+            ));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str_n(&mut self, n: usize) -> io::Result<String> {
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 name"))
+    }
+
+    fn done(&self) -> io::Result<()> {
+        if self.at != self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{} trailing bytes after frame payload", self.buf.len() - self.at),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Decode the next frame off `r`.  Returns `Ok(None)` on a clean EOF at
+/// a frame boundary; EOF mid-frame, an oversized length prefix, an
+/// unknown kind byte, or a malformed payload are all `InvalidData`-class
+/// errors.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Frame>> {
+    let mut len_buf = [0u8; 4];
+    // distinguish clean close (0 bytes before the prefix) from torn
+    // frame (EOF inside the prefix or body)
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut len_buf[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "EOF inside a frame length prefix",
+            ));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} outside (0, {MAX_FRAME_BYTES}]"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    let mut b = Body { buf: &body, at: 0 };
+    let kind = b.u8()?;
+    let frame = match kind {
+        KIND_EVENT => {
+            let id = b.u64()?;
+            let model_len = b.u8()? as usize;
+            let model = b.str_n(model_len)?;
+            let flags = b.u8()?;
+            let label = if flags & FLAG_LABEL != 0 { Some(b.u8()?) } else { None };
+            let stream_pos =
+                if flags & FLAG_STREAM_POS != 0 { Some(b.u64()?) } else { None };
+            let rows = b.u32()? as usize;
+            let cols = b.u32()? as usize;
+            let elems = rows as u64 * cols as u64;
+            if rows == 0 || cols == 0 || elems > MAX_EVENT_ELEMS {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("event shape {rows}x{cols} outside bounds"),
+                ));
+            }
+            let raw = b.take(elems as usize * 4)?;
+            let mut data = Vec::with_capacity(elems as usize);
+            for c in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            b.done()?;
+            Frame::Event(NetEvent {
+                id,
+                model,
+                x: Mat::from_vec(rows, cols, data),
+                label,
+                stream_pos,
+            })
+        }
+        KIND_SHUTDOWN => {
+            b.done()?;
+            Frame::Shutdown
+        }
+        KIND_SWAP => {
+            let model_len = b.u8()? as usize;
+            let model = b.str_n(model_len)?;
+            let mut texts = [None, None];
+            for slot in texts.iter_mut() {
+                let n = b.u32()? as usize;
+                if n > 0 {
+                    *slot = Some(b.str_n(n)?);
+                }
+            }
+            b.done()?;
+            let [precision, reuse] = texts;
+            Frame::Swap(PlanSwap { model, precision, reuse })
+        }
+        k => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unknown frame kind {k}"),
+            ));
+        }
+    };
+    Ok(Some(frame))
+}
+
+/// Accept connections on `listener` and forward every decoded frame into
+/// `tx`.  One reader thread per connection; the SPSC single-producer
+/// contract downstream is preserved because all readers funnel into ONE
+/// mpsc channel whose sole consumer is the plane's dispatcher thread.
+///
+/// The acceptor polls non-blocking so `stop` can end it promptly; reader
+/// threads use a short read timeout for the same reason.  A decode error
+/// closes that one connection (logged once) without disturbing others.
+pub fn spawn_acceptor(
+    listener: TcpListener,
+    tx: mpsc::Sender<Frame>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    listener
+        .set_nonblocking(true)
+        .expect("nonblocking listener");
+    std::thread::spawn(move || {
+        let mut readers = Vec::new();
+        while !stop.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    let tx = tx.clone();
+                    let stop = stop.clone();
+                    readers.push(std::thread::spawn(move || {
+                        let mut stream = stream;
+                        stream
+                            .set_read_timeout(Some(Duration::from_millis(500)))
+                            .ok();
+                        loop {
+                            if stop.load(Ordering::Acquire) {
+                                return;
+                            }
+                            match read_frame(&mut stream) {
+                                Ok(Some(frame)) => {
+                                    if tx.send(frame).is_err() {
+                                        return; // dispatcher gone
+                                    }
+                                }
+                                Ok(None) => return, // clean close
+                                Err(e)
+                                    if e.kind() == io::ErrorKind::WouldBlock
+                                        || e.kind() == io::ErrorKind::TimedOut =>
+                                {
+                                    // idle connection: re-check stop.
+                                    // NOTE: a timeout can only hit between
+                                    // frames here (clients write whole
+                                    // frames in one syscall); a genuinely
+                                    // torn frame surfaces as the decode
+                                    // error below on the next bytes.
+                                    continue;
+                                }
+                                Err(e) => {
+                                    eprintln!("net: closing {peer}: {e}");
+                                    return;
+                                }
+                            }
+                        }
+                    }));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    eprintln!("net: accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        for r in readers {
+            let _ = r.join();
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn event(id: u64, label: Option<u8>, pos: Option<u64>) -> Frame {
+        let x = Mat::from_vec(3, 2, vec![0.5, -1.25, 3.75, 0.0, f32::MIN_POSITIVE, 42.0]);
+        Frame::Event(NetEvent { id, model: "engine".into(), x, label, stream_pos: pos })
+    }
+
+    fn round_trip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, f).unwrap();
+        let mut c = Cursor::new(buf);
+        let got = read_frame(&mut c).unwrap().expect("one frame");
+        // and the stream is cleanly exhausted
+        assert!(read_frame(&mut c).unwrap().is_none());
+        got
+    }
+
+    #[test]
+    fn event_frames_round_trip_bitwise() {
+        for f in [
+            event(0, None, None),
+            event(7, Some(1), None),
+            event(u64::MAX, None, Some(12345)),
+            event(99, Some(0), Some(u64::MAX)),
+        ] {
+            let got = round_trip(&f);
+            assert_eq!(got, f);
+            // f32 payload really is bitwise, not approximate
+            if let (Frame::Event(a), Frame::Event(b)) = (&f, &got) {
+                let bits = |m: &Mat| m.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&a.x), bits(&b.x));
+            }
+        }
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        assert_eq!(round_trip(&Frame::Shutdown), Frame::Shutdown);
+        let swap = Frame::Swap(PlanSwap {
+            model: "engine".into(),
+            precision: Some("block0.ffn1 ap_fixed<18,8>".into()),
+            reuse: None,
+        });
+        assert_eq!(round_trip(&swap), swap);
+        let both = Frame::Swap(PlanSwap {
+            model: "gw".into(),
+            precision: Some("softmax ap_fixed<12,3>".into()),
+            reuse: Some("pool R2".into()),
+        });
+        assert_eq!(round_trip(&both), both);
+    }
+
+    #[test]
+    fn many_frames_stream_back_to_back() {
+        let mut buf = Vec::new();
+        let frames: Vec<Frame> =
+            (0..20).map(|i| event(i, Some((i % 2) as u8), None)).collect();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        let mut c = Cursor::new(buf);
+        for f in &frames {
+            assert_eq!(&read_frame(&mut c).unwrap().unwrap(), f);
+        }
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), Frame::Shutdown);
+        assert!(read_frame(&mut c).unwrap().is_none());
+    }
+
+    #[test]
+    fn clean_eof_is_none_torn_frame_is_error() {
+        // empty stream: clean close
+        assert!(read_frame(&mut Cursor::new(Vec::new())).unwrap().is_none());
+        // cut inside the length prefix
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &event(1, None, None)).unwrap();
+        let torn_prefix = &buf[..2];
+        assert!(read_frame(&mut Cursor::new(torn_prefix.to_vec())).is_err());
+        // cut inside the body
+        let torn_body = &buf[..buf.len() - 3];
+        assert!(read_frame(&mut Cursor::new(torn_body.to_vec())).is_err());
+    }
+
+    #[test]
+    fn hostile_inputs_are_refused_without_allocating() {
+        // oversized length prefix
+        let mut buf = (MAX_FRAME_BYTES + 1).to_le_bytes().to_vec();
+        buf.push(KIND_EVENT);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+        // zero-length frame
+        assert!(read_frame(&mut Cursor::new(0u32.to_le_bytes().to_vec())).is_err());
+        // unknown kind
+        let mut buf = 1u32.to_le_bytes().to_vec();
+        buf.push(77);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+        // absurd event shape: claim 2^31 x 2^31 but send no data
+        let mut body = vec![KIND_EVENT];
+        body.extend_from_slice(&0u64.to_le_bytes());
+        body.push(1);
+        body.push(b'e');
+        body.push(0); // flags
+        body.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        body.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        let mut buf = (body.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(&body);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+        // trailing garbage after a valid payload
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        buf[0] += 1; // lengthen the frame by one byte...
+        buf.push(0xAB); // ...and supply it
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn acceptor_forwards_frames_over_loopback() {
+        use std::net::TcpStream;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_acceptor(listener, tx, stop.clone());
+        // two concurrent producers funnel into one channel
+        let mut a = TcpStream::connect(addr).unwrap();
+        let mut b = TcpStream::connect(addr).unwrap();
+        for i in 0..5 {
+            write_frame(&mut a, &event(i, Some(1), None)).unwrap();
+            write_frame(&mut b, &event(100 + i, None, Some(i))).unwrap();
+        }
+        drop(a);
+        drop(b);
+        let mut got = Vec::new();
+        for _ in 0..10 {
+            got.push(rx.recv_timeout(Duration::from_secs(5)).expect("frame"));
+        }
+        let mut ids: Vec<u64> = got
+            .iter()
+            .map(|f| match f {
+                Frame::Event(e) => e.id,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 100, 101, 102, 103, 104]);
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,865 @@
+//! The network serving plane: dynamic per-model worker pools behind the
+//! TCP ingestion frontier (`super::net`), with elastic scaling
+//! (`super::scaler`), a scrapeable metrics endpoint
+//! (`super::metrics_http`), and zero-drop hot plan swaps.
+//!
+//! Relationship to [`super::server::TriggerServer`]: the batch server
+//! spawns a fixed pool per model and runs sources to completion; the
+//! plane runs the SAME shard worker loop (`server::serve_shard`) under a
+//! *dynamic* shard set — shards are spawned and retired on a live route
+//! while one dispatcher thread keeps submitting.  `replicas` in the
+//! pipeline config is the plane's initial width, not a fixed one.
+//!
+//! # Zero-drop invariants
+//!
+//! * Retiring a shard detaches it from the router FIRST (no new events
+//!   can land), then closes its ring; the worker drains every queued
+//!   event before exiting, and its stats fold into the pool's retired
+//!   total.  Nothing on a ring is ever discarded by scaling.
+//! * A hot plan swap spawns each replacement shard (adopting the newly
+//!   compiled engine) BEFORE retiring the old one, one shard at a time —
+//!   the pool never has fewer live shards than it started with, so the
+//!   swap is zero-drop even at one replica.
+//! * The swap re-runs the static plan verifier and compiles the new
+//!   engine before the first drain; a refused plan leaves the pool
+//!   untouched.
+
+use std::collections::{BTreeMap, HashMap};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, BackendKind};
+use super::batcher::Batcher;
+use super::event::TriggerEvent;
+use super::net::{self, Frame, NetEvent, PlanSwap};
+use super::router::{Router, Submit};
+use super::scaler::{AutoscaleConfig, Scaler};
+use super::server::{
+    resolve_pipeline, serve_shard, CompiledInfo, PipelineConfig, ServerConfig,
+    ServerReport, SourceMode,
+};
+use super::spsc;
+use super::stats::{PipelineStats, ShardLive, ShardStats};
+use crate::hls::{FixedTransformer, ParallelismPlan, PrecisionPlan, SynthesisReport};
+use crate::metrics::LatencyHistogram;
+use crate::models::{weights::Weights, ModelConfig};
+use crate::runtime::Runtime;
+
+/// One live shard: the publishing handle scraped by metrics plus the
+/// worker's join handle (the worker returns its full local stats).
+struct ShardHandle {
+    live: Arc<ShardLive>,
+    join: std::thread::JoinHandle<PipelineStats>,
+}
+
+/// Mutable pool state behind one mutex: the current plans + engine that
+/// new shards adopt, and the live shard map keyed by stable id.
+struct PoolInner {
+    plan: PrecisionPlan,
+    par: ParallelismPlan,
+    /// Compile-once engine current shards were (or will be) built from;
+    /// `None` for float/PJRT pools.
+    engine: Option<FixedTransformer>,
+    /// Next stable shard id (monotonic; ids are never reused, so retired
+    /// and live stats never collide).
+    next_shard: usize,
+    shards: BTreeMap<usize, ShardHandle>,
+}
+
+/// One model's elastic worker pool on the serving plane.
+pub struct ModelPool {
+    model: &'static str,
+    pc: PipelineConfig,
+    mcfg: ModelConfig,
+    weights: Arc<Weights>,
+    artifacts: PathBuf,
+    inner: Mutex<PoolInner>,
+    /// Folded stats of every retired shard (the live ones still hold
+    /// their own); at shutdown this becomes the model's report entry.
+    retired: Mutex<PipelineStats>,
+    /// Modeled FPGA design point under the *current* plan (updated on
+    /// swap; `None` for float/PJRT pools).
+    modeled: Mutex<Option<SynthesisReport>>,
+    compiled: Mutex<Option<CompiledInfo>>,
+    swaps: AtomicU64,
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
+}
+
+impl ModelPool {
+    fn new(
+        pc: PipelineConfig,
+        resolved: super::server::ResolvedPipeline,
+        artifacts: PathBuf,
+    ) -> Self {
+        let super::server::ResolvedPipeline {
+            mcfg,
+            weights,
+            plan,
+            par,
+            engine,
+            modeled,
+            compiled,
+        } = resolved;
+        Self {
+            model: pc.model,
+            pc,
+            mcfg,
+            weights,
+            artifacts,
+            inner: Mutex::new(PoolInner {
+                plan,
+                par,
+                engine,
+                next_shard: 0,
+                shards: BTreeMap::new(),
+            }),
+            retired: Mutex::new(PipelineStats::default()),
+            modeled: Mutex::new(modeled),
+            compiled: Mutex::new(compiled),
+            swaps: AtomicU64::new(0),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
+        }
+    }
+
+    pub fn model(&self) -> &'static str {
+        self.model
+    }
+
+    /// Ring capacity each shard is built with (the autoscaler's fill
+    /// denominator).
+    pub fn ring_capacity(&self) -> usize {
+        self.pc.ring_capacity
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.inner.lock().unwrap().shards.len()
+    }
+
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    pub fn scale_ups(&self) -> u64 {
+        self.scale_ups.load(Ordering::Relaxed)
+    }
+
+    pub fn scale_downs(&self) -> u64 {
+        self.scale_downs.load(Ordering::Relaxed)
+    }
+
+    /// Spawn one shard adopting the pool's current plan/engine, attach
+    /// it to the router, return its stable id.
+    fn spawn_shard_locked(&self, router: &Router, inner: &mut PoolInner) -> usize {
+        let id = inner.next_shard;
+        inner.next_shard += 1;
+        let (tx, rx) = spsc::ring::<TriggerEvent>(self.pc.ring_capacity);
+        let live = Arc::new(ShardLive::new(id));
+        let live_w = live.clone();
+        let engine = inner.engine.clone();
+        let plan = inner.plan.clone();
+        let par = inner.par.clone();
+        let pc = self.pc.clone();
+        let mcfg = self.mcfg.clone();
+        let weights = self.weights.clone();
+        let artifacts = self.artifacts.clone();
+        let join = std::thread::spawn(move || -> PipelineStats {
+            let built = (|| -> Result<(Option<Runtime>, Backend)> {
+                if let Some(engine) = engine {
+                    return Ok((None, Backend::from_hls_engine(engine, par.clone())));
+                }
+                let runtime = if pc.backend == BackendKind::Pjrt {
+                    Some(Runtime::cpu()?)
+                } else {
+                    None
+                };
+                let backend = Backend::build(
+                    pc.backend,
+                    &mcfg,
+                    &weights,
+                    &plan,
+                    &par,
+                    runtime.as_ref(),
+                    &artifacts,
+                )?;
+                Ok((runtime, backend))
+            })();
+            match built {
+                Ok((_runtime, backend)) => {
+                    let batcher = Batcher::new(pc.batch, rx);
+                    let stream_reuse =
+                        matches!(&pc.source, SourceMode::Stream(ss) if ss.reuse);
+                    serve_shard(&backend, batcher, stream_reuse, id, Some(&live_w))
+                }
+                Err(e) => {
+                    // a shard that cannot build must still drain its ring
+                    // until retired, or the route would wedge; everything
+                    // it drains is a worker-side drop
+                    eprintln!("shard {id}: backend build failed, draining: {e:#}");
+                    let mut batcher = Batcher::new(pc.batch, rx);
+                    let mut stats = PipelineStats::default();
+                    while let Some(batch) = batcher.next_batch() {
+                        stats.dropped += batch.len() as u64;
+                        live_w.publish(stats.shard_snapshot(id));
+                    }
+                    live_w.publish(stats.shard_snapshot(id));
+                    stats
+                }
+            }
+        });
+        inner.shards.insert(id, ShardHandle { live, join });
+        // attach last: the worker (or at least its ring) exists before
+        // the router can land events on it
+        let attached = router.add_shard(self.model, id, tx);
+        assert!(attached, "pool '{}' has a route", self.model);
+        id
+    }
+
+    /// Detach shard `id` from the router, close its ring, drain-join the
+    /// worker, fold its stats into the retired total.  Zero-drop: every
+    /// event already queued is scored before the worker exits.
+    fn retire_shard_locked(&self, router: &Router, inner: &mut PoolInner, id: usize) {
+        let handle = inner.shards.remove(&id).expect("retiring a live shard");
+        if let Some(tx) = router.remove_shard(self.model, id) {
+            tx.close();
+        }
+        let stats = handle.join.join().expect("shard worker");
+        self.retired.lock().unwrap().absorb_shard(id, &stats);
+    }
+
+    /// Add one shard (initial spawn and autoscaler growth).  Returns the
+    /// new shard's id.
+    pub fn scale_up(&self, router: &Router) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        self.spawn_shard_locked(router, &mut inner)
+    }
+
+    /// Retire the newest shard.  Refuses (returns false) at one shard —
+    /// the pool itself never goes dark; only shutdown empties it.
+    pub fn scale_down(&self, router: &Router) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.shards.len() <= 1 {
+            return false;
+        }
+        let id = *inner.shards.keys().next_back().expect("non-empty");
+        self.retire_shard_locked(router, &mut inner, id);
+        true
+    }
+
+    /// Autoscaler bookkeeping (kept separate from the mechanics so
+    /// initial spawns and swap churn don't count as scaling decisions).
+    pub fn note_scale_up(&self) {
+        self.scale_ups.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_scale_down(&self) {
+        self.scale_downs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Hot plan swap: verify the candidate plans, compile the new engine
+    /// once, then roll the pool one shard at a time (spawn replacement
+    /// on the new engine → drain + retire the old shard).  Zero-drop by
+    /// construction; a refused plan is an `Err` with the pool untouched.
+    pub fn swap_plan(
+        &self,
+        router: &Router,
+        precision: Option<&str>,
+        reuse: Option<&str>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.pc.backend == BackendKind::Hls,
+            "hot plan swap needs the hls backend; pool '{}' serves {:?}",
+            self.model,
+            self.pc.backend
+        );
+        let mut inner = self.inner.lock().unwrap();
+        // resolve the candidate plans over the pipeline's uniform bases
+        let mut plan = PrecisionPlan::uniform(self.mcfg.num_blocks, self.pc.quant);
+        if let Some(text) = precision {
+            plan.apply_overrides(text)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("swap precision plan for '{}'", self.model))?;
+        }
+        let mut par = ParallelismPlan::uniform(self.mcfg.num_blocks, self.pc.reuse);
+        if let Some(text) = reuse {
+            par.apply_overrides(text)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("swap reuse plan for '{}'", self.model))?;
+        }
+        // the verifier gates the swap BEFORE any drain starts: a bad
+        // plan must leave the live pool untouched
+        let verdict = crate::analysis::verify_plan(
+            &self.mcfg,
+            &self.weights,
+            &plan,
+            &par,
+            &crate::analysis::VerifyConfig::default(),
+        );
+        if verdict.has_errors() {
+            let first = verdict.errors().next().expect("has_errors");
+            anyhow::bail!(
+                "swap refused for '{}': plan verification failed \
+                 ({} error(s)); first: site '{}': {}",
+                self.model,
+                verdict.count(crate::analysis::Severity::Error),
+                first.site,
+                first.message
+            );
+        }
+        // compile once; every replacement shard adopts this artifact
+        let engine = FixedTransformer::with_plan(self.mcfg.clone(), &self.weights, plan.clone());
+        *self.modeled.lock().unwrap() = Some(engine.synthesize(&par));
+        *self.compiled.lock().unwrap() = Some(CompiledInfo {
+            build_micros: engine.compiled().build_micros(),
+            bytes: engine.compiled().bytes(),
+            replicas: inner.shards.len().max(1),
+        });
+        inner.plan = plan;
+        inner.par = par;
+        inner.engine = Some(engine);
+        // rolling replacement: spawn-on-new-plan first, retire-old
+        // second, one shard at a time — capacity never dips, so even a
+        // one-replica pool swaps without dropping anything
+        let old_ids: Vec<usize> = inner.shards.keys().copied().collect();
+        for id in old_ids {
+            self.spawn_shard_locked(router, &mut inner);
+            self.retire_shard_locked(router, &mut inner, id);
+        }
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Cumulative stats snapshots of the live shards (retired shards
+    /// live in `retired`).
+    fn live_snapshots(&self) -> Vec<ShardStats> {
+        let inner = self.inner.lock().unwrap();
+        inner.shards.values().map(|h| h.live.snapshot()).collect()
+    }
+
+    /// p99 latency over the live shards' merged histograms (the
+    /// autoscaler's latency signal); `None` before any event is scored.
+    pub fn live_p99_ns(&self) -> Option<u64> {
+        let mut merged = LatencyHistogram::new();
+        for s in self.live_snapshots() {
+            merged.merge(&s.latency);
+        }
+        if merged.count() == 0 {
+            None
+        } else {
+            Some(merged.quantile_ns(0.99))
+        }
+    }
+
+    /// Retire every live shard and return the pool's final folded stats
+    /// (shed/rebalanced are filled in by the plane from the router).
+    fn drain_all(&self, router: &Router) -> PipelineStats {
+        let mut inner = self.inner.lock().unwrap();
+        let ids: Vec<usize> = inner.shards.keys().copied().collect();
+        for id in ids {
+            self.retire_shard_locked(router, &mut inner, id);
+        }
+        self.retired.lock().unwrap().clone()
+    }
+}
+
+/// One model's scrape-time view, assembled lock-briefly from the router
+/// counters, the live shards' published snapshots, and the retired fold.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    pub model: &'static str,
+    /// Router-side accepted (queued) count.
+    pub router_accepted: u64,
+    pub shed: u64,
+    pub rebalanced: u64,
+    pub replicas: usize,
+    /// Instantaneous `(shard_id, queued_events)` per live shard.
+    pub queue_depths: Vec<(usize, usize)>,
+    /// Cumulative per-shard stats: every retired shard, then every live
+    /// one (ids never collide — they are assigned monotonically).
+    pub shards: Vec<ShardStats>,
+    pub swaps: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+}
+
+impl ModelSnapshot {
+    /// Worker-side scored total across retired + live shards.
+    pub fn scored(&self) -> u64 {
+        self.shards.iter().map(|s| s.accepted).sum()
+    }
+
+    /// Worker-side dropped total across retired + live shards.
+    pub fn dropped(&self) -> u64 {
+        self.shards.iter().map(|s| s.dropped).sum()
+    }
+
+    /// Merged latency histogram across retired + live shards — the
+    /// exposition source; its buckets agree with every in-process
+    /// `LatencyHistogram` by construction (same type, same edges).
+    pub fn latency(&self) -> LatencyHistogram {
+        let mut merged = LatencyHistogram::new();
+        for s in &self.shards {
+            merged.merge(&s.latency);
+        }
+        merged
+    }
+}
+
+/// Whole-plane scrape-time view.
+#[derive(Clone, Debug)]
+pub struct PlaneSnapshot {
+    pub models: Vec<ModelSnapshot>,
+    /// Events refused because no pool serves their model name.
+    pub rejected_unknown: u64,
+    /// Events refused because their matrix shape mismatched the model.
+    pub rejected_bad_shape: u64,
+    pub uptime_secs: f64,
+}
+
+/// The serving plane: router + per-model elastic pools + the counters
+/// the dispatcher maintains.  Shared (`Arc`) between the dispatcher,
+/// the autoscaler, and the metrics endpoint.
+pub struct ServingPlane {
+    router: Arc<Router>,
+    pools: Vec<Arc<ModelPool>>,
+    by_name: HashMap<&'static str, usize>,
+    rejected_unknown: AtomicU64,
+    rejected_bad_shape: AtomicU64,
+    started: Instant,
+}
+
+impl ServingPlane {
+    /// Resolve every pipeline (verifier-gated), register dynamic routes,
+    /// and spawn each pool's initial shards.  `initial_clamp` bounds the
+    /// starting width (the autoscaler's min..max band when autoscaling).
+    pub fn new(cfg: &ServerConfig, initial_clamp: Option<(usize, usize)>) -> Result<Self> {
+        anyhow::ensure!(!cfg.pipelines.is_empty(), "serving plane needs >= 1 pipeline");
+        {
+            let mut seen = std::collections::HashSet::new();
+            for pc in &cfg.pipelines {
+                anyhow::ensure!(
+                    seen.insert(pc.model),
+                    "duplicate pipeline for model '{}'",
+                    pc.model
+                );
+            }
+        }
+        let mut router = Router::new();
+        let mut pools = Vec::new();
+        let mut by_name = HashMap::new();
+        for pc in &cfg.pipelines {
+            let resolved = resolve_pipeline(&cfg.artifacts_dir, pc)?;
+            router.add_dynamic_route(
+                pc.model,
+                resolved.mcfg.seq_len,
+                resolved.mcfg.input_size,
+            );
+            by_name.insert(pc.model, pools.len());
+            pools.push(Arc::new(ModelPool::new(
+                pc.clone(),
+                resolved,
+                cfg.artifacts_dir.clone(),
+            )));
+        }
+        let plane = Self {
+            router: Arc::new(router),
+            pools,
+            by_name,
+            rejected_unknown: AtomicU64::new(0),
+            rejected_bad_shape: AtomicU64::new(0),
+            started: Instant::now(),
+        };
+        for pool in &plane.pools {
+            let mut want = pool.pc.replicas.max(1);
+            if let Some((lo, hi)) = initial_clamp {
+                want = want.clamp(lo.max(1), hi.max(1));
+            }
+            for _ in 0..want {
+                pool.scale_up(&plane.router);
+            }
+        }
+        Ok(plane)
+    }
+
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    pub fn pools(&self) -> &[Arc<ModelPool>] {
+        &self.pools
+    }
+
+    /// Submit one decoded network event through the router.  Must be
+    /// called from a single dispatcher thread per the SPSC contract.
+    pub fn submit_net(&self, ev: NetEvent) -> Submit {
+        let Some(&idx) = self.by_name.get(ev.model.as_str()) else {
+            self.rejected_unknown.fetch_add(1, Ordering::Relaxed);
+            return Submit::UnknownModel;
+        };
+        let model = self.pools[idx].model;
+        let mut te = match ev.stream_pos {
+            Some(pos) => TriggerEvent::stream_window(ev.id, model, ev.x, pos),
+            None => TriggerEvent::new(ev.id, model, ev.x, ev.label),
+        };
+        te.label = ev.label;
+        let outcome = self.router.submit(te);
+        if outcome == Submit::BadShape {
+            self.rejected_bad_shape.fetch_add(1, Ordering::Relaxed);
+        }
+        outcome
+    }
+
+    /// Apply a decoded plan-swap request to its model's pool.
+    pub fn swap(&self, req: &PlanSwap) -> Result<()> {
+        let Some(&idx) = self.by_name.get(req.model.as_str()) else {
+            anyhow::bail!("swap for unknown model '{}'", req.model);
+        };
+        self.pools[idx].swap_plan(
+            &self.router,
+            req.precision.as_deref(),
+            req.reuse.as_deref(),
+        )
+    }
+
+    /// Scrape-time view of the whole plane (cheap: published snapshots +
+    /// atomic counters; no worker is interrupted).
+    pub fn snapshot(&self) -> PlaneSnapshot {
+        let mut models = Vec::with_capacity(self.pools.len());
+        for pool in &self.pools {
+            let (router_accepted, shed) =
+                self.router.counters(pool.model).unwrap_or((0, 0));
+            let mut shards = self.retired_shards(pool);
+            shards.extend(pool.live_snapshots());
+            models.push(ModelSnapshot {
+                model: pool.model,
+                router_accepted,
+                shed,
+                rebalanced: self.router.rebalanced(pool.model).unwrap_or(0),
+                replicas: self.router.replicas(pool.model).unwrap_or(0),
+                queue_depths: self.router.queue_depths(pool.model).unwrap_or_default(),
+                shards,
+                swaps: pool.swaps(),
+                scale_ups: pool.scale_ups(),
+                scale_downs: pool.scale_downs(),
+            });
+        }
+        models.sort_by_key(|m| m.model);
+        PlaneSnapshot {
+            models,
+            rejected_unknown: self.rejected_unknown.load(Ordering::Relaxed),
+            rejected_bad_shape: self.rejected_bad_shape.load(Ordering::Relaxed),
+            uptime_secs: self.started.elapsed().as_secs_f64(),
+        }
+    }
+
+    fn retired_shards(&self, pool: &ModelPool) -> Vec<ShardStats> {
+        pool.retired.lock().unwrap().shards.clone()
+    }
+
+    /// Drain every pool and assemble the final [`ServerReport`] (same
+    /// shape the batch server returns, so reporting tooling is shared).
+    pub fn shutdown(&self) -> ServerReport {
+        let mut per_model = HashMap::new();
+        let mut modeled_designs = HashMap::new();
+        let mut compiled = HashMap::new();
+        for pool in &self.pools {
+            let mut stats = pool.drain_all(&self.router);
+            let (_accepted, shed) = self.router.counters(pool.model).unwrap_or((0, 0));
+            stats.shed = shed;
+            stats.rebalanced = self.router.rebalanced(pool.model).unwrap_or(0);
+            per_model.insert(pool.model, stats);
+            if let Some(m) = pool.modeled.lock().unwrap().clone() {
+                modeled_designs.insert(pool.model, m);
+            }
+            if let Some(ci) = *pool.compiled.lock().unwrap() {
+                compiled.insert(pool.model, ci);
+            }
+        }
+        ServerReport {
+            per_model,
+            modeled_designs,
+            compiled,
+            stream_truth: HashMap::new(),
+            wall: self.started.elapsed(),
+        }
+    }
+}
+
+/// Extras for [`serve_net`] beyond the ingestion listener.
+pub struct NetServeOptions {
+    /// Bound listener for the Prometheus metrics endpoint.
+    pub metrics: Option<TcpListener>,
+    /// Autoscaler policy; `None` keeps the initial replica count fixed.
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+/// Run the serving plane on a bound listener until a SHUTDOWN frame
+/// arrives, then drain everything and return the final report.
+///
+/// Thread layout: N connection readers -> one mpsc channel -> THIS
+/// thread as the single dispatcher (upholding the SPSC single-producer
+/// contract for every route), plus the optional autoscaler and metrics
+/// threads which never submit.
+pub fn serve_net(
+    cfg: &ServerConfig,
+    listener: TcpListener,
+    opts: NetServeOptions,
+) -> Result<ServerReport> {
+    let clamp = opts.autoscale.as_ref().map(|a| (a.min, a.max));
+    let plane = Arc::new(ServingPlane::new(cfg, clamp)?);
+    let (tx, rx) = mpsc::channel::<Frame>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let acceptor = net::spawn_acceptor(listener, tx, stop.clone());
+    let metrics = opts
+        .metrics
+        .map(|l| super::metrics_http::MetricsServer::start(l, plane.clone()));
+    let scaler = opts.autoscale.map(|a| Scaler::start(a, plane.clone()));
+    // the dispatcher loop: the ONE producer thread for every route
+    while let Ok(frame) = rx.recv() {
+        match frame {
+            Frame::Event(ev) => {
+                // Shed/UnknownModel/BadShape are all counted; the
+                // dispatcher itself never blocks and never stops
+                let _ = plane.submit_net(ev);
+            }
+            Frame::Swap(req) => {
+                if let Err(e) = plane.swap(&req) {
+                    // a refused swap is an operator error, not a server
+                    // failure: log and keep serving on the old plan
+                    eprintln!("plan swap refused: {e:#}");
+                }
+            }
+            Frame::Shutdown => break,
+        }
+    }
+    stop.store(true, Ordering::Release);
+    if let Some(s) = scaler {
+        s.stop();
+    }
+    let report = plane.shutdown();
+    if let Some(m) = metrics {
+        m.stop();
+    }
+    let _ = acceptor.join();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::WeightsSource;
+    use crate::nn::tensor::Mat;
+
+    fn plane_cfg(backend: BackendKind) -> ServerConfig {
+        ServerConfig {
+            pipelines: vec![PipelineConfig {
+                weights: WeightsSource::Synthetic(1),
+                ..PipelineConfig::new("engine", backend)
+            }],
+            artifacts_dir: PathBuf::from("."),
+            ..Default::default()
+        }
+    }
+
+    fn net_event(id: u64, seq_len: usize, input_size: usize) -> NetEvent {
+        let data: Vec<f32> = (0..seq_len * input_size)
+            .map(|k| ((id as usize * 31 + k * 7) % 97) as f32 / 97.0 - 0.5)
+            .collect();
+        NetEvent {
+            id,
+            model: "engine".into(),
+            x: Mat::from_vec(seq_len, input_size, data),
+            label: Some((id % 2) as u8),
+            stream_pos: None,
+        }
+    }
+
+    fn engine_shape() -> (usize, usize) {
+        let c = &crate::models::zoo::zoo_model("engine").unwrap().config;
+        (c.seq_len, c.input_size)
+    }
+
+    #[test]
+    fn plane_serves_submitted_events_and_reports() {
+        let plane = ServingPlane::new(&plane_cfg(BackendKind::Float), None).unwrap();
+        let (sl, is) = engine_shape();
+        for i in 0..200 {
+            assert_eq!(plane.submit_net(net_event(i, sl, is)), Submit::Accepted);
+        }
+        let report = plane.shutdown();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted, 200);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.dropped, 0);
+        assert!(s.online_auc().is_some(), "labels flow through the wire path");
+    }
+
+    #[test]
+    fn unknown_model_and_bad_shape_are_counted_not_fatal() {
+        let plane = ServingPlane::new(&plane_cfg(BackendKind::Float), None).unwrap();
+        let (sl, is) = engine_shape();
+        let mut bogus = net_event(0, sl, is);
+        bogus.model = "bogus".into();
+        assert_eq!(plane.submit_net(bogus), Submit::UnknownModel);
+        let misshapen = NetEvent {
+            id: 1,
+            model: "engine".into(),
+            x: Mat::zeros(sl + 1, is),
+            label: None,
+            stream_pos: None,
+        };
+        assert_eq!(plane.submit_net(misshapen), Submit::BadShape);
+        assert_eq!(plane.submit_net(net_event(2, sl, is)), Submit::Accepted);
+        let snap = plane.snapshot();
+        assert_eq!(snap.rejected_unknown, 1);
+        assert_eq!(snap.rejected_bad_shape, 1);
+        let report = plane.shutdown();
+        assert_eq!(report.per_model["engine"].accepted, 1);
+    }
+
+    #[test]
+    fn scaling_preserves_every_event_and_folds_retired_stats() {
+        let plane = ServingPlane::new(&plane_cfg(BackendKind::Float), None).unwrap();
+        let pool = plane.pools()[0].clone();
+        let (sl, is) = engine_shape();
+        assert_eq!(pool.replicas(), 1);
+        let mut sent = 0u64;
+        for i in 0..100 {
+            plane.submit_net(net_event(i, sl, is));
+            sent += 1;
+        }
+        pool.scale_up(plane.router());
+        pool.scale_up(plane.router());
+        assert_eq!(pool.replicas(), 3);
+        assert_eq!(plane.router().replicas("engine"), Some(3));
+        for i in 100..220 {
+            plane.submit_net(net_event(i, sl, is));
+            sent += 1;
+        }
+        // scale back down: retired shards' events must not vanish
+        assert!(pool.scale_down(plane.router()));
+        assert!(pool.scale_down(plane.router()));
+        assert_eq!(pool.replicas(), 1);
+        assert!(!pool.scale_down(plane.router()), "refuses to go dark");
+        for i in 220..260 {
+            plane.submit_net(net_event(i, sl, is));
+            sent += 1;
+        }
+        let report = plane.shutdown();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted + s.shed, sent, "every event accounted");
+        assert_eq!(s.dropped, 0, "scaling dropped nothing");
+        assert_eq!(s.shed, 0, "1024-deep rings absorb this easily");
+        // retired + final shards all present, ids unique
+        let mut ids: Vec<usize> = s.shards.iter().map(|sh| sh.shard).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), s.shards.len(), "stable ids never collide");
+        assert_eq!(s.shards.len(), 3, "three shards ever existed");
+    }
+
+    #[test]
+    fn snapshot_exposes_live_pool_state() {
+        let plane = ServingPlane::new(&plane_cfg(BackendKind::Float), None).unwrap();
+        let (sl, is) = engine_shape();
+        for i in 0..50 {
+            plane.submit_net(net_event(i, sl, is));
+        }
+        // quiesce: wait until the workers have scored everything
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            let snap = plane.snapshot();
+            let m = &snap.models[0];
+            if m.scored() == 50 {
+                assert_eq!(m.model, "engine");
+                assert_eq!(m.replicas, 1);
+                assert_eq!(m.router_accepted, 50);
+                assert_eq!(m.dropped(), 0);
+                assert_eq!(m.latency().count(), 50, "merged histogram sees all");
+                assert_eq!(m.queue_depths.len(), 1);
+                break;
+            }
+            assert!(Instant::now() < deadline, "workers never caught up");
+            std::thread::yield_now();
+        }
+        plane.shutdown();
+    }
+
+    #[test]
+    fn swap_needs_the_hls_backend() {
+        let plane = ServingPlane::new(&plane_cfg(BackendKind::Float), None).unwrap();
+        let err = plane.swap(&PlanSwap {
+            model: "engine".into(),
+            precision: Some("block0.ffn1 ap_fixed<18,8>".into()),
+            reuse: None,
+        });
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("hls"));
+        plane.shutdown();
+    }
+
+    #[test]
+    fn bad_swap_is_refused_with_the_pool_untouched() {
+        let plane = ServingPlane::new(&plane_cfg(BackendKind::Hls), None).unwrap();
+        let pool = plane.pools()[0].clone();
+        let before = pool.replicas();
+        // the saturating plan the static verifier refuses
+        let err = plane.swap(&PlanSwap {
+            model: "engine".into(),
+            precision: Some("block1.ffn1 ap_fixed<2,1>".into()),
+            reuse: None,
+        });
+        assert!(err.is_err(), "verifier must refuse the saturating plan");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("verification failed"), "{msg}");
+        assert!(msg.contains("block1.ffn1"), "{msg}");
+        assert_eq!(pool.replicas(), before, "no shard was drained");
+        assert_eq!(pool.swaps(), 0);
+        plane.shutdown();
+    }
+
+    #[test]
+    fn hot_swap_drops_nothing_and_serves_on_the_new_plan() {
+        let plane = ServingPlane::new(&plane_cfg(BackendKind::Hls), None).unwrap();
+        let pool = plane.pools()[0].clone();
+        let (sl, is) = engine_shape();
+        for i in 0..60 {
+            assert_eq!(plane.submit_net(net_event(i, sl, is)), Submit::Accepted);
+        }
+        // widening plan: verifier-clean
+        plane
+            .swap(&PlanSwap {
+                model: "engine".into(),
+                precision: Some("block0.ffn1 ap_fixed<18,8>".into()),
+                reuse: Some("pool R2".into()),
+            })
+            .unwrap();
+        assert_eq!(pool.swaps(), 1);
+        assert_eq!(pool.replicas(), 1, "rolling swap restores the width");
+        for i in 60..120 {
+            assert_eq!(plane.submit_net(net_event(i, sl, is)), Submit::Accepted);
+        }
+        let report = plane.shutdown();
+        let s = &report.per_model["engine"];
+        assert_eq!(s.accepted, 120, "swap drained, nothing lost");
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.shed, 0);
+        // the modeled design reflects the NEW plans
+        let modeled = report.modeled_designs.get("engine").expect("hls design");
+        assert!(modeled.plan.summary().contains("mixed"), "{}", modeled.plan.summary());
+        assert!(
+            modeled.parallelism.summary().contains("mixed"),
+            "{}",
+            modeled.parallelism.summary()
+        );
+        // pre-swap shard 0 retired, post-swap shard 1 retired at shutdown
+        let ids: Vec<usize> = s.shards.iter().map(|sh| sh.shard).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+}

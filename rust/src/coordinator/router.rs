@@ -1,7 +1,7 @@
 //! Model router: validates and dispatches events to sharded per-model
 //! worker pools.
 //!
-//! Each model owns `replicas` SPSC rings, one per batcher+backend worker
+//! Each model owns a set of SPSC rings, one per batcher+backend worker
 //! (shard).  Sources call [`Router::submit`]; the event is placed on the
 //! round-robin shard, or — if that ring is momentarily full — on the
 //! least-loaded other shard (backpressure-aware overflow).  Only when
@@ -9,22 +9,33 @@
 //! a trigger must degrade by shedding, never by stalling the detector
 //! readout.
 //!
+//! The shard set is **dynamic**: the serving plane's autoscaler and the
+//! hot plan swap add and remove shards on a live route
+//! ([`Router::add_shard`] / [`Router::remove_shard`]) while a source
+//! keeps submitting.  A shard carries a stable id assigned by the
+//! caller; ids are unique per route but not dense after scaling.
+//!
 //! **Producer contract:** the rings are strictly single-producer — at
 //! most ONE thread may submit events for a given model at a time
 //! (different models may be driven from different threads).  The trigger
-//! server upholds this by running exactly one source per pipeline.
+//! server upholds this by running exactly one source per pipeline; the
+//! network plane funnels every connection through one dispatcher thread.
+//! Shard add/remove may race a submit: submits hold the route's shard
+//! read lock, membership changes take the write lock, so a producer
+//! handle is never pushed to after `remove_shard` returns it.
 
 use super::event::TriggerEvent;
 use super::spsc::Producer;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// Outcome of a submit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Submit {
     Accepted,
-    /// Every shard ring full — event shed.
+    /// Every shard ring full (or the pool momentarily empty mid-scale) —
+    /// event shed.
     Shed,
     /// No pipeline for this model name.
     UnknownModel,
@@ -32,9 +43,16 @@ pub enum Submit {
     BadShape,
 }
 
+/// One live shard of a route: a stable id plus the producing ring half.
+struct ShardSlot {
+    id: usize,
+    tx: Producer<TriggerEvent>,
+}
+
 struct Route {
-    /// One producer per worker-pool shard.
-    shards: Vec<Producer<TriggerEvent>>,
+    /// Live shard set; read-locked per submit, write-locked by the
+    /// (rare) scale/swap membership changes.
+    shards: RwLock<Vec<ShardSlot>>,
     /// Round-robin dispatch cursor.
     cursor: AtomicU64,
     seq_len: usize,
@@ -66,9 +84,9 @@ impl Router {
     }
 
     /// Register a sharded pipeline: the producing half of every shard
-    /// ring plus the expected event geometry.  A single-shard route
-    /// behaves exactly like the pre-pool design (one attempt, shed on
-    /// full).
+    /// ring plus the expected event geometry.  Shard ids are assigned
+    /// densely `0..shards.len()`.  A single-shard route behaves exactly
+    /// like the pre-pool design (one attempt, shed on full).
     ///
     /// Panics on an empty shard list or a duplicate model: silently
     /// replacing a route would orphan the old shards' producers, leaving
@@ -81,6 +99,18 @@ impl Router {
         input_size: usize,
     ) {
         assert!(!shards.is_empty(), "route '{model}' needs at least one shard");
+        self.add_dynamic_route(model, seq_len, input_size);
+        for (id, tx) in shards.into_iter().enumerate() {
+            assert!(self.add_shard(model, id, tx), "route '{model}' just added");
+        }
+    }
+
+    /// Register a route with an *empty* shard set — the serving plane's
+    /// spawn path, where shards are attached one by one with
+    /// [`Router::add_shard`].  Submits shed until the first shard lands.
+    ///
+    /// Panics on a duplicate model (see [`Router::add_route`]).
+    pub fn add_dynamic_route(&mut self, model: &'static str, seq_len: usize, input_size: usize) {
         assert!(
             !self.routes.contains_key(model),
             "route '{model}' registered twice"
@@ -88,7 +118,7 @@ impl Router {
         self.routes.insert(
             model,
             Route {
-                shards,
+                shards: RwLock::new(Vec::new()),
                 cursor: AtomicU64::new(0),
                 seq_len,
                 input_size,
@@ -97,6 +127,34 @@ impl Router {
                 rebalanced: AtomicU64::new(0),
             },
         );
+    }
+
+    /// Attach a shard (stable `id`, producing ring half) to a live
+    /// route.  Returns false if the model has no route.  Panics on a
+    /// duplicate id — the retire path looks shards up by id, and two
+    /// slots answering to one id would orphan a ring.
+    pub fn add_shard(&self, model: &str, id: usize, tx: Producer<TriggerEvent>) -> bool {
+        let Some(route) = self.routes.get(model) else {
+            return false;
+        };
+        let mut shards = route.shards.write().unwrap();
+        assert!(
+            shards.iter().all(|s| s.id != id),
+            "shard id {id} already live on route '{model}'"
+        );
+        shards.push(ShardSlot { id, tx });
+        true
+    }
+
+    /// Detach shard `id` from a live route, returning its producer so
+    /// the caller can `close()` it and drain the worker.  `None` if the
+    /// model or id is unknown.  Subsequent submits simply stop seeing
+    /// the shard (in-flight events already on its ring are unaffected).
+    pub fn remove_shard(&self, model: &str, id: usize) -> Option<Producer<TriggerEvent>> {
+        let route = self.routes.get(model)?;
+        let mut shards = route.shards.write().unwrap();
+        let i = shards.iter().position(|s| s.id == id)?;
+        Some(shards.remove(i).tx)
     }
 
     /// Validate + dispatch one event.
@@ -110,9 +168,15 @@ impl Router {
         if event.x.rows() != route.seq_len || event.x.cols() != route.input_size {
             return Submit::BadShape;
         }
-        let n = route.shards.len();
+        let shards = route.shards.read().unwrap();
+        let n = shards.len();
+        if n == 0 {
+            // mid-scale empty pool: shed (never stall) like a full ring
+            route.shed.fetch_add(1, Ordering::Relaxed);
+            return Submit::Shed;
+        }
         let rr = (route.cursor.fetch_add(1, Ordering::Relaxed) as usize) % n;
-        match route.shards[rr].try_push(event) {
+        match shards[rr].tx.try_push(event) {
             Ok(()) => route.note_accept(),
             Err(event) => {
                 // round-robin shard full: overflow to the least-loaded
@@ -121,9 +185,9 @@ impl Router {
                 if n > 1 {
                     if let Some(alt) = (0..n)
                         .filter(|&i| i != rr)
-                        .min_by_key(|&i| route.shards[i].len())
+                        .min_by_key(|&i| shards[i].tx.len())
                     {
-                        if route.shards[alt].try_push(event).is_ok() {
+                        if shards[alt].tx.try_push(event).is_ok() {
                             route.rebalanced.fetch_add(1, Ordering::Relaxed);
                             return route.note_accept();
                         }
@@ -138,8 +202,8 @@ impl Router {
     /// Close every shard of every pipeline (drain + shut down).
     pub fn close_all(&self) {
         for r in self.routes.values() {
-            for s in &r.shards {
-                s.close();
+            for s in r.shards.read().unwrap().iter() {
+                s.tx.close();
             }
         }
     }
@@ -158,7 +222,21 @@ impl Router {
 
     /// Worker-pool width of a model's route.
     pub fn replicas(&self, model: &str) -> Option<usize> {
-        self.routes.get(model).map(|r| r.shards.len())
+        self.routes.get(model).map(|r| r.shards.read().unwrap().len())
+    }
+
+    /// Instantaneous `(shard_id, queued_events)` per live shard — the
+    /// autoscaler's load signal and the per-shard queue-depth gauge of
+    /// the metrics endpoint.
+    pub fn queue_depths(&self, model: &str) -> Option<Vec<(usize, usize)>> {
+        self.routes.get(model).map(|r| {
+            r.shards
+                .read()
+                .unwrap()
+                .iter()
+                .map(|s| (s.id, s.tx.len()))
+                .collect()
+        })
     }
 
     pub fn models(&self) -> Vec<&'static str> {
@@ -341,5 +419,65 @@ mod tests {
         assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Shed);
         assert_eq!(r.rebalanced("engine").unwrap(), 0);
         assert_eq!(r.replicas("engine").unwrap(), 1);
+    }
+
+    #[test]
+    fn dynamic_route_sheds_until_first_shard_attaches() {
+        let mut r = Router::new();
+        r.add_dynamic_route("engine", 50, 1);
+        assert_eq!(r.replicas("engine").unwrap(), 0);
+        // empty pool: shed, never panic (the `% 0` hazard of the static
+        // design) and never stall
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Shed);
+        let (tx, rx) = ring(8);
+        assert!(r.add_shard("engine", 7, tx));
+        assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        assert_eq!(rx.len(), 1);
+        assert_eq!(r.queue_depths("engine").unwrap(), vec![(7, 1)]);
+        let (acc, shed) = r.counters("engine").unwrap();
+        assert_eq!((acc, shed), (1, 1));
+    }
+
+    #[test]
+    fn add_and_remove_shards_on_a_live_route() {
+        let (r, rxs) = router_with_engine(8, 2);
+        let (tx, rx2) = ring(8);
+        assert!(r.add_shard("engine", 9, tx), "attach to a live route");
+        assert_eq!(r.replicas("engine").unwrap(), 3);
+        for _ in 0..6 {
+            assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        }
+        assert_eq!(rx2.len(), 2, "new shard takes its round-robin turns");
+        // retire shard 0: its producer comes back for close+drain, the
+        // queued events stay on the ring, and routing continues over the
+        // survivors
+        let tx0 = r.remove_shard("engine", 0).expect("shard 0 live");
+        assert_eq!(r.replicas("engine").unwrap(), 2);
+        tx0.close();
+        assert_eq!(rxs[0].len(), 2, "in-flight events survive the detach");
+        for _ in 0..4 {
+            assert_eq!(r.submit(ev("engine", 50, 1)), Submit::Accepted);
+        }
+        assert_eq!(rxs[0].len(), 2, "retired shard receives nothing new");
+        assert_eq!(r.remove_shard("engine", 0), None, "already detached");
+        assert_eq!(r.remove_shard("nope", 1), None);
+        let depths = r.queue_depths("engine").unwrap();
+        assert_eq!(depths.len(), 2);
+        assert!(depths.iter().any(|&(id, _)| id == 9));
+    }
+
+    #[test]
+    #[should_panic(expected = "already live")]
+    fn duplicate_shard_id_panics() {
+        let (r, _rxs) = router_with_engine(8, 2);
+        let (tx, _rx) = ring(8);
+        r.add_shard("engine", 1, tx);
+    }
+
+    #[test]
+    fn add_shard_to_unknown_model_is_refused() {
+        let r = Router::new();
+        let (tx, _rx) = ring(8);
+        assert!(!r.add_shard("engine", 0, tx));
     }
 }

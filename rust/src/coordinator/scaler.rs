@@ -1,0 +1,243 @@
+//! Autoscaler: a reconcile loop that samples per-shard queue depth and
+//! live p99 latency and moves each pool's replica count inside a
+//! configured `min..max` band.
+//!
+//! The loop is observe -> decide -> act-one-step: each tick it reads the
+//! router's instantaneous queue depths (and the live shards' merged p99
+//! when a target is set), runs the *pure* [`decide`] policy, and applies
+//! at most ONE scale step per pool.  Single-stepping keeps the system
+//! analyzable — a burst grows the pool over several ticks instead of
+//! jumping to max, and the calm-down hysteresis (`calm_ticks`) keeps a
+//! decaying queue from flapping the pool width.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::pool::ServingPlane;
+
+/// Autoscaler policy knobs.
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Replica band (inclusive); the initial width is clamped into it.
+    pub min: usize,
+    pub max: usize,
+    /// Reconcile tick interval.
+    pub interval: Duration,
+    /// Scale up when any shard's queue exceeds this fraction of its ring
+    /// capacity (the backpressure-imminent signal).
+    pub up_fill: f64,
+    /// Optional latency trigger: scale up when the live p99 exceeds this
+    /// many nanoseconds.  `None` scales on queue depth alone.
+    pub p99_up_ns: Option<u64>,
+    /// Consecutive calm ticks (total queued events == 0 across shards)
+    /// required before one scale-down step — hysteresis against flapping.
+    pub calm_ticks: u32,
+}
+
+impl AutoscaleConfig {
+    pub fn band(min: usize, max: usize) -> Self {
+        Self {
+            min: min.max(1),
+            max: max.max(min.max(1)),
+            interval: Duration::from_millis(20),
+            up_fill: 0.5,
+            p99_up_ns: None,
+            calm_ticks: 25,
+        }
+    }
+}
+
+/// Parse a `min..max` band ("1..4").
+pub fn parse_autoscale(s: &str) -> Result<(usize, usize)> {
+    let (lo, hi) = s
+        .split_once("..")
+        .ok_or_else(|| anyhow::anyhow!("autoscale band must be min..max, got '{s}'"))?;
+    let lo: usize = lo.trim().parse().map_err(|_| {
+        anyhow::anyhow!("autoscale min '{lo}' is not a number")
+    })?;
+    let hi: usize = hi.trim().parse().map_err(|_| {
+        anyhow::anyhow!("autoscale max '{hi}' is not a number")
+    })?;
+    anyhow::ensure!(lo >= 1, "autoscale min must be >= 1");
+    anyhow::ensure!(hi >= lo, "autoscale band {lo}..{hi} is inverted");
+    Ok((lo, hi))
+}
+
+/// One reconcile decision for one pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Up,
+    Down,
+    Hold,
+}
+
+/// The pure scaling policy (unit-testable without threads or pools).
+///
+/// * Below `min`: always Up (the band is a hard floor).
+/// * Overload (any shard past `up_fill` of the ring, or p99 past the
+///   target): Up while below `max`.
+/// * Calm (zero queued events) for `calm` consecutive ticks: Down while
+///   above `min`.  Latency never triggers a scale-down — the cumulative
+///   p99 is too sluggish a signal to shrink on.
+pub fn decide(
+    depths: &[(usize, usize)],
+    ring_capacity: usize,
+    p99_ns: Option<u64>,
+    replicas: usize,
+    cfg: &AutoscaleConfig,
+    calm: u32,
+) -> Decision {
+    if replicas < cfg.min {
+        return Decision::Up;
+    }
+    let hot_queue = depths
+        .iter()
+        .any(|&(_, d)| d as f64 > cfg.up_fill * ring_capacity as f64);
+    let hot_latency = match (cfg.p99_up_ns, p99_ns) {
+        (Some(target), Some(p99)) => p99 > target,
+        _ => false,
+    };
+    if (hot_queue || hot_latency) && replicas < cfg.max {
+        return Decision::Up;
+    }
+    let total: usize = depths.iter().map(|&(_, d)| d).sum();
+    if total == 0 && calm >= cfg.calm_ticks && replicas > cfg.min {
+        return Decision::Down;
+    }
+    Decision::Hold
+}
+
+/// The running reconcile loop (one thread for the whole plane).
+pub struct Scaler {
+    stop: Arc<AtomicBool>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl Scaler {
+    pub fn start(cfg: AutoscaleConfig, plane: Arc<ServingPlane>) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let join = std::thread::spawn(move || {
+            let mut calm = vec![0u32; plane.pools().len()];
+            while !stop_t.load(Ordering::Acquire) {
+                for (i, pool) in plane.pools().iter().enumerate() {
+                    let depths = plane
+                        .router()
+                        .queue_depths(pool.model())
+                        .unwrap_or_default();
+                    let total: usize = depths.iter().map(|&(_, d)| d).sum();
+                    calm[i] = if total == 0 { calm[i].saturating_add(1) } else { 0 };
+                    let p99 = if cfg.p99_up_ns.is_some() {
+                        pool.live_p99_ns()
+                    } else {
+                        None
+                    };
+                    match decide(
+                        &depths,
+                        pool.ring_capacity(),
+                        p99,
+                        pool.replicas(),
+                        &cfg,
+                        calm[i],
+                    ) {
+                        Decision::Up => {
+                            pool.scale_up(plane.router());
+                            pool.note_scale_up();
+                        }
+                        Decision::Down => {
+                            if pool.scale_down(plane.router()) {
+                                pool.note_scale_down();
+                            }
+                            calm[i] = 0;
+                        }
+                        Decision::Hold => {}
+                    }
+                }
+                std::thread::sleep(cfg.interval);
+            }
+        });
+        Self { stop, join }
+    }
+
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = self.join.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(min: usize, max: usize) -> AutoscaleConfig {
+        AutoscaleConfig { calm_ticks: 3, ..AutoscaleConfig::band(min, max) }
+    }
+
+    #[test]
+    fn parses_bands_and_rejects_nonsense() {
+        assert_eq!(parse_autoscale("1..4").unwrap(), (1, 4));
+        assert_eq!(parse_autoscale("2..2").unwrap(), (2, 2));
+        assert_eq!(parse_autoscale(" 3 .. 8 ").unwrap(), (3, 8));
+        assert!(parse_autoscale("4").is_err());
+        assert!(parse_autoscale("4..1").is_err());
+        assert!(parse_autoscale("0..4").is_err());
+        assert!(parse_autoscale("a..b").is_err());
+    }
+
+    #[test]
+    fn scales_up_under_queue_pressure_until_max() {
+        let c = cfg(1, 4);
+        // one shard past half of a 100-deep ring
+        let depths = [(0usize, 60usize)];
+        assert_eq!(decide(&depths, 100, None, 1, &c, 0), Decision::Up);
+        assert_eq!(decide(&depths, 100, None, 3, &c, 0), Decision::Up);
+        // at max: hold even under pressure
+        assert_eq!(decide(&depths, 100, None, 4, &c, 0), Decision::Hold);
+        // below the fill threshold: hold
+        assert_eq!(decide(&[(0, 20)], 100, None, 1, &c, 0), Decision::Hold);
+    }
+
+    #[test]
+    fn latency_target_triggers_growth() {
+        let mut c = cfg(1, 4);
+        c.p99_up_ns = Some(1_000_000);
+        let calmq = [(0usize, 0usize)];
+        assert_eq!(decide(&calmq, 100, Some(2_000_000), 2, &c, 0), Decision::Up);
+        assert_eq!(decide(&calmq, 100, Some(500_000), 2, &c, 0), Decision::Hold);
+        // p99 never shrinks the pool, even when absurdly low
+        assert_eq!(decide(&calmq, 100, Some(1), 2, &c, 0), Decision::Hold);
+    }
+
+    #[test]
+    fn calm_hysteresis_gates_scale_down() {
+        let c = cfg(1, 4);
+        let calmq = [(0usize, 0usize), (1, 0)];
+        // not calm long enough
+        assert_eq!(decide(&calmq, 100, None, 3, &c, 2), Decision::Hold);
+        // calm long enough: one step down
+        assert_eq!(decide(&calmq, 100, None, 3, &c, 3), Decision::Down);
+        // at min: never below
+        assert_eq!(decide(&calmq, 100, None, 1, &c, 100), Decision::Hold);
+        // queued events reset the urge to shrink
+        assert_eq!(decide(&[(0, 5)], 100, None, 3, &c, 50), Decision::Hold);
+    }
+
+    #[test]
+    fn below_min_always_grows() {
+        let c = cfg(2, 4);
+        assert_eq!(decide(&[(0, 0)], 100, None, 1, &c, 100), Decision::Up);
+        // even an empty pool (mid-scale) grows toward min
+        assert_eq!(decide(&[], 100, None, 0, &c, 0), Decision::Up);
+    }
+
+    #[test]
+    fn band_constructor_clamps() {
+        let c = AutoscaleConfig::band(0, 0);
+        assert_eq!((c.min, c.max), (1, 1));
+        let c = AutoscaleConfig::band(3, 1);
+        assert_eq!((c.min, c.max), (3, 3));
+    }
+}

@@ -10,6 +10,11 @@
 //! momentary backpressure; per-shard stats are folded into the per-model
 //! report at shutdown.  `replicas = 1` reproduces the original
 //! single-worker pipeline exactly.
+//!
+//! The shard worker loop itself ([`serve_shard`]) and the per-pipeline
+//! resolution step ([`resolve_pipeline`]) are shared with the network
+//! serving plane (`super::pool`), which runs the same workers under a
+//! dynamic shard set.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -23,7 +28,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::event::TriggerEvent;
 use super::router::{Router, Submit};
 use super::spsc;
-use super::stats::PipelineStats;
+use super::stats::{PipelineStats, ShardLive};
 use crate::data::generator_for;
 use crate::data::gw::{Injection, StrainConfig, StrainStream};
 use crate::hls::{
@@ -31,10 +36,10 @@ use crate::hls::{
 };
 use crate::models::weights::{synthetic_weights, Weights};
 use crate::models::zoo::zoo_model;
-use crate::models::NnwFile;
+use crate::models::{ModelConfig, NnwFile};
 use crate::nn::tensor::Mat;
 use crate::runtime::Runtime;
-use crate::stream::{WindowScore, Windowizer};
+use crate::stream::WindowScore;
 use crate::testutil::XorShift;
 
 /// Where a pipeline's weights come from.
@@ -106,6 +111,8 @@ pub struct PipelineConfig {
     pub weights: WeightsSource,
     /// Worker-pool width: number of batcher+backend replicas serving
     /// this model.  1 reproduces the original single-worker pipeline.
+    /// The network serving plane treats this as the *initial* width
+    /// (the autoscaler then moves it within its min..max band).
     pub replicas: usize,
     /// What the source thread feeds this pipeline (pre-cut events by
     /// default; `SourceMode::Stream` windowizes a continuous stream).
@@ -245,8 +252,9 @@ impl std::fmt::Display for ServerReport {
             }
             writeln!(
                 f,
-                "  {m:8} accepted={} dropped={} batches={} fill={:.2} {}{}",
+                "  {m:8} accepted={} shed={} dropped={} batches={} fill={:.2} {}{}",
                 s.accepted,
+                s.shed,
                 s.dropped,
                 s.batches,
                 s.mean_batch_fill(),
@@ -287,9 +295,10 @@ impl std::fmt::Display for ServerReport {
                 for sh in &s.shards {
                     writeln!(
                         f,
-                        "    shard {}: accepted={} batches={} fill={:.2} {}",
+                        "    shard {}: accepted={} dropped={} batches={} fill={:.2} {}",
                         sh.shard,
                         sh.accepted,
+                        sh.dropped,
                         sh.batches,
                         sh.mean_batch_fill(),
                         sh.latency.summary(),
@@ -299,6 +308,208 @@ impl std::fmt::Display for ServerReport {
         }
         Ok(())
     }
+}
+
+/// One pipeline's fully resolved serving inputs: model config, weights,
+/// both plans (verifier-gated for HLS), the compile-once engine, and the
+/// modeled design point.  Produced by [`resolve_pipeline`] *before* any
+/// worker spawns, so every plan error is a clean `Err`.
+pub(crate) struct ResolvedPipeline {
+    pub mcfg: ModelConfig,
+    pub weights: Arc<Weights>,
+    pub plan: PrecisionPlan,
+    pub par: ParallelismPlan,
+    /// The compile-once HLS engine (None for float/PJRT backends).
+    pub engine: Option<FixedTransformer>,
+    pub modeled: Option<SynthesisReport>,
+    pub compiled: Option<CompiledInfo>,
+}
+
+/// Resolve one pipeline: zoo lookup, weights, precision + parallelism
+/// plans over their uniform bases, static plan verification, and (for
+/// HLS) the single shared engine build.  Shared by the batch server and
+/// the network serving plane; also the gate the hot plan swap re-runs
+/// before draining anything.
+pub(crate) fn resolve_pipeline(
+    artifacts_dir: &std::path::Path,
+    pc: &PipelineConfig,
+) -> Result<ResolvedPipeline> {
+    let zoo = zoo_model(pc.model)
+        .with_context(|| format!("unknown zoo model '{}'", pc.model))?;
+    let mcfg = zoo.config.clone();
+    let weights = Arc::new(load_weights(artifacts_dir, pc, &mcfg)?);
+    // resolve both plans up front: a malformed plan must be a clean Err
+    // before any pool spawns
+    let mut plan = PrecisionPlan::uniform(mcfg.num_blocks, pc.quant);
+    if let Some(text) = &pc.precision_plan {
+        plan.apply_overrides(text)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("precision plan for model '{}'", pc.model))?;
+    }
+    let mut par = ParallelismPlan::uniform(mcfg.num_blocks, pc.reuse);
+    if let Some(text) = &pc.reuse_plan {
+        par.apply_overrides(text)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("reuse plan for model '{}'", pc.model))?;
+    }
+    // stream geometry must be a clean Err before any pool spawns (a
+    // mismatched window shape would otherwise shed every single window
+    // at the router)
+    if let SourceMode::Stream(ss) = &pc.source {
+        anyhow::ensure!(
+            ss.strain.channels == mcfg.input_size,
+            "stream source for model '{}' has {} channels, model takes {}",
+            pc.model,
+            ss.strain.channels,
+            mcfg.input_size
+        );
+        anyhow::ensure!(ss.hop >= 1, "stream hop must be >= 1");
+    }
+    // the modeled FPGA design point of an HLS pipeline, reported
+    // alongside the serving stats (computed once here, not per replica).
+    // The engine itself is also kept: the pool's replica shards clone it
+    // (Arc-shared weights + compiled plan) instead of re-lifting the
+    // weight mantissas R times.
+    let (mut engine, mut modeled, mut compiled) = (None, None, None);
+    if pc.backend == BackendKind::Hls {
+        // static plan verification gates the spawn: a plan the verifier
+        // flags as ERROR (saturating grid, degenerate schedule) must be
+        // a clean Err here, not a silently mis-triggering pool
+        let verdict = crate::analysis::verify_plan(
+            &mcfg,
+            &weights,
+            &plan,
+            &par,
+            &crate::analysis::VerifyConfig::default(),
+        );
+        if verdict.has_errors() {
+            let first = verdict.errors().next().expect("has_errors");
+            anyhow::bail!(
+                "plan verification failed for model '{}' ({} error(s)); \
+                 first: site '{}': {}",
+                pc.model,
+                verdict.count(crate::analysis::Severity::Error),
+                first.site,
+                first.message
+            );
+        }
+        let e = FixedTransformer::with_plan(mcfg.clone(), &weights, plan.clone());
+        modeled = Some(e.synthesize(&par));
+        compiled = Some(CompiledInfo {
+            build_micros: e.compiled().build_micros(),
+            bytes: e.compiled().bytes(),
+            replicas: pc.replicas.max(1),
+        });
+        engine = Some(e);
+    }
+    Ok(ResolvedPipeline { mcfg, weights, plan, par, engine, modeled, compiled })
+}
+
+/// One shard's worker loop: pull batches off the ring, score them,
+/// account per-event latency/labels/windows.  Runs until the ring is
+/// closed and drained; returns the shard-local stats.
+///
+/// A batch whose inference *fails* is dropped (counted in
+/// `stats.dropped`, logged once) and the shard keeps serving — a trigger
+/// worker must degrade by dropping, never by dying with queued events.
+/// When `live` is set, a cumulative [`ShardStats`] snapshot is published
+/// after every batch so the metrics endpoint can scrape mid-run.
+pub(crate) fn serve_shard(
+    backend: &Backend,
+    mut batcher: Batcher,
+    stream_reuse: bool,
+    shard: usize,
+    live: Option<&ShardLive>,
+) -> PipelineStats {
+    let mut stats = PipelineStats::default();
+    // stream-mode reuse: one incremental cache per shard.  The router
+    // hands this shard a strided, in-order subsequence of the stream, so
+    // consecutive events' position deltas key the overlap soundly (a
+    // delta >= seq_len simply recomputes in full).
+    let mut wcache = if stream_reuse { Some(backend.window_cache()) } else { None };
+    let mut drop_logged = false;
+    while let Some(batch) = batcher.next_batch() {
+        let scored: Result<Vec<Vec<f32>>> = if let Some(wc) = wcache.as_mut() {
+            // per-event, in arrival order — reuse needs the previous
+            // window resident
+            let mut out = Vec::with_capacity(batch.len());
+            let mut failed = None;
+            for e in &batch {
+                let r = match e.stream_pos {
+                    Some(pos) => backend.infer_window(&e.x, pos, wc),
+                    None => backend.infer(&[&e.x]).map(|mut v| v.remove(0)),
+                };
+                match r {
+                    Ok(p) => out.push(p),
+                    Err(err) => {
+                        failed = Some(err);
+                        break;
+                    }
+                }
+            }
+            match failed {
+                None => Ok(out),
+                Some(err) => Err(err),
+            }
+        } else {
+            let mats: Vec<&Mat> = batch.iter().map(|e| &e.x).collect();
+            backend.infer(&mats)
+        };
+        let probs = match scored {
+            Ok(p) => p,
+            Err(e) => {
+                stats.dropped += batch.len() as u64;
+                if !drop_logged {
+                    eprintln!(
+                        "shard {shard}: inference failed, dropping batch of {}: {e:#}",
+                        batch.len()
+                    );
+                    drop_logged = true;
+                }
+                // a half-applied incremental step leaves the cache
+                // unsound for the next overlap — recompute cold
+                if let Some(wc) = wcache.as_mut() {
+                    wc.invalidate();
+                }
+                if let Some(l) = live {
+                    l.publish(stats.shard_snapshot(shard));
+                }
+                continue;
+            }
+        };
+        let now = Instant::now();
+        stats.batches += 1;
+        stats.batch_fill_sum += batch.len() as u64;
+        for (e, p) in batch.iter().zip(&probs) {
+            stats.accepted += 1;
+            let lat = now.duration_since(e.t_arrival);
+            stats.latency.record_duration(lat);
+            if let Some(label) = e.label {
+                stats.scored_pos.push(backend.score(p));
+                stats.scored_labels.push((label == 1) as u8);
+            }
+            if let Some(pos) = e.stream_pos {
+                stats.windows.push(WindowScore {
+                    pos,
+                    score: backend.score(p),
+                    latency_ns: lat.as_nanos().min(u64::MAX as u128) as u64,
+                });
+            }
+        }
+        if let Some(wc) = &wcache {
+            stats.reuse = wc.counters();
+        }
+        if let Some(l) = live {
+            l.publish(stats.shard_snapshot(shard));
+        }
+    }
+    if let Some(wc) = &wcache {
+        stats.reuse = wc.counters();
+    }
+    if let Some(l) = live {
+        l.publish(stats.shard_snapshot(shard));
+    }
+    stats
 }
 
 /// Build + run a trigger server to completion.
@@ -329,79 +540,14 @@ impl TriggerServer {
         let mut compiled: HashMap<&'static str, CompiledInfo> = HashMap::new();
         let mut resolved = Vec::with_capacity(cfg.pipelines.len());
         for pc in &cfg.pipelines {
-            let zoo = zoo_model(pc.model)
-                .with_context(|| format!("unknown zoo model '{}'", pc.model))?;
-            let mcfg = zoo.config.clone();
-            let weights = Arc::new(load_weights(&cfg.artifacts_dir, pc, &mcfg)?);
-            // resolve both plans up front: a malformed plan must be a
-            // clean Err before any pool spawns
-            let mut plan = PrecisionPlan::uniform(mcfg.num_blocks, pc.quant);
-            if let Some(text) = &pc.precision_plan {
-                plan.apply_overrides(text)
-                    .map_err(anyhow::Error::msg)
-                    .with_context(|| format!("precision plan for model '{}'", pc.model))?;
+            let r = resolve_pipeline(&cfg.artifacts_dir, pc)?;
+            if let Some(m) = &r.modeled {
+                modeled_designs.insert(pc.model, m.clone());
             }
-            let mut par = ParallelismPlan::uniform(mcfg.num_blocks, pc.reuse);
-            if let Some(text) = &pc.reuse_plan {
-                par.apply_overrides(text)
-                    .map_err(anyhow::Error::msg)
-                    .with_context(|| format!("reuse plan for model '{}'", pc.model))?;
+            if let Some(ci) = r.compiled {
+                compiled.insert(pc.model, ci);
             }
-            // stream geometry must be a clean Err before any pool spawns
-            // (a mismatched window shape would otherwise shed every
-            // single window at the router)
-            if let SourceMode::Stream(ss) = &pc.source {
-                anyhow::ensure!(
-                    ss.strain.channels == mcfg.input_size,
-                    "stream source for model '{}' has {} channels, model takes {}",
-                    pc.model,
-                    ss.strain.channels,
-                    mcfg.input_size
-                );
-                anyhow::ensure!(ss.hop >= 1, "stream hop must be >= 1");
-            }
-            // the modeled FPGA design point of an HLS pipeline, reported
-            // alongside the serving stats (computed once here, not per
-            // replica).  The engine itself is also kept: the pool's
-            // replica shards clone it (Arc-shared weights + compiled
-            // plan) instead of re-lifting the weight mantissas R times.
-            let mut engine: Option<FixedTransformer> = None;
-            if pc.backend == BackendKind::Hls {
-                // static plan verification gates the spawn: a plan the
-                // verifier flags as ERROR (saturating grid, degenerate
-                // schedule) must be a clean Err here, not a silently
-                // mis-triggering pool
-                let verdict = crate::analysis::verify_plan(
-                    &mcfg,
-                    &weights,
-                    &plan,
-                    &par,
-                    &crate::analysis::VerifyConfig::default(),
-                );
-                if verdict.has_errors() {
-                    let first = verdict.errors().next().expect("has_errors");
-                    anyhow::bail!(
-                        "plan verification failed for model '{}' ({} error(s)); \
-                         first: site '{}': {}",
-                        pc.model,
-                        verdict.count(crate::analysis::Severity::Error),
-                        first.site,
-                        first.message
-                    );
-                }
-                let e = FixedTransformer::with_plan(mcfg.clone(), &weights, plan.clone());
-                modeled_designs.insert(pc.model, e.synthesize(&par));
-                compiled.insert(
-                    pc.model,
-                    CompiledInfo {
-                        build_micros: e.compiled().build_micros(),
-                        bytes: e.compiled().bytes(),
-                        replicas: pc.replicas.max(1),
-                    },
-                );
-                engine = Some(e);
-            }
-            resolved.push((pc, mcfg, weights, plan, par, engine));
+            resolved.push((pc, r));
         }
 
         let mut router = Router::new();
@@ -415,7 +561,8 @@ impl TriggerServer {
         let ready = Arc::new((std::sync::Mutex::new(0usize), std::sync::Condvar::new()));
 
         // per-model worker pools
-        for (pc, mcfg, weights, plan, par, engine) in resolved {
+        for (pc, r) in resolved {
+            let ResolvedPipeline { mcfg, weights, plan, par, engine, .. } = r;
             let replicas = pc.replicas.max(1);
             let mut shard_txs = Vec::with_capacity(replicas);
             for shard in 0..replicas {
@@ -470,65 +617,10 @@ impl TriggerServer {
                     }
                     // keep the runtime alive as long as its executables
                     let (_runtime, backend) = built?;
-                    let mut batcher = Batcher::new(pc.batch, rx);
-                    let mut stats = PipelineStats::default();
-                    // stream-mode reuse: one incremental cache per shard.
-                    // The router hands this shard a strided, in-order
-                    // subsequence of the stream, so consecutive events'
-                    // position deltas key the overlap soundly (a delta
-                    // >= seq_len simply recomputes in full).
-                    let mut wcache = match &pc.source {
-                        SourceMode::Stream(ss) if ss.reuse => {
-                            Some(backend.window_cache())
-                        }
-                        _ => None,
-                    };
-                    while let Some(batch) = batcher.next_batch() {
-                        let probs = match wcache.as_mut() {
-                            Some(wc) => {
-                                // per-event, in arrival order — reuse
-                                // needs the previous window resident
-                                let mut out = Vec::with_capacity(batch.len());
-                                for e in &batch {
-                                    out.push(match e.stream_pos {
-                                        Some(pos) => {
-                                            backend.infer_window(&e.x, pos, wc)?
-                                        }
-                                        None => backend.infer(&[&e.x])?.remove(0),
-                                    });
-                                }
-                                out
-                            }
-                            None => {
-                                let mats: Vec<&Mat> =
-                                    batch.iter().map(|e| &e.x).collect();
-                                backend.infer(&mats)?
-                            }
-                        };
-                        let now = Instant::now();
-                        stats.batches += 1;
-                        stats.batch_fill_sum += batch.len() as u64;
-                        for (e, p) in batch.iter().zip(&probs) {
-                            stats.accepted += 1;
-                            let lat = now.duration_since(e.t_arrival);
-                            stats.latency.record_duration(lat);
-                            if let Some(label) = e.label {
-                                stats.scored_pos.push(backend.score(p));
-                                stats.scored_labels.push((label == 1) as u8);
-                            }
-                            if let Some(pos) = e.stream_pos {
-                                stats.windows.push(WindowScore {
-                                    pos,
-                                    score: backend.score(p),
-                                    latency_ns: lat.as_nanos().min(u64::MAX as u128)
-                                        as u64,
-                                });
-                            }
-                        }
-                    }
-                    if let Some(wc) = &wcache {
-                        stats.reuse = wc.counters();
-                    }
+                    let batcher = Batcher::new(pc.batch, rx);
+                    let stream_reuse =
+                        matches!(&pc.source, SourceMode::Stream(ss) if ss.reuse);
+                    let stats = serve_shard(&backend, batcher, stream_reuse, shard, None);
                     Ok((pc.model, shard, stats))
                 }));
             }
@@ -591,7 +683,10 @@ impl TriggerServer {
                 .absorb_shard(*shard, stats);
         }
         for (model, stats) in per_model.iter_mut() {
-            stats.dropped = source_shed.get(model).copied().unwrap_or(0);
+            // source-side shed is a router/source counter, distinct from
+            // the worker-side `dropped` the absorb above summed — the
+            // two loss paths never overwrite each other
+            stats.shed = source_shed.get(model).copied().unwrap_or(0);
             stats.rebalanced = router.rebalanced(model).unwrap_or(0);
         }
 
@@ -607,8 +702,9 @@ struct SourceOutcome {
 }
 
 /// Sleep-then-yield until `due` past `t_start` (pure spinning starves
-/// the pipeline on small hosts).
-fn pace_until(t_start: Instant, due: Duration) {
+/// the pipeline on small hosts).  Also the pacing primitive of the
+/// `repro send` loopback client.
+pub fn pace_until(t_start: Instant, due: Duration) {
     loop {
         let elapsed = t_start.elapsed();
         if elapsed >= due {
@@ -678,6 +774,7 @@ fn run_stream_source(
     ss: &StreamSource,
     rate: u64,
 ) -> SourceOutcome {
+    use crate::stream::Windowizer;
     let seq_len = zoo_model(model).expect("resolved earlier").config.seq_len;
     let mut strain = StrainStream::new(ss.strain.clone());
     let mut wz = Windowizer::new(seq_len, ss.strain.channels, ss.hop);
@@ -767,7 +864,8 @@ mod tests {
     fn float_pipeline_serves_every_event() {
         let report = TriggerServer::run(&base_cfg(BackendKind::Float, 300)).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.accepted + s.dropped, 300);
+        assert_eq!(s.accepted + s.lost(), 300);
+        assert_eq!(s.dropped, 0, "no batch failures on the float backend");
         assert!(s.accepted > 0);
         assert!(s.latency.count() == s.accepted);
         assert!(s.online_auc().is_some());
@@ -778,7 +876,7 @@ mod tests {
     fn hls_pipeline_runs() {
         let report = TriggerServer::run(&base_cfg(BackendKind::Hls, 40)).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.accepted + s.dropped, 40);
+        assert_eq!(s.accepted + s.lost(), 40);
         assert!(s.mean_batch_fill() >= 1.0);
     }
 
@@ -803,8 +901,16 @@ mod tests {
         cfg.pipelines[0].ring_capacity = 4;
         let report = TriggerServer::run(&cfg).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.accepted + s.dropped, 500);
-        assert!(s.dropped > 0, "expected shedding under overload");
+        assert_eq!(s.accepted + s.lost(), 500);
+        assert!(s.shed > 0, "expected source-side shedding under overload");
+        assert_eq!(
+            s.dropped, 0,
+            "shed events are router-side; the workers dropped nothing"
+        );
+        // the report names both loss counters
+        let text = format!("{report}");
+        assert!(text.contains("shed="), "{text}");
+        assert!(text.contains("dropped="), "{text}");
     }
 
     #[test]
@@ -815,7 +921,7 @@ mod tests {
         let s = &report.per_model["engine"];
         // ring capacity (1024/shard) dwarfs the event count: no shedding
         assert_eq!(s.accepted, 300);
-        assert_eq!(s.dropped, 0);
+        assert_eq!(s.lost(), 0);
         assert_eq!(s.shards.len(), 3);
         assert_eq!(s.shards.iter().map(|sh| sh.accepted).sum::<u64>(), 300);
         assert_eq!(
@@ -844,7 +950,7 @@ mod tests {
             cfg.pipelines[0].replicas = replicas;
             let report = TriggerServer::run(&cfg).unwrap();
             let s = &report.per_model["engine"];
-            assert_eq!(s.dropped, 0, "ring must not shed at this event count");
+            assert_eq!(s.lost(), 0, "ring must not shed at this event count");
             s.online_auc().unwrap()
         };
         let single = run(1);
@@ -873,7 +979,7 @@ mod tests {
         cfg.pipelines[0].precision_plan = Some(text);
         let report = TriggerServer::run(&cfg).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.accepted + s.dropped, 30);
+        assert_eq!(s.accepted + s.lost(), 30);
         assert!(s.accepted > 0);
     }
 
@@ -895,7 +1001,7 @@ mod tests {
         cfg.pipelines[0].reuse_plan = Some(text);
         let report = TriggerServer::run(&cfg).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.accepted + s.dropped, 30);
+        assert_eq!(s.accepted + s.lost(), 30);
         assert!(s.accepted > 0);
         let modeled = report.modeled_designs.get("engine").expect("hls models a design");
         assert_eq!(modeled.parallelism, plan);
@@ -933,7 +1039,7 @@ mod tests {
         cfg.pipelines[0].replicas = 3;
         let report = TriggerServer::run(&cfg).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.accepted + s.dropped, 60);
+        assert_eq!(s.accepted + s.lost(), 60);
         assert_eq!(s.shards.len(), 3);
         let ci = report.compiled.get("engine").expect("hls pipeline reports its artifact");
         assert!(ci.bytes > 0, "artifact has weight tiles");
@@ -1016,8 +1122,8 @@ mod tests {
         let s = &report.per_model["engine"];
         let seq_len = zoo_model("engine").unwrap().config.seq_len as u64;
         let expect = (samples - seq_len) / hop as u64 + 1;
-        assert_eq!(s.accepted + s.dropped, expect);
-        assert_eq!(s.dropped, 0, "1024-deep ring must absorb this stream");
+        assert_eq!(s.accepted + s.lost(), expect);
+        assert_eq!(s.lost(), 0, "1024-deep ring must absorb this stream");
         assert_eq!(s.windows.len() as u64, expect, "every window recorded");
         assert!(s.scored_labels.is_empty(), "stream windows carry no labels");
         // positions are exactly the hop grid (sort: batches interleave)
@@ -1044,12 +1150,16 @@ mod tests {
         let s = &report.per_model["engine"];
         let seq_len = zoo_model("engine").unwrap().config.seq_len as u64;
         let expect = (samples - seq_len) / hop as u64 + 1;
-        assert_eq!(s.dropped, 0);
+        assert_eq!(s.lost(), 0);
         assert_eq!(s.reuse.windows(), expect);
         assert_eq!(s.reuse.windows_full, 1);
         assert_eq!(s.reuse.windows_incremental, expect - 1);
         assert_eq!(s.reuse.rows_reused, (expect - 1) * (seq_len - hop as u64));
         assert!(s.reuse.cache_bytes > 0);
+        // per-shard snapshots carry the stream accounting too
+        assert_eq!(s.shards.len(), 1);
+        assert_eq!(s.shards[0].windows, expect);
+        assert_eq!(s.shards[0].reuse, s.reuse, "single-shard reuse snapshot");
         let text = format!("{report}");
         assert!(text.contains("reuse:"), "{text}");
         assert!(text.contains("windows incremental"), "{text}");
@@ -1067,7 +1177,7 @@ mod tests {
             cfg.pipelines[0].replicas = replicas;
             let report = TriggerServer::run(&cfg).unwrap();
             let s = &report.per_model["engine"];
-            assert_eq!(s.dropped, 0, "ring must not shed this stream");
+            assert_eq!(s.lost(), 0, "ring must not shed this stream");
             let mut w: Vec<(u64, u32)> =
                 s.windows.iter().map(|w| (w.pos, w.score.to_bits())).collect();
             w.sort_unstable();
@@ -1115,8 +1225,8 @@ mod tests {
         cfg.burst_per_source = 16;
         let report = TriggerServer::run(&cfg).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.accepted + s.dropped, 400);
-        assert_eq!(s.dropped, 0, "bursts of ~16 cannot fill a 1024 ring");
+        assert_eq!(s.accepted + s.lost(), 400);
+        assert_eq!(s.lost(), 0, "bursts of ~16 cannot fill a 1024 ring");
     }
 
     #[test]
@@ -1125,7 +1235,7 @@ mod tests {
         cfg.pipelines[0].replicas = 0;
         let report = TriggerServer::run(&cfg).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.accepted + s.dropped, 50);
+        assert_eq!(s.accepted + s.lost(), 50);
         assert_eq!(s.shards.len(), 1);
     }
 

@@ -4,6 +4,12 @@
 //! [`PipelineStats`]; the server folds them into one per-model total via
 //! [`PipelineStats::absorb_shard`], which also records a [`ShardStats`]
 //! snapshot per replica so pool imbalance is visible in the report.
+//!
+//! Two distinct loss counters, never mixed:
+//! - [`PipelineStats::shed`] — source-side: the router found every shard
+//!   ring full and refused the event (it was never queued).
+//! - [`PipelineStats::dropped`] — worker-side: the event was accepted
+//!   onto a ring but its batch failed inference and was discarded.
 
 use crate::metrics::LatencyHistogram;
 use crate::stream::{ReuseCounters, WindowScore};
@@ -11,11 +17,18 @@ use crate::stream::{ReuseCounters, WindowScore};
 /// Per-replica (shard) accounting within one model's worker pool.
 #[derive(Clone, Debug, Default)]
 pub struct ShardStats {
-    /// Shard index within the pool (0..replicas).
+    /// Shard index within the pool (stable id; dynamically spawned
+    /// shards keep counting up, so ids are unique but not dense).
     pub shard: usize,
     pub accepted: u64,
+    /// Worker-side batch-failure drops on this shard.
+    pub dropped: u64,
     pub batches: u64,
     pub batch_fill_sum: u64,
+    /// Stream windows this shard scored.
+    pub windows: u64,
+    /// This shard's incremental-reuse cache counters.
+    pub reuse: ReuseCounters,
     pub latency: LatencyHistogram,
 }
 
@@ -33,7 +46,11 @@ impl ShardStats {
 #[derive(Clone, Debug, Default)]
 pub struct PipelineStats {
     pub accepted: u64,
-    /// Events rejected at the source ring (backpressure drops).
+    /// Events refused at the source: the router found every shard ring
+    /// full (backpressure shed; the event never reached a worker).
+    pub shed: u64,
+    /// Events accepted onto a ring but discarded worker-side because
+    /// their batch failed inference.  Disjoint from `shed`.
     pub dropped: u64,
     /// Events that overflowed their round-robin shard and were accepted
     /// by the least-loaded one instead (pool imbalance signal; always 0
@@ -68,6 +85,13 @@ impl PipelineStats {
         }
     }
 
+    /// Total events lost on either side of the rings (source shed +
+    /// worker drop); `accepted + lost()` accounts for every submitted
+    /// event.
+    pub fn lost(&self) -> u64 {
+        self.shed + self.dropped
+    }
+
     /// Online AUC over the scored stream (when generated with labels).
     /// Rank-based and therefore independent of the shard interleaving
     /// order the scores arrived in.
@@ -78,17 +102,30 @@ impl PipelineStats {
         Some(crate::metrics::binary_auc(&self.scored_pos, &self.scored_labels))
     }
 
-    /// Fold one replica's worker-local stats into this per-model total,
-    /// recording the shard-level snapshot.
-    pub fn absorb_shard(&mut self, shard: usize, s: &PipelineStats) {
-        self.shards.push(ShardStats {
+    /// The [`ShardStats`] view of this worker-local stats block — what
+    /// `absorb_shard` records and what a live shard publishes for the
+    /// metrics endpoint while still serving.
+    pub fn shard_snapshot(&self, shard: usize) -> ShardStats {
+        ShardStats {
             shard,
-            accepted: s.accepted,
-            batches: s.batches,
-            batch_fill_sum: s.batch_fill_sum,
-            latency: s.latency.clone(),
-        });
+            accepted: self.accepted,
+            dropped: self.dropped,
+            batches: self.batches,
+            batch_fill_sum: self.batch_fill_sum,
+            windows: self.windows.len() as u64,
+            reuse: self.reuse,
+            latency: self.latency.clone(),
+        }
+    }
+
+    /// Fold one replica's worker-local stats into this per-model total,
+    /// recording the shard-level snapshot (including the shard's window
+    /// count and reuse counters, so per-shard stream imbalance stays
+    /// visible after aggregation).
+    pub fn absorb_shard(&mut self, shard: usize, s: &PipelineStats) {
+        self.shards.push(s.shard_snapshot(shard));
         self.accepted += s.accepted;
+        self.shed += s.shed;
         self.dropped += s.dropped;
         self.rebalanced += s.rebalanced;
         self.batches += s.batches;
@@ -102,6 +139,7 @@ impl PipelineStats {
 
     pub fn merge(&mut self, other: &PipelineStats) {
         self.accepted += other.accepted;
+        self.shed += other.shed;
         self.dropped += other.dropped;
         self.rebalanced += other.rebalanced;
         self.batches += other.batches;
@@ -112,6 +150,30 @@ impl PipelineStats {
         self.windows.extend_from_slice(&other.windows);
         self.reuse.merge(&other.reuse);
         self.shards.extend(other.shards.iter().cloned());
+    }
+}
+
+/// Cumulative snapshot a *live* shard worker publishes after every batch
+/// so the metrics endpoint can scrape mid-run state without touching the
+/// worker's hot-path stats.
+#[derive(Debug, Default)]
+pub struct ShardLive {
+    snapshot: std::sync::Mutex<ShardStats>,
+}
+
+impl ShardLive {
+    pub fn new(shard: usize) -> Self {
+        Self {
+            snapshot: std::sync::Mutex::new(ShardStats { shard, ..ShardStats::default() }),
+        }
+    }
+
+    pub fn publish(&self, s: ShardStats) {
+        *self.snapshot.lock().unwrap() = s;
+    }
+
+    pub fn snapshot(&self) -> ShardStats {
+        self.snapshot.lock().unwrap().clone()
     }
 }
 
@@ -139,13 +201,33 @@ mod tests {
         a.accepted = 3;
         let mut b = PipelineStats::default();
         b.accepted = 4;
-        b.dropped = 1;
+        b.shed = 1;
+        b.dropped = 2;
         b.scored_pos.push(0.9);
         b.scored_labels.push(1);
         a.merge(&b);
         assert_eq!(a.accepted, 7);
-        assert_eq!(a.dropped, 1);
+        assert_eq!(a.shed, 1);
+        assert_eq!(a.dropped, 2);
+        assert_eq!(a.lost(), 3);
         assert_eq!(a.scored_pos.len(), 1);
+    }
+
+    #[test]
+    fn shed_and_dropped_stay_distinct() {
+        // the accounting-overwrite regression: a pipeline can lose
+        // events on BOTH sides of the rings at once, and neither counter
+        // may clobber the other
+        let mut total = PipelineStats::default();
+        let mut worker = PipelineStats::default();
+        worker.accepted = 90;
+        worker.dropped = 10; // batch-failure drops, worker side
+        total.absorb_shard(0, &worker);
+        total.shed = 25; // router-side shed, set by the server fold
+        assert_eq!(total.dropped, 10, "worker drops survive the fold");
+        assert_eq!(total.shed, 25, "source shed is its own counter");
+        assert_eq!(total.lost(), 35);
+        assert_eq!(total.shards[0].dropped, 10, "per-shard drops recorded");
     }
 
     #[test]
@@ -154,6 +236,7 @@ mod tests {
         for shard in 0..3usize {
             let mut s = PipelineStats::default();
             s.accepted = 10 + shard as u64;
+            s.dropped = shard as u64;
             s.batches = 2;
             s.batch_fill_sum = 10 + shard as u64;
             s.latency.record(1000 * (shard as u64 + 1));
@@ -174,6 +257,7 @@ mod tests {
         assert_eq!(total.reuse.rows_reused, 120);
         assert_eq!(total.reuse.cache_bytes, 1002, "bytes high-water across shards");
         assert_eq!(total.accepted, 33);
+        assert_eq!(total.dropped, 3);
         assert_eq!(total.batches, 6);
         assert_eq!(total.latency.count(), 3);
         assert_eq!(total.shards.len(), 3);
@@ -182,9 +266,26 @@ mod tests {
             total.accepted
         );
         assert_eq!(
+            total.shards.iter().map(|s| s.dropped).sum::<u64>(),
+            total.dropped,
+            "per-shard drops sum to the model total"
+        );
+        assert_eq!(
             total.shards.iter().map(|s| s.latency.count()).sum::<u64>(),
             total.latency.count()
         );
+        // the snapshot-loss regression: window counts and reuse counters
+        // must survive into the per-shard snapshots
+        assert_eq!(
+            total.shards.iter().map(|s| s.windows).sum::<u64>(),
+            total.windows.len() as u64,
+            "per-shard window counts carried through"
+        );
+        for (shard, sh) in total.shards.iter().enumerate() {
+            assert_eq!(sh.windows, 1);
+            assert_eq!(sh.reuse.windows_incremental, 4, "per-shard reuse kept");
+            assert_eq!(sh.reuse.cache_bytes, 1000 + shard as u64);
+        }
         assert_eq!(total.shards[2].shard, 2);
     }
 
@@ -210,5 +311,20 @@ mod tests {
         assert_eq!(total.scored_labels, s.scored_labels);
         assert_eq!(total.online_auc(), s.online_auc());
         assert_eq!(total.shards.len(), 1);
+    }
+
+    #[test]
+    fn shard_live_publishes_cumulative_snapshots() {
+        let live = ShardLive::new(3);
+        assert_eq!(live.snapshot().shard, 3);
+        assert_eq!(live.snapshot().accepted, 0);
+        let mut s = PipelineStats::default();
+        s.accepted = 42;
+        s.windows.push(WindowScore { pos: 0, score: 0.1, latency_ns: 10 });
+        live.publish(s.shard_snapshot(3));
+        let snap = live.snapshot();
+        assert_eq!(snap.accepted, 42);
+        assert_eq!(snap.windows, 1);
+        assert_eq!(snap.shard, 3);
     }
 }

@@ -11,7 +11,8 @@
 //! repro mixed-precision   --model <m> [--floor 0.99] [--min-frac 2] [--save-plan FILE]
 //! repro pareto            --model <m> [--floor 0.99] [--iters N] [--reuse-choices 1,2,4,8] [--save-plan FILE]
 //! repro lint-plan         --model <m> [--int I] [--frac F] [--reuse R] [--precision-plan FILE] [--reuse-plan FILE] [--preset mixed] [--events N] [--seed S] [--json FILE] [--strict]
-//! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B] [--replicas R] [--precision-plan FILE] [--reuse-plan FILE]
+//! repro serve             --backend float|hls|pjrt [--events N] [--rate EPS] [--batch B] [--replicas R] [--precision-plan FILE] [--reuse-plan FILE] [--listen ADDR] [--metrics-addr ADDR] [--autoscale MIN..MAX] [--ring N]
+//! repro send              --to ADDR [--model M] [--events N] [--rate EPS] [--burst B] [--swap-at N] [--precision-plan FILE] [--reuse-plan FILE] [--shutdown]
 //! repro stream            --backend float|hls [--model engine] [--samples N] [--hop H] [--threshold Z] ...
 //! repro report            (everything above, in sequence)
 //! ```
@@ -21,10 +22,12 @@ use hls4ml_transformer::analysis::{verify_plan, VerifyConfig, PROBE_EVENTS, PROB
 use hls4ml_transformer::cli::Args;
 use hls4ml_transformer::fixed::FixedSpec;
 use hls4ml_transformer::coordinator::{
-    BackendKind, BatchPolicy, PipelineConfig, ServerConfig, SourceMode, StreamSource,
+    parse_autoscale, serve_net, server::pace_until, AutoscaleConfig, BackendKind, BatchPolicy,
+    Frame, NetEvent,
+    NetServeOptions, PipelineConfig, PlanSwap, ServerConfig, SourceMode, StreamSource,
     TriggerServer, WeightsSource,
 };
-use hls4ml_transformer::data::StrainConfig;
+use hls4ml_transformer::data::{generator_for, StrainConfig};
 use hls4ml_transformer::experiments::{
     artifacts_ready, auc_figures, latency_tables, load_checkpoints, resource_figures, table1,
 };
@@ -36,6 +39,7 @@ use hls4ml_transformer::models::weights::synthetic_weights;
 use hls4ml_transformer::models::zoo::{zoo, zoo_model};
 use hls4ml_transformer::quant::{bit_shave_search, pareto_explore, EvalSet, ParetoConfig};
 use hls4ml_transformer::stream::{analyze, StreamParams};
+use hls4ml_transformer::testutil::XorShift;
 use hls4ml_transformer::{artifacts_dir, benchjson, models::ModelConfig};
 
 fn main() {
@@ -79,6 +83,16 @@ fn usage() {
          \x20                  [--replicas R]     worker-pool width per model\n\
          \x20                  [--precision-plan F]  per-site precision file (HLS)\n\
          \x20                  [--reuse-plan F]      per-site reuse file (HLS)\n\
+         \x20                  [--listen ADDR]    serve framed events over TCP\n\
+         \x20                  [--metrics-addr A] Prometheus text endpoint\n\
+         \x20                  [--autoscale L..H] elastic replica band per model\n\
+         \x20                  [--ring N]         per-shard SPSC ring capacity\n\
+         \x20 send             --to ADDR          drive a --listen server:\n\
+         \x20                  [--model engine] [--events N] [--rate EPS]\n\
+         \x20                  [--burst B] [--seed S]\n\
+         \x20                  [--swap-at N]      hot plan swap after N events\n\
+         \x20                  [--precision-plan F] [--reuse-plan F]\n\
+         \x20                  [--shutdown]       send the shutdown frame last\n\
          \x20 stream           --backend <b>      continuous-stream trigger run:\n\
          \x20                  windowized strain -> coordinator -> clustered\n\
          \x20                  triggers, detection efficiency + latency report\n\
@@ -456,7 +470,7 @@ fn run(args: &Args) -> Result<()> {
         "serve" => {
             args.expect_only(&[
                 "backend", "events", "rate", "batch", "models", "replicas", "precision-plan",
-                "reuse", "reuse-plan",
+                "reuse", "reuse-plan", "listen", "metrics-addr", "autoscale", "ring",
             ])
             .map_err(anyhow::Error::msg)?;
             let backend: BackendKind = args
@@ -527,6 +541,8 @@ fn run(args: &Args) -> Result<()> {
                 "--reuse-plan applies to a single model; pass --models <m> \
                  (plans are per-model: site names carry block indices)"
             );
+            let ring = args.get_parse("ring", 8192usize).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(ring >= 2, "--ring must be >= 2");
             let cfg = ServerConfig {
                 pipelines: models
                     .into_iter()
@@ -534,6 +550,7 @@ fn run(args: &Args) -> Result<()> {
                         let mut pc = PipelineConfig::new(m, backend);
                         pc.batch = BatchPolicy { max_batch: batch, ..Default::default() };
                         pc.replicas = replicas;
+                        pc.ring_capacity = ring;
                         pc.precision_plan = plan_text.clone();
                         pc.reuse = ReuseFactor(reuse);
                         pc.reuse_plan = reuse_plan_text.clone();
@@ -545,8 +562,171 @@ fn run(args: &Args) -> Result<()> {
                 artifacts_dir: artifacts_dir(),
                 ..Default::default()
             };
-            let report = TriggerServer::run(&cfg)?;
-            print!("{report}");
+            match args.get("listen") {
+                None => {
+                    // self-driving batch mode (the seed behavior): the
+                    // network-plane knobs have nothing to attach to
+                    anyhow::ensure!(
+                        !args.has("metrics-addr") && !args.has("autoscale"),
+                        "--metrics-addr/--autoscale require --listen \
+                         (the batch server has no network plane)"
+                    );
+                    let report = TriggerServer::run(&cfg)?;
+                    print!("{report}");
+                }
+                Some(addr) => {
+                    let listener = std::net::TcpListener::bind(addr)
+                        .with_context(|| format!("--listen {addr}"))?;
+                    println!("listening on {}", listener.local_addr()?);
+                    let metrics = match args.get("metrics-addr") {
+                        Some(maddr) => {
+                            let m = std::net::TcpListener::bind(maddr)
+                                .with_context(|| format!("--metrics-addr {maddr}"))?;
+                            println!("metrics on http://{}/metrics", m.local_addr()?);
+                            Some(m)
+                        }
+                        None => None,
+                    };
+                    let autoscale = match args.get("autoscale") {
+                        Some(band) => {
+                            let (lo, hi) = parse_autoscale(band)?;
+                            Some(AutoscaleConfig::band(lo, hi))
+                        }
+                        None => None,
+                    };
+                    let report = serve_net(&cfg, listener, NetServeOptions { metrics, autoscale })?;
+                    print!("{report}");
+                }
+            }
+        }
+        "send" => {
+            args.expect_only(&[
+                "to", "model", "events", "rate", "burst", "seed", "swap-at", "precision-plan",
+                "reuse-plan", "shutdown",
+            ])
+            .map_err(anyhow::Error::msg)?;
+            let to = args.get_or("to", "127.0.0.1:7071");
+            let cfg = model_arg(args)?;
+            let model = cfg.name.clone();
+            // shutdown-only invocations shouldn't have to spell --events 0
+            let default_events = if args.has("shutdown") { 0u64 } else { 1000u64 };
+            let events = args
+                .get_parse("events", default_events)
+                .map_err(anyhow::Error::msg)?;
+            let rate = args.get_parse("rate", 0u64).map_err(anyhow::Error::msg)?;
+            let burst = args.get_parse("burst", 1u64).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(burst >= 1, "--burst must be >= 1");
+            let seed = args.get_parse("seed", 0xFEEDu64).map_err(anyhow::Error::msg)?;
+            let swap_at: Option<u64> = match args.get("swap-at") {
+                Some(v) => Some(
+                    v.parse()
+                        .map_err(|_| anyhow::anyhow!("--swap-at: cannot parse '{v}'"))?,
+                ),
+                None => None,
+            };
+            let swap_precision: Option<String> = match args.get("precision-plan") {
+                Some(path) => Some(
+                    std::fs::read_to_string(path)
+                        .with_context(|| format!("--precision-plan {path}"))?,
+                ),
+                None => None,
+            };
+            let swap_reuse: Option<String> = match args.get("reuse-plan") {
+                Some(path) => Some(
+                    std::fs::read_to_string(path)
+                        .with_context(|| format!("--reuse-plan {path}"))?,
+                ),
+                None => None,
+            };
+            anyhow::ensure!(
+                swap_at.is_none() || swap_precision.is_some() || swap_reuse.is_some(),
+                "--swap-at needs --precision-plan and/or --reuse-plan (the new design point)"
+            );
+            anyhow::ensure!(
+                (swap_precision.is_none() && swap_reuse.is_none()) || swap_at.is_some(),
+                "--precision-plan/--reuse-plan on send need --swap-at N (when to swap)"
+            );
+            let mut stream = std::net::TcpStream::connect(to)
+                .with_context(|| format!("--to {to}"))?;
+            stream.set_nodelay(true).ok();
+            let mut gen = generator_for(&model, seed)
+                .with_context(|| format!("no event generator for model '{model}'"))?;
+            let mut rng = XorShift::new(seed ^ 0xB1157);
+            let t_start = std::time::Instant::now();
+            let mut burst_left = 0u64;
+            let mut burst_due = std::time::Duration::ZERO;
+            let mut swapped = false;
+            for i in 0..events {
+                if swap_at == Some(i) {
+                    hls4ml_transformer::coordinator::net::write_frame(
+                        &mut stream,
+                        &Frame::Swap(PlanSwap {
+                            model: model.clone(),
+                            precision: swap_precision.clone(),
+                            reuse: swap_reuse.clone(),
+                        }),
+                    )
+                    .context("sending swap frame")?;
+                    swapped = true;
+                }
+                if rate > 0 {
+                    if burst <= 1 {
+                        pace_until(
+                            t_start,
+                            std::time::Duration::from_nanos(i * 1_000_000_000 / rate),
+                        );
+                    } else {
+                        if burst_left == 0 {
+                            burst_left = 1 + rng.next_u64() % (2 * burst - 1);
+                            let mean_ns = burst as f64 * 1e9 / rate as f64;
+                            burst_due += std::time::Duration::from_nanos(
+                                rng.exponential(mean_ns) as u64,
+                            );
+                            pace_until(t_start, burst_due);
+                        }
+                        burst_left -= 1;
+                    }
+                }
+                let e = gen.next_event();
+                hls4ml_transformer::coordinator::net::write_frame(
+                    &mut stream,
+                    &Frame::Event(NetEvent {
+                        id: i,
+                        model: model.clone(),
+                        x: e.x,
+                        label: Some(e.label),
+                        stream_pos: None,
+                    }),
+                )
+                .with_context(|| format!("sending event {i}"))?;
+            }
+            // a swap point at/past the end still fires (swap-after-drain)
+            if let Some(at) = swap_at {
+                if !swapped && at >= events {
+                    hls4ml_transformer::coordinator::net::write_frame(
+                        &mut stream,
+                        &Frame::Swap(PlanSwap {
+                            model: model.clone(),
+                            precision: swap_precision.clone(),
+                            reuse: swap_reuse.clone(),
+                        }),
+                    )
+                    .context("sending swap frame")?;
+                }
+            }
+            if args.has("shutdown") {
+                hls4ml_transformer::coordinator::net::write_frame(&mut stream, &Frame::Shutdown)
+                    .context("sending shutdown frame")?;
+            }
+            use std::io::Write as _;
+            stream.flush().ok();
+            let wall = t_start.elapsed().as_secs_f64().max(1e-9);
+            println!(
+                "sent {events} event(s) for {model} to {to} in {wall:.3}s ({:.0} events/s){}{}",
+                events as f64 / wall,
+                if swap_at.is_some() { " + 1 plan swap" } else { "" },
+                if args.has("shutdown") { " + shutdown" } else { "" },
+            );
         }
         "stream" => {
             args.expect_only(&[
@@ -668,6 +848,7 @@ fn run(args: &Args) -> Result<()> {
                     ("sustained_sps", sustained_sps),
                     ("windows_per_s", windows_per_s),
                     ("windows", s.windows.len() as f64),
+                    ("shed", s.shed as f64),
                     ("dropped", s.dropped as f64),
                     ("efficiency", sr.efficiency()),
                     ("injections", sr.injections as f64),

@@ -1,13 +1,16 @@
 //! Log-bucketed latency histogram for the serving path — allocation-free
-//! on the record path (fixed bucket array), p50/p99 by interpolation.
+//! on the record path (fixed bucket array), p50/p99 by bucket-edge
+//! lookup.  The bucket layout is exported verbatim by the metrics
+//! endpoint (`coordinator::metrics_http`), so the edges here ARE the
+//! Prometheus `le` labels a scrape aggregator sees.
 
 /// Latency histogram over nanosecond samples.
 ///
-/// Buckets are log2-spaced from 64 ns to ~1.1 s; recording is O(1) with
-/// no allocation (the coordinator records on its hot path).
+/// Buckets are log2-spaced from 64 ns to ~4.5e15 ns; recording is O(1)
+/// with no allocation (the coordinator records on its hot path).
 #[derive(Clone, Debug)]
 pub struct LatencyHistogram {
-    buckets: [u64; 48],
+    buckets: [u64; Self::NUM_BUCKETS],
     count: u64,
     sum_ns: u128,
     min_ns: u64,
@@ -15,9 +18,12 @@ pub struct LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Number of log2 buckets (fixed; part of the exposition format).
+    pub const NUM_BUCKETS: usize = 48;
+
     pub fn new() -> Self {
         Self {
-            buckets: [0; 48],
+            buckets: [0; Self::NUM_BUCKETS],
             count: 0,
             sum_ns: 0,
             min_ns: u64::MAX,
@@ -27,9 +33,33 @@ impl LatencyHistogram {
 
     #[inline]
     fn bucket_of(ns: u64) -> usize {
-        // bucket i covers [64 * 2^(i/2 rounding), ...): use leading_zeros
+        // log2 spacing off the sample's bit width: bucket 0 absorbs
+        // [0, 64); bucket i in 1..=46 covers [2^(i+5), 2^(i+6)); the
+        // last bucket (47) absorbs everything from 2^52 ns up
         let b = 64 - (ns.max(1)).leading_zeros() as usize;
-        b.saturating_sub(6).min(47)
+        b.saturating_sub(6).min(Self::NUM_BUCKETS - 1)
+    }
+
+    /// Inclusive upper edge of bucket `i` in nanoseconds; `None` for the
+    /// open-ended last bucket (the Prometheus `+Inf` bucket).  Every
+    /// sample `ns` satisfies `ns <= bucket_upper_edge_ns(bucket_of(ns))`.
+    pub fn bucket_upper_edge_ns(i: usize) -> Option<u64> {
+        assert!(i < Self::NUM_BUCKETS, "bucket index {i} out of range");
+        if i == Self::NUM_BUCKETS - 1 {
+            None
+        } else {
+            Some((1u64 << (i + 6)) - 1)
+        }
+    }
+
+    /// Per-bucket sample counts (non-cumulative), for exposition.
+    pub fn bucket_counts(&self) -> &[u64; Self::NUM_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Total of all recorded samples in nanoseconds (exposition `_sum`).
+    pub fn sum_ns(&self) -> u128 {
+        self.sum_ns
     }
 
     #[inline]
@@ -65,7 +95,11 @@ impl LatencyHistogram {
         self.max_ns
     }
 
-    /// Approximate quantile (bucket upper-edge interpolation).
+    /// Approximate quantile: the *inclusive* upper edge of the bucket
+    /// holding the q-th sample, clamped into the observed
+    /// `[min_ns, max_ns]` envelope.  The returned value always lies in
+    /// (or at the edge of) the quantile's own bucket — never in the
+    /// next one up.
     pub fn quantile_ns(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -75,9 +109,10 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target.max(1) {
-                // bucket i spans [2^(i+5), 2^(i+6)) ns (approx; bucket 0
-                // absorbs everything below); clamp into observed range
-                return (1u64 << (i + 6)).min(self.max_ns);
+                return match Self::bucket_upper_edge_ns(i) {
+                    Some(edge) => edge.clamp(self.min_ns, self.max_ns),
+                    None => self.max_ns,
+                };
             }
         }
         self.max_ns
@@ -129,6 +164,7 @@ mod tests {
         assert_eq!(h.min_ns(), 100);
         assert_eq!(h.max_ns(), 100_000);
         assert!((h.mean_ns() - 20_300.0).abs() < 1.0);
+        assert_eq!(h.sum_ns(), 101_500);
     }
 
     #[test]
@@ -164,6 +200,50 @@ mod tests {
     }
 
     #[test]
+    fn bucket_edges_are_inclusive_and_consistent_with_bucket_of() {
+        // every finite bucket's inclusive edge lands in its OWN bucket,
+        // and edge+1 lands in the next one — the exact off-by-one the
+        // old exclusive-edge quantile got wrong
+        for i in 0..LatencyHistogram::NUM_BUCKETS - 1 {
+            let edge = LatencyHistogram::bucket_upper_edge_ns(i).unwrap();
+            assert_eq!(LatencyHistogram::bucket_of(edge), i, "edge of bucket {i}");
+            assert_eq!(
+                LatencyHistogram::bucket_of(edge + 1),
+                i + 1,
+                "first value past bucket {i}"
+            );
+        }
+        assert!(LatencyHistogram::bucket_upper_edge_ns(
+            LatencyHistogram::NUM_BUCKETS - 1
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn identical_samples_quantiles_stay_in_their_bucket() {
+        // N identical samples: every quantile must report a value inside
+        // that sample's own bucket (regression pin for the exclusive-edge
+        // off-by-one, which reported a value from the bucket above)
+        for ns in [1u64, 63, 64, 100, 127, 128, 999, 65_536, 1 << 52, u64::MAX] {
+            let bucket = LatencyHistogram::bucket_of(ns);
+            let mut h = LatencyHistogram::new();
+            for _ in 0..57 {
+                h.record(ns);
+            }
+            for q in [0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let v = h.quantile_ns(q);
+                assert_eq!(
+                    LatencyHistogram::bucket_of(v),
+                    bucket,
+                    "q={q} of {ns}-valued histogram reported {v}, outside bucket {bucket}"
+                );
+                // and within the observed envelope, exactly
+                assert!(v >= h.min_ns() && v <= h.max_ns(), "q={q} ns={ns} v={v}");
+            }
+        }
+    }
+
+    #[test]
     fn prop_quantile_within_minmax_envelope() {
         Prop::new("quantile envelope").runs(200).check(|g| {
             let mut h = LatencyHistogram::new();
@@ -171,10 +251,70 @@ mod tests {
             for _ in 0..n {
                 h.record(g.usize_in(100, 10_000_000) as u64);
             }
-            let p50 = h.quantile_ns(0.5);
-            // quantile is a bucket edge: allow one bucket (2x) slack
-            assert!(p50 >= h.min_ns() / 2, "p50 {p50} min {}", h.min_ns());
-            assert!(p50 <= h.max_ns() * 2, "p50 {p50} max {}", h.max_ns());
+            for q in [0.0, 0.5, 0.99, 1.0] {
+                let v = h.quantile_ns(q);
+                assert!(v >= h.min_ns(), "q={q} v={v} min {}", h.min_ns());
+                assert!(v <= h.max_ns(), "q={q} v={v} max {}", h.max_ns());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_quantile_monotone_in_q() {
+        Prop::new("quantile monotone").runs(200).check(|g| {
+            let mut h = LatencyHistogram::new();
+            let n = g.usize_in(1, 300);
+            for _ in 0..n {
+                h.record(g.usize_in(1, 50_000_000) as u64);
+            }
+            let qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0];
+            let vs: Vec<u64> = qs.iter().map(|&q| h.quantile_ns(q)).collect();
+            for w in vs.windows(2) {
+                assert!(w[0] <= w[1], "quantiles must be monotone: {vs:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_merge_commutative_and_associative() {
+        // the invariants a multi-process scrape aggregator relies on:
+        // merging shard histograms in any order/grouping yields the same
+        // counts, sum, min/max, bucket contents and therefore quantiles
+        fn fill(g: &mut crate::testutil::Gen, n: usize) -> LatencyHistogram {
+            let mut h = LatencyHistogram::new();
+            for _ in 0..n {
+                h.record(g.usize_in(1, 100_000_000) as u64);
+            }
+            h
+        }
+        fn same(a: &LatencyHistogram, b: &LatencyHistogram) {
+            assert_eq!(a.count(), b.count());
+            assert_eq!(a.sum_ns(), b.sum_ns());
+            assert_eq!(a.min_ns(), b.min_ns());
+            assert_eq!(a.max_ns(), b.max_ns());
+            assert_eq!(a.bucket_counts(), b.bucket_counts());
+            for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+                assert_eq!(a.quantile_ns(q), b.quantile_ns(q), "q={q}");
+            }
+        }
+        Prop::new("merge algebra").runs(100).check(|g| {
+            let a = fill(g, g.usize_in(0, 60));
+            let b = fill(g, g.usize_in(0, 60));
+            let c = fill(g, g.usize_in(0, 60));
+            // commutative: a+b == b+a
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            same(&ab, &ba);
+            // associative: (a+b)+c == a+(b+c)
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            same(&ab_c, &a_bc);
         });
     }
 }

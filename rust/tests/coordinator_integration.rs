@@ -34,7 +34,7 @@ fn three_pipelines_serve_concurrently() {
     let report = TriggerServer::run(&cfg).unwrap();
     assert_eq!(report.per_model.len(), 3);
     for (m, s) in &report.per_model {
-        assert_eq!(s.accepted + s.dropped, 400, "{m}");
+        assert_eq!(s.accepted + s.lost(), 400, "{m}");
         assert!(s.latency.count() == s.accepted);
         assert!(s.batches >= s.accepted / 8, "{m}: batches sane");
     }
@@ -66,7 +66,7 @@ fn paced_sources_keep_latency_low() {
     };
     let paced = run(rate);
     let s = &paced.per_model["engine"];
-    assert_eq!(s.dropped, 0, "paced source must not shed");
+    assert_eq!(s.lost(), 0, "paced source must not shed or drop");
     // the queue never builds at this rate: latency stays in the
     // sub-batch-window regime (generous bound — the test binary runs
     // its cases concurrently, so wall-clock noise is real)
@@ -93,8 +93,9 @@ fn overload_sheds_and_recovers() {
     };
     let report = TriggerServer::run(&cfg).unwrap();
     let s = &report.per_model["gw"];
-    assert_eq!(s.accepted + s.dropped, 200);
-    assert!(s.dropped > 0, "expected shedding");
+    assert_eq!(s.accepted + s.shed, 200);
+    assert!(s.shed > 0, "expected shedding");
+    assert_eq!(s.dropped, 0, "backpressure sheds at the source, never drops");
     assert_eq!(s.latency.count(), s.accepted);
 }
 
@@ -148,8 +149,8 @@ fn four_replica_pool_scores_every_event_exactly_once() {
     };
     let report = TriggerServer::run(&cfg).unwrap();
     let s = &report.per_model["engine"];
-    // no drops: per-shard rings (1024 each) dwarf the event count
-    assert_eq!(s.dropped, 0);
+    // no loss: per-shard rings (1024 each) dwarf the event count
+    assert_eq!(s.lost(), 0);
     // no loss, no duplication: exactly n scored, exactly n latencies,
     // exactly n labeled scores (the synthetic source labels everything)
     assert_eq!(s.accepted, n);
@@ -187,7 +188,7 @@ fn replica_count_does_not_change_scores() {
         };
         let report = TriggerServer::run(&cfg).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.dropped, 0, "run must not shed for the comparison to hold");
+        assert_eq!(s.lost(), 0, "run must not shed for the comparison to hold");
         s.online_auc().unwrap()
     };
     let single = run(1);
@@ -215,8 +216,9 @@ fn sharded_overload_sheds_only_when_all_shards_full() {
     };
     let report = TriggerServer::run(&cfg).unwrap();
     let s = &report.per_model["gw"];
-    assert_eq!(s.accepted + s.dropped, 200);
-    assert!(s.dropped > 0, "expected shedding");
+    assert_eq!(s.accepted + s.shed, 200);
+    assert!(s.shed > 0, "expected shedding");
+    assert_eq!(s.dropped, 0, "backpressure sheds at the source, never drops");
     assert_eq!(s.latency.count(), s.accepted);
     assert_eq!(s.shards.len(), 2);
     assert_eq!(s.shards.iter().map(|sh| sh.accepted).sum::<u64>(), s.accepted);
@@ -244,8 +246,8 @@ fn soak_multi_replica_bursty_arrivals_exactly_once() {
     };
     let report = TriggerServer::run(&cfg).unwrap();
     let s = &report.per_model["engine"];
-    // zero drops
-    assert_eq!(s.dropped, 0, "bursty load within capacity must not shed");
+    // zero loss on either side of the rings
+    assert_eq!(s.lost(), 0, "bursty load within capacity must not shed or drop");
     // exactly-once scoring: n accepted, n latencies, n labeled scores
     assert_eq!(s.accepted, n);
     assert_eq!(s.latency.count(), n);

@@ -90,7 +90,7 @@ fn streamed_scores_bitwise_match_naive_reslice_per_backend() {
         let report =
             TriggerServer::run(&stream_server_cfg(backend, samples, hop, seed, 1)).unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.dropped, 0, "{backend:?}: ring must absorb the whole stream");
+        assert_eq!(s.lost(), 0, "{backend:?}: ring must absorb the whole stream");
         assert!(
             s.reuse.windows_incremental > 0,
             "{backend:?}: hop {hop} < S must engage incremental reuse"
@@ -123,7 +123,7 @@ fn stream_recovers_95_percent_of_injections_at_hop_s_over_2() {
         TriggerServer::run(&stream_server_cfg(BackendKind::Float, samples, hop, 0xA11CE, 1))
             .unwrap();
     let s = &report.per_model["engine"];
-    assert_eq!(s.dropped, 0);
+    assert_eq!(s.lost(), 0);
     let truth = &report.stream_truth["engine"];
     let sr = analyze(
         s.windows.clone(),
@@ -172,7 +172,7 @@ fn sharded_stream_pool_reproduces_single_replica_triggers() {
         ))
         .unwrap();
         let s = &report.per_model["engine"];
-        assert_eq!(s.dropped, 0);
+        assert_eq!(s.lost(), 0);
         let truth = &report.stream_truth["engine"];
         analyze(
             s.windows.clone(),
